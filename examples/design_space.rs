@@ -1,0 +1,103 @@
+//! Design-space explorer: the circuit-algorithm co-design trade-offs of
+//! paper Section 4.2 / Fig. 7b, evaluated analytically over (kernel,
+//! channels, bits).
+//!
+//! For every candidate in-pixel configuration this prints the bandwidth
+//! reduction (Eq. 2), the per-frame ADC wall time (column-parallel CDS
+//! model), weight-transistor count per pixel (area proxy), and the
+//! energy/EDP of the resulting pipeline — the quantities the paper
+//! trades against accuracy.
+//!
+//! ```text
+//! cargo run --release --example design_space -- [resolution]
+//! ```
+
+use p2m::adc::SsAdc;
+use p2m::compression;
+use p2m::config::{AdcConfig, HyperParams};
+use p2m::energy::{DelayConstants, EnergyConstants, PipelineKind, PipelineModel};
+use p2m::model::{analyse, ArchConfig, Stem};
+use p2m::report::{f, render_table};
+
+fn main() {
+    let res: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(560);
+    let e = EnergyConstants::default();
+    let d = DelayConstants::default();
+
+    let mut rows = Vec::new();
+    for &(k, c_o) in &[
+        (3usize, 8usize),
+        (5, 2),
+        (5, 4),
+        (5, 8), // Table 1 design point
+        (5, 16),
+        (5, 32),
+        (7, 8),
+        (10, 8),
+        (14, 8),
+    ] {
+        for &n_bits in &[4u32, 8] {
+            if res % k != 0 {
+                continue;
+            }
+            let h = HyperParams {
+                kernel_size: k,
+                stride: k,
+                padding: 0,
+                out_channels: c_o,
+                n_bits,
+            };
+            let br = compression::bandwidth_reduction(&h, res, 12);
+            // Column-parallel CDS time: h_o rows x c_o channels x 2 ramps.
+            let adc = SsAdc::new(AdcConfig {
+                n_bits,
+                full_scale: h.patch_len() as f64,
+                ..AdcConfig::default()
+            });
+            let ho = h.out_spatial(res);
+            let t_adc_ms = (ho * c_o) as f64 * adc.cds_time_s() * 1e3;
+            // Downstream pipeline with this stem.
+            let mut arch = ArchConfig::paper_p2m(res);
+            arch.stem = Stem::P2m { k, c_o };
+            let m = analyse(&arch);
+            let pipe = PipelineModel::from_arch(PipelineKind::P2m, &arch);
+            let energy_uj = pipe.energy(&e).total() * 1e6;
+            let delay_ms = pipe.delay(&d).total_sequential() * 1e3;
+            rows.push(vec![
+                format!("{k}x{k}/{k}"),
+                c_o.to_string(),
+                n_bits.to_string(),
+                f(br),
+                f(t_adc_ms),
+                c_o.to_string(), // weight transistors per pixel
+                f(m.peak_memory_bytes as f64 / 1e6),
+                f(energy_uj),
+                f(delay_ms),
+                f(energy_uj * delay_ms),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &format!("P2M design space at {res}x{res} (paper Section 4.2 / Fig. 7b axes)"),
+            &[
+                "kernel/stride",
+                "c_o",
+                "N_b",
+                "BR (x)",
+                "T_adc (ms)",
+                "W/pixel",
+                "peak mem (MB)",
+                "E (µJ)",
+                "T (ms)",
+                "EDP (µJ*ms)",
+            ],
+            &rows
+        )
+    );
+    println!(
+        "note: accuracy for each point comes from training sweeps (`make experiments`,\n\
+         then `p2m fig7b`); the paper's chosen point is 5x5/5, c_o=8, N_b=8."
+    );
+}

@@ -1,0 +1,249 @@
+"""AOT export: lower the L1/L2 compute to HLO-text artifacts for rust.
+
+Interchange format is HLO **text**, not serialized HloModuleProto — jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (per resolution, ``artifacts/``):
+
+  frontend_<r>_b<b>.hlo.txt    image + stem params -> quantised in-pixel
+                               activations (the **Pallas kernel**, golden
+                               functional model of the pixel array + ADC)
+  backbone_<r>_b<b>.hlo.txt    activations + params/state -> logits
+  full_<r>_b<b>.hlo.txt        image + params/state -> logits
+  train_step_<r>.hlo.txt       params/state/momentum + batch + lr ->
+                               updated params/state/momentum + loss
+  eval_step_<r>.hlo.txt        params/state + batch -> (loss, n_correct)
+  params_<r>.bin / state_<r>.bin   initial values, f32 LE, manifest order
+  curve_fit.json               pixel transfer surface (shared with rust)
+  manifest.json                shapes/dtypes/arg orders for the loader
+
+Python runs ONCE at build time (`make artifacts`); nothing here is on the
+rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import nonideal
+
+RESOLUTIONS = (80, 120)
+TRAIN_BATCH = 16
+EVAL_BATCH = 16
+SERVE_BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _leaf_manifest(tree):
+    return [
+        {"name": name, "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+        for name, leaf in M.flatten_tree(tree)
+    ]
+
+
+def _write_bin(path, tree):
+    leaves = [np.asarray(leaf, np.float32) for _, leaf in M.flatten_tree(tree)]
+    with open(path, "wb") as f:
+        for a in leaves:
+            f.write(a.astype("<f4").tobytes())
+
+
+def export_resolution(cfg: M.ModelConfig, out_dir: str, manifest: dict):
+    res = cfg.resolution
+    key = jax.random.PRNGKey(res)
+    params, state = M.init_params(cfg, key)
+    p_leaves = [l for _, l in M.flatten_tree(params)]
+    s_leaves = [l for _, l in M.flatten_tree(state)]
+
+    def rebuild(p_flat, s_flat):
+        return M.unflatten_like(params, p_flat), M.unflatten_like(state, s_flat)
+
+    entry = {
+        "resolution": res,
+        "kernel_size": cfg.kernel_size,
+        "stem_channels": cfg.stem_channels,
+        "n_bits": cfg.n_bits,
+        "stem_out": cfg.stem_out,
+        "patch_len": cfg.patch_len,
+        "num_classes": cfg.num_classes,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "serve_batches": list(SERVE_BATCHES),
+        "params": _leaf_manifest(params),
+        "state": _leaf_manifest(state),
+        "artifacts": {},
+    }
+
+    def dump(name, fn, arg_names, *specs):
+        """Lower, write HLO text, and record the *kept* argument list.
+
+        jax prunes arguments the computation never reads (e.g. the stem
+        parameters from the backbone graph); ``kept_var_idx`` tells us
+        which of the conceptual args survived, and the manifest records
+        their names in positional order so the rust loader passes exactly
+        the right literals.
+        """
+        assert len(arg_names) == len(specs), name
+        lowered = jax.jit(fn).lower(*specs)
+        kept = sorted(lowered._lowering.compile_args["kept_var_idx"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["artifacts"][name] = {
+            "file": fname,
+            "args": [arg_names[i] for i in kept],
+        }
+        print(f"  wrote {fname} ({len(text) // 1024} KiB, {len(kept)} args)")
+
+    # --- serving graphs (batch variants) ---
+    for b in SERVE_BATCHES:
+        img = jax.ShapeDtypeStruct((b, res, res, 3), jnp.float32)
+        acts = jax.ShapeDtypeStruct(
+            (b, cfg.stem_out, cfg.stem_out, cfg.stem_channels), jnp.float32
+        )
+
+        def frontend_fn(image, *flat):
+            p, s = rebuild(flat[: len(p_leaves)], flat[len(p_leaves):])
+            # Pallas kernel path: the in-pixel layer golden model.
+            return (M.p2m_stem_infer(p["stem"], s["stem"], image, cfg,
+                                     use_pallas=True),)
+
+        def backbone_fn(acts_in, *flat):
+            p, s = rebuild(flat[: len(p_leaves)], flat[len(p_leaves):])
+            logits, _ = M.backbone(p, s, acts_in, cfg, train=False)
+            return (logits,)
+
+        def full_fn(image, *flat):
+            p, s = rebuild(flat[: len(p_leaves)], flat[len(p_leaves):])
+            logits, _ = M.forward(p, s, image, cfg, train=False)
+            return (logits,)
+
+        flat_specs = [_spec(l) for l in p_leaves] + [_spec(l) for l in s_leaves]
+        pnames = ["param:" + n for n, _ in M.flatten_tree(params)]
+        snames = ["state:" + n for n, _ in M.flatten_tree(state)]
+        dump(f"frontend_{res}_b{b}", frontend_fn, ["image"] + pnames + snames,
+             img, *flat_specs)
+        dump(f"backbone_{res}_b{b}", backbone_fn, ["acts"] + pnames + snames,
+             acts, *flat_specs)
+        dump(f"full_{res}_b{b}", full_fn, ["image"] + pnames + snames,
+             img, *flat_specs)
+
+    # --- training graphs ---
+    xb = jax.ShapeDtypeStruct((TRAIN_BATCH, res, res, 3), jnp.float32)
+    yb = jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    n_p = len(p_leaves)
+    n_s = len(s_leaves)
+
+    def train_fn(*args):
+        p_flat = args[:n_p]
+        s_flat = args[n_p : n_p + n_s]
+        m_flat = args[n_p + n_s : 2 * n_p + n_s]
+        x, y, lr_ = args[2 * n_p + n_s :]
+        p, s = rebuild(p_flat, s_flat)
+        m = M.unflatten_like(params, m_flat)
+        p2, s2, m2, loss = M.train_step(p, s, m, x, y, lr_, cfg)
+        return (
+            tuple(l for _, l in M.flatten_tree(p2))
+            + tuple(l for _, l in M.flatten_tree(s2))
+            + tuple(l for _, l in M.flatten_tree(m2))
+            + (loss,)
+        )
+
+    def eval_fn(*args):
+        p_flat = args[:n_p]
+        s_flat = args[n_p : n_p + n_s]
+        x, y = args[n_p + n_s :]
+        p, s = rebuild(p_flat, s_flat)
+        loss, correct = M.eval_step(p, s, x, y, cfg)
+        return (loss, correct)
+
+    p_specs = [_spec(l) for l in p_leaves]
+    s_specs = [_spec(l) for l in s_leaves]
+    pnames = ["param:" + n for n, _ in M.flatten_tree(params)]
+    snames = ["state:" + n for n, _ in M.flatten_tree(state)]
+    mnames = ["momentum:" + n for n, _ in M.flatten_tree(params)]
+    dump(
+        f"train_step_{res}", train_fn,
+        pnames + snames + mnames + ["batch_x", "batch_y", "lr"],
+        *p_specs, *s_specs, *p_specs, xb, yb, lr,
+    )
+
+    xe = jax.ShapeDtypeStruct((EVAL_BATCH, res, res, 3), jnp.float32)
+    ye = jax.ShapeDtypeStruct((EVAL_BATCH,), jnp.int32)
+    dump(
+        f"eval_step_{res}", eval_fn,
+        pnames + snames + ["batch_x", "batch_y"],
+        *p_specs, *s_specs, xe, ye,
+    )
+
+    _write_bin(os.path.join(out_dir, f"params_{res}.bin"), params)
+    _write_bin(os.path.join(out_dir, f"state_{res}.bin"), state)
+    entry["params_bin"] = f"params_{res}.bin"
+    entry["state_bin"] = f"state_{res}.bin"
+    manifest["models"][str(res)] = entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument(
+        "--resolutions", default=",".join(str(r) for r in RESOLUTIONS)
+    )
+    args = ap.parse_args()
+    out_dir = args.out_dir or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"
+    )
+    os.makedirs(out_dir, exist_ok=True)
+
+    # Curve fit first: the model path loads artifacts/curve_fit.json when
+    # present, so writing it before lowering pins training & rust to the
+    # same surface.
+    fit = nonideal.fit_curve()
+    with open(os.path.join(out_dir, "curve_fit.json"), "w") as f:
+        f.write(fit.to_json())
+    nonideal._CACHE["default"] = fit
+    print(f"curve_fit.json (rmse={fit.rmse:.4f}, v_fs={fit.v_full_scale:.4f} V)")
+
+    manifest = {
+        "schema": "p2m-manifest-v1",
+        "mw": nonideal.MW,
+        "na": nonideal.NA,
+        "models": {},
+    }
+    for res in (int(r) for r in args.resolutions.split(",")):
+        cfg = M.ModelConfig(resolution=res)
+        print(f"resolution {res}:")
+        export_resolution(cfg, out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("manifest.json")
+
+
+if __name__ == "__main__":
+    main()

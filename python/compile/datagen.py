@@ -1,0 +1,158 @@
+"""Synthetic VWW-style dataset (the dataset substitution, DESIGN.md §3).
+
+The real Visual Wake Words dataset is COCO-derived (~109k images) and not
+available offline.  The experiments that need it measure *relative
+accuracy deltas* between the baseline and P2M-constrained models, so we
+substitute a controlled binary "person present?" task with matched
+structure: high-resolution-ish RGB scenes with luminance variation and
+clutter, where positives contain an articulated person-like figure (head
++ torso + limbs) at random pose/scale/position and negatives contain only
+clutter (including person-*unlike* distractor shapes, so the task is not
+trivially solvable by a blob detector).
+
+Deterministic given (seed, index): the i-th image of a split is always
+the same, which is what the hypothesis tests and the paper-sweep scripts
+rely on.  The rust scene generator (``rust/src/sensor/scene.rs``) draws
+from the same family of scenes (it does not need to be bit-identical —
+no experiment trains in python and evaluates in rust on the same split).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed: int, index: int, split: str) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, {"train": 0, "val": 1, "test": 2}[split], index])
+    )
+
+
+def _ellipse_mask(res, cy, cx, ry, rx, angle, yy, xx):
+    """Filled rotated-ellipse mask on a res x res grid."""
+    ca, sa = np.cos(angle), np.sin(angle)
+    dy, dx = yy - cy, xx - cx
+    u = ca * dx + sa * dy
+    v = -sa * dx + ca * dy
+    return (u / max(rx, 1e-6)) ** 2 + (v / max(ry, 1e-6)) ** 2 <= 1.0
+
+
+def _paint(img, mask, color, alpha=1.0):
+    img[mask] = (1 - alpha) * img[mask] + alpha * np.asarray(color)
+
+
+def _background(rng, res, yy, xx):
+    """Smooth luminance gradient + rectangles/ellipses of clutter."""
+    base = rng.uniform(0.15, 0.75, size=3)
+    gy, gx = rng.uniform(-0.3, 0.3, 2)
+    img = np.empty((res, res, 3), np.float32)
+    grad = gy * (yy / res - 0.5) + gx * (xx / res - 0.5)
+    for c in range(3):
+        img[:, :, c] = np.clip(base[c] + grad, 0.0, 1.0)
+    n_clutter = rng.integers(2, 7)
+    for _ in range(n_clutter):
+        color = rng.uniform(0.0, 1.0, 3)
+        if rng.random() < 0.5:
+            y0, x0 = rng.integers(0, res, 2)
+            h, w = rng.integers(res // 10, res // 2, 2)
+            img[y0 : y0 + h, x0 : x0 + w] = (
+                0.5 * img[y0 : y0 + h, x0 : x0 + w] + 0.5 * color
+            )
+        else:
+            m = _ellipse_mask(
+                res,
+                rng.uniform(0, res),
+                rng.uniform(0, res),
+                rng.uniform(res / 12, res / 4),
+                rng.uniform(res / 12, res / 4),
+                rng.uniform(0, np.pi),
+                yy,
+                xx,
+            )
+            _paint(img, m, color, alpha=0.6)
+    return img
+
+
+def _person(rng, img, res, yy, xx):
+    """Articulated person-like figure: torso + head + 2 arms + 2 legs."""
+    scale = rng.uniform(0.18, 0.42) * res
+    cy = rng.uniform(0.35 * res, 0.75 * res)
+    cx = rng.uniform(0.2 * res, 0.8 * res)
+    tone = rng.uniform(0.1, 0.9)
+    skin = np.array([tone, tone * rng.uniform(0.7, 1.0), tone * rng.uniform(0.5, 0.9)])
+    cloth = rng.uniform(0.0, 1.0, 3)
+    lean = rng.uniform(-0.25, 0.25)
+
+    # torso (vertical-ish ellipse)
+    torso = _ellipse_mask(res, cy, cx, 0.42 * scale, 0.20 * scale, lean, yy, xx)
+    _paint(img, torso, cloth, 0.95)
+    # head above torso
+    hy = cy - 0.58 * scale + lean * 0.2 * scale
+    hx = cx + lean * 0.5 * scale
+    head = _ellipse_mask(res, hy, hx, 0.16 * scale, 0.13 * scale, 0.0, yy, xx)
+    _paint(img, head, skin, 0.95)
+    # limbs: thin rotated ellipses hanging off the torso
+    for side in (-1, 1):
+        aa = lean + side * rng.uniform(0.3, 1.1)
+        ay = cy - 0.2 * scale
+        ax = cx + side * 0.22 * scale
+        arm = _ellipse_mask(
+            res, ay + 0.18 * scale * np.cos(aa), ax + 0.18 * scale * np.sin(aa),
+            0.25 * scale, 0.06 * scale, aa, yy, xx,
+        )
+        _paint(img, arm, cloth * rng.uniform(0.8, 1.0), 0.9)
+        la = lean + side * rng.uniform(0.0, 0.35)
+        ly = cy + 0.55 * scale
+        lx = cx + side * 0.10 * scale
+        leg = _ellipse_mask(
+            res, ly + 0.2 * scale * np.cos(la), lx + 0.2 * scale * np.sin(la),
+            0.30 * scale, 0.07 * scale, la, yy, xx,
+        )
+        _paint(img, leg, cloth * rng.uniform(0.5, 0.9), 0.9)
+    return img
+
+
+def _distractor(rng, img, res, yy, xx):
+    """Person-unlike distractor: a few disjoint blobs (no head-over-torso
+    structure) so negatives are not simply 'fewer pixels painted'."""
+    n = rng.integers(1, 4)
+    for _ in range(n):
+        color = rng.uniform(0.0, 1.0, 3)
+        m = _ellipse_mask(
+            res,
+            rng.uniform(0.2 * res, 0.8 * res),
+            rng.uniform(0.2 * res, 0.8 * res),
+            rng.uniform(res / 14, res / 5),
+            rng.uniform(res / 14, res / 5),
+            rng.uniform(0, np.pi),
+            yy,
+            xx,
+        )
+        _paint(img, m, color, 0.9)
+    return img
+
+
+def make_image(res: int, label: int, seed: int, index: int, split: str = "train"):
+    """One (res, res, 3) float32 image in [0, 1] for the given label."""
+    rng = _rng(seed, index, split)
+    yy, xx = np.mgrid[0:res, 0:res].astype(np.float32)
+    img = _background(rng, res, yy, xx)
+    if label == 1:
+        img = _person(rng, img, res, yy, xx)
+    else:
+        img = _distractor(rng, img, res, yy, xx)
+    # sensor-ish noise
+    img = img + rng.normal(0.0, 0.02, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_batch(res: int, batch: int, seed: int, start: int, split: str = "train"):
+    """Batch of images + labels; label alternates so batches are balanced."""
+    xs = np.empty((batch, res, res, 3), np.float32)
+    ys = np.empty((batch,), np.int32)
+    for i in range(batch):
+        idx = start + i
+        label = idx % 2
+        xs[i] = make_image(res, label, seed, idx, split)
+        ys[i] = label
+    return xs, ys

@@ -1,0 +1,169 @@
+"""Behavioural FD-SOI device model — the SPICE substitution.
+
+The paper simulates the memory-embedded pixel on GlobalFoundries 22nm
+FD-SOI in SPICE, then reduces the results to "a behavioural curve-fitting
+function" that replaces the first-layer convolution during training
+(Section 4.1).  We do not have the foundry PDK, so we generate the
+SPICE-like sample grid from a smooth EKV-style MOSFET model and solve the
+series pixel stack for its DC operating point:
+
+    VDD ── source follower (gate = photodiode node M) ── node S
+        ── weight transistor (gate = select line at VDD) ── column line
+        ── column load R_col ── GND
+
+The weight transistor acts as programmable source degeneration: its width
+(the stored weight) and the photodiode-modulated SF gate voltage jointly
+set the column current, producing the approximately multiplicative,
+compressive surface of the paper's Fig. 3a/3b (monotone in both weight
+and activation; correlation with the ideal product W x I of ~0.98 over
+the sampled grid — matching the scatter the paper reports).
+
+The *same* model is re-implemented in ``rust/src/analog/device.rs`` so the
+rust circuit simulator and the python training path share semantics; the
+cross-check is by golden values in ``python/tests/test_device.py`` and the
+corresponding rust unit tests.
+
+Everything here is plain float python — it runs once at build time to
+produce ``artifacts/curve_fit.json``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class DeviceParams:
+    """Technology parameters for the 22nm FD-SOI behavioural model.
+
+    Values are representative of a 22nm low-power node (not a foundry PDK;
+    see DESIGN.md §Substitutions).  ``i0_*`` folds mobility, C_ox and 1/L
+    into a per-µm-of-width transconductance scale; the weight transistor
+    uses a longer channel (better matching for stored weights), hence the
+    smaller ``i0_w``.
+    """
+
+    vdd: float = 0.8           # supply voltage [V]
+    vth: float = 0.35          # threshold voltage [V]
+    n_slope: float = 1.35      # subthreshold slope factor
+    v_t: float = 0.02585       # thermal voltage kT/q at 300K [V]
+    lambda_clm: float = 0.08   # channel-length modulation [1/V]
+    i0_sf: float = 8.0e-4      # SF current scale per µm width [A/µm]
+    w_sf: float = 1.5          # source-follower width [µm]
+    i0_w: float = 1.2e-4       # weight-transistor current scale [A/µm]
+    w_min: float = 0.04        # minimum weight-transistor width [µm]
+    w_max: float = 0.60        # maximum weight-transistor width [µm]
+    r_col: float = 40.0e3      # column-line load resistance [ohm]
+    vg_dark: float = 0.30      # SF gate voltage at zero photocurrent [V]
+    vg_bright: float = 0.80    # SF gate voltage at full-scale photocurrent [V]
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def _ekv_f(x: float) -> float:
+    """EKV interpolation function F(x) = ln^2(1 + exp(x/2)).
+
+    Smoothly bridges weak inversion (exponential) and strong inversion
+    (square law); monotone increasing, F(-inf) = 0.
+    """
+    half = x / 2.0
+    # Guard against overflow for large x: ln(1 + e^(x/2)) ~ x/2.
+    ln1p = half if half > 40.0 else math.log1p(math.exp(half))
+    return ln1p * ln1p
+
+
+def drain_current(
+    p: DeviceParams, i0: float, width: float, vgs: float, vds: float
+) -> float:
+    """Channel current of a width-``width`` NMOS, EKV interpolation.
+
+    I_D = i0 * W * n * v_t^2
+          * [F((Vgs-Vth)/(n vt)) - F((Vgs-Vth-n*Vds)/(n vt))]
+          * (1 + lambda * Vds)
+
+    Smooth in all arguments; 0 at Vds <= 0; saturates for large Vds.
+    """
+    if width <= 0.0 or vds <= 0.0:
+        return 0.0
+    nvt = p.n_slope * p.v_t
+    xf = (vgs - p.vth) / nvt
+    xr = (vgs - p.vth - p.n_slope * vds) / nvt
+    i_spec = i0 * width * p.n_slope * p.v_t * p.v_t
+    return i_spec * (_ekv_f(xf) - _ekv_f(xr)) * (1.0 + p.lambda_clm * vds)
+
+
+def _stack_current(
+    p: DeviceParams, w_weight: float, v_g: float, v_out: float
+) -> float:
+    """Current through the pixel series stack with the column pinned at
+    ``v_out``.
+
+    Solves the internal node S (SF source / weight-transistor drain) by
+    bisection: the SF current decreases in V_S while the weight-transistor
+    current increases in V_S, so the crossing is unique.
+    """
+    if w_weight <= 0.0:
+        return 0.0
+
+    def i_sf(v_s: float) -> float:
+        return drain_current(p, p.i0_sf, p.w_sf, v_g - v_s, p.vdd - v_s)
+
+    def i_w(v_s: float) -> float:
+        return drain_current(p, p.i0_w, w_weight, p.vdd - v_out, v_s - v_out)
+
+    lo, hi = v_out, p.vdd
+    if i_sf(lo) - i_w(lo) <= 0.0:
+        # The weight device is stronger than the SF can supply even with
+        # zero degeneration drop: the stack is SF-limited.
+        return i_sf(lo)
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if i_sf(mid) - i_w(mid) > 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return i_w(0.5 * (lo + hi))
+
+
+def pixel_output_voltage(p: DeviceParams, w_norm: float, act_norm: float) -> float:
+    """DC operating point of one memory-embedded pixel.
+
+    ``w_norm``   in [0,1]: normalised weight-transistor width
+                 (0 -> device absent / select line low, 1 -> w_max).
+    ``act_norm`` in [0,1]: normalised photodiode current; maps linearly to
+                 the SF gate voltage in [vg_dark, vg_bright].
+
+    Returns the column-line output voltage [V]: the unique V_out where the
+    stack current equals the column-load current V_out / r_col.
+    """
+    if w_norm <= 0.0:
+        return 0.0
+    width = p.w_min + w_norm * (p.w_max - p.w_min)
+    v_g = p.vg_dark + act_norm * (p.vg_bright - p.vg_dark)
+
+    lo, hi = 0.0, p.vdd
+    # f(v) = stack(v) - v / r_col : positive at v = 0+, single crossing.
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if _stack_current(p, width, v_g, mid) - mid / p.r_col > 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def sample_grid(
+    p: DeviceParams, n_w: int = 24, n_a: int = 24
+) -> tuple[list[float], list[float], list[list[float]]]:
+    """SPICE-substitution sample grid: V_out over (w_norm, act_norm).
+
+    Returns ``(w_axis, a_axis, v)`` with ``v[i][j]`` the output voltage at
+    ``w_axis[i], a_axis[j]``.  The w axis starts at 0 so the curve fit
+    sees the hard zero of an absent / deselected device.
+    """
+    w_axis = [i / (n_w - 1) for i in range(n_w)]
+    a_axis = [j / (n_a - 1) for j in range(n_a)]
+    grid = [[pixel_output_voltage(p, w, a) for a in a_axis] for w in w_axis]
+    return w_axis, a_axis, grid

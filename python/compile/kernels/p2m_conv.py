@@ -1,0 +1,225 @@
+"""Layer-1 Pallas kernels: the P2M in-pixel layer on the MXU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+----------------------------------------------------
+The paper's hot spot is an *analog* multi-pixel dot product: X*Y*3 pixels
+drive a channel column line simultaneously, each contributing the
+non-linear transfer f(w, x) of its weight transistor.  There is no CUDA
+kernel to port; the insight we carry to the TPU is that the behavioural
+fit is a low-degree polynomial, so the column-line accumulation
+
+    acc[i, c] = sum_p f(w[p, c], x[i, p])
+              = sum_{m=1..MW, n=0..NA} C[m,n] * sum_p x[i,p]^n * w[p,c]^m
+              = sum_{m,n}   C[m,n] * (X^{.n} @ W^{.m})[i, c]
+
+is a short sum of dense matmuls over element-wise powers — exactly the
+shape the MXU systolic array wants.  Weight powers W^{.m} are precomputed
+once (weights are literally fixed in silicon); activation powers X^{.n}
+are built in VMEM per tile by repeated multiplication.
+
+The kernel keeps the up-count (positive weights) and down-count (negative
+weights) phases as *separate accumulators*, fused into one pass over the
+activation powers, and applies the per-channel BN ramp scale, counter
+preset, and the quantised-ReLU latch of the SS-ADC — it is a functional
+golden model of the whole in-pixel signal chain.
+
+VMEM budget per grid step (defaults TN=256, P=75, C=8, NA=3, MW=3):
+  x tile 256*75*4 = 75 KiB, weight powers 2*3*75*8*4 = 14 KiB,
+  out 256*8*4 = 8 KiB  ->  ~97 KiB, comfortably inside one TPU core's
+  ~16 MiB VMEM; arithmetic is 2*MW*(NA+1) = 24 (TN,P)x(P,C) matmuls.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* (EXPERIMENTS.md §Perf),
+correctness is proven against :mod:`compile.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import nonideal
+from . import ref as _ref
+
+# Default tile of output locations (receptive fields) per grid step.
+TILE_N = 256
+
+
+def _weight_powers(w, mw):
+    """Stack [w^1, ..., w^mw] along a leading axis: (MW, P, C)."""
+    return jnp.stack([w ** (m + 1) for m in range(mw)], axis=0)
+
+
+def _folded_k(w_pos, w_neg, coeffs):
+    """Fold weights + curve-fit coefficients into one matmul operand.
+
+    §Perf (L1): the 2*MW*(NA+1) small matmuls collapse into a single
+    (TN, (NA+1)*P) @ ((NA+1)*P, 2C) contraction —
+
+        K[n*P + p, c]     = sum_m C[m][n] * w_pos[p,c]^(m+1)
+        K[n*P + p, C + c] = sum_m C[m][n] * w_neg[p,c]^(m+1)
+
+    — lifting the MXU contraction dimension from 75 to 300 and the lane
+    dimension from 8 to 16 (both CDS phases ride one pass).  Weights are
+    fixed in silicon, so K is a compile-time constant fold.
+    """
+    mw, na1 = coeffs.shape
+    p, c = w_pos.shape
+    blocks = []
+    for n in range(na1):
+        kp = sum(float(coeffs[m][n]) * w_pos ** (m + 1) for m in range(mw))
+        kn = sum(float(coeffs[m][n]) * w_neg ** (m + 1) for m in range(mw))
+        blocks.append(jnp.concatenate([kp, kn], axis=1))  # (P, 2C)
+    return jnp.concatenate(blocks, axis=0)  # ((NA+1)*P, 2C)
+
+
+def _p2m_kernel_fused(x_ref, k_ref, scale_ref, shift_ref, o_ref, *, na1, n_bits, lsb):
+    """Fused grid step: one matmul for both CDS phases of all channels."""
+    x = x_ref[...]  # (TN, P)
+    # x powers, n-major to match _folded_k's row order: [x^0 | x^1 | ...].
+    powers = [jnp.ones_like(x)]
+    for _ in range(na1 - 1):
+        powers.append(powers[-1] * x)
+    xp = jnp.concatenate(powers, axis=1)  # (TN, (NA+1)*P)
+    y2 = jnp.dot(xp, k_ref[...], preferred_element_type=jnp.float32)  # (TN, 2C)
+    c = y2.shape[1] // 2
+    pos, neg = y2[:, :c], y2[:, c:]
+    y = scale_ref[...][None, :] * (pos - neg) + shift_ref[...][None, :]
+    code = jnp.clip(jnp.floor(y / lsb + 0.5), 0.0, float(2 ** n_bits - 1))
+    o_ref[...] = code * lsb
+
+
+def _p2m_kernel(
+    x_ref, wpos_ref, wneg_ref, scale_ref, shift_ref, o_ref, *, coeffs, n_bits, lsb
+):
+    """One grid step: TN receptive fields -> TN x C quantised activations.
+
+    coeffs is a static (MW, NA+1) tuple-of-tuples baked in at trace time
+    (the silicon transfer surface is a compile-time constant).
+    """
+    x = x_ref[...]  # (TN, P) photodiode currents
+    mw = len(coeffs)
+    na1 = len(coeffs[0])
+
+    tn = x.shape[0]
+    c = wpos_ref.shape[-1]
+    pos = jnp.zeros((tn, c), jnp.float32)  # up-count phase
+    neg = jnp.zeros((tn, c), jnp.float32)  # down-count phase
+
+    xn = jnp.ones_like(x)  # x^0
+    for n in range(na1):
+        for m in range(mw):
+            cmn = coeffs[m][n]
+            # MXU: (TN, P) @ (P, C) for each phase.
+            pos = pos + cmn * jnp.dot(
+                xn, wpos_ref[m], preferred_element_type=jnp.float32
+            )
+            neg = neg + cmn * jnp.dot(
+                xn, wneg_ref[m], preferred_element_type=jnp.float32
+            )
+        if n + 1 < na1:
+            xn = xn * x
+
+    # Digital CDS: up count minus down count; per-channel ramp slope (BN
+    # scale) and non-zero counter preset (BN shift).
+    y = scale_ref[...][None, :] * (pos - neg) + shift_ref[...][None, :]
+    # SS-ADC latch: quantised shifted ReLU (floor(x+0.5) = half away from
+    # zero for the non-negative codes we clamp to).
+    code = jnp.clip(jnp.floor(y / lsb + 0.5), 0.0, float(2 ** n_bits - 1))
+    o_ref[...] = code * lsb
+
+
+def p2m_conv(
+    patches,
+    w_pos,
+    w_neg,
+    bn_scale,
+    bn_shift,
+    coeffs=None,
+    n_bits: int = 8,
+    lsb: float | None = None,
+    tile_n: int = TILE_N,
+    interpret: bool = True,
+    fused: bool = True,
+):
+    """P2M in-pixel layer over flattened receptive fields.
+
+    Same signature/semantics as :func:`compile.kernels.ref.p2m_conv_ref`;
+    tiles the N axis over a Pallas grid.  N is padded to a multiple of
+    ``tile_n`` (padded rows are all-zero patches and are sliced off).
+
+    ``fused=True`` (default, §Perf) uses the single-matmul formulation
+    (see :func:`_folded_k`); ``fused=False`` keeps the 2*MW*(NA+1)
+    small-matmul form for comparison — both are hypothesis-tested against
+    the oracle.
+    """
+    if coeffs is None:
+        coeffs = nonideal.coeffs_array()
+    coeffs_static = tuple(tuple(float(v) for v in row) for row in list(coeffs))
+    mw = len(coeffs_static)
+    na1 = len(coeffs_static[0])
+
+    n, p = patches.shape
+    c = w_pos.shape[1]
+    if lsb is None:
+        lsb = _ref.default_lsb(p, n_bits)
+
+    n_pad = (-n) % tile_n
+    if n_pad:
+        patches = jnp.pad(patches, ((0, n_pad), (0, 0)))
+    n_total = n + n_pad
+    grid = (n_total // tile_n,)
+
+    if fused:
+        k = _folded_k(w_pos, w_neg, coeffs)  # ((NA+1)*P, 2C)
+        out = pl.pallas_call(
+            functools.partial(
+                _p2m_kernel_fused, na1=na1, n_bits=n_bits, lsb=float(lsb)
+            ),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tile_n, p), lambda i: (i, 0)),
+                pl.BlockSpec((na1 * p, 2 * c), lambda i: (0, 0)),
+                pl.BlockSpec((c,), lambda i: (0,)),
+                pl.BlockSpec((c,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((tile_n, c), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_total, c), jnp.float32),
+            interpret=interpret,
+        )(patches, k, bn_scale, bn_shift)
+        return out[:n]
+
+    wpos_pow = _weight_powers(w_pos, mw)  # (MW, P, C)
+    wneg_pow = _weight_powers(w_neg, mw)
+    out = pl.pallas_call(
+        functools.partial(
+            _p2m_kernel, coeffs=coeffs_static, n_bits=n_bits, lsb=float(lsb)
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((mw, p, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((mw, p, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_total, c), jnp.float32),
+        interpret=interpret,
+    )(patches, wpos_pow, wneg_pow, bn_scale, bn_shift)
+    return out[:n]
+
+
+def p2m_layer(image, w_pos, w_neg, bn_scale, bn_shift, k: int = 5, **kw):
+    """Image-level wrapper: (B, H, W, 3) -> (B, H//k, W//k, C).
+
+    Patch extraction (pure data movement — the circuit's pixel wiring)
+    stays in XLA; the compute-dense inner layer is the Pallas kernel.
+    """
+    b, h, w, _ = image.shape
+    patches = _ref.extract_patches(image, k)
+    out = p2m_conv(patches, w_pos, w_neg, bn_scale, bn_shift, **kw)
+    return out.reshape(b, h // k, w // k, w_pos.shape[1])

@@ -1,0 +1,127 @@
+"""Pure-jnp oracle for every Pallas kernel (correctness ground truth).
+
+These functions define the *semantics* of the P2M in-pixel layer; the
+Pallas kernels in :mod:`compile.kernels.p2m_conv` must match them under
+``interpret=True`` (asserted by ``python/tests/test_kernel.py`` with
+hypothesis sweeps), and the rust analog frontend in ideal mode must match
+them numerically (asserted by the rust integration test against the
+exported frontend HLO).
+
+Conventions
+-----------
+* ``patches``: (N, P) float32 in [0, 1] — N receptive fields of P = k*k*3
+  normalised photodiode currents.
+* ``w_pos`` / ``w_neg``: (P, C) float32 in [0, 1] — normalised widths of
+  the positive- / negative-tagged weight transistors.  At most one of the
+  two is non-zero per (p, c) (circuit: a transistor is tagged by wiring
+  its supply line to the red or green VDD rail, never both).
+* ``coeffs``: (MW, NA+1) curve-fit coefficients, f(1,1) = 1.
+* The CDS accumulation is computed as two separate phase sums (up count,
+  down count) exactly like the circuit; they are only combined at the
+  counter.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import nonideal
+
+
+def pixel_f(coeffs, w, a):
+    """Element-wise curve-fit transfer f(w, a); exact 0 at w = 0.
+
+    Broadcasts over any shapes; both args in [0, 1].
+    """
+    mw, na1 = coeffs.shape
+    acc = jnp.zeros(jnp.broadcast_shapes(jnp.shape(w), jnp.shape(a)), jnp.float32)
+    wm = jnp.ones_like(w * a)
+    for m in range(mw):
+        wm = wm * w
+        an = jnp.ones_like(wm)
+        for n in range(na1):
+            acc = acc + coeffs[m, n] * wm * an
+            an = an * a
+    return acc
+
+
+def phase_accumulate(patches, w_phase, coeffs):
+    """One CDS sampling phase: column-line accumulation of pixel outputs.
+
+    out[i, c] = sum_p f(w_phase[p, c], patches[i, p])
+
+    Returns (N, C) float32 — the analog voltage on each channel's column
+    line, in units of f(1,1) (single-pixel full scale).
+    """
+    # Naive definition: broadcast and reduce. (The Pallas kernel instead
+    # uses the sum-of-matmuls identity; equality is the key kernel test.)
+    f = pixel_f(coeffs, w_phase[None, :, :], patches[:, :, None])  # (N,P,C)
+    return jnp.sum(f, axis=1)
+
+
+def ss_adc_quantize(v, n_bits, lsb):
+    """SS-ADC conversion of the latched (CDS-completed) counter value.
+
+    Counter counts ramp steps of ``lsb`` until the ramp crosses ``v``;
+    the latch clamps at zero (ReLU) and saturates at full scale.
+    Rounds half-away-from-zero via floor(x + 0.5) to match the rust
+    implementation exactly (jnp.round would round half-to-even).
+    """
+    code = jnp.floor(v / lsb + 0.5)
+    code = jnp.clip(code, 0.0, float(2 ** n_bits - 1))
+    return code
+
+
+def default_lsb(n_pixels: int, n_bits: int) -> float:
+    """Default ADC LSB: one channel's column full scale over the code range."""
+    return float(n_pixels) / float(2 ** n_bits - 1)
+
+
+def p2m_conv_ref(
+    patches, w_pos, w_neg, bn_scale, bn_shift, coeffs=None, n_bits=8, lsb=None
+):
+    """Full P2M in-pixel layer, reference semantics.
+
+    1. up-count phase:    pos[i,c]  = sum_p f(w_pos[p,c], x[i,p])
+    2. down-count phase:  neg[i,c]  = sum_p f(w_neg[p,c], x[i,p])
+    3. CDS difference, per-channel ramp slope (BN scale A) and counter
+       preset (BN shift B):   y = A * (pos - neg) + B
+    4. quantized shifted ReLU in the SS-ADC latch, dequantised back to
+       the analog scale for the downstream (digital) layers.
+
+    Returns (N, C) float32 of *dequantised* activations: code * lsb.
+    """
+    if coeffs is None:
+        coeffs = nonideal.coeffs_array()
+    if lsb is None:
+        lsb = default_lsb(patches.shape[1], n_bits)
+    pos = phase_accumulate(patches, w_pos, coeffs)
+    neg = phase_accumulate(patches, w_neg, coeffs)
+    y = bn_scale[None, :] * (pos - neg) + bn_shift[None, :]
+    code = ss_adc_quantize(y, n_bits, lsb)
+    return code * lsb
+
+
+def extract_patches(x, k):
+    """Non-overlapping k x k patch extraction (stride = k, no padding).
+
+    x: (B, H, W, C_in) -> (B * (H//k) * (W//k), k*k*C_in)
+
+    Patch element order is (ky, kx, c_in) — the manifest order shared
+    with the rust frontend.
+    """
+    b, h, w, c = x.shape
+    ho, wo = h // k, w // k
+    x = x[:, : ho * k, : wo * k, :]
+    x = x.reshape(b, ho, k, wo, k, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # (B, ho, wo, k, k, c)
+    return x.reshape(b * ho * wo, k * k * c)
+
+
+def p2m_layer_ref(image, w_pos, w_neg, bn_scale, bn_shift, k=5, **kw):
+    """Image-level wrapper: (B,H,W,3) -> (B, H//k, W//k, C)."""
+    b, h, w, _ = image.shape
+    patches = extract_patches(image, k)
+    out = p2m_conv_ref(patches, w_pos, w_neg, bn_scale, bn_shift, **kw)
+    c = w_pos.shape[1]
+    return out.reshape(b, h // k, w // k, c)

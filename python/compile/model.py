@@ -1,0 +1,418 @@
+"""Layer-2 JAX model: P2M-constrained MobileNetV2 for VWW-style wake words.
+
+Pure-jnp (no flax) so the whole forward/backward/update lowers to a single
+HLO module the rust runtime can execute.  Two stem variants:
+
+* ``p2m``      — the paper's custom first layer: curve-fit analog
+                 convolution with CDS-split positive/negative weights,
+                 k = 5, stride 5 (non-overlapping), c_o = 8, BN + ReLU
+                 (Table 1 hyper-parameters);
+* ``baseline`` — a standard 3x3 stride-2 conv stem (32 channels), the
+                 uncompressed reference of Table 2.
+
+Training follows the paper: float training with the behavioural non-
+ideality in the graph, SGD + momentum (0.9), post-training quantisation
+of the in-pixel layer output (Fig. 7a sweeps the bit-width at eval time).
+
+Parameter pytrees are flattened in deterministic (sorted-path) order; the
+same order is recorded in ``artifacts/manifest.json`` so the rust side
+can round-trip parameters through the train-step executable.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from . import nonideal
+from .kernels import ref as kref
+from .kernels import p2m_conv as kpallas
+
+BN_EPS = 1e-3
+BN_MOMENTUM = 0.1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + P2M co-design hyper-parameters (paper Table 1)."""
+
+    resolution: int = 80
+    stem: str = "p2m"            # "p2m" | "p2m_linear" | "baseline"
+    # "p2m_linear" keeps the P2M geometry (k x k non-overlapping patches,
+    # c_o channels) but replaces the curve-fit analog transfer with an
+    # ideal linear convolution — the ablation knob isolating the custom
+    # function from the stride/channel constraints (paper Section 5.2).
+    kernel_size: int = 5         # k  (p2m stem; non-overlapping stride = k)
+    stem_channels: int = 8       # c_o for p2m, 32 for baseline
+    n_bits: int = 8              # N_b: in-pixel layer output precision
+    num_classes: int = 2
+    # Inverted-residual stack: (expansion t, channels c, repeats n, stride s)
+    blocks: tuple = ((1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 2, 2), (6, 64, 1, 1))
+    head_channels: int = 128
+
+    @property
+    def stem_stride(self) -> int:
+        return 2 if self.stem == "baseline" else self.kernel_size
+
+    @property
+    def stem_out(self) -> int:
+        if self.stem == "baseline":
+            return self.resolution // 2
+        return self.resolution // self.kernel_size
+
+    @property
+    def patch_len(self) -> int:
+        return self.kernel_size * self.kernel_size * 3
+
+    def with_resolution(self, res: int) -> "ModelConfig":
+        return replace(self, resolution=res)
+
+
+def baseline_config(resolution: int = 80) -> ModelConfig:
+    return ModelConfig(
+        resolution=resolution,
+        stem="baseline",
+        kernel_size=3,
+        stem_channels=32,
+        blocks=(
+            (1, 16, 1, 1),
+            (6, 24, 2, 2),
+            (6, 32, 2, 2),
+            (6, 64, 2, 2),
+            (6, 96, 1, 1),
+        ),
+    )
+
+
+# ----------------------------------------------------------------------
+# primitive layers
+# ----------------------------------------------------------------------
+
+
+def conv2d(x, w, stride=1, groups=1, padding="SAME"):
+    """NHWC conv with HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def bn_apply(p, x, train: bool):
+    """Batch norm; returns (y, new_running_stats).
+
+    ``p`` carries gamma/beta (trainable) and mean/var (running state); the
+    state update only happens in training mode.
+    """
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_mean = (1 - BN_MOMENTUM) * p["mean"] + BN_MOMENTUM * mean
+        new_var = (1 - BN_MOMENTUM) * p["var"] + BN_MOMENTUM * var
+    else:
+        mean, var = p["mean"], p["var"]
+        new_mean, new_var = p["mean"], p["var"]
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    y = (x - mean) * inv * p["gamma"] + p["beta"]
+    return y, {"mean": new_mean, "var": new_var}
+
+
+def bn_fuse(p):
+    """Inference-time fusion: y = A*x + B (paper Eq. 1)."""
+    inv = 1.0 / jnp.sqrt(p["var"] + BN_EPS)
+    a = p["gamma"] * inv
+    b = p["beta"] - p["gamma"] * p["mean"] * inv
+    return a, b
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+# ----------------------------------------------------------------------
+# parameter initialisation
+# ----------------------------------------------------------------------
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _bn_params(c):
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def _bn_state(c):
+    return {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+def init_params(cfg: ModelConfig, key):
+    """Returns (params, state): trainable pytree + BN running-stat pytree."""
+    params, state = {}, {}
+    keys = iter(jax.random.split(key, 256))
+
+    if cfg.stem in ("p2m", "p2m_linear"):
+        # theta in [-0.5, 0.5]: signed normalised transistor widths.
+        theta = jax.random.uniform(
+            next(keys), (cfg.patch_len, cfg.stem_channels), jnp.float32, -0.5, 0.5
+        )
+        params["stem"] = {"theta": theta, "bn": _bn_params(cfg.stem_channels)}
+    else:
+        w = _he(next(keys), (3, 3, 3, cfg.stem_channels), 27)
+        params["stem"] = {"w": w, "bn": _bn_params(cfg.stem_channels)}
+    state["stem"] = {"bn": _bn_state(cfg.stem_channels)}
+
+    c_in = cfg.stem_channels
+    blocks_p, blocks_s = [], []
+    for t, c, n, s in cfg.blocks:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            c_mid = c_in * t
+            bp, bs = {}, {}
+            if t != 1:
+                bp["expand"] = {
+                    "w": _he(next(keys), (1, 1, c_in, c_mid), c_in),
+                    "bn": _bn_params(c_mid),
+                }
+                bs["expand"] = {"bn": _bn_state(c_mid)}
+            bp["depthwise"] = {
+                "w": _he(next(keys), (3, 3, 1, c_mid), 9),
+                "bn": _bn_params(c_mid),
+            }
+            bs["depthwise"] = {"bn": _bn_state(c_mid)}
+            bp["project"] = {
+                "w": _he(next(keys), (1, 1, c_mid, c), c_mid),
+                "bn": _bn_params(c),
+            }
+            bs["project"] = {"bn": _bn_state(c)}
+            blocks_p.append(bp)
+            blocks_s.append(bs)
+            c_in = c
+    params["blocks"] = blocks_p
+    state["blocks"] = blocks_s
+
+    params["head"] = {
+        "w": _he(next(keys), (1, 1, c_in, cfg.head_channels), c_in),
+        "bn": _bn_params(cfg.head_channels),
+    }
+    state["head"] = {"bn": _bn_state(cfg.head_channels)}
+    params["fc"] = {
+        "w": _he(next(keys), (cfg.head_channels, cfg.num_classes), cfg.head_channels),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params, state
+
+
+def block_strides(cfg: ModelConfig):
+    """Static per-block strides, parallel to params['blocks']."""
+    out = []
+    for t, c, n, s in cfg.blocks:
+        for i in range(n):
+            out.append(s if i == 0 else 1)
+    return out
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+
+def p2m_stem_weights(theta):
+    """Split signed theta into the two CDS phases (clipped to [0, 1])."""
+    w_pos = jnp.clip(theta, 0.0, 1.0)
+    w_neg = jnp.clip(-theta, 0.0, 1.0)
+    return w_pos, w_neg
+
+
+def p2m_stem_train(params, state, x, cfg: ModelConfig, train: bool):
+    """Float P2M stem used during training: analog conv -> BN -> ReLU.
+
+    No quantisation (the paper trains float and quantises post-training);
+    the differentiable curve-fit non-ideality is in the graph.
+    """
+    w_pos, w_neg = p2m_stem_weights(params["theta"])
+    coeffs = nonideal.coeffs_array()
+    patches = kref.extract_patches(x, cfg.kernel_size)
+    pos = kref.phase_accumulate(patches, w_pos, coeffs)
+    neg = kref.phase_accumulate(patches, w_neg, coeffs)
+    cds = pos - neg
+    b, h, w, _ = x.shape
+    k = cfg.kernel_size
+    cds = cds.reshape(b, h // k, w // k, cfg.stem_channels)
+    y, bn_state = bn_apply({**params["bn"], **state["bn"]}, cds, train)
+    return jax.nn.relu(y), {"bn": bn_state}
+
+
+def p2m_stem_infer(params, state, x, cfg: ModelConfig, n_bits=None, use_pallas=False):
+    """Quantised inference P2M stem: the silicon signal chain.
+
+    BN is fused into the per-channel ADC ramp slope (A) and counter preset
+    (B); the SS-ADC latch applies the quantised shifted ReLU.
+    """
+    n_bits = n_bits or cfg.n_bits
+    w_pos, w_neg = p2m_stem_weights(params["theta"])
+    a, b = bn_fuse({**params["bn"], **state["bn"]})
+    fn = kpallas.p2m_layer if use_pallas else kref.p2m_layer_ref
+    return fn(x, w_pos, w_neg, a, b, k=cfg.kernel_size, n_bits=n_bits)
+
+
+def p2m_linear_stem(params, state, x, cfg: ModelConfig, train: bool):
+    """Ablation stem: P2M geometry with an ideal linear convolution."""
+    patches = kref.extract_patches(x, cfg.kernel_size)
+    y = patches @ params["theta"]
+    b, h, w, _ = x.shape
+    k = cfg.kernel_size
+    y = y.reshape(b, h // k, w // k, cfg.stem_channels)
+    y, bn_state = bn_apply({**params["bn"], **state["bn"]}, y, train)
+    return jax.nn.relu(y), {"bn": bn_state}
+
+
+def baseline_stem(params, state, x, train: bool):
+    y = conv2d(x, params["w"], stride=2)
+    y, bn_state = bn_apply({**params["bn"], **state["bn"]}, y, train)
+    return relu6(y), {"bn": bn_state}
+
+
+def inverted_residual(bp, bs, x, stride: int, train: bool):
+    """MobileNetV2 block: expand (1x1) -> depthwise (3x3) -> project (1x1)."""
+    y = x
+    new_state = {}
+    if "expand" in bp:
+        y = conv2d(y, bp["expand"]["w"])
+        y, st = bn_apply({**bp["expand"]["bn"], **bs["expand"]["bn"]}, y, train)
+        new_state["expand"] = {"bn": st}
+        y = relu6(y)
+    c_mid = y.shape[-1]
+    y = conv2d(y, bp["depthwise"]["w"], stride=stride, groups=c_mid)
+    y, st = bn_apply({**bp["depthwise"]["bn"], **bs["depthwise"]["bn"]}, y, train)
+    new_state["depthwise"] = {"bn": st}
+    y = relu6(y)
+    y = conv2d(y, bp["project"]["w"])
+    y, st = bn_apply({**bp["project"]["bn"], **bs["project"]["bn"]}, y, train)
+    new_state["project"] = {"bn": st}
+    if stride == 1 and x.shape[-1] == y.shape[-1]:
+        y = x + y
+    return y, new_state
+
+
+def backbone(params, state, acts, cfg: ModelConfig, train: bool):
+    """Blocks + head + pool + classifier over stem activations."""
+    new_state = {"blocks": []}
+    y = acts
+    for bp, bs, stride in zip(params["blocks"], state["blocks"], block_strides(cfg)):
+        y, st = inverted_residual(bp, bs, y, stride, train)
+        new_state["blocks"].append(st)
+    y = conv2d(y, params["head"]["w"])
+    y, st = bn_apply({**params["head"]["bn"], **state["head"]["bn"]}, y, train)
+    new_state["head"] = {"bn": st}
+    y = relu6(y)
+    y = jnp.mean(y, axis=(1, 2))  # global average pool
+    logits = y @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, new_state
+
+
+def forward(params, state, x, cfg: ModelConfig, train: bool, n_bits=None,
+            use_pallas=False):
+    """Full model. Training uses the float stem; inference the quantised one."""
+    if cfg.stem == "p2m":
+        if train:
+            acts, stem_state = p2m_stem_train(
+                params["stem"], state["stem"], x, cfg, True
+            )
+        else:
+            acts = p2m_stem_infer(
+                params["stem"], state["stem"], x, cfg,
+                n_bits=n_bits, use_pallas=use_pallas,
+            )
+            stem_state = state["stem"]
+    elif cfg.stem == "p2m_linear":
+        acts, stem_state = p2m_linear_stem(params["stem"], state["stem"], x, cfg, train)
+    else:
+        acts, stem_state = baseline_stem(params["stem"], state["stem"], x, train)
+    logits, new_state = backbone(params, state, acts, cfg, train)
+    new_state["stem"] = stem_state
+    return logits, new_state
+
+
+# ----------------------------------------------------------------------
+# loss / train / eval
+# ----------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def loss_fn(params, state, x, y, cfg: ModelConfig):
+    logits, new_state = forward(params, state, x, cfg, train=True)
+    return softmax_xent(logits, y), new_state
+
+
+def train_step(params, state, momentum, x, y, lr, cfg: ModelConfig,
+               beta: float = 0.9):
+    """One SGD + momentum step (paper Section 5.1).
+
+    Returns (params', state', momentum', loss).
+    """
+    (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, state, x, y, cfg
+    )
+    new_momentum = jax.tree.map(lambda m, g: beta * m + g, momentum, grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_momentum)
+    return new_params, new_state, new_momentum, loss
+
+
+def eval_step(params, state, x, y, cfg: ModelConfig, n_bits=None):
+    """Inference-mode loss + correct-prediction count (quantised stem)."""
+    logits, _ = forward(params, state, x, cfg, train=False, n_bits=n_bits)
+    loss = softmax_xent(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.int32))
+    return loss, correct
+
+
+# ----------------------------------------------------------------------
+# deterministic flattening (manifest order shared with rust)
+# ----------------------------------------------------------------------
+
+
+def flatten_tree(tree, prefix=""):
+    """Deterministic (path, leaf) list; dict keys sorted, lists indexed."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.extend(flatten_tree(tree[k], f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(flatten_tree(v, f"{prefix}[{i}]"))
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def unflatten_like(tree, leaves):
+    """Inverse of flatten_tree given the template ``tree``."""
+    it = iter(leaves)
+
+    def rec(t):
+        if isinstance(t, dict):
+            return {k: rec(t[k]) for k in sorted(t.keys())}
+        if isinstance(t, (list, tuple)):
+            return [rec(v) for v in t]
+        return next(it)
+
+    return rec(tree)
+
+
+def param_count(params) -> int:
+    return sum(int(v.size) for _, v in flatten_tree(params))

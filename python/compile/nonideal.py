@@ -1,0 +1,161 @@
+"""Curve-fit behavioural pixel transfer surface (paper Section 4.1).
+
+The paper replaces the first-layer element-wise multiply with "a
+behavioural curve-fitting function" extracted from SPICE sweeps of the
+memory-embedded pixel.  Here the sweep comes from :mod:`compile.device`
+(the SPICE substitution) and the fit is a bivariate polynomial
+
+    f(w, a) = sum_{m=1..MW, n=0..NA} c[m][n] * w^m * a^n
+
+over normalised weight ``w`` (transistor width) and activation ``a``
+(photodiode current), both in [0, 1].  Terms with m = 0 are *excluded by
+construction* so that f(0, a) == 0 exactly: a deselected / absent weight
+transistor contributes no current to the column line, which is what makes
+the positive/negative weight masking of the CDS scheme exact.
+
+The polynomial form is what makes the kernel MXU-friendly (see
+DESIGN.md §Hardware-Adaptation): the in-pixel accumulation
+
+    sum_p f(w[p, c], x[p]) = sum_{m,n} c[m][n] * (X^n)^T (W^m)
+
+turns into MW*NA(+1) small matmuls over precomputed element-wise powers —
+a systolic-array-native formulation of the analog non-ideality.
+
+Coefficients are normalised so that f(1, 1) = 1; the physical full-scale
+voltage is carried separately (``v_full_scale``) for the ADC model.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, field
+
+from . import device as dev
+
+# Polynomial degrees: w^1..w^MW, a^0..a^NA.
+MW = 3
+NA = 3
+
+
+@dataclass
+class CurveFit:
+    """Fitted pixel transfer surface + provenance."""
+
+    coeffs: list[list[float]]  # [MW][NA+1], c[m-1][n] multiplies w^m a^n
+    v_full_scale: float        # V_out at (w=1, a=1) [V]
+    rmse: float                # normalised fit residual over the grid
+    device: dict = field(default_factory=dict)
+    grid_n_w: int = 0
+    grid_n_a: int = 0
+
+    def eval(self, w: float, a: float) -> float:
+        """Normalised transfer f(w, a); exact 0 at w = 0."""
+        acc = 0.0
+        wm = 1.0
+        for m in range(MW):
+            wm *= w
+            an = 1.0
+            for n in range(NA + 1):
+                acc += self.coeffs[m][n] * wm * an
+                an *= a
+        return acc
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "schema": "p2m-curve-fit-v1",
+                "mw": MW,
+                "na": NA,
+                "coeffs": self.coeffs,
+                "v_full_scale": self.v_full_scale,
+                "rmse": self.rmse,
+                "grid_n_w": self.grid_n_w,
+                "grid_n_a": self.grid_n_a,
+                "device": self.device,
+            },
+            indent=1,
+        )
+
+    @staticmethod
+    def from_json(text: str) -> "CurveFit":
+        d = json.loads(text)
+        assert d["schema"] == "p2m-curve-fit-v1", d["schema"]
+        assert d["mw"] == MW and d["na"] == NA
+        return CurveFit(
+            coeffs=d["coeffs"],
+            v_full_scale=d["v_full_scale"],
+            rmse=d["rmse"],
+            device=d.get("device", {}),
+            grid_n_w=d.get("grid_n_w", 0),
+            grid_n_a=d.get("grid_n_a", 0),
+        )
+
+
+def fit_curve(
+    p: dev.DeviceParams | None = None, n_w: int = 24, n_a: int = 24
+) -> CurveFit:
+    """Sample the device model and least-squares fit the polynomial."""
+    import numpy as np
+
+    p = p or dev.DeviceParams()
+    w_axis, a_axis, grid = dev.sample_grid(p, n_w=n_w, n_a=n_a)
+    v = np.asarray(grid)
+    v_fs = dev.pixel_output_voltage(p, 1.0, 1.0)
+    y = (v / v_fs).reshape(-1)
+
+    w_col = np.repeat(np.asarray(w_axis), n_a)
+    a_col = np.tile(np.asarray(a_axis), n_w)
+    cols = []
+    for m in range(1, MW + 1):
+        for n in range(NA + 1):
+            cols.append((w_col ** m) * (a_col ** n))
+    design = np.stack(cols, axis=1)
+    sol, *_ = np.linalg.lstsq(design, y, rcond=None)
+    resid = design @ sol - y
+    rmse = float(np.sqrt(np.mean(resid ** 2)))
+    coeffs = sol.reshape(MW, NA + 1).tolist()
+    return CurveFit(
+        coeffs=coeffs,
+        v_full_scale=float(v_fs),
+        rmse=rmse,
+        device=p.to_dict(),
+        grid_n_w=n_w,
+        grid_n_a=n_a,
+    )
+
+
+_CACHE: dict[str, CurveFit] = {}
+
+
+def default_fit() -> CurveFit:
+    """The curve fit for the default device, cached per process.
+
+    Loads ``artifacts/curve_fit.json`` when present (so the training path
+    and the exported artifact can never diverge); otherwise fits afresh.
+    """
+    if "default" not in _CACHE:
+        path = os.path.join(
+            os.path.dirname(__file__), "..", "..", "artifacts", "curve_fit.json"
+        )
+        if os.path.exists(path):
+            with open(path) as f:
+                _CACHE["default"] = CurveFit.from_json(f.read())
+        else:
+            _CACHE["default"] = fit_curve()
+    return _CACHE["default"]
+
+
+def coeffs_array(fit: CurveFit | None = None):
+    """Coefficients as a host-side numpy (MW, NA+1) array.
+
+    Deliberately *numpy*, not jnp: the transfer surface is silicon — a
+    compile-time constant — and numpy values stay concrete under jit
+    tracing, so they bake into the lowered HLO as literals instead of
+    becoming traced operands.
+    """
+    import numpy as np
+
+    fit = fit or default_fit()
+    return np.asarray(fit.coeffs, dtype=np.float32)

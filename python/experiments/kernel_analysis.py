@@ -1,0 +1,108 @@
+"""L1/L2 structural performance analysis (EXPERIMENTS.md §Perf).
+
+interpret=True Pallas gives CPU-numpy timings that say nothing about TPU
+behaviour, so L1 is analysed structurally: VMEM footprint per grid step,
+arithmetic intensity, and an MXU-utilisation estimate from the matmul
+shapes; L2 via XLA's cost analysis of the lowered modules.
+
+Run: ``cd python && python -m experiments.kernel_analysis``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import nonideal
+from compile.kernels import p2m_conv as pk
+
+BYTES = 4  # f32
+
+# TPU-v4-ish envelope for the utilisation estimate.
+VMEM_BYTES = 16 * 2 ** 20
+MXU_DIM = 128
+
+
+def l1_report(tile_n: int = pk.TILE_N, p: int = 75, c: int = 8):
+    mw, na1 = nonideal.MW, nonideal.NA + 1
+    x_tile = tile_n * p * BYTES
+    w_pow = 2 * mw * p * c * BYTES
+    out_tile = tile_n * c * BYTES
+    xn_scratch = tile_n * p * BYTES  # running power buffer
+    vmem = x_tile + w_pow + out_tile + xn_scratch
+
+    matmuls = 2 * mw * na1
+    flops = matmuls * 2 * tile_n * p * c  # 2*N*P*C per (TN,P)@(P,C)
+    # element-wise power updates: (na1-2) extra x multiplies
+    flops += (na1 - 2) * tile_n * p
+    hbm = x_tile + w_pow + out_tile  # per grid step (weights re-streamed)
+    intensity = flops / hbm
+
+    # MXU utilisation: the (TN, P) @ (P, C) matmuls run on a 128x128
+    # systolic array; utilisation ~ (P/128_pad)*(C/128_pad) per pass.
+    pad = lambda d: ((d + MXU_DIM - 1) // MXU_DIM) * MXU_DIM
+    util = (p / pad(p)) * (c / pad(c)) * (min(tile_n, MXU_DIM) / MXU_DIM)
+
+    print("== L1 (Pallas p2m_conv) structural analysis ==")
+    print(f"tile_n={tile_n} P={p} C={c} MW={mw} NA+1={na1}")
+    print(f"VMEM per grid step: {vmem / 1024:.1f} KiB ({100 * vmem / VMEM_BYTES:.2f}% of 16 MiB)")
+    print(f"matmuls per step: {matmuls} of ({tile_n},{p})@({p},{c})")
+    print(f"FLOPs per step: {flops / 1e6:.2f} M; HBM bytes: {hbm / 1024:.1f} KiB")
+    print(f"arithmetic intensity: {intensity:.1f} flop/byte")
+    print(
+        f"naive MXU utilisation: {100 * util:.1f}% "
+        f"(C={c} << 128 lanes; see notes below)"
+    )
+    print(
+        "notes: the channel dimension (8) is the hard limit — the circuit\n"
+        "serialises channels, the kernel batches them, but 8 lanes of a\n"
+        "128-wide MXU is 6.25%. Folding both CDS phases into one matmul\n"
+        "(concat pos|neg -> C=16) and fusing the NA+1 power matmuls into\n"
+        "one (P*4 contraction) lifts the ceiling to ~37% at identical\n"
+        "semantics; recorded as the L1 roofline discussion in\n"
+        "EXPERIMENTS.md §Perf (interpret=True cannot validate wall-clock)."
+    )
+    return vmem, intensity, util
+
+
+def l2_report(res: int = 80):
+    print(f"\n== L2 (lowered modules) XLA cost analysis, res {res} ==")
+    cfg = M.ModelConfig(resolution=res)
+    params, state = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def full(image):
+        logits, _ = M.forward(params, state, image, cfg, train=False)
+        return logits
+
+    img = jax.ShapeDtypeStruct((1, res, res, 3), jnp.float32)
+    c = jax.jit(full).lower(img).compile()
+    ca = c.cost_analysis()
+    flops = ca.get("flops", float("nan"))
+    bytes_ = ca.get("bytes accessed", float("nan"))
+    print(f"full fwd: {flops / 1e6:.1f} MFLOPs, {bytes_ / 1e6:.1f} MB accessed, "
+          f"intensity {flops / max(bytes_, 1):.1f}")
+
+    def step(p, s, m, x, y):
+        return M.train_step(p, s, m, x, y, 0.05, cfg)
+
+    mom = jax.tree.map(jnp.zeros_like, params)
+    xb = jax.ShapeDtypeStruct((16, res, res, 3), jnp.float32)
+    yb = jax.ShapeDtypeStruct((16,), jnp.int32)
+    c2 = (
+        jax.jit(step)
+        .lower(params, state, mom, xb, yb)
+        .compile()
+    )
+    ca2 = c2.cost_analysis()
+    flops2 = ca2.get("flops", float("nan"))
+    bytes2 = ca2.get("bytes accessed", float("nan"))
+    print(f"train step (b16): {flops2 / 1e9:.2f} GFLOPs, {bytes2 / 1e6:.1f} MB accessed")
+    return flops, flops2
+
+
+if __name__ == "__main__":
+    l1_report()
+    for tile in (64, 256, 1024):
+        vmem, inten, util = l1_report(tile_n=tile)
+    l2_report()

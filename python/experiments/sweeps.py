@@ -1,0 +1,187 @@
+"""Training sweeps behind Fig. 7a, Fig. 7b and the Section 5.2 ablation.
+
+Build-time experiments (like the paper's training runs): each sweep point
+trains the scaled P2M-MobileNetV2 on the synthetic VWW task and records
+val accuracy into ``results/*.json`` in the shape the `p2m` CLI renders.
+
+Scaled by necessity (one CPU core vs. the paper's 2080Ti): resolution
+``RES`` (default 40), ``STEPS`` SGD steps (default 220).  The object being
+reproduced is the *ordering and deltas* across configurations, not the
+paper's absolute VWW accuracies — see EXPERIMENTS.md.
+
+Env knobs: P2M_SWEEP_STEPS, P2M_SWEEP_RES, P2M_SWEEP_EVAL_BATCHES.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datagen
+from compile import model as M
+
+RES = int(os.environ.get("P2M_SWEEP_RES", "40"))
+STEPS = int(os.environ.get("P2M_SWEEP_STEPS", "900"))
+EVAL_BATCHES = int(os.environ.get("P2M_SWEEP_EVAL_BATCHES", "12"))
+BATCH = 16
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "results")
+
+
+def train_and_eval(cfg: M.ModelConfig, seed: int = 0, lr0: float = 0.1,
+                   eval_bits=None, steps: int = STEPS):
+    """Train on synthetic VWW; return dict of val accuracies.
+
+    ``eval_bits``: list of stem output bit-widths to evaluate at (P2M
+    stems only); None -> single eval at cfg.n_bits.
+    """
+    key = jax.random.PRNGKey(seed)
+    params, state = M.init_params(cfg, key)
+    mom = jax.tree.map(jnp.zeros_like, params)
+
+    step_fn = jax.jit(
+        lambda p, s, m, x, y, lr: M.train_step(p, s, m, x, y, lr, cfg)
+    )
+    t0 = time.time()
+    loss = None
+    for step in range(steps):
+        lr = lr0 * (0.2 if step >= steps * 55 // 100 else 1.0)
+        lr = lr * (0.2 if step >= steps * 85 // 100 else 1.0)
+        xs, ys = datagen.make_batch(cfg.resolution, BATCH, seed=seed, start=step * BATCH)
+        params, state, mom, loss = step_fn(
+            params, state, mom, jnp.asarray(xs), jnp.asarray(ys), lr
+        )
+    train_secs = time.time() - t0
+
+    accs = {}
+    bits_list = eval_bits if eval_bits is not None else [None]
+    for bits in bits_list:
+        ev = jax.jit(lambda p, s, x, y: M.eval_step(p, s, x, y, cfg, n_bits=bits))
+        correct = 0
+        total = 0
+        for i in range(EVAL_BATCHES):
+            xs, ys = datagen.make_batch(
+                cfg.resolution, BATCH, seed=seed, start=i * BATCH, split="val"
+            )
+            _, c = ev(params, state, jnp.asarray(xs), jnp.asarray(ys))
+            correct += int(c)
+            total += BATCH
+        accs[bits if bits is not None else cfg.n_bits] = correct / total
+    return accs, float(loss), train_secs
+
+
+def dump(name: str, header, rows, note: str):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({"header": header, "rows": rows, "note": note,
+                   "res": RES, "steps": STEPS}, f, indent=1)
+    print(f"wrote {path}")
+
+
+def fig7a():
+    """Output bit-precision sweep {4,6,8,16,32} on one trained model."""
+    print(f"== fig7a: quantisation sweep (res {RES}, {STEPS} steps) ==")
+    cfg = M.ModelConfig(resolution=RES)
+    accs, loss, secs = train_and_eval(cfg, eval_bits=[4, 6, 8, 16, 32])
+    rows = [[str(b), round(100 * accs[b], 2)] for b in sorted(accs)]
+    dump(
+        "fig7a",
+        ["output bits (N_b)", "val acc %"],
+        rows,
+        f"synthetic VWW at {RES}px, {STEPS} steps (final train loss {loss:.3f}, "
+        f"{secs:.0f}s); paper Fig. 7a: accuracy flat down to 8 bits, drops below",
+    )
+    for r in rows:
+        print("  ", r)
+
+
+def fig7b():
+    """Channels x kernel/stride sweep (the paper's compression frontier)."""
+    print(f"== fig7b: channel/kernel sweep (res {RES}, {STEPS} steps) ==")
+    rows = []
+    for k in (4, 5, 8):
+        if RES % k != 0:
+            continue
+        for c_o in (2, 4, 8, 16):
+            cfg = M.ModelConfig(resolution=RES, kernel_size=k, stem_channels=c_o)
+            accs, _, secs = train_and_eval(cfg)
+            acc = 100 * accs[cfg.n_bits]
+            # BR relative to Eq. 2 (bit depth 12, N_b 8).
+            br = (3 * k * k / c_o) * (4 / 3) * (12 / 8)
+            rows.append([f"{k}x{k}/{k}", str(c_o), round(acc, 2), round(br, 2)])
+            print(f"  k={k} c_o={c_o}: acc {acc:.1f}% BR {br:.1f}x ({secs:.0f}s)")
+    dump(
+        "fig7b",
+        ["kernel/stride", "channels", "val acc %", "BR (x)"],
+        rows,
+        f"synthetic VWW at {RES}px; paper Fig. 7b: accuracy falls with larger "
+        "stride and fewer channels — the bandwidth/accuracy frontier",
+    )
+
+
+def ablation():
+    """Section 5.2 ablation: baseline -> +non-overlap -> +8ch -> +custom fn."""
+    print(f"== ablation (res {RES}, {STEPS} steps) ==")
+    rows = []
+
+    # 1. baseline: standard 3x3/2 conv stem, 32 channels.
+    cfg_base = M.baseline_config(RES)
+    accs, _, _ = train_and_eval(cfg_base)
+    acc_base = 100 * accs[cfg_base.n_bits]
+    rows.append(["baseline (3x3/2 conv, 32ch)", round(acc_base, 2), 0.0])
+    print(f"  baseline: {acc_base:.1f}%")
+
+    # 2. + non-overlapping 5x5/5 stem (still a standard linear conv, 32ch):
+    #    emulated by a P2M-shaped stem with an ideal (linear) transfer —
+    #    closest available knob is stem_channels=32 with the custom fn; to
+    #    isolate the stride effect we use the baseline trainer with k=5
+    #    stride-5 conv.
+    cfg_stride = replace(
+        cfg_base, stem="p2m_linear", kernel_size=5, stem_channels=32
+    )
+    accs, _, _ = train_and_eval(cfg_stride)
+    acc_stride = 100 * accs[cfg_stride.n_bits]
+    rows.append(["+ non-overlapping 5x5/5", round(acc_stride, 2),
+                 round(acc_base - acc_stride, 2)])
+    print(f"  +stride: {acc_stride:.1f}%")
+
+    # 3. + reduced channels (8 from 32).
+    cfg_ch = replace(cfg_stride, stem_channels=8)
+    accs, _, _ = train_and_eval(cfg_ch)
+    acc_ch = 100 * accs[cfg_ch.n_bits]
+    rows.append(["+ 8 output channels", round(acc_ch, 2), round(acc_base - acc_ch, 2)])
+    print(f"  +channels: {acc_ch:.1f}%")
+
+    # 4. + custom P2M function (the curve-fit analog non-ideality).
+    cfg_p2m = M.ModelConfig(resolution=RES)
+    accs, _, _ = train_and_eval(cfg_p2m)
+    acc_p2m = 100 * accs[cfg_p2m.n_bits]
+    rows.append(["+ custom P2M function", round(acc_p2m, 2),
+                 round(acc_base - acc_p2m, 2)])
+    print(f"  +custom fn: {acc_p2m:.1f}%")
+
+    dump(
+        "ablation",
+        ["configuration", "val acc %", "drop vs baseline"],
+        rows,
+        f"synthetic VWW at {RES}px; paper Section 5.2 deltas at 560px: "
+        "stride +0.58, channels +0.33 (cum 0.91), custom fn -> 1.47 total",
+    )
+
+
+def main():
+    t0 = time.time()
+    fig7a()
+    fig7b()
+    ablation()
+    print(f"all sweeps done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

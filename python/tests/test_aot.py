@@ -1,0 +1,145 @@
+"""AOT artifact tests — contract with the rust loader.
+
+Skipped when ``artifacts/`` has not been built (run ``make artifacts``).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (make artifacts)")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return _manifest()
+
+
+class TestManifest:
+    def test_schema(self, manifest):
+        assert manifest["schema"] == "p2m-manifest-v1"
+        assert manifest["models"], "no models exported"
+
+    def test_model_entries_complete(self, manifest):
+        for res, entry in manifest["models"].items():
+            assert entry["resolution"] == int(res)
+            assert entry["kernel_size"] == 5
+            assert entry["stem_channels"] == 8
+            assert entry["n_bits"] == 8
+            assert entry["stem_out"] == int(res) // 5
+            assert entry["patch_len"] == 75
+            for name in ("params", "state", "artifacts", "params_bin", "state_bin"):
+                assert name in entry
+
+    def test_artifact_files_exist(self, manifest):
+        for entry in manifest["models"].values():
+            for art in entry["artifacts"].values():
+                path = os.path.join(ART, art["file"])
+                assert os.path.exists(path), art["file"]
+
+    def test_expected_artifact_set(self, manifest):
+        for res, entry in manifest["models"].items():
+            names = set(entry["artifacts"])
+            for b in entry["serve_batches"]:
+                assert f"frontend_{res}_b{b}" in names
+                assert f"backbone_{res}_b{b}" in names
+                assert f"full_{res}_b{b}" in names
+            assert f"train_step_{res}" in names
+            assert f"eval_step_{res}" in names
+
+
+class TestHloText:
+    def test_hlo_is_text_with_entry(self, manifest):
+        entry = next(iter(manifest["models"].values()))
+        art = next(iter(entry["artifacts"].values()))
+        with open(os.path.join(ART, art["file"])) as f:
+            text = f.read()
+        assert "ENTRY" in text  # HLO text, not a serialized proto
+        assert "HloModule" in text
+
+    def test_kept_args_recorded(self, manifest):
+        """Every artifact records its (possibly DCE-pruned) arg names, in
+        positional order, drawn from the known namespaces."""
+        for res, entry in manifest["models"].items():
+            known = (
+                {"image", "acts", "batch_x", "batch_y", "lr"}
+                | {"param:" + t["name"] for t in entry["params"]}
+                | {"state:" + t["name"] for t in entry["state"]}
+                | {"momentum:" + t["name"] for t in entry["params"]}
+            )
+            for name, art in entry["artifacts"].items():
+                assert art["args"], name
+                for a in art["args"]:
+                    assert a in known, (name, a)
+
+    def test_frontend_args_are_stem_only(self, manifest):
+        """DCE must strip everything but the image + stem leaves from the
+        frontend graph — that is the bandwidth story of the paper."""
+        for res, entry in manifest["models"].items():
+            b = entry["serve_batches"][0]
+            args = entry["artifacts"][f"frontend_{res}_b{b}"]["args"]
+            assert args[0] == "image"
+            for a in args[1:]:
+                assert a.split(":")[1].startswith("stem/"), a
+
+    def test_train_step_keeps_all_params(self, manifest):
+        """The train step reads and writes every parameter leaf."""
+        for res, entry in manifest["models"].items():
+            args = set(entry["artifacts"][f"train_step_{res}"]["args"])
+            for t in entry["params"]:
+                assert "param:" + t["name"] in args, t["name"]
+            assert {"batch_x", "batch_y", "lr"} <= args
+
+
+class TestBinFiles:
+    def test_params_bin_size_matches_manifest(self, manifest):
+        for entry in manifest["models"].values():
+            for key, bin_key in (("params", "params_bin"), ("state", "state_bin")):
+                n_floats = sum(
+                    int(np.prod(t["shape"])) if t["shape"] else 1
+                    for t in entry[key]
+                )
+                size = os.path.getsize(os.path.join(ART, entry[bin_key]))
+                assert size == 4 * n_floats, (bin_key, size, n_floats)
+
+    def test_params_bin_finite(self, manifest):
+        entry = next(iter(manifest["models"].values()))
+        data = np.fromfile(os.path.join(ART, entry["params_bin"]), dtype="<f4")
+        assert np.all(np.isfinite(data))
+
+    def test_manifest_order_matches_flatten(self, manifest):
+        """Manifest leaf order must equal model.flatten_tree order."""
+        import jax
+
+        from compile import model as M
+
+        for res, entry in manifest["models"].items():
+            cfg = M.ModelConfig(resolution=int(res))
+            params, state = M.init_params(cfg, jax.random.PRNGKey(int(res)))
+            names = [n for n, _ in M.flatten_tree(params)]
+            assert names == [t["name"] for t in entry["params"]]
+            snames = [n for n, _ in M.flatten_tree(state)]
+            assert snames == [t["name"] for t in entry["state"]]
+
+
+class TestCurveFitArtifact:
+    def test_curve_fit_json(self):
+        path = os.path.join(ART, "curve_fit.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            d = json.load(f)
+        assert d["schema"] == "p2m-curve-fit-v1"
+        assert len(d["coeffs"]) == d["mw"]
+        assert d["rmse"] < 0.03
+        assert d["v_full_scale"] > 0

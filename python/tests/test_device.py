@@ -1,0 +1,132 @@
+"""Device-model tests: physics sanity + golden values shared with rust.
+
+The golden values below are duplicated verbatim in
+``rust/src/analog/device.rs`` unit tests — if either implementation
+drifts, one of the two suites fails.
+"""
+
+import math
+
+import pytest
+
+from compile.device import (
+    DeviceParams,
+    drain_current,
+    pixel_output_voltage,
+    sample_grid,
+    _ekv_f,
+)
+
+P = DeviceParams()
+
+# (w_norm, act_norm, expected volts) — mirrored in rust/src/analog/device.rs.
+GOLDEN = [
+    (0.1, 0.1, 0.005364857384179958),
+    (0.25, 0.5, 0.023281322318627215),
+    (0.5, 0.25, 0.01891565064634526),
+    (0.5, 1.0, 0.04739570775646128),
+    (1.0, 0.5, 0.05027962437499446),
+    (1.0, 1.0, 0.07599890922177921),
+    (0.75, 0.75, 0.058246471631177285),
+]
+
+
+class TestEkv:
+    def test_zero_at_minus_inf(self):
+        assert _ekv_f(-200.0) == pytest.approx(0.0, abs=1e-30)
+
+    def test_monotone(self):
+        xs = [-10.0, -1.0, 0.0, 1.0, 5.0, 20.0, 100.0]
+        vals = [_ekv_f(x) for x in xs]
+        assert all(b > a for a, b in zip(vals, vals[1:]))
+
+    def test_strong_inversion_quadratic(self):
+        # F(x) -> (x/2)^2 for large x.
+        assert _ekv_f(80.0) == pytest.approx(1600.0, rel=1e-6)
+
+    def test_overflow_guard(self):
+        assert math.isfinite(_ekv_f(1e4))
+
+
+class TestDrainCurrent:
+    def test_zero_width(self):
+        assert drain_current(P, P.i0_w, 0.0, 0.5, 0.5) == 0.0
+
+    def test_zero_vds(self):
+        assert drain_current(P, P.i0_w, 0.3, 0.5, 0.0) == 0.0
+
+    def test_monotone_in_vgs(self):
+        vals = [drain_current(P, P.i0_w, 0.3, v, 0.3) for v in (0.2, 0.35, 0.5, 0.7)]
+        assert all(b > a for a, b in zip(vals, vals[1:]))
+
+    def test_monotone_in_vds(self):
+        vals = [drain_current(P, P.i0_w, 0.3, 0.5, v) for v in (0.05, 0.1, 0.3, 0.6)]
+        assert all(b > a for a, b in zip(vals, vals[1:]))
+
+    def test_linear_in_width(self):
+        a = drain_current(P, P.i0_w, 0.2, 0.5, 0.3)
+        b = drain_current(P, P.i0_w, 0.4, 0.5, 0.3)
+        assert b == pytest.approx(2 * a, rel=1e-12)
+
+    def test_golden(self):
+        assert drain_current(P, P.i0_sf, 1.0, 0.5, 0.4) == pytest.approx(
+            3.802059830916563e-06, rel=1e-9
+        )
+        assert drain_current(P, P.i0_w, 0.3, 0.45, 0.05) == pytest.approx(
+            5.8820877660453795e-08, rel=1e-9
+        )
+
+
+class TestPixelOutput:
+    def test_zero_weight_is_hard_zero(self):
+        assert pixel_output_voltage(P, 0.0, 1.0) == 0.0
+
+    @pytest.mark.parametrize("w,a,v", GOLDEN)
+    def test_golden(self, w, a, v):
+        assert pixel_output_voltage(P, w, a) == pytest.approx(v, rel=1e-7)
+
+    def test_monotone_in_weight(self):
+        for a in (0.25, 0.5, 1.0):
+            vals = [pixel_output_voltage(P, w, a) for w in (0.1, 0.3, 0.6, 1.0)]
+            assert all(b > a_ for a_, b in zip(vals, vals[1:])), (a, vals)
+
+    def test_monotone_in_activation(self):
+        for w in (0.25, 0.5, 1.0):
+            vals = [pixel_output_voltage(P, w, a) for a in (0.1, 0.3, 0.6, 1.0)]
+            assert all(b > a_ for a_, b in zip(vals, vals[1:])), (w, vals)
+
+    def test_bounded_by_supply(self):
+        for w in (0.1, 0.5, 1.0):
+            for a in (0.0, 0.5, 1.0):
+                v = pixel_output_voltage(P, w, a)
+                assert 0.0 <= v < P.vdd
+
+    def test_compressive_in_activation(self):
+        """Fig 3a shape: the surface saturates — the increment from
+        a=0.75->1.0 is smaller than from a=0.25->0.5 at full weight."""
+        lo = pixel_output_voltage(P, 1.0, 0.5) - pixel_output_voltage(P, 1.0, 0.25)
+        hi = pixel_output_voltage(P, 1.0, 1.0) - pixel_output_voltage(P, 1.0, 0.75)
+        assert hi < lo
+
+    def test_approximately_multiplicative(self):
+        """Fig 3b: correlation of V_out with the ideal product W*A > 0.95."""
+        import numpy as np
+
+        w_axis, a_axis, grid = sample_grid(P, n_w=9, n_a=9)
+        v = np.asarray(grid)[1:]  # skip w=0 row (both are exactly 0 there)
+        prod = np.outer(w_axis, a_axis)[1:]
+        c = np.corrcoef(v.ravel(), prod.ravel())[0, 1]
+        assert c > 0.95, c
+
+
+class TestSampleGrid:
+    def test_shape_and_axes(self):
+        w_axis, a_axis, grid = sample_grid(P, n_w=5, n_a=7)
+        assert len(w_axis) == 5 and len(a_axis) == 7
+        assert len(grid) == 5 and all(len(r) == 7 for r in grid)
+        assert w_axis[0] == 0.0 and w_axis[-1] == 1.0
+        assert a_axis[0] == 0.0 and a_axis[-1] == 1.0
+
+    def test_first_row_zero(self):
+        _, _, grid = sample_grid(P, n_w=4, n_a=4)
+        assert all(v == 0.0 for v in grid[0])

@@ -1,0 +1,174 @@
+"""Pallas kernel vs. pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and value distributions; every case asserts
+``assert_allclose`` between :func:`compile.kernels.p2m_conv.p2m_conv`
+(interpret=True) and :func:`compile.kernels.ref.p2m_conv_ref`.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import nonideal
+from compile.kernels import p2m_conv as pk
+from compile.kernels import ref
+
+COEFFS = nonideal.coeffs_array()
+
+
+def assert_quantised_close(kernel_out, ref_out, lsb, frac_exact=0.98):
+    """Kernel vs. ref for *quantised* outputs.
+
+    The kernel accumulates via matmuls, the oracle via broadcast-sum;
+    float reassociation can land a pre-quantisation value on the other
+    side of a code boundary, flipping one LSB.  The contract is:
+    every entry within 1 LSB, and almost all entries exactly equal.
+    """
+    k = np.asarray(kernel_out)
+    r = np.asarray(ref_out)
+    diff = np.abs(k - r)
+    assert diff.max() <= lsb * 1.001, diff.max()
+    assert (diff == 0).mean() >= frac_exact, (diff != 0).mean()
+
+
+def _mk(n, p, c, seed, scale_range=(0.5, 2.0), shift_range=(-5.0, 5.0)):
+    rng = np.random.default_rng(seed)
+    patches = rng.random((n, p)).astype(np.float32)
+    theta = rng.uniform(-1, 1, (p, c)).astype(np.float32)
+    w_pos = np.clip(theta, 0, 1)
+    w_neg = np.clip(-theta, 0, 1)
+    scale = rng.uniform(*scale_range, c).astype(np.float32)
+    shift = rng.uniform(*shift_range, c).astype(np.float32)
+    return (
+        jnp.asarray(patches),
+        jnp.asarray(w_pos),
+        jnp.asarray(w_neg),
+        jnp.asarray(scale),
+        jnp.asarray(shift),
+    )
+
+
+class TestKernelVsRef:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.integers(1, 200),
+        p=st.sampled_from([12, 27, 75, 147]),  # k in {2,3,5,7} x 3 channels
+        c=st.sampled_from([1, 2, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, n, p, c, seed):
+        args = _mk(n, p, c, seed)
+        r = ref.p2m_conv_ref(*args, coeffs=COEFFS)
+        k = pk.p2m_conv(*args, coeffs=COEFFS, tile_n=64)
+        assert_quantised_close(k, r, ref.default_lsb(p, 8))
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n_bits=st.sampled_from([4, 6, 8, 16]),
+        tile=st.sampled_from([32, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_bits_and_tiles(self, n_bits, tile, seed):
+        args = _mk(100, 75, 8, seed)
+        r = ref.p2m_conv_ref(*args, coeffs=COEFFS, n_bits=n_bits)
+        k = pk.p2m_conv(*args, coeffs=COEFFS, n_bits=n_bits, tile_n=tile)
+        assert_quantised_close(k, r, ref.default_lsb(75, n_bits))
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_fused_matches_unfused(self, seed):
+        """§Perf: the single-matmul formulation is a pure refactor of the
+        24-small-matmul form."""
+        args = _mk(96, 75, 8, seed)
+        f = pk.p2m_conv(*args, coeffs=COEFFS, tile_n=32, fused=True)
+        u = pk.p2m_conv(*args, coeffs=COEFFS, tile_n=32, fused=False)
+        assert_quantised_close(f, u, ref.default_lsb(75, 8))
+
+    def test_near_exact_when_tile_divides(self):
+        # No padding path: at most quantisation-boundary flips.
+        args = _mk(128, 75, 8, 7)
+        r = ref.p2m_conv_ref(*args, coeffs=COEFFS)
+        k = pk.p2m_conv(*args, coeffs=COEFFS, tile_n=64)
+        assert_quantised_close(k, r, ref.default_lsb(75, 8))
+
+
+class TestKernelSemantics:
+    def test_output_is_quantised(self):
+        args = _mk(64, 75, 8, 3)
+        out = np.asarray(pk.p2m_conv(*args, coeffs=COEFFS, n_bits=8, tile_n=64))
+        lsb = ref.default_lsb(75, 8)
+        codes = out / lsb
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+        assert codes.min() >= 0 and codes.max() <= 255
+
+    def test_zero_weights_give_shift_only(self):
+        patches = jnp.asarray(np.random.default_rng(0).random((32, 75)), jnp.float32)
+        z = jnp.zeros((75, 8), jnp.float32)
+        scale = jnp.ones((8,), jnp.float32)
+        shift = jnp.full((8,), 3.0, jnp.float32)
+        out = np.asarray(pk.p2m_conv(patches, z, z, scale, shift, coeffs=COEFFS, tile_n=32))
+        lsb = ref.default_lsb(75, 8)
+        expected = np.floor(3.0 / lsb + 0.5) * lsb
+        np.testing.assert_allclose(out, expected, atol=1e-6)
+
+    def test_relu_clamps_negative(self):
+        """Large negative counter preset drives everything to code 0."""
+        args = list(_mk(16, 75, 4, 5))
+        args[4] = jnp.full((4,), -1e4, jnp.float32)
+        out = np.asarray(pk.p2m_conv(*args, coeffs=COEFFS, tile_n=16))
+        assert np.all(out == 0.0)
+
+    def test_saturates_at_full_scale(self):
+        """Huge preset saturates the counter at 2^N - 1."""
+        args = list(_mk(16, 75, 4, 5))
+        args[4] = jnp.full((4,), 1e4, jnp.float32)
+        out = np.asarray(pk.p2m_conv(*args, coeffs=COEFFS, n_bits=8, tile_n=16))
+        lsb = ref.default_lsb(75, 8)
+        np.testing.assert_allclose(out, 255 * lsb, rtol=1e-6)
+
+    def test_cds_antisymmetry(self):
+        """Swapping the positive and negative weight sets negates the
+        pre-shift CDS value: out(wp,wn,shift=0) and out(wn,wp,shift=0)
+        cannot both be positive for the same (i,c)."""
+        patches, wp, wn, scale, _ = _mk(48, 75, 8, 11)
+        shift = jnp.zeros((8,), jnp.float32)
+        a = np.asarray(pk.p2m_conv(patches, wp, wn, scale, shift, coeffs=COEFFS, tile_n=48))
+        b = np.asarray(pk.p2m_conv(patches, wn, wp, scale, shift, coeffs=COEFFS, tile_n=48))
+        lsb = ref.default_lsb(75, 8)
+        assert not np.any((a > lsb) & (b > lsb))
+
+
+class TestLayerWrapper:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        hw=st.sampled_from([10, 20, 40]),
+        k=st.sampled_from([2, 5]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_layer_matches_ref(self, b, hw, k, seed):
+        if hw % k != 0:
+            hw = (hw // k) * k
+        rng = np.random.default_rng(seed)
+        img = jnp.asarray(rng.random((b, hw, hw, 3)), jnp.float32)
+        p = k * k * 3
+        theta = rng.uniform(-1, 1, (p, 8)).astype(np.float32)
+        wp = jnp.asarray(np.clip(theta, 0, 1))
+        wn = jnp.asarray(np.clip(-theta, 0, 1))
+        sc = jnp.ones((8,), jnp.float32)
+        sh = jnp.zeros((8,), jnp.float32)
+        r = ref.p2m_layer_ref(img, wp, wn, sc, sh, k=k, coeffs=COEFFS)
+        out = pk.p2m_layer(img, wp, wn, sc, sh, k=k, coeffs=COEFFS, tile_n=64)
+        assert out.shape == (b, hw // k, hw // k, 8)
+        assert_quantised_close(out, r, ref.default_lsb(k * k * 3, 8))
+
+    def test_patch_order_matches_manifest(self):
+        """Patch element order is (ky, kx, c): documented contract with
+        the rust frontend."""
+        img = np.zeros((1, 4, 4, 3), np.float32)
+        img[0, 1, 0, 2] = 1.0  # ky=1, kx=0, c=2 within the k=2 patch (0,0)
+        patches = np.asarray(ref.extract_patches(jnp.asarray(img), 2))
+        # index = ky*k*3 + kx*3 + c = 1*6 + 0 + 2 = 8
+        assert patches[0, 8] == 1.0
+        assert patches[0].sum() == 1.0

@@ -1,0 +1,175 @@
+"""L2 model tests: shapes, BN fusion, flattening contract, learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = M.ModelConfig(resolution=40)
+    params, state = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, state
+
+
+class TestShapes:
+    def test_p2m_forward_shapes(self, small):
+        cfg, params, state = small
+        x = jnp.zeros((2, 40, 40, 3), jnp.float32)
+        logits, new_state = M.forward(params, state, x, cfg, train=True)
+        assert logits.shape == (2, 2)
+
+    def test_infer_forward_shapes(self, small):
+        cfg, params, state = small
+        x = jnp.zeros((2, 40, 40, 3), jnp.float32)
+        logits, _ = M.forward(params, state, x, cfg, train=False)
+        assert logits.shape == (2, 2)
+
+    def test_stem_out_resolution(self, small):
+        cfg, params, state = small
+        x = jnp.ones((1, 40, 40, 3), jnp.float32)
+        acts, _ = M.p2m_stem_train(params["stem"], state["stem"], x, cfg, False)
+        assert acts.shape == (1, 8, 8, cfg.stem_channels)
+
+    def test_baseline_forward(self):
+        cfg = M.baseline_config(40)
+        params, state = M.init_params(cfg, jax.random.PRNGKey(1))
+        x = jnp.zeros((2, 40, 40, 3), jnp.float32)
+        logits, _ = M.forward(params, state, x, cfg, train=True)
+        assert logits.shape == (2, 2)
+
+    @settings(max_examples=4, deadline=None)
+    @given(res=st.sampled_from([20, 40, 60]))
+    def test_resolutions(self, res):
+        cfg = M.ModelConfig(resolution=res)
+        params, state = M.init_params(cfg, jax.random.PRNGKey(res))
+        x = jnp.zeros((1, res, res, 3), jnp.float32)
+        logits, _ = M.forward(params, state, x, cfg, train=True)
+        assert logits.shape == (1, 2)
+
+
+class TestBatchNorm:
+    def test_fuse_matches_inference_apply(self):
+        rng = np.random.default_rng(0)
+        p = {
+            "gamma": jnp.asarray(rng.uniform(0.5, 2, 8).astype(np.float32)),
+            "beta": jnp.asarray(rng.uniform(-1, 1, 8).astype(np.float32)),
+            "mean": jnp.asarray(rng.uniform(-1, 1, 8).astype(np.float32)),
+            "var": jnp.asarray(rng.uniform(0.1, 2, 8).astype(np.float32)),
+        }
+        x = jnp.asarray(rng.normal(0, 1, (16, 8)).astype(np.float32))
+        y_apply, _ = M.bn_apply(p, x, train=False)
+        a, b = M.bn_fuse(p)
+        np.testing.assert_allclose(
+            np.asarray(y_apply), np.asarray(a * x + b), rtol=2e-5, atol=1e-6
+        )
+
+    def test_train_updates_running_stats(self, small):
+        cfg, params, state = small
+        x = jnp.asarray(
+            np.random.default_rng(0).random((4, 40, 40, 3)).astype(np.float32)
+        )
+        _, new_state = M.forward(params, state, x, cfg, train=True)
+        old = state["stem"]["bn"]["mean"]
+        new = new_state["stem"]["bn"]["mean"]
+        assert not np.allclose(np.asarray(old), np.asarray(new))
+
+    def test_infer_keeps_running_stats(self, small):
+        cfg, params, state = small
+        x = jnp.asarray(
+            np.random.default_rng(0).random((4, 40, 40, 3)).astype(np.float32)
+        )
+        _, new_state = M.forward(params, state, x, cfg, train=False)
+        np.testing.assert_array_equal(
+            np.asarray(state["head"]["bn"]["mean"]),
+            np.asarray(new_state["head"]["bn"]["mean"]),
+        )
+
+
+class TestStemWeights:
+    def test_split_partition(self):
+        theta = jnp.asarray([[0.5, -0.3], [0.0, 1.5]], jnp.float32)
+        wp, wn = M.p2m_stem_weights(theta)
+        np.testing.assert_allclose(np.asarray(wp), [[0.5, 0.0], [0.0, 1.0]])
+        np.testing.assert_allclose(np.asarray(wn), [[0.0, 0.3], [0.0, 0.0]])
+
+    def test_at_most_one_phase_nonzero(self):
+        theta = jnp.asarray(
+            np.random.default_rng(0).uniform(-2, 2, (75, 8)).astype(np.float32)
+        )
+        wp, wn = M.p2m_stem_weights(theta)
+        assert not np.any((np.asarray(wp) > 0) & (np.asarray(wn) > 0))
+
+
+class TestFlattening:
+    def test_roundtrip(self, small):
+        _, params, _ = small
+        flat = [l for _, l in M.flatten_tree(params)]
+        back = M.unflatten_like(params, flat)
+        for (n1, l1), (n2, l2) in zip(M.flatten_tree(params), M.flatten_tree(back)):
+            assert n1 == n2
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_names_unique_and_sorted_stable(self, small):
+        _, params, _ = small
+        names = [n for n, _ in M.flatten_tree(params)]
+        assert len(names) == len(set(names))
+        # Deterministic: same params flatten to same order.
+        assert names == [n for n, _ in M.flatten_tree(params)]
+
+    def test_param_count_positive(self, small):
+        _, params, _ = small
+        assert M.param_count(params) > 10_000
+
+
+class TestLearning:
+    def test_loss_decreases_on_fixed_batch(self):
+        """A few SGD steps on one batch must reduce the training loss —
+        gradients flow through the curve-fit analog stem."""
+        cfg = M.ModelConfig(resolution=40)
+        params, state = M.init_params(cfg, jax.random.PRNGKey(2))
+        xs, ys = datagen.make_batch(40, 8, seed=0, start=0)
+        x, y = jnp.asarray(xs), jnp.asarray(ys)
+        mom = jax.tree.map(jnp.zeros_like, params)
+        step = jax.jit(
+            lambda p, s, m, x, y: M.train_step(p, s, m, x, y, 0.05, cfg)
+        )
+        first = None
+        loss = None
+        for i in range(8):
+            params, state, mom, loss = step(params, state, mom, x, y)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first, (first, float(loss))
+
+    def test_grad_reaches_theta(self):
+        cfg = M.ModelConfig(resolution=40)
+        params, state = M.init_params(cfg, jax.random.PRNGKey(3))
+        xs, ys = datagen.make_batch(40, 4, seed=1, start=0)
+        grads = jax.grad(
+            lambda p: M.loss_fn(p, state, jnp.asarray(xs), jnp.asarray(ys), cfg)[0]
+        )(params)
+        g = np.asarray(grads["stem"]["theta"])
+        assert np.any(g != 0.0)
+
+
+class TestEval:
+    def test_eval_counts_bounded(self, small):
+        cfg, params, state = small
+        xs, ys = datagen.make_batch(40, 8, seed=2, start=0)
+        loss, correct = M.eval_step(params, state, jnp.asarray(xs), jnp.asarray(ys), cfg)
+        assert 0 <= int(correct) <= 8
+        assert float(loss) > 0.0
+
+    def test_eval_nbits_changes_quantisation(self, small):
+        cfg, params, state = small
+        xs, ys = datagen.make_batch(40, 4, seed=3, start=0)
+        l4, _ = M.eval_step(params, state, jnp.asarray(xs), jnp.asarray(ys), cfg, n_bits=4)
+        l16, _ = M.eval_step(params, state, jnp.asarray(xs), jnp.asarray(ys), cfg, n_bits=16)
+        # Different bit widths quantise the stem differently (losses differ).
+        assert float(l4) != float(l16)

@@ -1,0 +1,85 @@
+"""Curve-fit tests: fidelity to the device model + structural guarantees."""
+
+import numpy as np
+import pytest
+
+from compile import nonideal
+from compile.device import DeviceParams, pixel_output_voltage
+from compile.nonideal import CurveFit, fit_curve
+
+P = DeviceParams()
+
+
+@pytest.fixture(scope="module")
+def fit() -> CurveFit:
+    return nonideal.default_fit()
+
+
+class TestFitQuality:
+    def test_rmse_bound(self, fit):
+        # Fit residual under 3% of single-pixel full scale.
+        assert fit.rmse < 0.03
+
+    def test_off_grid_accuracy(self, fit):
+        """Fit evaluated at points NOT on the fitting grid stays within
+        5% of the device model."""
+        for w, a in [(0.13, 0.77), (0.61, 0.29), (0.89, 0.93), (0.37, 0.51)]:
+            truth = pixel_output_voltage(P, w, a) / fit.v_full_scale
+            assert fit.eval(w, a) == pytest.approx(truth, abs=0.05)
+
+    def test_normalised_full_scale(self, fit):
+        assert fit.eval(1.0, 1.0) == pytest.approx(1.0, abs=0.05)
+
+
+class TestFitStructure:
+    def test_zero_weight_exact_zero(self, fit):
+        """No m=0 terms by construction: a deselected transistor
+        contributes exactly nothing (CDS masking exactness)."""
+        for a in (0.0, 0.3, 0.7, 1.0):
+            assert fit.eval(0.0, a) == 0.0
+
+    def test_monotone_in_weight_on_grid(self, fit):
+        for a in (0.25, 0.5, 0.75, 1.0):
+            vals = [fit.eval(w, a) for w in np.linspace(0.1, 1.0, 8)]
+            assert all(b > a_ for a_, b in zip(vals, vals[1:])), (a, vals)
+
+    def test_monotone_in_activation_at_high_weight(self, fit):
+        vals = [fit.eval(1.0, a) for a in np.linspace(0.1, 1.0, 8)]
+        assert all(b > a_ for a_, b in zip(vals, vals[1:]))
+
+    def test_coeff_shape(self, fit):
+        assert len(fit.coeffs) == nonideal.MW
+        assert all(len(r) == nonideal.NA + 1 for r in fit.coeffs)
+
+
+class TestSerialization:
+    def test_json_roundtrip(self, fit):
+        back = CurveFit.from_json(fit.to_json())
+        assert back.coeffs == fit.coeffs
+        assert back.v_full_scale == fit.v_full_scale
+        assert back.rmse == fit.rmse
+        assert back.device == fit.device
+
+    def test_schema_rejected(self, fit):
+        bad = fit.to_json().replace("p2m-curve-fit-v1", "other")
+        with pytest.raises(AssertionError):
+            CurveFit.from_json(bad)
+
+
+class TestCoeffsArray:
+    def test_numpy_not_jnp(self):
+        # Must stay concrete under jit tracing (bakes as HLO literals).
+        arr = nonideal.coeffs_array()
+        assert isinstance(arr, np.ndarray)
+        assert arr.shape == (nonideal.MW, nonideal.NA + 1)
+
+    def test_matches_fit(self, fit):
+        arr = nonideal.coeffs_array(fit)
+        assert np.allclose(arr, np.asarray(fit.coeffs, np.float32))
+
+
+class TestSmallGridFit:
+    def test_coarse_grid_still_fits(self):
+        f = fit_curve(n_w=8, n_a=8)
+        assert f.rmse < 0.05
+        assert f.eval(0.0, 0.5) == 0.0

@@ -1,0 +1,46 @@
+//! Bench: SS-ADC / CDS conversion paths (Fig. 4 workload).
+//!
+//! The paper's ADC story: a CDS double conversion costs 2 x 2^N counter
+//! cycles of *circuit* time; here we measure the *simulation* cost of the
+//! functional vs. event-accurate paths — the event path is the frontend's
+//! fidelity knob.
+
+use p2m::adc::{SsAdc, WaveformTrace};
+use p2m::config::AdcConfig;
+use p2m::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new("adc");
+    let adc = SsAdc::new(AdcConfig::default());
+    let lsb = adc.cfg.lsb();
+
+    b.run("functional_quantize", || adc.quantize(bb(17.3 * lsb)));
+    b.run("functional_shifted_relu", || adc.shifted_relu(bb(12.0 * lsb), 1.1, 2.0 * lsb));
+    b.run("event_convert (256-step ramp)", || adc.convert_event(bb(17.3 * lsb), None));
+    b.run("event_cds (512 cycles)", || {
+        adc.convert_cds(bb(23.0 * lsb), bb(9.0 * lsb), 1.0, 4.0 * lsb, None)
+    });
+    b.run("event_cds_traced", || {
+        let mut tr = WaveformTrace::new(4096);
+        adc.convert_cds(bb(23.0 * lsb), bb(9.0 * lsb), 1.0, 4.0 * lsb, Some(&mut tr))
+    });
+
+    // One frame's worth of conversions at 80x80 (16*16*8 CDS ops).
+    b.run("frame_80_conversions_functional", || {
+        let mut acc = 0u32;
+        for i in 0..16 * 16 * 8 {
+            acc = acc.wrapping_add(adc.shifted_relu((i % 70) as f64 * lsb, 1.0, 0.0));
+        }
+        acc
+    });
+    b.run("frame_80_conversions_event", || {
+        let mut acc = 0u64;
+        for i in 0..16 * 16 * 8 {
+            acc = acc.wrapping_add(
+                adc.convert_cds((i % 70) as f64 * lsb, ((i / 3) % 50) as f64 * lsb, 1.0, 0.0, None)
+                    .code as u64,
+            );
+        }
+        acc
+    });
+}

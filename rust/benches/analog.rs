@@ -1,0 +1,58 @@
+//! Bench: analog substrate — device DC solves vs. the curve-fit surface
+//! (the Fig. 3 workload), and the weight-bank construction.
+//!
+//! The transfer-surface evaluation is the innermost op of the frontend
+//! hot path: one call per (pixel, channel, rail) per receptive field.
+
+use p2m::analog::{DeviceParams, TransferSurface, VariationModel, WeightBank};
+use p2m::util::bench::{bb, Bench};
+use p2m::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("analog");
+    let p = DeviceParams::default();
+
+    b.run("device_dc_solve (one pixel op point)", || {
+        p2m::analog::pixel_output_voltage(&p, bb(0.6), bb(0.7))
+    });
+
+    let poly = TransferSurface::load_default();
+    let device = TransferSurface::device_fallback();
+    b.run("transfer_poly_eval", || poly.eval(bb(0.6), bb(0.7)));
+    b.run("transfer_device_eval", || device.eval(bb(0.6), bb(0.7)));
+
+    // Fig. 3 grid regeneration.
+    b.run("fig3_grid_9x9 (device)", || {
+        p2m::analog::device::sample_grid(&p, 9, 9)
+    });
+
+    // A full receptive field through the poly surface (75 x 8 x 2 evals).
+    let mut rng = Rng::seed(1);
+    let theta: Vec<f32> = (0..75 * 8).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let bank = WeightBank::from_theta(&theta, 75, 8, None);
+    let patch: Vec<f64> = (0..75).map(|_| rng.f64()).collect();
+    b.run("patch_x_8ch_poly (1200 evals)", || {
+        let mut acc = 0.0;
+        for c in 0..8 {
+            for (pp, &x) in patch.iter().enumerate() {
+                let w = bank.get(pp, c);
+                acc += poly.eval(w.pos, x) - poly.eval(w.neg, x);
+            }
+        }
+        acc
+    });
+
+    b.run("weight_bank_build_75x8", || {
+        WeightBank::from_theta(bb(&theta), 75, 8, Some(8))
+    });
+
+    b.run("mismatch_sample_75x8x2", || {
+        let vm = VariationModel::default();
+        let mut rng = Rng::seed(7);
+        let mut acc = 0.0;
+        for _ in 0..75 * 8 * 2 {
+            acc += vm.sample(&mut rng).width_mult;
+        }
+        acc
+    });
+}

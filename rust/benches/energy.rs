@@ -1,0 +1,38 @@
+//! Bench: the Eq. 4-8 energy/delay/EDP model and the Table 2 analytics —
+//! these run inside every CLI table command and the design-space sweep,
+//! so they should be effectively free.
+
+use p2m::compression;
+use p2m::config::HyperParams;
+use p2m::energy::{DelayConstants, EnergyConstants, PipelineKind, PipelineModel};
+use p2m::model::{analyse, table2_rows, ArchConfig};
+use p2m::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new("energy+model");
+
+    let e = EnergyConstants::default();
+    let d = DelayConstants::default();
+    let p2m = PipelineModel::from_paper_reported(PipelineKind::P2m);
+    b.run("energy_eq4", || p2m.energy(&e).total());
+    b.run("delay_eq7_aggregate", || p2m.delay(&d).total_sequential());
+
+    let arch = ArchConfig::paper_baseline(560);
+    let per_layer = PipelineModel::from_arch(PipelineKind::BaselineCompressed, &arch);
+    b.run("delay_eq7_per_layer (46 layers)", || per_layer.t_conv(&d));
+    b.run("edp_pair", || {
+        bb(p2m.edp(&e, &d, true)) + per_layer.edp(&e, &d, false)
+    });
+
+    b.run("arch_expand_paper_baseline", || arch.layers());
+    b.run("model_analyse_560", || analyse(&arch));
+    b.run("table2_all_rows", table2_rows);
+
+    let h = HyperParams::default();
+    b.run("bandwidth_reduction_eq2", || {
+        compression::bandwidth_reduction(&h, bb(560), 12)
+    });
+    b.run("tech_scaling_45to22", || {
+        p2m::energy::scale_energy(bb(3.1e-12), 45, 22).unwrap()
+    });
+}

@@ -1,0 +1,69 @@
+//! Bench: the in-pixel frontend engine — the L3 hot path (one call per
+//! captured frame).  Functional vs. event-accurate fidelity, plus the
+//! capture + scene substrate it feeds on.
+
+use p2m::analog::TransferSurface;
+use p2m::config::{SensorConfig, SystemConfig};
+use p2m::frontend::{Fidelity, FrontendEngine};
+use p2m::sensor::{expose, Camera, SceneGen, Split};
+use p2m::util::bench::Bench;
+use p2m::util::rng::Rng;
+
+fn engine(res: usize, fidelity: Fidelity) -> FrontendEngine {
+    let cfg = SystemConfig::for_resolution(res);
+    let p = cfg.hyper.patch_len();
+    let c = cfg.hyper.out_channels;
+    let mut rng = Rng::seed(3);
+    let theta: Vec<f32> = (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+    FrontendEngine::new(
+        cfg,
+        &theta,
+        vec![1.0; c],
+        vec![0.5; c],
+        TransferSurface::load_default(),
+        fidelity,
+    )
+    .unwrap()
+}
+
+fn main() {
+    let mut b = Bench::new("frontend");
+
+    let gen = SceneGen::new(80, 5);
+    b.run("scene_gen_80", || gen.image(1, 3, Split::Train));
+
+    let scene = gen.image(1, 0, Split::Train);
+    let cfg = SensorConfig::default().with_resolution(80);
+    let mut rng = Rng::seed(9);
+    b.run("photodiode_expose_80", || expose(&cfg, &scene, &mut rng));
+
+    let mut cam = Camera::new(cfg, 1, Split::Train);
+    b.run("camera_capture_80 (scene+expose)", || cam.capture());
+
+    let frame = Camera::new(cfg, 2, Split::Train).capture();
+    for res in [80usize, 120] {
+        let frame = if res == 80 {
+            frame.image.clone()
+        } else {
+            Camera::new(SensorConfig::default().with_resolution(res), 2, Split::Train)
+                .capture()
+                .image
+        };
+        let func = engine(res, Fidelity::Functional);
+        let n_out = {
+            let (ho, wo, c) = func.cfg.out_dims();
+            (ho * wo * c) as u64
+        };
+        b.run_throughput(&format!("frontend_functional_{res}"), n_out, || {
+            func.process(&frame)
+        });
+        // §Perf before/after: the same engine with the folded-polynomial
+        // fast path disabled (per-eval reference path).
+        let slow = engine(res, Fidelity::Functional).with_fold_disabled();
+        b.run_throughput(&format!("frontend_functional_{res}_unfolded"), n_out, || {
+            slow.process(&frame)
+        });
+        let ev = engine(res, Fidelity::EventAccurate);
+        b.run_throughput(&format!("frontend_event_{res}"), n_out, || ev.process(&frame));
+    }
+}

@@ -1,0 +1,85 @@
+//! Bench: coordinator substrates (queue, batcher, router) and the full
+//! end-to-end serving pipeline (the Fig. 8 workload, measured rather
+//! than modelled).  Requires artifacts for the end-to-end rows; the
+//! substrate rows always run.
+
+use std::time::Duration;
+
+use p2m::coordinator::{
+    baseline_sensor, p2m_sensor_from_bundle, run_pipeline, Backpressure, BatchPolicy,
+    Batcher, BoundedQueue, Metrics, PipelineConfig, RoutePolicy, Router,
+};
+use p2m::frontend::Fidelity;
+use p2m::runtime::{Manifest, ModelBundle, Runtime};
+use p2m::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new("pipeline");
+
+    b.run("queue_push_pop", || {
+        let q = BoundedQueue::new(64, Backpressure::Block);
+        for i in 0..64 {
+            q.push(i);
+        }
+        let mut acc = 0u64;
+        while let Some(v) = q.try_pop() {
+            acc += v;
+        }
+        acc
+    });
+
+    b.run("batcher_1000_items", || {
+        let mut batcher = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+        });
+        let mut out = 0usize;
+        for i in 0..1000 {
+            if let Some(batch) = batcher.push(bb(i), i as f64 * 1e-4) {
+                out += batch.len();
+            }
+        }
+        out
+    });
+
+    b.run("router_rr_1000", || {
+        let mut r = Router::new(4, RoutePolicy::RoundRobin);
+        for i in 0..1000 {
+            r.enqueue(i % 4, i);
+        }
+        let mut n = 0;
+        while r.next().is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    // End-to-end pipelines (need artifacts + PJRT).
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        println!("(skipping end-to-end rows: run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let metrics = Metrics::new();
+
+    for (name, batch) in [("e2e_p2m_batch1", 1usize), ("e2e_p2m_batch8", 8)] {
+        // Warm the executable cache outside the timed region.
+        let cfg = PipelineConfig { n_frames: 8, batch, ..PipelineConfig::default() };
+        let sensor = p2m_sensor_from_bundle(&bundle, Fidelity::Functional).unwrap();
+        run_pipeline(&mut bundle, sensor, &cfg, &metrics).unwrap();
+        let fps = {
+            let sensor = p2m_sensor_from_bundle(&bundle, Fidelity::Functional).unwrap();
+            run_pipeline(&mut bundle, sensor, &cfg, &metrics).unwrap().throughput_fps
+        };
+        println!("{name:<44} -> {fps:.1} frames/s (end-to-end)");
+    }
+    {
+        let cfg = PipelineConfig { n_frames: 8, batch: 8, ..PipelineConfig::default() };
+        run_pipeline(&mut bundle, baseline_sensor(80), &cfg, &metrics).unwrap();
+        let fps = run_pipeline(&mut bundle, baseline_sensor(80), &cfg, &metrics)
+            .unwrap()
+            .throughput_fps;
+        println!("{:<44} -> {fps:.1} frames/s (end-to-end)", "e2e_baseline_batch8");
+    }
+}

@@ -1,0 +1,66 @@
+//! Bench: PJRT runtime — artifact compile time and per-call execution
+//! latency for every serving graph (the SoC side of the Fig. 8 delay).
+
+use std::collections::BTreeMap;
+
+use p2m::runtime::{Manifest, ModelBundle, Runtime, Tensor};
+use p2m::util::bench::Bench;
+use p2m::util::rng::Rng;
+
+fn rand_tensor(dims: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::seed(seed);
+    let n: usize = dims.iter().product();
+    Tensor::f32(dims.to_vec(), (0..n).map(|_| rng.f32()).collect())
+}
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        println!("(runtime bench skipped: run `make artifacts`)");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+
+    // Compile times (one-off costs, measured once each).
+    for name in ["frontend_80_b1", "backbone_80_b1", "full_80_b1", "backbone_80_b8"] {
+        let t0 = std::time::Instant::now();
+        bundle.executable(name).unwrap();
+        println!("compile {name:<32} {:>10.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    let img1 = rand_tensor(&[1, 80, 80, 3], 1);
+    let img8 = rand_tensor(&[8, 80, 80, 3], 2);
+    let acts1 = rand_tensor(&[1, 16, 16, 8], 3);
+    let acts8 = rand_tensor(&[8, 16, 16, 8], 4);
+
+    let mut extra = BTreeMap::new();
+    extra.insert("image", img1.clone());
+    b.run("frontend_80_b1 (pallas golden model)", || {
+        bundle.run("frontend_80_b1", &extra).unwrap()
+    });
+
+    let mut extra = BTreeMap::new();
+    extra.insert("acts", acts1);
+    b.run("backbone_80_b1", || bundle.run("backbone_80_b1", &extra).unwrap());
+
+    let mut extra = BTreeMap::new();
+    extra.insert("acts", acts8);
+    let per_frame = b.run("backbone_80_b8", || bundle.run("backbone_80_b8", &extra).unwrap());
+    println!("  (batch-8 amortised: {:.2} ms/frame)", per_frame / 8.0 / 1e6);
+
+    let mut extra = BTreeMap::new();
+    extra.insert("image", img1);
+    b.run("full_80_b1", || bundle.run("full_80_b1", &extra).unwrap());
+
+    let mut extra = BTreeMap::new();
+    extra.insert("image", img8);
+    b.run("full_80_b8", || bundle.run("full_80_b8", &extra).unwrap());
+
+    // Training step (the E2E driver's inner loop).
+    let x = rand_tensor(&[16, 80, 80, 3], 5);
+    let y = Tensor::i32(vec![16], (0..16).map(|i| i % 2).collect());
+    b.run("train_step_80 (fwd+bwd+sgd b16)", || {
+        bundle.train_step(x.clone(), y.clone(), 0.01).unwrap()
+    });
+}

@@ -1,0 +1,8 @@
+//! Column-parallel single-slope ADC + digital CDS, re-purposed as the
+//! quantised ReLU neuron of the P2M scheme (paper Section 3.3, Fig. 4).
+
+pub mod ss_adc;
+pub mod timing;
+
+pub use ss_adc::{CdsConversion, Conversion, SsAdc};
+pub use timing::{Sample, WaveformTrace};

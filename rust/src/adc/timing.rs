@@ -1,0 +1,130 @@
+//! Waveform tracing for the SS-ADC / CDS sequence (regenerates Fig. 4).
+//!
+//! The event-accurate conversion path emits (time, signal, value) samples
+//! for the ramp generator output, comparator output, counter enable and
+//! counter value — the four traces in the paper's Fig. 4b — plus phase
+//! markers for the double-sampling sequence of Fig. 4a.
+
+use std::fmt::Write as _;
+
+/// One recorded sample of a named signal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// time in seconds from conversion start
+    pub t: f64,
+    pub signal: &'static str,
+    pub value: f64,
+}
+
+/// Trace sink with bounded memory (drops samples past `max_samples`).
+#[derive(Clone, Debug)]
+pub struct WaveformTrace {
+    pub samples: Vec<Sample>,
+    pub max_samples: usize,
+    truncated: bool,
+}
+
+impl Default for WaveformTrace {
+    fn default() -> Self {
+        Self::new(1 << 16)
+    }
+}
+
+impl WaveformTrace {
+    pub fn new(max_samples: usize) -> Self {
+        WaveformTrace { samples: Vec::new(), max_samples, truncated: false }
+    }
+
+    pub fn record(&mut self, t: f64, signal: &'static str, value: f64) {
+        if self.samples.len() < self.max_samples {
+            self.samples.push(Sample { t, signal, value });
+        } else {
+            self.truncated = true;
+        }
+    }
+
+    pub fn is_truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// All samples of one signal in time order.
+    pub fn signal(&self, name: &str) -> Vec<&Sample> {
+        self.samples.iter().filter(|s| s.signal == name).collect()
+    }
+
+    /// Distinct signal names in first-appearance order.
+    pub fn signals(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for s in &self.samples {
+            if !out.contains(&s.signal) {
+                out.push(s.signal);
+            }
+        }
+        out
+    }
+
+    /// Last value of a signal at or before time t.
+    pub fn value_at(&self, name: &str, t: f64) -> Option<f64> {
+        self.samples
+            .iter()
+            .filter(|s| s.signal == name && s.t <= t)
+            .next_back()
+            .map(|s| s.value)
+    }
+
+    /// CSV dump: `t,signal,value` (Fig. 4 regeneration artifact).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_s,signal,value\n");
+        for s in &self.samples {
+            let _ = writeln!(out, "{:.12e},{},{}", s.t, s.signal, s.value);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order() {
+        let mut tr = WaveformTrace::default();
+        tr.record(0.0, "ramp", 0.0);
+        tr.record(1e-9, "ramp", 0.1);
+        tr.record(1e-9, "comp", 1.0);
+        assert_eq!(tr.samples.len(), 3);
+        assert_eq!(tr.signal("ramp").len(), 2);
+        assert_eq!(tr.signals(), vec!["ramp", "comp"]);
+    }
+
+    #[test]
+    fn value_at_returns_latest() {
+        let mut tr = WaveformTrace::default();
+        tr.record(0.0, "counter", 0.0);
+        tr.record(2e-9, "counter", 5.0);
+        tr.record(4e-9, "counter", 9.0);
+        assert_eq!(tr.value_at("counter", 3e-9), Some(5.0));
+        assert_eq!(tr.value_at("counter", 4e-9), Some(9.0));
+        assert_eq!(tr.value_at("counter", -1.0), None);
+        assert_eq!(tr.value_at("missing", 1.0), None);
+    }
+
+    #[test]
+    fn bounded_memory() {
+        let mut tr = WaveformTrace::new(2);
+        tr.record(0.0, "x", 1.0);
+        tr.record(1.0, "x", 2.0);
+        tr.record(2.0, "x", 3.0);
+        assert_eq!(tr.samples.len(), 2);
+        assert!(tr.is_truncated());
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut tr = WaveformTrace::default();
+        tr.record(1e-9, "comp", 1.0);
+        let csv = tr.to_csv();
+        assert!(csv.starts_with("t_s,signal,value\n"));
+        assert!(csv.contains(",comp,1"));
+    }
+}

@@ -1,0 +1,317 @@
+//! Behavioural FD-SOI device model — rust twin of `python/compile/device.py`.
+//!
+//! EKV-style smooth MOSFET current plus a nested-bisection DC solver for
+//! the memory-embedded pixel stack:
+//!
+//! ```text
+//! VDD ── source follower (gate = photodiode node M) ── node S
+//!     ── weight transistor (gate = select line at VDD) ── column line
+//!     ── column load R_col ── GND
+//! ```
+//!
+//! Semantics are kept identical to the python model (same equations, same
+//! 60-iteration bisections); the GOLDEN test values below are duplicated
+//! verbatim in `python/tests/test_device.py` so the two implementations
+//! cannot silently drift.
+
+/// Technology parameters for the 22nm FD-SOI behavioural model
+/// (representative low-power-node values, not a foundry PDK — see
+/// DESIGN.md §Substitutions).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceParams {
+    /// supply voltage [V]
+    pub vdd: f64,
+    /// threshold voltage [V]
+    pub vth: f64,
+    /// subthreshold slope factor
+    pub n_slope: f64,
+    /// thermal voltage kT/q at 300 K [V]
+    pub v_t: f64,
+    /// channel-length modulation [1/V]
+    pub lambda_clm: f64,
+    /// source-follower current scale per µm width [A/µm]
+    pub i0_sf: f64,
+    /// source-follower width [µm]
+    pub w_sf: f64,
+    /// weight-transistor current scale per µm width [A/µm]
+    pub i0_w: f64,
+    /// minimum weight-transistor width [µm]
+    pub w_min: f64,
+    /// maximum weight-transistor width [µm]
+    pub w_max: f64,
+    /// column-line load resistance [ohm]
+    pub r_col: f64,
+    /// SF gate voltage at zero photocurrent [V]
+    pub vg_dark: f64,
+    /// SF gate voltage at full-scale photocurrent [V]
+    pub vg_bright: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        DeviceParams {
+            vdd: 0.8,
+            vth: 0.35,
+            n_slope: 1.35,
+            v_t: 0.02585,
+            lambda_clm: 0.08,
+            i0_sf: 8.0e-4,
+            w_sf: 1.5,
+            i0_w: 1.2e-4,
+            w_min: 0.04,
+            w_max: 0.60,
+            r_col: 40.0e3,
+            vg_dark: 0.30,
+            vg_bright: 0.80,
+        }
+    }
+}
+
+impl DeviceParams {
+    /// Load from the `device` object inside `curve_fit.json` (keys match
+    /// the python dataclass field names).
+    pub fn from_json(v: &crate::util::json::Json) -> Option<Self> {
+        let g = |k: &str| v.get(k).and_then(crate::util::json::Json::as_f64);
+        Some(DeviceParams {
+            vdd: g("vdd")?,
+            vth: g("vth")?,
+            n_slope: g("n_slope")?,
+            v_t: g("v_t")?,
+            lambda_clm: g("lambda_clm")?,
+            i0_sf: g("i0_sf")?,
+            w_sf: g("w_sf")?,
+            i0_w: g("i0_w")?,
+            w_min: g("w_min")?,
+            w_max: g("w_max")?,
+            r_col: g("r_col")?,
+            vg_dark: g("vg_dark")?,
+            vg_bright: g("vg_bright")?,
+        })
+    }
+}
+
+/// EKV interpolation F(x) = ln^2(1 + exp(x/2)): weak inversion
+/// (exponential) blending smoothly into strong inversion (square law).
+pub fn ekv_f(x: f64) -> f64 {
+    let half = x / 2.0;
+    // ln(1 + e^(x/2)) ~ x/2 for large x (overflow guard).
+    let ln1p = if half > 40.0 { half } else { half.exp().ln_1p() };
+    ln1p * ln1p
+}
+
+/// Channel current of a width-`width` NMOS (EKV interpolation), smooth in
+/// all arguments; 0 at vds <= 0; saturates for large vds.
+pub fn drain_current(p: &DeviceParams, i0: f64, width: f64, vgs: f64, vds: f64) -> f64 {
+    if width <= 0.0 || vds <= 0.0 {
+        return 0.0;
+    }
+    let nvt = p.n_slope * p.v_t;
+    let xf = (vgs - p.vth) / nvt;
+    let xr = (vgs - p.vth - p.n_slope * vds) / nvt;
+    let i_spec = i0 * width * p.n_slope * p.v_t * p.v_t;
+    i_spec * (ekv_f(xf) - ekv_f(xr)) * (1.0 + p.lambda_clm * vds)
+}
+
+/// Current through the pixel series stack with the column pinned at
+/// `v_out`: solves the internal node S by bisection (SF current decreases
+/// in V_S, weight current increases — unique crossing).
+fn stack_current(p: &DeviceParams, w_weight: f64, v_g: f64, v_out: f64) -> f64 {
+    if w_weight <= 0.0 {
+        return 0.0;
+    }
+    let i_sf = |v_s: f64| drain_current(p, p.i0_sf, p.w_sf, v_g - v_s, p.vdd - v_s);
+    let i_w = |v_s: f64| drain_current(p, p.i0_w, w_weight, p.vdd - v_out, v_s - v_out);
+
+    let (mut lo, mut hi) = (v_out, p.vdd);
+    if i_sf(lo) - i_w(lo) <= 0.0 {
+        // Weight device stronger than the SF can feed: SF-limited stack.
+        return i_sf(lo);
+    }
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if i_sf(mid) - i_w(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    i_w(0.5 * (lo + hi))
+}
+
+/// DC operating point of one memory-embedded pixel.
+///
+/// * `w_norm`  in [0,1]: normalised weight-transistor width (0 = absent).
+/// * `act_norm` in [0,1]: normalised photodiode current (maps linearly to
+///   the SF gate voltage in [vg_dark, vg_bright]).
+///
+/// Returns the column-line output voltage [V].
+pub fn pixel_output_voltage(p: &DeviceParams, w_norm: f64, act_norm: f64) -> f64 {
+    if w_norm <= 0.0 {
+        return 0.0;
+    }
+    let width = p.w_min + w_norm * (p.w_max - p.w_min);
+    let v_g = p.vg_dark + act_norm * (p.vg_bright - p.vg_dark);
+
+    let (mut lo, mut hi) = (0.0, p.vdd);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if stack_current(p, width, v_g, mid) - mid / p.r_col > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Sample the (w_norm, act_norm) grid — the SPICE-substitution sweep used
+/// for Fig. 3 regeneration and Monte-Carlo refits.
+pub fn sample_grid(p: &DeviceParams, n_w: usize, n_a: usize) -> (Vec<f64>, Vec<f64>, Vec<Vec<f64>>) {
+    let w_axis: Vec<f64> = (0..n_w).map(|i| i as f64 / (n_w - 1) as f64).collect();
+    let a_axis: Vec<f64> = (0..n_a).map(|j| j as f64 / (n_a - 1) as f64).collect();
+    let grid = w_axis
+        .iter()
+        .map(|&w| a_axis.iter().map(|&a| pixel_output_voltage(p, w, a)).collect())
+        .collect();
+    (w_axis, a_axis, grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::correlation;
+
+    // (w_norm, act_norm, volts) — mirrored in python/tests/test_device.py.
+    const GOLDEN: [(f64, f64, f64); 7] = [
+        (0.1, 0.1, 0.005364857384179958),
+        (0.25, 0.5, 0.023281322318627215),
+        (0.5, 0.25, 0.01891565064634526),
+        (0.5, 1.0, 0.04739570775646128),
+        (1.0, 0.5, 0.05027962437499446),
+        (1.0, 1.0, 0.07599890922177921),
+        (0.75, 0.75, 0.058246471631177285),
+    ];
+
+    #[test]
+    fn golden_values_match_python() {
+        let p = DeviceParams::default();
+        for &(w, a, v) in &GOLDEN {
+            let got = pixel_output_voltage(&p, w, a);
+            assert!(
+                (got - v).abs() / v < 1e-7,
+                "pixel({w},{a}) = {got}, python = {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn golden_drain_currents_match_python() {
+        let p = DeviceParams::default();
+        let a = drain_current(&p, p.i0_sf, 1.0, 0.5, 0.4);
+        assert!((a - 3.802059830916563e-06).abs() / a < 1e-9, "{a}");
+        let b = drain_current(&p, p.i0_w, 0.3, 0.45, 0.05);
+        assert!((b - 5.8820877660453795e-08).abs() / b < 1e-9, "{b}");
+    }
+
+    #[test]
+    fn ekv_properties() {
+        assert!(ekv_f(-200.0) < 1e-30);
+        assert!((ekv_f(80.0) - 1600.0).abs() < 1e-3);
+        let xs = [-10.0, -1.0, 0.0, 1.0, 5.0, 20.0];
+        for w in xs.windows(2) {
+            assert!(ekv_f(w[1]) > ekv_f(w[0]));
+        }
+        assert!(ekv_f(1e4).is_finite());
+    }
+
+    #[test]
+    fn zero_weight_is_hard_zero() {
+        let p = DeviceParams::default();
+        assert_eq!(pixel_output_voltage(&p, 0.0, 1.0), 0.0);
+        assert_eq!(pixel_output_voltage(&p, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn drain_current_edge_cases() {
+        let p = DeviceParams::default();
+        assert_eq!(drain_current(&p, p.i0_w, 0.0, 0.5, 0.5), 0.0);
+        assert_eq!(drain_current(&p, p.i0_w, 0.3, 0.5, 0.0), 0.0);
+        assert_eq!(drain_current(&p, p.i0_w, 0.3, 0.5, -0.1), 0.0);
+    }
+
+    #[test]
+    fn drain_current_linear_in_width() {
+        let p = DeviceParams::default();
+        let a = drain_current(&p, p.i0_w, 0.2, 0.5, 0.3);
+        let b = drain_current(&p, p.i0_w, 0.4, 0.5, 0.3);
+        assert!((b - 2.0 * a).abs() / b < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_weight_and_activation() {
+        let p = DeviceParams::default();
+        for &a in &[0.25, 0.5, 1.0] {
+            let vs: Vec<f64> =
+                [0.1, 0.3, 0.6, 1.0].iter().map(|&w| pixel_output_voltage(&p, w, a)).collect();
+            for w in vs.windows(2) {
+                assert!(w[1] > w[0], "not monotone in weight at a={a}: {vs:?}");
+            }
+        }
+        for &w in &[0.25, 0.5, 1.0] {
+            let vs: Vec<f64> =
+                [0.1, 0.3, 0.6, 1.0].iter().map(|&a| pixel_output_voltage(&p, w, a)).collect();
+            for v in vs.windows(2) {
+                assert!(v[1] > v[0], "not monotone in activation at w={w}: {vs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_by_supply() {
+        let p = DeviceParams::default();
+        for &w in &[0.1, 0.5, 1.0] {
+            for &a in &[0.0, 0.5, 1.0] {
+                let v = pixel_output_voltage(&p, w, a);
+                assert!((0.0..p.vdd).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn approximately_multiplicative_fig3b() {
+        // Correlation of V_out with the ideal product W*A > 0.95 over the
+        // grid (the paper's Fig. 3b scatter).
+        let p = DeviceParams::default();
+        let (w_axis, a_axis, grid) = sample_grid(&p, 9, 9);
+        let mut vs = Vec::new();
+        let mut prods = Vec::new();
+        for (i, &w) in w_axis.iter().enumerate().skip(1) {
+            for (j, &a) in a_axis.iter().enumerate() {
+                vs.push(grid[i][j]);
+                prods.push(w * a);
+            }
+        }
+        let c = correlation(&vs, &prods);
+        assert!(c > 0.95, "corr = {c}");
+    }
+
+    #[test]
+    fn compressive_in_activation() {
+        let p = DeviceParams::default();
+        let lo = pixel_output_voltage(&p, 1.0, 0.5) - pixel_output_voltage(&p, 1.0, 0.25);
+        let hi = pixel_output_voltage(&p, 1.0, 1.0) - pixel_output_voltage(&p, 1.0, 0.75);
+        assert!(hi < lo, "surface not compressive: {hi} vs {lo}");
+    }
+
+    #[test]
+    fn sample_grid_shape() {
+        let p = DeviceParams::default();
+        let (w, a, g) = sample_grid(&p, 5, 7);
+        assert_eq!(w.len(), 5);
+        assert_eq!(a.len(), 7);
+        assert_eq!(g.len(), 5);
+        assert!(g.iter().all(|r| r.len() == 7));
+        assert!(g[0].iter().all(|&v| v == 0.0)); // w = 0 row
+        assert_eq!((w[0], *w.last().unwrap()), (0.0, 1.0));
+    }
+}

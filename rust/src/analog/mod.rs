@@ -1,0 +1,14 @@
+//! Analog circuit substrate: device model, transfer surface, weight
+//! mapping, process variation (paper Section 3 + 4.1).
+
+pub mod device;
+pub mod nvm;
+pub mod transfer;
+pub mod variation;
+pub mod weights;
+
+pub use device::{drain_current, ekv_f, pixel_output_voltage, DeviceParams};
+pub use nvm::{tech_table, TechParams, TechRow, WeightTech};
+pub use transfer::{CurveFit, TransferSurface, MW, NA};
+pub use variation::{DeviceInstance, VariationModel};
+pub use weights::{quantise_width, split_weight, WeightBank, WidthPair};

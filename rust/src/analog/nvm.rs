@@ -1,0 +1,298 @@
+//! Emerging non-volatile weight memories (paper Section 3.4).
+//!
+//! The baseline P2M die stores weights as *fixed transistor widths* (a
+//! ROM: zero programmability, perfect retention).  Section 3.4 points out
+//! the same heterogeneously-integrated die can instead carry PCM / RRAM /
+//! STT-MRAM / FeFET devices, trading programmability against write
+//! energy, conductance precision and retention drift.  This module models
+//! that trade so the design-space tooling can answer the natural
+//! follow-up: *what does making the first layer programmable cost?*
+//!
+//! Device parameters are representative published values (each constant
+//! cites its anchor in comments); the drift/noise models are the standard
+//! first-order ones (log-time conductance drift for PCM, cycle-to-cycle
+//! lognormal write noise for RRAM).
+
+use crate::util::rng::Rng;
+
+/// Weight-storage technology for the in-pixel weight die.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightTech {
+    /// fixed transistor widths (the paper's primary proposal)
+    RomWidth,
+    /// phase-change memory (mushroom cell)
+    Pcm,
+    /// filamentary oxide RRAM
+    Rram,
+    /// spin-transfer-torque MRAM (binary device; multi-bit via banks)
+    SttMram,
+    /// ferroelectric FET
+    Fefet,
+}
+
+/// Technology card: programmability cost + imperfection magnitudes.
+#[derive(Clone, Copy, Debug)]
+pub struct TechParams {
+    pub tech: WeightTech,
+    /// energy to (re)program one weight level [J]
+    pub write_energy_j: f64,
+    /// write latency per device [s]
+    pub write_latency_s: f64,
+    /// usable conductance levels (analog depth)
+    pub levels: u32,
+    /// cycle-to-cycle programming noise, sigma as fraction of range
+    pub write_noise: f64,
+    /// conductance drift exponent nu: G(t) = G0 * (t/t0)^-nu (0 = none)
+    pub drift_nu: f64,
+    /// write endurance (cycles)
+    pub endurance: f64,
+}
+
+impl TechParams {
+    pub fn for_tech(tech: WeightTech) -> Self {
+        match tech {
+            // ROM: set at tape-out; "writes" are mask changes.
+            WeightTech::RomWidth => TechParams {
+                tech,
+                write_energy_j: f64::INFINITY,
+                write_latency_s: f64::INFINITY,
+                levels: 256, // width quantiser resolution (8-bit)
+                write_noise: 0.0,
+                drift_nu: 0.0,
+                endurance: 0.0,
+            },
+            // PCM: ~10 pJ RESET, ~100 ns, ~16 usable levels, nu ~ 0.05.
+            WeightTech::Pcm => TechParams {
+                tech,
+                write_energy_j: 10e-12,
+                write_latency_s: 100e-9,
+                levels: 16,
+                write_noise: 0.03,
+                drift_nu: 0.05,
+                endurance: 1e8,
+            },
+            // RRAM: ~1 pJ, ~50 ns, 8-16 levels, noisy writes.
+            WeightTech::Rram => TechParams {
+                tech,
+                write_energy_j: 1e-12,
+                write_latency_s: 50e-9,
+                levels: 8,
+                write_noise: 0.05,
+                drift_nu: 0.005,
+                endurance: 1e6,
+            },
+            // STT-MRAM (22nm embedded, ISSCC'20 ref 27): ~100 fJ, 10 ns,
+            // binary; 8 levels via 3-bit banked encoding.
+            WeightTech::SttMram => TechParams {
+                tech,
+                write_energy_j: 0.1e-12,
+                write_latency_s: 10e-9,
+                levels: 8,
+                write_noise: 0.0, // digital banks
+                drift_nu: 0.0,
+                endurance: 1e12,
+            },
+            // FeFET: ~1 fJ/switch, fast, ~32 levels, small depolarisation.
+            WeightTech::Fefet => TechParams {
+                tech,
+                write_energy_j: 1e-15,
+                write_latency_s: 20e-9,
+                levels: 32,
+                write_noise: 0.02,
+                drift_nu: 0.002,
+                endurance: 1e10,
+            },
+        }
+    }
+
+    pub fn is_programmable(&self) -> bool {
+        self.write_energy_j.is_finite()
+    }
+
+    /// Quantise a normalised weight to this technology's level grid.
+    pub fn quantise(&self, w: f64) -> f64 {
+        let levels = (self.levels - 1) as f64;
+        (w.clamp(0.0, 1.0) * levels).round() / levels
+    }
+
+    /// Stored weight after programming noise + drift to time `t_s`
+    /// (reference time 1 s).  Deterministic given the rng.
+    pub fn stored_weight(&self, w: f64, t_s: f64, rng: &mut Rng) -> f64 {
+        let mut g = self.quantise(w);
+        if self.write_noise > 0.0 {
+            g += rng.normal_ms(0.0, self.write_noise);
+        }
+        if self.drift_nu > 0.0 && t_s > 1.0 {
+            g *= (t_s).powf(-self.drift_nu);
+        }
+        g.clamp(0.0, 1.0)
+    }
+
+    /// Energy to program a whole first-layer bank (P x C signed weights;
+    /// each weight is one device — the sign is wiring, not state).
+    pub fn reprogram_energy_j(&self, patch_len: usize, channels: usize) -> f64 {
+        self.write_energy_j * (patch_len * channels) as f64
+    }
+
+    /// Wall time to reprogram the bank through `parallel_writers` lanes.
+    pub fn reprogram_time_s(&self, patch_len: usize, channels: usize, parallel_writers: usize) -> f64 {
+        let writes = (patch_len * channels).div_ceil(parallel_writers.max(1));
+        self.write_latency_s * writes as f64
+    }
+
+    /// RMS weight error at time t (quantisation + write noise + drift),
+    /// over a uniform weight distribution — the quantity that bounds the
+    /// accuracy impact of going programmable.
+    pub fn rms_weight_error(&self, t_s: f64, samples: usize, seed: u64) -> f64 {
+        let mut rng = Rng::seed(seed);
+        let mut sq = 0.0;
+        for _ in 0..samples {
+            let w = rng.f64();
+            let stored = self.stored_weight(w, t_s, &mut rng);
+            sq += (stored - w) * (stored - w);
+        }
+        (sq / samples as f64).sqrt()
+    }
+}
+
+/// The Section 3.4 comparison table: one row per technology.
+pub fn tech_table(patch_len: usize, channels: usize) -> Vec<TechRow> {
+    [
+        WeightTech::RomWidth,
+        WeightTech::Pcm,
+        WeightTech::Rram,
+        WeightTech::SttMram,
+        WeightTech::Fefet,
+    ]
+    .into_iter()
+    .map(|t| {
+        let p = TechParams::for_tech(t);
+        TechRow {
+            tech: t,
+            levels: p.levels,
+            programmable: p.is_programmable(),
+            reprogram_energy_j: p.reprogram_energy_j(patch_len, channels),
+            reprogram_time_s: p.reprogram_time_s(patch_len, channels, channels),
+            rms_error_1s: p.rms_weight_error(1.0, 4000, 7),
+            rms_error_1yr: p.rms_weight_error(3.15e7, 4000, 7),
+        }
+    })
+    .collect()
+}
+
+/// One row of the technology comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct TechRow {
+    pub tech: WeightTech,
+    pub levels: u32,
+    pub programmable: bool,
+    pub reprogram_energy_j: f64,
+    pub reprogram_time_s: f64,
+    pub rms_error_1s: f64,
+    pub rms_error_1yr: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn rom_is_perfect_but_frozen() {
+        let rom = TechParams::for_tech(WeightTech::RomWidth);
+        assert!(!rom.is_programmable());
+        let mut rng = Rng::seed(0);
+        // 8-bit width quantisation only.
+        let e = rom.rms_weight_error(3.15e7, 2000, 1);
+        assert!(e < 1.5 / 255.0, "{e}");
+        let w = rom.stored_weight(0.5, 1e9, &mut rng);
+        assert!((w - rom.quantise(0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_programmable_techs_have_finite_cost() {
+        for t in [WeightTech::Pcm, WeightTech::Rram, WeightTech::SttMram, WeightTech::Fefet] {
+            let p = TechParams::for_tech(t);
+            assert!(p.is_programmable());
+            assert!(p.write_energy_j > 0.0 && p.write_energy_j < 1e-9);
+            assert!(p.write_latency_s > 0.0);
+            assert!(p.levels >= 8);
+        }
+    }
+
+    #[test]
+    fn quantise_respects_levels() {
+        Prop::new("nvm quantiser error bounded").run(|rng| {
+            let tech = *rng.choose(&[
+                WeightTech::Pcm,
+                WeightTech::Rram,
+                WeightTech::SttMram,
+                WeightTech::Fefet,
+            ]);
+            let p = TechParams::for_tech(tech);
+            let w = rng.f64();
+            let q = p.quantise(w);
+            let lsb = 1.0 / (p.levels - 1) as f64;
+            prop_assert!((q - w).abs() <= lsb / 2.0 + 1e-12, "{tech:?} w={w} q={q}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pcm_drifts_downward() {
+        let pcm = TechParams::for_tech(WeightTech::Pcm);
+        let mut rng = Rng::seed(3);
+        let fresh = pcm.stored_weight(0.8, 1.0, &mut rng);
+        let mut rng = Rng::seed(3);
+        let aged = pcm.stored_weight(0.8, 3.15e7, &mut rng);
+        assert!(aged < fresh, "PCM must drift down: {aged} vs {fresh}");
+    }
+
+    #[test]
+    fn drift_hierarchy_matches_physics() {
+        // PCM drifts worst, MRAM/ROM not at all.
+        let rows = tech_table(75, 8);
+        let get = |t: WeightTech| rows.iter().find(|r| r.tech == t).unwrap();
+        assert!(get(WeightTech::Pcm).rms_error_1yr > get(WeightTech::Pcm).rms_error_1s);
+        assert!(
+            (get(WeightTech::SttMram).rms_error_1yr - get(WeightTech::SttMram).rms_error_1s)
+                .abs()
+                < 1e-12
+        );
+        assert!(get(WeightTech::Pcm).rms_error_1yr > get(WeightTech::Fefet).rms_error_1yr);
+    }
+
+    #[test]
+    fn reprogram_costs_scale_with_bank() {
+        let p = TechParams::for_tech(WeightTech::Rram);
+        let small = p.reprogram_energy_j(75, 8);
+        let big = p.reprogram_energy_j(75, 32);
+        assert!((big / small - 4.0).abs() < 1e-9);
+        // Channel-parallel writers cut wall time c-fold.
+        let serial = p.reprogram_time_s(75, 8, 1);
+        let par = p.reprogram_time_s(75, 8, 8);
+        assert!((serial / par - 8.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn mram_write_cheapest_per_bank_among_multilevel() {
+        let rows = tech_table(75, 8);
+        let fefet = rows.iter().find(|r| r.tech == WeightTech::Fefet).unwrap();
+        let pcm = rows.iter().find(|r| r.tech == WeightTech::Pcm).unwrap();
+        assert!(fefet.reprogram_energy_j < pcm.reprogram_energy_j);
+    }
+
+    #[test]
+    fn stored_weight_always_in_range() {
+        Prop::new("nvm stored weight in [0,1]").run(|rng| {
+            let tech = *rng.choose(&[WeightTech::Pcm, WeightTech::Rram, WeightTech::Fefet]);
+            let p = TechParams::for_tech(tech);
+            let w = rng.range(-0.2, 1.2);
+            let t = 10f64.powf(rng.range(0.0, 8.0));
+            let stored = p.stored_weight(w, t, rng);
+            prop_assert!((0.0..=1.0).contains(&stored), "{stored}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! Pixel transfer surface: the curve-fit polynomial shared with the JAX
+//! training path via `artifacts/curve_fit.json`.
+//!
+//! Two evaluation backends:
+//! * [`TransferSurface::Poly`] — the fitted polynomial (what L1/L2 use;
+//!   normalised so f(1,1) = 1, exact zero at w = 0);
+//! * [`TransferSurface::Device`] — direct DC solution of the device model
+//!   (slow; the "SPICE" oracle for validating the fit and for
+//!   Monte-Carlo variation studies).
+
+use std::path::Path;
+
+use crate::analog::device::{pixel_output_voltage, DeviceParams};
+use crate::util::json::Json;
+
+/// Polynomial degrees: w^1..w^MW (no m = 0 terms — deselected transistor
+/// contributes exactly zero), a^0..a^NA.  Must match python `nonideal.py`.
+pub const MW: usize = 3;
+pub const NA: usize = 3;
+
+/// Fitted polynomial surface + provenance (mirrors python `CurveFit`).
+#[derive(Clone, Debug)]
+pub struct CurveFit {
+    /// coeffs[m][n] multiplies w^(m+1) * a^n.
+    pub coeffs: [[f64; NA + 1]; MW],
+    /// V_out at (w=1, a=1) [V] — converts normalised units back to volts.
+    pub v_full_scale: f64,
+    /// normalised fit residual recorded at fit time.
+    pub rmse: f64,
+    /// device parameters the fit was generated from.
+    pub device: DeviceParams,
+}
+
+impl CurveFit {
+    /// Normalised transfer f(w, a); exact 0 at w = 0.
+    #[inline]
+    pub fn eval(&self, w: f64, a: f64) -> f64 {
+        let mut acc = 0.0;
+        let mut wm = 1.0;
+        for m in 0..MW {
+            wm *= w;
+            let mut an = 1.0;
+            for n in 0..=NA {
+                acc += self.coeffs[m][n] * wm * an;
+                an *= a;
+            }
+        }
+        acc
+    }
+
+    /// Parse `curve_fit.json` (schema `p2m-curve-fit-v1`).
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        if v.path("schema").and_then(Json::as_str) != Some("p2m-curve-fit-v1") {
+            return Err("wrong schema".into());
+        }
+        if v.path("mw").and_then(Json::as_usize) != Some(MW)
+            || v.path("na").and_then(Json::as_usize) != Some(NA)
+        {
+            return Err("degree mismatch with compiled-in MW/NA".into());
+        }
+        let rows = v.path("coeffs").and_then(Json::as_arr).ok_or("missing coeffs")?;
+        if rows.len() != MW {
+            return Err("coeffs row count".into());
+        }
+        let mut coeffs = [[0.0; NA + 1]; MW];
+        for (m, row) in rows.iter().enumerate() {
+            let vals = row.as_f64_vec().ok_or("coeff row not numeric")?;
+            if vals.len() != NA + 1 {
+                return Err("coeff col count".into());
+            }
+            coeffs[m].copy_from_slice(&vals);
+        }
+        let device = v
+            .path("device")
+            .and_then(DeviceParams::from_json)
+            .ok_or("missing/invalid device params")?;
+        Ok(CurveFit {
+            coeffs,
+            v_full_scale: v.path("v_full_scale").and_then(Json::as_f64).ok_or("v_full_scale")?,
+            rmse: v.path("rmse").and_then(Json::as_f64).ok_or("rmse")?,
+            device,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+/// The pixel transfer surface with selectable backend.
+#[derive(Clone, Debug)]
+pub enum TransferSurface {
+    /// Fitted polynomial, normalised to f(1,1) = 1.
+    Poly(CurveFit),
+    /// Direct device-model solution, normalised by `v_full_scale`.
+    Device { params: DeviceParams, v_full_scale: f64 },
+}
+
+impl TransferSurface {
+    /// Load the polynomial from `artifacts/curve_fit.json` if built,
+    /// otherwise fall back to the (slow, but dependency-free) direct
+    /// device backend.
+    pub fn load_default() -> Self {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/curve_fit.json");
+        match CurveFit::load(&path) {
+            Ok(fit) => TransferSurface::Poly(fit),
+            Err(_) => Self::device_fallback(),
+        }
+    }
+
+    pub fn device_fallback() -> Self {
+        let params = DeviceParams::default();
+        let v_full_scale = pixel_output_voltage(&params, 1.0, 1.0);
+        TransferSurface::Device { params, v_full_scale }
+    }
+
+    /// Normalised transfer f(w, a) with f(1,1) ~ 1 and f(0, ·) = 0.
+    #[inline]
+    pub fn eval(&self, w: f64, a: f64) -> f64 {
+        match self {
+            TransferSurface::Poly(fit) => fit.eval(w, a),
+            TransferSurface::Device { params, v_full_scale } => {
+                pixel_output_voltage(params, w, a) / v_full_scale
+            }
+        }
+    }
+
+    /// Physical full-scale voltage [V] of a single pixel.
+    pub fn v_full_scale(&self) -> f64 {
+        match self {
+            TransferSurface::Poly(fit) => fit.v_full_scale,
+            TransferSurface::Device { v_full_scale, .. } => *v_full_scale,
+        }
+    }
+
+    pub fn device_params(&self) -> DeviceParams {
+        match self {
+            TransferSurface::Poly(fit) => fit.device,
+            TransferSurface::Device { params, .. } => *params,
+        }
+    }
+
+    pub fn is_poly(&self) -> bool {
+        matches!(self, TransferSurface::Poly(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load_poly() -> Option<CurveFit> {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/curve_fit.json");
+        CurveFit::load(&path).ok()
+    }
+
+    #[test]
+    fn poly_zero_at_zero_weight() {
+        if let Some(fit) = load_poly() {
+            for a in [0.0, 0.3, 0.7, 1.0] {
+                assert_eq!(fit.eval(0.0, a), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn poly_near_one_at_full_scale() {
+        if let Some(fit) = load_poly() {
+            assert!((fit.eval(1.0, 1.0) - 1.0).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn poly_tracks_device_model() {
+        // The loaded fit must agree with the in-tree device model: this is
+        // the cross-language contract (same JSON drives JAX training).
+        let Some(fit) = load_poly() else { return };
+        let dev = TransferSurface::Device {
+            params: fit.device,
+            v_full_scale: fit.v_full_scale,
+        };
+        for &(w, a) in &[(0.2, 0.4), (0.5, 0.5), (0.8, 0.9), (0.33, 0.77), (1.0, 0.25)] {
+            let p = fit.eval(w, a);
+            let d = dev.eval(w, a);
+            assert!((p - d).abs() < 0.06, "fit({w},{a})={p} device={d}");
+        }
+    }
+
+    #[test]
+    fn device_fallback_normalised() {
+        let t = TransferSurface::device_fallback();
+        assert!((t.eval(1.0, 1.0) - 1.0).abs() < 1e-9);
+        assert_eq!(t.eval(0.0, 0.6), 0.0);
+        assert!(t.v_full_scale() > 0.0);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_schema() {
+        let v = Json::parse(r#"{"schema": "nope"}"#).unwrap();
+        assert!(CurveFit::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_degree_mismatch() {
+        let v = Json::parse(
+            r#"{"schema": "p2m-curve-fit-v1", "mw": 2, "na": 3, "coeffs": []}"#,
+        )
+        .unwrap();
+        assert!(CurveFit::from_json(&v).is_err());
+    }
+}

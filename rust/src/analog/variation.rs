@@ -1,0 +1,175 @@
+//! Process variation / mismatch Monte-Carlo (ablation substrate).
+//!
+//! The paper trains against the *systematic* non-ideality (the curve-fit
+//! surface) and argues fixed-weight manufacturing is viable; this module
+//! supplies the missing-but-natural robustness study: random per-device
+//! width and threshold-voltage mismatch, evaluated through the same DC
+//! solver, so `p2m ablation` can report accuracy-vs-mismatch sigma.
+
+use crate::analog::device::{pixel_output_voltage, DeviceParams};
+use crate::util::rng::Rng;
+
+/// Mismatch magnitudes (1-sigma, relative for width / absolute for vth).
+#[derive(Clone, Copy, Debug)]
+pub struct VariationModel {
+    /// relative width mismatch sigma (Pelgrom-style; ~1-3% for small W)
+    pub width_sigma: f64,
+    /// threshold-voltage mismatch sigma [V]
+    pub vth_sigma_v: f64,
+}
+
+impl Default for VariationModel {
+    fn default() -> Self {
+        VariationModel { width_sigma: 0.02, vth_sigma_v: 0.005 }
+    }
+}
+
+impl VariationModel {
+    pub fn none() -> Self {
+        VariationModel { width_sigma: 0.0, vth_sigma_v: 0.0 }
+    }
+
+    pub fn scaled(self, factor: f64) -> Self {
+        VariationModel {
+            width_sigma: self.width_sigma * factor,
+            vth_sigma_v: self.vth_sigma_v * factor,
+        }
+    }
+
+    /// One sampled device instance: perturbed width multiplier + vth shift.
+    pub fn sample(&self, rng: &mut Rng) -> DeviceInstance {
+        DeviceInstance {
+            width_mult: (1.0 + rng.normal_ms(0.0, self.width_sigma)).max(0.0),
+            vth_shift_v: rng.normal_ms(0.0, self.vth_sigma_v),
+        }
+    }
+}
+
+/// A concrete manufactured device (one weight transistor).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceInstance {
+    pub width_mult: f64,
+    pub vth_shift_v: f64,
+}
+
+impl DeviceInstance {
+    pub const NOMINAL: DeviceInstance = DeviceInstance { width_mult: 1.0, vth_shift_v: 0.0 };
+
+    /// Pixel output with this instance's mismatch applied, normalised by
+    /// the *nominal* full scale (mismatch shows up as gain error, as it
+    /// would on silicon).
+    pub fn eval(&self, p: &DeviceParams, w_norm: f64, a_norm: f64, v_full_scale: f64) -> f64 {
+        if w_norm <= 0.0 {
+            return 0.0;
+        }
+        let perturbed = DeviceParams { vth: p.vth + self.vth_shift_v, ..*p };
+        // Width mismatch multiplies the physical width; renormalise into
+        // the solver's [0,1] convention around the same w_min..w_max span.
+        let w_phys = (p.w_min + w_norm * (p.w_max - p.w_min)) * self.width_mult;
+        let w_equiv = ((w_phys - p.w_min) / (p.w_max - p.w_min)).clamp(0.0, 1.0);
+        if w_equiv <= 0.0 {
+            return 0.0;
+        }
+        pixel_output_voltage(&perturbed, w_equiv, a_norm) / v_full_scale
+    }
+}
+
+/// RMS deviation (in normalised units) between nominal and mismatched
+/// transfer over a sample of (w, a) operating points.
+pub fn transfer_rms_error(
+    p: &DeviceParams,
+    model: &VariationModel,
+    n_devices: usize,
+    seed: u64,
+) -> f64 {
+    let v_fs = pixel_output_voltage(p, 1.0, 1.0);
+    let mut rng = Rng::seed(seed);
+    let points = [(0.25, 0.5), (0.5, 0.5), (0.75, 0.75), (1.0, 1.0), (0.5, 1.0)];
+    let mut sq = 0.0;
+    let mut n = 0usize;
+    for _ in 0..n_devices {
+        let inst = model.sample(&mut rng);
+        for &(w, a) in &points {
+            let nominal = pixel_output_voltage(p, w, a) / v_fs;
+            let got = inst.eval(p, w, a, v_fs);
+            sq += (got - nominal) * (got - nominal);
+            n += 1;
+        }
+    }
+    (sq / n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn nominal_instance_is_identity() {
+        let p = DeviceParams::default();
+        let v_fs = pixel_output_voltage(&p, 1.0, 1.0);
+        for &(w, a) in &[(0.3, 0.4), (0.8, 0.9), (1.0, 1.0)] {
+            let nominal = pixel_output_voltage(&p, w, a) / v_fs;
+            let got = DeviceInstance::NOMINAL.eval(&p, w, a, v_fs);
+            assert!((got - nominal).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_sigma_samples_are_nominal() {
+        let mut rng = Rng::seed(0);
+        let inst = VariationModel::none().sample(&mut rng);
+        assert_eq!(inst, DeviceInstance::NOMINAL);
+    }
+
+    #[test]
+    fn zero_weight_still_zero_under_mismatch() {
+        let p = DeviceParams::default();
+        let v_fs = pixel_output_voltage(&p, 1.0, 1.0);
+        let mut rng = Rng::seed(1);
+        for _ in 0..16 {
+            let inst = VariationModel::default().scaled(3.0).sample(&mut rng);
+            assert_eq!(inst.eval(&p, 0.0, 1.0, v_fs), 0.0);
+        }
+    }
+
+    #[test]
+    fn rms_error_grows_with_sigma() {
+        let p = DeviceParams::default();
+        let e1 = transfer_rms_error(&p, &VariationModel::default().scaled(0.5), 24, 7);
+        let e2 = transfer_rms_error(&p, &VariationModel::default().scaled(2.0), 24, 7);
+        assert!(e2 > e1, "rms(2x)={e2} <= rms(0.5x)={e1}");
+    }
+
+    #[test]
+    fn rms_error_zero_without_variation() {
+        let p = DeviceParams::default();
+        let e = transfer_rms_error(&p, &VariationModel::none(), 8, 3);
+        assert!(e < 1e-12, "{e}");
+    }
+
+    #[test]
+    fn small_mismatch_small_error() {
+        Prop::new("mismatch perturbation bounded").cases(16).run(|rng| {
+            let p = DeviceParams::default();
+            let v_fs = pixel_output_voltage(&p, 1.0, 1.0);
+            let inst = VariationModel::default().sample(rng);
+            let (w, a) = (rng.range(0.2, 1.0), rng.range(0.2, 1.0));
+            let nominal = pixel_output_voltage(&p, w, a) / v_fs;
+            let got = inst.eval(&p, w, a, v_fs);
+            // 2% width / 5 mV vth mismatch must stay a small perturbation.
+            prop_assert!((got - nominal).abs() < 0.25, "w={w} a={a} got={got} nom={nominal}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn width_mult_never_negative() {
+        let mut rng = Rng::seed(9);
+        let vm = VariationModel { width_sigma: 1.0, vth_sigma_v: 0.0 }; // absurd sigma
+        for _ in 0..256 {
+            assert!(vm.sample(&mut rng).width_mult >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Weight-to-silicon mapping (paper Sections 3.1 & 4.2).
+//!
+//! Trained signed weights theta[p][c] become *widths of fixed transistors*:
+//! positive weights go to transistors wired to the "red" VDD rail, negative
+//! magnitudes to the "green" rail, and the two CDS sampling phases
+//! subtract their contributions.  Widths are discrete in silicon (the die
+//! is a ROM-like structure; the paper quantises to 8-bit weights with
+//! < 0.1% accuracy drop), so this module also models the width quantiser.
+
+/// One pixel-embedded weight bank entry: the per-channel width pair.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WidthPair {
+    /// normalised width on the positive (red, up-count) rail, in [0, 1]
+    pub pos: f64,
+    /// normalised width on the negative (green, down-count) rail, in [0, 1]
+    pub neg: f64,
+}
+
+/// Signed weight -> rail split (clips |theta| at 1: the silicon cannot
+/// exceed w_max).  Matches python `model.p2m_stem_weights`.
+pub fn split_weight(theta: f64) -> WidthPair {
+    WidthPair { pos: theta.clamp(0.0, 1.0), neg: (-theta).clamp(0.0, 1.0) }
+}
+
+/// Quantise a normalised width to `bits`-bit discrete levels (uniform mid-
+/// tread over [0, 1]; level 0 means "no transistor placed").
+pub fn quantise_width(w: f64, bits: u32) -> f64 {
+    assert!((1..=24).contains(&bits));
+    let levels = ((1u64 << bits) - 1) as f64;
+    (w.clamp(0.0, 1.0) * levels).round() / levels
+}
+
+/// The full first-layer weight bank: widths[(p, c)] for P pixels-in-patch
+/// and C output channels.  This is what gets "manufactured" into the die.
+#[derive(Clone, Debug)]
+pub struct WeightBank {
+    pub patch_len: usize,
+    pub channels: usize,
+    widths: Vec<WidthPair>,
+}
+
+impl WeightBank {
+    /// Build from row-major signed weights theta[(p, c)] (length P*C) with
+    /// optional width quantisation (`bits` = None keeps float widths).
+    pub fn from_theta(theta: &[f32], patch_len: usize, channels: usize, bits: Option<u32>) -> Self {
+        assert_eq!(theta.len(), patch_len * channels, "theta shape mismatch");
+        let widths = theta
+            .iter()
+            .map(|&t| {
+                let mut wp = split_weight(t as f64);
+                if let Some(b) = bits {
+                    wp.pos = quantise_width(wp.pos, b);
+                    wp.neg = quantise_width(wp.neg, b);
+                }
+                wp
+            })
+            .collect();
+        WeightBank { patch_len, channels, widths }
+    }
+
+    #[inline]
+    pub fn get(&self, p: usize, c: usize) -> WidthPair {
+        self.widths[p * self.channels + c]
+    }
+
+    /// Per-channel column of positive widths (select line for channel c,
+    /// red rail high).
+    pub fn pos_column(&self, c: usize) -> Vec<f64> {
+        (0..self.patch_len).map(|p| self.get(p, c).pos).collect()
+    }
+
+    pub fn neg_column(&self, c: usize) -> Vec<f64> {
+        (0..self.patch_len).map(|p| self.get(p, c).neg).collect()
+    }
+
+    /// Number of weight transistors physically placed (non-zero widths):
+    /// the area-proxy the co-design trades against channel count.
+    pub fn transistor_count(&self) -> usize {
+        self.widths.iter().map(|w| (w.pos > 0.0) as usize + (w.neg > 0.0) as usize).sum()
+    }
+
+    /// Transistors per pixel = number of output channels (paper: "there
+    /// are as many weight transistors embedded within a pixel as there
+    /// are channels in the output feature map") — the *capacity*,
+    /// regardless of how many are placed at non-zero width.
+    pub fn transistors_per_pixel(&self) -> usize {
+        self.channels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn split_is_exclusive() {
+        let w = split_weight(0.7);
+        assert_eq!(w, WidthPair { pos: 0.7, neg: 0.0 });
+        let w = split_weight(-0.4);
+        assert_eq!(w, WidthPair { pos: 0.0, neg: 0.4 });
+        let w = split_weight(0.0);
+        assert_eq!(w, WidthPair { pos: 0.0, neg: 0.0 });
+    }
+
+    #[test]
+    fn split_clamps_to_silicon_range() {
+        assert_eq!(split_weight(3.0).pos, 1.0);
+        assert_eq!(split_weight(-2.5).neg, 1.0);
+    }
+
+    #[test]
+    fn split_never_both_rails() {
+        Prop::new("at most one rail populated").run(|rng| {
+            let t = rng.range(-2.0, 2.0);
+            let w = split_weight(t);
+            prop_assert!(!(w.pos > 0.0 && w.neg > 0.0), "theta={t}");
+            prop_assert!(w.pos >= 0.0 && w.neg >= 0.0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantise_endpoints_exact() {
+        for bits in [1, 4, 8] {
+            assert_eq!(quantise_width(0.0, bits), 0.0);
+            assert_eq!(quantise_width(1.0, bits), 1.0);
+        }
+    }
+
+    #[test]
+    fn quantise_error_bounded_by_half_lsb() {
+        Prop::new("width quantiser error <= lsb/2").run(|rng| {
+            let w = rng.f64();
+            let bits = *rng.choose(&[2u32, 4, 8, 12]);
+            let q = quantise_width(w, bits);
+            let lsb = 1.0 / ((1u64 << bits) - 1) as f64;
+            prop_assert!((q - w).abs() <= lsb / 2.0 + 1e-12, "w={w} bits={bits} q={q}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantise_idempotent() {
+        Prop::new("width quantiser idempotent").run(|rng| {
+            let w = rng.f64();
+            let q = quantise_width(w, 8);
+            prop_assert!((quantise_width(q, 8) - q).abs() < 1e-15);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bank_roundtrip_layout() {
+        let theta: Vec<f32> = vec![0.5, -0.25, 0.0, 1.0, -1.0, 0.125];
+        let bank = WeightBank::from_theta(&theta, 3, 2, None);
+        assert_eq!(bank.get(0, 0).pos, 0.5);
+        assert_eq!(bank.get(0, 1).neg, 0.25);
+        assert_eq!(bank.get(1, 1).pos, 1.0);
+        assert_eq!(bank.get(2, 0).neg, 1.0);
+        assert_eq!(bank.pos_column(0), vec![0.5, 0.0, 0.0]);
+        assert_eq!(bank.neg_column(1), vec![0.25, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn bank_counts_placed_transistors() {
+        let theta: Vec<f32> = vec![0.5, -0.25, 0.0, 1.0];
+        let bank = WeightBank::from_theta(&theta, 2, 2, None);
+        assert_eq!(bank.transistor_count(), 3);
+        assert_eq!(bank.transistors_per_pixel(), 2);
+    }
+
+    #[test]
+    fn bank_quantisation_applied() {
+        let theta: Vec<f32> = vec![0.37; 4];
+        let bank = WeightBank::from_theta(&theta, 2, 2, Some(2));
+        // 2-bit levels: {0, 1/3, 2/3, 1}; 0.37 -> 1/3
+        assert!((bank.get(0, 0).pos - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "theta shape mismatch")]
+    fn bank_rejects_bad_shape() {
+        WeightBank::from_theta(&[0.0; 5], 2, 2, None);
+    }
+}

@@ -1,0 +1,109 @@
+//! Baseline near-sensor pipelines (paper Table 4 rows 2-3, Fig. 8 bars).
+//!
+//! The comparators stream *raw* pixels off the sensor: every Bayer sample
+//! is digitised at native depth and sent over the sensor-SoC link; the
+//! whole CNN (including the first layer) runs on the SoC.  `Baseline (C)`
+//! pairs that readout with the aggressively-downsampling MobileNetV2;
+//! `Baseline (NC)` with a standard stem.
+
+use crate::config::SensorConfig;
+use crate::sensor::bayer_overhead_ratio;
+use crate::energy::PipelineKind;
+use crate::sensor::{digitise_native, Image};
+
+/// Readout statistics for one baseline frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReadoutReport {
+    /// values digitised and transmitted (all Bayer samples)
+    pub values: u64,
+    /// bytes over the sensor-SoC link
+    pub output_bytes: u64,
+    /// ADC conversions (one per sample)
+    pub conversions: u64,
+}
+
+/// The standard camera readout: digitise everything, ship everything.
+#[derive(Clone, Debug)]
+pub struct BaselineReadout {
+    pub cfg: SensorConfig,
+    pub kind: PipelineKind,
+}
+
+impl BaselineReadout {
+    pub fn new(cfg: SensorConfig, kind: PipelineKind) -> Self {
+        assert!(kind != PipelineKind::P2m, "use FrontendEngine for P2M");
+        BaselineReadout { cfg, kind }
+    }
+
+    /// Quantise the captured frame at native depth and account the
+    /// transfer: the Bayer mosaic has 4/3 samples per delivered RGB value
+    /// (paper Eq. 2's 4/3 factor).
+    pub fn process(&self, image: &Image) -> (Image, ReadoutReport) {
+        let digitised = digitise_native(&self.cfg, image);
+        let rgb_values = (image.h * image.w * image.c) as u64;
+        let bayer_samples = (rgb_values as f64 * bayer_overhead_ratio()) as u64;
+        let bits = bayer_samples * self.cfg.bit_depth as u64;
+        (
+            digitised,
+            ReadoutReport {
+                values: bayer_samples,
+                output_bytes: bits.div_ceil(8),
+                conversions: bayer_samples,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression;
+    use crate::config::HyperParams;
+    use crate::sensor::{Camera, Split};
+
+    #[test]
+    fn readout_counts_bayer_samples() {
+        let cfg = SensorConfig::default().with_resolution(60);
+        let ro = BaselineReadout::new(cfg, PipelineKind::BaselineCompressed);
+        let mut cam = Camera::new(cfg, 1, Split::Test);
+        let f = cam.capture();
+        let (img, r) = ro.process(&f.image);
+        assert_eq!(img.h, 60);
+        assert_eq!(r.values, (60 * 60 * 3) as u64 * 4 / 3);
+        assert_eq!(r.conversions, r.values);
+        assert_eq!(r.output_bytes, r.values * 12 / 8);
+    }
+
+    #[test]
+    fn p2m_vs_baseline_bandwidth_matches_eq2() {
+        // End-to-end byte accounting reproduces Eq. 2's BR (18.75x for
+        // Table 1 values; the paper quotes ~21x — see compression tests).
+        let res = 560usize;
+        let h = HyperParams::default();
+        let p2m_bits = compression::p2m_bits_per_frame(&h, res) as f64;
+        let cfg = SensorConfig::default().with_resolution(res);
+        let ro = BaselineReadout::new(cfg, PipelineKind::BaselineCompressed);
+        let img = Image::zeros(res, res, 3);
+        let (_, r) = ro.process(&img);
+        let ratio = (r.output_bytes * 8) as f64 / p2m_bits;
+        assert!((ratio - 18.75).abs() < 0.01, "measured BR = {ratio}");
+    }
+
+    #[test]
+    fn digitised_values_are_coarse() {
+        let cfg = SensorConfig::default().with_resolution(20);
+        let ro = BaselineReadout::new(cfg, PipelineKind::BaselineNonCompressed);
+        let mut img = Image::zeros(20, 20, 3);
+        img.data[0] = 0.123456789;
+        let (q, _) = ro.process(&img);
+        let levels = ((1u64 << 12) - 1) as f32;
+        let code = q.data[0] * levels;
+        assert!((code - code.round()).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "use FrontendEngine")]
+    fn rejects_p2m_kind() {
+        BaselineReadout::new(SensorConfig::default(), PipelineKind::P2m);
+    }
+}

@@ -1,0 +1,310 @@
+//! System configuration: the paper's co-design hyper-parameters (Table 1),
+//! circuit/sensor/ADC parameters, and validated builders.
+
+use std::fmt;
+
+/// Paper Table 1: hyper-parameters of the P2M-enabled first layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HyperParams {
+    /// kernel size of the convolutional layer (k)
+    pub kernel_size: usize,
+    /// padding of the convolutional layer (p)
+    pub padding: usize,
+    /// stride of the convolutional layer (s)
+    pub stride: usize,
+    /// number of output channels of the convolutional layer (c_o)
+    pub out_channels: usize,
+    /// bit-precision of the P2M-enabled convolutional layer output (N_b)
+    pub n_bits: u32,
+}
+
+impl Default for HyperParams {
+    /// Table 1 values: k=5, p=0, s=5, c_o=8, N_b=8.
+    fn default() -> Self {
+        HyperParams { kernel_size: 5, padding: 0, stride: 5, out_channels: 8, n_bits: 8 }
+    }
+}
+
+impl HyperParams {
+    /// Receptive-field length P = k*k*3 (RGB).
+    pub fn patch_len(&self) -> usize {
+        self.kernel_size * self.kernel_size * 3
+    }
+
+    /// Output spatial size for an i x i input (paper Eq. 3).
+    pub fn out_spatial(&self, input: usize) -> usize {
+        (input - self.kernel_size + 2 * self.padding) / self.stride + 1
+    }
+
+    /// Non-overlapping stride (the P2M circuit constraint).
+    pub fn is_non_overlapping(&self) -> bool {
+        self.stride == self.kernel_size && self.padding == 0
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.kernel_size == 0 || self.stride == 0 || self.out_channels == 0 {
+            return Err(ConfigError::new("kernel_size/stride/out_channels must be > 0"));
+        }
+        if !(1..=32).contains(&self.n_bits) {
+            return Err(ConfigError::new("n_bits must be in 1..=32"));
+        }
+        Ok(())
+    }
+}
+
+/// CMOS image-sensor parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SensorConfig {
+    /// active-array rows (= input image height)
+    pub rows: usize,
+    /// active-array columns (= input image width)
+    pub cols: usize,
+    /// native pixel bit depth (paper: 12)
+    pub bit_depth: u32,
+    /// exposure time [s] (drives T_sens; paper Table 5 implies ~35-39 ms)
+    pub exposure_s: f64,
+    /// read-noise sigma as a fraction of full scale
+    pub read_noise: f64,
+    /// dark-current level as a fraction of full scale per second
+    pub dark_current: f64,
+    /// shot-noise on/off (Poisson approximated by sqrt-scaled Gaussian)
+    pub shot_noise: bool,
+}
+
+impl Default for SensorConfig {
+    fn default() -> Self {
+        SensorConfig {
+            rows: 80,
+            cols: 80,
+            bit_depth: 12,
+            exposure_s: 35.84e-3,
+            read_noise: 2e-3,
+            dark_current: 1e-2,
+            shot_noise: true,
+        }
+    }
+}
+
+impl SensorConfig {
+    pub fn with_resolution(mut self, res: usize) -> Self {
+        self.rows = res;
+        self.cols = res;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err(ConfigError::new("sensor must have non-zero dimensions"));
+        }
+        if !(1..=16).contains(&self.bit_depth) {
+            return Err(ConfigError::new("bit_depth must be in 1..=16"));
+        }
+        if self.exposure_s <= 0.0 {
+            return Err(ConfigError::new("exposure must be positive"));
+        }
+        if !(0.0..0.5).contains(&self.read_noise) {
+            return Err(ConfigError::new("read_noise must be in [0, 0.5)"));
+        }
+        Ok(())
+    }
+}
+
+/// Single-slope ADC parameters (paper Section 3.3: bootstrap ramp
+/// generator + dynamic comparator, 2 GHz counter clock, 2^N cycles per
+/// conversion).
+#[derive(Clone, Copy, Debug)]
+pub struct AdcConfig {
+    /// conversion bit width N (counts 0..2^N-1)
+    pub n_bits: u32,
+    /// counter clock [Hz]
+    pub clock_hz: f64,
+    /// full-scale analog input of the ramp, in column-line units
+    /// (multiples of the single-pixel full scale f(1,1)); the default is
+    /// set per layer from the receptive-field size P.
+    pub full_scale: f64,
+    /// comparator offset sigma (input-referred, same units) for Monte-Carlo
+    pub comparator_offset: f64,
+}
+
+impl Default for AdcConfig {
+    fn default() -> Self {
+        AdcConfig {
+            n_bits: 8,
+            clock_hz: 2.0e9,
+            full_scale: 75.0, // P = 5*5*3 receptive field
+            comparator_offset: 0.0,
+        }
+    }
+}
+
+impl AdcConfig {
+    /// LSB in column-line units.
+    pub fn lsb(&self) -> f64 {
+        self.full_scale / (self.code_max() as f64)
+    }
+
+    /// Maximum output code 2^N - 1.
+    pub fn code_max(&self) -> u32 {
+        (1u32 << self.n_bits) - 1
+    }
+
+    /// Single conversion latency: 2^N counter cycles (paper Section 3.3).
+    pub fn conversion_time_s(&self) -> f64 {
+        (1u64 << self.n_bits) as f64 / self.clock_hz
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !(1..=16).contains(&self.n_bits) {
+            return Err(ConfigError::new("adc n_bits must be in 1..=16"));
+        }
+        if self.clock_hz <= 0.0 || self.full_scale <= 0.0 {
+            return Err(ConfigError::new("adc clock and full_scale must be positive"));
+        }
+        Ok(())
+    }
+}
+
+/// Everything the smart-camera pipeline needs.
+#[derive(Clone, Debug, Default)]
+pub struct SystemConfig {
+    pub hyper: HyperParams,
+    pub sensor: SensorConfig,
+    pub adc: AdcConfig,
+}
+
+impl SystemConfig {
+    /// Config for a square input resolution, deriving the ADC full scale
+    /// from the receptive-field size.
+    pub fn for_resolution(res: usize) -> Self {
+        let hyper = HyperParams::default();
+        let adc = AdcConfig {
+            full_scale: hyper.patch_len() as f64,
+            n_bits: hyper.n_bits,
+            ..AdcConfig::default()
+        };
+        SystemConfig { hyper, sensor: SensorConfig::default().with_resolution(res), adc }
+    }
+
+    /// Output activation-map dimensions (h_o, w_o, c_o).
+    pub fn out_dims(&self) -> (usize, usize, usize) {
+        (
+            self.hyper.out_spatial(self.sensor.rows),
+            self.hyper.out_spatial(self.sensor.cols),
+            self.hyper.out_channels,
+        )
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        self.hyper.validate()?;
+        self.sensor.validate()?;
+        self.adc.validate()?;
+        if self.sensor.rows < self.hyper.kernel_size || self.sensor.cols < self.hyper.kernel_size {
+            return Err(ConfigError::new("sensor smaller than one receptive field"));
+        }
+        if self.adc.n_bits != self.hyper.n_bits {
+            return Err(ConfigError::new("adc n_bits must match hyper.n_bits"));
+        }
+        Ok(())
+    }
+}
+
+/// Validation error with a human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigError {
+    pub msg: String,
+}
+
+impl ConfigError {
+    fn new(msg: &str) -> Self {
+        ConfigError { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid config: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let h = HyperParams::default();
+        assert_eq!(h.kernel_size, 5);
+        assert_eq!(h.padding, 0);
+        assert_eq!(h.stride, 5);
+        assert_eq!(h.out_channels, 8);
+        assert_eq!(h.n_bits, 8);
+        assert!(h.is_non_overlapping());
+        assert_eq!(h.patch_len(), 75);
+    }
+
+    #[test]
+    fn out_spatial_matches_eq3() {
+        let h = HyperParams::default();
+        // (560 - 5 + 0)/5 + 1 = 112 (paper Table 4: 112x112x8 output)
+        assert_eq!(h.out_spatial(560), 112);
+        assert_eq!(h.out_spatial(80), 16);
+        assert_eq!(h.out_spatial(120), 24);
+    }
+
+    #[test]
+    fn out_spatial_overlapping_baseline() {
+        // Baseline NC in Table 4: 3x3 stride-2 'standard' kernels on 560
+        // give 279x279 (paper: 560 -> 279).
+        let h = HyperParams { kernel_size: 3, padding: 0, stride: 2, out_channels: 32, n_bits: 8 };
+        assert_eq!(h.out_spatial(560), 279);
+        assert!(!h.is_non_overlapping());
+    }
+
+    #[test]
+    fn adc_lsb_and_timing() {
+        let adc = AdcConfig::default();
+        assert_eq!(adc.code_max(), 255);
+        assert!((adc.lsb() - 75.0 / 255.0).abs() < 1e-12);
+        // 2^8 cycles at 2 GHz = 128 ns
+        assert!((adc.conversion_time_s() - 128e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn system_config_derives_dims() {
+        let c = SystemConfig::for_resolution(80);
+        assert_eq!(c.out_dims(), (16, 16, 8));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = SystemConfig::for_resolution(80);
+        c.hyper.out_channels = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = SystemConfig::for_resolution(80);
+        c.sensor.rows = 3;
+        assert!(c.validate().is_err());
+
+        let mut c = SystemConfig::for_resolution(80);
+        c.adc.n_bits = 4; // mismatch with hyper.n_bits = 8
+        assert!(c.validate().is_err());
+
+        let mut c = SystemConfig::for_resolution(80);
+        c.sensor.exposure_s = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn hyper_validate_bounds() {
+        let mut h = HyperParams::default();
+        h.n_bits = 0;
+        assert!(h.validate().is_err());
+        h.n_bits = 33;
+        assert!(h.validate().is_err());
+        h.n_bits = 8;
+        assert!(h.validate().is_ok());
+    }
+}

@@ -1,0 +1,188 @@
+//! Dynamic batcher: groups compressed activations into backbone batches.
+//!
+//! Pure state machine (caller supplies the clock) so the policy is
+//! exhaustively testable; the pipeline drives it with real time.
+//! Policy: emit a batch when `max_batch` items are waiting, or when the
+//! oldest waiting item has aged past `max_wait` — the standard
+//! serving-system latency/throughput knob.
+
+use std::time::Duration;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) }
+    }
+}
+
+/// Deterministic batcher core.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<(T, f64)>, // (item, arrival time [s])
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        Batcher { policy, pending: Vec::new() }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Offer an item at time `now` (seconds, any monotone clock).
+    /// Returns a full batch if the size trigger fired.
+    pub fn push(&mut self, item: T, now: f64) -> Option<Vec<T>> {
+        self.pending.push((item, now));
+        if self.pending.len() >= self.policy.max_batch {
+            return Some(self.drain());
+        }
+        None
+    }
+
+    /// Check the age trigger at time `now`; returns a (possibly partial)
+    /// batch when the oldest item has waited past max_wait.
+    pub fn poll(&mut self, now: f64) -> Option<Vec<T>> {
+        match self.pending.first() {
+            Some(&(_, t0)) if now - t0 >= self.policy.max_wait.as_secs_f64() => {
+                Some(self.drain())
+            }
+            _ => None,
+        }
+    }
+
+    /// Time until the age trigger would fire (None if empty).
+    pub fn next_deadline(&self, now: f64) -> Option<f64> {
+        self.pending
+            .first()
+            .map(|&(_, t0)| (t0 + self.policy.max_wait.as_secs_f64() - now).max(0.0))
+    }
+
+    /// Flush whatever is pending.
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.drain())
+        }
+    }
+
+    fn drain(&mut self) -> Vec<T> {
+        self.pending.drain(..).map(|(t, _)| t).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    fn policy(max_batch: usize, max_wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(max_wait_ms) }
+    }
+
+    #[test]
+    fn size_trigger() {
+        let mut b = Batcher::new(policy(3, 1000));
+        assert!(b.push(1, 0.0).is_none());
+        assert!(b.push(2, 0.001).is_none());
+        let batch = b.push(3, 0.002).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn age_trigger() {
+        let mut b = Batcher::new(policy(10, 5));
+        b.push("a", 0.0);
+        b.push("b", 0.002);
+        assert!(b.poll(0.004).is_none());
+        let batch = b.poll(0.006).unwrap();
+        assert_eq!(batch, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = Batcher::new(policy(10, 10));
+        assert!(b.next_deadline(0.0).is_none());
+        b.push(1, 1.0);
+        b.push(2, 1.005);
+        let d = b.next_deadline(1.002).unwrap();
+        assert!((d - 0.008).abs() < 1e-9, "{d}");
+        assert_eq!(b.next_deadline(5.0), Some(0.0));
+    }
+
+    #[test]
+    fn flush_returns_partial() {
+        let mut b = Batcher::new(policy(8, 1000));
+        b.push(1, 0.0);
+        assert_eq!(b.flush(), Some(vec![1]));
+        assert_eq!(b.flush(), None);
+    }
+
+    #[test]
+    fn batcher_never_loses_or_duplicates() {
+        // Conservation law under arbitrary push/poll interleavings.
+        Prop::new("batcher conserves items").cases(64).run(|rng| {
+            let mut b = Batcher::new(policy(rng.usize(1, 9), rng.usize(1, 20) as u64));
+            let n = rng.usize(1, 200);
+            let mut now = 0.0;
+            let mut out: Vec<usize> = Vec::new();
+            for i in 0..n {
+                now += rng.range(0.0, 0.01);
+                if let Some(batch) = b.push(i, now) {
+                    out.extend(batch);
+                }
+                if rng.bool(0.3) {
+                    now += rng.range(0.0, 0.02);
+                    if let Some(batch) = b.poll(now) {
+                        out.extend(batch);
+                    }
+                }
+            }
+            if let Some(batch) = b.flush() {
+                out.extend(batch);
+            }
+            prop_assert!(out.len() == n, "got {} of {n}", out.len());
+            // FIFO order is preserved.
+            for (i, &v) in out.iter().enumerate() {
+                prop_assert!(v == i, "out[{i}] = {v}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batches_bounded_by_max() {
+        Prop::new("batch size bounded").cases(32).run(|rng| {
+            let max = rng.usize(1, 12);
+            let mut b = Batcher::new(policy(max, 3));
+            let mut now = 0.0;
+            for i in 0..100 {
+                now += rng.range(0.0, 0.005);
+                if let Some(batch) = b.push(i, now) {
+                    prop_assert!(batch.len() <= max, "{} > {max}", batch.len());
+                }
+                if let Some(batch) = b.poll(now) {
+                    prop_assert!(batch.len() <= max);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn zero_batch_rejected() {
+        let _ = Batcher::<u32>::new(policy(0, 1));
+    }
+}

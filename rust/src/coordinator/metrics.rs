@@ -1,0 +1,178 @@
+//! Lightweight metrics registry: counters + latency recorders for the
+//! pipeline (thread-safe, lock-per-metric).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::percentile;
+
+/// Monotonic counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency recorder keeping raw samples (bounded) for percentiles.
+pub struct Latency {
+    samples: Mutex<Vec<f64>>,
+    cap: usize,
+}
+
+impl Latency {
+    pub fn new(cap: usize) -> Self {
+        Latency { samples: Mutex::new(Vec::new()), cap }
+    }
+
+    pub fn record_secs(&self, s: f64) {
+        let mut g = self.samples.lock().unwrap();
+        if g.len() < self.cap {
+            g.push(s);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let g = self.samples.lock().unwrap();
+        if g.is_empty() {
+            return 0.0;
+        }
+        g.iter().sum::<f64>() / g.len() as f64
+    }
+
+    pub fn pct(&self, q: f64) -> f64 {
+        let g = self.samples.lock().unwrap();
+        if g.is_empty() {
+            return 0.0;
+        }
+        percentile(&g, q)
+    }
+}
+
+/// Registry of named counters + latencies.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    latencies: Mutex<BTreeMap<String, std::sync::Arc<Latency>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn latency(&self, name: &str) -> std::sync::Arc<Latency> {
+        self.latencies
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Latency::new(100_000)))
+            .clone()
+    }
+
+    /// Render a human-readable snapshot.
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name}: {}\n", c.get()));
+        }
+        for (name, l) in self.latencies.lock().unwrap().iter() {
+            if l.count() > 0 {
+                out.push_str(&format!(
+                    "{name}: n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms\n",
+                    l.count(),
+                    l.mean() * 1e3,
+                    l.pct(0.5) * 1e3,
+                    l.pct(0.95) * 1e3,
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.counter("frames").inc();
+        m.counter("frames").add(4);
+        assert_eq!(m.counter("frames").get(), 5);
+        assert_eq!(m.counter("other").get(), 0);
+    }
+
+    #[test]
+    fn counters_shared_across_threads() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let c = m.counter("x");
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = m.counter("x");
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        let l = m.latency("e2e");
+        for i in 1..=100 {
+            l.record_secs(i as f64 / 1000.0);
+        }
+        assert_eq!(l.count(), 100);
+        assert!((l.mean() - 0.0505).abs() < 1e-9);
+        assert!((l.pct(0.5) - 0.0505).abs() < 0.001);
+        assert!(l.pct(0.95) > l.pct(0.5));
+    }
+
+    #[test]
+    fn snapshot_contains_names() {
+        let m = Metrics::new();
+        m.counter("frames_in").add(2);
+        m.latency("lat").record_secs(0.001);
+        let s = m.snapshot();
+        assert!(s.contains("frames_in: 2"));
+        assert!(s.contains("lat:"));
+    }
+}

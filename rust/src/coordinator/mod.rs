@@ -1,0 +1,18 @@
+//! Layer-3 coordination: the smart-camera runtime around the P2M sensor —
+//! bounded sensor-SoC link with backpressure, dynamic batching, multi-
+//! camera routing, metrics, and the end-to-end pipeline.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod queue;
+pub mod router;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Counter, Latency, Metrics};
+pub use pipeline::{
+    baseline_sensor, p2m_sensor_from_bundle, run_pipeline, PipelineConfig, PipelineStats,
+    SensorCompute,
+};
+pub use queue::{Backpressure, BoundedQueue};
+pub use router::{RoutePolicy, Router};

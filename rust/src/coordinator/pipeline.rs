@@ -1,0 +1,274 @@
+//! The smart-camera pipeline: capture -> in-pixel frontend (or baseline
+//! readout) -> bounded link -> dynamic batcher -> PJRT backbone.
+//!
+//! Capture + frontend run on a producer thread (they are pure rust and
+//! `Send`); the PJRT client is not `Send`, so batching + inference run on
+//! the caller's thread.  The bounded queue between them *is* the
+//! sensor-to-SoC link, with its backpressure policy and byte accounting.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::baseline::BaselineReadout;
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::{Backpressure, BoundedQueue};
+use crate::energy::PipelineKind;
+use crate::frontend::{Fidelity, FrontendEngine};
+use crate::runtime::{ModelBundle, Tensor};
+use crate::sensor::{Camera, Image, Split};
+
+/// What runs inside the sensor.
+pub enum SensorCompute {
+    /// P2M: the in-pixel layer compresses on-sensor.
+    P2m(FrontendEngine),
+    /// Baseline: raw digitised pixels leave the sensor.
+    Baseline(BaselineReadout),
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub n_frames: usize,
+    pub batch: usize,
+    pub queue_capacity: usize,
+    pub backpressure: Backpressure,
+    pub max_wait: Duration,
+    pub camera_seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            n_frames: 32,
+            batch: 8,
+            queue_capacity: 16,
+            backpressure: Backpressure::Block,
+            max_wait: Duration::from_millis(20),
+            camera_seed: 0,
+        }
+    }
+}
+
+/// End-of-run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    pub frames_captured: u64,
+    pub frames_classified: u64,
+    pub frames_dropped: u64,
+    pub correct: u64,
+    pub batches: u64,
+    pub bytes_from_sensor: u64,
+    pub wall_time_s: f64,
+    pub throughput_fps: f64,
+    pub latency_mean_s: f64,
+    pub latency_p95_s: f64,
+    pub queue_high_watermark: usize,
+}
+
+impl PipelineStats {
+    pub fn accuracy(&self) -> f64 {
+        if self.frames_classified == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.frames_classified as f64
+        }
+    }
+}
+
+struct LinkItem {
+    id: u64,
+    label: u8,
+    captured_at: Instant,
+    payload: Image,
+    bytes: u64,
+}
+
+/// Run the pipeline: `sensor` decides the on-sensor compute, `bundle`
+/// supplies the SoC graphs (backbone for P2M, full model for baseline).
+pub fn run_pipeline(
+    bundle: &mut ModelBundle,
+    sensor: SensorCompute,
+    cfg: &PipelineConfig,
+    metrics: &Metrics,
+) -> Result<PipelineStats> {
+    let res = bundle.entry.resolution;
+    if !bundle.entry.serve_batches.contains(&cfg.batch) {
+        return Err(anyhow!(
+            "batch {} not exported (serve_batches {:?})",
+            cfg.batch,
+            bundle.entry.serve_batches
+        ));
+    }
+    let artifact = match &sensor {
+        SensorCompute::P2m(_) => format!("backbone_{res}_b{}", cfg.batch),
+        SensorCompute::Baseline(_) => format!("full_{res}_b{}", cfg.batch),
+    };
+    // Compile up front so the producer isn't racing a cold compile.
+    bundle.executable(&artifact)?;
+
+    let queue: BoundedQueue<LinkItem> = BoundedQueue::new(cfg.queue_capacity, cfg.backpressure);
+    let sensor_cfg = match &sensor {
+        SensorCompute::P2m(e) => e.cfg.sensor,
+        SensorCompute::Baseline(b) => b.cfg,
+    };
+    let n_frames = cfg.n_frames;
+    let producer_queue = queue.clone();
+    let camera_seed = cfg.camera_seed;
+    let frames_in = metrics.counter("frames_captured");
+    let producer = std::thread::spawn(move || {
+        let mut camera = Camera::new(sensor_cfg, camera_seed, Split::Test);
+        for _ in 0..n_frames {
+            let frame = camera.capture();
+            let captured_at = Instant::now();
+            let (payload, bytes) = match &sensor {
+                SensorCompute::P2m(engine) => {
+                    let (acts, report) = engine.process(&frame.image);
+                    (acts, report.output_bytes)
+                }
+                SensorCompute::Baseline(readout) => {
+                    let (img, report) = readout.process(&frame.image);
+                    (img, report.output_bytes)
+                }
+            };
+            frames_in.inc();
+            producer_queue.push(LinkItem {
+                id: frame.id,
+                label: frame.label,
+                captured_at,
+                payload,
+                bytes,
+            });
+        }
+        producer_queue.close();
+    });
+
+    // Consumer: batch + classify.
+    let latency = metrics.latency("e2e_latency");
+    let mut batcher: Batcher<LinkItem> = Batcher::new(BatchPolicy {
+        max_batch: cfg.batch,
+        max_wait: cfg.max_wait,
+    });
+    let t0 = Instant::now();
+    let clock = |t: Instant| t.duration_since(t0).as_secs_f64();
+    let mut stats = PipelineStats::default();
+    let mut done = false;
+
+    while !done || batcher.pending() > 0 {
+        let mut ready: Option<Vec<LinkItem>> = None;
+        if !done {
+            match queue.pop(Duration::from_millis(2)) {
+                Some(item) => {
+                    stats.bytes_from_sensor += item.bytes;
+                    ready = batcher.push(item, clock(Instant::now()));
+                }
+                None => {
+                    // Timed out or closed+drained.
+                    if queue.is_empty() {
+                        let (pushed, popped, _, _) = queue.stats();
+                        if pushed == popped && producer.is_finished() {
+                            done = true;
+                        }
+                    }
+                }
+            }
+            if ready.is_none() {
+                ready = batcher.poll(clock(Instant::now()));
+            }
+        } else {
+            ready = batcher.flush();
+        }
+
+        if let Some(batch) = ready {
+            classify_batch(bundle, &artifact, cfg.batch, batch, &mut stats, &latency)?;
+        }
+    }
+    producer.join().map_err(|_| anyhow!("producer panicked"))?;
+
+    let (pushed, _, dropped, hwm) = queue.stats();
+    stats.frames_captured = pushed + dropped;
+    stats.frames_dropped = dropped;
+    stats.queue_high_watermark = hwm;
+    stats.wall_time_s = t0.elapsed().as_secs_f64();
+    stats.throughput_fps = stats.frames_classified as f64 / stats.wall_time_s.max(1e-9);
+    stats.latency_mean_s = latency.mean();
+    stats.latency_p95_s = latency.pct(0.95);
+    Ok(stats)
+}
+
+fn classify_batch(
+    bundle: &mut ModelBundle,
+    artifact: &str,
+    batch_size: usize,
+    batch: Vec<LinkItem>,
+    stats: &mut PipelineStats,
+    latency: &std::sync::Arc<crate::coordinator::metrics::Latency>,
+) -> Result<()> {
+    let n = batch.len();
+    let (h, w, c) = {
+        let img = &batch[0].payload;
+        (img.h, img.w, img.c)
+    };
+    // Assemble (B, h, w, c), zero-padding to the exported batch size.
+    let mut data = vec![0.0f32; batch_size * h * w * c];
+    for (i, item) in batch.iter().enumerate() {
+        data[i * h * w * c..(i + 1) * h * w * c].copy_from_slice(&item.payload.data);
+    }
+    let input = Tensor::f32(vec![batch_size, h, w, c], data);
+    let key = if artifact.starts_with("backbone") { "acts" } else { "image" };
+    let mut extra = BTreeMap::new();
+    extra.insert(key, input);
+    let outs = bundle.run(artifact, &extra)?;
+    let logits = outs[0].as_f32()?;
+    let classes = bundle.entry.num_classes;
+    let now = Instant::now();
+    for (i, item) in batch.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap() as u8;
+        if pred == item.label {
+            stats.correct += 1;
+        }
+        latency.record_secs(now.duration_since(item.captured_at).as_secs_f64());
+    }
+    stats.frames_classified += n as u64;
+    stats.batches += 1;
+    let _ = batch.first().map(|b| b.id); // ids retained for tracing hooks
+    Ok(())
+}
+
+/// Convenience: build the P2M sensor compute from the bundle's live stem
+/// parameters (the exact weights the backbone was trained with).
+pub fn p2m_sensor_from_bundle(
+    bundle: &ModelBundle,
+    fidelity: Fidelity,
+) -> Result<SensorCompute> {
+    let sp = bundle.stem_params()?;
+    let (scale, shift) = sp.fused_bn();
+    let cfg = SystemConfig::for_resolution(bundle.entry.resolution);
+    let engine = FrontendEngine::new(
+        cfg,
+        &sp.theta,
+        scale,
+        shift,
+        crate::analog::TransferSurface::load_default(),
+        fidelity,
+    )
+    .map_err(|e| anyhow!(e))?;
+    Ok(SensorCompute::P2m(engine))
+}
+
+/// Convenience: baseline sensor compute for the same resolution.
+pub fn baseline_sensor(resolution: usize) -> SensorCompute {
+    SensorCompute::Baseline(BaselineReadout::new(
+        crate::config::SensorConfig::default().with_resolution(resolution),
+        PipelineKind::BaselineCompressed,
+    ))
+}

@@ -1,0 +1,290 @@
+//! Bounded MPSC queue with selectable backpressure policy.
+//!
+//! The sensor-to-SoC link has finite bandwidth; when the SoC falls
+//! behind, a real camera either stalls the readout (Block) or drops
+//! frames (DropNewest).  Both policies are first-class and accounted.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// What to do when the queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backpressure {
+    /// Producer blocks until space (lossless, adds latency).
+    Block,
+    /// Newest item is dropped (lossy, bounded latency).
+    DropNewest,
+}
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    dropped: u64,
+    pushed: u64,
+    popped: u64,
+    high_watermark: usize,
+}
+
+/// Bounded queue handle (clone for more producers).
+pub struct BoundedQueue<T> {
+    inner: Arc<Inner<T>>,
+    cap: usize,
+    policy: Backpressure,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue { inner: self.inner.clone(), cap: self.cap, policy: self.policy }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize, policy: Backpressure) -> Self {
+        assert!(cap >= 1);
+        BoundedQueue {
+            inner: Arc::new(Inner {
+                q: Mutex::new(State {
+                    items: VecDeque::new(),
+                    closed: false,
+                    dropped: 0,
+                    pushed: 0,
+                    popped: 0,
+                    high_watermark: 0,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+            }),
+            cap,
+            policy,
+        }
+    }
+
+    /// Push according to the backpressure policy.  Returns false if the
+    /// item was dropped (DropNewest) or the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.q.lock().unwrap();
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.items.len() < self.cap {
+                g.items.push_back(item);
+                g.pushed += 1;
+                let len = g.items.len();
+                g.high_watermark = g.high_watermark.max(len);
+                self.inner.not_empty.notify_one();
+                return true;
+            }
+            match self.policy {
+                Backpressure::Block => {
+                    g = self.inner.not_full.wait(g).unwrap();
+                }
+                Backpressure::DropNewest => {
+                    g.dropped += 1;
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Pop, blocking up to `timeout`.  None on timeout or when the queue
+    /// is closed *and* drained.
+    pub fn pop(&self, timeout: Duration) -> Option<T> {
+        let mut g = self.inner.q.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                g.popped += 1;
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) =
+                self.inner.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                if g.closed {
+                    return None;
+                }
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.q.lock().unwrap();
+        let item = g.items.pop_front();
+        if item.is_some() {
+            g.popped += 1;
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close: producers fail, consumers drain what remains.
+    pub fn close(&self) {
+        let mut g = self.inner.q.lock().unwrap();
+        g.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (pushed, popped, dropped, high_watermark)
+    pub fn stats(&self) -> (u64, u64, u64, usize) {
+        let g = self.inner.q.lock().unwrap();
+        (g.pushed, g.popped, g.dropped, g.high_watermark)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4, Backpressure::Block);
+        for i in 0..3 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.try_pop(), Some(0));
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn drop_newest_when_full() {
+        let q = BoundedQueue::new(2, Backpressure::DropNewest);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert!(!q.push(3)); // dropped
+        let (pushed, _, dropped, hwm) = q.stats();
+        assert_eq!(pushed, 2);
+        assert_eq!(dropped, 1);
+        assert_eq!(hwm, 2);
+    }
+
+    #[test]
+    fn block_policy_waits_for_consumer() {
+        let q = BoundedQueue::new(1, Backpressure::Block);
+        assert!(q.push(1));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(Duration::from_millis(100)), Some(1));
+        assert!(t.join().unwrap());
+        assert_eq!(q.pop(Duration::from_millis(100)), Some(2));
+    }
+
+    #[test]
+    fn pop_times_out() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1, Backpressure::Block);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop(Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_unblocks_everyone() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1, Backpressure::Block);
+        q.push(7);
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(8)); // blocks: full
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert!(!t.join().unwrap()); // push failed on close
+        // Drain continues after close.
+        assert_eq!(q.pop(Duration::from_millis(10)), Some(7));
+        assert_eq!(q.pop(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn conservation_under_concurrency() {
+        // pushed == popped + in-queue, never exceeds capacity.
+        let q = BoundedQueue::new(8, Backpressure::Block);
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        assert!(q.push(p * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while got.len() < 1500 {
+                    if let Some(v) = q.pop(Duration::from_millis(500)) {
+                        got.push(v);
+                    }
+                }
+                got
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        let got = consumer.join().unwrap();
+        assert_eq!(got.len(), 1500);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 1500, "duplicates detected");
+        let (pushed, popped, dropped, hwm) = q.stats();
+        assert_eq!(pushed, 1500);
+        assert_eq!(popped, 1500);
+        assert_eq!(dropped, 0);
+        assert!(hwm <= 8);
+    }
+
+    #[test]
+    fn drop_policy_bounds_queue_and_accounts_losses() {
+        Prop::new("drop policy conserves accounting").cases(32).run(|rng| {
+            let cap = rng.usize(1, 6);
+            let q = BoundedQueue::new(cap, Backpressure::DropNewest);
+            let n = rng.usize(1, 100);
+            let mut accepted = 0u64;
+            for i in 0..n {
+                if q.push(i) {
+                    accepted += 1;
+                }
+                if rng.bool(0.4) {
+                    q.try_pop();
+                }
+                prop_assert!(q.len() <= cap, "len {} > cap {cap}", q.len());
+            }
+            let (pushed, popped, dropped, _) = q.stats();
+            prop_assert!(pushed == accepted);
+            prop_assert!(pushed + dropped == n as u64);
+            prop_assert!(popped + q.len() as u64 == pushed);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,183 @@
+//! Multi-camera frame router: fair interleaving of several sensor
+//! streams into the shared backbone (the "many cheap P2M cameras, one
+//! SoC" deployment the paper's TinyML setting implies).
+
+use std::collections::VecDeque;
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Strict round robin over non-empty streams.
+    RoundRobin,
+    /// Longest-queue-first (drain the most backlogged camera).
+    LongestQueueFirst,
+}
+
+/// Router state over N per-camera queues.
+#[derive(Debug)]
+pub struct Router<T> {
+    queues: Vec<VecDeque<T>>,
+    policy: RoutePolicy,
+    next_rr: usize,
+    /// per-camera dequeue counts (fairness accounting)
+    pub served: Vec<u64>,
+}
+
+impl<T> Router<T> {
+    pub fn new(n_cameras: usize, policy: RoutePolicy) -> Self {
+        assert!(n_cameras >= 1);
+        Router {
+            queues: (0..n_cameras).map(|_| VecDeque::new()).collect(),
+            policy,
+            next_rr: 0,
+            served: vec![0; n_cameras],
+        }
+    }
+
+    pub fn n_cameras(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn enqueue(&mut self, camera: usize, item: T) {
+        self.queues[camera].push_back(item);
+    }
+
+    pub fn backlog(&self, camera: usize) -> usize {
+        self.queues[camera].len()
+    }
+
+    pub fn total_backlog(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    /// Next (camera, item) under the policy; None when all queues empty.
+    pub fn next(&mut self) -> Option<(usize, T)> {
+        let n = self.queues.len();
+        let cam = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let mut cam = None;
+                for off in 0..n {
+                    let c = (self.next_rr + off) % n;
+                    if !self.queues[c].is_empty() {
+                        cam = Some(c);
+                        break;
+                    }
+                }
+                let c = cam?;
+                self.next_rr = (c + 1) % n;
+                c
+            }
+            RoutePolicy::LongestQueueFirst => {
+                let (c, len) = self
+                    .queues
+                    .iter()
+                    .enumerate()
+                    .map(|(i, q)| (i, q.len()))
+                    .max_by_key(|&(i, len)| (len, usize::MAX - i))
+                    .unwrap();
+                if len == 0 {
+                    return None;
+                }
+                c
+            }
+        };
+        let item = self.queues[cam].pop_front()?;
+        self.served[cam] += 1;
+        Some((cam, item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn round_robin_interleaves() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        for i in 0..3 {
+            r.enqueue(0, (0, i));
+            r.enqueue(1, (1, i));
+            r.enqueue(2, (2, i));
+        }
+        let cams: Vec<usize> = (0..9).map(|_| r.next().unwrap().0).collect();
+        assert_eq!(cams, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_empty() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        r.enqueue(1, "a");
+        r.enqueue(1, "b");
+        assert_eq!(r.next(), Some((1, "a")));
+        assert_eq!(r.next(), Some((1, "b")));
+        assert_eq!(r.next(), None);
+    }
+
+    #[test]
+    fn lqf_drains_backlog() {
+        let mut r = Router::new(2, RoutePolicy::LongestQueueFirst);
+        r.enqueue(0, 0);
+        for i in 0..5 {
+            r.enqueue(1, 10 + i);
+        }
+        // Camera 1 is served until its backlog matches camera 0's.
+        assert_eq!(r.next().unwrap().0, 1);
+        assert_eq!(r.next().unwrap().0, 1);
+        assert_eq!(r.next().unwrap().0, 1);
+        assert_eq!(r.next().unwrap().0, 1);
+        let order: Vec<usize> = (0..2).map(|_| r.next().unwrap().0).collect();
+        assert!(order.contains(&0) && order.contains(&1));
+        assert_eq!(r.next(), None);
+    }
+
+    #[test]
+    fn fairness_under_balanced_load() {
+        Prop::new("round robin is fair").cases(32).run(|rng| {
+            let n = rng.usize(2, 6);
+            let mut r = Router::new(n, RoutePolicy::RoundRobin);
+            let per_cam = rng.usize(5, 40);
+            for c in 0..n {
+                for i in 0..per_cam {
+                    r.enqueue(c, i);
+                }
+            }
+            while r.next().is_some() {}
+            for c in 0..n {
+                prop_assert!(r.served[c] == per_cam as u64, "cam {c}: {}", r.served[c]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conservation_any_policy() {
+        Prop::new("router conserves items").cases(32).run(|rng| {
+            let n = rng.usize(1, 5);
+            let policy = if rng.bool(0.5) {
+                RoutePolicy::RoundRobin
+            } else {
+                RoutePolicy::LongestQueueFirst
+            };
+            let mut r = Router::new(n, policy);
+            let mut pushed = 0usize;
+            for _ in 0..rng.usize(1, 120) {
+                if rng.bool(0.6) {
+                    r.enqueue(rng.usize(0, n), pushed);
+                    pushed += 1;
+                } else {
+                    r.next();
+                }
+            }
+            let mut drained = 0;
+            while r.next().is_some() {
+                drained += 1;
+            }
+            let served: u64 = r.served.iter().sum();
+            prop_assert!(served == pushed as u64, "served {served} pushed {pushed}");
+            prop_assert!(r.total_backlog() == 0, "{drained}");
+            Ok(())
+        });
+    }
+}

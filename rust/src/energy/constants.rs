@@ -1,0 +1,184 @@
+//! Published per-component energy/delay constants (paper Tables 4 & 5).
+//!
+//! These are the paper's own measured/derived values for 22nm CMOS; the
+//! EDP results of Section 5.3 are a model evaluated from them, so reusing
+//! them *is* the reproduction (DESIGN.md §Substitutions).  The MAC energy
+//! was scaled 45nm -> 22nm by the authors with the Stillmaker-Baas rules
+//! re-implemented in `energy::scaling` (cross-checked there).
+
+/// Pipeline flavour of Table 4's rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineKind {
+    /// P2M: in-pixel first layer, compressed sensor output.
+    P2m,
+    /// Baseline (C): compressed MobileNetV2 (aggressive stem downsample),
+    /// raw pixels leave the sensor.
+    BaselineCompressed,
+    /// Baseline (NC): standard first-layer downsampling.
+    BaselineNonCompressed,
+}
+
+/// Table 4: per-operation energies [J].
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyConstants {
+    /// per-pixel sensing (read-out) energy, P2M pixels [J]
+    pub e_pix_p2m: f64,
+    /// per-pixel sensing energy, standard pixels [J]
+    pub e_pix_baseline: f64,
+    /// per-value ADC energy, P2M (8-bit SS-ADC re-purposed) [J]
+    pub e_adc_p2m: f64,
+    /// per-value ADC energy, baseline compressed [J]
+    pub e_adc_baseline_c: f64,
+    /// per-value ADC energy, baseline non-compressed [J]
+    pub e_adc_baseline_nc: f64,
+    /// sensor-to-SoC communication per value [J]
+    pub e_com: f64,
+    /// one MAC on the SoC, 22nm [J]
+    pub e_mac: f64,
+    /// one 32-bit parameter read [J] (paper ignores it: < 1e-4 of total)
+    pub e_read: f64,
+}
+
+impl Default for EnergyConstants {
+    /// Paper Table 4 (pJ -> J).
+    fn default() -> Self {
+        EnergyConstants {
+            e_pix_p2m: 148e-12,
+            e_pix_baseline: 312e-12,
+            e_adc_p2m: 41.9e-12,
+            e_adc_baseline_c: 86.14e-12,
+            e_adc_baseline_nc: 80.14e-12,
+            e_com: 900e-12,
+            e_mac: 1.568e-12,
+            e_read: 0.0,
+        }
+    }
+}
+
+impl EnergyConstants {
+    pub fn e_pix(&self, kind: PipelineKind) -> f64 {
+        match kind {
+            PipelineKind::P2m => self.e_pix_p2m,
+            _ => self.e_pix_baseline,
+        }
+    }
+
+    pub fn e_adc(&self, kind: PipelineKind) -> f64 {
+        match kind {
+            PipelineKind::P2m => self.e_adc_p2m,
+            PipelineKind::BaselineCompressed => self.e_adc_baseline_c,
+            PipelineKind::BaselineNonCompressed => self.e_adc_baseline_nc,
+        }
+    }
+
+    /// "Cloud" scenario: feature maps leave the edge device; the paper
+    /// notes the savings grow because communication dominates.  We model
+    /// it as a multiplier on e_com (wireless/backhaul per-byte cost).
+    pub fn with_com_multiplier(mut self, m: f64) -> Self {
+        self.e_com *= m;
+        self
+    }
+}
+
+/// Table 5: delay-model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DelayConstants {
+    /// I/O band-width (bits)
+    pub b_io: u64,
+    /// weight representation bit-width
+    pub b_w: u64,
+    /// number of memory banks
+    pub n_bank: u64,
+    /// number of multiplication units
+    pub n_mult: u64,
+    /// sensor read delay [s]: (P2M, baseline)
+    pub t_sens_p2m: f64,
+    pub t_sens_baseline: f64,
+    /// ADC operation delay [s]: (P2M, baseline)
+    pub t_adc_p2m: f64,
+    pub t_adc_baseline: f64,
+    /// one multiply in the SoC [s]
+    pub t_mult: f64,
+    /// one SRAM read in the SoC [s]
+    pub t_read: f64,
+}
+
+impl Default for DelayConstants {
+    /// Paper Table 5.
+    fn default() -> Self {
+        DelayConstants {
+            b_io: 64,
+            b_w: 32,
+            n_bank: 4,
+            n_mult: 175,
+            t_sens_p2m: 35.84e-3,
+            t_sens_baseline: 39.2e-3,
+            t_adc_p2m: 0.229e-3,
+            t_adc_baseline: 4.58e-3,
+            t_mult: 5.48e-9,
+            t_read: 5.48e-9,
+        }
+    }
+}
+
+impl DelayConstants {
+    pub fn t_sens(&self, kind: PipelineKind) -> f64 {
+        match kind {
+            PipelineKind::P2m => self.t_sens_p2m,
+            _ => self.t_sens_baseline,
+        }
+    }
+
+    pub fn t_adc(&self, kind: PipelineKind) -> f64 {
+        match kind {
+            PipelineKind::P2m => self.t_adc_p2m,
+            _ => self.t_adc_baseline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_values() {
+        let e = EnergyConstants::default();
+        assert_eq!(e.e_pix(PipelineKind::P2m), 148e-12);
+        assert_eq!(e.e_pix(PipelineKind::BaselineCompressed), 312e-12);
+        assert_eq!(e.e_adc(PipelineKind::P2m), 41.9e-12);
+        assert_eq!(e.e_adc(PipelineKind::BaselineCompressed), 86.14e-12);
+        assert_eq!(e.e_adc(PipelineKind::BaselineNonCompressed), 80.14e-12);
+        assert_eq!(e.e_com, 900e-12);
+        assert_eq!(e.e_mac, 1.568e-12);
+    }
+
+    #[test]
+    fn table5_values() {
+        let d = DelayConstants::default();
+        assert_eq!(d.b_io, 64);
+        assert_eq!(d.b_w, 32);
+        assert_eq!(d.n_bank, 4);
+        assert_eq!(d.n_mult, 175);
+        assert_eq!(d.t_sens(PipelineKind::P2m), 35.84e-3);
+        assert_eq!(d.t_sens(PipelineKind::BaselineCompressed), 39.2e-3);
+        assert_eq!(d.t_adc(PipelineKind::P2m), 0.229e-3);
+        assert_eq!(d.t_adc(PipelineKind::BaselineNonCompressed), 4.58e-3);
+    }
+
+    #[test]
+    fn p2m_components_cheaper() {
+        let e = EnergyConstants::default();
+        assert!(e.e_pix_p2m < e.e_pix_baseline);
+        assert!(e.e_adc_p2m < e.e_adc_baseline_c);
+        let d = DelayConstants::default();
+        assert!(d.t_adc_p2m < d.t_adc_baseline);
+    }
+
+    #[test]
+    fn cloud_multiplier() {
+        let e = EnergyConstants::default().with_com_multiplier(10.0);
+        assert_eq!(e.e_com, 9e-9);
+        assert_eq!(e.e_mac, 1.568e-12); // untouched
+    }
+}

@@ -1,0 +1,10 @@
+//! Energy / delay / EDP model (paper Section 5.3, Eq. 4-8, Tables 4-5,
+//! Fig. 8) plus the technology-scaling rules behind Table 4's constants.
+
+pub mod constants;
+pub mod pipeline;
+pub mod scaling;
+
+pub use constants::{DelayConstants, EnergyConstants, PipelineKind};
+pub use pipeline::{DelayBreakdown, EnergyBreakdown, PipelineModel};
+pub use scaling::{scale_delay, scale_energy, NODES};

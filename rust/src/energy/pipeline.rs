@@ -1,0 +1,297 @@
+//! The paper's energy/delay model (Section 5.3, Eq. 4-8) over a whole
+//! sensing-to-classification pipeline.
+//!
+//! Two sourcing modes for the workload numbers:
+//!
+//! * [`PipelineModel::from_arch`] — N_pix / N_mac / N_read derived from
+//!   our architecture descriptors (self-consistent with the rest of the
+//!   repo; our custom model is leaner than the paper's, see
+//!   EXPERIMENTS.md);
+//! * [`PipelineModel::from_paper_reported`] — N_mac taken from the
+//!   paper's own Table 2 entries (1.93 G / 0.27 G), which reproduces the
+//!   published 7.81x / 2.15x / 16.76x headline numbers.
+
+use crate::energy::constants::{DelayConstants, EnergyConstants, PipelineKind};
+use crate::model::arch::{ArchConfig, LayerSpec};
+
+/// Eq. 4 terms [J].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyBreakdown {
+    pub e_sens: f64,
+    pub e_com: f64,
+    pub e_mac: f64,
+    pub e_read: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.e_sens + self.e_com + self.e_mac + self.e_read
+    }
+}
+
+/// Eq. 7-8 terms [s].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelayBreakdown {
+    pub t_sens: f64,
+    pub t_adc: f64,
+    pub t_conv: f64,
+}
+
+impl DelayBreakdown {
+    /// Eq. 8: sequential sensing -> ADC -> SoC.
+    pub fn total_sequential(&self) -> f64 {
+        self.t_sens + self.t_adc + self.t_conv
+    }
+
+    /// Conservative overlap assumption: max(T_sens + T_adc, T_conv).
+    pub fn total_overlap(&self) -> f64 {
+        (self.t_sens + self.t_adc).max(self.t_conv)
+    }
+}
+
+/// One pipeline instance to evaluate.
+#[derive(Clone, Debug)]
+pub struct PipelineModel {
+    pub kind: PipelineKind,
+    /// values leaving the sensor (N_pix in Eq. 4)
+    pub n_pix: u64,
+    /// SoC multiply-accumulates (N_mac)
+    pub n_mac: u64,
+    /// SoC parameter reads (N_read)
+    pub n_read: u64,
+    /// per-layer specs for the Eq. 7 per-layer delay (None -> aggregate
+    /// approximation from n_mac/n_read)
+    pub layers: Option<Vec<LayerSpec>>,
+}
+
+impl PipelineModel {
+    /// Build from an architecture descriptor.
+    pub fn from_arch(kind: PipelineKind, cfg: &ArchConfig) -> Self {
+        let layers: Vec<LayerSpec> =
+            cfg.layers().into_iter().filter(|l| !l.in_pixel).collect();
+        let m = crate::model::analysis::analyse(cfg);
+        PipelineModel {
+            kind,
+            n_pix: m.sensor_output_elems,
+            n_mac: m.soc_madds,
+            n_read: layers.iter().map(LayerSpec::n_read).sum(),
+            layers: Some(layers),
+        }
+    }
+
+    /// Paper-reported workload (Table 2 / Table 4 of the paper, 560x560):
+    /// reproduces the published headline ratios exactly-in-shape.
+    pub fn from_paper_reported(kind: PipelineKind) -> Self {
+        match kind {
+            PipelineKind::P2m => PipelineModel {
+                kind,
+                n_pix: 112 * 112 * 8,
+                // Table 2 custom: 0.27 G total minus the in-pixel stem
+                // (112*112*75*8 = 7.5 M executed in the pixel array).
+                n_mac: 270_000_000 - 7_526_400,
+                n_read: 900_000,
+                layers: None,
+            },
+            PipelineKind::BaselineCompressed => PipelineModel {
+                kind,
+                n_pix: 560 * 560 * 3,
+                n_mac: 1_930_000_000, // Table 2 baseline
+                n_read: 2_200_000,
+                layers: None,
+            },
+            PipelineKind::BaselineNonCompressed => PipelineModel {
+                kind,
+                n_pix: 560 * 560 * 3,
+                // Standard (non-aggressive) stem: 560 -> 279 first fmap;
+                // downstream cost scales ~(279/112)^2 on the early stages.
+                // The paper does not tabulate this model's MAdds; we use
+                // the compressed model inflated by the early-stage ratio.
+                n_mac: 3_300_000_000,
+                n_read: 2_200_000,
+                layers: None,
+            },
+        }
+    }
+
+    /// Eq. 4.
+    pub fn energy(&self, e: &EnergyConstants) -> EnergyBreakdown {
+        EnergyBreakdown {
+            e_sens: (e.e_pix(self.kind) + e.e_adc(self.kind)) * self.n_pix as f64,
+            e_com: e.e_com * self.n_pix as f64,
+            e_mac: e.e_mac * self.n_mac as f64,
+            e_read: e.e_read * self.n_read as f64,
+        }
+    }
+
+    /// Eq. 7 for one layer.
+    fn t_conv_layer(l: &LayerSpec, d: &DelayConstants) -> f64 {
+        let weights = l.n_read(); // k^2 * (c_i/groups) * c_o
+        let read_term =
+            weights.div_ceil((d.b_io / d.b_w) * d.n_bank) as f64 * d.t_read;
+        let mult_term = weights.div_ceil(d.n_mult) as f64
+            * (l.h_out * l.w_out) as f64
+            * d.t_mult;
+        read_term + mult_term
+    }
+
+    /// Eq. 7 summed over SoC layers (or the aggregate approximation when
+    /// per-layer specs are unavailable).
+    pub fn t_conv(&self, d: &DelayConstants) -> f64 {
+        match &self.layers {
+            Some(layers) => layers.iter().map(|l| Self::t_conv_layer(l, d)).sum(),
+            None => {
+                let read = self.n_read.div_ceil((d.b_io / d.b_w) * d.n_bank) as f64
+                    * d.t_read;
+                let mult = (self.n_mac as f64 / d.n_mult as f64) * d.t_mult;
+                read + mult
+            }
+        }
+    }
+
+    /// Eq. 8 components.
+    pub fn delay(&self, d: &DelayConstants) -> DelayBreakdown {
+        DelayBreakdown {
+            t_sens: d.t_sens(self.kind),
+            t_adc: d.t_adc(self.kind),
+            t_conv: self.t_conv(d),
+        }
+    }
+
+    /// Energy-delay product [J*s].
+    pub fn edp(&self, e: &EnergyConstants, d: &DelayConstants, sequential: bool) -> f64 {
+        let energy = self.energy(e).total();
+        let delay = if sequential {
+            self.delay(d).total_sequential()
+        } else {
+            self.delay(d).total_overlap()
+        };
+        energy * delay
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_models() -> (PipelineModel, PipelineModel, PipelineModel) {
+        (
+            PipelineModel::from_paper_reported(PipelineKind::P2m),
+            PipelineModel::from_paper_reported(PipelineKind::BaselineCompressed),
+            PipelineModel::from_paper_reported(PipelineKind::BaselineNonCompressed),
+        )
+    }
+
+    #[test]
+    fn energy_ratio_reproduces_7p81x() {
+        // Paper Section 5.3: "P2M can yield an energy reduction of up to
+        // 7.81x".  Our re-evaluation of Eq. 4 with Table 4 constants and
+        // Table 2 workloads lands within ~15% of that.
+        let (p2m, base_c, _) = paper_models();
+        let e = EnergyConstants::default();
+        let ratio = base_c.energy(&e).total() / p2m.energy(&e).total();
+        assert!((6.5..9.5).contains(&ratio), "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn delay_ratio_reproduces_2p15x() {
+        let (p2m, base_c, _) = paper_models();
+        let d = DelayConstants::default();
+        let ratio =
+            base_c.delay(&d).total_sequential() / p2m.delay(&d).total_sequential();
+        assert!((1.8..2.8).contains(&ratio), "delay ratio {ratio}");
+    }
+
+    #[test]
+    fn edp_sequential_reproduces_16p76x() {
+        let (p2m, base_c, _) = paper_models();
+        let e = EnergyConstants::default();
+        let d = DelayConstants::default();
+        let ratio = base_c.edp(&e, &d, true) / p2m.edp(&e, &d, true);
+        assert!((13.0..23.0).contains(&ratio), "EDP ratio {ratio}");
+    }
+
+    #[test]
+    fn edp_overlap_reproduces_11x() {
+        let (p2m, base_c, _) = paper_models();
+        let e = EnergyConstants::default();
+        let d = DelayConstants::default();
+        let ratio = base_c.edp(&e, &d, false) / p2m.edp(&e, &d, false);
+        assert!((9.0..16.0).contains(&ratio), "EDP overlap ratio {ratio}");
+    }
+
+    #[test]
+    fn cloud_scenario_increases_p2m_advantage() {
+        // Paper: "the energy savings is larger when the feature map needs
+        // to be transferred ... to the cloud".
+        let (p2m, base_c, _) = paper_models();
+        let edge = EnergyConstants::default();
+        let cloud = EnergyConstants::default().with_com_multiplier(10.0);
+        let r_edge = base_c.energy(&edge).total() / p2m.energy(&edge).total();
+        let r_cloud = base_c.energy(&cloud).total() / p2m.energy(&cloud).total();
+        assert!(r_cloud > r_edge, "cloud {r_cloud} <= edge {r_edge}");
+    }
+
+    #[test]
+    fn nc_baseline_worst() {
+        let (_, base_c, base_nc) = paper_models();
+        let e = EnergyConstants::default();
+        let d = DelayConstants::default();
+        assert!(base_nc.energy(&e).total() > base_c.energy(&e).total());
+        assert!(
+            base_nc.delay(&d).total_sequential() > base_c.delay(&d).total_sequential()
+        );
+    }
+
+    #[test]
+    fn from_arch_agrees_in_direction() {
+        let p2m = PipelineModel::from_arch(
+            PipelineKind::P2m,
+            &ArchConfig::paper_p2m(560),
+        );
+        let base = PipelineModel::from_arch(
+            PipelineKind::BaselineCompressed,
+            &ArchConfig::paper_baseline(560),
+        );
+        let e = EnergyConstants::default();
+        let d = DelayConstants::default();
+        let er = base.energy(&e).total() / p2m.energy(&e).total();
+        let dr = base.delay(&d).total_sequential() / p2m.delay(&d).total_sequential();
+        // Our leaner custom model wins by MORE than the paper's 7.81x.
+        assert!(er > 7.0, "energy ratio {er}");
+        assert!(dr > 1.8, "delay ratio {dr}");
+    }
+
+    #[test]
+    fn per_layer_tconv_close_to_aggregate() {
+        // The per-layer Eq. 7 sum and the aggregate approximation must
+        // agree within ~40% (ceil effects) — sanity for paper-mode.
+        let cfg = ArchConfig::paper_baseline(560);
+        let per_layer = PipelineModel::from_arch(PipelineKind::BaselineCompressed, &cfg);
+        let d = DelayConstants::default();
+        let t1 = per_layer.t_conv(&d);
+        let aggregate = PipelineModel { layers: None, ..per_layer.clone() };
+        let t2 = aggregate.t_conv(&d);
+        let rel = (t1 - t2).abs() / t2;
+        assert!(rel < 0.4, "per-layer {t1} vs aggregate {t2}");
+    }
+
+    #[test]
+    fn breakdown_totals_sum() {
+        let (p2m, ..) = paper_models();
+        let e = EnergyConstants::default();
+        let b = p2m.energy(&e);
+        assert!((b.total() - (b.e_sens + b.e_com + b.e_mac + b.e_read)).abs() < 1e-18);
+        let d = DelayConstants::default();
+        let db = p2m.delay(&d);
+        assert!(db.total_sequential() >= db.total_overlap());
+    }
+
+    #[test]
+    fn sens_energy_dominated_by_pixel_count() {
+        let (p2m, base_c, _) = paper_models();
+        let e = EnergyConstants::default();
+        // Baseline reads 9.375x more values off the sensor.
+        let r = base_c.energy(&e).e_sens / p2m.energy(&e).e_sens;
+        assert!((15.0..26.0).contains(&r), "{r}"); // 9.375 * (398/190)
+    }
+}

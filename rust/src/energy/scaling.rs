@@ -1,0 +1,106 @@
+//! CMOS technology scaling (Stillmaker & Baas, Integration 2017).
+//!
+//! The paper converts its 45nm MAC energy to 22nm "by following standard
+//! scaling strategy" (Table 4 note, ref. 44).  This module carries the
+//! published per-node energy scaling factors so the conversion is
+//! reproducible and auditable rather than a magic constant.
+//!
+//! Factors are energy-per-operation relative to 90nm, from the
+//! Stillmaker-Baas fitted models (general-purpose logic, nominal VDD).
+
+/// Supported nodes [nm].
+pub const NODES: [u32; 8] = [180, 90, 65, 45, 32, 22, 14, 7];
+
+/// Energy per op relative to the 90nm node (Stillmaker-Baas fitted
+/// aggregate; monotone decreasing).
+fn rel_energy(node_nm: u32) -> Option<f64> {
+    Some(match node_nm {
+        180 => 5.09,
+        90 => 1.0,
+        65 => 0.618,
+        45 => 0.345,
+        32 => 0.222,
+        22 => 0.133,
+        14 => 0.0712,
+        7 => 0.0316,
+        _ => return None,
+    })
+}
+
+/// Scale an energy measured at `from_nm` to `to_nm`.
+pub fn scale_energy(energy_j: f64, from_nm: u32, to_nm: u32) -> Option<f64> {
+    Some(energy_j * rel_energy(to_nm)? / rel_energy(from_nm)?)
+}
+
+/// Delay scaling: gate delay improves roughly with the node factor; the
+/// Stillmaker-Baas delay fit gives these relative per-op delays vs 90nm.
+fn rel_delay(node_nm: u32) -> Option<f64> {
+    Some(match node_nm {
+        180 => 2.40,
+        90 => 1.0,
+        65 => 0.752,
+        45 => 0.571,
+        32 => 0.440,
+        22 => 0.337,
+        14 => 0.259,
+        7 => 0.199,
+        _ => return None,
+    })
+}
+
+pub fn scale_delay(delay_s: f64, from_nm: u32, to_nm: u32) -> Option<f64> {
+    Some(delay_s * rel_delay(to_nm)? / rel_delay(from_nm)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_scaling() {
+        assert_eq!(scale_energy(1e-12, 22, 22), Some(1e-12));
+        assert_eq!(scale_delay(1e-9, 45, 45), Some(1e-9));
+    }
+
+    #[test]
+    fn unknown_node_is_none() {
+        assert_eq!(scale_energy(1.0, 22, 10), None);
+        assert_eq!(scale_delay(1.0, 28, 22), None);
+    }
+
+    #[test]
+    fn energy_monotone_decreasing_with_node() {
+        for w in NODES.windows(2) {
+            let a = scale_energy(1.0, 90, w[0]).unwrap();
+            let b = scale_energy(1.0, 90, w[1]).unwrap();
+            assert!(b < a, "{} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let e = scale_energy(3.3e-12, 45, 22).unwrap();
+        let back = scale_energy(e, 22, 45).unwrap();
+        assert!((back - 3.3e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn paper_mac_energy_consistent_with_45nm_origin() {
+        // Table 4's e_mac = 1.568 pJ at 22nm, derived from a 45nm value
+        // via these rules: the implied 45nm energy must be a plausible
+        // published MAC energy (a few pJ).
+        let implied_45 = scale_energy(1.568e-12, 22, 45).unwrap();
+        assert!(
+            (2.0e-12..8.0e-12).contains(&implied_45),
+            "implied 45nm MAC energy {implied_45:e}"
+        );
+    }
+
+    #[test]
+    fn delay_scaling_direction() {
+        let d22 = scale_delay(10e-9, 65, 22).unwrap();
+        assert!(d22 < 10e-9);
+        let d180 = scale_delay(10e-9, 65, 180).unwrap();
+        assert!(d180 > 10e-9);
+    }
+}

@@ -1,0 +1,677 @@
+//! The in-pixel convolution engine (see module docs in `frontend/mod.rs`).
+
+use crate::adc::{SsAdc, WaveformTrace};
+use crate::analog::{TransferSurface, VariationModel, WeightBank};
+use crate::config::SystemConfig;
+use crate::sensor::Image;
+use crate::util::rng::Rng;
+
+/// Execution fidelity of the analog/mixed-signal chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Combined arithmetic quantisation — bit-exact twin of the
+    /// JAX/Pallas golden model.
+    Functional,
+    /// True two-phase SS-ADC counting (per-phase quantisation, optional
+    /// waveform tracing) — the circuit-accurate path.
+    EventAccurate,
+}
+
+/// Per-device gain errors for the event-accurate path.
+///
+/// Width/threshold mismatch on a weight transistor manifests dominantly
+/// as a *gain* error of its pixel's contribution; we precompute one gain
+/// per (patch position, channel, rail) from the DC device model at
+/// construction so the per-frame hot path stays cheap.
+#[derive(Clone, Debug)]
+pub struct MismatchBank {
+    /// gain[(p * channels + c) * 2 + rail], rail 0 = pos, 1 = neg
+    gains: Vec<f64>,
+    channels: usize,
+}
+
+impl MismatchBank {
+    pub fn sample(
+        bank: &WeightBank,
+        surface: &TransferSurface,
+        model: &VariationModel,
+        seed: u64,
+    ) -> Self {
+        let params = surface.device_params();
+        let v_fs = surface.v_full_scale();
+        let mut rng = Rng::stream(seed, 0x715_CA7C);
+        let mut gains = Vec::with_capacity(bank.patch_len * bank.channels * 2);
+        for p in 0..bank.patch_len {
+            for c in 0..bank.channels {
+                let wp = bank.get(p, c);
+                for w in [wp.pos, wp.neg] {
+                    let inst = model.sample(&mut rng);
+                    let gain = if w > 0.0 {
+                        let nominal =
+                            crate::analog::pixel_output_voltage(&params, w, 1.0) / v_fs;
+                        if nominal > 0.0 {
+                            inst.eval(&params, w, 1.0, v_fs) / nominal
+                        } else {
+                            1.0
+                        }
+                    } else {
+                        1.0
+                    };
+                    gains.push(gain);
+                }
+            }
+        }
+        MismatchBank { gains, channels: bank.channels }
+    }
+
+    #[inline]
+    fn gain(&self, p: usize, c: usize, rail: usize) -> f64 {
+        self.gains[(p * self.channels + c) * 2 + rail]
+    }
+}
+
+/// Precomputed per-device activation polynomials — the frontend's hot-
+/// path representation (§Perf optimisation 1).
+///
+/// The transfer surface is polynomial and each weight transistor's width
+/// is *fixed in silicon*, so the weight-dependent part folds at
+/// construction:
+///
+///   f(w[p,c], x) = sum_n ( sum_m C[m][n] * w^m ) * x^n
+///                = sum_n K[p,c,rail][n] * x^n
+///
+/// One frame then needs the patch's x-powers once (75 x NA muls, shared
+/// by all channels and both rails) plus 2*C*(NA+1) dot products of
+/// length P — the exact rust mirror of the Pallas kernel's
+/// sum-of-matmuls formulation.  Mismatch gains fold into K as well.
+#[derive(Clone, Debug)]
+struct ActPoly {
+    /// k[((p * channels + c) * 2 + rail) * (NA+1) + n]
+    k: Vec<f64>,
+    channels: usize,
+    patch_len: usize,
+}
+
+const NA1: usize = crate::analog::NA + 1;
+
+impl ActPoly {
+    fn build(
+        bank: &WeightBank,
+        surface: &TransferSurface,
+        mismatch: Option<&MismatchBank>,
+    ) -> Option<Self> {
+        // Only the polynomial backend folds; the direct-device backend
+        // keeps the per-eval path.
+        let TransferSurface::Poly(fit) = surface else { return None };
+        let (p_len, c) = (bank.patch_len, bank.channels);
+        let mut k = vec![0.0f64; p_len * c * 2 * NA1];
+        for p in 0..p_len {
+            for ch in 0..c {
+                let wp = bank.get(p, ch);
+                for (rail, w) in [wp.pos, wp.neg].into_iter().enumerate() {
+                    if w <= 0.0 {
+                        continue;
+                    }
+                    let gain = mismatch.map_or(1.0, |m| m.gain(p, ch, rail));
+                    let mut wm = 1.0;
+                    let base = ((p * c + ch) * 2 + rail) * NA1;
+                    for m in 0..crate::analog::MW {
+                        wm *= w;
+                        for n in 0..NA1 {
+                            k[base + n] += fit.coeffs[m][n] * wm * gain;
+                        }
+                    }
+                }
+            }
+        }
+        Some(ActPoly { k, channels: c, patch_len: p_len })
+    }
+
+    /// Accumulate both phases of every channel for one receptive field.
+    /// `xpow` is the patch's power table: xpow[p * NA1 + n] = x_p^n.
+    /// Writes (pos, neg) per channel into `out` (len 2*C).
+    ///
+    /// Hot loop of the whole functional frontend: iterator/chunk form so
+    /// the compiler drops bounds checks and unrolls the NA1=4 dot
+    /// products (§Perf iteration 2: ~1.5x over the indexed form).
+    #[inline]
+    fn accumulate(&self, xpow: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        let row_len = self.channels * 2 * NA1;
+        for (xp, row) in xpow
+            .chunks_exact(NA1)
+            .zip(self.k.chunks_exact(row_len))
+        {
+            let (x0, x1, x2, x3) = (xp[0], xp[1], xp[2], xp[3]);
+            for (o, kk) in out.iter_mut().zip(row.chunks_exact(NA1)) {
+                *o += kk[0] * x0 + kk[1] * x1 + kk[2] * x2 + kk[3] * x3;
+            }
+        }
+    }
+}
+
+/// Per-frame processing statistics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrontendReport {
+    /// CDS double conversions performed (= h_o * w_o * c_o)
+    pub conversions: u64,
+    /// total ADC counter cycles across all conversions
+    pub adc_cycles: u64,
+    /// wall-clock conversion time [s] with one column-parallel SS-ADC per
+    /// output column: h_o * c_o serialised CDS conversions
+    pub adc_time_s: f64,
+    /// phases whose accumulated voltage exceeded the scaled ramp window
+    pub saturated_phases: u64,
+    /// activation bytes leaving the sensor (N_b bits per value)
+    pub output_bytes: u64,
+}
+
+/// The engine: weight bank + transfer surface + SS-ADC, channel-serial.
+pub struct FrontendEngine {
+    pub cfg: SystemConfig,
+    pub bank: WeightBank,
+    pub surface: TransferSurface,
+    pub adc: SsAdc,
+    /// per-channel BN gain A (realised as ramp slope)
+    pub bn_scale: Vec<f64>,
+    /// per-channel BN shift B (realised as counter preset)
+    pub bn_shift: Vec<f64>,
+    pub fidelity: Fidelity,
+    pub mismatch: Option<MismatchBank>,
+    /// folded weight-polynomial table (None for the direct-device
+    /// surface backend, which cannot fold)
+    act_poly: Option<ActPoly>,
+}
+
+impl FrontendEngine {
+    /// Build from trained first-layer weights (row-major theta[(p, c)])
+    /// and fused BN parameters.  Fails when shapes disagree with the
+    /// config or a BN gain cannot be realised as a ramp slope.
+    pub fn new(
+        cfg: SystemConfig,
+        theta: &[f32],
+        bn_scale: Vec<f64>,
+        bn_shift: Vec<f64>,
+        surface: TransferSurface,
+        fidelity: Fidelity,
+    ) -> Result<Self, String> {
+        cfg.validate().map_err(|e| e.to_string())?;
+        let p_len = cfg.hyper.patch_len();
+        let c = cfg.hyper.out_channels;
+        if theta.len() != p_len * c {
+            return Err(format!("theta has {} values, want {}", theta.len(), p_len * c));
+        }
+        if bn_scale.len() != c || bn_shift.len() != c {
+            return Err("bn parameter length mismatch".into());
+        }
+        // A negative BN gain cannot be a ramp slope — but the circuit
+        // realises it exactly by swapping the channel's rail tagging:
+        // A*(pos - neg) = |A|*(neg - pos), i.e. negate the channel's
+        // theta column and use |A|.  A zero gain is a dead channel; the
+        // ramp gets an epsilon slope (output = quantised preset only).
+        let mut theta_adj = theta.to_vec();
+        let mut bn_scale = bn_scale;
+        for (ch, a) in bn_scale.iter_mut().enumerate() {
+            if *a < 0.0 {
+                for p in 0..p_len {
+                    theta_adj[p * c + ch] = -theta_adj[p * c + ch];
+                }
+                *a = -*a;
+            } else if *a == 0.0 {
+                *a = 1e-9;
+            }
+        }
+        let bank = WeightBank::from_theta(&theta_adj, p_len, c, None);
+        let adc = SsAdc::new(cfg.adc);
+        let act_poly = ActPoly::build(&bank, &surface, None);
+        Ok(FrontendEngine {
+            cfg,
+            bank,
+            surface,
+            adc,
+            bn_scale,
+            bn_shift,
+            fidelity,
+            mismatch: None,
+            act_poly,
+        })
+    }
+
+    /// Attach mismatch gains (event-accurate Monte-Carlo runs).
+    pub fn with_mismatch(mut self, model: &VariationModel, seed: u64) -> Self {
+        let mm = MismatchBank::sample(&self.bank, &self.surface, model, seed);
+        self.act_poly = ActPoly::build(&self.bank, &self.surface, Some(&mm));
+        self.mismatch = Some(mm);
+        self
+    }
+
+    /// Disable the folded-polynomial fast path (reference/bench mode —
+    /// used to verify and to measure the §Perf optimisation).
+    #[doc(hidden)]
+    pub fn with_fold_disabled(mut self) -> Self {
+        self.act_poly = None;
+        self
+    }
+
+    /// Conversion-window check (see `adc::ss_adc` docs): the worst-case
+    /// per-phase swing of each channel, scaled by its BN gain, must fit
+    /// the ramp.  Returns per-channel headroom (>= 1.0 is safe).
+    pub fn operating_headroom(&self) -> Vec<f64> {
+        let c = self.cfg.hyper.out_channels;
+        (0..c)
+            .map(|ch| {
+                let swing_pos: f64 =
+                    self.bank.pos_column(ch).iter().map(|&w| self.surface.eval(w, 1.0)).sum();
+                let swing_neg: f64 =
+                    self.bank.neg_column(ch).iter().map(|&w| self.surface.eval(w, 1.0)).sum();
+                let swing = swing_pos.max(swing_neg).max(1e-12);
+                self.cfg.adc.full_scale / (self.bn_scale[ch] * swing)
+            })
+            .collect()
+    }
+
+    /// One phase's column-line accumulation for (patch, channel, rail).
+    #[inline]
+    fn phase_sum(&self, patch: &[f64], ch: usize, rail: usize) -> f64 {
+        let mut acc = 0.0;
+        for (p, &x) in patch.iter().enumerate() {
+            let wp = self.bank.get(p, ch);
+            let w = if rail == 0 { wp.pos } else { wp.neg };
+            if w > 0.0 {
+                let mut f = self.surface.eval(w, x);
+                if let Some(mm) = &self.mismatch {
+                    f *= mm.gain(p, ch, rail);
+                }
+                acc += f;
+            }
+        }
+        acc
+    }
+
+    /// Process one frame: (h, w, 3) photodiode currents ->
+    /// (h_o, w_o, c_o) dequantised activations + report.
+    pub fn process(&self, image: &Image) -> (Image, FrontendReport) {
+        self.process_traced(image, None)
+    }
+
+    /// Like [`process`], optionally tracing the first receptive field's
+    /// first channel conversion (Fig. 4 regeneration).
+    pub fn process_traced(
+        &self,
+        image: &Image,
+        mut trace: Option<&mut WaveformTrace>,
+    ) -> (Image, FrontendReport) {
+        let k = self.cfg.hyper.kernel_size;
+        assert_eq!(image.h, self.cfg.sensor.rows, "frame height");
+        assert_eq!(image.w, self.cfg.sensor.cols, "frame width");
+        assert_eq!(image.c, 3, "frame channels");
+        let (ho, wo, c) = self.cfg.out_dims();
+        let p_len = self.cfg.hyper.patch_len();
+        let lsb = self.cfg.adc.lsb();
+
+        let mut out = Image::zeros(ho, wo, c);
+        let mut report = FrontendReport::default();
+        let mut patch = vec![0.0f64; p_len];
+        // Hot-path scratch: per-pixel x-power table + per-channel phase sums.
+        let mut xpow = vec![0.0f64; p_len * NA1];
+        let mut sums = vec![0.0f64; 2 * c];
+
+        for oy in 0..ho {
+            for ox in 0..wo {
+                // Phase 1 (reset) + pixel wiring: gather the receptive
+                // field in (ky, kx, ch) order — the manifest order shared
+                // with the JAX patch extractor.
+                let mut i = 0;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        for ic in 0..3 {
+                            patch[i] = image.get(oy * k + ky, ox * k + kx, ic) as f64;
+                            i += 1;
+                        }
+                    }
+                }
+                // Fast path: folded weight polynomials (see ActPoly).
+                let fast = self.act_poly.is_some();
+                if fast {
+                    for (p, &x) in patch.iter().enumerate() {
+                        let row = &mut xpow[p * NA1..p * NA1 + NA1];
+                        row[0] = 1.0;
+                        for n in 1..NA1 {
+                            row[n] = row[n - 1] * x;
+                        }
+                    }
+                    self.act_poly.as_ref().unwrap().accumulate(&xpow, &mut sums);
+                }
+                // Phase 2+3, channel-serial.
+                for ch in 0..c {
+                    let (pos, neg) = if fast {
+                        (sums[ch * 2], sums[ch * 2 + 1])
+                    } else {
+                        (self.phase_sum(&patch, ch, 0), self.phase_sum(&patch, ch, 1))
+                    };
+                    let code = match self.fidelity {
+                        Fidelity::Functional => {
+                            // Matches the JAX golden model bit-for-bit:
+                            // f32 arithmetic, combined quantisation.
+                            let y = self.bn_scale[ch] as f32 * (pos as f32 - neg as f32)
+                                + self.bn_shift[ch] as f32;
+                            report.adc_cycles += 2 * (1 << self.cfg.adc.n_bits);
+                            self.adc.quantize(y as f64)
+                        }
+                        Fidelity::EventAccurate => {
+                            let scaled_fs = self.cfg.adc.full_scale / self.bn_scale[ch];
+                            if pos > scaled_fs {
+                                report.saturated_phases += 1;
+                            }
+                            if neg > scaled_fs {
+                                report.saturated_phases += 1;
+                            }
+                            let tr = if oy == 0 && ox == 0 && ch == 0 {
+                                trace.as_deref_mut()
+                            } else {
+                                None
+                            };
+                            let conv = self.adc.convert_cds(
+                                pos,
+                                neg,
+                                self.bn_scale[ch],
+                                self.bn_shift[ch],
+                                tr,
+                            );
+                            report.adc_cycles += conv.cycles;
+                            conv.code
+                        }
+                    };
+                    report.conversions += 1;
+                    out.set(oy, ox, ch, (code as f64 * lsb) as f32);
+                }
+            }
+        }
+        // One column-parallel SS-ADC per output column: h_o * c_o CDS
+        // conversions serialised per ADC (paper Table 5: 112*8 double
+        // ramps at 2 GHz / 2^8 -> 0.229 ms for the 560 model).
+        report.adc_time_s = (ho * c) as f64 * self.adc.cds_time_s();
+        report.output_bytes =
+            (report.conversions * self.cfg.adc.n_bits as u64).div_ceil(8);
+        (out, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::prop_assert;
+    use crate::sensor::{SceneGen, Split};
+    use crate::util::prop::Prop;
+
+    fn theta(p_len: usize, c: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed(seed);
+        (0..p_len * c).map(|_| rng.range(-0.8, 0.8) as f32).collect()
+    }
+
+    fn engine(res: usize, fidelity: Fidelity) -> FrontendEngine {
+        let cfg = SystemConfig::for_resolution(res);
+        let p = cfg.hyper.patch_len();
+        let c = cfg.hyper.out_channels;
+        FrontendEngine::new(
+            cfg,
+            &theta(p, c, 1),
+            vec![1.0; c],
+            vec![0.5; c],
+            TransferSurface::load_default(),
+            fidelity,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn output_dims_match_config() {
+        let e = engine(20, Fidelity::Functional);
+        let img = SceneGen::new(20, 0).image(1, 0, Split::Train);
+        let (acts, report) = e.process(&img);
+        assert_eq!((acts.h, acts.w, acts.c), (4, 4, 8));
+        assert_eq!(report.conversions, 4 * 4 * 8);
+        assert_eq!(report.output_bytes, 4 * 4 * 8); // 8-bit codes
+    }
+
+    #[test]
+    fn outputs_are_quantised_codes() {
+        let e = engine(20, Fidelity::Functional);
+        let img = SceneGen::new(20, 3).image(0, 1, Split::Train);
+        let (acts, _) = e.process(&img);
+        let lsb = e.cfg.adc.lsb() as f32;
+        for &v in &acts.data {
+            let code = v / lsb;
+            assert!((code - code.round()).abs() < 1e-3);
+            assert!((0.0..=255.0).contains(&code));
+        }
+    }
+
+    #[test]
+    fn event_close_to_functional() {
+        let f = engine(20, Fidelity::Functional);
+        let ev = engine(20, Fidelity::EventAccurate);
+        let img = SceneGen::new(20, 5).image(1, 2, Split::Train);
+        let (af, _) = f.process(&img);
+        let (ae, re) = ev.process(&img);
+        let lsb = f.cfg.adc.lsb() as f32;
+        for (a, b) in af.data.iter().zip(&ae.data) {
+            assert!((a - b).abs() <= 2.5 * lsb, "functional={a} event={b}");
+        }
+        assert_eq!(re.saturated_phases, 0);
+    }
+
+    #[test]
+    fn zero_image_gives_preset_only() {
+        let e = engine(20, Fidelity::Functional);
+        let img = Image::zeros(20, 20, 3);
+        let (acts, _) = e.process(&img);
+        // x = 0 everywhere: f(w, 0) is small but non-zero for placed
+        // transistors; the dominant term is the preset 0.5.  All outputs
+        // must be near round(0.5/lsb)*lsb within a few LSB.
+        let lsb = e.cfg.adc.lsb() as f32;
+        let preset = (0.5f32 / lsb).round() * lsb;
+        for &v in &acts.data {
+            assert!((v - preset).abs() < 6.0 * lsb, "v={v} preset={preset}");
+        }
+    }
+
+    #[test]
+    fn headroom_reports_window() {
+        let e = engine(20, Fidelity::Functional);
+        for h in e.operating_headroom() {
+            assert!(h > 1.0, "trained-range weights must fit the window: {h}");
+        }
+        // Cranked BN gain blows the window.
+        let cfg = SystemConfig::for_resolution(20);
+        let p = cfg.hyper.patch_len();
+        let c = cfg.hyper.out_channels;
+        let e2 = FrontendEngine::new(
+            cfg,
+            &vec![1.0; p * c], // all weights at max
+            vec![3.0; c],
+            vec![0.0; c],
+            TransferSurface::load_default(),
+            Fidelity::Functional,
+        )
+        .unwrap();
+        assert!(e2.operating_headroom().iter().all(|&h| h < 1.0));
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_gains() {
+        let cfg = SystemConfig::for_resolution(20);
+        let c = cfg.hyper.out_channels;
+        let surface = TransferSurface::load_default();
+        assert!(FrontendEngine::new(
+            cfg.clone(),
+            &[0.0; 10],
+            vec![1.0; c],
+            vec![0.0; c],
+            surface.clone(),
+            Fidelity::Functional
+        )
+        .is_err());
+        let p = cfg.hyper.patch_len();
+        assert!(FrontendEngine::new(
+            cfg,
+            &vec![0.0; p * c],
+            vec![1.0; c - 1],
+            vec![0.0; c - 1],
+            surface,
+            Fidelity::Functional
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn negative_bn_gain_swaps_rails() {
+        // A*(pos-neg) = |A|*(neg-pos): channels with negative BN gain are
+        // realised by re-tagging their rails, bit-identically.
+        let cfg = SystemConfig::for_resolution(10);
+        let p = cfg.hyper.patch_len();
+        let c = cfg.hyper.out_channels;
+        let th = theta(p, c, 17);
+        let surface = TransferSurface::load_default();
+        let shift = vec![5.0; c];
+        let pos_gain = FrontendEngine::new(
+            cfg.clone(),
+            &th.iter().map(|v| -v).collect::<Vec<_>>(),
+            vec![0.7; c],
+            shift.clone(),
+            surface.clone(),
+            Fidelity::Functional,
+        )
+        .unwrap();
+        let neg_gain = FrontendEngine::new(
+            cfg,
+            &th,
+            vec![-0.7; c],
+            shift,
+            surface,
+            Fidelity::Functional,
+        )
+        .unwrap();
+        let img = SceneGen::new(10, 5).image(1, 1, Split::Train);
+        let (a, _) = pos_gain.process(&img);
+        let (b, _) = neg_gain.process(&img);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn adc_time_matches_paper_formula() {
+        // h_o * c_o double conversions serialised per column ADC.
+        let e = engine(20, Fidelity::Functional);
+        let img = Image::zeros(20, 20, 3);
+        let (_, r) = e.process(&img);
+        let expected = 4.0 * 8.0 * 2.0 * 256.0 / 2.0e9;
+        assert!((r.adc_time_s - expected).abs() < 1e-15);
+    }
+
+    #[test]
+    fn paper_scale_adc_time_is_0p229ms() {
+        // The Table 5 check: 560x560 input -> 112x112x8 output,
+        // T_adc = 112 * 8 * 2 * 2^8 / 2 GHz = 0.229 ms.
+        let cfg = SystemConfig::for_resolution(560);
+        let (ho, _, c) = cfg.out_dims();
+        let adc = SsAdc::new(cfg.adc);
+        let t = (ho * c) as f64 * adc.cds_time_s();
+        assert!((t - 0.229e-3).abs() < 0.001e-3, "{t}");
+    }
+
+    #[test]
+    fn mismatch_perturbs_but_preserves_structure() {
+        let base = engine(20, Fidelity::EventAccurate);
+        let noisy = engine(20, Fidelity::EventAccurate)
+            .with_mismatch(&VariationModel::default(), 42);
+        let img = SceneGen::new(20, 9).image(1, 7, Split::Train);
+        let (a, _) = base.process(&img);
+        let (b, _) = noisy.process(&img);
+        assert_ne!(a, b, "mismatch must change codes somewhere");
+        let lsb = base.cfg.adc.lsb() as f32;
+        let max_dev = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_dev < 20.0 * lsb, "2% mismatch should stay bounded: {max_dev}");
+    }
+
+    #[test]
+    fn folded_fast_path_matches_reference_path() {
+        // §Perf optimisation 1 must be a pure refactor: the folded
+        // ActPoly accumulation equals the per-eval phase_sum path
+        // code-for-code (identical surface, identical weights).
+        for fidelity in [Fidelity::Functional, Fidelity::EventAccurate] {
+            let fast = engine(20, fidelity);
+            assert!(fast.act_poly.is_some(), "poly surface should fold");
+            let slow = engine(20, fidelity).with_fold_disabled();
+            let img = SceneGen::new(20, 21).image(1, 4, Split::Train);
+            let (a, _) = fast.process(&img);
+            let (b, _) = slow.process(&img);
+            let lsb = fast.cfg.adc.lsb() as f32;
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() <= lsb * 1.001, "fast {x} vs slow {y}");
+            }
+            let same = a.data.iter().zip(&b.data).filter(|(x, y)| x == y).count();
+            assert!(
+                same as f64 / a.data.len() as f64 > 0.95,
+                "fold changed too many codes: {same}/{}",
+                a.data.len()
+            );
+        }
+    }
+
+    #[test]
+    fn folded_fast_path_matches_with_mismatch() {
+        let fast = engine(10, Fidelity::EventAccurate)
+            .with_mismatch(&VariationModel::default(), 5);
+        let slow = engine(10, Fidelity::EventAccurate)
+            .with_mismatch(&VariationModel::default(), 5)
+            .with_fold_disabled();
+        let img = SceneGen::new(10, 3).image(0, 1, Split::Train);
+        let (a, _) = fast.process(&img);
+        let (b, _) = slow.process(&img);
+        let lsb = fast.cfg.adc.lsb() as f32;
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= lsb * 1.001, "fast {x} vs slow {y}");
+        }
+    }
+
+    #[test]
+    fn functional_linear_in_preset() {
+        // Within the unclamped region, +1 LSB of preset = +1 code.
+        Prop::new("preset shifts codes").cases(16).run(|rng| {
+            let cfg = SystemConfig::for_resolution(10);
+            let p = cfg.hyper.patch_len();
+            let c = cfg.hyper.out_channels;
+            let lsb = cfg.adc.lsb();
+            let th = theta(p, c, rng.next_u64());
+            let surface = TransferSurface::load_default();
+            let mk = |shift: f64| {
+                FrontendEngine::new(
+                    cfg.clone(),
+                    &th,
+                    vec![1.0; c],
+                    vec![shift; c],
+                    surface.clone(),
+                    Fidelity::Functional,
+                )
+                .unwrap()
+            };
+            let img = SceneGen::new(10, rng.next_u64()).image(1, 0, Split::Train);
+            let s0 = 5.0 * lsb;
+            let (a, _) = mk(s0).process(&img);
+            let (b, _) = mk(s0 + lsb).process(&img);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                let (cx, cy) = ((x / lsb as f32).round(), (y / lsb as f32).round());
+                if cx > 0.0 && cx < 250.0 {
+                    prop_assert!((cy - cx - 1.0).abs() < 1.01, "cx={cx} cy={cy}");
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,24 @@
+//! The P2M in-pixel frontend engine: the first CNN layer executed *inside*
+//! the sensor (paper Sections 3.2-3.3).
+//!
+//! Channel-serial schedule, three phases per (receptive field, channel):
+//!
+//! 1. **Reset** — the X*Y*3 pixel set is pre-charged;
+//! 2. **Multi-pixel convolution** — the channel's select line activates
+//!    one weight transistor per pixel; the column line accumulates
+//!    `sum_p f(w[p,c], x[p])`, sampled twice (positive rails high, then
+//!    negative rails high);
+//! 3. **ReLU** — the SS-ADC/CDS latches `clamp(preset + up - down)`.
+//!
+//! Two execution modes sharing the same weight bank and transfer surface:
+//!
+//! * [`Fidelity::Functional`] — combined arithmetic quantisation, matching
+//!   the JAX/Pallas golden model bit-for-bit (integration-tested against
+//!   the exported frontend HLO);
+//! * [`Fidelity::EventAccurate`] — true per-phase SS-ADC counting with
+//!   optional mismatch injection and waveform tracing; deviates from
+//!   functional by bounded per-phase quantisation effects.
+
+pub mod engine;
+
+pub use engine::{Fidelity, FrontendEngine, FrontendReport};

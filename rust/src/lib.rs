@@ -1,0 +1,31 @@
+//! # P2M — Processing-in-Pixel-in-Memory for TinyML
+//!
+//! Full-system reproduction of Datta et al., *"P2M: A
+//! Processing-in-Pixel-in-Memory Paradigm for Resource-Constrained TinyML
+//! Applications"* (2022).
+//!
+//! The crate is the **layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * layer 1 — Pallas kernels (`python/compile/kernels/`): the in-pixel
+//!   convolution as a functional golden model, AOT-lowered to HLO text;
+//! * layer 2 — JAX model (`python/compile/model.py`): P2M-MobileNetV2,
+//!   AOT-lowered frontend / backbone / train-step artifacts;
+//! * layer 3 — this crate: circuit-accurate sensor + analog + SS-ADC
+//!   simulation, the smart-camera pipeline (scheduler, batcher,
+//!   backpressure), the PJRT runtime that executes the AOT artifacts,
+//!   and the paper's energy/delay/bandwidth models.
+//!
+//! See `DESIGN.md` for the module inventory and the per-experiment index.
+pub mod adc;
+pub mod analog;
+pub mod baseline;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod frontend;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sensor;
+pub mod util;

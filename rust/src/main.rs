@@ -1,0 +1,605 @@
+//! `p2m` — the paper-reproduction CLI.
+//!
+//! One subcommand per table/figure of the paper (see DESIGN.md §4 for the
+//! experiment index), plus `headline` for the abstract's numbers and
+//! `info` for artifact status.  Hand-rolled arg parsing (clap is not in
+//! the offline vendor set).
+
+use std::collections::BTreeMap;
+
+use p2m::adc::{SsAdc, WaveformTrace};
+use p2m::analog::{DeviceParams, TransferSurface};
+use p2m::compression;
+use p2m::config::{AdcConfig, HyperParams, SystemConfig};
+use p2m::energy::{DelayConstants, EnergyConstants, PipelineKind, PipelineModel};
+use p2m::frontend::{Fidelity, FrontendEngine};
+use p2m::model::{analyse, table2_rows, ArchConfig};
+use p2m::report::{f, render_csv, render_table};
+use p2m::util::json::Json;
+use p2m::util::stats::correlation;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<&str> = args.iter().skip(1).map(String::as_str).collect();
+    let result = match cmd {
+        "fig3" => fig3(&rest),
+        "fig4" => fig4(&rest),
+        "table1" => table1(),
+        "table2" => table2(),
+        "table3" => table3(),
+        "table4" => table4(),
+        "table5" => table5(),
+        "fig7a" => fig7("fig7a", "in-pixel output bit-precision sweep (paper Fig. 7a)"),
+        "fig7b" => fig7("fig7b", "channels x kernel/stride sweep (paper Fig. 7b)"),
+        "fig8" => fig8(),
+        "headline" => headline(),
+        "ablation" => fig7("ablation", "co-design ablation (paper Section 5.2)"),
+        "nvm" => nvm(),
+        "area" => area(),
+        "mismatch" => mismatch(&rest),
+        "info" => info(),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn help() {
+    println!(
+        "p2m — Processing-in-Pixel-in-Memory paper reproduction
+
+usage: p2m <command>
+
+commands (one per paper table/figure):
+  fig3      pixel transfer surface + W*I scatter correlation (Fig. 3a/3b)
+  fig4      SS-ADC / CDS timing waveforms as CSV (Fig. 4a/4b)
+  table1    co-design hyper-parameters (Table 1)
+  table2    MAdds / peak-memory analytics + accuracy (Table 2)
+  table3    comparison with SOTA VWW models (Table 3)
+  table4    component energy constants (Table 4)
+  table5    delay-model constants (Table 5)
+  fig7a     quantisation sweep results (Fig. 7a; run `make experiments`)
+  fig7b     channel/kernel sweep results (Fig. 7b; run `make experiments`)
+  ablation  co-design ablation results (Section 5.2)
+  fig8      normalised energy/delay comparison (Fig. 8a/8b)
+  headline  BR / energy / delay / EDP headline numbers (abstract, §5.3)
+  nvm       emerging weight-memory comparison (paper Section 3.4)
+  area      heterogeneous-integration area feasibility (Section 3.4, Fig. 5)
+  mismatch  Monte-Carlo accuracy vs process variation (robustness study)
+  info      artifact + environment status
+
+examples (cargo run --release --example <name>):
+  quickstart, train_vww, serve_camera, design_space"
+    );
+}
+
+fn fig3(rest: &[&str]) -> anyhow::Result<()> {
+    let n = rest
+        .iter()
+        .position(|&a| a == "--grid")
+        .and_then(|i| rest.get(i + 1))
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(9);
+    let p = DeviceParams::default();
+    let (w_axis, a_axis, grid) = p2m::analog::device::sample_grid(&p, n, n);
+
+    // Fig 3a: the surface.
+    let mut rows = Vec::new();
+    for (i, &w) in w_axis.iter().enumerate() {
+        for (j, &a) in a_axis.iter().enumerate() {
+            rows.push(vec![f(w), f(a), format!("{:.6}", grid[i][j])]);
+        }
+    }
+    println!("{}", render_csv(&["w_norm", "act_norm", "v_out_volts"], &rows));
+
+    // Fig 3b: correlation with the ideal product.
+    let mut vs = Vec::new();
+    let mut prod = Vec::new();
+    for (i, &w) in w_axis.iter().enumerate().skip(1) {
+        for (j, &a) in a_axis.iter().enumerate() {
+            vs.push(grid[i][j]);
+            prod.push(w * a);
+        }
+    }
+    let c = correlation(&vs, &prod);
+    println!("# Fig 3b: corr(V_out, W x I) = {c:.4} (paper: 'approximate product')");
+    let surface = TransferSurface::load_default();
+    if surface.is_poly() {
+        println!("# curve fit loaded from artifacts/curve_fit.json");
+    } else {
+        println!("# curve fit not built; using direct device model");
+    }
+    Ok(())
+}
+
+fn fig4(_rest: &[&str]) -> anyhow::Result<()> {
+    let adc = SsAdc::new(AdcConfig::default());
+    let mut trace = WaveformTrace::default();
+    let lsb = adc.cfg.lsb();
+    // Representative conversion: positive phase 23 LSB, negative 9 LSB,
+    // BN preset +4 LSB (Fig. 4a's double sampling).
+    let conv = adc.convert_cds(23.0 * lsb, 9.0 * lsb, 1.0, 4.0 * lsb, Some(&mut trace));
+    println!("{}", trace.to_csv());
+    println!(
+        "# CDS result: code {} (raw {}), {} counter cycles @ {} GHz",
+        conv.code,
+        conv.raw,
+        conv.cycles,
+        adc.cfg.clock_hz / 1e9
+    );
+    Ok(())
+}
+
+fn table1() -> anyhow::Result<()> {
+    let h = HyperParams::default();
+    let rows = vec![
+        vec!["kernel size of the convolutional layer (k)".into(), h.kernel_size.to_string()],
+        vec!["padding of the convolutional layer (p)".into(), h.padding.to_string()],
+        vec!["stride of the convolutional layer (s)".into(), h.stride.to_string()],
+        vec!["number of output channels (c_o)".into(), h.out_channels.to_string()],
+        vec!["bit-precision of the P2M layer output (N_b)".into(), h.n_bits.to_string()],
+    ];
+    println!(
+        "{}",
+        render_table("Table 1 — P2M co-design hyper-parameters", &["hyperparameter", "value"], &rows)
+    );
+    Ok(())
+}
+
+fn table2() -> anyhow::Result<()> {
+    // Paper accuracy entries (measured on the real VWW dataset; our
+    // synthetic-task accuracies live in results/ when trained).
+    let paper_acc: BTreeMap<(usize, &str), f64> = [
+        ((560usize, "baseline"), 91.37),
+        ((560, "p2m_custom"), 89.90),
+        ((225, "baseline"), 90.56),
+        ((225, "p2m_custom"), 84.30),
+        ((115, "baseline"), 91.10),
+        ((115, "p2m_custom"), 80.00),
+    ]
+    .into_iter()
+    .collect();
+    let rows: Vec<Vec<String>> = table2_rows()
+        .iter()
+        .map(|r| {
+            vec![
+                r.resolution.to_string(),
+                r.model.to_string(),
+                paper_acc
+                    .get(&(r.resolution, r.model))
+                    .map(|a| format!("{a:.2}"))
+                    .unwrap_or_default(),
+                f(r.madds_g),
+                f(r.peak_memory_mb),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Table 2 — VWW models (accuracy = paper-reported; MAdds/memory = our analytics)",
+            &["resolution", "model", "paper acc %", "MAdds (G)", "peak mem (MB)"],
+            &rows
+        )
+    );
+    println!("(our measured synthetic-VWW accuracies: `p2m ablation` / results/*.json)");
+    Ok(())
+}
+
+fn table3() -> anyhow::Result<()> {
+    let rows = vec![
+        vec!["Saha et al. 2020".into(), "RNNPool".into(), "MobileNetV2".into(), "89.65".into()],
+        vec!["Han et al. 2019".into(), "ProxylessNAS".into(), "non-standard".into(), "90.27".into()],
+        vec!["Banbury et al. 2021".into(), "Differentiable NAS".into(), "MobileNet-V2".into(), "88.75".into()],
+        vec!["Zhou et al. 2021".into(), "Analog CiM".into(), "MobileNet-V2".into(), "85.70".into()],
+        vec!["P2M (paper)".into(), "this paradigm".into(), "MobileNet-V2".into(), "89.90".into()],
+    ];
+    println!(
+        "{}",
+        render_table(
+            "Table 3 — VWW SOTA comparison (paper-reported values)",
+            &["authors", "description", "architecture", "test acc %"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn table4() -> anyhow::Result<()> {
+    let e = EnergyConstants::default();
+    let pj = |v: f64| format!("{:.2}", v * 1e12);
+    let rows = vec![
+        vec!["P2M (ours)".into(), pj(e.e_pix_p2m), pj(e.e_adc_p2m), pj(e.e_com), pj(e.e_mac), "112x112x8".into()],
+        vec!["Baseline (C)".into(), pj(e.e_pix_baseline), pj(e.e_adc_baseline_c), pj(e.e_com), pj(e.e_mac), "560x560x3".into()],
+        vec!["Baseline (NC)".into(), pj(e.e_pix_baseline), pj(e.e_adc_baseline_nc), pj(e.e_com), pj(e.e_mac), "560x560x3".into()],
+    ];
+    println!(
+        "{}",
+        render_table(
+            "Table 4 — component energies (pJ, 22nm)",
+            &["model type", "sensing", "ADC", "SoC comm", "MAdd", "sensor output"],
+            &rows
+        )
+    );
+    let implied = p2m::energy::scale_energy(e.e_mac, 22, 45).unwrap();
+    println!(
+        "(e_mac scaled 45nm->22nm via Stillmaker-Baas; implied 45nm value {:.2} pJ)",
+        implied * 1e12
+    );
+    Ok(())
+}
+
+fn table5() -> anyhow::Result<()> {
+    let d = DelayConstants::default();
+    let rows = vec![
+        vec!["B_IO (I/O band-width)".into(), d.b_io.to_string()],
+        vec!["B_W (weight bit-width)".into(), d.b_w.to_string()],
+        vec!["N_bank (memory banks)".into(), d.n_bank.to_string()],
+        vec!["N_mult (multipliers)".into(), d.n_mult.to_string()],
+        vec!["T_sens P2M (ms)".into(), f(d.t_sens_p2m * 1e3)],
+        vec!["T_sens baseline (ms)".into(), f(d.t_sens_baseline * 1e3)],
+        vec!["T_adc P2M (ms)".into(), f(d.t_adc_p2m * 1e3)],
+        vec!["T_adc baseline (ms)".into(), f(d.t_adc_baseline * 1e3)],
+        vec!["t_mult (ns)".into(), f(d.t_mult * 1e9)],
+        vec!["t_read (ns)".into(), f(d.t_read * 1e9)],
+    ];
+    println!("{}", render_table("Table 5 — delay-model constants", &["notation", "value"], &rows));
+    // Cross-check: our column-parallel SS-ADC model reproduces T_adc.
+    let cfg = SystemConfig::for_resolution(560);
+    let (ho, _, c) = cfg.out_dims();
+    let t = (ho * c) as f64 * SsAdc::new(cfg.adc).cds_time_s();
+    println!(
+        "(cross-check: 112 rows x 8 ch x 2 ramps x 2^8 / 2GHz = {:.3} ms vs Table 5's 0.229 ms)",
+        t * 1e3
+    );
+    Ok(())
+}
+
+fn fig7(name: &str, title: &str) -> anyhow::Result<()> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("results")
+        .join(format!("{name}.json"));
+    if !path.exists() {
+        println!("== {title} ==");
+        println!("results/{name}.json not found — run `make experiments` (python training sweeps)");
+        return Ok(());
+    }
+    let v = Json::parse(&std::fs::read_to_string(&path)?).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rows: Vec<Vec<String>> = v
+        .get("rows")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|r| r.as_arr())
+        .map(|r| {
+            r.iter()
+                .map(|c| match c {
+                    Json::Str(s) => s.clone(),
+                    Json::Num(n) => f(*n),
+                    other => other.dump(),
+                })
+                .collect()
+        })
+        .collect();
+    let header: Vec<String> = v
+        .get("header")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|h| h.as_str().map(str::to_string))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    println!("{}", render_table(title, &header_refs, &rows));
+    if let Some(note) = v.get("note").and_then(Json::as_str) {
+        println!("{note}");
+    }
+    Ok(())
+}
+
+fn fig8() -> anyhow::Result<()> {
+    let e = EnergyConstants::default();
+    let d = DelayConstants::default();
+    let kinds = [
+        ("P2M", PipelineKind::P2m),
+        ("Baseline (C)", PipelineKind::BaselineCompressed),
+        ("Baseline (NC)", PipelineKind::BaselineNonCompressed),
+    ];
+    let models: Vec<(&str, PipelineModel)> =
+        kinds.iter().map(|&(n, k)| (n, PipelineModel::from_paper_reported(k))).collect();
+    let e_max = models.iter().map(|(_, m)| m.energy(&e).total()).fold(0.0, f64::max);
+    let d_max = models.iter().map(|(_, m)| m.delay(&d).total_sequential()).fold(0.0, f64::max);
+
+    let rows: Vec<Vec<String>> = models
+        .iter()
+        .map(|(n, m)| {
+            let eb = m.energy(&e);
+            let db = m.delay(&d);
+            vec![
+                n.to_string(),
+                f(eb.e_sens / e_max),
+                f(eb.e_com / e_max),
+                f(eb.e_mac / e_max),
+                f(eb.total() / e_max),
+                f((db.t_sens + db.t_adc) / d_max),
+                f(db.t_conv / d_max),
+                f(db.total_sequential() / d_max),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Fig. 8 — normalised energy (a) and delay (b), paper-reported workloads",
+            &["model", "E_sens", "E_com", "E_soc", "E_total", "T_sens+adc", "T_conv", "T_total"],
+            &rows
+        )
+    );
+
+    // Also from our own architecture descriptors.
+    let ours: Vec<(&str, PipelineModel)> = vec![
+        ("P2M (our arch)", PipelineModel::from_arch(PipelineKind::P2m, &ArchConfig::paper_p2m(560))),
+        (
+            "Baseline (our arch)",
+            PipelineModel::from_arch(PipelineKind::BaselineCompressed, &ArchConfig::paper_baseline(560)),
+        ),
+    ];
+    let rows2: Vec<Vec<String>> = ours
+        .iter()
+        .map(|(n, m)| {
+            vec![
+                n.to_string(),
+                format!("{:.1}", m.energy(&e).total() * 1e6),
+                format!("{:.2}", m.delay(&d).total_sequential() * 1e3),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "same model, our architecture descriptors",
+            &["pipeline", "energy (µJ)", "delay (ms)"],
+            &rows2
+        )
+    );
+    Ok(())
+}
+
+fn headline() -> anyhow::Result<()> {
+    let h = HyperParams::default();
+    let br = compression::bandwidth_reduction(&h, 560, 12);
+    let e = EnergyConstants::default();
+    let d = DelayConstants::default();
+    let p2m = PipelineModel::from_paper_reported(PipelineKind::P2m);
+    let base = PipelineModel::from_paper_reported(PipelineKind::BaselineCompressed);
+    let energy_ratio = base.energy(&e).total() / p2m.energy(&e).total();
+    let delay_ratio = base.delay(&d).total_sequential() / p2m.delay(&d).total_sequential();
+    let edp_seq = base.edp(&e, &d, true) / p2m.edp(&e, &d, true);
+    let edp_ov = base.edp(&e, &d, false) / p2m.edp(&e, &d, false);
+    let rows = vec![
+        vec!["bandwidth reduction (Eq. 2)".into(), "~21x".into(), format!("{br:.2}x")],
+        vec!["energy reduction".into(), "up to 7.81x".into(), format!("{energy_ratio:.2}x")],
+        vec!["delay reduction".into(), "up to 2.15x".into(), format!("{delay_ratio:.2}x")],
+        vec!["EDP (sequential)".into(), "16.76x".into(), format!("{edp_seq:.2}x")],
+        vec!["EDP (max-overlap)".into(), "~11x".into(), format!("{edp_ov:.2}x")],
+    ];
+    println!(
+        "{}",
+        render_table("Headline claims — paper vs. this reproduction", &["claim", "paper", "ours"], &rows)
+    );
+    Ok(())
+}
+
+fn nvm() -> anyhow::Result<()> {
+    let h = HyperParams::default();
+    let rows: Vec<Vec<String>> = p2m::analog::tech_table(h.patch_len(), h.out_channels)
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:?}", r.tech),
+                r.levels.to_string(),
+                if r.programmable { "yes" } else { "no (mask)" }.into(),
+                if r.programmable {
+                    format!("{:.2} nJ", r.reprogram_energy_j * 1e9)
+                } else {
+                    "-".into()
+                },
+                if r.programmable {
+                    format!("{:.2} µs", r.reprogram_time_s * 1e6)
+                } else {
+                    "-".into()
+                },
+                format!("{:.4}", r.rms_error_1s),
+                format!("{:.4}", r.rms_error_1yr),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Section 3.4 — weight-memory technologies for the P2M die (75x8 bank)",
+            &["technology", "levels", "programmable", "bank write E", "bank write T", "rms err @1s", "rms err @1yr"],
+            &rows
+        )
+    );
+    println!(
+        "ROM widths (the paper's primary proposal) are exact but frozen at tape-out;\n\
+         the NVM rows quantify what per-deployment programmability costs instead."
+    );
+    Ok(())
+}
+
+fn area() -> anyhow::Result<()> {
+    use p2m::model::{AreaModel, Integration};
+    let mut rows = Vec::new();
+    for pitch in [0.8, 1.2, 1.5, 2.0, 2.5] {
+        for (node, t_area) in [("22nm", 0.1), ("7nm", 0.03)] {
+            let m = AreaModel {
+                pixel_pitch_um: pitch,
+                transistor_area_um2: t_area,
+                ..AreaModel::default()
+            };
+            rows.push(vec![
+                format!("{pitch:.1} µm"),
+                node.into(),
+                format!("{:.0}%", 100.0 * m.utilisation(8)),
+                if m.fits(8) { "yes" } else { "NO" }.into(),
+                m.max_channels().to_string(),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            "Section 3.4 / Fig. 5 — weight die under the pixel (hybrid bond, c_o = 8)",
+            &["pixel pitch", "weight-die node", "util @ c_o=8", "fits?", "max c_o"],
+            &rows
+        )
+    );
+    let tsv = p2m::model::AreaModel {
+        integration: Integration::Tsv,
+        ..p2m::model::AreaModel::default()
+    };
+    println!(
+        "TSV integration at 1.5 µm pixels: fits = {} (5 µm via pitch > pixel pitch —\n\
+         why the paper prefers hybrid bonding for Bi-CIS)",
+        tsv.fits(8)
+    );
+    Ok(())
+}
+
+fn mismatch(rest: &[&str]) -> anyhow::Result<()> {
+    use p2m::coordinator::{run_pipeline, Metrics, PipelineConfig, SensorCompute};
+    use p2m::runtime::{ModelBundle, Runtime};
+
+    let frames: usize = rest
+        .iter()
+        .position(|&a| a == "--frames")
+        .and_then(|i| rest.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    let rt = Runtime::cpu()?;
+    let mut bundle = ModelBundle::load(&rt, 80)?;
+    let ckpt = std::path::Path::new("results/trained_80.ckpt");
+    let trained = ckpt.exists();
+    if trained {
+        bundle.load_checkpoint(ckpt)?;
+    }
+    println!(
+        "Monte-Carlo process variation on the in-pixel layer ({} weights; {} frames/point; {})",
+        75 * 8,
+        frames,
+        if trained { "trained checkpoint" } else { "UNTRAINED init weights — run `make e2e` first" }
+    );
+    let sp = bundle.stem_params()?;
+    let (scale, shift) = sp.fused_bn();
+    let mut rows = Vec::new();
+    for sigma_mult in [0.0, 0.5, 1.0, 2.0, 4.0] {
+        let mut accs = Vec::new();
+        let n_seeds = if sigma_mult == 0.0 { 1 } else { 3 };
+        for seed in 0..n_seeds {
+            let engine = FrontendEngine::new(
+                SystemConfig::for_resolution(80),
+                &sp.theta,
+                scale.clone(),
+                shift.clone(),
+                TransferSurface::load_default(),
+                Fidelity::EventAccurate,
+            )
+            .map_err(|e| anyhow::anyhow!(e))?;
+            let engine = if sigma_mult > 0.0 {
+                engine.with_mismatch(
+                    &p2m::analog::VariationModel::default().scaled(sigma_mult),
+                    seed + 100,
+                )
+            } else {
+                engine
+            };
+            let metrics = Metrics::new();
+            let stats = run_pipeline(
+                &mut bundle,
+                SensorCompute::P2m(engine),
+                &PipelineConfig { n_frames: frames, batch: 8, ..PipelineConfig::default() },
+                &metrics,
+            )?;
+            accs.push(stats.accuracy());
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let width_pct = 2.0 * sigma_mult; // default width sigma = 2%
+        rows.push(vec![
+            format!("{width_pct:.0}% width / {:.0} mV vth", 5.0 * sigma_mult),
+            format!("{:.1}", 100.0 * mean),
+            accs.iter().map(|a| format!("{:.1}", 100.0 * a)).collect::<Vec<_>>().join(" "),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            "accuracy vs mismatch sigma (event-accurate frontend, Monte-Carlo)",
+            &["mismatch (1-sigma)", "mean acc %", "per-seed"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn info() -> anyhow::Result<()> {
+    let dir = p2m::runtime::Manifest::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    match p2m::runtime::Manifest::load_default() {
+        Ok(m) => {
+            for (res, e) in &m.models {
+                println!(
+                    "  model {res}: {} artifacts, {} param leaves, stem {}x{}x{}",
+                    e.artifacts.len(),
+                    e.params.len(),
+                    e.stem_out,
+                    e.stem_out,
+                    e.stem_channels
+                );
+            }
+        }
+        Err(e) => println!("  not built ({e}); run `make artifacts`"),
+    }
+    let surface = TransferSurface::load_default();
+    println!(
+        "transfer surface: {} (v_fs = {:.4} V)",
+        if surface.is_poly() { "polynomial fit" } else { "device fallback" },
+        surface.v_full_scale()
+    );
+    match p2m::runtime::Runtime::cpu() {
+        Ok(rt) => println!("PJRT: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    // Sanity: a frontend engine on default config.
+    let cfg = SystemConfig::for_resolution(80);
+    let p_len = cfg.hyper.patch_len();
+    let c = cfg.hyper.out_channels;
+    let engine = FrontendEngine::new(
+        cfg,
+        &vec![0.1; p_len * c],
+        vec![1.0; c],
+        vec![0.0; c],
+        surface,
+        Fidelity::Functional,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    println!("frontend engine: ok (headroom {:?})", &engine.operating_headroom()[..2]);
+    let m = analyse(&ArchConfig::paper_p2m(560));
+    println!(
+        "paper-scale P2M model: {:.3} G MAdds, {:.3} MB peak",
+        m.madds as f64 / 1e9,
+        m.peak_memory_bytes as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,333 @@
+//! CNN architecture descriptors: MobileNetV2 with either the standard
+//! conv stem (baseline) or the P2M in-pixel stem (paper Section 5.1).
+//!
+//! These descriptors drive the *analytic* reproductions: MAdds and peak
+//! memory (Table 2), the SoC delay model (Eq. 7), and the energy model
+//! (Eq. 4-6).  The paper-scale models (560/225/115) are exact functions
+//! of the architecture, so no training is needed to regenerate those
+//! columns.
+
+/// One convolutional (or fully-connected) layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpec {
+    pub name: String,
+    /// kernel size (1 for pointwise / fc)
+    pub k: usize,
+    pub stride: usize,
+    /// groups == c_in for depthwise
+    pub groups: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    /// executed inside the pixel array (not on the SoC)
+    pub in_pixel: bool,
+}
+
+impl LayerSpec {
+    /// Multiply-accumulates (paper Eq. 5): h_o*w_o*k^2*(c_i/groups)*c_o.
+    pub fn n_mac(&self) -> u64 {
+        (self.h_out * self.w_out * self.k * self.k * (self.c_in / self.groups) * self.c_out)
+            as u64
+    }
+
+    /// Parameter reads (paper Eq. 6): k^2*(c_i/groups)*c_o.
+    pub fn n_read(&self) -> u64 {
+        (self.k * self.k * (self.c_in / self.groups) * self.c_out) as u64
+    }
+
+    pub fn in_elems(&self) -> u64 {
+        (self.h_in * self.w_in * self.c_in) as u64
+    }
+
+    pub fn out_elems(&self) -> u64 {
+        (self.h_out * self.w_out * self.c_out) as u64
+    }
+}
+
+/// Stem variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stem {
+    /// P2M in-pixel layer: k x k non-overlapping, c_o channels.
+    P2m { k: usize, c_o: usize },
+    /// Standard conv stem (k x k, stride s, c_o channels), on the SoC.
+    Conv { k: usize, s: usize, c_o: usize },
+}
+
+/// Whole-model descriptor.
+#[derive(Clone, Debug)]
+pub struct ArchConfig {
+    pub input: usize,
+    pub stem: Stem,
+    /// inverted-residual stack: (expansion t, channels c, repeats n, stride s)
+    pub blocks: Vec<(usize, usize, usize, usize)>,
+    pub head_channels: usize,
+    pub num_classes: usize,
+}
+
+impl ArchConfig {
+    /// The paper's baseline MobileNetV2 (Section 5.1): standard block
+    /// stack with a 32-channel stride-2 stem, 320-channel last conv, and
+    /// the last depthwise-separable block's channels cut 3x (320 -> 107,
+    /// the anti-overfitting tweak).
+    pub fn paper_baseline(input: usize) -> Self {
+        ArchConfig {
+            input,
+            stem: Stem::Conv { k: 3, s: 2, c_o: 32 },
+            blocks: vec![
+                (1, 16, 1, 1),
+                (6, 24, 2, 2),
+                (6, 32, 3, 2),
+                (6, 64, 4, 2),
+                (6, 96, 3, 1),
+                (6, 160, 3, 2),
+                (6, 107, 1, 1), // 320/3: the paper's anti-overfitting cut
+            ],
+            head_channels: 320,
+            num_classes: 2,
+        }
+    }
+
+    /// The paper's P2M custom model: in-pixel 5x5/5 stem with 8 channels
+    /// (Table 1).  The first inverted-residual block takes the stride-2
+    /// here (the stem only downsamples 5x vs. the baseline path's 2x+2x),
+    /// which is what makes Table 2's peak-memory figures work out: the
+    /// widest expansion tensor is 56x56x96 = 0.30 MB at 560 input.
+    pub fn paper_p2m(input: usize) -> Self {
+        let mut cfg = Self::paper_baseline(input);
+        cfg.stem = Stem::P2m { k: 5, c_o: 8 };
+        cfg.blocks[0] = (1, 16, 1, 2);
+        cfg
+    }
+
+    /// The scaled config actually trained in this repo (matches
+    /// python `model.ModelConfig` so analytic and measured agree).
+    pub fn repo_p2m(input: usize) -> Self {
+        ArchConfig {
+            input,
+            stem: Stem::P2m { k: 5, c_o: 8 },
+            blocks: vec![(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 2, 2), (6, 64, 1, 1)],
+            head_channels: 128,
+            num_classes: 2,
+        }
+    }
+
+    /// Scaled baseline (python `model.baseline_config`).
+    pub fn repo_baseline(input: usize) -> Self {
+        ArchConfig {
+            input,
+            stem: Stem::Conv { k: 3, s: 2, c_o: 32 },
+            blocks: vec![
+                (1, 16, 1, 1),
+                (6, 24, 2, 2),
+                (6, 32, 2, 2),
+                (6, 64, 2, 2),
+                (6, 96, 1, 1),
+            ],
+            head_channels: 128,
+            num_classes: 2,
+        }
+    }
+
+    /// Expand to per-layer specs.
+    pub fn layers(&self) -> Vec<LayerSpec> {
+        let mut out = Vec::new();
+        let (mut h, mut w);
+        let mut c_in;
+        match self.stem {
+            Stem::P2m { k, c_o } => {
+                let ho = self.input / k; // non-overlapping, no padding
+                out.push(LayerSpec {
+                    name: "stem.p2m".into(),
+                    k,
+                    stride: k,
+                    groups: 1,
+                    c_in: 3,
+                    c_out: c_o,
+                    h_in: self.input,
+                    w_in: self.input,
+                    h_out: ho,
+                    w_out: ho,
+                    in_pixel: true,
+                });
+                h = ho;
+                w = ho;
+                c_in = c_o;
+            }
+            Stem::Conv { k, s, c_o } => {
+                let ho = self.input.div_ceil(s); // SAME padding
+                out.push(LayerSpec {
+                    name: "stem.conv".into(),
+                    k,
+                    stride: s,
+                    groups: 1,
+                    c_in: 3,
+                    c_out: c_o,
+                    h_in: self.input,
+                    w_in: self.input,
+                    h_out: ho,
+                    w_out: ho,
+                    in_pixel: false,
+                });
+                h = ho;
+                w = ho;
+                c_in = c_o;
+            }
+        }
+
+        for (bi, &(t, c, n, s)) in self.blocks.iter().enumerate() {
+            for i in 0..n {
+                let stride = if i == 0 { s } else { 1 };
+                let c_mid = c_in * t;
+                let ho = h.div_ceil(stride);
+                if t != 1 {
+                    out.push(LayerSpec {
+                        name: format!("block{bi}.{i}.expand"),
+                        k: 1,
+                        stride: 1,
+                        groups: 1,
+                        c_in,
+                        c_out: c_mid,
+                        h_in: h,
+                        w_in: w,
+                        h_out: h,
+                        w_out: w,
+                        in_pixel: false,
+                    });
+                }
+                out.push(LayerSpec {
+                    name: format!("block{bi}.{i}.dw"),
+                    k: 3,
+                    stride,
+                    groups: c_mid,
+                    c_in: c_mid,
+                    c_out: c_mid,
+                    h_in: h,
+                    w_in: w,
+                    h_out: ho,
+                    w_out: ho,
+                    in_pixel: false,
+                });
+                out.push(LayerSpec {
+                    name: format!("block{bi}.{i}.project"),
+                    k: 1,
+                    stride: 1,
+                    groups: 1,
+                    c_in: c_mid,
+                    c_out: c,
+                    h_in: ho,
+                    w_in: ho,
+                    h_out: ho,
+                    w_out: ho,
+                    in_pixel: false,
+                });
+                h = ho;
+                w = ho;
+                c_in = c;
+            }
+        }
+
+        out.push(LayerSpec {
+            name: "head.conv".into(),
+            k: 1,
+            stride: 1,
+            groups: 1,
+            c_in,
+            c_out: self.head_channels,
+            h_in: h,
+            w_in: w,
+            h_out: h,
+            w_out: w,
+            in_pixel: false,
+        });
+        out.push(LayerSpec {
+            name: "fc".into(),
+            k: 1,
+            stride: 1,
+            groups: 1,
+            c_in: self.head_channels,
+            c_out: self.num_classes,
+            h_in: 1,
+            w_in: 1,
+            h_out: 1,
+            w_out: 1,
+            in_pixel: false,
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2m_stem_dimensions() {
+        let layers = ArchConfig::paper_p2m(560).layers();
+        let stem = &layers[0];
+        assert!(stem.in_pixel);
+        assert_eq!((stem.h_out, stem.w_out, stem.c_out), (112, 112, 8));
+        assert_eq!(stem.n_mac(), 112 * 112 * 25 * 3 * 8);
+    }
+
+    #[test]
+    fn baseline_stem_dimensions() {
+        let layers = ArchConfig::paper_baseline(560).layers();
+        let stem = &layers[0];
+        assert!(!stem.in_pixel);
+        assert_eq!((stem.h_out, stem.c_out), (280, 32));
+    }
+
+    #[test]
+    fn depthwise_macs_use_groups() {
+        let l = LayerSpec {
+            name: "dw".into(),
+            k: 3,
+            stride: 1,
+            groups: 64,
+            c_in: 64,
+            c_out: 64,
+            h_in: 10,
+            w_in: 10,
+            h_out: 10,
+            w_out: 10,
+            in_pixel: false,
+        };
+        assert_eq!(l.n_mac(), 10 * 10 * 9 * 64);
+        assert_eq!(l.n_read(), 9 * 64);
+    }
+
+    #[test]
+    fn layer_chain_is_consistent() {
+        for cfg in [
+            ArchConfig::paper_baseline(560),
+            ArchConfig::paper_p2m(560),
+            ArchConfig::repo_p2m(80),
+            ArchConfig::repo_baseline(80),
+        ] {
+            let layers = cfg.layers();
+            for pair in layers.windows(2) {
+                let (a, b) = (&pair[0], &pair[1]);
+                if b.name == "fc" {
+                    continue; // pooling intervenes
+                }
+                assert_eq!(a.c_out, b.c_in, "{} -> {}", a.name, b.name);
+                assert_eq!(a.h_out, b.h_in, "{} -> {}", a.name, b.name);
+            }
+            assert_eq!(layers.last().unwrap().c_out, 2);
+        }
+    }
+
+    #[test]
+    fn repo_matches_python_model_shapes() {
+        // python ModelConfig(resolution=80): stem out 16x16x8, blocks
+        // [(1,16,1,1),(6,24,2,2),(6,32,2,2),(6,64,1,1)], head 128.
+        let layers = ArchConfig::repo_p2m(80).layers();
+        assert_eq!(layers[0].h_out, 16);
+        let head = layers.iter().find(|l| l.name == "head.conv").unwrap();
+        assert_eq!(head.c_out, 128);
+        assert_eq!(head.h_in, 4); // 16 -> 16 -> 8 -> 4
+    }
+}

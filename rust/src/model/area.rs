@@ -1,0 +1,161 @@
+//! Heterogeneous-integration area model (paper Section 3.4, Fig. 5).
+//!
+//! The weight die sits *under* the backside-illuminated sensor die, so
+//! the feasibility question is: do c_o weight transistors (plus select
+//! wiring) fit in one pixel's footprint on the chosen logic node?  This
+//! module does that accounting for the Fig. 5 stack (Bi-CIS die over
+//! weight die, hybrid-bonded) and the two fallbacks the paper names
+//! (SPLC, TSV/Fi-CIS).
+
+/// Bonding / integration style (Section 3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Integration {
+    /// die-to-wafer hybrid bond, sub-µm pad pitch (the preferred option)
+    HybridBond,
+    /// stacked pixel-level connections
+    Splc,
+    /// through-silicon vias on a front-illuminated sensor
+    Tsv,
+}
+
+impl Integration {
+    /// Interconnect pitch [µm] — one vertical connection per column line.
+    pub fn pad_pitch_um(self) -> f64 {
+        match self {
+            Integration::HybridBond => 1.0, // ref 22: sub-µm demonstrated
+            Integration::Splc => 2.0,
+            Integration::Tsv => 5.0,
+        }
+    }
+}
+
+/// Geometry of the two dies.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// sensor pixel pitch [µm] (state-of-the-art CIS: 0.8 - 2.0)
+    pub pixel_pitch_um: f64,
+    /// logic node's standard-cell transistor footprint [µm^2] including
+    /// local wiring (22nm: ~0.1 µm^2; 7nm: ~0.03)
+    pub transistor_area_um2: f64,
+    /// series rail-select device per weight transistor (the sneak-current
+    /// fix in Section 3.3: "splitting each weight transistor into two
+    /// series connected transistors")
+    pub series_select: bool,
+    pub integration: Integration,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            pixel_pitch_um: 1.5,
+            transistor_area_um2: 0.1, // 22nm-ish
+            series_select: true,
+            integration: Integration::HybridBond,
+        }
+    }
+}
+
+impl AreaModel {
+    /// Area available under one pixel [µm^2].
+    pub fn pixel_area_um2(&self) -> f64 {
+        self.pixel_pitch_um * self.pixel_pitch_um
+    }
+
+    /// Area needed under one pixel for `channels` weight transistors.
+    pub fn weights_area_um2(&self, channels: usize) -> f64 {
+        let per_weight = if self.series_select { 2.0 } else { 1.0 };
+        // +20% routing overhead for the per-channel select lines.
+        channels as f64 * per_weight * self.transistor_area_um2 * 1.2
+    }
+
+    /// Does the weight bank fit the pixel footprint?
+    pub fn fits(&self, channels: usize) -> bool {
+        self.weights_area_um2(channels) <= self.pixel_area_um2()
+            && self.integration.pad_pitch_um() <= self.pixel_pitch_um
+    }
+
+    /// Max output channels that fit (the area-side bound on c_o —
+    /// Section 4.2's "decreasing number of channels ... improv[es] area").
+    pub fn max_channels(&self) -> usize {
+        let mut c = 0usize;
+        while self.fits(c + 1) {
+            c += 1;
+            if c > 4096 {
+                break;
+            }
+        }
+        c
+    }
+
+    /// Area utilisation [0, 1+] at the paper's design point.
+    pub fn utilisation(&self, channels: usize) -> f64 {
+        self.weights_area_um2(channels) / self.pixel_area_um2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_point_fits() {
+        // 8 channels under a 1.5 µm pixel on a 22nm-class weight die.
+        let m = AreaModel::default();
+        assert!(m.fits(8), "utilisation {}", m.utilisation(8));
+        assert!(m.utilisation(8) < 1.0);
+    }
+
+    #[test]
+    fn thirty_two_channels_do_not_fit_at_22nm() {
+        // The baseline model's 32 channels are area-infeasible in-pixel —
+        // one of the reasons the co-design cuts c_o to 8.
+        let m = AreaModel::default();
+        assert!(!m.fits(32), "utilisation {}", m.utilisation(32));
+    }
+
+    #[test]
+    fn advanced_node_buys_channels() {
+        let n22 = AreaModel::default();
+        let n7 = AreaModel { transistor_area_um2: 0.03, ..n22 };
+        assert!(n7.max_channels() > n22.max_channels());
+    }
+
+    #[test]
+    fn bigger_pixels_buy_channels() {
+        let small = AreaModel { pixel_pitch_um: 1.0, ..AreaModel::default() };
+        let large = AreaModel { pixel_pitch_um: 2.5, ..AreaModel::default() };
+        assert!(large.max_channels() > small.max_channels());
+    }
+
+    #[test]
+    fn tsv_pitch_blocks_small_pixels() {
+        let m = AreaModel {
+            pixel_pitch_um: 1.5,
+            integration: Integration::Tsv,
+            ..AreaModel::default()
+        };
+        // 5 µm TSV pitch cannot land one connection per 1.5 µm pixel.
+        assert!(!m.fits(4));
+        let hb = AreaModel { integration: Integration::HybridBond, ..m };
+        assert!(hb.fits(4));
+    }
+
+    #[test]
+    fn series_select_doubles_area() {
+        let with = AreaModel { series_select: true, ..AreaModel::default() };
+        let without = AreaModel { series_select: false, ..AreaModel::default() };
+        let r = with.weights_area_um2(8) / without.weights_area_um2(8);
+        assert!((r - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_channels_monotone_in_pitch() {
+        let mut last = 0;
+        for pitch in [0.8, 1.2, 1.6, 2.4] {
+            let m = AreaModel { pixel_pitch_um: pitch, ..AreaModel::default() };
+            let c = m.max_channels();
+            assert!(c >= last);
+            last = c;
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Architecture descriptors + analytic metrics (MAdds, peak memory —
+//! Table 2; layer specs feeding the Eq. 7 delay model).
+
+pub mod analysis;
+pub mod arch;
+pub mod area;
+
+pub use analysis::{analyse, analyse_layers, table2_rows, ModelMetrics, Table2Row};
+pub use arch::{ArchConfig, LayerSpec, Stem};
+pub use area::{AreaModel, Integration};

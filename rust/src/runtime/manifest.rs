@@ -1,0 +1,251 @@
+//! Artifact manifest loader: the contract written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter/state leaf: name + shape (all f32).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered HLO artifact: file + the (DCE-pruned) positional arg names.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<String>,
+}
+
+/// Everything exported for one resolution.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub resolution: usize,
+    pub kernel_size: usize,
+    pub stem_channels: usize,
+    pub n_bits: u32,
+    pub stem_out: usize,
+    pub patch_len: usize,
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub serve_batches: Vec<usize>,
+    pub params: Vec<LeafSpec>,
+    pub state: Vec<LeafSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params_bin: String,
+    pub state_bin: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<usize, ModelEntry>,
+}
+
+fn leaf_list(v: &Json) -> Result<Vec<LeafSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("leaf list not an array"))?
+        .iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("leaf missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("leaf missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(LeafSpec { name, shape })
+        })
+        .collect()
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    v.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+impl Manifest {
+    /// Default location: `<crate root>/artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        if v.get("schema").and_then(Json::as_str) != Some("p2m-manifest-v1") {
+            bail!("unexpected manifest schema");
+        }
+        let mut models = BTreeMap::new();
+        for (key, m) in v
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let mut artifacts = BTreeMap::new();
+            for (name, a) in
+                m.get("artifacts").and_then(Json::as_obj).ok_or_else(|| anyhow!("artifacts"))?
+            {
+                let file = a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                    .to_string();
+                let args = a
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing args"))?
+                    .iter()
+                    .map(|s| s.as_str().map(str::to_string).ok_or_else(|| anyhow!("arg")))
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(name.clone(), ArtifactSpec { file, args });
+            }
+            let entry = ModelEntry {
+                resolution: usize_field(m, "resolution")?,
+                kernel_size: usize_field(m, "kernel_size")?,
+                stem_channels: usize_field(m, "stem_channels")?,
+                n_bits: usize_field(m, "n_bits")? as u32,
+                stem_out: usize_field(m, "stem_out")?,
+                patch_len: usize_field(m, "patch_len")?,
+                num_classes: usize_field(m, "num_classes")?,
+                train_batch: usize_field(m, "train_batch")?,
+                eval_batch: usize_field(m, "eval_batch")?,
+                serve_batches: m
+                    .get("serve_batches")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("serve_batches"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                params: leaf_list(m.get("params").ok_or_else(|| anyhow!("params"))?)?,
+                state: leaf_list(m.get("state").ok_or_else(|| anyhow!("state"))?)?,
+                artifacts,
+                params_bin: m
+                    .get("params_bin")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("params_bin"))?
+                    .to_string(),
+                state_bin: m
+                    .get("state_bin")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("state_bin"))?
+                    .to_string(),
+            };
+            models.insert(key.parse::<usize>().context("model key")?, entry);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, resolution: usize) -> Result<&ModelEntry> {
+        self.models
+            .get(&resolution)
+            .ok_or_else(|| anyhow!("no model for resolution {resolution} in manifest"))
+    }
+}
+
+/// Read a flat `<name>.bin` (f32 LE, manifest order) into per-leaf vectors.
+pub fn read_bin(path: &Path, leaves: &[LeafSpec]) -> Result<Vec<Vec<f32>>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let total: usize = leaves.iter().map(LeafSpec::elems).sum();
+    if bytes.len() != total * 4 {
+        bail!("{path:?}: {} bytes, manifest wants {}", bytes.len(), total * 4);
+    }
+    let mut out = Vec::with_capacity(leaves.len());
+    let mut off = 0usize;
+    for leaf in leaves {
+        let n = leaf.elems();
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+            v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off += n;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        assert!(m.models.contains_key(&80));
+        let e = m.model(80).unwrap();
+        assert_eq!(e.kernel_size, 5);
+        assert_eq!(e.stem_channels, 8);
+        assert_eq!(e.stem_out, 16);
+        assert_eq!(e.patch_len, 75);
+        assert!(e.artifacts.contains_key("train_step_80"));
+        assert!(e.artifacts.contains_key("frontend_80_b1"));
+    }
+
+    #[test]
+    fn frontend_args_are_stem_only() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        let e = m.model(80).unwrap();
+        let f = &e.artifacts["frontend_80_b1"];
+        assert_eq!(f.args[0], "image");
+        for a in &f.args[1..] {
+            assert!(a.contains("stem/"), "{a}");
+        }
+    }
+
+    #[test]
+    fn bins_match_manifest() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        let e = m.model(80).unwrap();
+        let params = read_bin(&m.dir.join(&e.params_bin), &e.params).unwrap();
+        assert_eq!(params.len(), e.params.len());
+        for (leaf, vals) in e.params.iter().zip(&params) {
+            assert_eq!(vals.len(), leaf.elems(), "{}", leaf.name);
+            assert!(vals.iter().all(|v| v.is_finite()), "{}", leaf.name);
+        }
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        assert!(m.model(999).is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! rust hot path (python never runs at request time).
+//!
+//! Pattern follows `/opt/xla-example/load_hlo`: HLO **text** ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation` -> compile on the
+//! CPU PJRT client -> execute with literals.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSpec, LeafSpec, Manifest, ModelEntry};
+pub use tensor::{Tensor, TensorData};
+
+/// PJRT client wrapper (CPU).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened tuple outputs.
+    /// (All artifacts are lowered with `return_tuple=True`.)
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+
+/// Upload a host tensor to the device (synchronous copy: the underlying
+/// binding uses kImmutableOnlyDuringCall semantics, so the host memory
+/// may be freed immediately after return — unlike `buffer_from_host_
+/// literal`, whose async transfer races literal drop).
+fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    match &t.data {
+        TensorData::F32(v) => Ok(client.buffer_from_host_buffer(v, &t.dims, None)?),
+        TensorData::I32(v) => Ok(client.buffer_from_host_buffer(v, &t.dims, None)?),
+    }
+}
+
+/// A model bundle: manifest entry + live parameter/state/momentum stores,
+/// with executables compiled on demand and cached.
+///
+/// §Perf: store-sourced arguments (the model parameters) are uploaded to
+/// the device **once** and cached as `PjRtBuffer`s per artifact; each
+/// serving call then uploads only its activations/batch and runs via
+/// `execute_b`.  The cache is invalidated whenever the store changes
+/// (train step, checkpoint load).
+pub struct ModelBundle<'rt> {
+    pub runtime: &'rt Runtime,
+    pub manifest: Manifest,
+    pub entry: ModelEntry,
+    /// leaf values keyed by namespaced arg name ("param:...", "state:...",
+    /// "momentum:...")
+    pub store: BTreeMap<String, Tensor>,
+    executables: BTreeMap<String, Executable>,
+    /// per-artifact device-resident args: slot i is Some(buffer) for
+    /// store-sourced args, None for extras (uploaded per call)
+    arg_buffers: BTreeMap<String, Vec<Option<xla::PjRtBuffer>>>,
+    /// bumped on every store mutation; owning cache entries record the
+    /// version they were built at
+    store_version: u64,
+    arg_buffer_versions: BTreeMap<String, u64>,
+}
+
+impl<'rt> ModelBundle<'rt> {
+    /// Load the bundle for a resolution: manifest + initial params/state
+    /// (momentum initialised to zeros).
+    pub fn load(runtime: &'rt Runtime, resolution: usize) -> Result<Self> {
+        let manifest = Manifest::load_default()?;
+        Self::load_from(runtime, manifest, resolution)
+    }
+
+    pub fn load_from(
+        runtime: &'rt Runtime,
+        manifest: Manifest,
+        resolution: usize,
+    ) -> Result<Self> {
+        let entry = manifest.model(resolution)?.clone();
+        let mut store = BTreeMap::new();
+        let params = manifest::read_bin(&manifest.dir.join(&entry.params_bin), &entry.params)?;
+        for (leaf, vals) in entry.params.iter().zip(params) {
+            store.insert(
+                format!("param:{}", leaf.name),
+                Tensor::f32(leaf.shape.clone(), vals.clone()),
+            );
+            store.insert(format!("momentum:{}", leaf.name), Tensor::zeros(&leaf.shape));
+        }
+        let state = manifest::read_bin(&manifest.dir.join(&entry.state_bin), &entry.state)?;
+        for (leaf, vals) in entry.state.iter().zip(state) {
+            store.insert(format!("state:{}", leaf.name), Tensor::f32(leaf.shape.clone(), vals));
+        }
+        Ok(ModelBundle {
+            runtime,
+            manifest,
+            entry,
+            store,
+            executables: BTreeMap::new(),
+            arg_buffers: BTreeMap::new(),
+            store_version: 0,
+            arg_buffer_versions: BTreeMap::new(),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn executable(&mut self, name: &str) -> Result<&Executable> {
+        if !self.executables.contains_key(name) {
+            let spec = self
+                .entry
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+            let exe = self.runtime.load_hlo(&self.manifest.dir.join(&spec.file))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Assemble the positional args for an artifact: store leaves by
+    /// namespaced name, everything else from `extra`.
+    pub fn assemble_args<'a>(
+        &'a self,
+        name: &str,
+        extra: &'a BTreeMap<&str, Tensor>,
+    ) -> Result<Vec<&'a Tensor>> {
+        let spec = self
+            .entry
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        spec.args
+            .iter()
+            .map(|a| {
+                if let Some(t) = self.store.get(a.as_str()) {
+                    Ok(t)
+                } else if let Some(t) = extra.get(a.as_str()) {
+                    Ok(t)
+                } else {
+                    Err(anyhow!("no value for arg '{a}' of {name}"))
+                }
+            })
+            .collect()
+    }
+
+    /// Run an artifact with the live store + extras.
+    ///
+    /// Store-sourced args execute from cached device buffers; only the
+    /// `extra` tensors are uploaded per call (see struct docs).
+    pub fn run(&mut self, name: &str, extra: &BTreeMap<&str, Tensor>) -> Result<Vec<Tensor>> {
+        self.executable(name)?; // ensure compiled (borrow dance)
+        self.refresh_arg_buffers(name)?;
+        let spec = &self.entry.artifacts[name];
+        let cached = &self.arg_buffers[name];
+        let mut call_buffers: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // index into cached(0)/call(1<<31|i)
+        for (i, arg) in spec.args.iter().enumerate() {
+            if cached[i].is_some() {
+                order.push(i);
+            } else {
+                let t = extra
+                    .get(arg.as_str())
+                    .ok_or_else(|| anyhow!("no value for arg '{arg}' of {name}"))?;
+                call_buffers.push(upload(&self.runtime.client, t)?);
+                order.push(usize::MAX - (call_buffers.len() - 1));
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(order.len());
+        for o in order {
+            if o >= usize::MAX - call_buffers.len() {
+                refs.push(&call_buffers[usize::MAX - o]);
+            } else {
+                refs.push(cached[o].as_ref().unwrap());
+            }
+        }
+        let exe = &self.executables[name];
+        let result = exe.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let out = result[0][0].to_literal_sync()?;
+        out.to_tuple()?.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// (Re)build the device-resident arg buffers for an artifact if the
+    /// store has changed since they were uploaded.
+    fn refresh_arg_buffers(&mut self, name: &str) -> Result<()> {
+        if self.arg_buffer_versions.get(name) == Some(&self.store_version)
+            && self.arg_buffers.contains_key(name)
+        {
+            return Ok(());
+        }
+        let spec = self
+            .entry
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let mut bufs: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(spec.args.len());
+        for arg in &spec.args {
+            if let Some(t) = self.store.get(arg.as_str()) {
+                bufs.push(Some(upload(&self.runtime.client, t)?));
+            } else {
+                bufs.push(None);
+            }
+        }
+        self.arg_buffers.insert(name.to_string(), bufs);
+        self.arg_buffer_versions.insert(name.to_string(), self.store_version);
+        Ok(())
+    }
+
+    /// One training step: runs `train_step_<res>`, writes updated
+    /// params/state/momentum back into the store, returns the loss.
+    pub fn train_step(&mut self, x: Tensor, y: Tensor, lr: f32) -> Result<f32> {
+        let name = format!("train_step_{}", self.entry.resolution);
+        let mut extra = BTreeMap::new();
+        extra.insert("batch_x", x);
+        extra.insert("batch_y", y);
+        extra.insert("lr", Tensor::scalar_f32(lr));
+        let outs = self.run(&name, &extra)?;
+        let n_p = self.entry.params.len();
+        let n_s = self.entry.state.len();
+        if outs.len() != 2 * n_p + n_s + 1 {
+            anyhow::bail!("train_step returned {} outputs, want {}", outs.len(), 2 * n_p + n_s + 1);
+        }
+        let mut it = outs.into_iter();
+        for leaf in self.entry.params.clone() {
+            self.store.insert(format!("param:{}", leaf.name), it.next().unwrap());
+        }
+        for leaf in self.entry.state.clone() {
+            self.store.insert(format!("state:{}", leaf.name), it.next().unwrap());
+        }
+        for leaf in self.entry.params.clone() {
+            self.store.insert(format!("momentum:{}", leaf.name), it.next().unwrap());
+        }
+        let loss = it.next().unwrap();
+        self.store_version += 1;
+        Ok(loss.as_f32()?[0])
+    }
+
+    /// One eval step: (loss, n_correct) on a batch.
+    pub fn eval_step(&mut self, x: Tensor, y: Tensor) -> Result<(f32, u32)> {
+        let name = format!("eval_step_{}", self.entry.resolution);
+        let mut extra = BTreeMap::new();
+        extra.insert("batch_x", x);
+        extra.insert("batch_y", y);
+        let outs = self.run(&name, &extra)?;
+        let loss = outs[0].as_f32()?[0];
+        let correct = outs[1].as_i32()?[0] as u32;
+        Ok((loss, correct))
+    }
+
+    /// Checkpoint the live store (params + state + momentum) to a flat
+    /// f32-LE bin at `path` (manifest order; the shapes come from the
+    /// manifest on load).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut bytes: Vec<u8> = Vec::new();
+        for (ns, leaves) in [
+            ("param", &self.entry.params),
+            ("state", &self.entry.state),
+            ("momentum", &self.entry.params),
+        ] {
+            for leaf in leaves.iter() {
+                let t = self
+                    .store
+                    .get(&format!("{ns}:{}", leaf.name))
+                    .ok_or_else(|| anyhow!("missing {ns}:{}", leaf.name))?;
+                for &v in t.as_f32()? {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))?;
+        Ok(())
+    }
+
+    /// Restore a checkpoint written by [`save_checkpoint`].
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let total: usize = self.entry.params.iter().map(LeafSpec::elems).sum::<usize>() * 2
+            + self.entry.state.iter().map(LeafSpec::elems).sum::<usize>();
+        if bytes.len() != total * 4 {
+            anyhow::bail!("{path:?}: {} bytes, want {}", bytes.len(), total * 4);
+        }
+        let mut off = 0usize;
+        let mut take = |leaf: &LeafSpec| {
+            let n = leaf.elems();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            v
+        };
+        let entry = self.entry.clone();
+        for (ns, leaves) in [
+            ("param", &entry.params),
+            ("state", &entry.state),
+            ("momentum", &entry.params),
+        ] {
+            for leaf in leaves.iter() {
+                let vals = take(leaf);
+                self.store.insert(
+                    format!("{ns}:{}", leaf.name),
+                    Tensor::f32(leaf.shape.clone(), vals),
+                );
+            }
+        }
+        self.store_version += 1;
+        Ok(())
+    }
+
+    /// Stem parameters for the analog frontend: (theta, gamma, beta,
+    /// mean, var) pulled from the live store.
+    pub fn stem_params(&self) -> Result<StemParams> {
+        let get = |k: &str| {
+            self.store
+                .get(k)
+                .ok_or_else(|| anyhow!("missing {k}"))
+                .and_then(|t| Ok(t.as_f32()?.to_vec()))
+        };
+        Ok(StemParams {
+            theta: get("param:stem/theta")?,
+            gamma: get("param:stem/bn/gamma")?,
+            beta: get("param:stem/bn/beta")?,
+            mean: get("state:stem/bn/mean")?,
+            var: get("state:stem/bn/var")?,
+        })
+    }
+}
+
+/// First-layer parameters in the form the analog frontend wants.
+#[derive(Clone, Debug)]
+pub struct StemParams {
+    pub theta: Vec<f32>,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+impl StemParams {
+    /// Fuse BN into per-channel (scale A, shift B) — paper Eq. 1, with
+    /// the python model's BN_EPS.
+    pub fn fused_bn(&self) -> (Vec<f64>, Vec<f64>) {
+        const EPS: f64 = 1e-3;
+        let mut scale = Vec::with_capacity(self.gamma.len());
+        let mut shift = Vec::with_capacity(self.gamma.len());
+        for c in 0..self.gamma.len() {
+            let inv = 1.0 / ((self.var[c] as f64 + EPS).sqrt());
+            let a = self.gamma[c] as f64 * inv;
+            scale.push(a);
+            shift.push(self.beta[c] as f64 - a * self.mean[c] as f64);
+        }
+        (scale, shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fused_bn_identity() {
+        let sp = StemParams {
+            theta: vec![],
+            gamma: vec![1.0, 2.0],
+            beta: vec![0.0, 1.0],
+            mean: vec![0.0, 3.0],
+            var: vec![1.0 - 1e-3, 4.0 - 1e-3],
+        };
+        let (a, b) = sp.fused_bn();
+        // f32 storage of (1 - 1e-3) etc. limits precision to ~1e-7.
+        assert!((a[0] - 1.0).abs() < 1e-6);
+        assert!((b[0] - 0.0).abs() < 1e-6);
+        assert!((a[1] - 1.0).abs() < 1e-6);
+        assert!((b[1] - (1.0 - 3.0)).abs() < 1e-5);
+    }
+}

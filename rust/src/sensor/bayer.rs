@@ -1,0 +1,154 @@
+//! Bayer colour-filter-array handling.
+//!
+//! Real CIS pixels sit under an RGGB mosaic; the paper's Eq. 2 charges
+//! the baseline for reading all four Bayer samples and credits P2M with a
+//! 4/3 compression because the circuit "can either ignore the additional
+//! green pixel or average the photo-diode currents coming from the green
+//! pixels".  This module implements both: RGB -> RGGB mosaic (what the
+//! silicon sees) and the two green-handling policies back to RGB.
+
+use crate::sensor::frame::Image;
+
+/// Green-channel reduction policy (paper Section 4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GreenPolicy {
+    /// use G1 (row-sharing green), ignore G2
+    IgnoreSecond,
+    /// average the two green photodiode currents in analog
+    Average,
+}
+
+/// Mosaic a full-RGB scene into a single-channel RGGB Bayer image
+/// (2x2 tiles: [R G; G B]).  h and w must be even.
+pub fn mosaic(rgb: &Image) -> Image {
+    assert_eq!(rgb.c, 3, "mosaic wants RGB input");
+    assert!(rgb.h % 2 == 0 && rgb.w % 2 == 0, "Bayer needs even dimensions");
+    let mut out = Image::zeros(rgb.h, rgb.w, 1);
+    for y in 0..rgb.h {
+        for x in 0..rgb.w {
+            let ch = match (y % 2, x % 2) {
+                (0, 0) => 0, // R
+                (0, 1) => 1, // G1
+                (1, 0) => 1, // G2
+                _ => 2,      // B
+            };
+            out.set(y, x, 0, rgb.get(y, x, ch));
+        }
+    }
+    out
+}
+
+/// Reconstruct half-resolution RGB from the RGGB mosaic: each 2x2 Bayer
+/// tile becomes one RGB pixel.  This is the in-pixel wiring P2M uses (one
+/// receptive-field element per colour), not a demosaic filter.
+pub fn tile_to_rgb(bayer: &Image, policy: GreenPolicy) -> Image {
+    assert_eq!(bayer.c, 1, "tile_to_rgb wants a mosaic");
+    let (h2, w2) = (bayer.h / 2, bayer.w / 2);
+    let mut out = Image::zeros(h2, w2, 3);
+    for y in 0..h2 {
+        for x in 0..w2 {
+            let r = bayer.get(2 * y, 2 * x, 0);
+            let g1 = bayer.get(2 * y, 2 * x + 1, 0);
+            let g2 = bayer.get(2 * y + 1, 2 * x, 0);
+            let b = bayer.get(2 * y + 1, 2 * x + 1, 0);
+            let g = match policy {
+                GreenPolicy::IgnoreSecond => g1,
+                GreenPolicy::Average => 0.5 * (g1 + g2),
+            };
+            out.set(y, x, 0, r);
+            out.set(y, x, 1, g);
+            out.set(y, x, 2, b);
+        }
+    }
+    out
+}
+
+/// Samples the baseline must read per RGB pixel delivered (Eq. 2's 4/3).
+pub fn bayer_overhead_ratio() -> f64 {
+    4.0 / 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn rand_rgb(h: usize, w: usize, seed: u64) -> Image {
+        let mut rng = Rng::seed(seed);
+        Image::from_vec(h, w, 3, (0..h * w * 3).map(|_| rng.f32()).collect())
+    }
+
+    #[test]
+    fn mosaic_pattern_rggb() {
+        let mut rgb = Image::zeros(2, 2, 3);
+        rgb.set(0, 0, 0, 0.9); // R at (0,0)
+        rgb.set(0, 1, 1, 0.8); // G at (0,1)
+        rgb.set(1, 0, 1, 0.7); // G at (1,0)
+        rgb.set(1, 1, 2, 0.6); // B at (1,1)
+        let m = mosaic(&rgb);
+        assert_eq!(m.get(0, 0, 0), 0.9);
+        assert_eq!(m.get(0, 1, 0), 0.8);
+        assert_eq!(m.get(1, 0, 0), 0.7);
+        assert_eq!(m.get(1, 1, 0), 0.6);
+    }
+
+    #[test]
+    fn tile_roundtrip_on_uniform_color() {
+        // A spatially-uniform scene survives mosaic + tile reconstruction.
+        let mut rgb = Image::zeros(4, 4, 3);
+        for y in 0..4 {
+            for x in 0..4 {
+                rgb.set(y, x, 0, 0.2);
+                rgb.set(y, x, 1, 0.5);
+                rgb.set(y, x, 2, 0.8);
+            }
+        }
+        for policy in [GreenPolicy::IgnoreSecond, GreenPolicy::Average] {
+            let back = tile_to_rgb(&mosaic(&rgb), policy);
+            assert_eq!(back.h, 2);
+            for y in 0..2 {
+                for x in 0..2 {
+                    assert_eq!(back.get(y, x, 0), 0.2);
+                    assert_eq!(back.get(y, x, 1), 0.5);
+                    assert_eq!(back.get(y, x, 2), 0.8);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn average_policy_averages_greens() {
+        let mut rgb = rand_rgb(2, 2, 3);
+        rgb.set(0, 1, 1, 0.2);
+        rgb.set(1, 0, 1, 0.6);
+        let m = mosaic(&rgb);
+        let avg = tile_to_rgb(&m, GreenPolicy::Average);
+        let ign = tile_to_rgb(&m, GreenPolicy::IgnoreSecond);
+        assert!((avg.get(0, 0, 1) - 0.4).abs() < 1e-6);
+        assert!((ign.get(0, 0, 1) - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tile_preserves_range() {
+        Prop::new("bayer pipeline stays in range").cases(16).run(|rng| {
+            let img = rand_rgb(8, 8, rng.next_u64());
+            let back = tile_to_rgb(&mosaic(&img), GreenPolicy::Average);
+            prop_assert!(back.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            prop_assert!(back.h == 4 && back.w == 4 && back.c == 3);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn overhead_is_four_thirds() {
+        assert!((bayer_overhead_ratio() - 4.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "even dimensions")]
+    fn mosaic_rejects_odd() {
+        mosaic(&Image::zeros(3, 4, 3));
+    }
+}

@@ -1,0 +1,107 @@
+//! Image/frame container shared across the sensor, frontend and pipeline.
+
+/// Row-major (h, w, c) f32 image; values are normalised light intensities
+/// or activations in [0, 1]-ish ranges depending on stage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Image { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), h * w * c, "image data length mismatch");
+        Image { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: f32) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Clamp all values into [lo, hi].
+    pub fn clamp(&mut self, lo: f32, hi: f32) {
+        for v in &mut self.data {
+            *v = v.clamp(lo, hi);
+        }
+    }
+
+    /// Mean over all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+}
+
+/// A captured frame with provenance for the pipeline.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    /// monotonically increasing frame id assigned by the sensor
+    pub id: u64,
+    /// ground-truth label of the synthetic scene (person present?)
+    pub label: u8,
+    pub image: Image,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major_hwc() {
+        let mut img = Image::zeros(2, 3, 3);
+        img.set(1, 2, 0, 7.0);
+        assert_eq!(img.data[(1 * 3 + 2) * 3], 7.0);
+        assert_eq!(img.get(1, 2, 0), 7.0);
+        assert_eq!(img.get(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        let img = Image::from_vec(1, 2, 1, vec![1.0, 2.0]);
+        assert_eq!(img.len(), 2);
+        assert!(!img.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "image data length mismatch")]
+    fn from_vec_rejects_bad_len() {
+        Image::from_vec(2, 2, 1, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn clamp_and_mean() {
+        let mut img = Image::from_vec(1, 1, 3, vec![-1.0, 0.5, 2.0]);
+        img.clamp(0.0, 1.0);
+        assert_eq!(img.data, vec![0.0, 0.5, 1.0]);
+        assert!((img.mean() - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,156 @@
+//! Photodiode / pixel-front capture model.
+//!
+//! Converts scene radiance (normalised [0,1]) into normalised photodiode
+//! currents with the noise sources a real CIS sees: shot noise (Poisson,
+//! approximated Gaussian with sqrt scaling), dark current, and read
+//! noise.  The *reset* noise is cancelled by CDS — exactly the circuit
+//! the paper re-purposes — so it is modelled in the CDS path, not here.
+
+use crate::config::SensorConfig;
+use crate::sensor::frame::Image;
+use crate::util::rng::Rng;
+
+/// Full-well capacity proxy: photoelectrons at full scale.  Sets the shot
+/// noise magnitude: sigma_shot = sqrt(N_e)/N_e_fs at full scale.
+const FULL_WELL_E: f64 = 10_000.0;
+
+/// Capture one noisy exposure of a radiance map.
+///
+/// Returns normalised photodiode currents in [0, 1] (these drive the SF
+/// gate voltage in the analog model).
+pub fn expose(cfg: &SensorConfig, radiance: &Image, rng: &mut Rng) -> Image {
+    assert_eq!(radiance.h, cfg.rows, "radiance/Sensor rows mismatch");
+    assert_eq!(radiance.w, cfg.cols, "radiance/Sensor cols mismatch");
+    let mut out = Image::zeros(radiance.h, radiance.w, radiance.c);
+    let dark = cfg.dark_current * cfg.exposure_s;
+    let read_var = cfg.read_noise * cfg.read_noise;
+    for i in 0..radiance.data.len() {
+        let signal = radiance.data[i] as f64;
+        let mut v = signal + dark;
+        // Shot (Poisson ~ Gaussian with sqrt scaling) and read noise are
+        // independent Gaussians — fold into one draw with summed
+        // variance (§Perf: halves the normal() calls, statistically
+        // identical).
+        let shot_var = if cfg.shot_noise {
+            let n_e = (v * FULL_WELL_E).max(0.0);
+            n_e / (FULL_WELL_E * FULL_WELL_E)
+        } else {
+            0.0
+        };
+        let sigma = (shot_var + read_var).sqrt();
+        if sigma > 0.0 {
+            v += rng.normal_ms(0.0, sigma);
+        }
+        out.data[i] = v.clamp(0.0, 1.0) as f32;
+    }
+    out
+}
+
+/// Native sensor digitisation (the baseline path): quantise a captured
+/// frame to the sensor's bit depth (paper: pixels have 12-bit depth;
+/// Eq. 2's 12/N_b factor).
+pub fn digitise_native(cfg: &SensorConfig, currents: &Image) -> Image {
+    let levels = ((1u64 << cfg.bit_depth) - 1) as f32;
+    let mut out = currents.clone();
+    for v in &mut out.data {
+        *v = (*v * levels).round() / levels;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    fn cfg() -> SensorConfig {
+        SensorConfig::default().with_resolution(8)
+    }
+
+    fn flat(v: f32) -> Image {
+        Image::from_vec(8, 8, 3, vec![v; 8 * 8 * 3])
+    }
+
+    #[test]
+    fn noiseless_capture_is_identity_plus_dark() {
+        let mut c = cfg();
+        c.shot_noise = false;
+        c.read_noise = 0.0;
+        c.dark_current = 0.0;
+        let mut rng = Rng::seed(0);
+        let img = expose(&c, &flat(0.5), &mut rng);
+        assert!(img.data.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn dark_current_adds_floor() {
+        let mut c = cfg();
+        c.shot_noise = false;
+        c.read_noise = 0.0;
+        c.dark_current = 0.1;
+        c.exposure_s = 0.1;
+        let mut rng = Rng::seed(0);
+        let img = expose(&c, &flat(0.0), &mut rng);
+        assert!(img.data.iter().all(|&v| (v - 0.01).abs() < 1e-6));
+    }
+
+    #[test]
+    fn output_always_in_unit_range() {
+        Prop::new("photocurrents clamped").cases(16).run(|rng| {
+            let c = cfg();
+            let v = rng.f32();
+            let img = expose(&c, &flat(v), rng);
+            prop_assert!(img.data.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shot_noise_scales_with_signal() {
+        // Noise sigma at high signal > sigma at low signal (sqrt law).
+        let mut c = cfg();
+        c.read_noise = 0.0;
+        c.dark_current = 0.0;
+        let spread = |level: f32, seed: u64| {
+            let mut rng = Rng::seed(seed);
+            let img = expose(&c, &flat(level), &mut rng);
+            let m = img.mean();
+            (img.data.iter().map(|&v| ((v - m) as f64).powi(2)).sum::<f64>()
+                / img.data.len() as f64)
+                .sqrt()
+        };
+        let lo = spread(0.05, 1);
+        let hi = spread(0.9, 1);
+        assert!(hi > lo * 2.0, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn capture_deterministic_per_seed() {
+        let c = cfg();
+        let a = expose(&c, &flat(0.4), &mut Rng::seed(9));
+        let b = expose(&c, &flat(0.4), &mut Rng::seed(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn native_digitisation_12bit() {
+        let c = cfg();
+        let img = Image::from_vec(8, 8, 3, (0..192).map(|i| i as f32 / 191.0).collect());
+        let q = digitise_native(&c, &img);
+        let levels = ((1u64 << 12) - 1) as f32;
+        for (&orig, &quant) in img.data.iter().zip(&q.data) {
+            assert!((orig - quant).abs() <= 0.5 / levels + 1e-7);
+            let code = quant * levels;
+            assert!((code - code.round()).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn rejects_wrong_shape() {
+        let c = cfg();
+        let img = Image::zeros(4, 4, 3);
+        expose(&c, &img, &mut Rng::seed(0));
+    }
+}

@@ -1,0 +1,298 @@
+//! Synthetic VWW-style scene generator (dataset substitution, DESIGN.md §3).
+//!
+//! Rust twin of `python/compile/datagen.py`: binary "person present?"
+//! scenes — luminance-gradient background with rectangle/ellipse clutter;
+//! positives add an articulated person-like figure (head over torso with
+//! limbs), negatives add person-*unlike* distractor blobs.  Deterministic
+//! given (seed, index, split).  It does not need to be bit-identical to
+//! the python generator (no experiment trains in one language and
+//! evaluates on the other's split), only to draw from the same family.
+
+use crate::sensor::frame::Image;
+use crate::util::rng::Rng;
+
+/// Dataset split (namespaces the RNG stream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+impl Split {
+    fn id(self) -> u64 {
+        match self {
+            Split::Train => 0,
+            Split::Val => 1,
+            Split::Test => 2,
+        }
+    }
+}
+
+/// Scene generator bound to a resolution + seed.
+#[derive(Clone, Debug)]
+pub struct SceneGen {
+    pub res: usize,
+    pub seed: u64,
+}
+
+impl SceneGen {
+    pub fn new(res: usize, seed: u64) -> Self {
+        SceneGen { res, seed }
+    }
+
+    /// The i-th image of a split; label 1 = person present.
+    pub fn image(&self, label: u8, index: u64, split: Split) -> Image {
+        let mut rng = Rng::stream(
+            self.seed ^ split.id().wrapping_mul(0x517c_c1b7_2722_0a95),
+            index,
+        );
+        let mut img = background(&mut rng, self.res);
+        if label == 1 {
+            person(&mut rng, &mut img);
+        } else {
+            distractor(&mut rng, &mut img);
+        }
+        // sensor-ish additive noise
+        for v in &mut img.data {
+            *v += rng.normal_ms(0.0, 0.02) as f32;
+        }
+        img.clamp(0.0, 1.0);
+        img
+    }
+
+    /// Balanced batch starting at `start`: label alternates with index.
+    pub fn batch(&self, batch: usize, start: u64, split: Split) -> (Vec<Image>, Vec<u8>) {
+        let mut xs = Vec::with_capacity(batch);
+        let mut ys = Vec::with_capacity(batch);
+        for i in 0..batch as u64 {
+            let idx = start + i;
+            let label = (idx % 2) as u8;
+            xs.push(self.image(label, idx, split));
+            ys.push(label);
+        }
+        (xs, ys)
+    }
+}
+
+fn paint_ellipse(
+    img: &mut Image,
+    cy: f64,
+    cx: f64,
+    ry: f64,
+    rx: f64,
+    angle: f64,
+    color: [f64; 3],
+    alpha: f64,
+) {
+    let (ca, sa) = (angle.cos(), angle.sin());
+    let r_max = ry.max(rx).ceil() as i64 + 1;
+    let y0 = ((cy as i64) - r_max).max(0) as usize;
+    let y1 = (((cy as i64) + r_max + 1).max(0) as usize).min(img.h);
+    let x0 = ((cx as i64) - r_max).max(0) as usize;
+    let x1 = (((cx as i64) + r_max + 1).max(0) as usize).min(img.w);
+    for y in y0..y1 {
+        for x in x0..x1 {
+            let dy = y as f64 - cy;
+            let dx = x as f64 - cx;
+            let u = ca * dx + sa * dy;
+            let v = -sa * dx + ca * dy;
+            let d = (u / rx.max(1e-6)).powi(2) + (v / ry.max(1e-6)).powi(2);
+            if d <= 1.0 {
+                for ch in 0..3 {
+                    let old = img.get(y, x, ch) as f64;
+                    img.set(y, x, ch, ((1.0 - alpha) * old + alpha * color[ch]) as f32);
+                }
+            }
+        }
+    }
+}
+
+fn background(rng: &mut Rng, res: usize) -> Image {
+    let base = [rng.range(0.15, 0.75), rng.range(0.15, 0.75), rng.range(0.15, 0.75)];
+    let gy = rng.range(-0.3, 0.3);
+    let gx = rng.range(-0.3, 0.3);
+    let mut img = Image::zeros(res, res, 3);
+    for y in 0..res {
+        for x in 0..res {
+            let grad = gy * (y as f64 / res as f64 - 0.5) + gx * (x as f64 / res as f64 - 0.5);
+            for ch in 0..3 {
+                img.set(y, x, ch, (base[ch] + grad).clamp(0.0, 1.0) as f32);
+            }
+        }
+    }
+    let n_clutter = rng.usize(2, 7);
+    for _ in 0..n_clutter {
+        let color = [rng.f64(), rng.f64(), rng.f64()];
+        if rng.bool(0.5) {
+            // translucent rectangle
+            let y0 = rng.usize(0, res);
+            let x0 = rng.usize(0, res);
+            let h = rng.usize(res / 10, res / 2);
+            let w = rng.usize(res / 10, res / 2);
+            for y in y0..(y0 + h).min(res) {
+                for x in x0..(x0 + w).min(res) {
+                    for ch in 0..3 {
+                        let old = img.get(y, x, ch) as f64;
+                        img.set(y, x, ch, (0.5 * old + 0.5 * color[ch]) as f32);
+                    }
+                }
+            }
+        } else {
+            paint_ellipse(
+                &mut img,
+                rng.range(0.0, res as f64),
+                rng.range(0.0, res as f64),
+                rng.range(res as f64 / 12.0, res as f64 / 4.0),
+                rng.range(res as f64 / 12.0, res as f64 / 4.0),
+                rng.range(0.0, std::f64::consts::PI),
+                color,
+                0.6,
+            );
+        }
+    }
+    img
+}
+
+fn person(rng: &mut Rng, img: &mut Image) {
+    let res = img.h as f64;
+    let scale = rng.range(0.18, 0.42) * res;
+    let cy = rng.range(0.35 * res, 0.75 * res);
+    let cx = rng.range(0.2 * res, 0.8 * res);
+    let tone = rng.range(0.1, 0.9);
+    let skin = [tone, tone * rng.range(0.7, 1.0), tone * rng.range(0.5, 0.9)];
+    let cloth = [rng.f64(), rng.f64(), rng.f64()];
+    let lean = rng.range(-0.25, 0.25);
+
+    // torso
+    paint_ellipse(img, cy, cx, 0.42 * scale, 0.20 * scale, lean, cloth, 0.95);
+    // head above torso (the head-over-torso structure distinguishes
+    // positives from distractor blobs)
+    let hy = cy - 0.58 * scale + lean * 0.2 * scale;
+    let hx = cx + lean * 0.5 * scale;
+    paint_ellipse(img, hy, hx, 0.16 * scale, 0.13 * scale, 0.0, skin, 0.95);
+    // limbs
+    for side in [-1.0, 1.0] {
+        let aa = lean + side * rng.range(0.3, 1.1);
+        let ay = cy - 0.2 * scale;
+        let ax = cx + side * 0.22 * scale;
+        let shade = rng.range(0.8, 1.0);
+        paint_ellipse(
+            img,
+            ay + 0.18 * scale * aa.cos(),
+            ax + 0.18 * scale * aa.sin(),
+            0.25 * scale,
+            0.06 * scale,
+            aa,
+            [cloth[0] * shade, cloth[1] * shade, cloth[2] * shade],
+            0.9,
+        );
+        let la = lean + side * rng.range(0.0, 0.35);
+        let ly = cy + 0.55 * scale;
+        let lx = cx + side * 0.10 * scale;
+        let shade = rng.range(0.5, 0.9);
+        paint_ellipse(
+            img,
+            ly + 0.2 * scale * la.cos(),
+            lx + 0.2 * scale * la.sin(),
+            0.30 * scale,
+            0.07 * scale,
+            la,
+            [cloth[0] * shade, cloth[1] * shade, cloth[2] * shade],
+            0.9,
+        );
+    }
+}
+
+fn distractor(rng: &mut Rng, img: &mut Image) {
+    let res = img.h as f64;
+    let n = rng.usize(1, 4);
+    for _ in 0..n {
+        let color = [rng.f64(), rng.f64(), rng.f64()];
+        paint_ellipse(
+            img,
+            rng.range(0.2 * res, 0.8 * res),
+            rng.range(0.2 * res, 0.8 * res),
+            rng.range(res / 14.0, res / 5.0),
+            rng.range(res / 14.0, res / 5.0),
+            rng.range(0.0, std::f64::consts::PI),
+            color,
+            0.9,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_index() {
+        let g = SceneGen::new(40, 7);
+        let a = g.image(1, 3, Split::Train);
+        let b = g.image(1, 3, Split::Train);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let g = SceneGen::new(40, 7);
+        assert_ne!(g.image(1, 3, Split::Train), g.image(1, 4, Split::Train));
+    }
+
+    #[test]
+    fn splits_are_isolated() {
+        let g = SceneGen::new(40, 7);
+        assert_ne!(g.image(0, 3, Split::Train), g.image(0, 3, Split::Val));
+        assert_ne!(g.image(0, 3, Split::Val), g.image(0, 3, Split::Test));
+    }
+
+    #[test]
+    fn values_in_unit_interval() {
+        let g = SceneGen::new(48, 1);
+        for idx in 0..4 {
+            let img = g.image((idx % 2) as u8, idx, Split::Train);
+            assert!(img.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert_eq!((img.h, img.w, img.c), (48, 48, 3));
+        }
+    }
+
+    #[test]
+    fn batch_is_balanced_and_tiled() {
+        let g = SceneGen::new(32, 5);
+        let (xs, ys) = g.batch(16, 0, Split::Train);
+        assert_eq!(xs.len(), 16);
+        assert_eq!(ys.iter().map(|&y| y as usize).sum::<usize>(), 8);
+        // window composition: batch(4, start=4) == tail of batch(8, 0)
+        let (xs2, _) = g.batch(4, 4, Split::Train);
+        assert_eq!(xs[4..8], xs2[..]);
+    }
+
+    #[test]
+    fn classes_differ_in_distribution() {
+        let g = SceneGen::new(40, 11);
+        let stat = |label: u8, base: u64| -> f64 {
+            (0..12)
+                .map(|i| {
+                    let img = g.image(label, base + i, Split::Train);
+                    let m = img.mean();
+                    img.data.iter().map(|&v| ((v - m) as f64).powi(2)).sum::<f64>()
+                        / img.len() as f64
+                })
+                .sum::<f64>()
+                / 12.0
+        };
+        let pv = stat(1, 0);
+        let nv = stat(0, 1000);
+        assert!((pv - nv).abs() > 1e-4, "pos var {pv} vs neg var {nv}");
+    }
+
+    #[test]
+    fn paint_ellipse_clips_at_borders() {
+        let mut img = Image::zeros(16, 16, 3);
+        // Ellipse mostly off-canvas: must not panic, must paint something.
+        paint_ellipse(&mut img, 0.0, 0.0, 6.0, 6.0, 0.3, [1.0, 1.0, 1.0], 1.0);
+        assert!(img.get(0, 0, 0) > 0.9);
+        assert_eq!(img.get(15, 15, 0), 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Micro-benchmark harness (substitutes the unavailable criterion crate).
+//!
+//! Used by the `rust/benches/*.rs` custom-harness benches: warmup, timed
+//! iterations with per-iteration samples, mean / p50 / p95 and optional
+//! throughput reporting.  Target time per bench is tunable with
+//! `P2M_BENCH_SECS` (default 0.75 s measure + 0.25 s warmup) so CI and
+//! the perf pass can trade accuracy for wall-clock.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+/// One benchmark group; prints a header and aligned result rows.
+pub struct Bench {
+    group: String,
+    measure: Duration,
+    warmup: Duration,
+    /// Collected (name, mean_ns) pairs for programmatic use.
+    pub results: Vec<(String, f64)>,
+}
+
+pub use std::hint::black_box as bb;
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let secs: f64 = std::env::var("P2M_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.75);
+        println!("\n== bench group: {group} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            "name", "mean", "p50", "p95", "iters"
+        );
+        Bench {
+            group: group.to_string(),
+            measure: Duration::from_secs_f64(secs),
+            warmup: Duration::from_secs_f64(secs / 3.0),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure; the closure's return value is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> f64 {
+        // Warmup + calibration: estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Choose a sample batch so one sample is >= ~50 µs (timer noise)
+        // but we still get many samples.
+        let batch = ((50e-6 / per_iter).ceil() as u64).max(1);
+        let target_samples =
+            ((self.measure.as_secs_f64() / (per_iter * batch as f64)).ceil() as u64).clamp(5, 500);
+
+        let mut samples_ns = Vec::with_capacity(target_samples as usize);
+        let mut total_iters = 0u64;
+        for _ in 0..target_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(dt);
+            total_iters += batch;
+        }
+
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let p50 = percentile(&samples_ns, 0.5);
+        let p95 = percentile(&samples_ns, 0.95);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            name,
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p95),
+            total_iters
+        );
+        self.results.push((format!("{}/{name}", self.group), mean));
+        mean
+    }
+
+    /// Benchmark and additionally report items/second throughput.
+    pub fn run_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items_per_iter: u64,
+        f: F,
+    ) -> f64 {
+        let mean_ns = self.run(name, f);
+        let per_sec = items_per_iter as f64 / (mean_ns * 1e-9);
+        println!("{:<44} -> {:.1} items/s", format!("  {name} throughput"), per_sec);
+        per_sec
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.25e9), "3.250 s");
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("P2M_BENCH_SECS", "0.05");
+        let mut b = Bench::new("selftest");
+        let mean = b.run("noop-ish", || 1u64 + bb(2u64));
+        assert!(mean > 0.0);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].0.contains("selftest/noop-ish"));
+    }
+
+    #[test]
+    fn bench_ordering_sane() {
+        std::env::set_var("P2M_BENCH_SECS", "0.05");
+        let mut b = Bench::new("selftest2");
+        let fast = b.run("fast", || bb(1u64).wrapping_add(1));
+        let slow = b.run("slow", || {
+            let mut acc = 0u64;
+            for i in 0..5_000u64 {
+                acc = acc.wrapping_add(bb(i));
+            }
+            acc
+        });
+        assert!(slow > fast * 5.0, "slow={slow} fast={fast}");
+    }
+}

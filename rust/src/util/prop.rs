@@ -1,0 +1,149 @@
+//! Property-testing harness (substitutes the unavailable proptest crate).
+//!
+//! Runs a property over many deterministically-seeded random cases and, on
+//! failure, reports the case index and re-runnable seed.  No automatic
+//! shrinking — properties here are built from scalar generators, so the
+//! failing seed plus the property's own assertion message localises the
+//! problem; set `P2M_PROP_SEED`/`P2M_PROP_CASES` to replay or widen.
+
+use super::rng::Rng;
+
+/// Property runner. Usage:
+/// ```ignore
+/// Prop::new("adc monotone").run(|rng| {
+///     let a = rng.range(0.0, 1.0);
+///     prop_assert!(f(a) <= f(a + 0.1), "a={a}");
+///     Ok(())
+/// });
+/// ```
+pub struct Prop {
+    name: &'static str,
+    cases: u64,
+    seed: u64,
+}
+
+impl Prop {
+    const DEFAULT_SEED: u64 = 0xd2a7_7a19_c0de_b456;
+    const STREAM: u64 = 0x70_32_6d; // "p2m"
+
+    pub fn new(name: &'static str) -> Self {
+        let seed = std::env::var("P2M_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(Self::DEFAULT_SEED);
+        let cases = std::env::var("P2M_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Prop { name, cases, seed }
+    }
+
+    pub fn cases(mut self, n: u64) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run the property; panics with a replayable seed on first failure.
+    pub fn run<F>(&self, mut f: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed ^ case;
+            let mut rng = Rng::stream(case_seed, Self::STREAM);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property '{}' failed at case {case}/{} \
+                     (replay with P2M_PROP_SEED={case_seed} P2M_PROP_CASES=1): {msg}",
+                    self.name, self.cases
+                );
+            }
+        }
+    }
+}
+
+/// Assert inside a property body, returning Err(...) instead of panicking
+/// so the runner can attach case/seed context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {} ({})",
+                stringify!($cond),
+                format!($($fmt)+)
+            ));
+        }
+    };
+}
+
+/// Assert two floats are within tolerance inside a property body.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {a} differs from {} = {b} by {} (> {})",
+                stringify!($a),
+                stringify!($b),
+                (a - b).abs(),
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        Prop::new("sum commutes").cases(32).run(|rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            prop_assert!(a + b == b + a);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        Prop::new("always fails").cases(4).run(|_rng| Err("boom".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        Prop::new("collect").cases(8).run(|rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        Prop::new("collect").cases(8).run(|rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+        assert_eq!(first.len(), 8);
+    }
+
+    #[test]
+    fn prop_assert_close_within_tol() {
+        Prop::new("close").cases(4).run(|rng| {
+            let x = rng.f64();
+            prop_assert_close!(x, x + 1e-12, 1e-9);
+            Ok(())
+        });
+    }
+}

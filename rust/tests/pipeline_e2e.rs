@@ -1,0 +1,100 @@
+//! Integration: the whole smart-camera pipeline (capture -> in-pixel
+//! frontend -> link -> batcher -> PJRT backbone) and its baseline twin.
+
+use p2m::coordinator::{
+    baseline_sensor, p2m_sensor_from_bundle, run_pipeline, Backpressure, Metrics,
+    PipelineConfig,
+};
+use p2m::frontend::Fidelity;
+use p2m::runtime::{Manifest, ModelBundle, Runtime};
+
+fn artifacts_built() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn p2m_pipeline_processes_all_frames_lossless() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let sensor = p2m_sensor_from_bundle(&bundle, Fidelity::Functional).unwrap();
+    let cfg = PipelineConfig {
+        n_frames: 12,
+        batch: 8,
+        backpressure: Backpressure::Block,
+        ..PipelineConfig::default()
+    };
+    let metrics = Metrics::new();
+    let stats = run_pipeline(&mut bundle, sensor, &cfg, &metrics).unwrap();
+    assert_eq!(stats.frames_captured, 12);
+    assert_eq!(stats.frames_classified, 12);
+    assert_eq!(stats.frames_dropped, 0);
+    assert!(stats.batches >= 2); // 12 frames / batch 8 -> at least 2
+    // Bandwidth: each frame ships 16*16*8 8-bit codes = 2048 bytes.
+    assert_eq!(stats.bytes_from_sensor, 12 * 2048);
+    assert!(stats.throughput_fps > 0.0);
+    assert!(stats.latency_p95_s >= stats.latency_mean_s * 0.5);
+}
+
+#[test]
+fn baseline_pipeline_ships_raw_pixels() {
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let cfg = PipelineConfig { n_frames: 6, batch: 1, ..PipelineConfig::default() };
+    let metrics = Metrics::new();
+    let stats =
+        run_pipeline(&mut bundle, baseline_sensor(80), &cfg, &metrics).unwrap();
+    assert_eq!(stats.frames_classified, 6);
+    // Baseline: 80*80*3 RGB values -> 4/3 Bayer samples at 12 bits.
+    let per_frame = (80 * 80 * 3) as u64 * 4 / 3 * 12 / 8;
+    assert_eq!(stats.bytes_from_sensor, 6 * per_frame);
+}
+
+#[test]
+fn p2m_link_bandwidth_beats_baseline() {
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let metrics = Metrics::new();
+    let cfg = PipelineConfig { n_frames: 4, batch: 1, ..PipelineConfig::default() };
+    let p2m_sensor = p2m_sensor_from_bundle(&bundle, Fidelity::Functional).unwrap();
+    let p2m = run_pipeline(&mut bundle, p2m_sensor, &cfg, &metrics).unwrap();
+    let base = run_pipeline(&mut bundle, baseline_sensor(80), &cfg, &metrics).unwrap();
+    let ratio = base.bytes_from_sensor as f64 / p2m.bytes_from_sensor as f64;
+    // Eq. 2 at identical conv hyper-parameters: 18.75x.
+    assert!((ratio - 18.75).abs() < 0.2, "measured link BR {ratio}");
+}
+
+#[test]
+fn drop_policy_bounds_queue_under_slow_consumer() {
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let sensor = p2m_sensor_from_bundle(&bundle, Fidelity::Functional).unwrap();
+    let cfg = PipelineConfig {
+        n_frames: 10,
+        batch: 1,
+        queue_capacity: 2,
+        backpressure: Backpressure::DropNewest,
+        ..PipelineConfig::default()
+    };
+    let metrics = Metrics::new();
+    let stats = run_pipeline(&mut bundle, sensor, &cfg, &metrics).unwrap();
+    assert_eq!(stats.frames_captured, 10);
+    assert_eq!(
+        stats.frames_classified + stats.frames_dropped,
+        stats.frames_captured,
+        "conservation under drops"
+    );
+    assert!(stats.queue_high_watermark <= 2);
+}

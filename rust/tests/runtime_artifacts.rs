@@ -1,0 +1,136 @@
+//! Integration: AOT artifacts load, compile and execute through PJRT.
+//!
+//! Skipped (early-return) when `artifacts/` has not been built.
+
+use std::collections::BTreeMap;
+
+use p2m::runtime::{Manifest, ModelBundle, Runtime, Tensor};
+use p2m::sensor::{SceneGen, Split};
+
+fn artifacts_built() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+fn image_tensor(res: usize, seed: u64, batch: usize) -> Tensor {
+    let gen = SceneGen::new(res, seed);
+    let mut data = Vec::with_capacity(batch * res * res * 3);
+    for i in 0..batch {
+        let img = gen.image((i % 2) as u8, i as u64, Split::Val);
+        data.extend_from_slice(&img.data);
+    }
+    Tensor::f32(vec![batch, res, res, 3], data)
+}
+
+#[test]
+fn frontend_executes_with_correct_shape() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let mut extra = BTreeMap::new();
+    extra.insert("image", image_tensor(80, 7, 1));
+    let outs = bundle.run("frontend_80_b1", &extra).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].dims, vec![1, 16, 16, 8]);
+    let acts = outs[0].as_f32().unwrap();
+    // Quantised non-negative activations, bounded by full scale.
+    let lsb = 75.0 / 255.0;
+    for &v in acts {
+        assert!(v >= 0.0 && v <= 75.0 + 1e-3);
+        let code = v / lsb as f32;
+        assert!((code - code.round()).abs() < 1e-3, "{v}");
+    }
+}
+
+#[test]
+fn full_model_classifies() {
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let mut extra = BTreeMap::new();
+    extra.insert("image", image_tensor(80, 9, 1));
+    let outs = bundle.run("full_80_b1", &extra).unwrap();
+    assert_eq!(outs[0].dims, vec![1, 2]);
+    let logits = outs[0].as_f32().unwrap();
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn frontend_plus_backbone_equals_full() {
+    // Composition: backbone(frontend(x)) must equal full(x) — they were
+    // lowered from the same jax function split at the sensor boundary.
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let img = image_tensor(80, 21, 1);
+
+    let mut extra = BTreeMap::new();
+    extra.insert("image", img.clone());
+    let acts = bundle.run("frontend_80_b1", &extra).unwrap().remove(0);
+    let mut extra2 = BTreeMap::new();
+    extra2.insert("acts", acts);
+    let via_split = bundle.run("backbone_80_b1", &extra2).unwrap().remove(0);
+
+    let mut extra3 = BTreeMap::new();
+    extra3.insert("image", img);
+    let via_full = bundle.run("full_80_b1", &extra3).unwrap().remove(0);
+
+    let a = via_split.as_f32().unwrap();
+    let b = via_full.as_f32().unwrap();
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < 1e-4, "split {x} vs full {y}");
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let b = bundle.entry.train_batch;
+    let x = image_tensor(80, 3, b);
+    let y = Tensor::i32(vec![b], (0..b as i32).map(|i| i % 2).collect());
+    let first = bundle.train_step(x.clone(), y.clone(), 0.05).unwrap();
+    assert!(first.is_finite());
+    let mut last = first;
+    for _ in 0..4 {
+        last = bundle.train_step(x.clone(), y.clone(), 0.05).unwrap();
+    }
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn eval_step_reports_counts() {
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let b = bundle.entry.eval_batch;
+    let x = image_tensor(80, 5, b);
+    let y = Tensor::i32(vec![b], (0..b as i32).map(|i| i % 2).collect());
+    let (loss, correct) = bundle.eval_step(x, y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(correct <= b as u32);
+}
+
+#[test]
+fn batch8_variants_execute() {
+    if !artifacts_built() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut bundle = ModelBundle::load(&rt, 80).unwrap();
+    let mut extra = BTreeMap::new();
+    extra.insert("image", image_tensor(80, 11, 8));
+    let outs = bundle.run("full_80_b8", &extra).unwrap();
+    assert_eq!(outs[0].dims, vec![8, 2]);
+}

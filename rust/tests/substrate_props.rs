@@ -1,0 +1,194 @@
+//! Cross-module property tests that need no artifacts or PJRT: physical
+//! sanity of the sensor -> analog -> ADC chain and failure injection.
+
+use p2m::adc::SsAdc;
+use p2m::analog::{TransferSurface, VariationModel};
+use p2m::baseline::BaselineReadout;
+use p2m::config::{AdcConfig, SensorConfig, SystemConfig};
+use p2m::energy::{DelayConstants, EnergyConstants, PipelineKind, PipelineModel};
+use p2m::frontend::{Fidelity, FrontendEngine};
+use p2m::model::{analyse, ArchConfig, Stem};
+use p2m::prop_assert;
+use p2m::sensor::{expose, mosaic, tile_to_rgb, GreenPolicy, Image, SceneGen, Split};
+use p2m::util::prop::Prop;
+use p2m::util::rng::Rng;
+
+fn engine_with(theta_scale: f64, res: usize, seed: u64, fidelity: Fidelity) -> FrontendEngine {
+    let cfg = SystemConfig::for_resolution(res);
+    let p = cfg.hyper.patch_len();
+    let c = cfg.hyper.out_channels;
+    let mut rng = Rng::seed(seed);
+    let theta: Vec<f32> =
+        (0..p * c).map(|_| (rng.range(-1.0, 1.0) * theta_scale) as f32).collect();
+    FrontendEngine::new(
+        cfg,
+        &theta,
+        vec![1.0; c],
+        vec![0.5; c],
+        TransferSurface::load_default(),
+        fidelity,
+    )
+    .unwrap()
+}
+
+#[test]
+fn brighter_scene_never_reduces_positive_only_channels() {
+    // With all-positive weights the in-pixel conv is monotone in light.
+    Prop::new("frontend monotone in illumination").cases(8).run(|rng| {
+        let res = 10usize;
+        let cfg = SystemConfig::for_resolution(res);
+        let p = cfg.hyper.patch_len();
+        let c = cfg.hyper.out_channels;
+        let theta: Vec<f32> = (0..p * c).map(|_| rng.range(0.05, 0.6) as f32).collect();
+        let engine = FrontendEngine::new(
+            cfg,
+            &theta,
+            vec![1.0; c],
+            vec![0.0; c],
+            TransferSurface::load_default(),
+            Fidelity::Functional,
+        )
+        .unwrap();
+        let dim = Image::from_vec(res, res, 3, vec![0.2; res * res * 3]);
+        let bright = Image::from_vec(res, res, 3, vec![0.8; res * res * 3]);
+        let (a, _) = engine.process(&dim);
+        let (b, _) = engine.process(&bright);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            prop_assert!(y >= x, "bright {y} < dim {x}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_chain_scene_to_codes_is_stable_under_noise() {
+    // scene -> photodiode (noisy) -> frontend: codes move by at most a
+    // few LSB between exposures of the same scene (the repeatability a
+    // camera vendor would spec).
+    let res = 20usize;
+    let engine = engine_with(0.8, res, 3, Fidelity::Functional);
+    let scene = SceneGen::new(res, 4).image(1, 0, Split::Train);
+    let sensor = SensorConfig::default().with_resolution(res);
+    let mut rng = Rng::seed(5);
+    let (a, _) = engine.process(&expose(&sensor, &scene, &mut rng));
+    let (b, _) = engine.process(&expose(&sensor, &scene, &mut rng));
+    let lsb = engine.cfg.adc.lsb() as f32;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        assert!((x - y).abs() <= 4.0 * lsb, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn bayer_path_composes_with_frontend() {
+    // Full-res RGB scene -> RGGB mosaic -> tile to half-res RGB -> P2M.
+    let res = 40usize; // mosaic halves to 20, divisible by k=5
+    let scene = SceneGen::new(res, 9).image(1, 2, Split::Train);
+    let rgb_half = tile_to_rgb(&mosaic(&scene), GreenPolicy::Average);
+    assert_eq!((rgb_half.h, rgb_half.w), (20, 20));
+    let engine = engine_with(0.8, 20, 7, Fidelity::Functional);
+    let (acts, report) = engine.process(&rgb_half);
+    assert_eq!((acts.h, acts.w, acts.c), (4, 4, 8));
+    assert_eq!(report.output_bytes, 4 * 4 * 8);
+}
+
+#[test]
+fn mismatch_scales_smoothly() {
+    // Increasing process variation increases output deviation, but small
+    // sigma keeps the codes close: failure-injection sanity.
+    let res = 10usize;
+    let nominal = engine_with(0.8, res, 11, Fidelity::EventAccurate);
+    let img = SceneGen::new(res, 12).image(1, 0, Split::Train);
+    let (base, _) = nominal.process(&img);
+    let lsb = nominal.cfg.adc.lsb() as f32;
+    let mut prev_dev = 0.0f32;
+    for (i, mult) in [0.5, 2.0, 6.0].iter().enumerate() {
+        let noisy = engine_with(0.8, res, 11, Fidelity::EventAccurate)
+            .with_mismatch(&VariationModel::default().scaled(*mult), 42);
+        let (out, _) = noisy.process(&img);
+        let dev: f32 = out
+            .data
+            .iter()
+            .zip(&base.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / out.data.len() as f32;
+        assert!(
+            dev >= prev_dev * 0.5,
+            "deviation should roughly grow: {dev} after {prev_dev}"
+        );
+        if i == 0 {
+            assert!(dev <= 4.0 * lsb, "small mismatch, small deviation: {dev}");
+        }
+        prev_dev = dev;
+    }
+}
+
+#[test]
+fn adc_bits_sweep_changes_resolution_not_range() {
+    // Fig 7a's hardware axis: fewer bits -> coarser codes, same span.
+    for bits in [4u32, 6, 8] {
+        let cfg = AdcConfig { n_bits: bits, full_scale: 75.0, ..AdcConfig::default() };
+        let adc = SsAdc::new(cfg);
+        assert_eq!(adc.quantize(75.0), cfg.code_max());
+        assert_eq!(adc.quantize(0.0), 0);
+        let mid = adc.dequantize(adc.quantize(37.5));
+        assert!((mid - 37.5).abs() <= cfg.lsb() / 2.0 + 1e-12);
+    }
+}
+
+#[test]
+fn energy_model_monotone_in_workload() {
+    Prop::new("energy monotone in N_pix and N_mac").cases(32).run(|rng| {
+        let e = EnergyConstants::default();
+        let base = PipelineModel {
+            kind: PipelineKind::P2m,
+            n_pix: rng.usize(1_000, 1_000_000) as u64,
+            n_mac: rng.usize(1_000, 1_000_000_000) as u64,
+            n_read: 1000,
+            layers: None,
+        };
+        let more_pix = PipelineModel { n_pix: base.n_pix * 2, ..base.clone() };
+        let more_mac = PipelineModel { n_mac: base.n_mac * 2, ..base.clone() };
+        prop_assert!(more_pix.energy(&e).total() > base.energy(&e).total());
+        prop_assert!(more_mac.energy(&e).total() > base.energy(&e).total());
+        let d = DelayConstants::default();
+        prop_assert!(
+            more_mac.delay(&d).total_sequential() >= base.delay(&d).total_sequential()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn design_space_br_vs_area_tradeoff() {
+    // More channels = more weight transistors per pixel AND less BR:
+    // the co-design tension of Section 4.2, end to end.
+    let mut last_br = f64::INFINITY;
+    for c_o in [2usize, 4, 8, 16, 32] {
+        let h = p2m::config::HyperParams {
+            out_channels: c_o,
+            ..p2m::config::HyperParams::default()
+        };
+        let br = p2m::compression::bandwidth_reduction(&h, 560, 12);
+        assert!(br < last_br, "BR must fall as channels grow");
+        last_br = br;
+        let mut arch = ArchConfig::paper_p2m(560);
+        arch.stem = Stem::P2m { k: 5, c_o };
+        let m = analyse(&arch);
+        assert!(m.sensor_output_elems == (112 * 112 * c_o) as u64);
+    }
+}
+
+#[test]
+fn baseline_readout_never_compresses() {
+    Prop::new("baseline ships >= native bytes").cases(16).run(|rng| {
+        let res = 2 * rng.usize(5, 60); // even for Bayer
+        let cfg = SensorConfig::default().with_resolution(res);
+        let ro = BaselineReadout::new(cfg, PipelineKind::BaselineCompressed);
+        let img = Image::zeros(res, res, 3);
+        let (_, r) = ro.process(&img);
+        let rgb_bytes = (res * res * 3) as u64; // 8-bit equivalent
+        prop_assert!(r.output_bytes > rgb_bytes, "{} <= {rgb_bytes}", r.output_bytes);
+        Ok(())
+    });
+}

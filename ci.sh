@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI gate for the P2M reproduction.
+#
+#   ./ci.sh          # fmt + clippy + tier-1 (build + tests)
+#   ./ci.sh --fast   # tier-1 only
+#
+# Tier-1 is the hard gate: `cargo build --release && cargo test -q`.
+# fmt/clippy run first so style drift is caught before the long build;
+# python tests run last and only when pytest + jax are importable.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+
+    echo "== cargo clippy (deny warnings) =="
+    cargo clippy --workspace --all-targets -- -D warnings
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if python3 -c "import pytest, jax" >/dev/null 2>&1; then
+    echo "== python golden-model tests =="
+    (cd python && python3 -m pytest tests -q)
+else
+    echo "(python tests skipped: pytest/jax not importable)"
+fi
+
+echo "CI OK"

@@ -1,16 +1,19 @@
-//! Bench: coordinator substrates (queue, batcher, router) and the full
-//! end-to-end serving pipeline (the Fig. 8 workload, measured rather
-//! than modelled).  Requires artifacts for the end-to-end rows; the
-//! substrate rows always run.
+//! Bench: coordinator substrates (queue, batcher, router), the sharded
+//! multi-camera fleet vs sequential single-camera serving, intra-frame
+//! row parallelism, and the full end-to-end PJRT pipeline (the Fig. 8
+//! workload, measured rather than modelled).  The substrate and fleet
+//! rows always run; the PJRT rows need artifacts.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use p2m::coordinator::{
-    baseline_sensor, p2m_sensor_from_bundle, run_pipeline, Backpressure, BatchPolicy,
-    Batcher, BoundedQueue, Metrics, PipelineConfig, RoutePolicy, Router,
+    baseline_sensor, p2m_sensor_from_bundle, run_fleet, run_pipeline,
+    synthetic_fleet_sensors, Backpressure, BatchPolicy, Batcher, BoundedQueue,
+    FleetConfig, MeanThresholdClassifier, Metrics, PipelineConfig, RoutePolicy, Router,
 };
 use p2m::frontend::Fidelity;
 use p2m::runtime::{Manifest, ModelBundle, Runtime};
+use p2m::sensor::{SceneGen, Split};
 use p2m::util::bench::{bb, Bench};
 
 fn main() {
@@ -53,6 +56,91 @@ fn main() {
         }
         n
     });
+
+    // --- Intra-frame row parallelism: one 560x560 frame, all cores. ---
+    {
+        let res = 560usize;
+        let sensors = synthetic_fleet_sensors(res, Fidelity::Functional, 1).unwrap();
+        let p2m::coordinator::SensorCompute::P2m(engine) = &sensors[0] else {
+            unreachable!()
+        };
+        let frame = SceneGen::new(res, 3).image(1, 0, Split::Train);
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        b.run(&format!("frontend_{res}_rows_serial"), || engine.process(&frame));
+        b.run(&format!("frontend_{res}_rows_x{cores}"), || {
+            engine.process_parallel(&frame, cores)
+        });
+    }
+
+    // --- Fleet vs sequential single-camera: the tentpole comparison. ---
+    // Pure-rust producers + deterministic classifier, so this measures
+    // the sharded topology itself and runs in any checkout.
+    {
+        let cams = 4usize;
+        let frames = 24usize;
+        let res = 80usize;
+        let mk_cfg = |n_cameras: usize, base_seed: u64| FleetConfig {
+            n_cameras,
+            frames_per_camera: frames,
+            batch: 8,
+            queue_capacity: 16,
+            backpressure: Backpressure::Block,
+            base_seed,
+            ..FleetConfig::default()
+        };
+        let metrics = Metrics::new();
+
+        // Warm-up (page in the curve-fit surface etc.).
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        run_fleet(
+            &mut clf,
+            synthetic_fleet_sensors(res, Fidelity::Functional, 1).unwrap(),
+            &mk_cfg(1, 99),
+            &metrics,
+        )
+        .unwrap();
+
+        let t0 = Instant::now();
+        let mut serial_frames = 0u64;
+        for ci in 0..cams {
+            let stats = run_fleet(
+                &mut clf,
+                synthetic_fleet_sensors(res, Fidelity::Functional, 1).unwrap(),
+                &mk_cfg(1, ci as u64),
+                &metrics,
+            )
+            .unwrap();
+            serial_frames += stats.aggregate.frames_classified;
+        }
+        let serial_s = t0.elapsed().as_secs_f64();
+        let serial_fps = serial_frames as f64 / serial_s;
+
+        let t1 = Instant::now();
+        let stats = run_fleet(
+            &mut clf,
+            synthetic_fleet_sensors(res, Fidelity::Functional, cams).unwrap(),
+            &mk_cfg(cams, 0),
+            &metrics,
+        )
+        .unwrap();
+        let fleet_s = t1.elapsed().as_secs_f64();
+        let fleet_fps = stats.aggregate.frames_classified as f64 / fleet_s;
+
+        println!(
+            "{:<44} -> {serial_fps:.1} frames/s ({serial_frames} frames, {serial_s:.2}s)",
+            format!("serving_{cams}x{frames}f_sequential_1cam")
+        );
+        println!(
+            "{:<44} -> {fleet_fps:.1} frames/s ({} frames, {fleet_s:.2}s)",
+            format!("serving_{cams}x{frames}f_fleet_{cams}cam"),
+            stats.aggregate.frames_classified
+        );
+        println!(
+            "{:<44} -> {:.2}x",
+            "fleet_speedup_vs_sequential",
+            fleet_fps / serial_fps
+        );
+    }
 
     // End-to-end pipelines (need artifacts + PJRT).
     if !Manifest::default_dir().join("manifest.json").exists() {

@@ -11,7 +11,9 @@ use std::time::Duration;
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// size trigger: emit as soon as this many items are waiting
     pub max_batch: usize,
+    /// age trigger: emit when the oldest item has waited this long
     pub max_wait: Duration,
 }
 
@@ -29,11 +31,13 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// New batcher under `policy` (panics on a zero `max_batch`).
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
         Batcher { policy, pending: Vec::new() }
     }
 
+    /// Items waiting for a trigger.
     pub fn pending(&self) -> usize {
         self.pending.len()
     }

@@ -1,0 +1,473 @@
+//! The sharded multi-camera fleet: N capture+frontend producer threads
+//! (one per simulated camera), per-shard bounded links, and a single
+//! consumer that merges the shards through the [`Router`] and [`Batcher`]
+//! into one shared classifier backend.
+//!
+//! This is the serving topology the paper's TinyML setting implies —
+//! many cheap P2M cameras, one SoC — and the multi-stream workload
+//! P2M-DeTrack (arXiv 2205.14285) runs on the same in-pixel stem:
+//!
+//! ```text
+//!  camera 0 ── frontend ──> shard queue 0 ─┐
+//!  camera 1 ── frontend ──> shard queue 1 ─┼─ Router ── Batcher ── classifier
+//!  ...                                     │  (fair)    (dynamic)   (caller's
+//!  camera N ── frontend ──> shard queue N ─┘                         thread)
+//! ```
+//!
+//! Each producer owns its own seeded [`Camera`] and [`SensorCompute`]
+//! and runs on a scoped `std::thread`; the classifier (which for PJRT is
+//! not `Send`) never leaves the caller's thread.  Every shard queue is a
+//! [`BoundedQueue`] with the configured backpressure policy, so
+//! per-camera drop accounting stays exact: for every camera,
+//! `frames_captured == frames_classified + frames_dropped` at the end of
+//! a run.
+//!
+//! # Determinism
+//!
+//! For a fixed seed set and [`Backpressure::Block`], the *data-dependent*
+//! fields of every per-camera [`PipelineStats`] (`frames_captured`,
+//! `frames_classified`, `frames_dropped`, `bytes_from_sensor`, and —
+//! with a deterministic backend — `correct`) are reproducible run to
+//! run: each camera's frame stream is a pure function of its seed, and
+//! classification is per-frame, so arrival interleaving cannot change
+//! the outcome.  Timing-derived fields (`wall_time_s`,
+//! `throughput_fps`, latencies, `batches`, watermarks) naturally vary.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::metrics::{Latency, Metrics};
+use crate::coordinator::pipeline::{
+    p2m_sensor_from_bundle, BatchClassifier, PipelineStats, SensorCompute,
+};
+use crate::coordinator::queue::{Backpressure, BoundedQueue};
+use crate::coordinator::router::{RoutePolicy, Router};
+use crate::frontend::{Fidelity, FrontendEngine};
+use crate::runtime::ModelBundle;
+use crate::sensor::{Camera, Image, Split};
+
+/// Fleet topology + scheduling configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// number of simulated cameras (= producer threads)
+    pub n_cameras: usize,
+    /// frames each camera captures before closing its shard
+    pub frames_per_camera: usize,
+    /// classifier batch size (must be in `serve_batches` for PJRT)
+    pub batch: usize,
+    /// per-shard link depth in frames
+    pub queue_capacity: usize,
+    /// what a shard link does when the consumer falls behind
+    pub backpressure: Backpressure,
+    /// batcher age trigger: max time the oldest frame waits for a batch
+    pub max_wait: Duration,
+    /// how the consumer interleaves the shards
+    pub route: RoutePolicy,
+    /// camera `i` is seeded `base_seed + i` unless `camera_seeds` is set
+    pub base_seed: u64,
+    /// explicit per-camera seeds (length must equal `n_cameras`)
+    pub camera_seeds: Option<Vec<u64>>,
+    /// row-chunk threads *inside* each producer's frontend (1 = serial;
+    /// raise it when frames are large and cameras are few)
+    pub frontend_threads: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_cameras: 4,
+            frames_per_camera: 32,
+            batch: 8,
+            queue_capacity: 16,
+            backpressure: Backpressure::Block,
+            max_wait: Duration::from_millis(20),
+            route: RoutePolicy::RoundRobin,
+            base_seed: 0,
+            camera_seeds: None,
+            frontend_threads: 1,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The seed camera `i` runs with under this configuration.
+    pub fn camera_seed(&self, i: usize) -> u64 {
+        match &self.camera_seeds {
+            Some(seeds) => seeds[i],
+            None => self.base_seed.wrapping_add(i as u64),
+        }
+    }
+
+    fn validate(&self, n_sensors: usize) -> Result<()> {
+        if self.n_cameras == 0 {
+            bail!("fleet needs at least one camera");
+        }
+        if n_sensors != self.n_cameras {
+            bail!("{} sensors supplied for {} cameras", n_sensors, self.n_cameras);
+        }
+        if let Some(seeds) = &self.camera_seeds {
+            if seeds.len() != self.n_cameras {
+                bail!("{} camera_seeds for {} cameras", seeds.len(), self.n_cameras);
+            }
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// End-of-run statistics of a fleet run.
+///
+/// Counter fields of `per_camera` sum exactly to the corresponding
+/// `aggregate` field (`frames_captured`, `frames_classified`,
+/// `frames_dropped`, `correct`, `bytes_from_sensor`);
+/// `aggregate.queue_high_watermark` is the max over shards;
+/// `aggregate.batches` counts classifier invocations (batches mix
+/// cameras, so per-camera `batches` stays 0); latency percentiles are
+/// recorded on the aggregate only.
+#[derive(Clone, Debug)]
+pub struct FleetStats {
+    /// one entry per camera, index = camera id
+    pub per_camera: Vec<PipelineStats>,
+    /// fleet-wide totals (see type docs for field semantics)
+    pub aggregate: PipelineStats,
+}
+
+/// One frame in flight on a shard link.
+struct FleetItem {
+    camera: usize,
+    label: u8,
+    captured_at: Instant,
+    payload: Image,
+    bytes: u64,
+}
+
+/// Run a multi-camera fleet: one scoped producer thread per camera
+/// (capture + on-sensor compute), per-shard bounded queues, and the
+/// router/batcher/classifier consumer on the caller's thread.
+///
+/// `sensors` supplies one [`SensorCompute`] per camera (they must all be
+/// the same kind — mixing P2M and baseline cameras in one fleet would
+/// need per-kind artifacts and is rejected).  See [`FleetConfig`] for
+/// seeding, backpressure and routing knobs, and the module docs for the
+/// determinism contract.
+pub fn run_fleet<C: BatchClassifier>(
+    classifier: &mut C,
+    sensors: Vec<SensorCompute>,
+    cfg: &FleetConfig,
+    metrics: &Metrics,
+) -> Result<FleetStats> {
+    cfg.validate(sensors.len())?;
+    if sensors.iter().any(|s| s.is_p2m() != sensors[0].is_p2m()) {
+        bail!("fleet sensors must all be the same kind (all P2M or all baseline)");
+    }
+
+    let n = cfg.n_cameras;
+    let shards: Vec<BoundedQueue<FleetItem>> =
+        (0..n).map(|_| BoundedQueue::new(cfg.queue_capacity, cfg.backpressure)).collect();
+    let frames_in = metrics.counter("fleet_frames_captured");
+    let latency = metrics.latency("fleet_e2e_latency");
+    let mut per_camera = vec![PipelineStats::default(); n];
+    let mut aggregate = PipelineStats::default();
+    let t0 = Instant::now();
+    let mut consumer_result: Result<()> = Ok(());
+
+    std::thread::scope(|s| {
+        for (ci, sensor) in sensors.into_iter().enumerate() {
+            let shard = shards[ci].clone();
+            let frames_in = frames_in.clone();
+            let seed = cfg.camera_seed(ci);
+            let n_frames = cfg.frames_per_camera;
+            let threads = cfg.frontend_threads;
+            let sensor_cfg = sensor.sensor_config();
+            s.spawn(move || {
+                let mut camera = Camera::new(sensor_cfg, seed, Split::Test);
+                for _ in 0..n_frames {
+                    let frame = camera.capture();
+                    let captured_at = Instant::now();
+                    let (payload, bytes) = sensor.run_frame(&frame.image, threads);
+                    frames_in.inc();
+                    let accepted = shard.push(FleetItem {
+                        camera: ci,
+                        label: frame.label,
+                        captured_at,
+                        payload,
+                        bytes,
+                    });
+                    // A refused push on a *closed* shard means the
+                    // consumer aborted — stop burning capture/frontend
+                    // work (a refusal on an open DropNewest shard is an
+                    // ordinary accounted drop and capture continues).
+                    if !accepted && shard.is_closed() {
+                        break;
+                    }
+                }
+                shard.close();
+            });
+        }
+
+        consumer_result = consume(
+            classifier,
+            &shards,
+            cfg,
+            &mut per_camera,
+            &mut aggregate,
+            &latency,
+            t0,
+        );
+        if consumer_result.is_err() {
+            // Unblock any producer stuck on a full shard so the scope's
+            // implicit joins cannot hang.
+            for q in &shards {
+                q.close();
+            }
+        }
+    });
+    consumer_result?;
+
+    // Fold the shard-queue accounting into the stats: for every camera
+    // captured == pushed + dropped, and with the consumer fully drained
+    // classified == pushed, so captured == classified + dropped exactly.
+    for (ci, q) in shards.iter().enumerate() {
+        let (pushed, _, dropped, hwm) = q.stats();
+        per_camera[ci].frames_captured = pushed + dropped;
+        per_camera[ci].frames_dropped = dropped;
+        per_camera[ci].queue_high_watermark = hwm;
+        aggregate.frames_captured += pushed + dropped;
+        aggregate.frames_dropped += dropped;
+        aggregate.queue_high_watermark = aggregate.queue_high_watermark.max(hwm);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    aggregate.wall_time_s = wall;
+    aggregate.throughput_fps = aggregate.frames_classified as f64 / wall.max(1e-9);
+    aggregate.latency_mean_s = latency.mean();
+    aggregate.latency_p95_s = latency.pct(0.95);
+    for st in &mut per_camera {
+        st.wall_time_s = wall;
+        st.throughput_fps = st.frames_classified as f64 / wall.max(1e-9);
+    }
+    Ok(FleetStats { per_camera, aggregate })
+}
+
+/// The consumer loop: drain shards -> route fairly -> batch -> classify.
+fn consume<C: BatchClassifier>(
+    classifier: &mut C,
+    shards: &[BoundedQueue<FleetItem>],
+    cfg: &FleetConfig,
+    per_camera: &mut [PipelineStats],
+    aggregate: &mut PipelineStats,
+    latency: &std::sync::Arc<Latency>,
+    t0: Instant,
+) -> Result<()> {
+    let n_shards = shards.len();
+    let mut router: Router<FleetItem> = Router::new(n_shards, cfg.route);
+    let mut batcher: Batcher<FleetItem> =
+        Batcher::new(BatchPolicy { max_batch: cfg.batch, max_wait: cfg.max_wait });
+    let clock = |t: Instant| t.duration_since(t0).as_secs_f64();
+    // The sweep below can stop early once a batch is staged; rotating
+    // its starting shard keeps that early stop from starving high-index
+    // cameras when `batch < n_cameras`.
+    let mut sweep_start = 0usize;
+
+    loop {
+        // 1. Top up the staging router: at most one frame per shard per
+        //    sweep, and never more staged than one batch in flight — the
+        //    *shard queues* are the bounded sensor links, so the staging
+        //    area must stay shallow for backpressure to reach the
+        //    producers.  Bytes are accounted the moment a frame crosses
+        //    its link.
+        let mut moved = 0usize;
+        for off in 0..n_shards {
+            if router.total_backlog() + batcher.pending() >= cfg.batch {
+                break;
+            }
+            let ci = (sweep_start + off) % n_shards;
+            if let Some(item) = shards[ci].try_pop() {
+                per_camera[ci].bytes_from_sensor += item.bytes;
+                aggregate.bytes_from_sensor += item.bytes;
+                router.enqueue(ci, item);
+                moved += 1;
+            }
+        }
+        sweep_start = (sweep_start + 1) % n_shards;
+
+        // 2. Feed the batcher under the routing policy; size trigger
+        //    fires inside push, age trigger via poll.
+        while let Some((_, item)) = router.next() {
+            if let Some(batch) = batcher.push(item, clock(Instant::now())) {
+                classify_fleet_batch(classifier, batch, per_camera, aggregate, latency)?;
+            }
+        }
+        if let Some(batch) = batcher.poll(clock(Instant::now())) {
+            classify_fleet_batch(classifier, batch, per_camera, aggregate, latency)?;
+        }
+
+        // 3. Terminate once every producer closed its shard and
+        //    everything in flight has been classified.
+        if moved == 0 {
+            let all_closed_and_drained =
+                shards.iter().all(|q| q.is_closed() && q.is_empty());
+            if all_closed_and_drained && router.total_backlog() == 0 {
+                if let Some(batch) = batcher.flush() {
+                    classify_fleet_batch(classifier, batch, per_camera, aggregate, latency)?;
+                }
+                return Ok(());
+            }
+            // Idle: producers are still capturing.  A short sleep keeps
+            // the consumer from spinning on empty shards.
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+/// Classify one mixed-camera batch and fold the outcome into both the
+/// per-camera and the aggregate stats.
+fn classify_fleet_batch<C: BatchClassifier>(
+    classifier: &mut C,
+    batch: Vec<FleetItem>,
+    per_camera: &mut [PipelineStats],
+    aggregate: &mut PipelineStats,
+    latency: &std::sync::Arc<Latency>,
+) -> Result<()> {
+    let images: Vec<&Image> = batch.iter().map(|item| &item.payload).collect();
+    let preds = classifier.classify(&images)?;
+    if preds.len() != batch.len() {
+        bail!("classifier returned {} labels for {} frames", preds.len(), batch.len());
+    }
+    let now = Instant::now();
+    for (item, &pred) in batch.iter().zip(&preds) {
+        let st = &mut per_camera[item.camera];
+        st.frames_classified += 1;
+        aggregate.frames_classified += 1;
+        if pred == item.label {
+            st.correct += 1;
+            aggregate.correct += 1;
+        }
+        latency.record_secs(now.duration_since(item.captured_at).as_secs_f64());
+    }
+    aggregate.batches += 1;
+    Ok(())
+}
+
+/// Build `n` identical P2M sensor-compute instances from the bundle's
+/// live stem parameters — one engine per camera thread (engines are
+/// plain data and deliberately not shared across producers).
+pub fn p2m_fleet_sensors(
+    bundle: &ModelBundle,
+    fidelity: Fidelity,
+    n: usize,
+) -> Result<Vec<SensorCompute>> {
+    (0..n).map(|_| p2m_sensor_from_bundle(bundle, fidelity)).collect()
+}
+
+/// Build `n` P2M sensor-compute instances with deterministic synthetic
+/// stem weights — no AOT artifacts or PJRT needed.  Used by the fleet
+/// integration tests, the throughput benches, and the CLI fallback when
+/// artifacts are not built; pair it with a deterministic backend such as
+/// [`crate::coordinator::MeanThresholdClassifier`].
+pub fn synthetic_fleet_sensors(
+    resolution: usize,
+    fidelity: Fidelity,
+    n: usize,
+) -> Result<Vec<SensorCompute>> {
+    (0..n)
+        .map(|_| {
+            let cfg = SystemConfig::for_resolution(resolution);
+            let p = cfg.hyper.patch_len();
+            let c = cfg.hyper.out_channels;
+            let mut rng = crate::util::rng::Rng::seed(0x5EED);
+            let theta: Vec<f32> =
+                (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+            let engine = FrontendEngine::new(
+                cfg,
+                &theta,
+                vec![1.0; c],
+                vec![0.5; c],
+                crate::analog::TransferSurface::load_default(),
+                fidelity,
+            )
+            .map_err(anyhow::Error::msg)?;
+            Ok(SensorCompute::P2m(engine))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::MeanThresholdClassifier;
+
+    fn small_cfg() -> FleetConfig {
+        FleetConfig {
+            n_cameras: 3,
+            frames_per_camera: 6,
+            batch: 4,
+            queue_capacity: 8,
+            base_seed: 11,
+            ..FleetConfig::default()
+        }
+    }
+
+    fn run(cfg: &FleetConfig) -> FleetStats {
+        let sensors =
+            synthetic_fleet_sensors(20, Fidelity::Functional, cfg.n_cameras).unwrap();
+        let metrics = Metrics::new();
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        run_fleet(&mut clf, sensors, cfg, &metrics).unwrap()
+    }
+
+    #[test]
+    fn lossless_fleet_classifies_everything() {
+        let stats = run(&small_cfg());
+        assert_eq!(stats.per_camera.len(), 3);
+        for st in &stats.per_camera {
+            assert_eq!(st.frames_captured, 6);
+            assert_eq!(st.frames_classified, 6);
+            assert_eq!(st.frames_dropped, 0);
+            // 20x20 -> 4x4x8 8-bit codes = 128 bytes per frame.
+            assert_eq!(st.bytes_from_sensor, 6 * 128);
+        }
+        assert_eq!(stats.aggregate.frames_classified, 18);
+        assert!(stats.aggregate.batches >= 5); // 18 frames / batch 4
+    }
+
+    #[test]
+    fn sensor_count_must_match() {
+        let cfg = small_cfg();
+        let sensors = synthetic_fleet_sensors(20, Fidelity::Functional, 2).unwrap();
+        let metrics = Metrics::new();
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        assert!(run_fleet(&mut clf, sensors, &cfg, &metrics).is_err());
+    }
+
+    #[test]
+    fn explicit_seeds_are_honoured() {
+        // All cameras on the same seed see the same scenes, so their
+        // deterministic per-camera outcomes must be identical.
+        let cfg = FleetConfig {
+            camera_seeds: Some(vec![7, 7, 7]),
+            ..small_cfg()
+        };
+        let stats = run(&cfg);
+        let first = &stats.per_camera[0];
+        for st in &stats.per_camera[1..] {
+            assert_eq!(st.correct, first.correct);
+            assert_eq!(st.bytes_from_sensor, first.bytes_from_sensor);
+        }
+        assert_eq!(cfg.camera_seed(2), 7);
+        assert_eq!(small_cfg().camera_seed(2), 13);
+    }
+
+    #[test]
+    fn seed_list_length_is_validated() {
+        let cfg = FleetConfig { camera_seeds: Some(vec![1, 2]), ..small_cfg() };
+        let sensors = synthetic_fleet_sensors(20, Fidelity::Functional, 3).unwrap();
+        let metrics = Metrics::new();
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        assert!(run_fleet(&mut clf, sensors, &cfg, &metrics).is_err());
+    }
+}

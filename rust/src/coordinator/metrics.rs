@@ -11,14 +11,17 @@ use crate::util::stats::percentile;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Add one.
     pub fn inc(&self) {
         self.add(1)
     }
 
+    /// Add `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -31,10 +34,12 @@ pub struct Latency {
 }
 
 impl Latency {
+    /// New recorder keeping at most `cap` samples.
     pub fn new(cap: usize) -> Self {
         Latency { samples: Mutex::new(Vec::new()), cap }
     }
 
+    /// Record one latency sample in seconds (dropped past capacity).
     pub fn record_secs(&self, s: f64) {
         let mut g = self.samples.lock().unwrap();
         if g.len() < self.cap {
@@ -42,10 +47,12 @@ impl Latency {
         }
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> usize {
         self.samples.lock().unwrap().len()
     }
 
+    /// Mean of the recorded samples (0 when empty).
     pub fn mean(&self) -> f64 {
         let g = self.samples.lock().unwrap();
         if g.is_empty() {
@@ -54,6 +61,7 @@ impl Latency {
         g.iter().sum::<f64>() / g.len() as f64
     }
 
+    /// Percentile `q` in [0, 1] of the recorded samples (0 when empty).
     pub fn pct(&self, q: f64) -> f64 {
         let g = self.samples.lock().unwrap();
         if g.is_empty() {
@@ -71,10 +79,12 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fetch (or create) the named counter.
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
             .lock()
@@ -84,6 +94,7 @@ impl Metrics {
             .clone()
     }
 
+    /// Fetch (or create) the named latency recorder.
     pub fn latency(&self, name: &str) -> std::sync::Arc<Latency> {
         self.latencies
             .lock()

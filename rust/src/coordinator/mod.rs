@@ -1,18 +1,36 @@
 //! Layer-3 coordination: the smart-camera runtime around the P2M sensor —
 //! bounded sensor-SoC link with backpressure, dynamic batching, multi-
-//! camera routing, metrics, and the end-to-end pipeline.
+//! camera routing, metrics, the single-camera pipeline and the sharded
+//! multi-camera fleet.
+//!
+//! Two serving topologies share the substrates in this module:
+//!
+//! * [`run_pipeline`] / [`run_pipeline_with`] — one camera, one producer
+//!   thread, one bounded link into the classifier;
+//! * [`run_fleet`] — N cameras on N producer threads, per-shard bounded
+//!   links merged by the [`Router`] and [`Batcher`] into one shared
+//!   classifier on the caller's thread (see [`fleet`]).
+//!
+//! Classification is pluggable through [`BatchClassifier`]:
+//! [`PjrtClassifier`] serves the AOT artifacts through PJRT,
+//! [`MeanThresholdClassifier`] is the deterministic pure-rust fallback.
 
 pub mod batcher;
+pub mod fleet;
 pub mod metrics;
 pub mod pipeline;
 pub mod queue;
 pub mod router;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use fleet::{
+    p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors, FleetConfig, FleetStats,
+};
 pub use metrics::{Counter, Latency, Metrics};
 pub use pipeline::{
-    baseline_sensor, p2m_sensor_from_bundle, run_pipeline, PipelineConfig, PipelineStats,
-    SensorCompute,
+    baseline_sensor, p2m_sensor_from_bundle, run_pipeline, run_pipeline_with,
+    BatchClassifier, MeanThresholdClassifier, PipelineConfig, PipelineStats,
+    PjrtClassifier, SensorCompute,
 };
 pub use queue::{Backpressure, BoundedQueue};
 pub use router::{RoutePolicy, Router};

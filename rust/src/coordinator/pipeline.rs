@@ -1,18 +1,26 @@
 //! The smart-camera pipeline: capture -> in-pixel frontend (or baseline
-//! readout) -> bounded link -> dynamic batcher -> PJRT backbone.
+//! readout) -> bounded link -> dynamic batcher -> classifier backend.
 //!
 //! Capture + frontend run on a producer thread (they are pure rust and
-//! `Send`); the PJRT client is not `Send`, so batching + inference run on
-//! the caller's thread.  The bounded queue between them *is* the
-//! sensor-to-SoC link, with its backpressure policy and byte accounting.
+//! `Send`); classification runs on the caller's thread behind the
+//! [`BatchClassifier`] trait.  The production backend is
+//! [`PjrtClassifier`] (the AOT backbone through PJRT, which is not
+//! `Send` and therefore pinned to the caller); [`MeanThresholdClassifier`]
+//! is the deterministic pure-rust fallback used by tests, benches and
+//! artifact-less environments.  The bounded queue between producer and
+//! consumer *is* the sensor-to-SoC link, with its backpressure policy and
+//! byte accounting.
+//!
+//! For the N-camera generalisation of this single-producer loop see
+//! [`crate::coordinator::fleet`].
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::baseline::BaselineReadout;
-use crate::config::SystemConfig;
+use crate::config::{SensorConfig, SystemConfig};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
@@ -29,14 +37,56 @@ pub enum SensorCompute {
     Baseline(BaselineReadout),
 }
 
+impl SensorCompute {
+    /// Sensor geometry/noise configuration of this compute instance.
+    pub fn sensor_config(&self) -> SensorConfig {
+        match self {
+            SensorCompute::P2m(engine) => engine.cfg.sensor,
+            SensorCompute::Baseline(readout) => readout.cfg,
+        }
+    }
+
+    /// True for the in-pixel P2M frontend.
+    pub fn is_p2m(&self) -> bool {
+        matches!(self, SensorCompute::P2m(_))
+    }
+
+    /// Run the on-sensor compute on one captured frame, optionally
+    /// spreading the P2M per-patch loop over `frontend_threads` cores.
+    /// Returns the link payload and its size in bytes.
+    pub fn run_frame(&self, image: &Image, frontend_threads: usize) -> (Image, u64) {
+        match self {
+            SensorCompute::P2m(engine) => {
+                let (acts, report) = if frontend_threads > 1 {
+                    engine.process_parallel(image, frontend_threads)
+                } else {
+                    engine.process(image)
+                };
+                (acts, report.output_bytes)
+            }
+            SensorCompute::Baseline(readout) => {
+                let (img, report) = readout.process(image);
+                (img, report.output_bytes)
+            }
+        }
+    }
+}
+
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
+    /// frames the producer captures before closing the link
     pub n_frames: usize,
+    /// backbone batch size (must be in the manifest's `serve_batches`
+    /// when classifying through PJRT)
     pub batch: usize,
+    /// sensor-to-SoC link depth in frames
     pub queue_capacity: usize,
+    /// what the link does when the SoC falls behind
     pub backpressure: Backpressure,
+    /// batcher age trigger: max time the oldest frame waits for a batch
     pub max_wait: Duration,
+    /// seed of the simulated camera (scene stream + noise)
     pub camera_seed: u64,
 }
 
@@ -54,22 +104,34 @@ impl Default for PipelineConfig {
 }
 
 /// End-of-run statistics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct PipelineStats {
+    /// frames the camera captured (classified + dropped)
     pub frames_captured: u64,
+    /// frames that reached the classifier
     pub frames_classified: u64,
+    /// frames the link dropped under backpressure
     pub frames_dropped: u64,
+    /// classified frames whose prediction matched the ground truth
     pub correct: u64,
+    /// classifier invocations (batches, possibly partial)
     pub batches: u64,
+    /// bytes that crossed the sensor-to-SoC link
     pub bytes_from_sensor: u64,
+    /// wall-clock duration of the run [s]
     pub wall_time_s: f64,
+    /// classified frames per second of wall time
     pub throughput_fps: f64,
+    /// mean capture-to-classification latency [s]
     pub latency_mean_s: f64,
+    /// 95th-percentile capture-to-classification latency [s]
     pub latency_p95_s: f64,
+    /// deepest the link queue ever got
     pub queue_high_watermark: usize,
 }
 
 impl PipelineStats {
+    /// Fraction of classified frames predicted correctly.
     pub fn accuracy(&self) -> f64 {
         if self.frames_classified == 0 {
             0.0
@@ -79,6 +141,7 @@ impl PipelineStats {
     }
 }
 
+/// One frame in flight on the sensor-to-SoC link.
 struct LinkItem {
     id: u64,
     label: u8,
@@ -87,34 +150,148 @@ struct LinkItem {
     bytes: u64,
 }
 
-/// Run the pipeline: `sensor` decides the on-sensor compute, `bundle`
-/// supplies the SoC graphs (backbone for P2M, full model for baseline).
-pub fn run_pipeline(
-    bundle: &mut ModelBundle,
+/// A batch classification backend for the serving pipelines.
+///
+/// The pipeline/fleet consumers are generic over this trait so the same
+/// scheduling, batching and accounting code serves both the PJRT-backed
+/// production path and pure-rust deterministic backends.
+pub trait BatchClassifier {
+    /// Human-readable backend name (CLI / log output).
+    fn name(&self) -> &'static str {
+        "classifier"
+    }
+
+    /// Classify a batch of sensor payloads; must return exactly one
+    /// predicted label per input, in order.
+    fn classify(&mut self, batch: &[&Image]) -> Result<Vec<u8>>;
+}
+
+/// The production backend: pads each batch to the exported batch size
+/// and runs the AOT backbone (P2M) or full model (baseline) through
+/// PJRT.  Not `Send` — lives on the consumer thread by construction.
+pub struct PjrtClassifier<'b, 'rt> {
+    bundle: &'b mut ModelBundle<'rt>,
+    artifact: String,
+    input_key: &'static str,
+    batch: usize,
+}
+
+impl<'b, 'rt> PjrtClassifier<'b, 'rt> {
+    /// Select and pre-compile the artifact matching the sensor compute
+    /// (`backbone_*` for P2M activations, `full_*` for baseline pixels),
+    /// so the producer never races a cold compile.
+    pub fn new(
+        bundle: &'b mut ModelBundle<'rt>,
+        sensor: &SensorCompute,
+        batch: usize,
+    ) -> Result<Self> {
+        Self::for_kind(bundle, sensor.is_p2m(), batch)
+    }
+
+    /// Like [`PjrtClassifier::new`], keyed on the pipeline kind directly
+    /// (used by the fleet, whose sensors are validated to share a kind).
+    pub fn for_kind(bundle: &'b mut ModelBundle<'rt>, p2m: bool, batch: usize) -> Result<Self> {
+        if !bundle.entry.serve_batches.contains(&batch) {
+            return Err(anyhow!(
+                "batch {} not exported (serve_batches {:?})",
+                batch,
+                bundle.entry.serve_batches
+            ));
+        }
+        let res = bundle.entry.resolution;
+        let (artifact, input_key) = if p2m {
+            (format!("backbone_{res}_b{batch}"), "acts")
+        } else {
+            (format!("full_{res}_b{batch}"), "image")
+        };
+        bundle.executable(&artifact)?;
+        Ok(PjrtClassifier { bundle, artifact, input_key, batch })
+    }
+}
+
+impl BatchClassifier for PjrtClassifier<'_, '_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn classify(&mut self, batch: &[&Image]) -> Result<Vec<u8>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        if batch.len() > self.batch {
+            bail!("batch of {} exceeds exported size {}", batch.len(), self.batch);
+        }
+        let (h, w, c) = {
+            let img = batch[0];
+            (img.h, img.w, img.c)
+        };
+        // Assemble (B, h, w, c), zero-padding to the exported batch size.
+        let mut data = vec![0.0f32; self.batch * h * w * c];
+        for (i, img) in batch.iter().enumerate() {
+            data[i * h * w * c..(i + 1) * h * w * c].copy_from_slice(&img.data);
+        }
+        let input = Tensor::f32(vec![self.batch, h, w, c], data);
+        let mut extra = BTreeMap::new();
+        extra.insert(self.input_key, input);
+        let outs = self.bundle.run(&self.artifact, &extra)?;
+        let logits = outs[0].as_f32()?;
+        let classes = self.bundle.entry.num_classes;
+        Ok((0..batch.len())
+            .map(|i| {
+                let row = &logits[i * classes..(i + 1) * classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap() as u8
+            })
+            .collect())
+    }
+}
+
+/// Deterministic, dependency-free backend: predicts "person present"
+/// when the payload's mean value exceeds a threshold.
+///
+/// Pure function of the payload — no RNG, no state — so pipeline/fleet
+/// runs driven by it are reproducible for fixed camera seeds.  It is the
+/// backend of choice for integration tests, benches, and environments
+/// where the AOT artifacts or the PJRT runtime are unavailable; its
+/// accuracy is near-chance and not the point.
+#[derive(Clone, Copy, Debug)]
+pub struct MeanThresholdClassifier {
+    /// decision threshold on the payload mean (payload units: dequantised
+    /// activation codes for P2M, normalised pixels for baseline)
+    pub threshold: f32,
+}
+
+impl MeanThresholdClassifier {
+    /// Backend with an explicit decision threshold.
+    pub fn new(threshold: f32) -> Self {
+        MeanThresholdClassifier { threshold }
+    }
+}
+
+impl BatchClassifier for MeanThresholdClassifier {
+    fn name(&self) -> &'static str {
+        "mean-threshold"
+    }
+
+    fn classify(&mut self, batch: &[&Image]) -> Result<Vec<u8>> {
+        Ok(batch.iter().map(|img| u8::from(img.mean() > self.threshold)).collect())
+    }
+}
+
+/// Run the single-camera pipeline against an arbitrary classifier
+/// backend: `sensor` decides the on-sensor compute, `classifier` the SoC
+/// side.  See [`run_pipeline`] for the PJRT convenience wrapper.
+pub fn run_pipeline_with<C: BatchClassifier>(
+    classifier: &mut C,
     sensor: SensorCompute,
     cfg: &PipelineConfig,
     metrics: &Metrics,
 ) -> Result<PipelineStats> {
-    let res = bundle.entry.resolution;
-    if !bundle.entry.serve_batches.contains(&cfg.batch) {
-        return Err(anyhow!(
-            "batch {} not exported (serve_batches {:?})",
-            cfg.batch,
-            bundle.entry.serve_batches
-        ));
-    }
-    let artifact = match &sensor {
-        SensorCompute::P2m(_) => format!("backbone_{res}_b{}", cfg.batch),
-        SensorCompute::Baseline(_) => format!("full_{res}_b{}", cfg.batch),
-    };
-    // Compile up front so the producer isn't racing a cold compile.
-    bundle.executable(&artifact)?;
-
     let queue: BoundedQueue<LinkItem> = BoundedQueue::new(cfg.queue_capacity, cfg.backpressure);
-    let sensor_cfg = match &sensor {
-        SensorCompute::P2m(e) => e.cfg.sensor,
-        SensorCompute::Baseline(b) => b.cfg,
-    };
+    let sensor_cfg = sensor.sensor_config();
     let n_frames = cfg.n_frames;
     let producer_queue = queue.clone();
     let camera_seed = cfg.camera_seed;
@@ -124,24 +301,22 @@ pub fn run_pipeline(
         for _ in 0..n_frames {
             let frame = camera.capture();
             let captured_at = Instant::now();
-            let (payload, bytes) = match &sensor {
-                SensorCompute::P2m(engine) => {
-                    let (acts, report) = engine.process(&frame.image);
-                    (acts, report.output_bytes)
-                }
-                SensorCompute::Baseline(readout) => {
-                    let (img, report) = readout.process(&frame.image);
-                    (img, report.output_bytes)
-                }
-            };
+            let (payload, bytes) = sensor.run_frame(&frame.image, 1);
             frames_in.inc();
-            producer_queue.push(LinkItem {
+            let accepted = producer_queue.push(LinkItem {
                 id: frame.id,
                 label: frame.label,
                 captured_at,
                 payload,
                 bytes,
             });
+            // A refused push on a *closed* link means the consumer
+            // aborted — stop burning capture/frontend work (a refusal
+            // on an open DropNewest link is an ordinary accounted drop
+            // and capture continues).
+            if !accepted && producer_queue.is_closed() {
+                break;
+            }
         }
         producer_queue.close();
     });
@@ -156,6 +331,7 @@ pub fn run_pipeline(
     let clock = |t: Instant| t.duration_since(t0).as_secs_f64();
     let mut stats = PipelineStats::default();
     let mut done = false;
+    let mut result: Result<()> = Ok(());
 
     while !done || batcher.pending() > 0 {
         let mut ready: Option<Vec<LinkItem>> = None;
@@ -183,10 +359,17 @@ pub fn run_pipeline(
         }
 
         if let Some(batch) = ready {
-            classify_batch(bundle, &artifact, cfg.batch, batch, &mut stats, &latency)?;
+            result = classify_batch(classifier, batch, &mut stats, &latency);
+            if result.is_err() {
+                // Unblock the producer so the join below cannot hang on a
+                // full link, then stop consuming.
+                queue.close();
+                break;
+            }
         }
     }
     producer.join().map_err(|_| anyhow!("producer panicked"))?;
+    result?;
 
     let (pushed, _, dropped, hwm) = queue.stats();
     stats.frames_captured = pushed + dropped;
@@ -199,46 +382,39 @@ pub fn run_pipeline(
     Ok(stats)
 }
 
-fn classify_batch(
+/// Run the pipeline with the PJRT backend: `sensor` decides the
+/// on-sensor compute, `bundle` supplies the SoC graphs (backbone for
+/// P2M, full model for baseline).
+pub fn run_pipeline(
     bundle: &mut ModelBundle,
-    artifact: &str,
-    batch_size: usize,
+    sensor: SensorCompute,
+    cfg: &PipelineConfig,
+    metrics: &Metrics,
+) -> Result<PipelineStats> {
+    let mut classifier = PjrtClassifier::new(bundle, &sensor, cfg.batch)?;
+    run_pipeline_with(&mut classifier, sensor, cfg, metrics)
+}
+
+/// Classify one drained batch and fold the outcome into `stats`.
+fn classify_batch<C: BatchClassifier>(
+    classifier: &mut C,
     batch: Vec<LinkItem>,
     stats: &mut PipelineStats,
     latency: &std::sync::Arc<crate::coordinator::metrics::Latency>,
 ) -> Result<()> {
-    let n = batch.len();
-    let (h, w, c) = {
-        let img = &batch[0].payload;
-        (img.h, img.w, img.c)
-    };
-    // Assemble (B, h, w, c), zero-padding to the exported batch size.
-    let mut data = vec![0.0f32; batch_size * h * w * c];
-    for (i, item) in batch.iter().enumerate() {
-        data[i * h * w * c..(i + 1) * h * w * c].copy_from_slice(&item.payload.data);
+    let images: Vec<&Image> = batch.iter().map(|item| &item.payload).collect();
+    let preds = classifier.classify(&images)?;
+    if preds.len() != batch.len() {
+        bail!("classifier returned {} labels for {} frames", preds.len(), batch.len());
     }
-    let input = Tensor::f32(vec![batch_size, h, w, c], data);
-    let key = if artifact.starts_with("backbone") { "acts" } else { "image" };
-    let mut extra = BTreeMap::new();
-    extra.insert(key, input);
-    let outs = bundle.run(artifact, &extra)?;
-    let logits = outs[0].as_f32()?;
-    let classes = bundle.entry.num_classes;
     let now = Instant::now();
-    for (i, item) in batch.iter().enumerate() {
-        let row = &logits[i * classes..(i + 1) * classes];
-        let pred = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap() as u8;
+    for (item, &pred) in batch.iter().zip(&preds) {
         if pred == item.label {
             stats.correct += 1;
         }
         latency.record_secs(now.duration_since(item.captured_at).as_secs_f64());
     }
-    stats.frames_classified += n as u64;
+    stats.frames_classified += batch.len() as u64;
     stats.batches += 1;
     let _ = batch.first().map(|b| b.id); // ids retained for tracing hooks
     Ok(())
@@ -271,4 +447,86 @@ pub fn baseline_sensor(resolution: usize) -> SensorCompute {
         crate::config::SensorConfig::default().with_resolution(resolution),
         PipelineKind::BaselineCompressed,
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_p2m(res: usize) -> SensorCompute {
+        let cfg = SystemConfig::for_resolution(res);
+        let p = cfg.hyper.patch_len();
+        let c = cfg.hyper.out_channels;
+        let mut rng = crate::util::rng::Rng::seed(5);
+        let theta: Vec<f32> = (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+        SensorCompute::P2m(
+            FrontendEngine::new(
+                cfg,
+                &theta,
+                vec![1.0; c],
+                vec![0.5; c],
+                crate::analog::TransferSurface::load_default(),
+                Fidelity::Functional,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn pipeline_runs_without_pjrt_via_threshold_backend() {
+        let cfg = PipelineConfig {
+            n_frames: 10,
+            batch: 4,
+            camera_seed: 3,
+            ..PipelineConfig::default()
+        };
+        let metrics = Metrics::new();
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        let stats =
+            run_pipeline_with(&mut clf, synthetic_p2m(20), &cfg, &metrics).unwrap();
+        assert_eq!(stats.frames_captured, 10);
+        assert_eq!(stats.frames_classified, 10);
+        assert_eq!(stats.frames_dropped, 0);
+        // 20x20 input -> 4x4x8 8-bit codes = 128 bytes per frame.
+        assert_eq!(stats.bytes_from_sensor, 10 * 128);
+        assert!(stats.batches >= 3);
+    }
+
+    #[test]
+    fn threshold_backend_is_deterministic() {
+        let cfg = PipelineConfig { n_frames: 8, batch: 4, ..PipelineConfig::default() };
+        let run = || {
+            let metrics = Metrics::new();
+            let mut clf = MeanThresholdClassifier::new(0.5);
+            run_pipeline_with(&mut clf, synthetic_p2m(20), &cfg, &metrics).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.correct, b.correct);
+        assert_eq!(a.bytes_from_sensor, b.bytes_from_sensor);
+        assert_eq!(a.frames_classified, b.frames_classified);
+    }
+
+    #[test]
+    fn classifier_label_count_mismatch_is_error() {
+        struct Broken;
+        impl BatchClassifier for Broken {
+            fn classify(&mut self, _batch: &[&Image]) -> Result<Vec<u8>> {
+                Ok(vec![0]) // always one label, regardless of batch size
+            }
+        }
+        let cfg = PipelineConfig { n_frames: 6, batch: 3, ..PipelineConfig::default() };
+        let metrics = Metrics::new();
+        let err = run_pipeline_with(&mut Broken, synthetic_p2m(20), &cfg, &metrics);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn sensor_compute_accessors() {
+        let s = synthetic_p2m(20);
+        assert!(s.is_p2m());
+        assert_eq!(s.sensor_config().rows, 20);
+        let b = baseline_sensor(40);
+        assert!(!b.is_p2m());
+        assert_eq!(b.sensor_config().cols, 40);
+    }
 }

@@ -46,6 +46,7 @@ impl<T> Clone for BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// New queue holding at most `cap` items under `policy`.
     pub fn new(cap: usize, policy: Backpressure) -> Self {
         assert!(cap >= 1);
         BoundedQueue {
@@ -143,10 +144,18 @@ impl<T> BoundedQueue<T> {
         self.inner.not_full.notify_all();
     }
 
+    /// True once [`BoundedQueue::close`] has been called (producers fail,
+    /// consumers may still drain what remains).
+    pub fn is_closed(&self) -> bool {
+        self.inner.q.lock().unwrap().closed
+    }
+
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.q.lock().unwrap().items.len()
     }
 
+    /// True when no items are queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -206,6 +215,18 @@ mod tests {
         let t0 = std::time::Instant::now();
         assert_eq!(q.pop(Duration::from_millis(30)), None);
         assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_flag_is_observable() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2, Backpressure::Block);
+        assert!(!q.is_closed());
+        q.push(1);
+        q.close();
+        assert!(q.is_closed());
+        // Draining after close does not reopen.
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(1));
+        assert!(q.is_closed());
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub struct Router<T> {
 }
 
 impl<T> Router<T> {
+    /// New router over `n_cameras` empty per-camera queues.
     pub fn new(n_cameras: usize, policy: RoutePolicy) -> Self {
         assert!(n_cameras >= 1);
         Router {
@@ -34,18 +35,22 @@ impl<T> Router<T> {
         }
     }
 
+    /// Number of camera streams.
     pub fn n_cameras(&self) -> usize {
         self.queues.len()
     }
 
+    /// Queue an item on one camera's stream.
     pub fn enqueue(&mut self, camera: usize, item: T) {
         self.queues[camera].push_back(item);
     }
 
+    /// Items waiting on one camera's stream.
     pub fn backlog(&self, camera: usize) -> usize {
         self.queues[camera].len()
     }
 
+    /// Items waiting across all streams.
     pub fn total_backlog(&self) -> usize {
         self.queues.iter().map(VecDeque::len).sum()
     }

@@ -31,6 +31,9 @@ pub struct MismatchBank {
 }
 
 impl MismatchBank {
+    /// Sample one manufactured instance of the weight bank: per-device
+    /// gain errors drawn from `model`, evaluated through the DC device
+    /// model at the surface's operating point.
     pub fn sample(
         bank: &WeightBank,
         surface: &TransferSurface,
@@ -168,15 +171,21 @@ pub struct FrontendReport {
 
 /// The engine: weight bank + transfer surface + SS-ADC, channel-serial.
 pub struct FrontendEngine {
+    /// full system configuration (sensor geometry, hyper-params, ADC)
     pub cfg: SystemConfig,
+    /// the manufactured first-layer weight bank (widths per rail)
     pub bank: WeightBank,
+    /// pixel transfer surface f(w, x) shared with the JAX golden model
     pub surface: TransferSurface,
+    /// the column-parallel SS-ADC instance
     pub adc: SsAdc,
     /// per-channel BN gain A (realised as ramp slope)
     pub bn_scale: Vec<f64>,
     /// per-channel BN shift B (realised as counter preset)
     pub bn_shift: Vec<f64>,
+    /// execution fidelity of the analog/mixed-signal chain
     pub fidelity: Fidelity,
+    /// sampled process-variation gains (None = nominal silicon)
     pub mismatch: Option<MismatchBank>,
     /// folded weight-polynomial table (None for the direct-device
     /// surface backend, which cannot fold)
@@ -294,29 +303,115 @@ impl FrontendEngine {
         self.process_traced(image, None)
     }
 
-    /// Like [`process`], optionally tracing the first receptive field's
-    /// first channel conversion (Fig. 4 regeneration).
+    /// Like [`Self::process`], optionally tracing the first receptive
+    /// field's first channel conversion (Fig. 4 regeneration).
     pub fn process_traced(
         &self,
         image: &Image,
-        mut trace: Option<&mut WaveformTrace>,
+        trace: Option<&mut WaveformTrace>,
     ) -> (Image, FrontendReport) {
-        let k = self.cfg.hyper.kernel_size;
+        self.check_input(image);
+        let (ho, wo, c) = self.cfg.out_dims();
+        let mut out = Image::zeros(ho, wo, c);
+        let mut report = FrontendReport::default();
+        self.process_row_chunk(image, 0, ho, &mut out.data, &mut report, trace);
+        self.finalise_report(&mut report, ho, c);
+        (out, report)
+    }
+
+    /// Like [`Self::process`], but the per-patch loop is split into
+    /// row-chunks executed on scoped threads so a single high-resolution
+    /// frame uses all cores.
+    ///
+    /// Bit-identical to the serial path for every fidelity: output rows
+    /// are independent (the P2M array has no cross-patch state), each
+    /// element is computed by exactly the same arithmetic, and the
+    /// per-chunk counter reports are summed.  Waveform tracing is a
+    /// serial-only feature — use [`Self::process_traced`] for Fig. 4
+    /// regeneration.
+    ///
+    /// `threads` is clamped to `[1, h_o]`; `threads <= 1` falls back to
+    /// the serial path with zero overhead.
+    pub fn process_parallel(&self, image: &Image, threads: usize) -> (Image, FrontendReport) {
+        let (ho, wo, c) = self.cfg.out_dims();
+        let threads = threads.clamp(1, ho.max(1));
+        if threads == 1 {
+            return self.process(image);
+        }
+        self.check_input(image);
+        let rows_per = ho.div_ceil(threads);
+        let chunks = ho.div_ceil(rows_per);
+        let mut out = Image::zeros(ho, wo, c);
+        let mut reports = vec![FrontendReport::default(); chunks];
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = &mut out.data;
+            let mut report_iter = reports.iter_mut();
+            let mut oy0 = 0usize;
+            while oy0 < ho {
+                let oy1 = (oy0 + rows_per).min(ho);
+                let taken = std::mem::take(&mut rest);
+                let (chunk, tail) = taken.split_at_mut((oy1 - oy0) * wo * c);
+                rest = tail;
+                let report = report_iter.next().expect("chunk count mismatch");
+                s.spawn(move || {
+                    self.process_row_chunk(image, oy0, oy1, chunk, report, None);
+                });
+                oy0 = oy1;
+            }
+        });
+        let mut report = FrontendReport::default();
+        for r in &reports {
+            report.conversions += r.conversions;
+            report.adc_cycles += r.adc_cycles;
+            report.saturated_phases += r.saturated_phases;
+        }
+        self.finalise_report(&mut report, ho, c);
+        (out, report)
+    }
+
+    /// Validate an input frame against the sensor geometry.
+    fn check_input(&self, image: &Image) {
         assert_eq!(image.h, self.cfg.sensor.rows, "frame height");
         assert_eq!(image.w, self.cfg.sensor.cols, "frame width");
         assert_eq!(image.c, 3, "frame channels");
-        let (ho, wo, c) = self.cfg.out_dims();
+    }
+
+    /// Fill the workload-independent report fields (one column-parallel
+    /// SS-ADC per output column: h_o * c_o CDS conversions serialised per
+    /// ADC — paper Table 5: 112*8 double ramps at 2 GHz / 2^8 ->
+    /// 0.229 ms for the 560 model).
+    fn finalise_report(&self, report: &mut FrontendReport, ho: usize, c: usize) {
+        report.adc_time_s = (ho * c) as f64 * self.adc.cds_time_s();
+        report.output_bytes =
+            (report.conversions * self.cfg.adc.n_bits as u64).div_ceil(8);
+    }
+
+    /// Process output rows `[oy0, oy1)` into `out_rows` — a row-major
+    /// slice of exactly `(oy1 - oy0) * w_o * c_o` values — accumulating
+    /// the data-dependent counters into `report`.  `trace` is honoured
+    /// only by the chunk containing output row 0 (the Fig. 4 trace is
+    /// defined as the first receptive field's first channel).
+    fn process_row_chunk(
+        &self,
+        image: &Image,
+        oy0: usize,
+        oy1: usize,
+        out_rows: &mut [f32],
+        report: &mut FrontendReport,
+        mut trace: Option<&mut WaveformTrace>,
+    ) {
+        let k = self.cfg.hyper.kernel_size;
+        let (_, wo, c) = self.cfg.out_dims();
         let p_len = self.cfg.hyper.patch_len();
         let lsb = self.cfg.adc.lsb();
+        debug_assert_eq!(out_rows.len(), (oy1 - oy0) * wo * c, "chunk slice size");
 
-        let mut out = Image::zeros(ho, wo, c);
-        let mut report = FrontendReport::default();
         let mut patch = vec![0.0f64; p_len];
         // Hot-path scratch: per-pixel x-power table + per-channel phase sums.
         let mut xpow = vec![0.0f64; p_len * NA1];
         let mut sums = vec![0.0f64; 2 * c];
 
-        for oy in 0..ho {
+        for oy in oy0..oy1 {
             for ox in 0..wo {
                 // Phase 1 (reset) + pixel wiring: gather the receptive
                 // field in (ky, kx, ch) order — the manifest order shared
@@ -383,17 +478,10 @@ impl FrontendEngine {
                         }
                     };
                     report.conversions += 1;
-                    out.set(oy, ox, ch, (code as f64 * lsb) as f32);
+                    out_rows[((oy - oy0) * wo + ox) * c + ch] = (code as f64 * lsb) as f32;
                 }
             }
         }
-        // One column-parallel SS-ADC per output column: h_o * c_o CDS
-        // conversions serialised per ADC (paper Table 5: 112*8 double
-        // ramps at 2 GHz / 2^8 -> 0.229 ms for the 560 model).
-        report.adc_time_s = (ho * c) as f64 * self.adc.cds_time_s();
-        report.output_bytes =
-            (report.conversions * self.cfg.adc.n_bits as u64).div_ceil(8);
-        (out, report)
     }
 }
 
@@ -638,6 +726,43 @@ mod tests {
         for (x, y) in a.data.iter().zip(&b.data) {
             assert!((x - y).abs() <= lsb * 1.001, "fast {x} vs slow {y}");
         }
+    }
+
+    #[test]
+    fn parallel_rows_bit_identical_to_serial() {
+        // The fleet's intra-frame parallelism must be a pure scheduling
+        // change: identical codes and identical counter totals for any
+        // thread count, in both fidelities.
+        for fidelity in [Fidelity::Functional, Fidelity::EventAccurate] {
+            let e = engine(20, fidelity);
+            let img = SceneGen::new(20, 33).image(1, 5, Split::Train);
+            let (serial, serial_report) = e.process(&img);
+            for threads in [2usize, 3, 4, 16, 64] {
+                let (par, par_report) = e.process_parallel(&img, threads);
+                assert_eq!(serial, par, "{fidelity:?} diverged at {threads} threads");
+                assert_eq!(serial_report, par_report, "{fidelity:?} report at {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_one_thread_is_serial_path() {
+        let e = engine(10, Fidelity::Functional);
+        let img = SceneGen::new(10, 2).image(0, 1, Split::Train);
+        let (a, ra) = e.process(&img);
+        let (b, rb) = e.process_parallel(&img, 1);
+        assert_eq!(a, b);
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn parallel_with_mismatch_matches_serial() {
+        let e = engine(10, Fidelity::EventAccurate)
+            .with_mismatch(&VariationModel::default(), 11);
+        let img = SceneGen::new(10, 8).image(1, 3, Split::Train);
+        let (a, _) = e.process(&img);
+        let (b, _) = e.process_parallel(&img, 3);
+        assert_eq!(a, b);
     }
 
     #[test]

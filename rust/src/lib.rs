@@ -11,9 +11,11 @@
 //! * layer 2 — JAX model (`python/compile/model.py`): P2M-MobileNetV2,
 //!   AOT-lowered frontend / backbone / train-step artifacts;
 //! * layer 3 — this crate: circuit-accurate sensor + analog + SS-ADC
-//!   simulation, the smart-camera pipeline (scheduler, batcher,
-//!   backpressure), the PJRT runtime that executes the AOT artifacts,
-//!   and the paper's energy/delay/bandwidth models.
+//!   simulation, the smart-camera serving runtime (single-camera
+//!   pipeline and the sharded multi-camera fleet, with dynamic batching
+//!   and backpressure — see [`coordinator`]), the PJRT runtime that
+//!   executes the AOT artifacts, and the paper's energy/delay/bandwidth
+//!   models.
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index.
 pub mod adc;

@@ -38,6 +38,7 @@ fn main() {
         "nvm" => nvm(),
         "area" => area(),
         "mismatch" => mismatch(&rest),
+        "fleet" => fleet(&rest),
         "info" => info(),
         "help" | "--help" | "-h" => {
             help();
@@ -77,6 +78,8 @@ commands (one per paper table/figure):
   nvm       emerging weight-memory comparison (paper Section 3.4)
   area      heterogeneous-integration area feasibility (Section 3.4, Fig. 5)
   mismatch  Monte-Carlo accuracy vs process variation (robustness study)
+  fleet     sharded multi-camera serving fleet vs sequential single-camera
+            (--cameras N --frames M --batch B --queue Q --drop --threads T --seed S)
   info      artifact + environment status
 
 examples (cargo run --release --example <name>):
@@ -550,6 +553,167 @@ fn mismatch(rest: &[&str]) -> anyhow::Result<()> {
             &rows
         )
     );
+    Ok(())
+}
+
+fn fleet(rest: &[&str]) -> anyhow::Result<()> {
+    use p2m::coordinator::{
+        p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors, Backpressure,
+        BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier, Metrics,
+        PjrtClassifier, SensorCompute,
+    };
+    use p2m::runtime::{Manifest, ModelBundle, Runtime};
+
+    let flag = |name: &str| -> Option<usize> {
+        rest.iter()
+            .position(|&a| a == name)
+            .and_then(|i| rest.get(i + 1))
+            .and_then(|s| s.parse().ok())
+    };
+    let cameras = flag("--cameras").unwrap_or(4);
+    let frames = flag("--frames").unwrap_or(32);
+    let batch = flag("--batch").unwrap_or(8);
+    let queue = flag("--queue").unwrap_or(16);
+    let threads = flag("--threads").unwrap_or(1);
+    let seed = flag("--seed").unwrap_or(0) as u64;
+    let drop = rest.contains(&"--drop");
+
+    let mk_cfg = |n_cameras: usize, base_seed: u64| FleetConfig {
+        n_cameras,
+        frames_per_camera: frames,
+        batch,
+        queue_capacity: queue,
+        backpressure: if drop { Backpressure::DropNewest } else { Backpressure::Block },
+        base_seed,
+        frontend_threads: threads,
+        ..FleetConfig::default()
+    };
+
+    let res = 80usize;
+    // PJRT path when artifacts + runtime exist; deterministic synthetic
+    // fallback otherwise, so the fleet is demonstrable in any checkout.
+    let pjrt = Manifest::default_dir().join("manifest.json").exists();
+    let print_fleet = |stats: &FleetStats, backend: &str| {
+        let rows: Vec<Vec<String>> = stats
+            .per_camera
+            .iter()
+            .enumerate()
+            .map(|(ci, st)| {
+                vec![
+                    format!("camera {ci}"),
+                    st.frames_captured.to_string(),
+                    st.frames_classified.to_string(),
+                    st.frames_dropped.to_string(),
+                    st.bytes_from_sensor.to_string(),
+                    format!("{:.1}", 100.0 * st.accuracy()),
+                    st.queue_high_watermark.to_string(),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            render_table(
+                &format!("fleet run ({backend} backend)"),
+                &["stream", "captured", "classified", "dropped", "bytes", "acc %", "hwm"],
+                &rows
+            )
+        );
+        let a = &stats.aggregate;
+        println!(
+            "aggregate: {} classified / {} captured ({} dropped) in {:.2}s -> {:.1} fps, \
+             latency mean {:.2} ms p95 {:.2} ms, {} batches",
+            a.frames_classified,
+            a.frames_captured,
+            a.frames_dropped,
+            a.wall_time_s,
+            a.throughput_fps,
+            a.latency_mean_s * 1e3,
+            a.latency_p95_s * 1e3,
+            a.batches,
+        );
+    };
+
+    // The runtime + bundle are loaded ONCE, outside every timed region:
+    // both the fleet run and the sequential baseline share them, so the
+    // printed speedup measures the sharded topology and not redundant
+    // artifact loading.  The PJRT classifier is rebuilt per run (cheap:
+    // the executable cache lives in the bundle) and stays on this
+    // thread, as it is not `Send`.
+    let rt = if pjrt { Some(Runtime::cpu()?) } else { None };
+    let mut bundle = match rt.as_ref() {
+        Some(rt) => Some(ModelBundle::load(rt, res)?),
+        None => None,
+    };
+    let run_with = |bundle: Option<&mut ModelBundle>,
+                    sensors: Vec<SensorCompute>,
+                    cfg: &FleetConfig,
+                    metrics: &Metrics|
+     -> anyhow::Result<FleetStats> {
+        match bundle {
+            Some(b) => {
+                let mut clf = PjrtClassifier::for_kind(b, true, cfg.batch)?;
+                run_fleet(&mut clf, sensors, cfg, metrics)
+            }
+            None => {
+                let mut clf = MeanThresholdClassifier::new(0.5);
+                run_fleet(&mut clf, sensors, cfg, metrics)
+            }
+        }
+    };
+    let mk_sensors = |bundle: Option<&ModelBundle>, n: usize| -> anyhow::Result<Vec<SensorCompute>> {
+        match bundle {
+            Some(b) => p2m_fleet_sensors(b, Fidelity::Functional, n),
+            None => synthetic_fleet_sensors(res, Fidelity::Functional, n),
+        }
+    };
+    let backend_name = if pjrt {
+        "pjrt"
+    } else {
+        println!("(artifacts not built -- synthetic stem weights + {} backend)",
+            MeanThresholdClassifier::new(0.5).name());
+        "mean-threshold"
+    };
+
+    println!(
+        "== fleet: {cameras} cameras x {frames} frames, batch {batch}, queue {queue}, \
+         {} backpressure, {threads} frontend thread(s) ==",
+        if drop { "drop-newest" } else { "blocking" }
+    );
+    let metrics = Metrics::new();
+    let fleet_sensors = mk_sensors(bundle.as_ref(), cameras)?;
+    let t_fleet = std::time::Instant::now();
+    let stats = run_with(bundle.as_mut(), fleet_sensors, &mk_cfg(cameras, seed), &metrics)?;
+    let fleet_s = t_fleet.elapsed().as_secs_f64();
+    print_fleet(&stats, backend_name);
+
+    // The same workload run as `cameras` sequential single-camera
+    // fleets (sensor construction excluded from the timed region, like
+    // the fleet's).
+    let mut seq_sensor_sets = Vec::with_capacity(cameras);
+    for _ in 0..cameras {
+        seq_sensor_sets.push(mk_sensors(bundle.as_ref(), 1)?);
+    }
+    let t_seq = std::time::Instant::now();
+    let mut seq_classified = 0u64;
+    for (ci, sensors) in seq_sensor_sets.into_iter().enumerate() {
+        let s = run_with(bundle.as_mut(), sensors, &mk_cfg(1, seed + ci as u64), &metrics)?;
+        seq_classified += s.aggregate.frames_classified;
+    }
+    let seq_s = t_seq.elapsed().as_secs_f64();
+    println!(
+        "\nsequential baseline: {} frames in {:.2}s -> {:.1} fps",
+        seq_classified,
+        seq_s,
+        seq_classified as f64 / seq_s.max(1e-9)
+    );
+    println!(
+        "fleet speedup over sequential: {:.2}x ({:.1} vs {:.1} fps)",
+        (stats.aggregate.frames_classified as f64 / fleet_s.max(1e-9))
+            / (seq_classified as f64 / seq_s.max(1e-9)),
+        stats.aggregate.frames_classified as f64 / fleet_s.max(1e-9),
+        seq_classified as f64 / seq_s.max(1e-9)
+    );
+    println!("\nmetrics snapshot:\n{}", metrics.snapshot());
     Ok(())
 }
 

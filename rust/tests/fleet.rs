@@ -1,0 +1,191 @@
+//! Integration: the sharded multi-camera fleet — determinism for fixed
+//! seeds, per-camera-to-aggregate accounting, and exact backpressure
+//! drop accounting under a tiny link.  Needs no artifacts or PJRT: the
+//! producers use deterministic synthetic stem weights and the consumer
+//! the pure-rust mean-threshold backend.
+
+use std::time::Duration;
+
+use p2m::coordinator::{
+    run_fleet, synthetic_fleet_sensors, Backpressure, BatchClassifier, FleetConfig,
+    FleetStats, MeanThresholdClassifier, Metrics,
+};
+use p2m::frontend::Fidelity;
+use p2m::sensor::Image;
+
+const RES: usize = 40;
+/// 40x40 input -> 8x8x8 8-bit codes per frame on the link.
+const BYTES_PER_FRAME: u64 = 8 * 8 * 8;
+
+fn base_cfg() -> FleetConfig {
+    FleetConfig {
+        n_cameras: 4,
+        frames_per_camera: 8,
+        batch: 8,
+        queue_capacity: 16,
+        backpressure: Backpressure::Block,
+        base_seed: 0xF1EE7,
+        ..FleetConfig::default()
+    }
+}
+
+fn run_with<C: BatchClassifier>(classifier: &mut C, cfg: &FleetConfig) -> FleetStats {
+    let sensors =
+        synthetic_fleet_sensors(RES, Fidelity::Functional, cfg.n_cameras).unwrap();
+    run_fleet(classifier, sensors, cfg, &Metrics::new()).unwrap()
+}
+
+/// Deterministic outcome of one camera: everything reproducible for a
+/// fixed seed under a lossless link and a pure classifier.
+fn outcome(stats: &FleetStats) -> Vec<(u64, u64, u64, u64, u64)> {
+    stats
+        .per_camera
+        .iter()
+        .map(|st| {
+            (
+                st.frames_captured,
+                st.frames_classified,
+                st.frames_dropped,
+                st.bytes_from_sensor,
+                st.correct,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn four_camera_fleet_is_deterministic_for_fixed_seeds() {
+    let cfg = base_cfg();
+    let a = run_with(&mut MeanThresholdClassifier::new(0.5), &cfg);
+    let b = run_with(&mut MeanThresholdClassifier::new(0.5), &cfg);
+    assert_eq!(outcome(&a), outcome(&b), "same seeds must give same outcome");
+    for st in &a.per_camera {
+        assert_eq!(st.frames_captured, 8);
+        assert_eq!(st.frames_classified, 8);
+        assert_eq!(st.frames_dropped, 0);
+        assert_eq!(st.bytes_from_sensor, 8 * BYTES_PER_FRAME);
+    }
+    // Seed *sensitivity* (that base_seed actually reaches the scene
+    // streams) is pinned at payload level by
+    // camera_seeds_reach_the_scene_stream below — the stats tuple alone
+    // cannot distinguish seeds when the classifier output coincides.
+}
+
+/// Backend that records a quantised checksum of every payload it sees
+/// (in arrival order) and predicts nothing useful — used to observe the
+/// actual frame data a seed produces.
+#[derive(Default)]
+struct RecordingBackend {
+    sums: Vec<u64>,
+}
+
+impl BatchClassifier for RecordingBackend {
+    fn classify(&mut self, batch: &[&Image]) -> anyhow::Result<Vec<u8>> {
+        for img in batch {
+            self.sums
+                .push(img.data.iter().map(|&v| (v * 1024.0) as u64).sum());
+        }
+        Ok(vec![0; batch.len()])
+    }
+}
+
+#[test]
+fn camera_seeds_reach_the_scene_stream() {
+    // Single camera + batch 1 makes the arrival order the capture order,
+    // so the recorded payload trace is fully deterministic.
+    let trace = |seed: u64| -> Vec<u64> {
+        let cfg = FleetConfig {
+            n_cameras: 1,
+            frames_per_camera: 6,
+            batch: 1,
+            queue_capacity: 16,
+            backpressure: Backpressure::Block,
+            base_seed: seed,
+            ..FleetConfig::default()
+        };
+        let mut rec = RecordingBackend::default();
+        run_with(&mut rec, &cfg);
+        rec.sums
+    };
+    let a = trace(1);
+    assert_eq!(a.len(), 6);
+    assert_eq!(a, trace(1), "same seed must replay the same payloads");
+    assert_ne!(a, trace(2), "different seeds must change the frame payloads");
+}
+
+#[test]
+fn per_camera_stats_sum_to_aggregate() {
+    let stats = run_with(&mut MeanThresholdClassifier::new(0.5), &base_cfg());
+    let sum = |f: fn(&p2m::coordinator::PipelineStats) -> u64| -> u64 {
+        stats.per_camera.iter().map(f).sum()
+    };
+    assert_eq!(sum(|s| s.frames_captured), stats.aggregate.frames_captured);
+    assert_eq!(sum(|s| s.frames_classified), stats.aggregate.frames_classified);
+    assert_eq!(sum(|s| s.frames_dropped), stats.aggregate.frames_dropped);
+    assert_eq!(sum(|s| s.correct), stats.aggregate.correct);
+    assert_eq!(sum(|s| s.bytes_from_sensor), stats.aggregate.bytes_from_sensor);
+    let max_hwm =
+        stats.per_camera.iter().map(|s| s.queue_high_watermark).max().unwrap();
+    assert_eq!(stats.aggregate.queue_high_watermark, max_hwm);
+    // Batches mix cameras, so they are accounted on the aggregate only.
+    assert!(stats.aggregate.batches >= stats.aggregate.frames_classified / 8);
+    assert!(stats.per_camera.iter().all(|s| s.batches == 0));
+}
+
+/// Wraps a backend with a fixed per-batch delay: a deliberately slow SoC
+/// to force the tiny link into its backpressure policy.
+struct SlowBackend<C>(C, Duration);
+
+impl<C: BatchClassifier> BatchClassifier for SlowBackend<C> {
+    fn classify(&mut self, batch: &[&Image]) -> anyhow::Result<Vec<u8>> {
+        std::thread::sleep(self.1);
+        self.0.classify(batch)
+    }
+}
+
+#[test]
+fn drop_accounting_stays_exact_under_tiny_queue() {
+    let cfg = FleetConfig {
+        n_cameras: 4,
+        frames_per_camera: 12,
+        batch: 1,
+        queue_capacity: 1,
+        backpressure: Backpressure::DropNewest,
+        base_seed: 3,
+        ..FleetConfig::default()
+    };
+    let mut slow = SlowBackend(MeanThresholdClassifier::new(0.5), Duration::from_millis(2));
+    let stats = run_with(&mut slow, &cfg);
+    for (ci, st) in stats.per_camera.iter().enumerate() {
+        assert_eq!(st.frames_captured, 12, "camera {ci} capture count");
+        assert_eq!(
+            st.frames_classified + st.frames_dropped,
+            st.frames_captured,
+            "camera {ci}: conservation under drops"
+        );
+        assert!(st.queue_high_watermark <= 1, "camera {ci} hwm");
+        // Bytes are charged only for frames that crossed the link.
+        assert_eq!(st.bytes_from_sensor, st.frames_classified * BYTES_PER_FRAME);
+    }
+    assert_eq!(
+        stats.aggregate.frames_classified + stats.aggregate.frames_dropped,
+        stats.aggregate.frames_captured
+    );
+}
+
+#[test]
+fn blocking_fleet_is_lossless_even_when_slow() {
+    let cfg = FleetConfig {
+        n_cameras: 2,
+        frames_per_camera: 6,
+        batch: 2,
+        queue_capacity: 1,
+        backpressure: Backpressure::Block,
+        base_seed: 5,
+        ..FleetConfig::default()
+    };
+    let mut slow = SlowBackend(MeanThresholdClassifier::new(0.5), Duration::from_millis(1));
+    let stats = run_with(&mut slow, &cfg);
+    assert_eq!(stats.aggregate.frames_dropped, 0);
+    assert_eq!(stats.aggregate.frames_classified, 12);
+}

@@ -1,0 +1,225 @@
+//! In-tree substitute for the crates.io `anyhow` crate.
+//!
+//! The offline vendor set of this repository has no registry access, so
+//! this crate re-implements exactly the `anyhow` surface the workspace
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.  Semantics match upstream for
+//! that subset:
+//!
+//! * `{}` prints the outermost message, `{:#}` prints the full cause
+//!   chain joined with `": "`, `{:?}` prints the message plus a
+//!   `Caused by:` block;
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?` (and [`Error`] itself deliberately does *not*
+//!   implement `std::error::Error`, exactly like upstream, so the blanket
+//!   conversion cannot overlap with `From<Error>`).
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error with a human-readable cause chain.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first (the error this one was layered onto).
+    causes: Vec<String>,
+}
+
+/// `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), causes: Vec::new() }
+    }
+
+    /// Layer a new outermost message onto this error, demoting the
+    /// current message to the first cause.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        let old = std::mem::replace(&mut self.msg, context.to_string());
+        self.causes.insert(0, old);
+        self
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> + '_ {
+        std::iter::once(self.msg.as_str()).chain(self.causes.iter().map(String::as_str))
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.causes.last().map(String::as_str).unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in &self.causes {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut causes = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg: e.to_string(), causes }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option` (mirrors upstream `anyhow::Context`).
+pub trait Context<T, E> {
+    /// Wrap the error with an outer message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-evaluated outer message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err()).context("loading config").unwrap_err();
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+    }
+
+    #[test]
+    fn debug_shows_cause_block() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("missing file"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "missing file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        let owned = String::from("already formatted");
+        let e = anyhow!(owned);
+        assert_eq!(format!("{e}"), "already formatted");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+        assert_eq!(Some(1u32).context("unused").unwrap(), 1);
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e: Error = Err::<(), _>(io_err()).context("mid").unwrap_err().context("top");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["top", "mid", "missing file"]);
+        assert_eq!(e.root_cause(), "missing file");
+    }
+}

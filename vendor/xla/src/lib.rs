@@ -1,0 +1,350 @@
+//! In-tree stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The container building this workspace has no XLA/PJRT shared library
+//! and no registry access, so this crate supplies the exact API surface
+//! `p2m::runtime` uses, split into two tiers:
+//!
+//! * **host-side literals** ([`Literal`], [`ArrayShape`],
+//!   [`ElementType`]) are fully functional — tensor round-trips and every
+//!   code path that never touches a device work and are unit-tested;
+//! * **device execution** ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`PjRtBuffer`], [`HloModuleProto`]) is compile-time complete but
+//!   unavailable at runtime: `PjRtClient::cpu()` returns an error, so
+//!   callers take their documented "artifacts not built / PJRT
+//!   unavailable" fallback paths.
+//!
+//! Swapping the real `xla` crate back in requires no source change in
+//! `p2m` — only the workspace dependency.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Result alias used across the bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type of the bindings (stub: message-only).
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: String) -> Self {
+        Error { msg }
+    }
+
+    fn unavailable(what: &str) -> Self {
+        Error::new(format!(
+            "{what}: PJRT backend unavailable (this build uses the in-tree `xla` stub; \
+             link the real xla-rs crate + a PJRT plugin to execute AOT artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// XLA element types (subset relevant to this workspace, plus enough
+/// variants that downstream catch-all match arms stay reachable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    /// 1-bit predicate
+    Pred,
+    /// signed 8-bit
+    S8,
+    /// signed 32-bit
+    S32,
+    /// signed 64-bit
+    S64,
+    /// unsigned 8-bit
+    U8,
+    /// unsigned 32-bit
+    U32,
+    /// IEEE half
+    F16,
+    /// bfloat16
+    Bf16,
+    /// IEEE single
+    F32,
+    /// IEEE double
+    F64,
+}
+
+/// Host value storage of a [`Literal`].
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Rust scalar types storable in a [`Literal`].
+pub trait NativeType: Copy + Sized {
+    /// The XLA element type this maps to.
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn slice(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+
+    fn slice(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+
+    fn slice(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element type.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-resident literal value (fully functional in the stub).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![v]) }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Tuple literal.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Data::Tuple(elems) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::new("reshape on a tuple literal".into()));
+        }
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.len() {
+            return Err(Error::new(format!(
+                "reshape to {dims:?} ({n} elems) from {} elems",
+                self.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Shape of an array (non-tuple) literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+            Data::Tuple(_) => return Err(Error::new("array_shape on a tuple literal".into())),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::new(format!("literal is not {:?}", T::TY)))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error::new("to_tuple on a non-tuple literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: cannot be constructed at runtime).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (stub: always unavailable).
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(Error::unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation wrapping an [`HloModuleProto`].
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT device handle (stub placeholder).
+pub struct PjRtDevice {
+    _private: (),
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU client (stub: always unavailable).
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation (stub: unreachable, clients cannot exist).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    /// Synchronously upload a host buffer (stub: unreachable).
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Device-resident buffer (stub: cannot be constructed).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal (stub: unreachable).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable (stub: cannot be constructed).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals (stub: unreachable).
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device buffers (stub: unreachable).
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = Literal::scalar(0.25f32);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[] as &[i64]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![0.25]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn vec_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4]).reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::S32);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuples_decompose() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::vec1(&[7i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_report_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -3,6 +3,9 @@
 #
 #   ./ci.sh          # fmt + clippy + tier-1 (build + tests)
 #   ./ci.sh --fast   # tier-1 only
+#   ./ci.sh --bench  # additionally run the pipeline bench and refresh
+#                    # the machine-readable BENCH_pipeline.json at the
+#                    # repo root (the perf trajectory)
 #
 # Tier-1 is the hard gate: `cargo build --release && cargo test -q`.
 # fmt/clippy run first so style drift is caught before the long build;
@@ -10,7 +13,20 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
-if [[ "${1:-}" != "--fast" ]]; then
+FAST=0
+BENCH=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        --bench) BENCH=1 ;;
+        *)
+            echo "unknown flag: $arg (known: --fast --bench)" >&2
+            exit 2
+            ;;
+    esac
+done
+
+if [[ "$FAST" -eq 0 ]]; then
     echo "== cargo fmt --check =="
     cargo fmt --all -- --check
 
@@ -23,6 +39,14 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+if [[ "$BENCH" -eq 1 ]]; then
+    echo "== opt-in perf: cargo bench --bench pipeline =="
+    # Shorter measurement windows keep the CI pass quick; override by
+    # exporting P2M_BENCH_SECS yourself before calling.
+    P2M_BENCH_SECS="${P2M_BENCH_SECS:-0.3}" cargo bench --bench pipeline
+    echo "(refreshed BENCH_pipeline.json)"
+fi
 
 if python3 -c "import pytest, jax" >/dev/null 2>&1; then
     echo "== python golden-model tests =="

@@ -14,8 +14,7 @@ use std::collections::BTreeMap;
 use p2m::adc::WaveformTrace;
 use p2m::compression;
 use p2m::config::{HyperParams, SensorConfig};
-use p2m::coordinator::p2m_sensor_from_bundle;
-use p2m::coordinator::SensorCompute;
+use p2m::coordinator::p2m_plan_from_bundle;
 use p2m::frontend::Fidelity;
 use p2m::runtime::{ModelBundle, Runtime, Tensor};
 use p2m::sensor::{expose, Camera, Split};
@@ -43,13 +42,12 @@ fn main() -> anyhow::Result<()> {
     let frame = camera.capture();
     println!("captured frame {} (label: person={})", frame.id, frame.label);
 
-    // 3. the in-pixel layer, circuit-accurate, tracing the first CDS
-    let SensorCompute::P2m(engine) = p2m_sensor_from_bundle(&bundle, Fidelity::EventAccurate)?
-    else {
-        unreachable!()
-    };
+    // 3. the in-pixel layer, circuit-accurate, tracing the first CDS:
+    // compile the plan once, then drive it with a reusable context
+    let plan = p2m_plan_from_bundle(&bundle, Fidelity::EventAccurate)?;
+    let mut ctx = plan.ctx();
     let mut trace = WaveformTrace::default();
-    let (acts, report) = engine.process_traced(&frame.image, Some(&mut trace));
+    let (acts, report) = plan.process_traced(&frame.image, &mut ctx, Some(&mut trace));
     println!(
         "in-pixel conv: {} CDS conversions, {:.1} µs of column-ADC time, {} bytes out",
         report.conversions,
@@ -83,11 +81,12 @@ fn main() -> anyhow::Result<()> {
     println!("logits: [{:.3}, {:.3}] -> person={pred} (truth {})", logits[0], logits[1], frame.label);
 
     // 6. bonus: how noisy is the analog path? same scene, two exposures
+    // (same plan, same reusable ctx — the steady-state serving shape)
     let mut rng = Rng::seed(123);
     let scene = camera.scenes.image(1, 42, Split::Test);
-    let a = engine.process(&expose(&engine.cfg.sensor, &scene, &mut rng)).0;
-    let b = engine.process(&expose(&engine.cfg.sensor, &scene, &mut rng)).0;
-    let lsb = engine.cfg.adc.lsb() as f32;
+    let a = plan.process(&expose(&plan.cfg.sensor, &scene, &mut rng), &mut ctx).0;
+    let b = plan.process(&expose(&plan.cfg.sensor, &scene, &mut rng), &mut ctx).0;
+    let lsb = plan.cfg.adc.lsb() as f32;
     let max_dev = a
         .data
         .iter()

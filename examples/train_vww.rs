@@ -106,8 +106,8 @@ fn main() -> anyhow::Result<()> {
     // Validation through the rust circuit-accurate frontend + backbone —
     // the trained weights, "manufactured" into the analog pixel array.
     let sensor = p2m_sensor_from_bundle(&bundle, Fidelity::EventAccurate)?;
-    if let SensorCompute::P2m(engine) = &sensor {
-        let headroom = engine.operating_headroom();
+    if let SensorCompute::P2m { plan, .. } = &sensor {
+        let headroom = plan.operating_headroom();
         let min_h = headroom.iter().cloned().fold(f64::INFINITY, f64::min);
         println!("analog operating headroom after training: min {min_h:.2} (>= 1 is safe)");
     }

@@ -1,21 +1,24 @@
-//! Bench: the in-pixel frontend engine — the L3 hot path (one call per
-//! captured frame).  Functional vs. event-accurate fidelity, plus the
-//! capture + scene substrate it feeds on.
+//! Bench: the in-pixel frontend — the L3 hot path (one call per captured
+//! frame).  Functional GEMM route vs the per-patch folded route vs the
+//! unfolded reference, event-accurate fidelity, plus the capture + scene
+//! substrate it feeds on.  Contexts are reused across iterations, so the
+//! rows measure the steady state (no per-frame allocation beyond the
+//! output image).
 
 use p2m::analog::TransferSurface;
 use p2m::config::{SensorConfig, SystemConfig};
-use p2m::frontend::{Fidelity, FrontendEngine};
+use p2m::frontend::{Fidelity, FramePlan};
 use p2m::sensor::{expose, Camera, SceneGen, Split};
 use p2m::util::bench::Bench;
 use p2m::util::rng::Rng;
 
-fn engine(res: usize, fidelity: Fidelity) -> FrontendEngine {
+fn plan(res: usize, fidelity: Fidelity) -> FramePlan {
     let cfg = SystemConfig::for_resolution(res);
     let p = cfg.hyper.patch_len();
     let c = cfg.hyper.out_channels;
     let mut rng = Rng::seed(3);
     let theta: Vec<f32> = (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
-    FrontendEngine::new(
+    FramePlan::build(
         cfg,
         &theta,
         vec![1.0; c],
@@ -49,21 +52,32 @@ fn main() {
                 .capture()
                 .image
         };
-        let func = engine(res, Fidelity::Functional);
+        let func = plan(res, Fidelity::Functional);
         let n_out = {
             let (ho, wo, c) = func.cfg.out_dims();
             (ho * wo * c) as u64
         };
-        b.run_throughput(&format!("frontend_functional_{res}"), n_out, || {
-            func.process(&frame)
+        let mut ctx = func.ctx();
+        b.run_throughput(&format!("frontend_functional_{res}_gemm"), n_out, || {
+            func.process(&frame, &mut ctx)
         });
-        // §Perf before/after: the same engine with the folded-polynomial
-        // fast path disabled (per-eval reference path).
-        let slow = engine(res, Fidelity::Functional).with_fold_disabled();
+        // §Perf before/after 2: the same fold driven per patch (the
+        // pre-GEMM hot path).
+        let per_patch = plan(res, Fidelity::Functional).with_gemm_disabled();
+        let mut ctx = per_patch.ctx();
+        b.run_throughput(&format!("frontend_functional_{res}_per_patch"), n_out, || {
+            per_patch.process(&frame, &mut ctx)
+        });
+        // §Perf before/after 1: no fold at all (per-eval reference path).
+        let slow = plan(res, Fidelity::Functional).with_fold_disabled();
+        let mut ctx = slow.ctx();
         b.run_throughput(&format!("frontend_functional_{res}_unfolded"), n_out, || {
-            slow.process(&frame)
+            slow.process(&frame, &mut ctx)
         });
-        let ev = engine(res, Fidelity::EventAccurate);
-        b.run_throughput(&format!("frontend_event_{res}"), n_out, || ev.process(&frame));
+        let ev = plan(res, Fidelity::EventAccurate);
+        let mut ctx = ev.ctx();
+        b.run_throughput(&format!("frontend_event_{res}"), n_out, || {
+            ev.process(&frame, &mut ctx)
+        });
     }
 }

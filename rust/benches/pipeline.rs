@@ -1,23 +1,34 @@
-//! Bench: coordinator substrates (queue, batcher, router), the sharded
-//! multi-camera fleet vs sequential single-camera serving, intra-frame
-//! row parallelism, and the full end-to-end PJRT pipeline (the Fig. 8
-//! workload, measured rather than modelled).  The substrate and fleet
-//! rows always run; the PJRT rows need artifacts.
+//! Bench: coordinator substrates (queue, batcher, router), the single-
+//! frame frontend at paper scale (GEMM route vs the pre-refactor
+//! per-patch folded route, plus row-parallel scheduling), the sharded
+//! multi-camera fleet vs sequential single-camera serving, and the full
+//! end-to-end PJRT pipeline (the Fig. 8 workload, measured rather than
+//! modelled).  The substrate, frontend and fleet rows always run; the
+//! PJRT rows need artifacts.
+//!
+//! Always-run rows are additionally exported as machine-readable
+//! `BENCH_pipeline.json` at the repository root (see `util::bench::
+//! BenchReport` and `./ci.sh --bench`); keys are machine-independent,
+//! so committing the refreshed file records a diffable perf trail
+//! across PRs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use p2m::coordinator::{
     baseline_sensor, p2m_sensor_from_bundle, run_fleet, run_pipeline,
-    synthetic_fleet_sensors, Backpressure, BatchPolicy, Batcher, BoundedQueue,
-    FleetConfig, MeanThresholdClassifier, Metrics, PipelineConfig, RoutePolicy, Router,
+    synthetic_fleet_sensors, synthetic_frame_plan, Backpressure, BatchPolicy, Batcher,
+    BoundedQueue, FleetConfig, MeanThresholdClassifier, Metrics, PipelineConfig,
+    RoutePolicy, Router,
 };
 use p2m::frontend::Fidelity;
 use p2m::runtime::{Manifest, ModelBundle, Runtime};
 use p2m::sensor::{SceneGen, Split};
-use p2m::util::bench::{bb, Bench};
+use p2m::util::bench::{bb, Bench, BenchReport};
 
 fn main() {
     let mut b = Bench::new("pipeline");
+    let mut report = BenchReport::new("pipeline");
 
     b.run("queue_push_pop", || {
         let q = BoundedQueue::new(64, Backpressure::Block);
@@ -57,24 +68,47 @@ fn main() {
         n
     });
 
-    // --- Intra-frame row parallelism: one 560x560 frame, all cores. ---
+    // --- Single 560x560 frame (paper scale): the §Perf tentpole rows.
+    // One shared plan; the GEMM functional route vs the pre-refactor
+    // per-patch folded route, and row-block scheduling across all cores.
     {
         let res = 560usize;
-        let sensors = synthetic_fleet_sensors(res, Fidelity::Functional, 1).unwrap();
-        let p2m::coordinator::SensorCompute::P2m(engine) = &sensors[0] else {
-            unreachable!()
-        };
+        let plan = synthetic_frame_plan(res, Fidelity::Functional).unwrap();
+        let per_patch = (*plan).clone().with_gemm_disabled();
         let frame = SceneGen::new(res, 3).image(1, 0, Split::Train);
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        b.run(&format!("frontend_{res}_rows_serial"), || engine.process(&frame));
-        b.run(&format!("frontend_{res}_rows_x{cores}"), || {
-            engine.process_parallel(&frame, cores)
+
+        let mut ctx = plan.ctx();
+        let gemm_ns =
+            b.run(&format!("frontend_{res}_gemm"), || plan.process(&frame, &mut ctx));
+        let mut ctx = per_patch.ctx();
+        let prepatch_ns = b.run(&format!("frontend_{res}_per_patch"), || {
+            per_patch.process(&frame, &mut ctx)
         });
+        let par_ns = b.run(&format!("frontend_{res}_gemm_rows_x{cores}"), || {
+            plan.process_parallel(&frame, cores)
+        });
+
+        let gemm_speedup = prepatch_ns / gemm_ns;
+        let par_speedup = gemm_ns / par_ns;
+        println!(
+            "{:<44} -> {gemm_speedup:.2}x",
+            "gemm_speedup_vs_per_patch_560"
+        );
+        // JSON keys are machine-independent (the core count goes in its
+        // own row) so committed BENCH_pipeline.json files diff cleanly.
+        report.row("frontend_560_gemm", 1e9 / gemm_ns, "frames_per_s");
+        report.row("frontend_560_per_patch", 1e9 / prepatch_ns, "frames_per_s");
+        report.row("frontend_560_gemm_rows_parallel", 1e9 / par_ns, "frames_per_s");
+        report.row("parallel_cores", cores as f64, "count");
+        report.row("gemm_speedup_vs_per_patch_560", gemm_speedup, "ratio");
+        report.row("row_parallel_speedup_vs_serial_560", par_speedup, "ratio");
     }
 
-    // --- Fleet vs sequential single-camera: the tentpole comparison. ---
+    // --- Fleet vs sequential single-camera: the serving comparison. ---
     // Pure-rust producers + deterministic classifier, so this measures
-    // the sharded topology itself and runs in any checkout.
+    // the sharded topology itself and runs in any checkout.  All fleet
+    // producers share one compiled FramePlan.
     {
         let cams = 4usize;
         let frames = 24usize;
@@ -140,6 +174,17 @@ fn main() {
             "fleet_speedup_vs_sequential",
             fleet_fps / serial_fps
         );
+        report.row("serving_sequential_1cam", serial_fps, "frames_per_s");
+        report.row("serving_fleet_4cam", fleet_fps, "frames_per_s");
+        report.row("fleet_speedup_vs_sequential", fleet_fps / serial_fps, "ratio");
+    }
+
+    // Perf trajectory: machine-readable copy of the always-run rows at
+    // the repository root.
+    let json_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_pipeline.json");
+    match report.write(&json_path) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", json_path.display()),
     }
 
     // End-to-end pipelines (need artifacts + PJRT).

@@ -31,7 +31,7 @@ pub struct BaselineReadout {
 
 impl BaselineReadout {
     pub fn new(cfg: SensorConfig, kind: PipelineKind) -> Self {
-        assert!(kind != PipelineKind::P2m, "use FrontendEngine for P2M");
+        assert!(kind != PipelineKind::P2m, "use the P2M FramePlan for P2M");
         BaselineReadout { cfg, kind }
     }
 
@@ -102,7 +102,7 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "use FrontendEngine")]
+    #[should_panic(expected = "use the P2M FramePlan")]
     fn rejects_p2m_kind() {
         BaselineReadout::new(SensorConfig::default(), PipelineKind::P2m);
     }

@@ -16,9 +16,13 @@
 //!
 //! Each producer owns its own seeded [`Camera`] and [`SensorCompute`]
 //! and runs on a scoped `std::thread`; the classifier (which for PJRT is
-//! not `Send`) never leaves the caller's thread.  Every shard queue is a
-//! [`BoundedQueue`] with the configured backpressure policy, so
-//! per-camera drop accounting stays exact: for every camera,
+//! not `Send`) never leaves the caller's thread.  All P2M producers
+//! share **one** compiled [`FramePlan`] (the fleet constructors build it
+//! once — one curve-fit load, one weight fold — and hand each camera an
+//! `Arc` plus its own private `ExecCtx`), mirroring the silicon: the
+//! first layer is manufactured once, every stream reuses it.  Every
+//! shard queue is a [`BoundedQueue`] with the configured backpressure
+//! policy, so per-camera drop accounting stays exact: for every camera,
 //! `frames_captured == frames_classified + frames_dropped` at the end of
 //! a run.
 //!
@@ -33,6 +37,7 @@
 //! the outcome.  Timing-derived fields (`wall_time_s`,
 //! `throughput_fps`, latencies, `batches`, watermarks) naturally vary.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -41,11 +46,11 @@ use crate::config::SystemConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::{Latency, Metrics};
 use crate::coordinator::pipeline::{
-    p2m_sensor_from_bundle, BatchClassifier, PipelineStats, SensorCompute,
+    p2m_plan_from_bundle, BatchClassifier, PipelineStats, SensorCompute,
 };
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::coordinator::router::{RoutePolicy, Router};
-use crate::frontend::{Fidelity, FrontendEngine};
+use crate::frontend::{Fidelity, FramePlan};
 use crate::runtime::ModelBundle;
 use crate::sensor::{Camera, Image, Split};
 
@@ -185,6 +190,7 @@ pub fn run_fleet<C: BatchClassifier>(
             let threads = cfg.frontend_threads;
             let sensor_cfg = sensor.sensor_config();
             s.spawn(move || {
+                let mut sensor = sensor;
                 let mut camera = Camera::new(sensor_cfg, seed, Split::Test);
                 for _ in 0..n_frames {
                     let frame = camera.capture();
@@ -353,47 +359,55 @@ fn classify_fleet_batch<C: BatchClassifier>(
     Ok(())
 }
 
-/// Build `n` identical P2M sensor-compute instances from the bundle's
-/// live stem parameters — one engine per camera thread (engines are
-/// plain data and deliberately not shared across producers).
+/// Build `n` P2M sensor-compute instances from the bundle's live stem
+/// parameters, all sharing **one** compiled [`FramePlan`]: the curve-fit
+/// load and the weight fold happen exactly once, and each camera thread
+/// gets the shared `Arc` plus its own private `ExecCtx`.
 pub fn p2m_fleet_sensors(
     bundle: &ModelBundle,
     fidelity: Fidelity,
     n: usize,
 ) -> Result<Vec<SensorCompute>> {
-    (0..n).map(|_| p2m_sensor_from_bundle(bundle, fidelity)).collect()
+    let plan = p2m_plan_from_bundle(bundle, fidelity)?;
+    Ok((0..n).map(|_| SensorCompute::p2m(plan.clone())).collect())
 }
 
-/// Build `n` P2M sensor-compute instances with deterministic synthetic
-/// stem weights — no AOT artifacts or PJRT needed.  Used by the fleet
-/// integration tests, the throughput benches, and the CLI fallback when
-/// artifacts are not built; pair it with a deterministic backend such as
-/// [`crate::coordinator::MeanThresholdClassifier`].
+/// Compile one shared [`FramePlan`] with deterministic synthetic stem
+/// weights — no AOT artifacts or PJRT needed.  The plan behind
+/// [`synthetic_fleet_sensors`], exposed for tests and benches that drive
+/// the frontend directly.
+pub fn synthetic_frame_plan(
+    resolution: usize,
+    fidelity: Fidelity,
+) -> Result<Arc<FramePlan>> {
+    let cfg = SystemConfig::for_resolution(resolution);
+    let p = cfg.hyper.patch_len();
+    let c = cfg.hyper.out_channels;
+    let mut rng = crate::util::rng::Rng::seed(0x5EED);
+    let theta: Vec<f32> = (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+    FramePlan::build_shared(
+        cfg,
+        &theta,
+        vec![1.0; c],
+        vec![0.5; c],
+        crate::analog::TransferSurface::load_default(),
+        fidelity,
+    )
+    .map_err(anyhow::Error::msg)
+}
+
+/// Build `n` P2M sensor-compute instances over one shared
+/// [`synthetic_frame_plan`] — no AOT artifacts or PJRT needed.  Used by
+/// the fleet integration tests, the throughput benches, and the CLI
+/// fallback when artifacts are not built; pair it with a deterministic
+/// backend such as [`crate::coordinator::MeanThresholdClassifier`].
 pub fn synthetic_fleet_sensors(
     resolution: usize,
     fidelity: Fidelity,
     n: usize,
 ) -> Result<Vec<SensorCompute>> {
-    (0..n)
-        .map(|_| {
-            let cfg = SystemConfig::for_resolution(resolution);
-            let p = cfg.hyper.patch_len();
-            let c = cfg.hyper.out_channels;
-            let mut rng = crate::util::rng::Rng::seed(0x5EED);
-            let theta: Vec<f32> =
-                (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
-            let engine = FrontendEngine::new(
-                cfg,
-                &theta,
-                vec![1.0; c],
-                vec![0.5; c],
-                crate::analog::TransferSurface::load_default(),
-                fidelity,
-            )
-            .map_err(anyhow::Error::msg)?;
-            Ok(SensorCompute::P2m(engine))
-        })
-        .collect()
+    let plan = synthetic_frame_plan(resolution, fidelity)?;
+    Ok((0..n).map(|_| SensorCompute::p2m(plan.clone())).collect())
 }
 
 #[cfg(test)]

@@ -24,13 +24,14 @@ pub mod router;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use fleet::{
-    p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors, FleetConfig, FleetStats,
+    p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors, synthetic_frame_plan,
+    FleetConfig, FleetStats,
 };
 pub use metrics::{Counter, Latency, Metrics};
 pub use pipeline::{
-    baseline_sensor, p2m_sensor_from_bundle, run_pipeline, run_pipeline_with,
-    BatchClassifier, MeanThresholdClassifier, PipelineConfig, PipelineStats,
-    PjrtClassifier, SensorCompute,
+    baseline_sensor, p2m_plan_from_bundle, p2m_sensor_from_bundle, run_pipeline,
+    run_pipeline_with, BatchClassifier, MeanThresholdClassifier, PipelineConfig,
+    PipelineStats, PjrtClassifier, SensorCompute,
 };
 pub use queue::{Backpressure, BoundedQueue};
 pub use router::{RoutePolicy, Router};

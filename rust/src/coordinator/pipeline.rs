@@ -15,6 +15,7 @@
 //! [`crate::coordinator::fleet`].
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -25,42 +26,73 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::energy::PipelineKind;
-use crate::frontend::{Fidelity, FrontendEngine};
+use crate::frontend::{ExecCtx, Fidelity, FramePlan};
 use crate::runtime::{ModelBundle, Tensor};
 use crate::sensor::{Camera, Image, Split};
 
 /// What runs inside the sensor.
+///
+/// The P2M variant is the plan/ctx split made concrete: `plan` is the
+/// immutable compiled frontend (shareable across every producer thread
+/// of a fleet through the `Arc`), `ctx` is this producer's private
+/// hot-path scratch.
 pub enum SensorCompute {
     /// P2M: the in-pixel layer compresses on-sensor.
-    P2m(FrontendEngine),
+    P2m {
+        /// the compiled frontend, shared fleet-wide
+        plan: Arc<FramePlan>,
+        /// this producer's scratch (reused across frames)
+        ctx: ExecCtx,
+    },
     /// Baseline: raw digitised pixels leave the sensor.
     Baseline(BaselineReadout),
 }
 
 impl SensorCompute {
+    /// P2M sensor compute over a shared plan, with its own fresh
+    /// execution context.
+    pub fn p2m(plan: Arc<FramePlan>) -> Self {
+        let ctx = plan.ctx();
+        SensorCompute::P2m { plan, ctx }
+    }
+
+    /// The shared frame plan (None for baseline sensors).
+    pub fn plan(&self) -> Option<&Arc<FramePlan>> {
+        match self {
+            SensorCompute::P2m { plan, .. } => Some(plan),
+            SensorCompute::Baseline(_) => None,
+        }
+    }
+
     /// Sensor geometry/noise configuration of this compute instance.
     pub fn sensor_config(&self) -> SensorConfig {
         match self {
-            SensorCompute::P2m(engine) => engine.cfg.sensor,
+            SensorCompute::P2m { plan, .. } => plan.cfg.sensor,
             SensorCompute::Baseline(readout) => readout.cfg,
         }
     }
 
     /// True for the in-pixel P2M frontend.
     pub fn is_p2m(&self) -> bool {
-        matches!(self, SensorCompute::P2m(_))
+        matches!(self, SensorCompute::P2m { .. })
     }
 
     /// Run the on-sensor compute on one captured frame, optionally
-    /// spreading the P2M per-patch loop over `frontend_threads` cores.
+    /// spreading the P2M row-blocks over `frontend_threads` cores.
     /// Returns the link payload and its size in bytes.
-    pub fn run_frame(&self, image: &Image, frontend_threads: usize) -> (Image, u64) {
+    ///
+    /// `&mut self` because the serial P2M path reuses this producer's
+    /// [`ExecCtx`] scratch — at `frontend_threads <= 1` the steady-state
+    /// frontend allocates nothing beyond the outgoing payload.  The
+    /// row-parallel path (`frontend_threads > 1`) spawns scoped workers
+    /// that allocate their own per-chunk contexts each frame.
+    pub fn run_frame(&mut self, image: &Image, frontend_threads: usize) -> (Image, u64) {
         match self {
-            SensorCompute::P2m(engine) => {
+            SensorCompute::P2m { plan, ctx } => {
                 let (acts, report) = if frontend_threads > 1 {
-                    engine.process_parallel(image, frontend_threads)
+                    plan.process_parallel(image, frontend_threads)
                 } else {
-                    engine.process(image)
+                    plan.process(image, ctx)
                 };
                 (acts, report.output_bytes)
             }
@@ -297,6 +329,7 @@ pub fn run_pipeline_with<C: BatchClassifier>(
     let camera_seed = cfg.camera_seed;
     let frames_in = metrics.counter("frames_captured");
     let producer = std::thread::spawn(move || {
+        let mut sensor = sensor;
         let mut camera = Camera::new(sensor_cfg, camera_seed, Split::Test);
         for _ in 0..n_frames {
             let frame = camera.capture();
@@ -420,16 +453,17 @@ fn classify_batch<C: BatchClassifier>(
     Ok(())
 }
 
-/// Convenience: build the P2M sensor compute from the bundle's live stem
-/// parameters (the exact weights the backbone was trained with).
-pub fn p2m_sensor_from_bundle(
+/// Compile one shared [`FramePlan`] from the bundle's live stem
+/// parameters (the exact weights the backbone was trained with) — the
+/// one-time cost every producer thread then reuses.
+pub fn p2m_plan_from_bundle(
     bundle: &ModelBundle,
     fidelity: Fidelity,
-) -> Result<SensorCompute> {
+) -> Result<Arc<FramePlan>> {
     let sp = bundle.stem_params()?;
     let (scale, shift) = sp.fused_bn();
     let cfg = SystemConfig::for_resolution(bundle.entry.resolution);
-    let engine = FrontendEngine::new(
+    FramePlan::build_shared(
         cfg,
         &sp.theta,
         scale,
@@ -437,8 +471,16 @@ pub fn p2m_sensor_from_bundle(
         crate::analog::TransferSurface::load_default(),
         fidelity,
     )
-    .map_err(|e| anyhow!(e))?;
-    Ok(SensorCompute::P2m(engine))
+    .map_err(|e| anyhow!(e))
+}
+
+/// Convenience: build the P2M sensor compute from the bundle's live stem
+/// parameters (one plan, one fresh context).
+pub fn p2m_sensor_from_bundle(
+    bundle: &ModelBundle,
+    fidelity: Fidelity,
+) -> Result<SensorCompute> {
+    Ok(SensorCompute::p2m(p2m_plan_from_bundle(bundle, fidelity)?))
 }
 
 /// Convenience: baseline sensor compute for the same resolution.
@@ -459,8 +501,8 @@ mod tests {
         let c = cfg.hyper.out_channels;
         let mut rng = crate::util::rng::Rng::seed(5);
         let theta: Vec<f32> = (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
-        SensorCompute::P2m(
-            FrontendEngine::new(
+        SensorCompute::p2m(
+            FramePlan::build_shared(
                 cfg,
                 &theta,
                 vec![1.0; c],
@@ -524,9 +566,11 @@ mod tests {
     fn sensor_compute_accessors() {
         let s = synthetic_p2m(20);
         assert!(s.is_p2m());
+        assert!(s.plan().is_some());
         assert_eq!(s.sensor_config().rows, 20);
         let b = baseline_sensor(40);
         assert!(!b.is_p2m());
+        assert!(b.plan().is_none());
         assert_eq!(b.sensor_config().cols, 40);
     }
 }

@@ -1,5 +1,19 @@
-//! The P2M in-pixel frontend engine: the first CNN layer executed *inside*
-//! the sensor (paper Sections 3.2-3.3).
+//! The P2M in-pixel frontend: the first CNN layer executed *inside* the
+//! sensor (paper Sections 3.2-3.3), split compile-once / execute-many.
+//!
+//! The paper's premise is that this layer is *fixed in silicon*: trained
+//! weights become transistor widths, BN folds into the ramp slope and
+//! counter preset, and every frame reuses the manufactured array.  The
+//! module mirrors that shape:
+//!
+//! * [`FramePlan`] ([`plan`]) — the "manufactured die": validated config,
+//!   weight bank, transfer surface, folded activation polynomials (both
+//!   the per-patch table and its dense GEMM re-layout), BN realisation
+//!   and optional mismatch fold.  Immutable, `Arc`-shareable; built once
+//!   per model and shared by every camera thread in a fleet.
+//! * [`ExecCtx`] ([`exec`]) — one thread's private hot-path scratch
+//!   (patch gather buffer, row-block x-power matrix, phase-sum tile), so
+//!   steady-state frame processing performs no heap allocations.
 //!
 //! Channel-serial schedule, three phases per (receptive field, channel):
 //!
@@ -10,15 +24,112 @@
 //!    negative rails high);
 //! 3. **ReLU** — the SS-ADC/CDS latches `clamp(preset + up - down)`.
 //!
-//! Two execution modes sharing the same weight bank and transfer surface:
+//! Two execution modes sharing the same plan:
 //!
 //! * [`Fidelity::Functional`] — combined arithmetic quantisation, matching
 //!   the JAX/Pallas golden model bit-for-bit (integration-tested against
-//!   the exported frontend HLO);
+//!   the exported frontend HLO).  Hot path: the whole output row as one
+//!   blocked GEMM `Xpow · K` through [`crate::util::linalg`].
 //! * [`Fidelity::EventAccurate`] — true per-phase SS-ADC counting with
-//!   optional mismatch injection and waveform tracing; deviates from
-//!   functional by bounded per-phase quantisation effects.
+//!   optional mismatch injection and waveform tracing, on the per-patch
+//!   route; deviates from functional by bounded per-phase quantisation
+//!   effects.
 
-pub mod engine;
+pub mod exec;
+pub mod plan;
 
-pub use engine::{Fidelity, FrontendEngine, FrontendReport};
+pub use exec::ExecCtx;
+pub use plan::{FramePlan, MismatchBank};
+
+/// Execution fidelity of the analog/mixed-signal chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Combined arithmetic quantisation — bit-exact twin of the
+    /// JAX/Pallas golden model.
+    Functional,
+    /// True two-phase SS-ADC counting (per-phase quantisation, optional
+    /// waveform tracing) — the circuit-accurate path.
+    EventAccurate,
+}
+
+/// Per-frame processing statistics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrontendReport {
+    /// CDS double conversions performed (= h_o * w_o * c_o)
+    pub conversions: u64,
+    /// total ADC counter cycles across all conversions
+    pub adc_cycles: u64,
+    /// wall-clock conversion time [s] with one column-parallel SS-ADC per
+    /// output column: h_o * c_o serialised CDS conversions
+    pub adc_time_s: f64,
+    /// phases whose accumulated voltage exceeded the scaled ramp window
+    pub saturated_phases: u64,
+    /// activation bytes leaving the sensor (N_b bits per value)
+    pub output_bytes: u64,
+}
+
+impl FrontendReport {
+    /// Fold another report into this one (all fields are additive over
+    /// disjoint work, e.g. the row-chunks of one frame or the frames of
+    /// one run).
+    ///
+    /// The exhaustive destructuring is deliberate: adding a field to
+    /// `FrontendReport` without teaching `merge` about it is a compile
+    /// error, not a silently-dropped counter in the parallel reduction.
+    pub fn merge(&mut self, other: &FrontendReport) {
+        let FrontendReport {
+            conversions,
+            adc_cycles,
+            adc_time_s,
+            saturated_phases,
+            output_bytes,
+        } = *other;
+        self.conversions += conversions;
+        self.adc_cycles += adc_cycles;
+        self.adc_time_s += adc_time_s;
+        self.saturated_phases += saturated_phases;
+        self.output_bytes += output_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_every_field() {
+        let mut a = FrontendReport {
+            conversions: 1,
+            adc_cycles: 10,
+            adc_time_s: 0.5,
+            saturated_phases: 2,
+            output_bytes: 7,
+        };
+        let b = FrontendReport {
+            conversions: 3,
+            adc_cycles: 30,
+            adc_time_s: 1.5,
+            saturated_phases: 4,
+            output_bytes: 9,
+        };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            FrontendReport {
+                conversions: 4,
+                adc_cycles: 40,
+                adc_time_s: 2.0,
+                saturated_phases: 6,
+                output_bytes: 16,
+            }
+        );
+    }
+
+    #[test]
+    fn merge_with_default_is_identity() {
+        let mut a = FrontendReport { conversions: 5, ..FrontendReport::default() };
+        let before = a.clone();
+        a.merge(&FrontendReport::default());
+        assert_eq!(a, before);
+    }
+}

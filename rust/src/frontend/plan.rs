@@ -1,0 +1,471 @@
+//! [`FramePlan`] — the compile-once half of the frontend split (see
+//! module docs in `frontend/mod.rs`).
+//!
+//! Everything here is computed exactly once per *model*: config
+//! validation, the BN-gain rail re-tagging, the weight bank, the folded
+//! activation polynomials (per-patch table + dense GEMM operand) and the
+//! optional mismatch fold.  The result is immutable and `Arc`-shareable,
+//! so a whole camera fleet pays for one curve-fit load and one fold —
+//! the software mirror of the paper's "weights are manufactured once"
+//! premise.
+
+use std::sync::Arc;
+
+use crate::adc::SsAdc;
+use crate::analog::{TransferSurface, VariationModel, WeightBank};
+use crate::config::SystemConfig;
+use crate::frontend::exec::ExecCtx;
+use crate::frontend::Fidelity;
+use crate::util::rng::Rng;
+
+/// Activation-polynomial degree count: coefficients for x^0..x^NA.
+pub(crate) const NA1: usize = crate::analog::NA + 1;
+
+/// Per-device gain errors for the event-accurate path.
+///
+/// Width/threshold mismatch on a weight transistor manifests dominantly
+/// as a *gain* error of its pixel's contribution; we precompute one gain
+/// per (patch position, channel, rail) from the DC device model at
+/// construction so the per-frame hot path stays cheap.
+#[derive(Clone, Debug)]
+pub struct MismatchBank {
+    /// gain[(p * channels + c) * 2 + rail], rail 0 = pos, 1 = neg
+    gains: Vec<f64>,
+    channels: usize,
+}
+
+impl MismatchBank {
+    /// Sample one manufactured instance of the weight bank: per-device
+    /// gain errors drawn from `model`, evaluated through the DC device
+    /// model at the surface's operating point.
+    pub fn sample(
+        bank: &WeightBank,
+        surface: &TransferSurface,
+        model: &VariationModel,
+        seed: u64,
+    ) -> Self {
+        let params = surface.device_params();
+        let v_fs = surface.v_full_scale();
+        let mut rng = Rng::stream(seed, 0x715_CA7C);
+        let mut gains = Vec::with_capacity(bank.patch_len * bank.channels * 2);
+        for p in 0..bank.patch_len {
+            for c in 0..bank.channels {
+                let wp = bank.get(p, c);
+                for w in [wp.pos, wp.neg] {
+                    let inst = model.sample(&mut rng);
+                    let gain = if w > 0.0 {
+                        let nominal =
+                            crate::analog::pixel_output_voltage(&params, w, 1.0) / v_fs;
+                        if nominal > 0.0 {
+                            inst.eval(&params, w, 1.0, v_fs) / nominal
+                        } else {
+                            1.0
+                        }
+                    } else {
+                        1.0
+                    };
+                    gains.push(gain);
+                }
+            }
+        }
+        MismatchBank { gains, channels: bank.channels }
+    }
+
+    #[inline]
+    pub(crate) fn gain(&self, p: usize, c: usize, rail: usize) -> f64 {
+        self.gains[(p * self.channels + c) * 2 + rail]
+    }
+}
+
+/// Precomputed per-device activation polynomials — the per-patch layout
+/// of the folded hot path (§Perf optimisation 1).
+///
+/// The transfer surface is polynomial and each weight transistor's width
+/// is *fixed in silicon*, so the weight-dependent part folds at
+/// construction:
+///
+///   f(w[p,c], x) = sum_n ( sum_m C[m][n] * w^m ) * x^n
+///                = sum_n K[p,c,rail][n] * x^n
+///
+/// One patch then needs its x-powers once (75 x NA muls, shared by all
+/// channels and both rails) plus 2*C*(NA+1) dot products of length P.
+/// Mismatch gains fold into K as well.  This layout serves the
+/// event-accurate per-patch route; [`Fold::gemm_k`] is the same table
+/// re-laid out for the functional frame-level GEMM.
+#[derive(Clone, Debug)]
+pub(crate) struct ActPoly {
+    /// k[((p * channels + c) * 2 + rail) * (NA+1) + n]
+    pub(crate) k: Vec<f64>,
+    pub(crate) channels: usize,
+    pub(crate) patch_len: usize,
+}
+
+impl ActPoly {
+    fn build(
+        bank: &WeightBank,
+        surface: &TransferSurface,
+        mismatch: Option<&MismatchBank>,
+    ) -> Option<Self> {
+        // Only the polynomial backend folds; the direct-device backend
+        // keeps the per-eval path.
+        let TransferSurface::Poly(fit) = surface else { return None };
+        let (p_len, c) = (bank.patch_len, bank.channels);
+        let mut k = vec![0.0f64; p_len * c * 2 * NA1];
+        for p in 0..p_len {
+            for ch in 0..c {
+                let wp = bank.get(p, ch);
+                for (rail, w) in [wp.pos, wp.neg].into_iter().enumerate() {
+                    if w <= 0.0 {
+                        continue;
+                    }
+                    let gain = mismatch.map_or(1.0, |m| m.gain(p, ch, rail));
+                    let mut wm = 1.0;
+                    let base = ((p * c + ch) * 2 + rail) * NA1;
+                    for m in 0..crate::analog::MW {
+                        wm *= w;
+                        for n in 0..NA1 {
+                            k[base + n] += fit.coeffs[m][n] * wm * gain;
+                        }
+                    }
+                }
+            }
+        }
+        Some(ActPoly { k, channels: c, patch_len: p_len })
+    }
+
+    /// Accumulate both phases of every channel for one receptive field.
+    /// `xpow` is the patch's power table: xpow[p * NA1 + n] = x_p^n.
+    /// Writes (pos, neg) per channel into `out` (len 2*C).
+    ///
+    /// Degree-generic: the dot product runs over fixed-size `[f64; NA1]`
+    /// views, so the compiler fully unrolls it for whatever degree
+    /// `analog::NA` compiles to (the old hand-destructured form assumed
+    /// NA1 == 4 and would have silently truncated the dot product for
+    /// any higher degree).
+    #[inline]
+    pub(crate) fn accumulate(&self, xpow: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        let row_len = self.channels * 2 * NA1;
+        for (xp, row) in xpow
+            .chunks_exact(NA1)
+            .zip(self.k.chunks_exact(row_len))
+        {
+            let xp: &[f64; NA1] = xp.try_into().expect("chunks_exact(NA1)");
+            for (o, kk) in out.iter_mut().zip(row.chunks_exact(NA1)) {
+                let kk: &[f64; NA1] = kk.try_into().expect("chunks_exact(NA1)");
+                let mut acc = 0.0;
+                for (kv, xv) in kk.iter().zip(xp) {
+                    acc += kv * xv;
+                }
+                *o += acc;
+            }
+        }
+    }
+}
+
+/// The folded hot-path operands, built once per plan.
+///
+/// Both layouts hold the *same* coefficients: `per_patch` is the
+/// channel-major table the event-accurate per-patch route walks;
+/// `gemm_k`/`gemm_bias` re-lay it for the functional frame-level GEMM
+/// `Sums[patches x 2C] = Xpow[patches x P*NA] · K[P*NA x 2C]`, where the
+/// x^0 column — constant per device — is pre-summed into `gemm_bias`
+/// (one bias per (channel, rail)), saving a quarter of the GEMM flops.
+#[derive(Clone, Debug)]
+pub(crate) struct Fold {
+    /// per-patch layout (event-accurate route, GEMM-disabled bench mode)
+    pub(crate) per_patch: ActPoly,
+    /// row-major GEMM operand: gemm_k[(p * NA + (n-1)) * 2C + ch*2 + rail]
+    /// holds K[p,ch,rail][n] for n = 1..NA
+    pub(crate) gemm_k: Vec<f64>,
+    /// pre-summed x^0 terms: gemm_bias[ch*2 + rail] = sum_p K[p,ch,rail][0]
+    pub(crate) gemm_bias: Vec<f64>,
+    /// false = Functional falls back to the per-patch folded route (the
+    /// pre-GEMM hot path, kept measurable for the §Perf before/after)
+    pub(crate) use_gemm: bool,
+}
+
+impl Fold {
+    fn build(
+        bank: &WeightBank,
+        surface: &TransferSurface,
+        mismatch: Option<&MismatchBank>,
+    ) -> Option<Self> {
+        let per_patch = ActPoly::build(bank, surface, mismatch)?;
+        let (p_len, c) = (per_patch.patch_len, per_patch.channels);
+        let na = NA1 - 1;
+        let mut gemm_k = vec![0.0f64; p_len * na * 2 * c];
+        let mut gemm_bias = vec![0.0f64; 2 * c];
+        for p in 0..p_len {
+            for ch in 0..c {
+                for rail in 0..2 {
+                    let base = ((p * c + ch) * 2 + rail) * NA1;
+                    let col = ch * 2 + rail;
+                    gemm_bias[col] += per_patch.k[base];
+                    for n in 1..NA1 {
+                        gemm_k[(p * na + (n - 1)) * (2 * c) + col] = per_patch.k[base + n];
+                    }
+                }
+            }
+        }
+        Some(Fold { per_patch, gemm_k, gemm_bias, use_gemm: true })
+    }
+}
+
+/// The compiled frame plan: weight bank + transfer surface + SS-ADC +
+/// folded hot-path operands, channel-serial.
+///
+/// Immutable after construction.  Share one plan across producers with
+/// [`Arc`] (see [`crate::coordinator::fleet`]); give each thread its own
+/// [`ExecCtx`] via [`FramePlan::ctx`] and drive frames through
+/// [`FramePlan::process_into`] / [`FramePlan::process`] /
+/// [`FramePlan::process_parallel`] (defined in [`crate::frontend::exec`]).
+#[derive(Clone, Debug)]
+pub struct FramePlan {
+    /// full system configuration (sensor geometry, hyper-params, ADC)
+    pub cfg: SystemConfig,
+    /// the manufactured first-layer weight bank (widths per rail)
+    pub bank: WeightBank,
+    /// pixel transfer surface f(w, x) shared with the JAX golden model
+    pub surface: TransferSurface,
+    /// the column-parallel SS-ADC instance
+    pub adc: SsAdc,
+    /// per-channel BN gain A (realised as ramp slope)
+    pub bn_scale: Vec<f64>,
+    /// per-channel BN shift B (realised as counter preset)
+    pub bn_shift: Vec<f64>,
+    /// execution fidelity of the analog/mixed-signal chain
+    pub fidelity: Fidelity,
+    /// sampled process-variation gains (None = nominal silicon)
+    pub mismatch: Option<MismatchBank>,
+    /// folded hot-path operands (None for the direct-device surface
+    /// backend, which cannot fold)
+    pub(crate) fold: Option<Fold>,
+}
+
+impl FramePlan {
+    /// Compile a plan from trained first-layer weights (row-major
+    /// theta[(p, c)]) and fused BN parameters.  Fails when shapes
+    /// disagree with the config or a BN gain cannot be realised as a
+    /// ramp slope.
+    pub fn build(
+        cfg: SystemConfig,
+        theta: &[f32],
+        bn_scale: Vec<f64>,
+        bn_shift: Vec<f64>,
+        surface: TransferSurface,
+        fidelity: Fidelity,
+    ) -> Result<Self, String> {
+        cfg.validate().map_err(|e| e.to_string())?;
+        let p_len = cfg.hyper.patch_len();
+        let c = cfg.hyper.out_channels;
+        if theta.len() != p_len * c {
+            return Err(format!("theta has {} values, want {}", theta.len(), p_len * c));
+        }
+        if bn_scale.len() != c || bn_shift.len() != c {
+            return Err("bn parameter length mismatch".into());
+        }
+        // A negative BN gain cannot be a ramp slope — but the circuit
+        // realises it exactly by swapping the channel's rail tagging:
+        // A*(pos - neg) = |A|*(neg - pos), i.e. negate the channel's
+        // theta column and use |A|.  A zero gain is a dead channel; the
+        // ramp gets an epsilon slope (output = quantised preset only).
+        let mut theta_adj = theta.to_vec();
+        let mut bn_scale = bn_scale;
+        for (ch, a) in bn_scale.iter_mut().enumerate() {
+            if *a < 0.0 {
+                for p in 0..p_len {
+                    theta_adj[p * c + ch] = -theta_adj[p * c + ch];
+                }
+                *a = -*a;
+            } else if *a == 0.0 {
+                *a = 1e-9;
+            }
+        }
+        let bank = WeightBank::from_theta(&theta_adj, p_len, c, None);
+        let adc = SsAdc::new(cfg.adc);
+        let fold = Fold::build(&bank, &surface, None);
+        Ok(FramePlan {
+            cfg,
+            bank,
+            surface,
+            adc,
+            bn_scale,
+            bn_shift,
+            fidelity,
+            mismatch: None,
+            fold,
+        })
+    }
+
+    /// [`FramePlan::build`], wrapped for sharing: the form the serving
+    /// layers consume (one plan, N producer threads).
+    pub fn build_shared(
+        cfg: SystemConfig,
+        theta: &[f32],
+        bn_scale: Vec<f64>,
+        bn_shift: Vec<f64>,
+        surface: TransferSurface,
+        fidelity: Fidelity,
+    ) -> Result<Arc<Self>, String> {
+        Self::build(cfg, theta, bn_scale, bn_shift, surface, fidelity).map(Arc::new)
+    }
+
+    /// Attach mismatch gains (event-accurate Monte-Carlo runs) and
+    /// re-fold both hot-path layouts with them.
+    ///
+    /// Respects an earlier [`FramePlan::with_fold_disabled`]: a plan
+    /// without a fold stays on the reference path (which applies the
+    /// gains per eval in [`FramePlan::phase_sum`]) instead of silently
+    /// re-enabling the fast path.
+    pub fn with_mismatch(mut self, model: &VariationModel, seed: u64) -> Self {
+        let mm = MismatchBank::sample(&self.bank, &self.surface, model, seed);
+        self.fold = self.fold.take().and_then(|old| {
+            Fold::build(&self.bank, &self.surface, Some(&mm)).map(|mut f| {
+                f.use_gemm = old.use_gemm;
+                f
+            })
+        });
+        self.mismatch = Some(mm);
+        self
+    }
+
+    /// Disable the folded-polynomial fast path entirely (reference mode:
+    /// every device evaluated through the transfer surface — used to
+    /// verify the folds and to measure the §Perf optimisations).
+    #[doc(hidden)]
+    pub fn with_fold_disabled(mut self) -> Self {
+        self.fold = None;
+        self
+    }
+
+    /// Keep the fold but route Functional through the per-patch table
+    /// instead of the frame-level GEMM — the pre-GEMM hot path, kept for
+    /// the §Perf before/after benches.
+    #[doc(hidden)]
+    pub fn with_gemm_disabled(mut self) -> Self {
+        if let Some(f) = &mut self.fold {
+            f.use_gemm = false;
+        }
+        self
+    }
+
+    /// A fresh per-thread execution context sized for this plan.
+    pub fn ctx(&self) -> ExecCtx {
+        ExecCtx::new(self)
+    }
+
+    /// True when frames execute on the functional frame-level GEMM route
+    /// (vs the per-patch route) — decides how [`ExecCtx`] is sized.
+    pub(crate) fn uses_gemm_route(&self) -> bool {
+        self.fidelity == Fidelity::Functional
+            && self.fold.as_ref().map_or(false, |f| f.use_gemm)
+    }
+
+    /// Conversion-window check (see `adc::ss_adc` docs): the worst-case
+    /// per-phase swing of each channel, scaled by its BN gain, must fit
+    /// the ramp.  Returns per-channel headroom (>= 1.0 is safe).
+    pub fn operating_headroom(&self) -> Vec<f64> {
+        let c = self.cfg.hyper.out_channels;
+        (0..c)
+            .map(|ch| {
+                let swing_pos: f64 =
+                    self.bank.pos_column(ch).iter().map(|&w| self.surface.eval(w, 1.0)).sum();
+                let swing_neg: f64 =
+                    self.bank.neg_column(ch).iter().map(|&w| self.surface.eval(w, 1.0)).sum();
+                let swing = swing_pos.max(swing_neg).max(1e-12);
+                self.cfg.adc.full_scale / (self.bn_scale[ch] * swing)
+            })
+            .collect()
+    }
+
+    /// One phase's column-line accumulation for (patch, channel, rail) —
+    /// the reference path every fold is verified against.
+    #[inline]
+    pub(crate) fn phase_sum(&self, patch: &[f64], ch: usize, rail: usize) -> f64 {
+        let mut acc = 0.0;
+        for (p, &x) in patch.iter().enumerate() {
+            let wp = self.bank.get(p, ch);
+            let w = if rail == 0 { wp.pos } else { wp.neg };
+            if w > 0.0 {
+                let mut f = self.surface.eval(w, x);
+                if let Some(mm) = &self.mismatch {
+                    f *= mm.gain(p, ch, rail);
+                }
+                acc += f;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_bank(p_len: usize, c: usize, seed: u64) -> WeightBank {
+        let mut rng = Rng::seed(seed);
+        let theta: Vec<f32> = (0..p_len * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+        WeightBank::from_theta(&theta, p_len, c, None)
+    }
+
+    #[test]
+    fn gemm_layout_matches_per_patch_table() {
+        // The two fold layouts must be the same polynomial: for random
+        // patches, bias + Xpow·K == ActPoly::accumulate exactly up to
+        // summation order (tolerance covers the reassociation).
+        let surface = TransferSurface::load_default();
+        if !surface.is_poly() {
+            return; // device fallback cannot fold
+        }
+        let (p_len, c) = (12usize, 4usize);
+        let bank = test_bank(p_len, c, 9);
+        let fold = Fold::build(&bank, &surface, None).unwrap();
+        let na = NA1 - 1;
+        let mut rng = Rng::seed(17);
+        let patch: Vec<f64> = (0..p_len).map(|_| rng.range(0.0, 1.0)).collect();
+
+        // Per-patch route.
+        let mut xpow = vec![0.0f64; p_len * NA1];
+        for (p, &x) in patch.iter().enumerate() {
+            let row = &mut xpow[p * NA1..p * NA1 + NA1];
+            row[0] = 1.0;
+            for n in 1..NA1 {
+                row[n] = row[n - 1] * x;
+            }
+        }
+        let mut per_patch = vec![0.0f64; 2 * c];
+        fold.per_patch.accumulate(&xpow, &mut per_patch);
+
+        // GEMM route (single-row matmul by hand).
+        let mut gemm = fold.gemm_bias.clone();
+        for (p, &x) in patch.iter().enumerate() {
+            let mut v = 1.0;
+            for n in 0..na {
+                v *= x;
+                let krow = &fold.gemm_k[(p * na + n) * 2 * c..(p * na + n + 1) * 2 * c];
+                for (g, &kv) in gemm.iter_mut().zip(krow) {
+                    *g += v * kv;
+                }
+            }
+        }
+
+        for (a, b) in per_patch.iter().zip(&gemm) {
+            assert!((a - b).abs() < 1e-9, "per-patch {a} vs gemm {b}");
+        }
+    }
+
+    #[test]
+    fn mismatch_folds_into_both_layouts() {
+        let surface = TransferSurface::load_default();
+        if !surface.is_poly() {
+            return;
+        }
+        let bank = test_bank(8, 3, 21);
+        let mm = MismatchBank::sample(&bank, &surface, &VariationModel::default(), 5);
+        let nominal = Fold::build(&bank, &surface, None).unwrap();
+        let folded = Fold::build(&bank, &surface, Some(&mm)).unwrap();
+        assert_ne!(nominal.per_patch.k, folded.per_patch.k);
+        assert_ne!(nominal.gemm_k, folded.gemm_k);
+    }
+}

@@ -12,7 +12,7 @@ use p2m::analog::{DeviceParams, TransferSurface};
 use p2m::compression;
 use p2m::config::{AdcConfig, HyperParams, SystemConfig};
 use p2m::energy::{DelayConstants, EnergyConstants, PipelineKind, PipelineModel};
-use p2m::frontend::{Fidelity, FrontendEngine};
+use p2m::frontend::{Fidelity, FramePlan};
 use p2m::model::{analyse, table2_rows, ArchConfig};
 use p2m::report::{f, render_csv, render_table};
 use p2m::util::json::Json;
@@ -511,7 +511,7 @@ fn mismatch(rest: &[&str]) -> anyhow::Result<()> {
         let mut accs = Vec::new();
         let n_seeds = if sigma_mult == 0.0 { 1 } else { 3 };
         for seed in 0..n_seeds {
-            let engine = FrontendEngine::new(
+            let plan = FramePlan::build(
                 SystemConfig::for_resolution(80),
                 &sp.theta,
                 scale.clone(),
@@ -520,18 +520,18 @@ fn mismatch(rest: &[&str]) -> anyhow::Result<()> {
                 Fidelity::EventAccurate,
             )
             .map_err(|e| anyhow::anyhow!(e))?;
-            let engine = if sigma_mult > 0.0 {
-                engine.with_mismatch(
+            let plan = if sigma_mult > 0.0 {
+                plan.with_mismatch(
                     &p2m::analog::VariationModel::default().scaled(sigma_mult),
                     seed + 100,
                 )
             } else {
-                engine
+                plan
             };
             let metrics = Metrics::new();
             let stats = run_pipeline(
                 &mut bundle,
-                SensorCompute::P2m(engine),
+                SensorCompute::p2m(std::sync::Arc::new(plan)),
                 &PipelineConfig { n_frames: frames, batch: 8, ..PipelineConfig::default() },
                 &metrics,
             )?;
@@ -745,11 +745,11 @@ fn info() -> anyhow::Result<()> {
         Ok(rt) => println!("PJRT: {}", rt.platform()),
         Err(e) => println!("PJRT unavailable: {e}"),
     }
-    // Sanity: a frontend engine on default config.
+    // Sanity: a compiled frame plan on default config.
     let cfg = SystemConfig::for_resolution(80);
     let p_len = cfg.hyper.patch_len();
     let c = cfg.hyper.out_channels;
-    let engine = FrontendEngine::new(
+    let plan = FramePlan::build(
         cfg,
         &vec![0.1; p_len * c],
         vec![1.0; c],
@@ -758,7 +758,7 @@ fn info() -> anyhow::Result<()> {
         Fidelity::Functional,
     )
     .map_err(|e| anyhow::anyhow!(e))?;
-    println!("frontend engine: ok (headroom {:?})", &engine.operating_headroom()[..2]);
+    println!("frame plan: ok (headroom {:?})", &plan.operating_headroom()[..2]);
     let m = analyse(&ArchConfig::paper_p2m(560));
     println!(
         "paper-scale P2M model: {:.3} G MAdds, {:.3} MB peak",

@@ -5,10 +5,16 @@
 //! throughput reporting.  Target time per bench is tunable with
 //! `P2M_BENCH_SECS` (default 0.75 s measure + 0.25 s warmup) so CI and
 //! the perf pass can trade accuracy for wall-clock.
+//!
+//! [`BenchReport`] additionally exports named scalar results (per-row
+//! throughput, speedup ratios) as machine-readable JSON — the
+//! `BENCH_<group>.json` files that record the repo's perf trajectory
+//! (see `./ci.sh --bench`).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::percentile;
 
 /// One benchmark group; prints a header and aligned result rows.
@@ -102,6 +108,55 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench export: a flat list of named scalar rows
+/// (means, throughputs, speedup ratios) serialised as
+/// `{"schema": "p2m-bench-v1", "group": ..., "rows": [...]}`.
+///
+/// The benches write one `BENCH_<group>.json` at the repository root so
+/// successive PRs leave a diffable perf trail.
+pub struct BenchReport {
+    group: String,
+    rows: Vec<(String, f64, String)>,
+}
+
+impl BenchReport {
+    pub fn new(group: &str) -> Self {
+        BenchReport { group: group.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one named scalar with its unit (e.g. `"frames_per_s"`,
+    /// `"ratio"`, `"ns"`).
+    pub fn row(&mut self, name: &str, value: f64, unit: &str) {
+        self.rows.push((name.to_string(), value, unit.to_string()));
+    }
+
+    /// Serialise to the `p2m-bench-v1` JSON schema.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(name, value, unit)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("value", Json::Num(*value)),
+                    ("unit", Json::Str(unit.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str("p2m-bench-v1".into())),
+            ("group", Json::Str(self.group.clone())),
+            ("rows", Json::Arr(rows)),
+        ])
+        .dump()
+    }
+
+    /// Write the JSON (newline-terminated) to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json() + "\n")
+    }
+}
+
 /// Format nanoseconds human-readably.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -135,6 +190,21 @@ mod tests {
         assert!(mean > 0.0);
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].0.contains("selftest/noop-ish"));
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_json() {
+        let mut r = BenchReport::new("pipeline");
+        r.row("frontend_560_gemm", 12.5, "frames_per_s");
+        r.row("gemm_speedup", 1.7, "ratio");
+        let v = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_str), Some("p2m-bench-v1"));
+        assert_eq!(v.get("group").and_then(Json::as_str), Some("pipeline"));
+        let rows = v.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("frontend_560_gemm"));
+        assert_eq!(rows[0].get("value").and_then(Json::as_f64), Some(12.5));
+        assert_eq!(rows[1].get("unit").and_then(Json::as_str), Some("ratio"));
     }
 
     #[test]

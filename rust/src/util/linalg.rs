@@ -1,0 +1,129 @@
+//! Minimal dense linear algebra for the frontend's frame-level GEMM
+//! (substitutes an external BLAS, consistent with the offline vendor
+//! policy — see DESIGN.md §Substitutions).
+//!
+//! One kernel, tuned for the P2M shape: `C[M×N] = A[M×K] · B[K×N]` with
+//! a small, register-resident N (the frontend uses N = 2·C_o = 16) and a
+//! K in the low hundreds (P·NA = 225).  The loop order is axpy-style —
+//! for each (i, k) the scalar `A[i][k]` scales the `B` row into the `C`
+//! row — so the inner loop is a unit-stride fused multiply-add over N
+//! values that the compiler autovectorises, and the `C` row stays in
+//! registers/L1 for the whole K sweep.  K is additionally processed in
+//! cache-sized panels so the streamed `B` panel stays resident across
+//! the M rows.
+//!
+//! Accumulation order per output element is strictly ascending in `k`
+//! (panels are visited in order, rows within a panel in order), so the
+//! result is deterministic and independent of M-blocking — the property
+//! the frontend's serial-vs-parallel bit-identity tests rely on.
+
+/// K-panel height: `KC · N` values of `B` (≤ 32 KiB at the frontend's
+/// N = 16) stay hot in L1/L2 while every `A` row sweeps the panel.
+const KC: usize = 256;
+
+/// Dense row-major `C = A · B` over `f64`.
+///
+/// Shapes: `a` is `m×k`, `b` is `k×n`, `c` is `m×n`; `c` is overwritten
+/// (not accumulated into).  Panics when a slice length disagrees with
+/// its shape.
+pub fn matmul(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * k, "A is not m x k");
+    assert_eq!(b.len(), k * n, "B is not k x n");
+    assert_eq!(c.len(), m * n, "C is not m x n");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let b_panel = &b[k0 * n..k1 * n];
+        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+            for (&aik, b_row) in a_row[k0..k1].iter().zip(b_panel.chunks_exact(n)) {
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Textbook triple loop, same k-ascending accumulation order.
+    fn naive(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        matmul(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::seed(1);
+        let m = 5;
+        let a: Vec<f64> = (0..m * m).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut eye = vec![0.0; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1.0;
+        }
+        let mut c = vec![0.0; m * m];
+        matmul(m, m, m, &a, &eye, &mut c);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn overwrites_stale_output() {
+        let a = [1.0, 0.0];
+        let b = [2.0, 3.0];
+        let mut c = [99.0];
+        matmul(1, 2, 1, &a, &b, &mut c);
+        assert_eq!(c, [2.0]);
+    }
+
+    #[test]
+    fn empty_dims_are_fine() {
+        let mut c: [f64; 0] = [];
+        matmul(0, 3, 0, &[], &[], &mut c);
+    }
+
+    #[test]
+    fn matches_naive_bit_for_bit_across_shapes() {
+        // Same accumulation order as the triple loop, so the panelled
+        // kernel must be bit-identical — including shapes that straddle
+        // the KC panel boundary.
+        let mut rng = Rng::seed(42);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 7, 5), (4, 300, 16), (2, KC + 9, 3)] {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.range(-2.0, 2.0)).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.range(-2.0, 2.0)).collect();
+            let mut c = vec![0.0; m * n];
+            matmul(m, k, n, &a, &b, &mut c);
+            assert_eq!(c, naive(m, k, n, &a, &b), "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "A is not m x k")]
+    fn shape_mismatch_panics() {
+        let mut c = [0.0; 1];
+        matmul(1, 2, 1, &[1.0], &[1.0, 1.0], &mut c);
+    }
+}

@@ -1,11 +1,13 @@
 //! In-tree substrates for crates unavailable in the offline vendor set
-//! (serde_json, rand, proptest, criterion — see DESIGN.md §Substitutions).
+//! (serde_json, rand, proptest, criterion, BLAS — see DESIGN.md
+//! §Substitutions).
 //!
 //! Each module is a deliberately small, fully-tested replacement scoped to
 //! exactly what this crate needs.
 
 pub mod bench;
 pub mod json;
+pub mod linalg;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -4,11 +4,13 @@
 //! producers use deterministic synthetic stem weights and the consumer
 //! the pure-rust mean-threshold backend.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use p2m::coordinator::{
-    run_fleet, synthetic_fleet_sensors, Backpressure, BatchClassifier, FleetConfig,
-    FleetStats, MeanThresholdClassifier, Metrics,
+    run_fleet, synthetic_fleet_sensors, synthetic_frame_plan, Backpressure,
+    BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier, Metrics,
+    SensorCompute,
 };
 use p2m::frontend::Fidelity;
 use p2m::sensor::Image;
@@ -111,6 +113,43 @@ fn camera_seeds_reach_the_scene_stream() {
     assert_eq!(a.len(), 6);
     assert_eq!(a, trace(1), "same seed must replay the same payloads");
     assert_ne!(a, trace(2), "different seeds must change the frame payloads");
+}
+
+#[test]
+fn fleet_builds_exactly_one_shared_plan() {
+    // N cameras, one compiled FramePlan: every sensor holds the same Arc
+    // and nothing else does (one curve-fit load + one fold per fleet).
+    let sensors = synthetic_fleet_sensors(RES, Fidelity::Functional, 5).unwrap();
+    let first = sensors[0].plan().unwrap();
+    assert!(
+        sensors.iter().all(|s| Arc::ptr_eq(s.plan().unwrap(), first)),
+        "all cameras must share the same plan instance"
+    );
+    assert_eq!(Arc::strong_count(first), 5, "exactly one plan for 5 cameras");
+}
+
+#[test]
+fn shared_plan_fleet_payload_identical_to_private_plans() {
+    // Sharing one Arc<FramePlan> across the fleet must be a pure
+    // construction change: the payloads crossing the links are identical
+    // to the old one-independent-engine-per-camera construction.
+    let cfg = base_cfg();
+    let shared = synthetic_fleet_sensors(RES, Fidelity::Functional, cfg.n_cameras).unwrap();
+    let private: Vec<SensorCompute> = (0..cfg.n_cameras)
+        .map(|_| {
+            SensorCompute::p2m(synthetic_frame_plan(RES, Fidelity::Functional).unwrap())
+        })
+        .collect();
+    let checksums = |sensors: Vec<SensorCompute>| -> Vec<u64> {
+        let mut rec = RecordingBackend::default();
+        run_fleet(&mut rec, sensors, &cfg, &Metrics::new()).unwrap();
+        // Arrival order interleaves cameras nondeterministically; the
+        // payload multiset is the deterministic contract.
+        let mut sums = rec.sums;
+        sums.sort_unstable();
+        sums
+    };
+    assert_eq!(checksums(shared), checksums(private));
 }
 
 #[test]

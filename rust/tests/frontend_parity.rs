@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 
 use p2m::analog::TransferSurface;
 use p2m::config::SystemConfig;
-use p2m::frontend::{Fidelity, FrontendEngine};
+use p2m::frontend::{Fidelity, FramePlan};
 use p2m::runtime::{Manifest, ModelBundle, Runtime, Tensor};
 use p2m::sensor::{Image, SceneGen, Split};
 
@@ -18,10 +18,10 @@ fn artifacts_built() -> bool {
     Manifest::default_dir().join("manifest.json").exists()
 }
 
-fn build_engine(bundle: &ModelBundle, fidelity: Fidelity) -> FrontendEngine {
+fn build_plan(bundle: &ModelBundle, fidelity: Fidelity) -> FramePlan {
     let sp = bundle.stem_params().unwrap();
     let (scale, shift) = sp.fused_bn();
-    FrontendEngine::new(
+    FramePlan::build(
         SystemConfig::for_resolution(bundle.entry.resolution),
         &sp.theta,
         scale,
@@ -35,7 +35,8 @@ fn build_engine(bundle: &ModelBundle, fidelity: Fidelity) -> FrontendEngine {
 fn run_cases(res: usize, n_images: usize) {
     let rt = Runtime::cpu().unwrap();
     let mut bundle = ModelBundle::load(&rt, res).unwrap();
-    let engine = build_engine(&bundle, Fidelity::Functional);
+    let engine = build_plan(&bundle, Fidelity::Functional);
+    let mut ctx = engine.ctx();
     let lsb = engine.cfg.adc.lsb() as f32;
     let gen = SceneGen::new(res, 1234);
     let artifact = format!("frontend_{res}_b1");
@@ -53,7 +54,7 @@ fn run_cases(res: usize, n_images: usize) {
         let jax_out = bundle.run(&artifact, &extra).unwrap().remove(0);
         let jax = jax_out.as_f32().unwrap();
         // rust analog path
-        let (acts, _) = engine.process(&Image::from_vec(res, res, 3, img.data.clone()));
+        let (acts, _) = engine.process(&Image::from_vec(res, res, 3, img.data.clone()), &mut ctx);
         assert_eq!(acts.data.len(), jax.len());
         for (r, j) in acts.data.iter().zip(jax) {
             let d = (r - j).abs();
@@ -103,7 +104,7 @@ fn event_accurate_close_to_jax() {
     let res = 80;
     let rt = Runtime::cpu().unwrap();
     let mut bundle = ModelBundle::load(&rt, res).unwrap();
-    let engine = build_engine(&bundle, Fidelity::EventAccurate);
+    let engine = build_plan(&bundle, Fidelity::EventAccurate);
     let lsb = engine.cfg.adc.lsb() as f32;
     let gen = SceneGen::new(res, 99);
     let img = gen.image(1, 0, Split::Test);
@@ -112,7 +113,7 @@ fn event_accurate_close_to_jax() {
     extra.insert("image", Tensor::f32(vec![1, res, res, 3], img.data.clone()));
     let jax_out = bundle.run("frontend_80_b1", &extra).unwrap().remove(0);
     let jax = jax_out.as_f32().unwrap();
-    let (acts, report) = engine.process(&Image::from_vec(res, res, 3, img.data.clone()));
+    let (acts, report) = engine.process_once(&Image::from_vec(res, res, 3, img.data.clone()));
     assert_eq!(report.saturated_phases, 0, "init weights must fit the window");
     for (r, j) in acts.data.iter().zip(jax) {
         assert!((r - j).abs() <= 2.5 * lsb, "event {r} vs jax {j}");

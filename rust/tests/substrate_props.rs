@@ -6,21 +6,21 @@ use p2m::analog::{TransferSurface, VariationModel};
 use p2m::baseline::BaselineReadout;
 use p2m::config::{AdcConfig, SensorConfig, SystemConfig};
 use p2m::energy::{DelayConstants, EnergyConstants, PipelineKind, PipelineModel};
-use p2m::frontend::{Fidelity, FrontendEngine};
+use p2m::frontend::{Fidelity, FramePlan};
 use p2m::model::{analyse, ArchConfig, Stem};
 use p2m::prop_assert;
 use p2m::sensor::{expose, mosaic, tile_to_rgb, GreenPolicy, Image, SceneGen, Split};
 use p2m::util::prop::Prop;
 use p2m::util::rng::Rng;
 
-fn engine_with(theta_scale: f64, res: usize, seed: u64, fidelity: Fidelity) -> FrontendEngine {
+fn plan_with(theta_scale: f64, res: usize, seed: u64, fidelity: Fidelity) -> FramePlan {
     let cfg = SystemConfig::for_resolution(res);
     let p = cfg.hyper.patch_len();
     let c = cfg.hyper.out_channels;
     let mut rng = Rng::seed(seed);
     let theta: Vec<f32> =
         (0..p * c).map(|_| (rng.range(-1.0, 1.0) * theta_scale) as f32).collect();
-    FrontendEngine::new(
+    FramePlan::build(
         cfg,
         &theta,
         vec![1.0; c],
@@ -40,7 +40,7 @@ fn brighter_scene_never_reduces_positive_only_channels() {
         let p = cfg.hyper.patch_len();
         let c = cfg.hyper.out_channels;
         let theta: Vec<f32> = (0..p * c).map(|_| rng.range(0.05, 0.6) as f32).collect();
-        let engine = FrontendEngine::new(
+        let engine = FramePlan::build(
             cfg,
             &theta,
             vec![1.0; c],
@@ -51,8 +51,8 @@ fn brighter_scene_never_reduces_positive_only_channels() {
         .unwrap();
         let dim = Image::from_vec(res, res, 3, vec![0.2; res * res * 3]);
         let bright = Image::from_vec(res, res, 3, vec![0.8; res * res * 3]);
-        let (a, _) = engine.process(&dim);
-        let (b, _) = engine.process(&bright);
+        let (a, _) = engine.process_once(&dim);
+        let (b, _) = engine.process_once(&bright);
         for (x, y) in a.data.iter().zip(&b.data) {
             prop_assert!(y >= x, "bright {y} < dim {x}");
         }
@@ -66,12 +66,12 @@ fn full_chain_scene_to_codes_is_stable_under_noise() {
     // few LSB between exposures of the same scene (the repeatability a
     // camera vendor would spec).
     let res = 20usize;
-    let engine = engine_with(0.8, res, 3, Fidelity::Functional);
+    let engine = plan_with(0.8, res, 3, Fidelity::Functional);
     let scene = SceneGen::new(res, 4).image(1, 0, Split::Train);
     let sensor = SensorConfig::default().with_resolution(res);
     let mut rng = Rng::seed(5);
-    let (a, _) = engine.process(&expose(&sensor, &scene, &mut rng));
-    let (b, _) = engine.process(&expose(&sensor, &scene, &mut rng));
+    let (a, _) = engine.process_once(&expose(&sensor, &scene, &mut rng));
+    let (b, _) = engine.process_once(&expose(&sensor, &scene, &mut rng));
     let lsb = engine.cfg.adc.lsb() as f32;
     for (x, y) in a.data.iter().zip(&b.data) {
         assert!((x - y).abs() <= 4.0 * lsb, "{x} vs {y}");
@@ -85,8 +85,8 @@ fn bayer_path_composes_with_frontend() {
     let scene = SceneGen::new(res, 9).image(1, 2, Split::Train);
     let rgb_half = tile_to_rgb(&mosaic(&scene), GreenPolicy::Average);
     assert_eq!((rgb_half.h, rgb_half.w), (20, 20));
-    let engine = engine_with(0.8, 20, 7, Fidelity::Functional);
-    let (acts, report) = engine.process(&rgb_half);
+    let engine = plan_with(0.8, 20, 7, Fidelity::Functional);
+    let (acts, report) = engine.process_once(&rgb_half);
     assert_eq!((acts.h, acts.w, acts.c), (4, 4, 8));
     assert_eq!(report.output_bytes, 4 * 4 * 8);
 }
@@ -96,15 +96,15 @@ fn mismatch_scales_smoothly() {
     // Increasing process variation increases output deviation, but small
     // sigma keeps the codes close: failure-injection sanity.
     let res = 10usize;
-    let nominal = engine_with(0.8, res, 11, Fidelity::EventAccurate);
+    let nominal = plan_with(0.8, res, 11, Fidelity::EventAccurate);
     let img = SceneGen::new(res, 12).image(1, 0, Split::Train);
-    let (base, _) = nominal.process(&img);
+    let (base, _) = nominal.process_once(&img);
     let lsb = nominal.cfg.adc.lsb() as f32;
     let mut prev_dev = 0.0f32;
     for (i, mult) in [0.5, 2.0, 6.0].iter().enumerate() {
-        let noisy = engine_with(0.8, res, 11, Fidelity::EventAccurate)
+        let noisy = plan_with(0.8, res, 11, Fidelity::EventAccurate)
             .with_mismatch(&VariationModel::default().scaled(*mult), 42);
-        let (out, _) = noisy.process(&img);
+        let (out, _) = noisy.process_once(&img);
         let dev: f32 = out
             .data
             .iter()

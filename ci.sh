@@ -1,56 +1,112 @@
 #!/usr/bin/env bash
 # CI gate for the P2M reproduction.
 #
-#   ./ci.sh          # fmt + clippy + tier-1 (build + tests)
-#   ./ci.sh --fast   # tier-1 only
-#   ./ci.sh --bench  # additionally run the pipeline bench and refresh
-#                    # the machine-readable BENCH_pipeline.json at the
-#                    # repo root (the perf trajectory)
+#   ./ci.sh           # fmt + clippy + tier-1 (build + tests)
+#   ./ci.sh --fast    # tier-1 only
+#   ./ci.sh --bench   # additionally run the pipeline bench, refresh the
+#                     # machine-readable BENCH_pipeline.json at the repo
+#                     # root (the perf trajectory), and run the
+#                     # bench-regression gate against the committed
+#                     # baseline (fails on >25% throughput regression in
+#                     # any row; override with P2M_BENCH_TOL=<fraction>)
+#   ./ci.sh --quiet   # buffer per-step output, print it only on failure
+#                     # (keeps the Actions log readable)
 #
 # Tier-1 is the hard gate: `cargo build --release && cargo test -q`.
 # fmt/clippy run first so style drift is caught before the long build;
 # python tests run last and only when pytest + jax are importable.
+# All cargo invocations use --locked against the committed Cargo.lock.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 FAST=0
 BENCH=0
+QUIET=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
         --bench) BENCH=1 ;;
+        --quiet) QUIET=1 ;;
         *)
-            echo "unknown flag: $arg (known: --fast --bench)" >&2
+            echo "unknown flag: $arg (known: --fast --bench --quiet)" >&2
             exit 2
             ;;
     esac
 done
 
-if [[ "$FAST" -eq 0 ]]; then
-    echo "== cargo fmt --check =="
-    cargo fmt --all -- --check
+LOG="$(mktemp)"
+trap 'rm -f "$LOG"' EXIT
 
-    echo "== cargo clippy (deny warnings) =="
-    cargo clippy --workspace --all-targets -- -D warnings
+# Run one step; under --quiet its output is buffered and shown only on
+# failure, so a green Actions log is one line per step.
+step() {
+    local title="$1"
+    shift
+    echo "== $title =="
+    if [[ "$QUIET" -eq 1 ]]; then
+        if ! "$@" >"$LOG" 2>&1; then
+            echo "-- step failed: $title; output: --" >&2
+            cat "$LOG" >&2
+            exit 1
+        fi
+    else
+        "$@"
+    fi
+}
+
+# Tool versions up front: the first thing any CI log should answer is
+# "built with what?".
+echo "== toolchain =="
+rustc --version
+cargo --version
+cargo fmt --version 2>/dev/null || echo "rustfmt: unavailable"
+cargo clippy --version 2>/dev/null || echo "clippy: unavailable"
+
+if [[ "$FAST" -eq 0 ]]; then
+    step "cargo fmt --check" cargo fmt --all -- --check
+    step "cargo clippy (deny warnings)" \
+        cargo clippy --workspace --all-targets --locked -- -D warnings
 fi
 
-echo "== tier-1: cargo build --release =="
-cargo build --release
+step "tier-1: cargo build --release" cargo build --release --locked
 
-echo "== tier-1: cargo test -q =="
-cargo test -q
+step "tier-1: cargo test -q" cargo test -q --locked
 
 if [[ "$BENCH" -eq 1 ]]; then
-    echo "== opt-in perf: cargo bench --bench pipeline =="
+    # Preserve the committed baseline before the bench overwrites the
+    # worktree copy (prefer git's HEAD version; fall back to the
+    # pre-bench worktree file for non-git checkouts).
+    BASELINE="$(mktemp)"
+    trap 'rm -f "$LOG" "$BASELINE"' EXIT
+    if ! git show HEAD:BENCH_pipeline.json >"$BASELINE" 2>/dev/null; then
+        if [[ -f BENCH_pipeline.json ]]; then
+            cp BENCH_pipeline.json "$BASELINE"
+        else
+            rm -f "$BASELINE" # bootstrap: no baseline anywhere
+        fi
+    fi
+
     # Shorter measurement windows keep the CI pass quick; override by
     # exporting P2M_BENCH_SECS yourself before calling.
-    P2M_BENCH_SECS="${P2M_BENCH_SECS:-0.3}" cargo bench --bench pipeline
+    P2M_BENCH_SECS="${P2M_BENCH_SECS:-0.3}" \
+        step "opt-in perf: cargo bench --bench pipeline" \
+        cargo bench --bench pipeline --locked
     echo "(refreshed BENCH_pipeline.json)"
+
+    if [[ ! -f "$BASELINE" ]]; then
+        # Printed outside the buffered step so a green --quiet log still
+        # shows that the gate is NOT armed yet.
+        echo "!! bench gate BOOTSTRAP: no committed BENCH_pipeline.json baseline —" \
+             "commit the freshly written one to arm the regression gate !!"
+    fi
+    step "bench-regression gate (tol ${P2M_BENCH_TOL:-0.25})" \
+        cargo run --release --locked -q --bin bench_gate -- \
+        "$BASELINE" BENCH_pipeline.json
 fi
 
 if python3 -c "import pytest, jax" >/dev/null 2>&1; then
-    echo "== python golden-model tests =="
-    (cd python && python3 -m pytest tests -q)
+    step "python golden-model tests" \
+        bash -c 'cd python && python3 -m pytest tests -q'
 else
     echo "(python tests skipped: pytest/jax not importable)"
 fi

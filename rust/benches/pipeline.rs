@@ -19,7 +19,7 @@ use p2m::coordinator::{
     baseline_sensor, p2m_sensor_from_bundle, run_fleet, run_pipeline,
     synthetic_fleet_sensors, synthetic_frame_plan, Backpressure, BatchPolicy, Batcher,
     BoundedQueue, FleetConfig, MeanThresholdClassifier, Metrics, PipelineConfig,
-    RoutePolicy, Router,
+    RoutePolicy, Router, WireFormat,
 };
 use p2m::frontend::Fidelity;
 use p2m::runtime::{Manifest, ModelBundle, Runtime};
@@ -81,6 +81,13 @@ fn main() {
         let mut ctx = plan.ctx();
         let gemm_ns =
             b.run(&format!("frontend_{res}_gemm"), || plan.process(&frame, &mut ctx));
+        // The quantized wire sibling: same conversions, payload emitted
+        // as raw n_bits ADC codes (steady state: reused ctx + frame).
+        let mut qctx = plan.ctx();
+        let mut qframe = plan.quantized_frame();
+        let quant_ns = b.run(&format!("frontend_{res}_quantized"), || {
+            plan.process_quantized_into(&frame, &mut qctx, &mut qframe)
+        });
         let mut ctx = per_patch.ctx();
         let prepatch_ns = b.run(&format!("frontend_{res}_per_patch"), || {
             per_patch.process(&frame, &mut ctx)
@@ -95,14 +102,26 @@ fn main() {
             "{:<44} -> {gemm_speedup:.2}x",
             "gemm_speedup_vs_per_patch_560"
         );
+        // The payload-shrink story: measured wire bytes per frame.
+        let dense_bytes = (qframe.len() * 4) as f64;
+        let quant_bytes = qframe.wire_bytes() as f64;
+        println!(
+            "{:<44} -> {quant_bytes:.0} B vs {dense_bytes:.0} B dense ({:.2}x shrink)",
+            "wire_payload_560",
+            dense_bytes / quant_bytes
+        );
         // JSON keys are machine-independent (the core count goes in its
         // own row) so committed BENCH_pipeline.json files diff cleanly.
         report.row("frontend_560_gemm", 1e9 / gemm_ns, "frames_per_s");
+        report.row("frontend_560_quantized", 1e9 / quant_ns, "frames_per_s");
         report.row("frontend_560_per_patch", 1e9 / prepatch_ns, "frames_per_s");
         report.row("frontend_560_gemm_rows_parallel", 1e9 / par_ns, "frames_per_s");
         report.row("parallel_cores", cores as f64, "count");
         report.row("gemm_speedup_vs_per_patch_560", gemm_speedup, "ratio");
         report.row("row_parallel_speedup_vs_serial_560", par_speedup, "ratio");
+        report.row("wire_bytes_dense_560", dense_bytes, "bytes_per_frame");
+        report.row("wire_bytes_quantized_560", quant_bytes, "bytes_per_frame");
+        report.row("wire_payload_shrink_560", dense_bytes / quant_bytes, "ratio");
     }
 
     // --- Fleet vs sequential single-camera: the serving comparison. ---
@@ -128,7 +147,7 @@ fn main() {
         let mut clf = MeanThresholdClassifier::new(0.5);
         run_fleet(
             &mut clf,
-            synthetic_fleet_sensors(res, Fidelity::Functional, 1).unwrap(),
+            synthetic_fleet_sensors(res, Fidelity::Functional, 1, WireFormat::Dense).unwrap(),
             &mk_cfg(1, 99),
             &metrics,
         )
@@ -139,7 +158,8 @@ fn main() {
         for ci in 0..cams {
             let stats = run_fleet(
                 &mut clf,
-                synthetic_fleet_sensors(res, Fidelity::Functional, 1).unwrap(),
+                synthetic_fleet_sensors(res, Fidelity::Functional, 1, WireFormat::Dense)
+                    .unwrap(),
                 &mk_cfg(1, ci as u64),
                 &metrics,
             )
@@ -152,13 +172,29 @@ fn main() {
         let t1 = Instant::now();
         let stats = run_fleet(
             &mut clf,
-            synthetic_fleet_sensors(res, Fidelity::Functional, cams).unwrap(),
+            synthetic_fleet_sensors(res, Fidelity::Functional, cams, WireFormat::Dense)
+                .unwrap(),
             &mk_cfg(cams, 0),
             &metrics,
         )
         .unwrap();
         let fleet_s = t1.elapsed().as_secs_f64();
         let fleet_fps = stats.aggregate.frames_classified as f64 / fleet_s;
+
+        // The same fleet on the quantized wire format: identical
+        // decisions, 4x fewer link bytes — the throughput effect of
+        // emitting codes instead of f32 frames, measured.
+        let t2 = Instant::now();
+        let qstats = run_fleet(
+            &mut clf,
+            synthetic_fleet_sensors(res, Fidelity::Functional, cams, WireFormat::Quantized)
+                .unwrap(),
+            &mk_cfg(cams, 0),
+            &metrics,
+        )
+        .unwrap();
+        let qfleet_s = t2.elapsed().as_secs_f64();
+        let qfleet_fps = qstats.aggregate.frames_classified as f64 / qfleet_s;
 
         println!(
             "{:<44} -> {serial_fps:.1} frames/s ({serial_frames} frames, {serial_s:.2}s)",
@@ -170,13 +206,26 @@ fn main() {
             stats.aggregate.frames_classified
         );
         println!(
+            "{:<44} -> {qfleet_fps:.1} frames/s ({} B vs {} B on the links)",
+            format!("serving_{cams}x{frames}f_fleet_quantized"),
+            qstats.aggregate.bytes_from_sensor,
+            stats.aggregate.bytes_from_sensor
+        );
+        println!(
             "{:<44} -> {:.2}x",
             "fleet_speedup_vs_sequential",
             fleet_fps / serial_fps
         );
         report.row("serving_sequential_1cam", serial_fps, "frames_per_s");
         report.row("serving_fleet_4cam", fleet_fps, "frames_per_s");
+        report.row("serving_fleet_4cam_quantized", qfleet_fps, "frames_per_s");
         report.row("fleet_speedup_vs_sequential", fleet_fps / serial_fps, "ratio");
+        report.row(
+            "fleet_link_shrink_quantized",
+            stats.aggregate.bytes_from_sensor as f64
+                / qstats.aggregate.bytes_from_sensor.max(1) as f64,
+            "ratio",
+        );
     }
 
     // Perf trajectory: machine-readable copy of the always-run rows at

@@ -41,7 +41,12 @@ impl BaselineReadout {
     pub fn process(&self, image: &Image) -> (Image, ReadoutReport) {
         let digitised = digitise_native(&self.cfg, image);
         let rgb_values = (image.h * image.w * image.c) as u64;
-        let bayer_samples = (rgb_values as f64 * bayer_overhead_ratio()) as u64;
+        // Exact integer form of `rgb_values * bayer_overhead_ratio()`:
+        // RGB values come in triples, so * 4/3 never needs f64 (which
+        // truncates low bits once the product crosses 2^53).
+        debug_assert!((bayer_overhead_ratio() - 4.0 / 3.0).abs() < 1e-15);
+        debug_assert_eq!(rgb_values % 3, 0, "Bayer accounting assumes RGB triples");
+        let bayer_samples = rgb_values / 3 * 4;
         let bits = bayer_samples * self.cfg.bit_depth as u64;
         (
             digitised,

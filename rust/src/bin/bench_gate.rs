@@ -1,0 +1,83 @@
+//! `bench_gate` — the CI bench-regression gate.
+//!
+//! ```text
+//! bench_gate <baseline.json> <fresh.json>
+//! ```
+//!
+//! Compares a fresh `BENCH_pipeline.json` against the committed
+//! baseline (`util::bench::gate_regressions`): exits non-zero when any
+//! throughput row (`unit == "frames_per_s"`) regressed by more than the
+//! tolerance — 25% by default, overridable via `P2M_BENCH_TOL` (a
+//! fraction, e.g. `P2M_BENCH_TOL=0.4`).  A missing baseline file is the
+//! bootstrap case: the gate passes and asks for the fresh results to be
+//! committed.  Invoked by `./ci.sh --bench`.
+
+use p2m::util::bench::gate_regressions;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [baseline_path, fresh_path] = args.as_slice() else {
+        eprintln!("usage: bench_gate <baseline.json> <fresh.json>");
+        std::process::exit(2);
+    };
+    // A set-but-broken override must fail loudly, not silently gate at
+    // the default while the operator believes it was loosened.
+    let tol: f64 = match std::env::var("P2M_BENCH_TOL") {
+        Err(_) => 0.25,
+        Ok(s) => match s.parse::<f64>() {
+            Ok(v) if (0.0..1.0).contains(&v) => v,
+            _ => {
+                eprintln!(
+                    "bench-gate: P2M_BENCH_TOL must be a fraction in [0, 1), got '{s}'"
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+
+    let baseline = match std::fs::read_to_string(baseline_path) {
+        Ok(s) => s,
+        Err(_) => {
+            println!(
+                "bench-gate: no committed baseline at {baseline_path} — bootstrap run; \
+                 commit the fresh BENCH_pipeline.json to arm the gate"
+            );
+            return;
+        }
+    };
+    let fresh = match std::fs::read_to_string(fresh_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bench-gate: cannot read fresh results {fresh_path}: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    match gate_regressions(&baseline, &fresh, tol) {
+        Ok(failures) if failures.is_empty() => {
+            println!(
+                "bench-gate: OK — no throughput row regressed more than {:.0}% \
+                 (override with P2M_BENCH_TOL)",
+                tol * 100.0
+            );
+        }
+        Ok(failures) => {
+            eprintln!(
+                "bench-gate: FAILED ({} regression(s), tol {:.0}%):",
+                failures.len(),
+                tol * 100.0
+            );
+            for f in &failures {
+                eprintln!("  - {f}");
+            }
+            eprintln!(
+                "(intentional? refresh + commit BENCH_pipeline.json, or raise P2M_BENCH_TOL)"
+            );
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("bench-gate: {e}");
+            std::process::exit(2);
+        }
+    }
+}

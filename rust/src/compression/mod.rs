@@ -6,6 +6,7 @@
 //! activation-precision ratio.
 
 use crate::config::HyperParams;
+use crate::sensor::QuantizedFrame;
 
 /// Eq. 3: output element count O for an i x i RGB input.
 pub fn output_elems(h: &HyperParams, input: usize) -> u64 {
@@ -33,8 +34,24 @@ pub fn p2m_bits_per_frame(h: &HyperParams, input: usize) -> u64 {
 
 /// Bits leaving the sensor per frame, standard readout (all Bayer RGGB
 /// samples at native depth: I * (4/3) * bit_depth).
+///
+/// Exact integer arithmetic: `I = 3 * input^2` is always divisible by
+/// 3, so `I * 4/3 = 4 * input^2` needs no floating point — the old
+/// f64 multiply-then-truncate lost low bits once the product crossed
+/// 2^53 (large resolutions x deep sensors) and could truncate
+/// 0.999… products one bit low.
 pub fn baseline_bits_per_frame(input: usize, sensor_bit_depth: u32) -> u64 {
-    (input_elems(input) as f64 * (4.0 / 3.0) * sensor_bit_depth as f64) as u64
+    let bayer_samples = input_elems(input) / 3 * 4;
+    bayer_samples * sensor_bit_depth as u64
+}
+
+/// *Measured* bits-per-frame of an actual wire payload — the empirical
+/// counterpart of the [`p2m_bits_per_frame`] prediction.  The serving
+/// layer's [`QuantizedFrame`] carries `h_o * w_o * c_o` codes of
+/// `n_bits` each, so for a correctly-plumbed fleet the two agree
+/// *exactly* (pinned by the property test below and `tests/fleet.rs`).
+pub fn measured_bits_per_frame(payload: &QuantizedFrame) -> u64 {
+    payload.wire_bits()
 }
 
 #[cfg(test)]
@@ -104,6 +121,73 @@ mod tests {
         let h8 = HyperParams::default();
         let h32 = HyperParams { out_channels: 32, ..h8 };
         assert!(bandwidth_reduction(&h32, 560, 12) < bandwidth_reduction(&h8, 560, 12));
+    }
+
+    #[test]
+    fn baseline_bits_exact_integer_everywhere() {
+        // The integer form never truncates: 4 * input^2 * depth exactly,
+        // including sizes where the old f64 product crossed 2^53 and
+        // lost low bits.
+        assert_eq!(baseline_bits_per_frame(560, 12), 4 * 560 * 560 * 12);
+        assert_eq!(baseline_bits_per_frame(7, 12), 4 * 49 * 12);
+        let huge = 123_456_789usize;
+        assert_eq!(
+            baseline_bits_per_frame(huge, 12),
+            4 * (huge as u64) * (huge as u64) * 12,
+            "exact beyond the f64 mantissa"
+        );
+        // The f64 multiply-then-truncate this replaces really is lossy
+        // up there — the regression the satellite fix pins.
+        let f64_version =
+            (input_elems(huge) as f64 * (4.0 / 3.0) * 12.0) as u64;
+        assert_ne!(f64_version, baseline_bits_per_frame(huge, 12));
+    }
+
+    #[test]
+    fn measured_payload_bits_match_eq2_prediction() {
+        // The wire-format property: a QuantizedFrame produced by the
+        // frontend carries *exactly* p2m_bits_per_frame(h, input) bits,
+        // across random resolutions and n_bits in {4, 6, 8}.
+        use crate::analog::TransferSurface;
+        use crate::config::SystemConfig;
+        use crate::frontend::{Fidelity, FramePlan};
+        use crate::sensor::{SceneGen, Split};
+
+        Prop::new("measured wire bits == Eq. 2 model").cases(9).run(|rng| {
+            let res = 5 * rng.usize(2, 7); // 10..=35, divisible by k=s=5
+            let n_bits = *rng.choose(&[4u32, 6, 8]);
+            let mut cfg = SystemConfig::for_resolution(res);
+            cfg.hyper.n_bits = n_bits;
+            cfg.adc.n_bits = n_bits;
+            let p = cfg.hyper.patch_len();
+            let c = cfg.hyper.out_channels;
+            let theta: Vec<f32> =
+                (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+            let plan = FramePlan::build(
+                cfg.clone(),
+                &theta,
+                vec![1.0; c],
+                vec![0.5; c],
+                TransferSurface::load_default(),
+                Fidelity::Functional,
+            )
+            .unwrap();
+            let img = SceneGen::new(res, rng.next_u64()).image(1, 0, Split::Train);
+            let mut ctx = plan.ctx();
+            let (q, _) = plan.process_quantized(&img, &mut ctx);
+            let predicted = p2m_bits_per_frame(&cfg.hyper, res);
+            prop_assert!(
+                measured_bits_per_frame(&q) == predicted,
+                "res {res} n_bits {n_bits}: measured {} vs Eq.2 {predicted}",
+                measured_bits_per_frame(&q)
+            );
+            // And the serialised payload really is that many bits long.
+            prop_assert!(
+                q.pack_wire().len() as u64 == predicted.div_ceil(8),
+                "packed bytes disagree at res {res} n_bits {n_bits}"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //! `frames_captured == frames_classified + frames_dropped` at the end of
 //! a run.
 //!
+//! The shard links carry [`WirePayload`]s.  With [`WireFormat::Quantized`]
+//! sensors the payload is the honest silicon readout — `n_bits`-wide ADC
+//! codes plus per-frame dequant params — and dequantisation happens only
+//! at classifier ingest; `bytes_from_sensor` then measures exactly the
+//! Eq. 2 payload (`compression::p2m_bits_per_frame / 8` per frame)
+//! instead of a 32-bit-per-value dense stream.
+//!
 //! # Determinism
 //!
 //! For a fixed seed set and [`Backpressure::Block`], the *data-dependent*
@@ -46,13 +53,14 @@ use crate::config::SystemConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::{Latency, Metrics};
 use crate::coordinator::pipeline::{
-    p2m_plan_from_bundle, BatchClassifier, PipelineStats, SensorCompute,
+    p2m_plan_from_bundle, BatchClassifier, PipelineStats, SensorCompute, WireFormat,
+    WirePayload,
 };
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::coordinator::router::{RoutePolicy, Router};
 use crate::frontend::{Fidelity, FramePlan};
 use crate::runtime::ModelBundle;
-use crate::sensor::{Camera, Image, Split};
+use crate::sensor::{Camera, Split};
 
 /// Fleet topology + scheduling configuration.
 #[derive(Clone, Debug)]
@@ -142,12 +150,14 @@ pub struct FleetStats {
     pub aggregate: PipelineStats,
 }
 
-/// One frame in flight on a shard link.
+/// One frame in flight on a shard link: the wire payload (dense f32 or
+/// quantized ADC codes, per the sensor's [`WireFormat`]) plus routing
+/// metadata.
 struct FleetItem {
     camera: usize,
     label: u8,
     captured_at: Instant,
-    payload: Image,
+    payload: WirePayload,
     bytes: u64,
 }
 
@@ -339,8 +349,8 @@ fn classify_fleet_batch<C: BatchClassifier>(
     aggregate: &mut PipelineStats,
     latency: &std::sync::Arc<Latency>,
 ) -> Result<()> {
-    let images: Vec<&Image> = batch.iter().map(|item| &item.payload).collect();
-    let preds = classifier.classify(&images)?;
+    let payloads: Vec<&WirePayload> = batch.iter().map(|item| &item.payload).collect();
+    let preds = classifier.classify(&payloads)?;
     if preds.len() != batch.len() {
         bail!("classifier returned {} labels for {} frames", preds.len(), batch.len());
     }
@@ -362,14 +372,16 @@ fn classify_fleet_batch<C: BatchClassifier>(
 /// Build `n` P2M sensor-compute instances from the bundle's live stem
 /// parameters, all sharing **one** compiled [`FramePlan`]: the curve-fit
 /// load and the weight fold happen exactly once, and each camera thread
-/// gets the shared `Arc` plus its own private `ExecCtx`.
+/// gets the shared `Arc` plus its own private `ExecCtx`.  `wire` picks
+/// the shard-link payload format for the whole fleet.
 pub fn p2m_fleet_sensors(
     bundle: &ModelBundle,
     fidelity: Fidelity,
     n: usize,
+    wire: WireFormat,
 ) -> Result<Vec<SensorCompute>> {
     let plan = p2m_plan_from_bundle(bundle, fidelity)?;
-    Ok((0..n).map(|_| SensorCompute::p2m(plan.clone())).collect())
+    Ok((0..n).map(|_| SensorCompute::p2m_wire(plan.clone(), wire)).collect())
 }
 
 /// Compile one shared [`FramePlan`] with deterministic synthetic stem
@@ -405,9 +417,10 @@ pub fn synthetic_fleet_sensors(
     resolution: usize,
     fidelity: Fidelity,
     n: usize,
+    wire: WireFormat,
 ) -> Result<Vec<SensorCompute>> {
     let plan = synthetic_frame_plan(resolution, fidelity)?;
-    Ok((0..n).map(|_| SensorCompute::p2m(plan.clone())).collect())
+    Ok((0..n).map(|_| SensorCompute::p2m_wire(plan.clone(), wire)).collect())
 }
 
 #[cfg(test)]
@@ -426,12 +439,16 @@ mod tests {
         }
     }
 
-    fn run(cfg: &FleetConfig) -> FleetStats {
+    fn run_wire(cfg: &FleetConfig, wire: WireFormat) -> FleetStats {
         let sensors =
-            synthetic_fleet_sensors(20, Fidelity::Functional, cfg.n_cameras).unwrap();
+            synthetic_fleet_sensors(20, Fidelity::Functional, cfg.n_cameras, wire).unwrap();
         let metrics = Metrics::new();
         let mut clf = MeanThresholdClassifier::new(0.5);
         run_fleet(&mut clf, sensors, cfg, &metrics).unwrap()
+    }
+
+    fn run(cfg: &FleetConfig) -> FleetStats {
+        run_wire(cfg, WireFormat::Dense)
     }
 
     #[test]
@@ -442,17 +459,34 @@ mod tests {
             assert_eq!(st.frames_captured, 6);
             assert_eq!(st.frames_classified, 6);
             assert_eq!(st.frames_dropped, 0);
-            // 20x20 -> 4x4x8 8-bit codes = 128 bytes per frame.
-            assert_eq!(st.bytes_from_sensor, 6 * 128);
+            // Dense wire: 20x20 -> 4x4x8 f32 values = 512 bytes/frame.
+            assert_eq!(st.bytes_from_sensor, 6 * 512);
         }
         assert_eq!(stats.aggregate.frames_classified, 18);
         assert!(stats.aggregate.batches >= 5); // 18 frames / batch 4
     }
 
     #[test]
+    fn quantized_wire_fleet_matches_dense_decisions() {
+        // The quantized wire format is a pure re-encoding of the link:
+        // identical per-camera decisions, 4x fewer bytes (8-bit codes vs
+        // f32), and the measured payload equals the Eq. 2 model.
+        let cfg = small_cfg();
+        let dense = run(&cfg);
+        let quant = run_wire(&cfg, WireFormat::Quantized);
+        for (d, q) in dense.per_camera.iter().zip(&quant.per_camera) {
+            assert_eq!(d.correct, q.correct);
+            assert_eq!(d.frames_classified, q.frames_classified);
+            assert_eq!(q.bytes_from_sensor, 6 * 128, "4x4x8 8-bit codes");
+            assert_eq!(d.bytes_from_sensor, 4 * q.bytes_from_sensor);
+        }
+    }
+
+    #[test]
     fn sensor_count_must_match() {
         let cfg = small_cfg();
-        let sensors = synthetic_fleet_sensors(20, Fidelity::Functional, 2).unwrap();
+        let sensors =
+            synthetic_fleet_sensors(20, Fidelity::Functional, 2, WireFormat::Dense).unwrap();
         let metrics = Metrics::new();
         let mut clf = MeanThresholdClassifier::new(0.5);
         assert!(run_fleet(&mut clf, sensors, &cfg, &metrics).is_err());
@@ -479,7 +513,8 @@ mod tests {
     #[test]
     fn seed_list_length_is_validated() {
         let cfg = FleetConfig { camera_seeds: Some(vec![1, 2]), ..small_cfg() };
-        let sensors = synthetic_fleet_sensors(20, Fidelity::Functional, 3).unwrap();
+        let sensors =
+            synthetic_fleet_sensors(20, Fidelity::Functional, 3, WireFormat::Dense).unwrap();
         let metrics = Metrics::new();
         let mut clf = MeanThresholdClassifier::new(0.5);
         assert!(run_fleet(&mut clf, sensors, &cfg, &metrics).is_err());

@@ -14,6 +14,11 @@
 //! Classification is pluggable through [`BatchClassifier`]:
 //! [`PjrtClassifier`] serves the AOT artifacts through PJRT,
 //! [`MeanThresholdClassifier`] is the deterministic pure-rust fallback.
+//!
+//! Every link carries [`WirePayload`]s: dense f32 frames or — with
+//! [`WireFormat::Quantized`] sensors — the quantized wire format
+//! ([`crate::sensor::QuantizedFrame`]), dequantised only at classifier
+//! ingest.
 
 pub mod batcher;
 pub mod fleet;
@@ -31,7 +36,7 @@ pub use metrics::{Counter, Latency, Metrics};
 pub use pipeline::{
     baseline_sensor, p2m_plan_from_bundle, p2m_sensor_from_bundle, run_pipeline,
     run_pipeline_with, BatchClassifier, MeanThresholdClassifier, PipelineConfig,
-    PipelineStats, PjrtClassifier, SensorCompute,
+    PipelineStats, PjrtClassifier, SensorCompute, WireFormat, WirePayload,
 };
 pub use queue::{Backpressure, BoundedQueue};
 pub use router::{RoutePolicy, Router};

@@ -9,7 +9,10 @@
 //! is the deterministic pure-rust fallback used by tests, benches and
 //! artifact-less environments.  The bounded queue between producer and
 //! consumer *is* the sensor-to-SoC link, with its backpressure policy and
-//! byte accounting.
+//! byte accounting; it carries [`WirePayload`]s — dense f32 frames or
+//! the quantized wire format ([`crate::sensor::QuantizedFrame`], the
+//! `n_bits`-wide payload the P2M silicon actually emits) — and the
+//! classifier dequantises at ingest.
 //!
 //! For the N-camera generalisation of this single-producer loop see
 //! [`crate::coordinator::fleet`].
@@ -28,14 +31,122 @@ use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::energy::PipelineKind;
 use crate::frontend::{ExecCtx, Fidelity, FramePlan};
 use crate::runtime::{ModelBundle, Tensor};
-use crate::sensor::{Camera, Image, Split};
+use crate::sensor::{Camera, Image, QuantData, QuantizedFrame, Split};
+
+/// What a P2M sensor puts on the sensor-to-SoC link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Dense f32 activations (the debug/legacy stream: 32 bits/value).
+    Dense,
+    /// The honest silicon payload: `n_bits`-wide ADC codes plus per-
+    /// frame dequant params ([`QuantizedFrame`]); the classifier ingest
+    /// dequantises.
+    Quantized,
+}
+
+/// One frame on the wire: what actually crosses the shard queues and
+/// the [`BatchClassifier`] boundary.
+///
+/// `Dense` carries the dequantised f32 activations (or baseline
+/// pixels); `Quantized` carries the narrow payload the P2M silicon
+/// emits.  Dequantisation happens only at classifier ingest — the SoC
+/// side of the link — mirroring the sensor→SoC split of the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WirePayload {
+    /// dense f32 frame (32 bits per value on the wire)
+    Dense(Image),
+    /// quantized ADC codes + per-frame dequant params
+    Quantized(QuantizedFrame),
+}
+
+impl WirePayload {
+    /// Payload dimensions (h, w, c).
+    pub fn dims(&self) -> (usize, usize, usize) {
+        match self {
+            WirePayload::Dense(img) => (img.h, img.w, img.c),
+            WirePayload::Quantized(q) => (q.h, q.w, q.c),
+        }
+    }
+
+    /// Values in the frame.
+    pub fn len(&self) -> usize {
+        match self {
+            WirePayload::Dense(img) => img.len(),
+            WirePayload::Quantized(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bits this payload occupies on the link: measured, not modelled —
+    /// 32 per value for the dense stream, `spec.bits` per value for the
+    /// quantized wire format.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            WirePayload::Dense(img) => img.len() as u64 * 32,
+            WirePayload::Quantized(q) => q.wire_bits(),
+        }
+    }
+
+    /// Bytes on the link (bit-packed, rounded up per frame).
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bits().div_ceil(8)
+    }
+
+    /// Classifier-ingest dequantisation: write the dense f32 view into
+    /// a caller-owned slice (batch-tensor assembly without an
+    /// intermediate image).  Bit-identical across formats: the
+    /// quantized path computes exactly the `code * lsb` cast the dense
+    /// frontend path applied.
+    pub fn write_f32(&self, out: &mut [f32]) {
+        match self {
+            WirePayload::Dense(img) => out.copy_from_slice(&img.data),
+            WirePayload::Quantized(q) => q.dequantize_into(out),
+        }
+    }
+
+    /// Classifier-ingest dequantisation into a fresh dense [`Image`].
+    pub fn to_image(&self) -> Image {
+        match self {
+            WirePayload::Dense(img) => img.clone(),
+            WirePayload::Quantized(q) => q.dequantize(),
+        }
+    }
+
+    /// Mean of the dequantised values, computed with the same f32
+    /// accumulation order as [`Image::mean`] so threshold decisions are
+    /// identical across wire formats.
+    pub fn mean(&self) -> f32 {
+        match self {
+            WirePayload::Dense(img) => img.mean(),
+            WirePayload::Quantized(q) => {
+                if q.is_empty() {
+                    return 0.0;
+                }
+                // One storage match per frame, not per value; the f32
+                // sum order stays identical to Image::mean.
+                let sum: f32 = match &q.data {
+                    QuantData::U8(v) => {
+                        v.iter().map(|&c| q.spec.dequantize(c as u32)).sum()
+                    }
+                    QuantData::U16(v) => {
+                        v.iter().map(|&c| q.spec.dequantize(c as u32)).sum()
+                    }
+                };
+                sum / q.len() as f32
+            }
+        }
+    }
+}
 
 /// What runs inside the sensor.
 ///
 /// The P2M variant is the plan/ctx split made concrete: `plan` is the
 /// immutable compiled frontend (shareable across every producer thread
 /// of a fleet through the `Arc`), `ctx` is this producer's private
-/// hot-path scratch.
+/// hot-path scratch, and `wire` picks the link payload format.
 pub enum SensorCompute {
     /// P2M: the in-pixel layer compresses on-sensor.
     P2m {
@@ -43,17 +154,31 @@ pub enum SensorCompute {
         plan: Arc<FramePlan>,
         /// this producer's scratch (reused across frames)
         ctx: ExecCtx,
+        /// link payload format (dense f32 vs quantized ADC codes)
+        wire: WireFormat,
     },
-    /// Baseline: raw digitised pixels leave the sensor.
+    /// Baseline: raw digitised pixels leave the sensor (always dense —
+    /// the Bayer-sample wire model lives in [`crate::baseline`] /
+    /// [`crate::compression`]).
     Baseline(BaselineReadout),
 }
 
 impl SensorCompute {
     /// P2M sensor compute over a shared plan, with its own fresh
-    /// execution context.
+    /// execution context, streaming dense f32 activations.
     pub fn p2m(plan: Arc<FramePlan>) -> Self {
+        Self::p2m_wire(plan, WireFormat::Dense)
+    }
+
+    /// P2M sensor compute emitting the quantized wire format.
+    pub fn p2m_quantized(plan: Arc<FramePlan>) -> Self {
+        Self::p2m_wire(plan, WireFormat::Quantized)
+    }
+
+    /// P2M sensor compute with an explicit wire format.
+    pub fn p2m_wire(plan: Arc<FramePlan>, wire: WireFormat) -> Self {
         let ctx = plan.ctx();
-        SensorCompute::P2m { plan, ctx }
+        SensorCompute::P2m { plan, ctx, wire }
     }
 
     /// The shared frame plan (None for baseline sensors).
@@ -77,30 +202,46 @@ impl SensorCompute {
         matches!(self, SensorCompute::P2m { .. })
     }
 
+    /// Link payload format this sensor emits.
+    pub fn wire(&self) -> WireFormat {
+        match self {
+            SensorCompute::P2m { wire, .. } => *wire,
+            SensorCompute::Baseline(_) => WireFormat::Dense,
+        }
+    }
+
     /// Run the on-sensor compute on one captured frame, optionally
     /// spreading the P2M row-blocks over `frontend_threads` cores.
-    /// Returns the link payload and its size in bytes.
+    /// Returns the link payload and its measured size in bytes
+    /// ([`WirePayload::wire_bytes`] — f32-wide for the dense stream,
+    /// `n_bits`-wide for the quantized wire format).
     ///
     /// `&mut self` because the serial P2M path reuses this producer's
     /// [`ExecCtx`] scratch — at `frontend_threads <= 1` the steady-state
     /// frontend allocates nothing beyond the outgoing payload.  The
     /// row-parallel path (`frontend_threads > 1`) spawns scoped workers
-    /// that allocate their own per-chunk contexts each frame.
-    pub fn run_frame(&mut self, image: &Image, frontend_threads: usize) -> (Image, u64) {
-        match self {
-            SensorCompute::P2m { plan, ctx } => {
-                let (acts, report) = if frontend_threads > 1 {
-                    plan.process_parallel(image, frontend_threads)
-                } else {
-                    plan.process(image, ctx)
-                };
-                (acts, report.output_bytes)
-            }
-            SensorCompute::Baseline(readout) => {
-                let (img, report) = readout.process(image);
-                (img, report.output_bytes)
-            }
-        }
+    /// that allocate their own per-chunk contexts each frame; its
+    /// quantized form re-quantises the dense row-parallel output, which
+    /// is exact (every value is a code multiple of the LSB).
+    pub fn run_frame(&mut self, image: &Image, frontend_threads: usize) -> (WirePayload, u64) {
+        let payload = match self {
+            SensorCompute::P2m { plan, ctx, wire } => match (*wire, frontend_threads > 1) {
+                (WireFormat::Dense, true) => {
+                    WirePayload::Dense(plan.process_parallel(image, frontend_threads).0)
+                }
+                (WireFormat::Dense, false) => WirePayload::Dense(plan.process(image, ctx).0),
+                (WireFormat::Quantized, true) => {
+                    let acts = plan.process_parallel(image, frontend_threads).0;
+                    WirePayload::Quantized(QuantizedFrame::from_image(&acts, plan.quant))
+                }
+                (WireFormat::Quantized, false) => {
+                    WirePayload::Quantized(plan.process_quantized(image, ctx).0)
+                }
+            },
+            SensorCompute::Baseline(readout) => WirePayload::Dense(readout.process(image).0),
+        };
+        let bytes = payload.wire_bytes();
+        (payload, bytes)
     }
 }
 
@@ -178,7 +319,7 @@ struct LinkItem {
     id: u64,
     label: u8,
     captured_at: Instant,
-    payload: Image,
+    payload: WirePayload,
     bytes: u64,
 }
 
@@ -186,16 +327,19 @@ struct LinkItem {
 ///
 /// The pipeline/fleet consumers are generic over this trait so the same
 /// scheduling, batching and accounting code serves both the PJRT-backed
-/// production path and pure-rust deterministic backends.
+/// production path and pure-rust deterministic backends.  The boundary
+/// carries [`WirePayload`]s — the classifier is the SoC side of the
+/// link and performs its own ingest dequantisation
+/// ([`WirePayload::write_f32`] / [`WirePayload::to_image`]).
 pub trait BatchClassifier {
     /// Human-readable backend name (CLI / log output).
     fn name(&self) -> &'static str {
         "classifier"
     }
 
-    /// Classify a batch of sensor payloads; must return exactly one
+    /// Classify a batch of wire payloads; must return exactly one
     /// predicted label per input, in order.
-    fn classify(&mut self, batch: &[&Image]) -> Result<Vec<u8>>;
+    fn classify(&mut self, batch: &[&WirePayload]) -> Result<Vec<u8>>;
 }
 
 /// The production backend: pads each batch to the exported batch size
@@ -246,21 +390,20 @@ impl BatchClassifier for PjrtClassifier<'_, '_> {
         "pjrt"
     }
 
-    fn classify(&mut self, batch: &[&Image]) -> Result<Vec<u8>> {
+    fn classify(&mut self, batch: &[&WirePayload]) -> Result<Vec<u8>> {
         if batch.is_empty() {
             return Ok(Vec::new());
         }
         if batch.len() > self.batch {
             bail!("batch of {} exceeds exported size {}", batch.len(), self.batch);
         }
-        let (h, w, c) = {
-            let img = batch[0];
-            (img.h, img.w, img.c)
-        };
-        // Assemble (B, h, w, c), zero-padding to the exported batch size.
+        let (h, w, c) = batch[0].dims();
+        // Assemble (B, h, w, c), zero-padding to the exported batch
+        // size; quantized payloads dequantise here — classifier ingest —
+        // straight into the batch tensor.
         let mut data = vec![0.0f32; self.batch * h * w * c];
-        for (i, img) in batch.iter().enumerate() {
-            data[i * h * w * c..(i + 1) * h * w * c].copy_from_slice(&img.data);
+        for (i, payload) in batch.iter().enumerate() {
+            payload.write_f32(&mut data[i * h * w * c..(i + 1) * h * w * c]);
         }
         let input = Tensor::f32(vec![self.batch, h, w, c], data);
         let mut extra = BTreeMap::new();
@@ -308,8 +451,10 @@ impl BatchClassifier for MeanThresholdClassifier {
         "mean-threshold"
     }
 
-    fn classify(&mut self, batch: &[&Image]) -> Result<Vec<u8>> {
-        Ok(batch.iter().map(|img| u8::from(img.mean() > self.threshold)).collect())
+    fn classify(&mut self, batch: &[&WirePayload]) -> Result<Vec<u8>> {
+        // WirePayload::mean dequantises at ingest with the exact dense
+        // arithmetic, so decisions are identical across wire formats.
+        Ok(batch.iter().map(|p| u8::from(p.mean() > self.threshold)).collect())
     }
 }
 
@@ -435,8 +580,8 @@ fn classify_batch<C: BatchClassifier>(
     stats: &mut PipelineStats,
     latency: &std::sync::Arc<crate::coordinator::metrics::Latency>,
 ) -> Result<()> {
-    let images: Vec<&Image> = batch.iter().map(|item| &item.payload).collect();
-    let preds = classifier.classify(&images)?;
+    let payloads: Vec<&WirePayload> = batch.iter().map(|item| &item.payload).collect();
+    let preds = classifier.classify(&payloads)?;
     if preds.len() != batch.len() {
         bail!("classifier returned {} labels for {} frames", preds.len(), batch.len());
     }
@@ -529,9 +674,36 @@ mod tests {
         assert_eq!(stats.frames_captured, 10);
         assert_eq!(stats.frames_classified, 10);
         assert_eq!(stats.frames_dropped, 0);
-        // 20x20 input -> 4x4x8 8-bit codes = 128 bytes per frame.
-        assert_eq!(stats.bytes_from_sensor, 10 * 128);
+        // Dense wire: 20x20 input -> 4x4x8 f32 values = 512 bytes/frame.
+        assert_eq!(stats.bytes_from_sensor, 10 * 512);
         assert!(stats.batches >= 3);
+    }
+
+    #[test]
+    fn quantized_wire_shrinks_the_link_and_keeps_decisions() {
+        let cfg = PipelineConfig {
+            n_frames: 10,
+            batch: 4,
+            camera_seed: 3,
+            ..PipelineConfig::default()
+        };
+        let run = |sensor: SensorCompute| {
+            let metrics = Metrics::new();
+            let mut clf = MeanThresholdClassifier::new(0.5);
+            run_pipeline_with(&mut clf, sensor, &cfg, &metrics).unwrap()
+        };
+        let dense = run(synthetic_p2m(20));
+        let quant = {
+            let SensorCompute::P2m { plan, .. } = synthetic_p2m(20) else { unreachable!() };
+            run(SensorCompute::p2m_quantized(plan))
+        };
+        // Same decisions (ingest dequantisation is bit-identical) ...
+        assert_eq!(quant.correct, dense.correct);
+        assert_eq!(quant.frames_classified, dense.frames_classified);
+        // ... but the honest 8-bit payload: 4x4x8 codes = 128 bytes, a
+        // 4x shrink versus the f32 stream.
+        assert_eq!(quant.bytes_from_sensor, 10 * 128);
+        assert_eq!(dense.bytes_from_sensor, 4 * quant.bytes_from_sensor);
     }
 
     #[test]
@@ -552,7 +724,7 @@ mod tests {
     fn classifier_label_count_mismatch_is_error() {
         struct Broken;
         impl BatchClassifier for Broken {
-            fn classify(&mut self, _batch: &[&Image]) -> Result<Vec<u8>> {
+            fn classify(&mut self, _batch: &[&WirePayload]) -> Result<Vec<u8>> {
                 Ok(vec![0]) // always one label, regardless of batch size
             }
         }
@@ -568,9 +740,33 @@ mod tests {
         assert!(s.is_p2m());
         assert!(s.plan().is_some());
         assert_eq!(s.sensor_config().rows, 20);
+        assert_eq!(s.wire(), WireFormat::Dense);
+        let SensorCompute::P2m { plan, .. } = synthetic_p2m(20) else { unreachable!() };
+        assert_eq!(SensorCompute::p2m_quantized(plan).wire(), WireFormat::Quantized);
         let b = baseline_sensor(40);
         assert!(!b.is_p2m());
         assert!(b.plan().is_none());
         assert_eq!(b.sensor_config().cols, 40);
+        assert_eq!(b.wire(), WireFormat::Dense);
+    }
+
+    #[test]
+    fn wire_payload_accounting_and_ingest() {
+        let img = Image::from_vec(1, 2, 2, vec![0.25, 0.5, 0.75, 1.0]);
+        let dense = WirePayload::Dense(img.clone());
+        assert_eq!(dense.dims(), (1, 2, 2));
+        assert_eq!(dense.wire_bits(), 4 * 32);
+        assert_eq!(dense.wire_bytes(), 16);
+        assert_eq!(dense.to_image(), img);
+        assert_eq!(dense.mean(), img.mean());
+
+        let spec = crate::sensor::QuantSpec::unipolar(1.0, 4);
+        let q = WirePayload::Quantized(crate::sensor::QuantizedFrame::from_image(&img, spec));
+        assert_eq!(q.dims(), (1, 2, 2));
+        assert_eq!(q.wire_bits(), 4 * 4);
+        assert_eq!(q.wire_bytes(), 2, "4 codes x 4 bits bit-packed");
+        let mut buf = [0.0f32; 4];
+        q.write_f32(&mut buf);
+        assert_eq!(buf.to_vec(), q.to_image().data);
     }
 }

@@ -3,6 +3,10 @@
 //! The sensor-to-SoC link has finite bandwidth; when the SoC falls
 //! behind, a real camera either stalls the readout (Block) or drops
 //! frames (DropNewest).  Both policies are first-class and accounted.
+//! In the serving topologies the queued `T` is a
+//! [`crate::coordinator::WirePayload`]-carrying link item, so what sits
+//! in this buffer is exactly what the wire carries — with quantized
+//! sensors, the `n_bits`-wide codes rather than dense f32 frames.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

@@ -12,6 +12,14 @@
 //! subsequent frame, so steady-state [`FramePlan::process_into`] performs
 //! **zero heap allocations** (pinned by `tests/frontend_steady_state.rs`).
 //!
+//! Both row routes end in the same place: an integer ADC code deposited
+//! through a [`CodeSink`].  The sink picks the payload format —
+//! dense f32 dequantised activations ([`FramePlan::process_into`]) or
+//! the quantized wire format of raw `n_bits`-wide codes
+//! ([`FramePlan::process_quantized_into`], the honest sensor-to-SoC
+//! payload).  The conversion arithmetic is shared, so dequantising a
+//! quantized payload is bit-identical to the dense output.
+//!
 //! Route selection per row-chunk:
 //!
 //! * `Functional` with a folded plan — the whole output row at once:
@@ -34,8 +42,68 @@
 use crate::adc::WaveformTrace;
 use crate::frontend::plan::{Fold, NA1};
 use crate::frontend::{Fidelity, FramePlan, FrontendReport};
-use crate::sensor::Image;
+use crate::sensor::{Image, QuantData, QuantizedFrame};
 use crate::util::linalg;
+
+/// Where the hot path deposits its ADC codes — the seam between the
+/// fixed conversion arithmetic and the payload format.
+///
+/// Both row routes compute integer codes; the *sink* decides whether
+/// the payload is the dense dequantised image (`DenseSink`, the f64
+/// serving path) or the quantized wire format (`U8Sink`/`U16Sink`,
+/// emitting exactly the `n_bits`-wide codes the silicon sends).  All
+/// three are zero-cost monomorphisations over the same chunk loop.
+pub(crate) trait CodeSink {
+    /// Deposit `code` at chunk-local flat index `idx`.
+    fn put(&mut self, idx: usize, code: u32);
+    /// Values this sink holds (chunk-size invariant checks).
+    fn len(&self) -> usize;
+}
+
+/// Dense payload: dequantise each code back to f32 (`code * lsb`).
+struct DenseSink<'a> {
+    out: &'a mut [f32],
+    lsb: f64,
+}
+
+impl CodeSink for DenseSink<'_> {
+    #[inline]
+    fn put(&mut self, idx: usize, code: u32) {
+        self.out[idx] = (code as f64 * self.lsb) as f32;
+    }
+
+    fn len(&self) -> usize {
+        self.out.len()
+    }
+}
+
+/// Quantized payload, codes up to 8 bits wide.
+struct U8Sink<'a>(&'a mut [u8]);
+
+impl CodeSink for U8Sink<'_> {
+    #[inline]
+    fn put(&mut self, idx: usize, code: u32) {
+        self.0[idx] = code as u8;
+    }
+
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+}
+
+/// Quantized payload, codes 9..=16 bits wide.
+struct U16Sink<'a>(&'a mut [u16]);
+
+impl CodeSink for U16Sink<'_> {
+    #[inline]
+    fn put(&mut self, idx: usize, code: u32) {
+        self.0[idx] = code as u16;
+    }
+
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+}
 
 /// Per-thread hot-path scratch for one [`FramePlan`].
 ///
@@ -146,9 +214,60 @@ impl FramePlan {
         let (ho, wo, c) = self.cfg.out_dims();
         assert_eq!((out.h, out.w, out.c), (ho, wo, c), "output image dims");
         let mut report = FrontendReport::default();
-        self.process_row_chunk(image, 0, ho, &mut out.data, ctx, &mut report, trace);
+        let mut sink = DenseSink { out: &mut out.data, lsb: self.cfg.adc.lsb() };
+        self.process_row_chunk(image, 0, ho, &mut sink, ctx, &mut report, trace);
         self.finalise_report(&mut report, ho, c);
         report
+    }
+
+    /// The quantized sibling of [`FramePlan::process_into`]: identical
+    /// conversion arithmetic, but the payload is the wire format — the
+    /// raw `n_bits`-wide ADC codes plus the plan's [`QuantSpec`]
+    /// (`u8` storage for codes up to 8 bits, `u16` above), exactly what
+    /// the sensor-to-SoC link of the silicon carries.  `out` must be
+    /// sized by [`FramePlan::quantized_frame`]; with a reused `ctx` and
+    /// `out` the steady state performs no heap allocations (pinned by
+    /// `tests/frontend_steady_state.rs`).
+    ///
+    /// Dequantising the result is bit-identical to the dense path's
+    /// output: both sides compute `(code as f64 * lsb) as f32`.
+    ///
+    /// [`QuantSpec`]: crate::sensor::QuantSpec
+    pub fn process_quantized_into(
+        &self,
+        image: &Image,
+        ctx: &mut ExecCtx,
+        out: &mut QuantizedFrame,
+    ) -> FrontendReport {
+        self.check_input(image);
+        let (ho, wo, c) = self.cfg.out_dims();
+        assert_eq!((out.h, out.w, out.c), (ho, wo, c), "quantized frame dims");
+        assert_eq!(out.spec, self.quant, "frame spec must match the plan's ADC stage");
+        let mut report = FrontendReport::default();
+        match &mut out.data {
+            QuantData::U8(codes) => {
+                let mut sink = U8Sink(codes);
+                self.process_row_chunk(image, 0, ho, &mut sink, ctx, &mut report, None);
+            }
+            QuantData::U16(codes) => {
+                let mut sink = U16Sink(codes);
+                self.process_row_chunk(image, 0, ho, &mut sink, ctx, &mut report, None);
+            }
+        }
+        self.finalise_report(&mut report, ho, c);
+        report
+    }
+
+    /// [`FramePlan::process_quantized_into`] into a freshly allocated
+    /// wire frame.
+    pub fn process_quantized(
+        &self,
+        image: &Image,
+        ctx: &mut ExecCtx,
+    ) -> (QuantizedFrame, FrontendReport) {
+        let mut out = self.quantized_frame();
+        let report = self.process_quantized_into(image, ctx, &mut out);
+        (out, report)
     }
 
     /// Like [`FramePlan::process`], but the row-blocks are scheduled on
@@ -185,9 +304,11 @@ impl FramePlan {
                 let (chunk, tail) = taken.split_at_mut((oy1 - oy0) * wo * c);
                 rest = tail;
                 let report = report_iter.next().expect("chunk count mismatch");
+                let lsb = self.cfg.adc.lsb();
                 s.spawn(move || {
                     let mut ctx = self.ctx();
-                    self.process_row_chunk(image, oy0, oy1, chunk, &mut ctx, report, None);
+                    let mut sink = DenseSink { out: chunk, lsb };
+                    self.process_row_chunk(image, oy0, oy1, &mut sink, &mut ctx, report, None);
                 });
                 oy0 = oy1;
             }
@@ -217,24 +338,24 @@ impl FramePlan {
             (report.conversions * self.cfg.adc.n_bits as u64).div_ceil(8);
     }
 
-    /// Process output rows `[oy0, oy1)` into `out_rows` — a row-major
-    /// slice of exactly `(oy1 - oy0) * w_o * c_o` values — accumulating
-    /// the data-dependent counters into `report`.  `trace` is honoured
-    /// only by the chunk containing output row 0 (the Fig. 4 trace is
-    /// defined as the first receptive field's first channel).
-    fn process_row_chunk(
+    /// Process output rows `[oy0, oy1)` into `sink` — a chunk-local code
+    /// sink holding exactly `(oy1 - oy0) * w_o * c_o` values —
+    /// accumulating the data-dependent counters into `report`.  `trace`
+    /// is honoured only by the chunk containing output row 0 (the Fig. 4
+    /// trace is defined as the first receptive field's first channel).
+    fn process_row_chunk<S: CodeSink>(
         &self,
         image: &Image,
         oy0: usize,
         oy1: usize,
-        out_rows: &mut [f32],
+        sink: &mut S,
         ctx: &mut ExecCtx,
         report: &mut FrontendReport,
         trace: Option<&mut WaveformTrace>,
     ) {
         let (_, wo, c) = self.cfg.out_dims();
         let p_len = self.cfg.hyper.patch_len();
-        debug_assert_eq!(out_rows.len(), (oy1 - oy0) * wo * c, "chunk slice size");
+        debug_assert_eq!(sink.len(), (oy1 - oy0) * wo * c, "chunk sink size");
         let gemm_route = self.uses_gemm_route();
         assert_eq!(
             (ctx.p_len, ctx.wo, ctx.c, ctx.gemm),
@@ -243,10 +364,10 @@ impl FramePlan {
         );
         if gemm_route {
             let fold = self.fold.as_ref().expect("GEMM route implies a fold");
-            self.process_rows_gemm(image, oy0, oy1, out_rows, ctx, report, fold);
+            self.process_rows_gemm(image, oy0, oy1, sink, ctx, report, fold);
             return;
         }
-        self.process_rows_per_patch(image, oy0, oy1, out_rows, ctx, report, trace);
+        self.process_rows_per_patch(image, oy0, oy1, sink, ctx, report, trace);
     }
 
     /// The functional frame-level route: one GEMM per output row.
@@ -256,12 +377,12 @@ impl FramePlan {
     /// the plan's `gemm_bias`), so one output row is
     /// `Sums[w_o x 2C] = Xpow[w_o x P*NA] · K[P*NA x 2C]` followed by a
     /// fused BN + quantise sweep.
-    fn process_rows_gemm(
+    fn process_rows_gemm<S: CodeSink>(
         &self,
         image: &Image,
         oy0: usize,
         oy1: usize,
-        out_rows: &mut [f32],
+        sink: &mut S,
         ctx: &mut ExecCtx,
         report: &mut FrontendReport,
         fold: &Fold,
@@ -269,7 +390,6 @@ impl FramePlan {
         let k = self.cfg.hyper.kernel_size;
         let (_, wo, c) = self.cfg.out_dims();
         let p_len = self.cfg.hyper.patch_len();
-        let lsb = self.cfg.adc.lsb();
         let na = NA1 - 1;
         let kdim = p_len * na;
         let cycles_per_conversion = 2 * (1u64 << self.cfg.adc.n_bits);
@@ -312,7 +432,7 @@ impl FramePlan {
                     report.adc_cycles += cycles_per_conversion;
                     let code = self.adc.quantize(y as f64);
                     report.conversions += 1;
-                    out_rows[orow + ch] = (code as f64 * lsb) as f32;
+                    sink.put(orow + ch, code);
                 }
             }
         }
@@ -320,12 +440,12 @@ impl FramePlan {
 
     /// The per-patch route: event-accurate counting, the GEMM-disabled
     /// bench mode, and the unfoldable direct-device surface backend.
-    fn process_rows_per_patch(
+    fn process_rows_per_patch<S: CodeSink>(
         &self,
         image: &Image,
         oy0: usize,
         oy1: usize,
-        out_rows: &mut [f32],
+        sink: &mut S,
         ctx: &mut ExecCtx,
         report: &mut FrontendReport,
         mut trace: Option<&mut WaveformTrace>,
@@ -333,7 +453,6 @@ impl FramePlan {
         let k = self.cfg.hyper.kernel_size;
         let (_, wo, c) = self.cfg.out_dims();
         let p_len = self.cfg.hyper.patch_len();
-        let lsb = self.cfg.adc.lsb();
         let poly = self.fold.as_ref().map(|f| &f.per_patch);
         let patch = &mut ctx.patch[..p_len];
         let xpow = &mut ctx.xpow[..p_len * NA1];
@@ -405,7 +524,7 @@ impl FramePlan {
                         }
                     };
                     report.conversions += 1;
-                    out_rows[((oy - oy0) * wo + ox) * c + ch] = (code as f64 * lsb) as f32;
+                    sink.put(((oy - oy0) * wo + ox) * c + ch, code);
                 }
             }
         }
@@ -492,6 +611,48 @@ mod tests {
         for &v in &acts.data {
             assert!((v - preset).abs() < 6.0 * lsb, "v={v} preset={preset}");
         }
+    }
+
+    #[test]
+    fn quantized_payload_dequantises_bit_identical() {
+        // The wire format is a pure re-encoding: for both fidelities the
+        // dequantised QuantizedFrame equals the dense output exactly,
+        // and the measured payload is n_bits per conversion.
+        for fidelity in [Fidelity::Functional, Fidelity::EventAccurate] {
+            let e = plan(20, fidelity);
+            let img = SceneGen::new(20, 11).image(1, 2, Split::Train);
+            let (dense, dense_report) = e.process_once(&img);
+            let mut ctx = e.ctx();
+            let (q, q_report) = e.process_quantized(&img, &mut ctx);
+            assert_eq!(q.dequantize(), dense, "{fidelity:?}");
+            assert_eq!(q_report, dense_report, "{fidelity:?} report");
+            assert_eq!(q.wire_bits(), q_report.conversions * e.quant.bits as u64);
+            assert_eq!(q.spec.scale, e.cfg.adc.lsb());
+        }
+    }
+
+    #[test]
+    fn quantized_codes_match_requantised_dense_output() {
+        // Emitting codes directly must agree with quantising the dense
+        // image after the fact (the frontend_threads > 1 fallback).
+        let e = plan(20, Fidelity::Functional);
+        let img = SceneGen::new(20, 19).image(0, 3, Split::Train);
+        let mut ctx = e.ctx();
+        let (q, _) = e.process_quantized(&img, &mut ctx);
+        let (dense, _) = e.process_once(&img);
+        let requant = crate::sensor::QuantizedFrame::from_image(&dense, e.quant);
+        assert_eq!(q, requant);
+    }
+
+    #[test]
+    #[should_panic(expected = "frame spec must match")]
+    fn quantized_frame_spec_is_enforced() {
+        let e = plan(10, Fidelity::Functional);
+        let img = SceneGen::new(10, 1).image(1, 0, Split::Train);
+        let mut ctx = e.ctx();
+        let spec = crate::sensor::QuantSpec::unipolar(1.0, 8);
+        let mut wrong = crate::sensor::QuantizedFrame::zeros(2, 2, 8, spec);
+        let _ = e.process_quantized_into(&img, &mut ctx, &mut wrong);
     }
 
     #[test]

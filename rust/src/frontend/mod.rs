@@ -15,6 +15,14 @@
 //!   (patch gather buffer, row-block x-power matrix, phase-sum tile), so
 //!   steady-state frame processing performs no heap allocations.
 //!
+//! Two payload formats share the hot path (see [`exec`]'s `CodeSink`
+//! seam): the dense f32 activation image (`process_into`) and the
+//! quantized wire format (`process_quantized_into`, emitting the raw
+//! `n_bits` ADC codes as a [`crate::sensor::QuantizedFrame`] — the
+//! honest sensor-to-SoC payload the paper's Eq. 2 bandwidth model
+//! prices).  The plan's [`plan`] quantisation stage (`FramePlan::quant`)
+//! carries the scale/zero-point contract.
+//!
 //! Channel-serial schedule, three phases per (receptive field, channel):
 //!
 //! 1. **Reset** — the X*Y*3 pixel set is pre-charged;

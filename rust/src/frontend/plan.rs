@@ -16,6 +16,7 @@ use crate::analog::{TransferSurface, VariationModel, WeightBank};
 use crate::config::SystemConfig;
 use crate::frontend::exec::ExecCtx;
 use crate::frontend::Fidelity;
+use crate::sensor::{QuantSpec, QuantizedFrame};
 use crate::util::rng::Rng;
 
 /// Activation-polynomial degree count: coefficients for x^0..x^NA.
@@ -236,6 +237,13 @@ pub struct FramePlan {
     pub bn_shift: Vec<f64>,
     /// execution fidelity of the analog/mixed-signal chain
     pub fidelity: Fidelity,
+    /// the ADC quantisation stage as a wire contract: scale/zero-point
+    /// of the `n_bits` output codes, derived from the folded BN+ReLU
+    /// output range `[0, full_scale]` (ReLU pins the zero-point at code
+    /// 0; the ramp full scale pins the top code) — `scale` is exactly
+    /// the SS-ADC LSB, so quantized payloads dequantise bit-identically
+    /// to the dense path
+    pub quant: QuantSpec,
     /// sampled process-variation gains (None = nominal silicon)
     pub mismatch: Option<MismatchBank>,
     /// folded hot-path operands (None for the direct-device surface
@@ -285,6 +293,13 @@ impl FramePlan {
         let bank = WeightBank::from_theta(&theta_adj, p_len, c, None);
         let adc = SsAdc::new(cfg.adc);
         let fold = Fold::build(&bank, &surface, None);
+        // The ADC quantisation stage as wire metadata.  The folded
+        // BN+ReLU output range is [0, full_scale]: the ReLU clamp puts
+        // the zero-point at code 0 and the conversion window's top at
+        // code 2^n_bits - 1, which makes the spec's scale exactly the
+        // SS-ADC LSB (asserted — the dequant bit-identity depends on it).
+        let quant = QuantSpec::unipolar(cfg.adc.full_scale, cfg.hyper.n_bits);
+        debug_assert_eq!(quant.scale, adc.cfg.lsb());
         Ok(FramePlan {
             cfg,
             bank,
@@ -295,6 +310,7 @@ impl FramePlan {
             fidelity,
             mismatch: None,
             fold,
+            quant,
         })
     }
 
@@ -353,6 +369,14 @@ impl FramePlan {
     /// A fresh per-thread execution context sized for this plan.
     pub fn ctx(&self) -> ExecCtx {
         ExecCtx::new(self)
+    }
+
+    /// An all-zero [`QuantizedFrame`] sized for this plan's output —
+    /// the caller-owned payload buffer of the quantized readout path
+    /// ([`FramePlan::process_quantized_into`]).
+    pub fn quantized_frame(&self) -> QuantizedFrame {
+        let (ho, wo, c) = self.cfg.out_dims();
+        QuantizedFrame::zeros(ho, wo, c, self.quant)
     }
 
     /// True when frames execute on the functional frame-level GEMM route

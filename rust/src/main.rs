@@ -79,7 +79,8 @@ commands (one per paper table/figure):
   area      heterogeneous-integration area feasibility (Section 3.4, Fig. 5)
   mismatch  Monte-Carlo accuracy vs process variation (robustness study)
   fleet     sharded multi-camera serving fleet vs sequential single-camera
-            (--cameras N --frames M --batch B --queue Q --drop --threads T --seed S)
+            (--cameras N --frames M --batch B --queue Q --drop --threads T
+             --seed S --quantized : ship n_bits ADC codes on the links)
   info      artifact + environment status
 
 examples (cargo run --release --example <name>):
@@ -560,7 +561,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
         p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors, Backpressure,
         BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier, Metrics,
-        PjrtClassifier, SensorCompute,
+        PjrtClassifier, SensorCompute, WireFormat,
     };
     use p2m::runtime::{Manifest, ModelBundle, Runtime};
 
@@ -577,6 +578,11 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     let threads = flag("--threads").unwrap_or(1);
     let seed = flag("--seed").unwrap_or(0) as u64;
     let drop = rest.contains(&"--drop");
+    let wire = if rest.contains(&"--quantized") {
+        WireFormat::Quantized
+    } else {
+        WireFormat::Dense
+    };
 
     let mk_cfg = |n_cameras: usize, base_seed: u64| FleetConfig {
         n_cameras,
@@ -662,8 +668,8 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     };
     let mk_sensors = |bundle: Option<&ModelBundle>, n: usize| -> anyhow::Result<Vec<SensorCompute>> {
         match bundle {
-            Some(b) => p2m_fleet_sensors(b, Fidelity::Functional, n),
-            None => synthetic_fleet_sensors(res, Fidelity::Functional, n),
+            Some(b) => p2m_fleet_sensors(b, Fidelity::Functional, n, wire),
+            None => synthetic_fleet_sensors(res, Fidelity::Functional, n, wire),
         }
     };
     let backend_name = if pjrt {
@@ -676,15 +682,52 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
 
     println!(
         "== fleet: {cameras} cameras x {frames} frames, batch {batch}, queue {queue}, \
-         {} backpressure, {threads} frontend thread(s) ==",
-        if drop { "drop-newest" } else { "blocking" }
+         {} backpressure, {threads} frontend thread(s), {} wire ==",
+        if drop { "drop-newest" } else { "blocking" },
+        match wire {
+            WireFormat::Dense => "dense f32",
+            WireFormat::Quantized => "quantized",
+        }
     );
     let metrics = Metrics::new();
     let fleet_sensors = mk_sensors(bundle.as_ref(), cameras)?;
+    // Eq. 2 payload per frame derived from the *actual* compiled plan
+    // (exact for both the synthetic and the PJRT-bundle path, whatever
+    // resolution/n_bits the bundle carries).
+    let quant_frame_bytes = fleet_sensors.first().and_then(SensorCompute::plan).map(|p| {
+        let (ho, wo, c) = p.cfg.out_dims();
+        ((ho * wo * c) as u64 * u64::from(p.quant.bits)).div_ceil(8)
+    });
+    if wire == WireFormat::Quantized {
+        // The wire contract the run must honour: measured payload bytes
+        // per frame == the Eq. 2 model over the plan's own n_bits.
+        if let Some(plan) = fleet_sensors.first().and_then(SensorCompute::plan) {
+            let (ho, wo, c) = plan.cfg.out_dims();
+            let elems = (ho * wo * c) as u64;
+            let bits = elems * u64::from(plan.quant.bits);
+            println!(
+                "quantized wire: {bits} bits/frame ({} bytes) — Eq. 2 model; \
+                 dense f32 would be {} bytes",
+                bits.div_ceil(8),
+                elems * 4,
+            );
+        }
+    }
     let t_fleet = std::time::Instant::now();
     let stats = run_with(bundle.as_mut(), fleet_sensors, &mk_cfg(cameras, seed), &metrics)?;
     let fleet_s = t_fleet.elapsed().as_secs_f64();
     print_fleet(&stats, backend_name);
+    if wire == WireFormat::Quantized {
+        let per_frame = quant_frame_bytes.expect("quantized fleet implies P2M sensors");
+        let ok = stats
+            .per_camera
+            .iter()
+            .all(|st| st.bytes_from_sensor == st.frames_classified * per_frame);
+        println!(
+            "measured quantized payload vs Eq. 2 model ({per_frame} B/frame): {}",
+            if ok { "exact match" } else { "MISMATCH (wire-format bug)" }
+        );
+    }
 
     // The same workload run as `cameras` sequential single-camera
     // fleets (sensor construction excluded from the timed region, like

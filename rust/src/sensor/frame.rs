@@ -1,4 +1,10 @@
-//! Image/frame container shared across the sensor, frontend and pipeline.
+//! Image/frame containers shared across the sensor, frontend and
+//! pipeline: the dense f32 [`Image`], and the quantized wire format
+//! ([`QuantSpec`] + [`QuantizedFrame`]) that carries what the silicon
+//! actually sends over the sensor-to-SoC link — `n_bits`-wide ADC codes
+//! plus per-frame dequantisation parameters.
+
+use crate::util::linalg;
 
 /// Row-major (h, w, c) f32 image; values are normalised light intensities
 /// or activations in [0, 1]-ish ranges depending on stage.
@@ -61,6 +67,244 @@ impl Image {
     }
 }
 
+/// Per-frame dequantisation contract of a [`QuantizedFrame`]:
+/// `value = (code - zero_point) * scale`, evaluated in f64 and cast to
+/// f32 — exactly the arithmetic the dense frontend path applies to its
+/// ADC codes, so dequantising a quantized payload is bit-identical to
+/// the dense payload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantSpec {
+    /// logical code width on the wire (bits per value)
+    pub bits: u32,
+    /// LSB size in payload units (one code step)
+    pub scale: f64,
+    /// code that maps to value 0.0
+    pub zero_point: i64,
+}
+
+impl QuantSpec {
+    /// Spec for a unipolar (post-ReLU) range `[0, hi]` at `bits`
+    /// precision: the zero-point sits at code 0 (the ReLU clamp) and the
+    /// scale is one LSB of the `2^bits - 1`-step ladder — the form the
+    /// P2M SS-ADC realises in silicon.
+    pub fn unipolar(hi: f64, bits: u32) -> Self {
+        assert!(hi > 0.0, "quantisation range must be positive");
+        assert!((1..=16).contains(&bits), "wire codes are 1..=16 bits");
+        let steps = (1u32 << bits) - 1;
+        QuantSpec { bits, scale: hi / steps as f64, zero_point: 0 }
+    }
+
+    /// Largest representable code, `2^bits - 1`.
+    pub fn code_max(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// The dequantisation contract (see type docs).
+    #[inline]
+    pub fn dequantize(&self, code: u32) -> f32 {
+        ((code as i64 - self.zero_point) as f64 * self.scale) as f32
+    }
+}
+
+/// Backing store of a [`QuantizedFrame`]: one unsigned integer per
+/// value, byte-aligned in memory (`u8` for codes up to 8 bits, `u16`
+/// up to 16), bit-packed only at serialisation time
+/// ([`QuantizedFrame::pack_wire`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantData {
+    /// codes of width <= 8 bits
+    U8(Vec<u8>),
+    /// codes of width 9..=16 bits
+    U16(Vec<u16>),
+}
+
+impl QuantData {
+    fn zeros(len: usize, bits: u32) -> Self {
+        if bits <= 8 {
+            QuantData::U8(vec![0; len])
+        } else {
+            QuantData::U16(vec![0; len])
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            QuantData::U8(v) => v.len(),
+            QuantData::U16(v) => v.len(),
+        }
+    }
+}
+
+/// The fleet's wire format: a row-major (h, w, c) frame of quantized
+/// ADC codes plus its per-frame [`QuantSpec`].
+///
+/// This is the honest sensor-to-SoC payload the paper's bandwidth model
+/// (Eq. 2) prices: `h * w * c * bits` bits leave the sensor
+/// ([`QuantizedFrame::wire_bits`]), not the dense f32 frame.  Codes are
+/// stored byte-aligned for cheap access and bit-packed by
+/// [`QuantizedFrame::pack_wire`] for the measured-payload accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedFrame {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// dequantisation parameters travelling with the frame
+    pub spec: QuantSpec,
+    pub data: QuantData,
+}
+
+impl QuantizedFrame {
+    /// All-zero frame sized (h, w, c) under `spec` (storage width picked
+    /// from `spec.bits`).
+    pub fn zeros(h: usize, w: usize, c: usize, spec: QuantSpec) -> Self {
+        QuantizedFrame { h, w, c, spec, data: QuantData::zeros(h * w * c, spec.bits) }
+    }
+
+    /// Quantise a dense image under `spec` using the deterministic
+    /// integer rounding step ([`linalg::quantize_codes`]).  Exact for
+    /// images whose values are already code multiples of `spec.scale`
+    /// (the frontend's dense output), where it recovers every code.
+    pub fn from_image(img: &Image, spec: QuantSpec) -> Self {
+        let mut q = QuantizedFrame::zeros(img.h, img.w, img.c, spec);
+        match &mut q.data {
+            QuantData::U8(v) => {
+                linalg::quantize_codes(
+                    &img.data,
+                    spec.scale,
+                    spec.zero_point,
+                    spec.code_max(),
+                    |i, code| v[i] = code as u8,
+                );
+            }
+            QuantData::U16(v) => {
+                linalg::quantize_codes(
+                    &img.data,
+                    spec.scale,
+                    spec.zero_point,
+                    spec.code_max(),
+                    |i, code| v[i] = code as u16,
+                );
+            }
+        }
+        q
+    }
+
+    /// Number of values (h * w * c).
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Code at flat index `i`.
+    #[inline]
+    pub fn code(&self, i: usize) -> u32 {
+        match &self.data {
+            QuantData::U8(v) => v[i] as u32,
+            QuantData::U16(v) => v[i] as u32,
+        }
+    }
+
+    /// Bits this frame occupies on the wire: `len * bits` — the
+    /// *measured* counterpart of the Eq. 2 prediction
+    /// (`compression::p2m_bits_per_frame`).
+    pub fn wire_bits(&self) -> u64 {
+        self.len() as u64 * self.spec.bits as u64
+    }
+
+    /// Bytes on the wire (bit-packed payload, rounded up).
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bits().div_ceil(8)
+    }
+
+    /// Exact integer sum of all codes (u64 accumulation) — the
+    /// deterministic checksum/mean building block.
+    pub fn code_sum(&self) -> u64 {
+        match &self.data {
+            QuantData::U8(v) => linalg::sum_codes(v.iter().map(|&x| x as u64)),
+            QuantData::U16(v) => linalg::sum_codes(v.iter().map(|&x| x as u64)),
+        }
+    }
+
+    /// Serialise the codes bit-packed (LSB-first within each byte) —
+    /// the actual wire payload, `wire_bytes()` long.
+    pub fn pack_wire(&self) -> Vec<u8> {
+        let bits = self.spec.bits as usize;
+        let mut out = vec![0u8; self.wire_bytes() as usize];
+        let mut bitpos = 0usize;
+        for i in 0..self.len() {
+            let code = self.code(i);
+            for b in 0..bits {
+                if (code >> b) & 1 == 1 {
+                    out[(bitpos + b) / 8] |= 1 << ((bitpos + b) % 8);
+                }
+            }
+            bitpos += bits;
+        }
+        out
+    }
+
+    /// Inverse of [`QuantizedFrame::pack_wire`]: rebuild a frame from a
+    /// packed payload and its shape/spec (the metadata that travels in
+    /// the link header).
+    pub fn unpack_wire(
+        packed: &[u8],
+        h: usize,
+        w: usize,
+        c: usize,
+        spec: QuantSpec,
+    ) -> Result<Self, String> {
+        let mut q = QuantizedFrame::zeros(h, w, c, spec);
+        let bits = spec.bits as usize;
+        let need = (q.len() * bits).div_ceil(8);
+        if packed.len() != need {
+            return Err(format!("packed payload is {} bytes, want {need}", packed.len()));
+        }
+        let mut bitpos = 0usize;
+        for i in 0..q.len() {
+            let mut code = 0u32;
+            for b in 0..bits {
+                if (packed[(bitpos + b) / 8] >> ((bitpos + b) % 8)) & 1 == 1 {
+                    code |= 1 << b;
+                }
+            }
+            bitpos += bits;
+            match &mut q.data {
+                QuantData::U8(v) => v[i] = code as u8,
+                QuantData::U16(v) => v[i] = code as u16,
+            }
+        }
+        Ok(q)
+    }
+
+    /// Dequantise into a caller-owned f32 slice (len must match) —
+    /// bit-identical to the dense frontend output (see [`QuantSpec`]).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len(), "dequantize_into length mismatch");
+        match &self.data {
+            QuantData::U8(v) => {
+                for (o, &code) in out.iter_mut().zip(v) {
+                    *o = self.spec.dequantize(code as u32);
+                }
+            }
+            QuantData::U16(v) => {
+                for (o, &code) in out.iter_mut().zip(v) {
+                    *o = self.spec.dequantize(code as u32);
+                }
+            }
+        }
+    }
+
+    /// Dequantise into a fresh dense [`Image`].
+    pub fn dequantize(&self) -> Image {
+        let mut img = Image::zeros(self.h, self.w, self.c);
+        self.dequantize_into(&mut img.data);
+        img
+    }
+}
+
 /// A captured frame with provenance for the pipeline.
 #[derive(Clone, Debug)]
 pub struct Frame {
@@ -103,5 +347,72 @@ mod tests {
         img.clamp(0.0, 1.0);
         assert_eq!(img.data, vec![0.0, 0.5, 1.0]);
         assert!((img.mean() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quant_spec_unipolar_ladder() {
+        let spec = QuantSpec::unipolar(75.0, 8);
+        assert_eq!(spec.code_max(), 255);
+        assert_eq!(spec.zero_point, 0);
+        assert!((spec.scale - 75.0 / 255.0).abs() < 1e-12);
+        assert_eq!(spec.dequantize(0), 0.0);
+        assert_eq!(spec.dequantize(255), (75.0f64) as f32);
+    }
+
+    #[test]
+    fn storage_width_follows_bits() {
+        let q8 = QuantizedFrame::zeros(2, 2, 1, QuantSpec::unipolar(1.0, 8));
+        assert!(matches!(q8.data, QuantData::U8(_)));
+        let q12 = QuantizedFrame::zeros(2, 2, 1, QuantSpec::unipolar(1.0, 12));
+        assert!(matches!(q12.data, QuantData::U16(_)));
+        assert_eq!(q12.wire_bits(), 4 * 12);
+        assert_eq!(q12.wire_bytes(), 6);
+    }
+
+    #[test]
+    fn from_image_recovers_exact_code_multiples() {
+        // The frontend's dense output is code * scale; quantising it back
+        // must recover every code exactly.
+        let spec = QuantSpec::unipolar(75.0, 8);
+        let codes = [0u32, 1, 7, 128, 254, 255];
+        let data: Vec<f32> = codes.iter().map(|&c| spec.dequantize(c)).collect();
+        let img = Image::from_vec(1, 2, 3, data);
+        let q = QuantizedFrame::from_image(&img, spec);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(q.code(i), c);
+        }
+        assert_eq!(q.dequantize(), img, "round trip must be bit-identical");
+    }
+
+    #[test]
+    fn pack_wire_round_trips_sub_byte_codes() {
+        for bits in [4u32, 6, 8, 12] {
+            let spec = QuantSpec::unipolar(10.0, bits);
+            let mut q = QuantizedFrame::zeros(2, 3, 1, spec);
+            for i in 0..q.len() {
+                let code = (i as u32 * 37 + 5) % (spec.code_max() + 1);
+                match &mut q.data {
+                    QuantData::U8(v) => v[i] = code as u8,
+                    QuantData::U16(v) => v[i] = code as u16,
+                }
+            }
+            let packed = q.pack_wire();
+            assert_eq!(packed.len() as u64, q.wire_bytes(), "bits={bits}");
+            let back = QuantizedFrame::unpack_wire(&packed, 2, 3, 1, spec).unwrap();
+            assert_eq!(back, q, "bits={bits}");
+        }
+        // 6 codes x 4 bits need exactly 3 bytes; 4 is a length mismatch.
+        assert!(QuantizedFrame::unpack_wire(&[0u8; 4], 2, 3, 1, QuantSpec::unipolar(1.0, 4))
+            .is_err());
+    }
+
+    #[test]
+    fn code_sum_is_exact() {
+        let spec = QuantSpec::unipolar(1.0, 8);
+        let mut q = QuantizedFrame::zeros(1, 1, 3, spec);
+        if let QuantData::U8(v) = &mut q.data {
+            v.copy_from_slice(&[255, 1, 100]);
+        }
+        assert_eq!(q.code_sum(), 356);
     }
 }

@@ -7,7 +7,7 @@ pub mod photodiode;
 pub mod scene;
 
 pub use bayer::{bayer_overhead_ratio, mosaic, tile_to_rgb, GreenPolicy};
-pub use frame::{Frame, Image};
+pub use frame::{Frame, Image, QuantData, QuantSpec, QuantizedFrame};
 pub use photodiode::{digitise_native, expose};
 pub use scene::{SceneGen, Split};
 

@@ -157,6 +157,72 @@ impl BenchReport {
     }
 }
 
+/// Parse a `p2m-bench-v1` document into its (name, value, unit) rows.
+fn bench_rows(doc: &Json) -> Result<Vec<(String, f64, String)>, String> {
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != "p2m-bench-v1" {
+        return Err(format!("unexpected bench schema '{schema}' (want p2m-bench-v1)"));
+    }
+    let rows = doc.get("rows").and_then(Json::as_arr).ok_or("missing rows array")?;
+    rows.iter()
+        .map(|r| -> Result<(String, f64, String), String> {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("row missing name")?
+                .to_string();
+            let value =
+                r.get("value").and_then(Json::as_f64).ok_or("row missing value")?;
+            let unit = r.get("unit").and_then(Json::as_str).unwrap_or("").to_string();
+            Ok((name, value, unit))
+        })
+        .collect()
+}
+
+/// The CI bench-regression gate: compare a fresh `BENCH_<group>.json`
+/// against the committed baseline and report every **throughput** row
+/// (`unit == "frames_per_s"`) that regressed by more than `tol`
+/// (fraction of the baseline, e.g. 0.25 = fail below 75%), or that
+/// disappeared from the fresh results (a silently dropped row would
+/// blind the gate).  Rows *added* since the baseline pass — they become
+/// gated once the refreshed file is committed.
+///
+/// Returns the list of human-readable failures (empty = gate passes) or
+/// an error when either document does not parse as `p2m-bench-v1`.
+pub fn gate_regressions(
+    baseline_json: &str,
+    fresh_json: &str,
+    tol: f64,
+) -> Result<Vec<String>, String> {
+    let baseline = Json::parse(baseline_json).map_err(|e| format!("baseline: {e}"))?;
+    let fresh = Json::parse(fresh_json).map_err(|e| format!("fresh: {e}"))?;
+    let base_rows = bench_rows(&baseline)?;
+    let fresh_rows = bench_rows(&fresh)?;
+    let mut failures = Vec::new();
+    for (name, base_val, unit) in &base_rows {
+        if unit != "frames_per_s" {
+            continue;
+        }
+        match fresh_rows.iter().find(|(n, _, _)| n == name) {
+            None => failures.push(format!(
+                "{name}: throughput row missing from fresh results \
+                 (baseline {base_val:.1} frames/s)"
+            )),
+            Some((_, fresh_val, _)) => {
+                let floor = base_val * (1.0 - tol);
+                if *fresh_val < floor {
+                    failures.push(format!(
+                        "{name}: {fresh_val:.1} frames/s is below the gate floor \
+                         {floor:.1} (baseline {base_val:.1}, tolerance {:.0}%)",
+                        tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    Ok(failures)
+}
+
 /// Format nanoseconds human-readably.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -205,6 +271,49 @@ mod tests {
         assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("frontend_560_gemm"));
         assert_eq!(rows[0].get("value").and_then(Json::as_f64), Some(12.5));
         assert_eq!(rows[1].get("unit").and_then(Json::as_str), Some("ratio"));
+    }
+
+    fn report_json(rows: &[(&str, f64, &str)]) -> String {
+        let mut r = BenchReport::new("pipeline");
+        for (name, value, unit) in rows {
+            r.row(name, *value, unit);
+        }
+        r.to_json()
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = report_json(&[("a", 100.0, "frames_per_s"), ("r", 2.0, "ratio")]);
+        let fresh = report_json(&[("a", 80.0, "frames_per_s"), ("r", 0.1, "ratio")]);
+        // 20% down on a 25% gate: pass; ratio rows are never gated.
+        assert!(gate_regressions(&base, &fresh, 0.25).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gate_fails_beyond_tolerance() {
+        let base = report_json(&[("a", 100.0, "frames_per_s"), ("b", 50.0, "frames_per_s")]);
+        let fresh = report_json(&[("a", 70.0, "frames_per_s"), ("b", 49.0, "frames_per_s")]);
+        let failures = gate_regressions(&base, &fresh, 0.25).unwrap();
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].starts_with("a:"), "{failures:?}");
+        // Tighter tolerance catches b too; override simulates P2M_BENCH_TOL.
+        assert_eq!(gate_regressions(&base, &fresh, 0.01).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn gate_flags_dropped_throughput_rows_and_allows_new_ones() {
+        let base = report_json(&[("old", 100.0, "frames_per_s")]);
+        let fresh = report_json(&[("new", 5.0, "frames_per_s")]);
+        let failures = gate_regressions(&base, &fresh, 0.25).unwrap();
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("missing"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_rejects_malformed_documents() {
+        let good = report_json(&[("a", 1.0, "frames_per_s")]);
+        assert!(gate_regressions("not json", &good, 0.25).is_err());
+        assert!(gate_regressions(&good, "{\"schema\": \"other\"}", 0.25).is_err());
     }
 
     #[test]

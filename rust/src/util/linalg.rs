@@ -49,6 +49,46 @@ pub fn matmul(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64])
     }
 }
 
+/// Deterministic scalar quantiser behind the wire format
+/// ([`crate::sensor::QuantizedFrame`]): for each value,
+///
+/// ```text
+/// code_i = clamp(round(v_i / scale) + zero_point, 0, code_max)
+/// ```
+///
+/// with the rounding done once in f64 (IEEE round-half-away) and the
+/// shift/clamp carried out in **i64 integer arithmetic**, so the emitted
+/// code ladder is exact and platform-independent — no accumulated
+/// float state between elements.  `emit(i, code)` receives every code in
+/// index order; the return value counts values that had to be clamped
+/// (saturation diagnostics).
+pub fn quantize_codes(
+    values: &[f32],
+    scale: f64,
+    zero_point: i64,
+    code_max: u32,
+    mut emit: impl FnMut(usize, u32),
+) -> u64 {
+    assert!(scale > 0.0, "quantiser scale must be positive");
+    let mut clamped = 0u64;
+    for (i, &v) in values.iter().enumerate() {
+        let raw = (v as f64 / scale).round() as i64 + zero_point;
+        let code = raw.clamp(0, code_max as i64);
+        if code != raw {
+            clamped += 1;
+        }
+        emit(i, code as u32);
+    }
+    clamped
+}
+
+/// Exact integer accumulation of a code stream: the u64 sum no float
+/// mean/checksum can drift from.  Pair with a single final scale
+/// multiply for deterministic payload means.
+pub fn sum_codes(codes: impl Iterator<Item = u64>) -> u64 {
+    codes.sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +165,35 @@ mod tests {
     fn shape_mismatch_panics() {
         let mut c = [0.0; 1];
         matmul(1, 2, 1, &[1.0], &[1.0, 1.0], &mut c);
+    }
+
+    #[test]
+    fn quantize_codes_rounds_shifts_and_clamps() {
+        let values = [0.0f32, 0.24, 0.26, 1.0, -3.0, 300.0];
+        let mut out = vec![0u32; values.len()];
+        // scale 0.5: raw codes 0, 0, 1, 2, -6, 600; zero_point +1.
+        let clamped = quantize_codes(&values, 0.5, 1, 255, |i, c| out[i] = c);
+        assert_eq!(out, vec![1, 1, 2, 3, 0, 255]);
+        assert_eq!(clamped, 2, "one underflow + one overflow");
+    }
+
+    #[test]
+    fn quantize_codes_is_exact_on_code_multiples() {
+        // The frontend's dense output is code * lsb (cast f32); the
+        // quantiser must map it back to exactly that code for the whole
+        // 8-bit ladder.
+        let lsb = 75.0f64 / 255.0;
+        let values: Vec<f32> = (0..=255u32).map(|c| (c as f64 * lsb) as f32).collect();
+        let mut out = vec![0u32; values.len()];
+        let clamped = quantize_codes(&values, lsb, 0, 255, |i, c| out[i] = c);
+        assert_eq!(clamped, 0);
+        assert!(out.iter().enumerate().all(|(i, &c)| c == i as u32));
+    }
+
+    #[test]
+    fn sum_codes_accumulates_in_u64() {
+        let big = vec![u16::MAX; 70_000]; // overflows u32 accumulation
+        let sum = sum_codes(big.iter().map(|&x| x as u64));
+        assert_eq!(sum, 70_000 * 65_535);
     }
 }

@@ -1,23 +1,27 @@
 //! Integration: the sharded multi-camera fleet — determinism for fixed
-//! seeds, per-camera-to-aggregate accounting, and exact backpressure
-//! drop accounting under a tiny link.  Needs no artifacts or PJRT: the
-//! producers use deterministic synthetic stem weights and the consumer
-//! the pure-rust mean-threshold backend.
+//! seeds, per-camera-to-aggregate accounting, exact backpressure drop
+//! accounting under a tiny link, and the quantized wire format
+//! (dense-vs-quantized decision parity + Eq. 2 payload accounting).
+//! Needs no artifacts or PJRT: the producers use deterministic synthetic
+//! stem weights and the consumer the pure-rust mean-threshold backend.
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use p2m::compression;
+use p2m::config::HyperParams;
 use p2m::coordinator::{
     run_fleet, synthetic_fleet_sensors, synthetic_frame_plan, Backpressure,
     BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier, Metrics,
-    SensorCompute,
+    SensorCompute, WireFormat, WirePayload,
 };
 use p2m::frontend::Fidelity;
-use p2m::sensor::Image;
 
 const RES: usize = 40;
-/// 40x40 input -> 8x8x8 8-bit codes per frame on the link.
-const BYTES_PER_FRAME: u64 = 8 * 8 * 8;
+/// Dense wire: 40x40 input -> 8x8x8 f32 values per frame on the link.
+const DENSE_BYTES_PER_FRAME: u64 = 8 * 8 * 8 * 4;
+/// Quantized wire: the same frame as 8-bit ADC codes (the Eq. 2 payload).
+const QUANT_BYTES_PER_FRAME: u64 = 8 * 8 * 8;
 
 fn base_cfg() -> FleetConfig {
     FleetConfig {
@@ -31,10 +35,18 @@ fn base_cfg() -> FleetConfig {
     }
 }
 
-fn run_with<C: BatchClassifier>(classifier: &mut C, cfg: &FleetConfig) -> FleetStats {
+fn run_wire<C: BatchClassifier>(
+    classifier: &mut C,
+    cfg: &FleetConfig,
+    wire: WireFormat,
+) -> FleetStats {
     let sensors =
-        synthetic_fleet_sensors(RES, Fidelity::Functional, cfg.n_cameras).unwrap();
+        synthetic_fleet_sensors(RES, Fidelity::Functional, cfg.n_cameras, wire).unwrap();
     run_fleet(classifier, sensors, cfg, &Metrics::new()).unwrap()
+}
+
+fn run_with<C: BatchClassifier>(classifier: &mut C, cfg: &FleetConfig) -> FleetStats {
+    run_wire(classifier, cfg, WireFormat::Dense)
 }
 
 /// Deterministic outcome of one camera: everything reproducible for a
@@ -65,7 +77,7 @@ fn four_camera_fleet_is_deterministic_for_fixed_seeds() {
         assert_eq!(st.frames_captured, 8);
         assert_eq!(st.frames_classified, 8);
         assert_eq!(st.frames_dropped, 0);
-        assert_eq!(st.bytes_from_sensor, 8 * BYTES_PER_FRAME);
+        assert_eq!(st.bytes_from_sensor, 8 * DENSE_BYTES_PER_FRAME);
     }
     // Seed *sensitivity* (that base_seed actually reaches the scene
     // streams) is pinned at payload level by
@@ -82,8 +94,11 @@ struct RecordingBackend {
 }
 
 impl BatchClassifier for RecordingBackend {
-    fn classify(&mut self, batch: &[&Image]) -> anyhow::Result<Vec<u8>> {
-        for img in batch {
+    fn classify(&mut self, batch: &[&WirePayload]) -> anyhow::Result<Vec<u8>> {
+        for payload in batch {
+            // Ingest-dequantise, then checksum: identical for a dense
+            // frame and its quantized re-encoding.
+            let img = payload.to_image();
             self.sums
                 .push(img.data.iter().map(|&v| (v * 1024.0) as u64).sum());
         }
@@ -119,7 +134,8 @@ fn camera_seeds_reach_the_scene_stream() {
 fn fleet_builds_exactly_one_shared_plan() {
     // N cameras, one compiled FramePlan: every sensor holds the same Arc
     // and nothing else does (one curve-fit load + one fold per fleet).
-    let sensors = synthetic_fleet_sensors(RES, Fidelity::Functional, 5).unwrap();
+    let sensors =
+        synthetic_fleet_sensors(RES, Fidelity::Functional, 5, WireFormat::Dense).unwrap();
     let first = sensors[0].plan().unwrap();
     assert!(
         sensors.iter().all(|s| Arc::ptr_eq(s.plan().unwrap(), first)),
@@ -134,7 +150,9 @@ fn shared_plan_fleet_payload_identical_to_private_plans() {
     // construction change: the payloads crossing the links are identical
     // to the old one-independent-engine-per-camera construction.
     let cfg = base_cfg();
-    let shared = synthetic_fleet_sensors(RES, Fidelity::Functional, cfg.n_cameras).unwrap();
+    let shared =
+        synthetic_fleet_sensors(RES, Fidelity::Functional, cfg.n_cameras, WireFormat::Dense)
+            .unwrap();
     let private: Vec<SensorCompute> = (0..cfg.n_cameras)
         .map(|_| {
             SensorCompute::p2m(synthetic_frame_plan(RES, Fidelity::Functional).unwrap())
@@ -176,7 +194,7 @@ fn per_camera_stats_sum_to_aggregate() {
 struct SlowBackend<C>(C, Duration);
 
 impl<C: BatchClassifier> BatchClassifier for SlowBackend<C> {
-    fn classify(&mut self, batch: &[&Image]) -> anyhow::Result<Vec<u8>> {
+    fn classify(&mut self, batch: &[&WirePayload]) -> anyhow::Result<Vec<u8>> {
         std::thread::sleep(self.1);
         self.0.classify(batch)
     }
@@ -204,12 +222,57 @@ fn drop_accounting_stays_exact_under_tiny_queue() {
         );
         assert!(st.queue_high_watermark <= 1, "camera {ci} hwm");
         // Bytes are charged only for frames that crossed the link.
-        assert_eq!(st.bytes_from_sensor, st.frames_classified * BYTES_PER_FRAME);
+        assert_eq!(st.bytes_from_sensor, st.frames_classified * DENSE_BYTES_PER_FRAME);
     }
     assert_eq!(
         stats.aggregate.frames_classified + stats.aggregate.frames_dropped,
         stats.aggregate.frames_captured
     );
+}
+
+#[test]
+fn quantized_fleet_agrees_with_dense_and_matches_eq2_payload() {
+    // The tentpole acceptance pin: with the quantized wire format the
+    // fleet's per-camera decisions agree with the dense-f32 path (the
+    // ingest dequantisation is bit-identical, so agreement is 100% >=
+    // the 99% bar), and every byte crossing a shard link is exactly the
+    // Eq. 2 payload: p2m_bits_per_frame / 8 per frame.
+    let cfg = base_cfg();
+    let dense = run_with(&mut MeanThresholdClassifier::new(0.5), &cfg);
+    let quant = run_wire(&mut MeanThresholdClassifier::new(0.5), &cfg, WireFormat::Quantized);
+
+    let eq2_bytes = compression::p2m_bits_per_frame(&HyperParams::default(), RES).div_ceil(8);
+    assert_eq!(eq2_bytes, QUANT_BYTES_PER_FRAME);
+    for (ci, (d, q)) in dense.per_camera.iter().zip(&quant.per_camera).enumerate() {
+        assert_eq!(q.frames_classified, d.frames_classified, "camera {ci}");
+        assert_eq!(
+            q.correct, d.correct,
+            "camera {ci}: quantized decisions must agree with the dense path"
+        );
+        assert_eq!(
+            q.bytes_from_sensor,
+            q.frames_classified * eq2_bytes,
+            "camera {ci}: measured payload must equal the Eq. 2 model exactly"
+        );
+        assert_eq!(d.bytes_from_sensor, 4 * q.bytes_from_sensor, "f32 -> 8-bit shrink");
+    }
+    assert_eq!(quant.aggregate.correct, dense.aggregate.correct);
+}
+
+#[test]
+fn quantized_payloads_dequantise_to_the_dense_payloads() {
+    // Payload-level identity: the checksum multiset a recording backend
+    // sees is unchanged by the wire format — quantize/dequantize is a
+    // pure re-encoding of every frame that crosses a link.
+    let cfg = base_cfg();
+    let checksums = |wire: WireFormat| -> Vec<u64> {
+        let mut rec = RecordingBackend::default();
+        run_wire(&mut rec, &cfg, wire);
+        let mut sums = rec.sums;
+        sums.sort_unstable();
+        sums
+    };
+    assert_eq!(checksums(WireFormat::Dense), checksums(WireFormat::Quantized));
 }
 
 #[test]

@@ -1,6 +1,7 @@
 //! Steady-state allocation contract of the plan/ctx split: once a
-//! [`p2m::frontend::ExecCtx`] and an output image exist, processing a
-//! frame through `FramePlan::process_into` performs **zero** heap
+//! [`p2m::frontend::ExecCtx`] and an output buffer exist, processing a
+//! frame through `FramePlan::process_into` — or its quantized wire
+//! sibling `process_quantized_into` — performs **zero** heap
 //! allocations, in both fidelities.
 //!
 //! This file is deliberately a single-test integration binary: the
@@ -75,5 +76,27 @@ fn steady_state_frame_processing_allocates_nothing() {
             "{fidelity:?}: steady-state process_into must not allocate"
         );
         assert_eq!(conversions, 12 * (ho * wo * c) as u64);
+
+        // The quantized wire sibling holds the same contract: with a
+        // reused ctx + caller-owned QuantizedFrame, emitting the wire
+        // payload allocates nothing either.
+        let mut qframe = plan.quantized_frame();
+        let warm_q = plan.process_quantized_into(&frames[0], &mut ctx, &mut qframe);
+        assert_eq!(warm_q.conversions, (ho * wo * c) as u64);
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        let mut q_conversions = 0u64;
+        for _ in 0..4 {
+            for frame in &frames {
+                q_conversions +=
+                    plan.process_quantized_into(frame, &mut ctx, &mut qframe).conversions;
+            }
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "{fidelity:?}: steady-state process_quantized_into must not allocate"
+        );
+        assert_eq!(q_conversions, 12 * (ho * wo * c) as u64);
     }
 }

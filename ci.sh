@@ -72,6 +72,14 @@ step "tier-1: cargo build --release" cargo build --release --locked
 
 step "tier-1: cargo test -q" cargo test -q --locked
 
+# Scenario smoke: a fast churn run (heterogeneous cameras, hot-add,
+# crash + producer restart, rate shift).  --check-digest executes the
+# scenario TWICE and fails unless both runs produce the identical
+# deterministic stats digest — the reproducibility gate for the
+# concurrency core.
+step "fleet scenario smoke (churn, digest determinism)" \
+    cargo run --release --locked -q -- fleet --scenario churn --check-digest
+
 if [[ "$BENCH" -eq 1 ]]; then
     # Preserve the committed baseline before the bench overwrites the
     # worktree copy (prefer git's HEAD version; fall back to the

@@ -16,10 +16,10 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use p2m::coordinator::{
-    baseline_sensor, p2m_sensor_from_bundle, run_fleet, run_pipeline,
-    synthetic_fleet_sensors, synthetic_frame_plan, Backpressure, BatchPolicy, Batcher,
-    BoundedQueue, FleetConfig, MeanThresholdClassifier, Metrics, PipelineConfig,
-    RoutePolicy, Router, WireFormat,
+    baseline_sensor, heterogeneous_fleet_sensors, p2m_sensor_from_bundle, run_fleet,
+    run_pipeline, synthetic_fleet_sensors, synthetic_frame_plan, Backpressure,
+    BatchPolicy, Batcher, BoundedQueue, CameraSpec, FleetConfig,
+    MeanThresholdClassifier, Metrics, PipelineConfig, RoutePolicy, Router, WireFormat,
 };
 use p2m::frontend::Fidelity;
 use p2m::runtime::{Manifest, ModelBundle, Runtime};
@@ -196,6 +196,26 @@ fn main() {
         let qfleet_s = t2.elapsed().as_secs_f64();
         let qfleet_fps = qstats.aggregate.frames_classified as f64 / qfleet_s;
 
+        // Heterogeneous fleet: same camera count and per-camera frame
+        // budget, but four cameras across three sensor designs (mixed
+        // resolution + bit depth, all quantized wire).  Measures the
+        // shape-aware batching + multi-plan serving path against the
+        // homogeneous fleet above (not a like-for-like frame workload —
+        // smaller sensors are cheaper — but the serving-path overhead
+        // shows up in the ratio's trend across PRs).
+        let specs = vec![
+            CameraSpec::new(0, res, 8, WireFormat::Quantized),
+            CameraSpec::new(1, res, 8, WireFormat::Quantized),
+            CameraSpec::new(2, 40, 6, WireFormat::Quantized),
+            CameraSpec::new(3, 20, 4, WireFormat::Quantized),
+        ];
+        let (hsensors, bank) = heterogeneous_fleet_sensors(&specs).unwrap();
+        let hcfg = FleetConfig { cameras: Some(specs), ..mk_cfg(cams, 0) };
+        let t3 = Instant::now();
+        let hstats = run_fleet(&mut clf, hsensors, &hcfg, &metrics).unwrap();
+        let hfleet_s = t3.elapsed().as_secs_f64();
+        let hfleet_fps = hstats.aggregate.frames_classified as f64 / hfleet_s;
+
         println!(
             "{:<44} -> {serial_fps:.1} frames/s ({serial_frames} frames, {serial_s:.2}s)",
             format!("serving_{cams}x{frames}f_sequential_1cam")
@@ -212,6 +232,13 @@ fn main() {
             stats.aggregate.bytes_from_sensor
         );
         println!(
+            "{:<44} -> {hfleet_fps:.1} frames/s ({} frames, {} shapes, {} plans)",
+            format!("serving_{cams}x{frames}f_fleet_hetero"),
+            hstats.aggregate.frames_classified,
+            hstats.per_shape.len(),
+            bank.len()
+        );
+        println!(
             "{:<44} -> {:.2}x",
             "fleet_speedup_vs_sequential",
             fleet_fps / serial_fps
@@ -219,6 +246,10 @@ fn main() {
         report.row("serving_sequential_1cam", serial_fps, "frames_per_s");
         report.row("serving_fleet_4cam", fleet_fps, "frames_per_s");
         report.row("serving_fleet_4cam_quantized", qfleet_fps, "frames_per_s");
+        report.row("serving_fleet_4cam_hetero", hfleet_fps, "frames_per_s");
+        report.row("hetero_vs_homogeneous_fleet", hfleet_fps / fleet_fps.max(1e-9), "ratio");
+        report.row("hetero_distinct_plans", bank.len() as f64, "count");
+        report.row("hetero_shape_groups", hstats.per_shape.len() as f64, "count");
         report.row("fleet_speedup_vs_sequential", fleet_fps / serial_fps, "ratio");
         report.row(
             "fleet_link_shrink_quantized",

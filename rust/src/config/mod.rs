@@ -176,10 +176,19 @@ impl SystemConfig {
     /// Config for a square input resolution, deriving the ADC full scale
     /// from the receptive-field size.
     pub fn for_resolution(res: usize) -> Self {
-        let hyper = HyperParams::default();
+        Self::for_resolution_bits(res, HyperParams::default().n_bits)
+    }
+
+    /// [`SystemConfig::for_resolution`] at an explicit ADC output
+    /// bit-precision `n_bits` (the layer's N_b and the quantized wire
+    /// code width, kept in lockstep across `hyper` and `adc` as
+    /// `validate` demands).  The knob behind heterogeneous fleets whose
+    /// cameras ship different bit depths (paper Fig. 7a's sweep axis).
+    pub fn for_resolution_bits(res: usize, n_bits: u32) -> Self {
+        let hyper = HyperParams { n_bits, ..HyperParams::default() };
         let adc = AdcConfig {
             full_scale: hyper.patch_len() as f64,
-            n_bits: hyper.n_bits,
+            n_bits,
             ..AdcConfig::default()
         };
         SystemConfig { hyper, sensor: SensorConfig::default().with_resolution(res), adc }
@@ -276,6 +285,20 @@ mod tests {
         let c = SystemConfig::for_resolution(80);
         assert_eq!(c.out_dims(), (16, 16, 8));
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn for_resolution_bits_keeps_hyper_and_adc_in_lockstep() {
+        for bits in [1u32, 4, 6, 8, 12, 16] {
+            let c = SystemConfig::for_resolution_bits(40, bits);
+            assert_eq!(c.hyper.n_bits, bits);
+            assert_eq!(c.adc.n_bits, bits);
+            c.validate().unwrap();
+        }
+        // The default-bits form is exactly the old constructor.
+        let c = SystemConfig::for_resolution_bits(80, 8);
+        assert_eq!(c.out_dims(), SystemConfig::for_resolution(80).out_dims());
+        assert_eq!(c.adc.full_scale, 75.0);
     }
 
     #[test]

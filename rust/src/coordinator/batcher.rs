@@ -5,7 +5,13 @@
 //! Policy: emit a batch when `max_batch` items are waiting, or when the
 //! oldest waiting item has aged past `max_wait` — the standard
 //! serving-system latency/throughput knob.
+//!
+//! [`ShapedBatcher`] is the heterogeneous-fleet form: one [`Batcher`]
+//! lane per grouping key (the fleet keys lanes by
+//! [`crate::coordinator::ShapeKey`]), so every emitted batch is key-pure
+//! and each lane keeps its own size/age triggers.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Batching policy.
@@ -81,6 +87,80 @@ impl<T> Batcher<T> {
 
     fn drain(&mut self) -> Vec<T> {
         self.pending.drain(..).map(|(t, _)| t).collect()
+    }
+}
+
+/// Shape-aware batcher: one [`Batcher`] lane per key, created on first
+/// use, so batches never mix keys.  A heterogeneous fleet keys lanes by
+/// payload shape + wire encoding; with a homogeneous fleet exactly one
+/// lane exists and the behaviour collapses to the plain [`Batcher`].
+///
+/// Lanes share one [`BatchPolicy`] but trigger independently: a lane
+/// emits on its own size trigger, and [`ShapedBatcher::poll`] checks the
+/// age trigger of every lane (per-group flush deadlines), so a
+/// slow-trickling shape cannot hold another shape's frames hostage.
+#[derive(Debug)]
+pub struct ShapedBatcher<K: Ord + Copy, T> {
+    policy: BatchPolicy,
+    lanes: BTreeMap<K, Batcher<T>>,
+}
+
+impl<K: Ord + Copy, T> ShapedBatcher<K, T> {
+    /// New shape-aware batcher under `policy` (panics on a zero
+    /// `max_batch`, like [`Batcher::new`]).
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        ShapedBatcher { policy, lanes: BTreeMap::new() }
+    }
+
+    /// Items waiting across all lanes.
+    pub fn pending(&self) -> usize {
+        self.lanes.values().map(Batcher::pending).sum()
+    }
+
+    /// Distinct keys seen so far (lanes persist once created).
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Offer an item to its key's lane at time `now`; returns that
+    /// lane's full batch if its size trigger fired.
+    pub fn push(&mut self, key: K, item: T, now: f64) -> Option<(K, Vec<T>)> {
+        let policy = self.policy;
+        let lane = self.lanes.entry(key).or_insert_with(|| Batcher::new(policy));
+        lane.push(item, now).map(|batch| (key, batch))
+    }
+
+    /// Check every lane's age trigger at time `now`; returns the first
+    /// due lane's (possibly partial) batch.  Call in a loop to drain all
+    /// due lanes.
+    pub fn poll(&mut self, now: f64) -> Option<(K, Vec<T>)> {
+        for (key, lane) in self.lanes.iter_mut() {
+            if let Some(batch) = lane.poll(now) {
+                return Some((*key, batch));
+            }
+        }
+        None
+    }
+
+    /// Earliest age-trigger deadline across all lanes (None when every
+    /// lane is empty).
+    pub fn next_deadline(&self, now: f64) -> Option<f64> {
+        self.lanes
+            .values()
+            .filter_map(|lane| lane.next_deadline(now))
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Flush one non-empty lane (call in a loop to drain everything at
+    /// end of stream).
+    pub fn flush(&mut self) -> Option<(K, Vec<T>)> {
+        for (key, lane) in self.lanes.iter_mut() {
+            if let Some(batch) = lane.flush() {
+                return Some((*key, batch));
+            }
+        }
+        None
     }
 }
 
@@ -188,5 +268,223 @@ mod tests {
     #[should_panic(expected = "max_batch")]
     fn zero_batch_rejected() {
         let _ = Batcher::<u32>::new(policy(0, 1));
+    }
+
+    #[test]
+    fn model_checked_against_random_schedules() {
+        // Model-based property over arbitrary push/poll/flush
+        // interleavings: the batcher must agree with a shadow FIFO on
+        // (a) conservation — every pushed item comes back exactly once,
+        //     in order, never duplicated;
+        // (b) batch sizes never exceeding max_batch;
+        // (c) `next_deadline` being exactly
+        //     (oldest arrival + max_wait - now), floored at 0; and
+        // (d) `poll` firing iff the oldest pending item has aged out.
+        Prop::new("batcher agrees with shadow model").cases(96).run(|rng| {
+            let max_batch = rng.usize(1, 10);
+            let max_wait_ms = rng.usize(1, 30) as u64;
+            // Same float the batcher derives internally, so the model's
+            // age comparisons can never disagree by an ulp.
+            let max_wait_s = Duration::from_millis(max_wait_ms).as_secs_f64();
+            let mut b = Batcher::new(policy(max_batch, max_wait_ms));
+            // Shadow model: arrival times of items still pending.
+            let mut model: std::collections::VecDeque<(usize, f64)> =
+                std::collections::VecDeque::new();
+            let mut out: Vec<usize> = Vec::new();
+            let mut now = 0.0f64;
+            let mut next = 0usize;
+            let n_ops = rng.usize(1, 300);
+            for _ in 0..n_ops {
+                now += rng.range(0.0, 0.004);
+                match rng.usize(0, 10) {
+                    // push-heavy mix keeps both triggers exercised
+                    0..=5 => {
+                        let emitted = b.push(next, now);
+                        model.push_back((next, now));
+                        next += 1;
+                        if model.len() >= max_batch {
+                            let batch = emitted.ok_or("size trigger did not fire")?;
+                            prop_assert!(batch.len() == max_batch);
+                            for &v in &batch {
+                                let (mv, _) = model.pop_front().unwrap();
+                                prop_assert!(v == mv, "got {v}, model says {mv}");
+                            }
+                            out.extend(batch);
+                        } else {
+                            prop_assert!(emitted.is_none(), "premature size trigger");
+                        }
+                    }
+                    6..=8 => {
+                        let due = model
+                            .front()
+                            .is_some_and(|&(_, t0)| now - t0 >= max_wait_s);
+                        match b.poll(now) {
+                            Some(batch) => {
+                                prop_assert!(due, "poll fired before the age trigger");
+                                prop_assert!(batch.len() <= max_batch);
+                                prop_assert!(batch.len() == model.len());
+                                for &v in &batch {
+                                    let (mv, _) = model.pop_front().unwrap();
+                                    prop_assert!(v == mv);
+                                }
+                                out.extend(batch);
+                            }
+                            None => prop_assert!(!due, "age trigger missed"),
+                        }
+                    }
+                    _ => {
+                        let flushed = b.flush();
+                        prop_assert!(flushed.is_some() == !model.is_empty());
+                        if let Some(batch) = flushed {
+                            prop_assert!(batch.len() == model.len());
+                            out.extend(batch);
+                            model.clear();
+                        }
+                    }
+                }
+                // Invariants that must hold after *every* operation.
+                prop_assert!(b.pending() == model.len());
+                match (b.next_deadline(now), model.front()) {
+                    (None, None) => {}
+                    (Some(d), Some(&(_, t0))) => {
+                        let want = (t0 + max_wait_s - now).max(0.0);
+                        prop_assert!(
+                            (d - want).abs() < 1e-12,
+                            "deadline {d} vs model {want}"
+                        );
+                    }
+                    (d, m) => {
+                        return Err(format!(
+                            "deadline {d:?} inconsistent with model front {m:?}"
+                        ))
+                    }
+                }
+            }
+            if let Some(batch) = b.flush() {
+                out.extend(batch);
+            }
+            // Conservation + FIFO order over the whole run.
+            prop_assert!(out.len() == next, "{} of {next} items emitted", out.len());
+            for (i, &v) in out.iter().enumerate() {
+                prop_assert!(v == i, "out[{i}] = {v}");
+            }
+            Ok(())
+        });
+    }
+
+    // --- ShapedBatcher ---
+
+    #[test]
+    fn shaped_lanes_are_independent_and_pure() {
+        let mut b: ShapedBatcher<u8, i32> = ShapedBatcher::new(policy(2, 1000));
+        assert_eq!(b.lanes(), 0);
+        assert!(b.push(b'a', 1, 0.0).is_none());
+        assert!(b.push(b'b', 10, 0.0).is_none());
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.lanes(), 2);
+        // Lane 'a' fills first; lane 'b' must be untouched by its emit.
+        let (key, batch) = b.push(b'a', 2, 0.001).unwrap();
+        assert_eq!((key, batch), (b'a', vec![1, 2]));
+        assert_eq!(b.pending(), 1);
+        let (key, batch) = b.push(b'b', 11, 0.002).unwrap();
+        assert_eq!((key, batch), (b'b', vec![10, 11]));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn shaped_poll_drains_every_due_lane() {
+        let mut b: ShapedBatcher<u8, i32> = ShapedBatcher::new(policy(10, 5));
+        b.push(b'a', 1, 0.0);
+        b.push(b'b', 2, 0.003);
+        // At t=6ms lane 'a' (oldest 0.0) and lane 'b' (oldest 3ms) have
+        // both aged past 5ms at 8.1ms; at 6ms only 'a' is due.
+        let (key, batch) = b.poll(0.006).unwrap();
+        assert_eq!((key, batch), (b'a', vec![1]));
+        assert!(b.poll(0.006).is_none(), "lane 'b' is not due yet");
+        let (key, batch) = b.poll(0.0081).unwrap();
+        assert_eq!((key, batch), (b'b', vec![2]));
+        assert!(b.poll(1.0).is_none());
+    }
+
+    #[test]
+    fn shaped_next_deadline_is_min_over_lanes() {
+        let mut b: ShapedBatcher<u8, i32> = ShapedBatcher::new(policy(10, 10));
+        assert!(b.next_deadline(0.0).is_none());
+        b.push(b'b', 1, 1.004);
+        b.push(b'a', 2, 1.0);
+        // Lane 'a' (arrival 1.0) owns the earliest deadline even though
+        // lane 'b' sorts first.
+        let d = b.next_deadline(1.002).unwrap();
+        assert!((d - 0.008).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn shaped_flush_returns_each_lane_once() {
+        let mut b: ShapedBatcher<u8, i32> = ShapedBatcher::new(policy(8, 1000));
+        b.push(b'a', 1, 0.0);
+        b.push(b'b', 2, 0.0);
+        b.push(b'a', 3, 0.0);
+        let mut flushed = Vec::new();
+        while let Some((key, batch)) = b.flush() {
+            flushed.push((key, batch));
+        }
+        assert_eq!(flushed, vec![(b'a', vec![1, 3]), (b'b', vec![2])]);
+        assert_eq!(b.pending(), 0);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn shaped_batcher_conserves_across_random_keyed_schedules() {
+        Prop::new("shaped batcher conserves per key").cases(48).run(|rng| {
+            let n_keys = rng.usize(1, 5);
+            let mut b: ShapedBatcher<usize, (usize, usize)> =
+                ShapedBatcher::new(policy(rng.usize(1, 7), rng.usize(1, 15) as u64));
+            let mut pushed_per_key = vec![0usize; n_keys];
+            let mut out: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_keys];
+            let sink = |k: usize, batch: Vec<(usize, usize)>, out: &mut Vec<Vec<_>>| {
+                // Key purity: a batch only ever carries its own key.
+                for &(bk, _) in &batch {
+                    assert_eq!(bk, k, "key-mixed batch");
+                }
+                out[k].extend(batch);
+            };
+            let mut now = 0.0;
+            for _ in 0..rng.usize(1, 250) {
+                now += rng.range(0.0, 0.003);
+                let k = rng.usize(0, n_keys);
+                if let Some((ek, batch)) = b.push(k, (k, pushed_per_key[k]), now) {
+                    sink(ek, batch, &mut out);
+                }
+                pushed_per_key[k] += 1;
+                if rng.bool(0.3) {
+                    while let Some((ek, batch)) = b.poll(now) {
+                        sink(ek, batch, &mut out);
+                    }
+                }
+            }
+            while let Some((ek, batch)) = b.flush() {
+                sink(ek, batch, &mut out);
+            }
+            prop_assert!(b.pending() == 0);
+            for k in 0..n_keys {
+                prop_assert!(
+                    out[k].len() == pushed_per_key[k],
+                    "key {k}: {} of {}",
+                    out[k].len(),
+                    pushed_per_key[k]
+                );
+                // Per-key FIFO order survives the lane split.
+                for (i, &(_, seq)) in out[k].iter().enumerate() {
+                    prop_assert!(seq == i, "key {k}: out[{i}] = {seq}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn shaped_zero_batch_rejected() {
+        let _ = ShapedBatcher::<u8, u32>::new(policy(0, 1));
     }
 }

@@ -1,7 +1,7 @@
 //! The sharded multi-camera fleet: N capture+frontend producer threads
 //! (one per simulated camera), per-shard bounded links, and a single
-//! consumer that merges the shards through the [`Router`] and [`Batcher`]
-//! into one shared classifier backend.
+//! consumer that merges the shards through the [`Router`] and the
+//! shape-aware [`ShapedBatcher`] into one shared classifier backend.
 //!
 //! This is the serving topology the paper's TinyML setting implies —
 //! many cheap P2M cameras, one SoC — and the multi-stream workload
@@ -9,22 +9,29 @@
 //!
 //! ```text
 //!  camera 0 ── frontend ──> shard queue 0 ─┐
-//!  camera 1 ── frontend ──> shard queue 1 ─┼─ Router ── Batcher ── classifier
-//!  ...                                     │  (fair)    (dynamic)   (caller's
-//!  camera N ── frontend ──> shard queue N ─┘                         thread)
+//!  camera 1 ── frontend ──> shard queue 1 ─┼─ Router ── ShapedBatcher ── classifier
+//!  ...                                     │  (fair)    (per-shape      (caller's
+//!  camera N ── frontend ──> shard queue N ─┘             lanes)          thread)
 //! ```
 //!
 //! Each producer owns its own seeded [`Camera`] and [`SensorCompute`]
 //! and runs on a scoped `std::thread`; the classifier (which for PJRT is
-//! not `Send`) never leaves the caller's thread.  All P2M producers
-//! share **one** compiled [`FramePlan`] (the fleet constructors build it
-//! once — one curve-fit load, one weight fold — and hand each camera an
-//! `Arc` plus its own private `ExecCtx`), mirroring the silicon: the
-//! first layer is manufactured once, every stream reuses it.  Every
-//! shard queue is a [`BoundedQueue`] with the configured backpressure
-//! policy, so per-camera drop accounting stays exact: for every camera,
-//! `frames_captured == frames_classified + frames_dropped` at the end of
-//! a run.
+//! not `Send`) never leaves the caller's thread.
+//!
+//! # Heterogeneous fleets
+//!
+//! The fleet is not required to be N clones of one sensor.  A
+//! [`CameraSpec`] names each camera's resolution, fidelity, ADC
+//! bit-precision, wire format and target frame rate; [`PlanBank`]
+//! compiles **one [`FramePlan`] per distinct [`PlanKey`]** (resolution,
+//! fidelity, `n_bits`), so identical cameras still share a single
+//! compiled plan — the software mirror of "the first layer is
+//! manufactured once per die design" — while distinct sensor designs get
+//! their own fold.  Downstream, the consumer keys batcher lanes by
+//! [`ShapeKey`], so every batch handed to the [`BatchClassifier`] is
+//! homogeneous in output dims **and** wire encoding even when the fleet
+//! mixes 20×20/4-bit and 80×80/8-bit cameras; [`FleetStats::per_shape`]
+//! accounts each shape group separately.
 //!
 //! The shard links carry [`WirePayload`]s.  With [`WireFormat::Quantized`]
 //! sensors the payload is the honest silicon readout — `n_bits`-wide ADC
@@ -32,6 +39,11 @@
 //! at classifier ingest; `bytes_from_sensor` then measures exactly the
 //! Eq. 2 payload (`compression::p2m_bits_per_frame / 8` per frame)
 //! instead of a 32-bit-per-value dense stream.
+//!
+//! For scripted fleet *dynamics* — hot-add, clean removal, mid-stream
+//! producer crashes with restart, frame-rate shifts — see
+//! [`crate::coordinator::scenario`], which drives the same consumer
+//! through the shard registry this module exposes crate-internally.
 //!
 //! # Determinism
 //!
@@ -41,26 +53,132 @@
 //! with a deterministic backend — `correct`) are reproducible run to
 //! run: each camera's frame stream is a pure function of its seed, and
 //! classification is per-frame, so arrival interleaving cannot change
-//! the outcome.  Timing-derived fields (`wall_time_s`,
+//! the outcome.  Camera seeds derive from the camera's stable **id**
+//! (not its slot index), so adding or removing fleet members never
+//! reseeds the survivors.  Timing-derived fields (`wall_time_s`,
 //! `throughput_fps`, latencies, `batches`, watermarks) naturally vary.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::config::SystemConfig;
-use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::batcher::{BatchPolicy, ShapedBatcher};
 use crate::coordinator::metrics::{Latency, Metrics};
 use crate::coordinator::pipeline::{
-    p2m_plan_from_bundle, BatchClassifier, PipelineStats, SensorCompute, WireFormat,
-    WirePayload,
+    p2m_plan_from_bundle, BatchClassifier, PipelineStats, SensorCompute, ShapeKey,
+    WireFormat, WirePayload,
 };
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::coordinator::router::{RoutePolicy, Router};
-use crate::frontend::{Fidelity, FramePlan};
+use crate::coordinator::scenario::{run_incarnation, Segment, SegmentEnd};
+use crate::frontend::{Fidelity, FramePlan, PlanKey};
 use crate::runtime::ModelBundle;
-use crate::sensor::{Camera, Split};
+
+/// One camera of a (possibly heterogeneous) fleet: the sensor design
+/// plus the per-camera runtime choices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CameraSpec {
+    /// stable camera identity; seeds derive from it, so fleet membership
+    /// changes (add/remove/churn) never reseed surviving cameras
+    pub id: u64,
+    /// square input resolution (sensor rows == cols)
+    pub resolution: usize,
+    /// execution fidelity of this camera's frontend
+    pub fidelity: Fidelity,
+    /// ADC output bit-precision N_b (sets the quantized wire code width)
+    pub n_bits: u32,
+    /// link payload format this camera emits
+    pub wire: WireFormat,
+    /// target capture rate in frames/s (0.0 = free-running); pacing
+    /// only — never affects frame *contents* or counts under `Block`
+    pub frame_rate: f64,
+}
+
+impl CameraSpec {
+    /// A free-running camera spec with the given identity and design.
+    pub fn new(id: u64, resolution: usize, n_bits: u32, wire: WireFormat) -> Self {
+        CameraSpec {
+            id,
+            resolution,
+            fidelity: Fidelity::Functional,
+            n_bits,
+            wire,
+            frame_rate: 0.0,
+        }
+    }
+
+    /// The plan-sharing identity of this spec (see [`PlanKey`]): two
+    /// specs with equal keys run off one compiled [`FramePlan`].
+    pub fn plan_key(&self) -> PlanKey {
+        PlanKey {
+            resolution: self.resolution,
+            fidelity: self.fidelity,
+            n_bits: self.n_bits,
+        }
+    }
+}
+
+/// Compile-once plan cache: one [`FramePlan`] per distinct [`PlanKey`],
+/// built with deterministic synthetic stem weights on first use.
+/// Identical cameras share an `Arc` (one curve-fit load and one fold for
+/// the lot); distinct sensor designs get their own compiled plan.
+#[derive(Default)]
+pub struct PlanBank {
+    plans: BTreeMap<PlanKey, Arc<FramePlan>>,
+}
+
+impl PlanBank {
+    /// Empty bank.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct plans compiled so far.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// True before the first compile.
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// The shared plan for `spec`, compiling it on first use.
+    pub fn plan_for(&mut self, spec: &CameraSpec) -> Result<Arc<FramePlan>> {
+        let key = spec.plan_key();
+        if let Some(plan) = self.plans.get(&key) {
+            return Ok(plan.clone());
+        }
+        let plan = synthetic_frame_plan_bits(spec.resolution, spec.fidelity, spec.n_bits)?;
+        debug_assert_eq!(plan.plan_key(), key);
+        self.plans.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    /// A sensor-compute instance for `spec` over the bank's shared plan
+    /// (fresh private `ExecCtx`, the spec's wire format).
+    pub fn sensor_for(&mut self, spec: &CameraSpec) -> Result<SensorCompute> {
+        Ok(SensorCompute::p2m_wire(self.plan_for(spec)?, spec.wire))
+    }
+}
+
+/// Build one sensor per spec, deduplicating compiled plans through a
+/// fresh [`PlanBank`] (returned so callers can assert/report how many
+/// distinct plans the fleet needed).
+pub fn heterogeneous_fleet_sensors(
+    specs: &[CameraSpec],
+) -> Result<(Vec<SensorCompute>, PlanBank)> {
+    let mut bank = PlanBank::new();
+    let sensors = specs
+        .iter()
+        .map(|spec| bank.sensor_for(spec))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((sensors, bank))
+}
 
 /// Fleet topology + scheduling configuration.
 #[derive(Clone, Debug)]
@@ -79,10 +197,15 @@ pub struct FleetConfig {
     pub max_wait: Duration,
     /// how the consumer interleaves the shards
     pub route: RoutePolicy,
-    /// camera `i` is seeded `base_seed + i` unless `camera_seeds` is set
+    /// camera seeds derive from `base_seed` + the camera id (see
+    /// [`FleetConfig::seed_for_camera_id`]) unless `camera_seeds` is set
     pub base_seed: u64,
     /// explicit per-camera seeds (length must equal `n_cameras`)
     pub camera_seeds: Option<Vec<u64>>,
+    /// per-camera specs of a heterogeneous fleet (length must equal
+    /// `n_cameras`, ids unique).  None = homogeneous legacy fleet whose
+    /// camera ids are the slot indices.
+    pub cameras: Option<Vec<CameraSpec>>,
     /// row-chunk threads *inside* each producer's frontend (1 = serial;
     /// raise it when frames are large and cameras are few)
     pub frontend_threads: usize,
@@ -100,26 +223,43 @@ impl Default for FleetConfig {
             route: RoutePolicy::RoundRobin,
             base_seed: 0,
             camera_seeds: None,
+            cameras: None,
             frontend_threads: 1,
         }
     }
 }
 
 impl FleetConfig {
-    /// The seed camera `i` runs with under this configuration.
-    pub fn camera_seed(&self, i: usize) -> u64 {
-        match &self.camera_seeds {
-            Some(seeds) => seeds[i],
-            None => self.base_seed.wrapping_add(i as u64),
-        }
+    /// The seed the camera with stable id `id` runs with: a pure
+    /// function of `(base_seed, id)` — **never** of the camera's slot
+    /// index — so adding or removing fleet members leaves every
+    /// surviving camera's frame stream untouched (churn scenarios stay
+    /// reproducible camera by camera).
+    pub fn seed_for_camera_id(&self, id: u64) -> u64 {
+        self.base_seed.wrapping_add(id)
     }
 
-    fn validate(&self, n_sensors: usize) -> Result<()> {
+    /// The seed the camera in slot `i` runs with under this
+    /// configuration: an explicit `camera_seeds` entry if set, else the
+    /// id-derived seed (the slot's [`CameraSpec::id`] for heterogeneous
+    /// fleets; legacy homogeneous fleets use id = slot index).
+    pub fn camera_seed(&self, i: usize) -> u64 {
+        if let Some(seeds) = &self.camera_seeds {
+            return seeds[i];
+        }
+        let id = match &self.cameras {
+            Some(specs) => specs[i].id,
+            None => i as u64,
+        };
+        self.seed_for_camera_id(id)
+    }
+
+    fn validate(&self, sensors: &[SensorCompute]) -> Result<()> {
         if self.n_cameras == 0 {
             bail!("fleet needs at least one camera");
         }
-        if n_sensors != self.n_cameras {
-            bail!("{} sensors supplied for {} cameras", n_sensors, self.n_cameras);
+        if sensors.len() != self.n_cameras {
+            bail!("{} sensors supplied for {} cameras", sensors.len(), self.n_cameras);
         }
         if let Some(seeds) = &self.camera_seeds {
             if seeds.len() != self.n_cameras {
@@ -129,8 +269,67 @@ impl FleetConfig {
         if self.batch == 0 {
             bail!("batch must be >= 1");
         }
+        if let Some(specs) = &self.cameras {
+            if specs.len() != self.n_cameras {
+                bail!("{} camera specs for {} cameras", specs.len(), self.n_cameras);
+            }
+            for (i, a) in specs.iter().enumerate() {
+                if specs[..i].iter().any(|b| b.id == a.id) {
+                    bail!("duplicate camera id {}", a.id);
+                }
+            }
+            // The supplied sensors must realise the specs they claim.
+            for (i, (sensor, spec)) in sensors.iter().zip(specs).enumerate() {
+                let cfg = sensor.sensor_config();
+                if cfg.rows != spec.resolution {
+                    bail!(
+                        "slot {i} (camera id {}): sensor is {}x{} but the spec says {}",
+                        spec.id,
+                        cfg.rows,
+                        cfg.cols,
+                        spec.resolution
+                    );
+                }
+                if sensor.wire() != spec.wire {
+                    bail!(
+                        "slot {i} (camera id {}): sensor wire {:?} != spec wire {:?}",
+                        spec.id,
+                        sensor.wire(),
+                        spec.wire
+                    );
+                }
+                // The full design identity (resolution + fidelity +
+                // n_bits) must match, or the per-shape accounting and
+                // every spec-derived report would lie about what
+                // actually crossed the wire.
+                if let Some(plan) = sensor.plan() {
+                    if plan.plan_key() != spec.plan_key() {
+                        bail!(
+                            "slot {i} (camera id {}): sensor design {:?} != spec design {:?}",
+                            spec.id,
+                            plan.plan_key(),
+                            spec.plan_key()
+                        );
+                    }
+                }
+            }
+        }
         Ok(())
     }
+}
+
+/// Per-shape-group accounting of a fleet run: one entry per distinct
+/// [`ShapeKey`] that crossed a shard link.  Batches are shape-pure by
+/// construction, so `batches` counts classifier invocations for this
+/// group alone.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShapeStats {
+    /// frames of this shape that reached the classifier
+    pub frames_classified: u64,
+    /// classifier invocations carrying this shape
+    pub batches: u64,
+    /// link bytes this shape contributed
+    pub bytes_from_sensor: u64,
 }
 
 /// End-of-run statistics of a fleet run.
@@ -141,24 +340,105 @@ impl FleetConfig {
 /// `aggregate.queue_high_watermark` is the max over shards;
 /// `aggregate.batches` counts classifier invocations (batches mix
 /// cameras, so per-camera `batches` stays 0); latency percentiles are
-/// recorded on the aggregate only.
+/// recorded on the aggregate only.  `per_shape` splits
+/// `frames_classified` / `batches` / `bytes_from_sensor` by batch shape
+/// group and sums to the aggregate likewise.
 #[derive(Clone, Debug)]
 pub struct FleetStats {
-    /// one entry per camera, index = camera id
+    /// one entry per camera, index = fleet slot (camera id for legacy
+    /// homogeneous fleets; see [`FleetConfig::cameras`] otherwise)
     pub per_camera: Vec<PipelineStats>,
+    /// per shape-group accounting (dims + wire encoding)
+    pub per_shape: BTreeMap<ShapeKey, ShapeStats>,
     /// fleet-wide totals (see type docs for field semantics)
     pub aggregate: PipelineStats,
 }
 
 /// One frame in flight on a shard link: the wire payload (dense f32 or
 /// quantized ADC codes, per the sensor's [`WireFormat`]) plus routing
-/// metadata.
-struct FleetItem {
-    camera: usize,
-    label: u8,
-    captured_at: Instant,
-    payload: WirePayload,
-    bytes: u64,
+/// metadata.  Crate-visible so the scenario driver can produce the same
+/// items.
+pub(crate) struct FleetItem {
+    pub(crate) camera: usize,
+    pub(crate) label: u8,
+    pub(crate) captured_at: Instant,
+    pub(crate) payload: WirePayload,
+    pub(crate) bytes: u64,
+}
+
+/// Shards joining a running consumer.  [`run_fleet`] registers every
+/// shard up front; the scenario driver registers each camera's shard
+/// when the camera actually joins the fleet (hot-add), so the consumer
+/// adopts links mid-run.
+pub(crate) struct ShardRegistry {
+    /// shards the consumer has not adopted yet: (camera slot, link)
+    pending: Mutex<Vec<(usize, BoundedQueue<FleetItem>)>>,
+    /// every shard ever registered (kept for end-of-run accounting)
+    all: Mutex<Vec<(usize, BoundedQueue<FleetItem>)>>,
+    /// set when the consumer aborted: late registrations are closed on
+    /// arrival so their producers cannot block forever
+    poisoned: AtomicBool,
+}
+
+impl ShardRegistry {
+    pub(crate) fn new() -> Self {
+        ShardRegistry {
+            pending: Mutex::new(Vec::new()),
+            all: Mutex::new(Vec::new()),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Offer a camera's shard to the consumer.
+    pub(crate) fn register(&self, slot: usize, q: BoundedQueue<FleetItem>) {
+        self.all.lock().unwrap().push((slot, q.clone()));
+        self.pending.lock().unwrap().push((slot, q.clone()));
+        // Check poisoning only AFTER publishing to `all`: if poison()
+        // ran concurrently it either iterated after our push (and closed
+        // the link itself) or its SeqCst store precedes our load here —
+        // both interleavings leave the link closed, so a producer can
+        // never block on a link the aborted consumer will not drain.
+        if self.poisoned.load(Ordering::SeqCst) {
+            q.close();
+        }
+    }
+
+    /// Shards registered since the last call (consumer-side adoption).
+    pub(crate) fn drain_pending(&self) -> Vec<(usize, BoundedQueue<FleetItem>)> {
+        std::mem::take(&mut *self.pending.lock().unwrap())
+    }
+
+    /// Every shard ever registered, in registration order.
+    pub(crate) fn all(&self) -> Vec<(usize, BoundedQueue<FleetItem>)> {
+        self.all.lock().unwrap().clone()
+    }
+
+    /// Consumer abort: close every known shard and refuse future ones
+    /// open, so producers (current and yet to register) unblock.
+    pub(crate) fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        for (_, q) in self.all.lock().unwrap().iter() {
+            q.close();
+        }
+    }
+}
+
+/// Consumer-side knobs shared by [`run_fleet`] and the scenario driver.
+pub(crate) struct ConsumeParams {
+    pub(crate) batch: usize,
+    pub(crate) max_wait: Duration,
+    pub(crate) route: RoutePolicy,
+    /// total shards the run will register; the consumer only terminates
+    /// once all of them have been adopted, closed and drained
+    pub(crate) expected_shards: usize,
+}
+
+/// Mutable accounting the consumer folds outcomes into.
+pub(crate) struct FleetAccounting<'a> {
+    pub(crate) per_camera: &'a mut [PipelineStats],
+    pub(crate) per_shape: &'a mut BTreeMap<ShapeKey, ShapeStats>,
+    pub(crate) aggregate: &'a mut PipelineStats,
+    pub(crate) latency: &'a Arc<Latency>,
 }
 
 /// Run a multi-camera fleet: one scoped producer thread per camera
@@ -167,16 +447,19 @@ struct FleetItem {
 ///
 /// `sensors` supplies one [`SensorCompute`] per camera (they must all be
 /// the same kind — mixing P2M and baseline cameras in one fleet would
-/// need per-kind artifacts and is rejected).  See [`FleetConfig`] for
-/// seeding, backpressure and routing knobs, and the module docs for the
-/// determinism contract.
+/// need per-kind artifacts and is rejected), but they need **not** be
+/// identical: a heterogeneous fleet (see [`FleetConfig::cameras`],
+/// [`heterogeneous_fleet_sensors`]) mixes resolutions, bit depths and
+/// wire formats, and the consumer batches shape-purely.  See
+/// [`FleetConfig`] for seeding, backpressure and routing knobs, and the
+/// module docs for the determinism contract.
 pub fn run_fleet<C: BatchClassifier>(
     classifier: &mut C,
     sensors: Vec<SensorCompute>,
     cfg: &FleetConfig,
     metrics: &Metrics,
 ) -> Result<FleetStats> {
-    cfg.validate(sensors.len())?;
+    cfg.validate(&sensors)?;
     if sensors.iter().any(|s| s.is_p2m() != sensors[0].is_p2m()) {
         bail!("fleet sensors must all be the same kind (all P2M or all baseline)");
     }
@@ -184,9 +467,20 @@ pub fn run_fleet<C: BatchClassifier>(
     let n = cfg.n_cameras;
     let shards: Vec<BoundedQueue<FleetItem>> =
         (0..n).map(|_| BoundedQueue::new(cfg.queue_capacity, cfg.backpressure)).collect();
+    let registry = ShardRegistry::new();
+    for (ci, q) in shards.iter().enumerate() {
+        registry.register(ci, q.clone());
+    }
+    let params = ConsumeParams {
+        batch: cfg.batch,
+        max_wait: cfg.max_wait,
+        route: cfg.route,
+        expected_shards: n,
+    };
     let frames_in = metrics.counter("fleet_frames_captured");
     let latency = metrics.latency("fleet_e2e_latency");
     let mut per_camera = vec![PipelineStats::default(); n];
+    let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
     let t0 = Instant::now();
     let mut consumer_result: Result<()> = Ok(());
@@ -198,49 +492,32 @@ pub fn run_fleet<C: BatchClassifier>(
             let seed = cfg.camera_seed(ci);
             let n_frames = cfg.frames_per_camera;
             let threads = cfg.frontend_threads;
-            let sensor_cfg = sensor.sensor_config();
+            let frame_rate = cfg
+                .cameras
+                .as_ref()
+                .map_or(0.0, |specs| specs[ci].frame_rate);
             s.spawn(move || {
-                let mut sensor = sensor;
-                let mut camera = Camera::new(sensor_cfg, seed, Split::Test);
-                for _ in 0..n_frames {
-                    let frame = camera.capture();
-                    let captured_at = Instant::now();
-                    let (payload, bytes) = sensor.run_frame(&frame.image, threads);
-                    frames_in.inc();
-                    let accepted = shard.push(FleetItem {
-                        camera: ci,
-                        label: frame.label,
-                        captured_at,
-                        payload,
-                        bytes,
-                    });
-                    // A refused push on a *closed* shard means the
-                    // consumer aborted — stop burning capture/frontend
-                    // work (a refusal on an open DropNewest shard is an
-                    // ordinary accounted drop and capture continues).
-                    if !accepted && shard.is_closed() {
-                        break;
-                    }
-                }
+                // The static fleet is the degenerate script: one
+                // incarnation, one free-running (or spec-paced) segment,
+                // a clean close at the end.
+                let segments =
+                    [Segment { frames: n_frames, frame_rate, end: SegmentEnd::Clean }];
+                run_incarnation(ci, &segments, sensor, shard.clone(), seed, frames_in, threads);
                 shard.close();
             });
         }
 
-        consumer_result = consume(
-            classifier,
-            &shards,
-            cfg,
-            &mut per_camera,
-            &mut aggregate,
-            &latency,
-            t0,
-        );
+        let mut acc = FleetAccounting {
+            per_camera: &mut per_camera,
+            per_shape: &mut per_shape,
+            aggregate: &mut aggregate,
+            latency: &latency,
+        };
+        consumer_result = consume(classifier, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
             // Unblock any producer stuck on a full shard so the scope's
             // implicit joins cannot hang.
-            for q in &shards {
-                q.close();
-            }
+            registry.poison();
         }
     });
     consumer_result?;
@@ -266,23 +543,25 @@ pub fn run_fleet<C: BatchClassifier>(
         st.wall_time_s = wall;
         st.throughput_fps = st.frames_classified as f64 / wall.max(1e-9);
     }
-    Ok(FleetStats { per_camera, aggregate })
+    Ok(FleetStats { per_camera, per_shape, aggregate })
 }
 
-/// The consumer loop: drain shards -> route fairly -> batch -> classify.
-fn consume<C: BatchClassifier>(
+/// The consumer loop shared by [`run_fleet`] and the scenario driver:
+/// adopt registered shards -> drain fairly through the [`Router`] ->
+/// group into shape-pure batches -> classify.
+pub(crate) fn consume<C: BatchClassifier>(
     classifier: &mut C,
-    shards: &[BoundedQueue<FleetItem>],
-    cfg: &FleetConfig,
-    per_camera: &mut [PipelineStats],
-    aggregate: &mut PipelineStats,
-    latency: &std::sync::Arc<Latency>,
+    registry: &ShardRegistry,
+    params: &ConsumeParams,
+    acc: &mut FleetAccounting<'_>,
     t0: Instant,
 ) -> Result<()> {
-    let n_shards = shards.len();
-    let mut router: Router<FleetItem> = Router::new(n_shards, cfg.route);
-    let mut batcher: Batcher<FleetItem> =
-        Batcher::new(BatchPolicy { max_batch: cfg.batch, max_wait: cfg.max_wait });
+    let mut shards: Vec<(usize, BoundedQueue<FleetItem>)> = Vec::new();
+    let mut router: Router<FleetItem> = Router::new(0, params.route);
+    let mut batcher: ShapedBatcher<ShapeKey, FleetItem> = ShapedBatcher::new(BatchPolicy {
+        max_batch: params.batch,
+        max_wait: params.max_wait,
+    });
     let clock = |t: Instant| t.duration_since(t0).as_secs_f64();
     // The sweep below can stop early once a batch is staged; rotating
     // its starting shard keeps that early stop from starving high-index
@@ -290,65 +569,97 @@ fn consume<C: BatchClassifier>(
     let mut sweep_start = 0usize;
 
     loop {
+        // 0. Adopt shards that joined since the last sweep (hot-adds in
+        //    a scenario; everything immediately for a static fleet).
+        for joined in registry.drain_pending() {
+            shards.push(joined);
+            router.add_stream();
+        }
+        let n_shards = shards.len();
+        if n_shards == 0 {
+            if params.expected_shards == 0 {
+                return Ok(());
+            }
+            // No camera has joined yet.
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+
         // 1. Top up the staging router: at most one frame per shard per
-        //    sweep, and never more staged than one batch in flight — the
-        //    *shard queues* are the bounded sensor links, so the staging
-        //    area must stay shallow for backpressure to reach the
-        //    producers.  Bytes are accounted the moment a frame crosses
-        //    its link.
+        //    sweep, and never more staged than one batch in flight *per
+        //    shape lane* — the *shard queues* are the bounded sensor
+        //    links, so the staging area must stay shallow for
+        //    backpressure to reach the producers.  Bytes are accounted
+        //    (per camera and per shape) the moment a frame crosses its
+        //    link.
         let mut moved = 0usize;
         for off in 0..n_shards {
-            if router.total_backlog() + batcher.pending() >= cfg.batch {
+            let stage_cap = params.batch * batcher.lanes().max(1);
+            if router.total_backlog() + batcher.pending() >= stage_cap {
                 break;
             }
-            let ci = (sweep_start + off) % n_shards;
-            if let Some(item) = shards[ci].try_pop() {
-                per_camera[ci].bytes_from_sensor += item.bytes;
-                aggregate.bytes_from_sensor += item.bytes;
-                router.enqueue(ci, item);
+            let si = (sweep_start + off) % n_shards;
+            if let Some(item) = shards[si].1.try_pop() {
+                acc.per_camera[item.camera].bytes_from_sensor += item.bytes;
+                acc.aggregate.bytes_from_sensor += item.bytes;
+                acc.per_shape
+                    .entry(item.payload.shape_key())
+                    .or_default()
+                    .bytes_from_sensor += item.bytes;
+                router.enqueue(si, item);
                 moved += 1;
             }
         }
         sweep_start = (sweep_start + 1) % n_shards;
 
-        // 2. Feed the batcher under the routing policy; size trigger
-        //    fires inside push, age trigger via poll.
+        // 2. Feed the batcher under the routing policy; each shape
+        //    lane's size trigger fires inside push, the per-lane age
+        //    triggers via poll.
         while let Some((_, item)) = router.next() {
-            if let Some(batch) = batcher.push(item, clock(Instant::now())) {
-                classify_fleet_batch(classifier, batch, per_camera, aggregate, latency)?;
+            let key = item.payload.shape_key();
+            if let Some((_, batch)) = batcher.push(key, item, clock(Instant::now())) {
+                classify_fleet_batch(classifier, batch, acc)?;
             }
         }
-        if let Some(batch) = batcher.poll(clock(Instant::now())) {
-            classify_fleet_batch(classifier, batch, per_camera, aggregate, latency)?;
+        while let Some((_, batch)) = batcher.poll(clock(Instant::now())) {
+            classify_fleet_batch(classifier, batch, acc)?;
         }
 
-        // 3. Terminate once every producer closed its shard and
-        //    everything in flight has been classified.
+        // 3. Terminate once every expected camera has joined and closed
+        //    its shard and everything in flight has been classified.
         if moved == 0 {
-            let all_closed_and_drained =
-                shards.iter().all(|q| q.is_closed() && q.is_empty());
+            let all_closed_and_drained = n_shards == params.expected_shards
+                && shards.iter().all(|(_, q)| q.is_closed() && q.is_empty());
             if all_closed_and_drained && router.total_backlog() == 0 {
-                if let Some(batch) = batcher.flush() {
-                    classify_fleet_batch(classifier, batch, per_camera, aggregate, latency)?;
+                while let Some((_, batch)) = batcher.flush() {
+                    classify_fleet_batch(classifier, batch, acc)?;
                 }
                 return Ok(());
             }
-            // Idle: producers are still capturing.  A short sleep keeps
-            // the consumer from spinning on empty shards.
+            // Idle: producers are still capturing (or yet to join).  A
+            // short sleep keeps the consumer from spinning on empty
+            // shards.
             std::thread::sleep(Duration::from_micros(200));
         }
     }
 }
 
-/// Classify one mixed-camera batch and fold the outcome into both the
-/// per-camera and the aggregate stats.
-fn classify_fleet_batch<C: BatchClassifier>(
+/// Classify one (shape-pure, possibly mixed-camera) batch and fold the
+/// outcome into the per-camera, per-shape and aggregate stats.
+pub(crate) fn classify_fleet_batch<C: BatchClassifier>(
     classifier: &mut C,
     batch: Vec<FleetItem>,
-    per_camera: &mut [PipelineStats],
-    aggregate: &mut PipelineStats,
-    latency: &std::sync::Arc<Latency>,
+    acc: &mut FleetAccounting<'_>,
 ) -> Result<()> {
+    let Some(shape) = batch.first().map(|item| item.payload.shape_key()) else {
+        return Ok(());
+    };
+    // The shape-aware batcher guarantees purity; turning a violation
+    // into a hard error (rather than a silently mis-assembled batch
+    // tensor) keeps future batching bugs loud.
+    if batch.iter().any(|item| item.payload.shape_key() != shape) {
+        bail!("shape-mixed batch reached the classifier (batcher bug)");
+    }
     let payloads: Vec<&WirePayload> = batch.iter().map(|item| &item.payload).collect();
     let preds = classifier.classify(&payloads)?;
     if preds.len() != batch.len() {
@@ -356,16 +667,20 @@ fn classify_fleet_batch<C: BatchClassifier>(
     }
     let now = Instant::now();
     for (item, &pred) in batch.iter().zip(&preds) {
-        let st = &mut per_camera[item.camera];
+        let st = &mut acc.per_camera[item.camera];
         st.frames_classified += 1;
-        aggregate.frames_classified += 1;
+        acc.aggregate.frames_classified += 1;
         if pred == item.label {
             st.correct += 1;
-            aggregate.correct += 1;
+            acc.aggregate.correct += 1;
         }
-        latency.record_secs(now.duration_since(item.captured_at).as_secs_f64());
+        acc.latency
+            .record_secs(now.duration_since(item.captured_at).as_secs_f64());
     }
-    aggregate.batches += 1;
+    acc.aggregate.batches += 1;
+    let ss = acc.per_shape.entry(shape).or_default();
+    ss.batches += 1;
+    ss.frames_classified += batch.len() as u64;
     Ok(())
 }
 
@@ -392,7 +707,20 @@ pub fn synthetic_frame_plan(
     resolution: usize,
     fidelity: Fidelity,
 ) -> Result<Arc<FramePlan>> {
-    let cfg = SystemConfig::for_resolution(resolution);
+    synthetic_frame_plan_bits(resolution, fidelity, SystemConfig::default().hyper.n_bits)
+}
+
+/// [`synthetic_frame_plan`] at an explicit ADC output bit-precision —
+/// the per-design compile step behind heterogeneous fleets.  The stem
+/// weights are a fixed function of the architecture (seeded 0x5EED),
+/// not of resolution or bit depth, mirroring one trained network
+/// deployed across different sensor designs.
+pub fn synthetic_frame_plan_bits(
+    resolution: usize,
+    fidelity: Fidelity,
+    n_bits: u32,
+) -> Result<Arc<FramePlan>> {
+    let cfg = SystemConfig::for_resolution_bits(resolution, n_bits);
     let p = cfg.hyper.patch_len();
     let c = cfg.hyper.out_channels;
     let mut rng = crate::util::rng::Rng::seed(0x5EED);
@@ -464,6 +792,13 @@ mod tests {
         }
         assert_eq!(stats.aggregate.frames_classified, 18);
         assert!(stats.aggregate.batches >= 5); // 18 frames / batch 4
+        // Homogeneous fleet: exactly one shape group, carrying it all.
+        assert_eq!(stats.per_shape.len(), 1);
+        let (shape, ss) = stats.per_shape.iter().next().unwrap();
+        assert_eq!(*shape, ShapeKey { h: 4, w: 4, c: 8, bits: 0 });
+        assert_eq!(ss.frames_classified, 18);
+        assert_eq!(ss.batches, stats.aggregate.batches);
+        assert_eq!(ss.bytes_from_sensor, stats.aggregate.bytes_from_sensor);
     }
 
     #[test]
@@ -480,6 +815,7 @@ mod tests {
             assert_eq!(q.bytes_from_sensor, 6 * 128, "4x4x8 8-bit codes");
             assert_eq!(d.bytes_from_sensor, 4 * q.bytes_from_sensor);
         }
+        assert!(quant.per_shape.contains_key(&ShapeKey { h: 4, w: 4, c: 8, bits: 8 }));
     }
 
     #[test]
@@ -518,5 +854,166 @@ mod tests {
         let metrics = Metrics::new();
         let mut clf = MeanThresholdClassifier::new(0.5);
         assert!(run_fleet(&mut clf, sensors, &cfg, &metrics).is_err());
+    }
+
+    #[test]
+    fn camera_seeds_derive_from_id_not_slot() {
+        // The churn-reproducibility fix: removing a camera from the
+        // middle of the fleet must not reseed the survivors.
+        let spec = |id: u64| CameraSpec::new(id, 20, 8, WireFormat::Dense);
+        let full = FleetConfig {
+            n_cameras: 3,
+            cameras: Some(vec![spec(10), spec(11), spec(12)]),
+            base_seed: 100,
+            ..small_cfg()
+        };
+        let shrunk = FleetConfig {
+            n_cameras: 2,
+            cameras: Some(vec![spec(10), spec(12)]),
+            base_seed: 100,
+            ..small_cfg()
+        };
+        // Camera id 12 sat in slot 2, now sits in slot 1 — same seed.
+        assert_eq!(full.camera_seed(2), shrunk.camera_seed(1));
+        assert_eq!(full.camera_seed(0), shrunk.camera_seed(0));
+        assert_eq!(shrunk.camera_seed(1), shrunk.seed_for_camera_id(12));
+        // And the id-derived seed actually reaches the camera: the same
+        // id produces the same per-camera outcome from either slot.
+        let run_specs = |specs: Vec<CameraSpec>| -> FleetStats {
+            let (sensors, _) = heterogeneous_fleet_sensors(&specs).unwrap();
+            let cfg = FleetConfig {
+                n_cameras: specs.len(),
+                cameras: Some(specs),
+                base_seed: 100,
+                ..small_cfg()
+            };
+            let mut clf = MeanThresholdClassifier::new(0.5);
+            run_fleet(&mut clf, sensors, &cfg, &Metrics::new()).unwrap()
+        };
+        let full_stats = run_specs(vec![spec(10), spec(11), spec(12)]);
+        let shrunk_stats = run_specs(vec![spec(10), spec(12)]);
+        let tuple = |st: &PipelineStats| {
+            (st.frames_captured, st.frames_classified, st.bytes_from_sensor, st.correct)
+        };
+        assert_eq!(tuple(&full_stats.per_camera[0]), tuple(&shrunk_stats.per_camera[0]));
+        assert_eq!(tuple(&full_stats.per_camera[2]), tuple(&shrunk_stats.per_camera[1]));
+    }
+
+    #[test]
+    fn plan_bank_dedupes_by_design_not_by_camera() {
+        let specs = [
+            CameraSpec::new(0, 20, 8, WireFormat::Dense),
+            CameraSpec::new(1, 20, 8, WireFormat::Quantized), // wire differs: same plan
+            CameraSpec::new(2, 40, 8, WireFormat::Dense),     // resolution differs
+            CameraSpec::new(3, 20, 6, WireFormat::Quantized), // bit depth differs
+            CameraSpec::new(4, 20, 8, WireFormat::Dense),     // clone of 0
+        ];
+        let (sensors, bank) = heterogeneous_fleet_sensors(&specs).unwrap();
+        assert_eq!(sensors.len(), 5);
+        assert_eq!(bank.len(), 3, "three distinct (res, fidelity, n_bits) designs");
+        // Cameras 0, 1 and 4 share one Arc'd plan instance.
+        let p0 = sensors[0].plan().unwrap();
+        assert!(Arc::ptr_eq(p0, sensors[1].plan().unwrap()));
+        assert!(Arc::ptr_eq(p0, sensors[4].plan().unwrap()));
+        assert!(!Arc::ptr_eq(p0, sensors[2].plan().unwrap()));
+        assert!(!Arc::ptr_eq(p0, sensors[3].plan().unwrap()));
+        // The compiled plans honour the spec's design knobs.
+        assert_eq!(sensors[2].plan().unwrap().cfg.sensor.rows, 40);
+        assert_eq!(sensors[3].plan().unwrap().cfg.hyper.n_bits, 6);
+        assert_eq!(sensors[3].plan().unwrap().quant.bits, 6);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_batches_stay_shape_pure() {
+        // Mixed resolutions + bit depths + wire formats in one fleet:
+        // every batch reaching the classifier must be shape-pure, all
+        // frames classified, and the per-shape stats must sum to the
+        // aggregate.
+        struct ShapeChecker {
+            batches_seen: u64,
+        }
+        impl BatchClassifier for ShapeChecker {
+            fn classify(&mut self, batch: &[&WirePayload]) -> Result<Vec<u8>> {
+                let shape = batch[0].shape_key();
+                assert!(
+                    batch.iter().all(|p| p.shape_key() == shape),
+                    "shape-mixed batch delivered to the classifier"
+                );
+                self.batches_seen += 1;
+                Ok(vec![0; batch.len()])
+            }
+        }
+        let specs = vec![
+            CameraSpec::new(0, 20, 8, WireFormat::Quantized),
+            CameraSpec::new(1, 20, 8, WireFormat::Quantized),
+            CameraSpec::new(2, 40, 8, WireFormat::Dense),
+            CameraSpec::new(3, 20, 4, WireFormat::Quantized),
+        ];
+        let (sensors, _) = heterogeneous_fleet_sensors(&specs).unwrap();
+        let cfg = FleetConfig {
+            n_cameras: 4,
+            frames_per_camera: 6,
+            batch: 4,
+            cameras: Some(specs),
+            base_seed: 9,
+            ..FleetConfig::default()
+        };
+        let mut clf = ShapeChecker { batches_seen: 0 };
+        let stats = run_fleet(&mut clf, sensors, &cfg, &Metrics::new()).unwrap();
+        assert_eq!(stats.aggregate.frames_classified, 24);
+        assert_eq!(stats.aggregate.frames_dropped, 0);
+        // Three distinct shapes: 4x4x8/q8 (cams 0+1), 8x8x8/f32, 4x4x8/q4.
+        assert_eq!(stats.per_shape.len(), 3);
+        let shapes: Vec<ShapeKey> = stats.per_shape.keys().copied().collect();
+        assert!(shapes.contains(&ShapeKey { h: 4, w: 4, c: 8, bits: 8 }));
+        assert!(shapes.contains(&ShapeKey { h: 8, w: 8, c: 8, bits: 0 }));
+        assert!(shapes.contains(&ShapeKey { h: 4, w: 4, c: 8, bits: 4 }));
+        let frames: u64 = stats.per_shape.values().map(|s| s.frames_classified).sum();
+        let batches: u64 = stats.per_shape.values().map(|s| s.batches).sum();
+        let bytes: u64 = stats.per_shape.values().map(|s| s.bytes_from_sensor).sum();
+        assert_eq!(frames, stats.aggregate.frames_classified);
+        assert_eq!(batches, stats.aggregate.batches);
+        assert_eq!(batches, clf.batches_seen);
+        assert_eq!(bytes, stats.aggregate.bytes_from_sensor);
+        // The two q8 cameras alone feed their shape group.
+        let q8 = &stats.per_shape[&ShapeKey { h: 4, w: 4, c: 8, bits: 8 }];
+        assert_eq!(q8.frames_classified, 12);
+        assert_eq!(q8.bytes_from_sensor, 12 * 128);
+        // 4-bit codes: 4*4*8 values * 4 bits = 64 bytes/frame.
+        let q4 = &stats.per_shape[&ShapeKey { h: 4, w: 4, c: 8, bits: 4 }];
+        assert_eq!(q4.bytes_from_sensor, 6 * 64);
+    }
+
+    #[test]
+    fn spec_mismatched_sensors_are_rejected() {
+        let specs = vec![
+            CameraSpec::new(0, 20, 8, WireFormat::Dense),
+            CameraSpec::new(1, 40, 8, WireFormat::Dense),
+        ];
+        // Sensors built for the *wrong* order (40 first) must fail
+        // validation, as must duplicate camera ids.
+        let (mut sensors, _) = heterogeneous_fleet_sensors(&specs).unwrap();
+        sensors.swap(0, 1);
+        let cfg = FleetConfig {
+            n_cameras: 2,
+            cameras: Some(specs.clone()),
+            ..small_cfg()
+        };
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        assert!(run_fleet(&mut clf, sensors, &cfg, &Metrics::new()).is_err());
+
+        let dup = vec![specs[0], specs[0]];
+        let (sensors, _) = heterogeneous_fleet_sensors(&dup).unwrap();
+        let cfg = FleetConfig { n_cameras: 2, cameras: Some(dup), ..small_cfg() };
+        assert!(run_fleet(&mut clf, sensors, &cfg, &Metrics::new()).is_err());
+
+        // A bit-depth lie is caught too: the sensor's plan was compiled
+        // at 8 bits but the spec claims 4 (same resolution and wire, so
+        // only the full plan-key check can see it).
+        let built = [CameraSpec::new(0, 20, 8, WireFormat::Quantized)];
+        let (sensors, _) = heterogeneous_fleet_sensors(&built).unwrap();
+        let claimed = vec![CameraSpec::new(0, 20, 4, WireFormat::Quantized)];
+        let cfg = FleetConfig { n_cameras: 1, cameras: Some(claimed), ..small_cfg() };
+        assert!(run_fleet(&mut clf, sensors, &cfg, &Metrics::new()).is_err());
     }
 }

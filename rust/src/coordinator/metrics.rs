@@ -1,8 +1,8 @@
-//! Lightweight metrics registry: counters + latency recorders for the
-//! pipeline (thread-safe, lock-per-metric).
+//! Lightweight metrics registry: counters, up/down gauges and latency
+//! recorders for the pipeline (thread-safe, lock-per-metric).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::percentile;
@@ -24,6 +24,39 @@ impl Counter {
     /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge with a high watermark (e.g. live cameras in a churn
+/// scenario: hot-adds increment, removals/crashes decrement, and the
+/// watermark records the peak concurrency the run reached).
+pub struct Gauge {
+    value: AtomicI64,
+    high: AtomicI64,
+}
+
+impl Gauge {
+    /// Add `delta` (may be negative) and return the new value.
+    pub fn add(&self, delta: i64) -> i64 {
+        let now = self.value.fetch_add(delta, Ordering::Relaxed) + delta;
+        self.high.fetch_max(now, Ordering::Relaxed);
+        now
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Highest value ever observed by [`Gauge::add`].
+    pub fn high_watermark(&self) -> i64 {
+        self.high.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge { value: AtomicI64::new(0), high: AtomicI64::new(0) }
     }
 }
 
@@ -71,10 +104,11 @@ impl Latency {
     }
 }
 
-/// Registry of named counters + latencies.
+/// Registry of named counters + gauges + latencies.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     latencies: Mutex<BTreeMap<String, std::sync::Arc<Latency>>>,
 }
 
@@ -87,6 +121,16 @@ impl Metrics {
     /// Fetch (or create) the named counter.
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Fetch (or create) the named gauge.
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -109,6 +153,13 @@ impl Metrics {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name}: {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}: {} (peak {})\n",
+                g.get(),
+                g.high_watermark()
+            ));
         }
         for (name, l) in self.latencies.lock().unwrap().iter() {
             if l.count() > 0 {
@@ -162,6 +213,23 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn gauge_tracks_value_and_peak() {
+        let m = Metrics::new();
+        let g = m.gauge("active");
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.add(3), 3);
+        assert_eq!(g.add(-1), 2);
+        assert_eq!(g.add(4), 6);
+        assert_eq!(g.add(-6), 0);
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.high_watermark(), 6);
+        // Same name -> same gauge instance.
+        assert_eq!(m.gauge("active").get(), 0);
+        assert_eq!(m.gauge("active").high_watermark(), 6);
+        assert!(m.snapshot().contains("active: 0 (peak 6)"));
     }
 
     #[test]

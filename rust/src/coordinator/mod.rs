@@ -1,15 +1,21 @@
 //! Layer-3 coordination: the smart-camera runtime around the P2M sensor —
-//! bounded sensor-SoC link with backpressure, dynamic batching, multi-
-//! camera routing, metrics, the single-camera pipeline and the sharded
-//! multi-camera fleet.
+//! bounded sensor-SoC link with backpressure, dynamic (shape-aware)
+//! batching, multi-camera routing, metrics, the single-camera pipeline,
+//! the sharded multi-camera fleet and the scripted scenario driver.
 //!
-//! Two serving topologies share the substrates in this module:
+//! Three serving topologies share the substrates in this module:
 //!
 //! * [`run_pipeline`] / [`run_pipeline_with`] — one camera, one producer
 //!   thread, one bounded link into the classifier;
-//! * [`run_fleet`] — N cameras on N producer threads, per-shard bounded
-//!   links merged by the [`Router`] and [`Batcher`] into one shared
-//!   classifier on the caller's thread (see [`fleet`]).
+//! * [`run_fleet`] — N cameras (identical **or heterogeneous** — mixed
+//!   resolutions, ADC bit depths, wire formats via [`CameraSpec`] and
+//!   the plan-deduplicating [`PlanBank`]) on N producer threads,
+//!   per-shard bounded links merged by the [`Router`] and the
+//!   shape-aware [`ShapedBatcher`] into one shared classifier on the
+//!   caller's thread (see [`fleet`]);
+//! * [`run_scenario`] — a deterministic scripted fleet with camera
+//!   lifecycle events: hot-add, clean removal, mid-stream producer
+//!   crashes with thread restart, frame-rate shifts (see [`scenario`]).
 //!
 //! Classification is pluggable through [`BatchClassifier`]:
 //! [`PjrtClassifier`] serves the AOT artifacts through PJRT,
@@ -18,7 +24,8 @@
 //! Every link carries [`WirePayload`]s: dense f32 frames or — with
 //! [`WireFormat::Quantized`] sensors — the quantized wire format
 //! ([`crate::sensor::QuantizedFrame`]), dequantised only at classifier
-//! ingest.
+//! ingest.  Batches are grouped by [`ShapeKey`] (dims + wire encoding),
+//! so the classifier boundary never sees a shape-mixed batch.
 
 pub mod batcher;
 pub mod fleet;
@@ -26,17 +33,23 @@ pub mod metrics;
 pub mod pipeline;
 pub mod queue;
 pub mod router;
+pub mod scenario;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, ShapedBatcher};
 pub use fleet::{
-    p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors, synthetic_frame_plan,
-    FleetConfig, FleetStats,
+    heterogeneous_fleet_sensors, p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors,
+    synthetic_frame_plan, synthetic_frame_plan_bits, CameraSpec, FleetConfig, FleetStats,
+    PlanBank, ShapeStats,
 };
-pub use metrics::{Counter, Latency, Metrics};
+pub use metrics::{Counter, Gauge, Latency, Metrics};
 pub use pipeline::{
     baseline_sensor, p2m_plan_from_bundle, p2m_sensor_from_bundle, run_pipeline,
     run_pipeline_with, BatchClassifier, MeanThresholdClassifier, PipelineConfig,
-    PipelineStats, PjrtClassifier, SensorCompute, WireFormat, WirePayload,
+    PipelineStats, PjrtClassifier, SensorCompute, ShapeKey, WireFormat, WirePayload,
 };
 pub use queue::{Backpressure, BoundedQueue};
 pub use router::{RoutePolicy, Router};
+pub use scenario::{
+    run_scenario, CameraReport, CameraScript, Scenario, ScenarioReport, Segment,
+    SegmentEnd,
+};

@@ -44,6 +44,33 @@ pub enum WireFormat {
     Quantized,
 }
 
+/// The batch-grouping identity of a wire payload: payloads may share a
+/// classifier batch only when they agree on output dims **and** wire
+/// encoding.  The fleet's shape-aware batcher keys its lanes by this, so
+/// a heterogeneous fleet (mixed resolutions / bit depths / wire formats)
+/// still hands the classifier shape-pure batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ShapeKey {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// wire code width in bits; 0 encodes the dense f32 stream (so dense
+    /// and 32-bit-quantized payloads could never share a lane even if a
+    /// 32-bit wire existed)
+    pub bits: u32,
+}
+
+impl std::fmt::Display for ShapeKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}/", self.h, self.w, self.c)?;
+        if self.bits == 0 {
+            write!(f, "f32")
+        } else {
+            write!(f, "q{}", self.bits)
+        }
+    }
+}
+
 /// One frame on the wire: what actually crosses the shard queues and
 /// the [`BatchClassifier`] boundary.
 ///
@@ -74,6 +101,16 @@ impl WirePayload {
             WirePayload::Dense(img) => img.len(),
             WirePayload::Quantized(q) => q.len(),
         }
+    }
+
+    /// Batch-grouping key: dims + wire encoding (see [`ShapeKey`]).
+    pub fn shape_key(&self) -> ShapeKey {
+        let (h, w, c) = self.dims();
+        let bits = match self {
+            WirePayload::Dense(_) => 0,
+            WirePayload::Quantized(q) => q.spec.bits,
+        };
+        ShapeKey { h, w, c, bits }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -768,5 +805,23 @@ mod tests {
         let mut buf = [0.0f32; 4];
         q.write_f32(&mut buf);
         assert_eq!(buf.to_vec(), q.to_image().data);
+    }
+
+    #[test]
+    fn shape_keys_separate_dims_and_wire_encodings() {
+        let img = Image::zeros(2, 3, 4);
+        let dense = WirePayload::Dense(img.clone());
+        assert_eq!(dense.shape_key(), ShapeKey { h: 2, w: 3, c: 4, bits: 0 });
+        assert_eq!(dense.shape_key().to_string(), "2x3x4/f32");
+
+        let spec6 = crate::sensor::QuantSpec::unipolar(1.0, 6);
+        let q6 = WirePayload::Quantized(crate::sensor::QuantizedFrame::from_image(&img, spec6));
+        assert_eq!(q6.shape_key(), ShapeKey { h: 2, w: 3, c: 4, bits: 6 });
+        assert_eq!(q6.shape_key().to_string(), "2x3x4/q6");
+
+        // Same dims, different encoding -> different lanes; and vice versa.
+        assert_ne!(dense.shape_key(), q6.shape_key());
+        let other = WirePayload::Dense(Image::zeros(3, 2, 4));
+        assert_ne!(dense.shape_key(), other.shape_key());
     }
 }

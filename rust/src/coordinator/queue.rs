@@ -290,6 +290,112 @@ mod tests {
     }
 
     #[test]
+    fn mpsc_hammer_balances_stats_under_both_policies() {
+        // Multi-producer / single-consumer stress for each backpressure
+        // policy: whatever interleaving the scheduler produces, the
+        // stats() counters must balance *exactly* against the items the
+        // consumer observed — pushed == popped (after a full drain),
+        // pushed + dropped == attempts, every accepted item seen exactly
+        // once, and the queue never exceeds capacity.
+        for policy in [Backpressure::Block, Backpressure::DropNewest] {
+            let cap = 4;
+            let n_producers = 4u64;
+            let per_producer = 300u64;
+            let q: BoundedQueue<u64> = BoundedQueue::new(cap, policy);
+
+            let producers: Vec<_> = (0..n_producers)
+                .map(|p| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut accepted = 0u64;
+                        for i in 0..per_producer {
+                            if q.push(p * per_producer + i) {
+                                accepted += 1;
+                            }
+                        }
+                        accepted
+                    })
+                })
+                .collect();
+
+            let consumer = {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got: Vec<u64> = Vec::new();
+                    // Drain until closed *and* empty; pop returns None
+                    // only on timeout or closed+drained.
+                    loop {
+                        match q.pop(Duration::from_millis(20)) {
+                            Some(v) => got.push(v),
+                            None => {
+                                if q.is_closed() && q.is_empty() {
+                                    return got;
+                                }
+                            }
+                        }
+                    }
+                })
+            };
+
+            let mut accepted_total = 0u64;
+            for p in producers {
+                accepted_total += p.join().unwrap();
+            }
+            q.close();
+            let got = consumer.join().unwrap();
+
+            let (pushed, popped, dropped, hwm) = q.stats();
+            let attempts = n_producers * per_producer;
+            assert_eq!(pushed, accepted_total, "{policy:?}: pushed vs producer acks");
+            assert_eq!(pushed + dropped, attempts, "{policy:?}: attempts conservation");
+            assert_eq!(popped, pushed, "{policy:?}: fully drained");
+            assert_eq!(got.len() as u64, popped, "{policy:?}: observed vs popped");
+            assert!(hwm <= cap, "{policy:?}: hwm {hwm} > cap {cap}");
+            if policy == Backpressure::Block {
+                assert_eq!(dropped, 0, "blocking link must be lossless");
+            }
+            // Every accepted item observed exactly once (ids are unique).
+            let mut sorted = got;
+            sorted.sort_unstable();
+            let before = sorted.len();
+            sorted.dedup();
+            assert_eq!(sorted.len(), before, "{policy:?}: duplicated item");
+        }
+    }
+
+    #[test]
+    fn close_wakes_all_blocked_producers_promptly() {
+        // Several producers blocked on a full Block-policy link must all
+        // be released by one close() — promptly, not via timeouts.
+        let q: BoundedQueue<u32> = BoundedQueue::new(1, Backpressure::Block);
+        assert!(q.push(0)); // fill the link
+        let blocked: Vec<_> = (1..=3)
+            .map(|v| {
+                let q = q.clone();
+                std::thread::spawn(move || q.push(v))
+            })
+            .collect();
+        // Give all three a chance to park on not_full.
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = std::time::Instant::now();
+        q.close();
+        for t in blocked {
+            assert!(!t.join().unwrap(), "push must fail once the link closes");
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "blocked producers took {:?} to wake after close()",
+            t0.elapsed()
+        );
+        // The pre-close item still drains; the failed pushes left no trace.
+        let (pushed, _, dropped, _) = q.stats();
+        assert_eq!(pushed, 1);
+        assert_eq!(dropped, 0, "refused-on-close pushes are not drops");
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(0));
+        assert_eq!(q.pop(Duration::from_millis(5)), None);
+    }
+
+    #[test]
     fn drop_policy_bounds_queue_and_accounts_losses() {
         Prop::new("drop policy conserves accounting").cases(32).run(|rng| {
             let cap = rng.usize(1, 6);

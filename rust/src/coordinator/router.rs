@@ -24,15 +24,27 @@ pub struct Router<T> {
 }
 
 impl<T> Router<T> {
-    /// New router over `n_cameras` empty per-camera queues.
+    /// New router over `n_cameras` empty per-camera queues.  Zero
+    /// cameras is allowed (a scenario fleet before its first hot-add):
+    /// [`Router::next`] just yields nothing until
+    /// [`Router::add_stream`] registers a stream.
     pub fn new(n_cameras: usize, policy: RoutePolicy) -> Self {
-        assert!(n_cameras >= 1);
         Router {
             queues: (0..n_cameras).map(|_| VecDeque::new()).collect(),
             policy,
             next_rr: 0,
             served: vec![0; n_cameras],
         }
+    }
+
+    /// Register one more camera stream mid-run (hot-add); returns its
+    /// stream index.  Existing backlogs, fairness counters and the
+    /// round-robin cursor are untouched — the new stream simply joins
+    /// the rotation.
+    pub fn add_stream(&mut self) -> usize {
+        self.queues.push(VecDeque::new());
+        self.served.push(0);
+        self.queues.len() - 1
     }
 
     /// Number of camera streams.
@@ -55,7 +67,8 @@ impl<T> Router<T> {
         self.queues.iter().map(VecDeque::len).sum()
     }
 
-    /// Next (camera, item) under the policy; None when all queues empty.
+    /// Next (camera, item) under the policy; None when all queues empty
+    /// (or no stream has been registered yet).
     pub fn next(&mut self) -> Option<(usize, T)> {
         let n = self.queues.len();
         let cam = match self.policy {
@@ -78,8 +91,7 @@ impl<T> Router<T> {
                     .iter()
                     .enumerate()
                     .map(|(i, q)| (i, q.len()))
-                    .max_by_key(|&(i, len)| (len, usize::MAX - i))
-                    .unwrap();
+                    .max_by_key(|&(i, len)| (len, usize::MAX - i))?;
                 if len == 0 {
                     return None;
                 }
@@ -135,6 +147,39 @@ mod tests {
         let order: Vec<usize> = (0..2).map(|_| r.next().unwrap().0).collect();
         assert!(order.contains(&0) && order.contains(&1));
         assert_eq!(r.next(), None);
+    }
+
+    #[test]
+    fn empty_router_yields_nothing_until_hot_add() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LongestQueueFirst] {
+            let mut r: Router<u32> = Router::new(0, policy);
+            assert_eq!(r.n_cameras(), 0);
+            assert_eq!(r.total_backlog(), 0);
+            assert_eq!(r.next(), None);
+            // Hot-add two streams mid-run; they join the rotation.
+            assert_eq!(r.add_stream(), 0);
+            assert_eq!(r.add_stream(), 1);
+            r.enqueue(1, 7);
+            assert_eq!(r.next(), Some((1, 7)));
+            assert_eq!(r.served, vec![0, 1]);
+            assert_eq!(r.next(), None);
+        }
+    }
+
+    #[test]
+    fn hot_added_stream_keeps_existing_fairness_state() {
+        let mut r = Router::new(2, RoutePolicy::RoundRobin);
+        for i in 0..2 {
+            r.enqueue(0, i);
+            r.enqueue(1, 10 + i);
+        }
+        assert_eq!(r.next(), Some((0, 0)));
+        let new = r.add_stream();
+        assert_eq!(new, 2);
+        r.enqueue(new, 20);
+        // Rotation continues from where it was: 1, then the new stream.
+        let cams: Vec<usize> = (0..3).map(|_| r.next().unwrap().0).collect();
+        assert_eq!(cams, vec![1, 2, 0]);
     }
 
     #[test]

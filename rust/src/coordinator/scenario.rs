@@ -1,0 +1,775 @@
+//! Deterministic fleet scenarios: scripted camera lifecycle events —
+//! hot-add, clean removal, mid-stream producer crashes with thread
+//! restart, frame-rate shifts — executed against the real fleet
+//! machinery (per-camera shard links, the shared shape-aware consumer).
+//!
+//! A [`Scenario`] is a *script*, not a trace: each camera's lifecycle is
+//! a list of [`Segment`]s (capture N frames at a rate, then
+//! [`SegmentEnd::Shift`] into the next segment, [`SegmentEnd::Crash`]
+//! the producer thread, or close the link [`SegmentEnd::Clean`]ly),
+//! plus a hot-add delay.  A per-camera **supervisor** thread realises
+//! the script: it registers the camera's shard with the consumer when
+//! the camera joins, spawns one real producer thread per incarnation,
+//! joins it, and — on a scripted crash — restarts the next incarnation
+//! on a fresh thread, exactly like a watchdog restarting a wedged
+//! camera process.  A camera whose script *ends* in a crash leaves an
+//! orphaned link; the supervisor closes it (the watchdog noticing the
+//! dead producer), so the consumer still terminates and every frame the
+//! link **accepted** is still classified — crash-churn loses no
+//! accepted frames.
+//!
+//! # Determinism
+//!
+//! Under [`Backpressure::Block`] and a pure classifier, every
+//! data-dependent counter of the run is a function of the script and
+//! its seed alone: camera seeds derive from the stable camera **id**
+//! ([`Scenario::camera_seed`]), incarnation seeds from (camera seed,
+//! incarnation index), and classification is per-frame, so thread
+//! interleaving, hot-add timing and pacing cannot change outcomes.
+//! [`ScenarioReport::digest`] folds exactly those deterministic fields
+//! into one u64 — two runs of the same scenario must agree bit-for-bit
+//! (the CI smoke asserts this; timing-derived fields like latency,
+//! batch counts and watermarks are excluded).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::fleet::{
+    consume, CameraSpec, ConsumeParams, FleetAccounting, FleetItem, PlanBank,
+    ShapeStats, ShardRegistry,
+};
+use crate::coordinator::metrics::{Counter, Metrics};
+use crate::coordinator::pipeline::{
+    BatchClassifier, PipelineStats, SensorCompute, ShapeKey, WireFormat,
+};
+use crate::coordinator::queue::{Backpressure, BoundedQueue};
+use crate::coordinator::router::RoutePolicy;
+use crate::frontend::FramePlan;
+use crate::sensor::{Camera, Split};
+
+/// How a [`Segment`] hands over to what follows it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmentEnd {
+    /// Continue into the next segment on the *same* producer thread and
+    /// camera state — a frame-rate shift, not a lifecycle event.
+    Shift,
+    /// The producer thread dies mid-stream without closing its link.
+    /// If segments follow, the supervisor restarts a fresh incarnation
+    /// (new thread, new `ExecCtx`, incarnation-derived seed); if not,
+    /// the supervisor closes the orphaned link.
+    Crash,
+    /// The camera leaves the fleet cleanly: last frame pushed, link
+    /// closed.  Only valid as the final segment.
+    Clean,
+}
+
+/// One stretch of a camera's scripted life: capture `frames` frames at
+/// `frame_rate` (0.0 = free-running), then end as `end` says.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Segment {
+    /// frames to capture in this stretch
+    pub frames: usize,
+    /// target capture rate in frames/s (0.0 = free-running); pacing
+    /// only — never affects frame contents or counts
+    pub frame_rate: f64,
+    /// what happens after the last frame of this stretch
+    pub end: SegmentEnd,
+}
+
+impl Segment {
+    /// Free-running segment ending `end`.
+    pub fn free(frames: usize, end: SegmentEnd) -> Self {
+        Segment { frames, frame_rate: 0.0, end }
+    }
+
+    /// Rate-limited segment ending `end`.
+    pub fn paced(frames: usize, frame_rate: f64, end: SegmentEnd) -> Self {
+        Segment { frames, frame_rate, end }
+    }
+}
+
+/// One camera's scripted lifecycle inside a [`Scenario`].
+#[derive(Clone, Debug)]
+pub struct CameraScript {
+    /// the camera's design + identity (seeds derive from `spec.id`)
+    pub spec: CameraSpec,
+    /// wall-clock delay before the camera joins the fleet (hot-add);
+    /// affects interleaving only, never counters
+    pub start_delay: Duration,
+    /// the lifecycle: at least one segment; `Clean` may only end the
+    /// script, the final segment must not be `Shift`
+    pub segments: Vec<Segment>,
+}
+
+impl CameraScript {
+    /// A camera present from the start that captures `frames` frames
+    /// and leaves cleanly — the plain-fleet lifecycle.
+    pub fn steady(spec: CameraSpec, frames: usize) -> Self {
+        CameraScript {
+            spec,
+            start_delay: Duration::ZERO,
+            segments: vec![Segment::free(frames, SegmentEnd::Clean)],
+        }
+    }
+
+    /// Total frames the script schedules (sum over segments).
+    pub fn scripted_frames(&self) -> u64 {
+        self.segments.iter().map(|s| s.frames as u64).sum()
+    }
+
+    /// Producer-thread incarnations the script implies (1 + restarts).
+    pub fn scripted_incarnations(&self) -> u32 {
+        incarnation_groups(&self.segments).len() as u32
+    }
+}
+
+/// A deterministic fleet scenario: camera scripts + consumer knobs.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// scenario name (reports, CLI)
+    pub name: String,
+    /// base seed; camera seeds derive from it and the camera ids
+    pub seed: u64,
+    /// the fleet's scripted members (hot-adds included)
+    pub cameras: Vec<CameraScript>,
+    /// classifier batch size (per shape lane)
+    pub batch: usize,
+    /// per-shard link depth in frames
+    pub queue_capacity: usize,
+    /// shard-link behaviour when the consumer falls behind; digest
+    /// determinism is only guaranteed under [`Backpressure::Block`]
+    pub backpressure: Backpressure,
+    /// per-lane batcher age trigger
+    pub max_wait: Duration,
+    /// consumer interleaving policy
+    pub route: RoutePolicy,
+}
+
+impl Scenario {
+    /// Scenario over `cameras` with the default consumer knobs.
+    pub fn new(name: &str, seed: u64, cameras: Vec<CameraScript>) -> Self {
+        Scenario {
+            name: name.to_string(),
+            seed,
+            cameras,
+            batch: 4,
+            queue_capacity: 16,
+            backpressure: Backpressure::Block,
+            max_wait: Duration::from_millis(10),
+            route: RoutePolicy::RoundRobin,
+        }
+    }
+
+    /// The seed a camera runs with: a pure function of (scenario seed,
+    /// camera id) — never of fleet membership or slot order, so churn
+    /// edits to the script leave every surviving camera's stream
+    /// untouched (same contract as
+    /// [`crate::coordinator::FleetConfig::seed_for_camera_id`]).
+    pub fn camera_seed(&self, spec: &CameraSpec) -> u64 {
+        self.seed.wrapping_add(spec.id)
+    }
+
+    /// Names accepted by [`Scenario::canned`].
+    pub fn canned_names() -> [&'static str; 4] {
+        ["uniform", "mixed-res", "churn", "crash-storm"]
+    }
+
+    /// The canned scenarios behind `p2m fleet --scenario <name>`.
+    ///
+    /// * `uniform` — 4 identical cameras (40px, 8-bit quantized wire),
+    ///   the homogeneous baseline;
+    /// * `mixed-res` — 4 cameras across 3 sensor designs (mixed
+    ///   resolution, bit depth and wire format): exercises plan dedup
+    ///   and shape-pure batching;
+    /// * `churn` — steady + early-leaver + hot-add + crash-restart +
+    ///   rate-shift cameras on mixed designs;
+    /// * `crash-storm` — 6 cameras crashing twice each (12 producer
+    ///   restarts), one ending crashed with an orphaned link.
+    pub fn canned(name: &str, seed: u64) -> Option<Scenario> {
+        let q8 = |id: u64, res: usize| CameraSpec::new(id, res, 8, WireFormat::Quantized);
+        let scenario = match name {
+            "uniform" => Scenario::new(
+                "uniform",
+                seed,
+                (0..4).map(|id| CameraScript::steady(q8(id, 40), 12)).collect(),
+            ),
+            "mixed-res" => Scenario::new(
+                "mixed-res",
+                seed,
+                vec![
+                    CameraScript::steady(q8(0, 40), 10),
+                    CameraScript::steady(q8(1, 40), 10),
+                    CameraScript::steady(
+                        CameraSpec::new(2, 20, 6, WireFormat::Quantized),
+                        10,
+                    ),
+                    CameraScript::steady(CameraSpec::new(3, 80, 8, WireFormat::Dense), 10),
+                ],
+            ),
+            "churn" => Scenario::new(
+                "churn",
+                seed,
+                vec![
+                    // Steady anchor for the whole run.
+                    CameraScript::steady(q8(0, 40), 16),
+                    // Early leaver: clean removal mid-run.
+                    CameraScript::steady(q8(1, 20), 6),
+                    // Hot-add: joins ~25 ms in.
+                    CameraScript {
+                        spec: q8(2, 40),
+                        start_delay: Duration::from_millis(25),
+                        segments: vec![Segment::free(10, SegmentEnd::Clean)],
+                    },
+                    // Mid-stream crash, then a producer-thread restart.
+                    CameraScript {
+                        spec: CameraSpec::new(3, 20, 4, WireFormat::Quantized),
+                        start_delay: Duration::ZERO,
+                        segments: vec![
+                            Segment::free(4, SegmentEnd::Crash),
+                            Segment::free(8, SegmentEnd::Clean),
+                        ],
+                    },
+                    // Frame-rate shift: 500 fps paced, then free-running.
+                    CameraScript {
+                        spec: CameraSpec::new(4, 40, 8, WireFormat::Dense),
+                        start_delay: Duration::ZERO,
+                        segments: vec![
+                            Segment::paced(6, 500.0, SegmentEnd::Shift),
+                            Segment::free(6, SegmentEnd::Clean),
+                        ],
+                    },
+                ],
+            ),
+            "crash-storm" => Scenario::new(
+                "crash-storm",
+                seed,
+                (0..6)
+                    .map(|id| CameraScript {
+                        spec: q8(id, 20),
+                        start_delay: Duration::ZERO,
+                        segments: vec![
+                            Segment::free(3, SegmentEnd::Crash),
+                            Segment::free(3, SegmentEnd::Crash),
+                            // Camera 5 dies for good: orphaned link,
+                            // closed by its supervisor.
+                            Segment::free(
+                                4,
+                                if id == 5 { SegmentEnd::Crash } else { SegmentEnd::Clean },
+                            ),
+                        ],
+                    })
+                    .collect(),
+            ),
+            _ => return None,
+        };
+        Some(scenario)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.cameras.is_empty() {
+            bail!("scenario needs at least one camera");
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        if self.queue_capacity == 0 {
+            bail!("queue_capacity must be >= 1");
+        }
+        for (i, script) in self.cameras.iter().enumerate() {
+            let id = script.spec.id;
+            if self.cameras[..i].iter().any(|other| other.spec.id == id) {
+                bail!("duplicate camera id {id}");
+            }
+            if script.segments.is_empty() {
+                bail!("camera id {id}: script needs at least one segment");
+            }
+            let last = script.segments.len() - 1;
+            for (si, seg) in script.segments.iter().enumerate() {
+                if si != last && seg.end == SegmentEnd::Clean {
+                    bail!("camera id {id}: Clean must be the final segment");
+                }
+                if si == last && seg.end == SegmentEnd::Shift {
+                    bail!("camera id {id}: script cannot end on a Shift");
+                }
+            }
+            if !(1..=16).contains(&script.spec.n_bits) {
+                bail!("camera id {id}: n_bits must be in 1..=16");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Segments grouped into producer-thread incarnations: consecutive
+/// segments joined by [`SegmentEnd::Shift`] share a thread; `Crash` and
+/// `Clean` close a group.  Returns inclusive (start, end) index pairs.
+fn incarnation_groups(segments: &[Segment]) -> Vec<(usize, usize)> {
+    let mut groups = Vec::new();
+    let mut start = 0usize;
+    for (i, seg) in segments.iter().enumerate() {
+        if seg.end != SegmentEnd::Shift {
+            groups.push((start, i));
+            start = i + 1;
+        }
+    }
+    // A trailing Shift is rejected by validate(); tolerate it here by
+    // closing the group anyway so the driver cannot lose segments.
+    if start < segments.len() {
+        groups.push((start, segments.len() - 1));
+    }
+    groups
+}
+
+/// Per-camera outcome of a scenario run.
+#[derive(Clone, Debug)]
+pub struct CameraReport {
+    /// the camera's spec (identity included)
+    pub spec: CameraSpec,
+    /// producer-thread incarnations that actually ran (1 + restarts)
+    pub incarnations: u32,
+    /// frames the script scheduled for this camera
+    pub scripted_frames: u64,
+    /// the usual per-camera counters (see [`PipelineStats`])
+    pub stats: PipelineStats,
+}
+
+/// End-of-run result of [`run_scenario`].
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// scenario name
+    pub name: String,
+    /// one report per scripted camera, in script order
+    pub per_camera: Vec<CameraReport>,
+    /// per shape-group accounting (dims + wire encoding)
+    pub per_shape: BTreeMap<ShapeKey, ShapeStats>,
+    /// fleet-wide totals
+    pub aggregate: PipelineStats,
+    /// distinct compiled plans the fleet needed (deduped by
+    /// [`crate::frontend::PlanKey`])
+    pub plans_compiled: usize,
+    /// peak concurrently-live cameras the run reached (timing-derived)
+    pub peak_active_cameras: i64,
+}
+
+impl ScenarioReport {
+    /// Order-stable digest over every *deterministic* field of the run:
+    /// per-camera (id, design, incarnations, scripted/captured/
+    /// classified/dropped frames, link bytes, correct decisions),
+    /// per-shape (key, frames, bytes) and the compiled-plan count.
+    /// Timing-derived fields (latency, batch counts, watermarks,
+    /// `peak_active_cameras`) are excluded, so for a fixed scenario +
+    /// seed under `Block` backpressure and a pure classifier two runs
+    /// produce the same digest — the CI churn smoke asserts exactly
+    /// that.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for report in &self.per_camera {
+            let spec = &report.spec;
+            h = mix(h, spec.id);
+            h = mix(h, spec.resolution as u64);
+            h = mix(h, u64::from(spec.n_bits));
+            h = mix(h, matches!(spec.wire, WireFormat::Quantized) as u64);
+            h = mix(h, u64::from(report.incarnations));
+            h = mix(h, report.scripted_frames);
+            let st = &report.stats;
+            h = mix(h, st.frames_captured);
+            h = mix(h, st.frames_classified);
+            h = mix(h, st.frames_dropped);
+            h = mix(h, st.bytes_from_sensor);
+            h = mix(h, st.correct);
+        }
+        for (shape, ss) in &self.per_shape {
+            h = mix(h, shape.h as u64);
+            h = mix(h, shape.w as u64);
+            h = mix(h, shape.c as u64);
+            h = mix(h, u64::from(shape.bits));
+            h = mix(h, ss.frames_classified);
+            h = mix(h, ss.bytes_from_sensor);
+        }
+        mix(h, self.plans_compiled as u64)
+    }
+}
+
+/// splitmix64-style avalanche of `v` into the running digest `h`.
+fn mix(h: u64, v: u64) -> u64 {
+    let mut x = h ^ v.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// The seed incarnation `incarnation` of a camera runs with; 0 maps to
+/// the camera seed itself, so an uncrashed camera streams exactly like
+/// its plain-fleet twin.
+fn incarnation_seed(camera_seed: u64, incarnation: u32) -> u64 {
+    camera_seed ^ u64::from(incarnation).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Run a scripted scenario against `classifier` (on the caller's
+/// thread, like the fleet).  Plans are compiled up front, deduped by
+/// design through a [`PlanBank`]; each camera gets a supervisor thread
+/// realising its script (see module docs), and the shared shape-aware
+/// consumer adopts shard links as cameras hot-add.
+pub fn run_scenario<C: BatchClassifier>(
+    classifier: &mut C,
+    scenario: &Scenario,
+    metrics: &Metrics,
+) -> Result<ScenarioReport> {
+    scenario.validate()?;
+    let n = scenario.cameras.len();
+
+    // One compiled plan per distinct camera design (never per camera,
+    // never per incarnation): crash-restarted producers re-attach to
+    // the same Arc'd plan with a fresh ExecCtx.
+    let mut bank = PlanBank::new();
+    let mut plans: Vec<Arc<FramePlan>> = Vec::with_capacity(n);
+    for script in &scenario.cameras {
+        plans.push(bank.plan_for(&script.spec)?);
+    }
+    let plans_compiled = bank.len();
+
+    let registry = ShardRegistry::new();
+    let params = ConsumeParams {
+        batch: scenario.batch,
+        max_wait: scenario.max_wait,
+        route: scenario.route,
+        expected_shards: n,
+    };
+    let frames_in = metrics.counter("scenario_frames_captured");
+    let restarts = metrics.counter("scenario_producer_restarts");
+    let active = metrics.gauge("scenario_active_cameras");
+    let latency = metrics.latency("scenario_e2e_latency");
+    let mut per_camera = vec![PipelineStats::default(); n];
+    let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
+    let mut aggregate = PipelineStats::default();
+    let incarnations_ran: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let t0 = Instant::now();
+    let mut consumer_result: Result<()> = Ok(());
+
+    std::thread::scope(|s| {
+        for (slot, script) in scenario.cameras.iter().enumerate() {
+            let plan = plans[slot].clone();
+            let registry = &registry;
+            let frames_in = frames_in.clone();
+            let restarts = restarts.clone();
+            let active = active.clone();
+            let ran = &incarnations_ran[slot];
+            let camera_seed = scenario.camera_seed(&script.spec);
+            let queue_capacity = scenario.queue_capacity;
+            let backpressure = scenario.backpressure;
+            // The supervisor: joins the fleet (hot-add), then realises
+            // the script one producer-thread incarnation at a time.
+            s.spawn(move || {
+                if !script.start_delay.is_zero() {
+                    std::thread::sleep(script.start_delay);
+                }
+                let link: BoundedQueue<FleetItem> =
+                    BoundedQueue::new(queue_capacity, backpressure);
+                registry.register(slot, link.clone());
+                active.add(1);
+                let groups = incarnation_groups(&script.segments);
+                for (gi, &(start, end)) in groups.iter().enumerate() {
+                    let segments = &script.segments[start..=end];
+                    let boundary = script.segments[end].end;
+                    let seed = incarnation_seed(camera_seed, gi as u32);
+                    let producer_link = link.clone();
+                    let producer_frames_in = frames_in.clone();
+                    // Fresh ExecCtx over the shared plan, the spec's
+                    // wire format.
+                    let producer_sensor =
+                        SensorCompute::p2m_wire(plan.clone(), script.spec.wire);
+                    // A real thread per incarnation: a crash is this
+                    // thread dying, a restart is the next one starting.
+                    let producer = s.spawn(move || {
+                        run_incarnation(
+                            slot,
+                            segments,
+                            producer_sensor,
+                            producer_link,
+                            seed,
+                            producer_frames_in,
+                            1,
+                        )
+                    });
+                    let _ = producer.join();
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    if boundary == SegmentEnd::Crash && gi + 1 < groups.len() {
+                        restarts.inc();
+                    }
+                    if link.is_closed() {
+                        break; // consumer aborted; stop the script
+                    }
+                }
+                active.add(-1);
+                // Clean scripts close their own stream's end of life;
+                // crash-terminated scripts leave an orphan the
+                // supervisor (watchdog) closes.  Either way the
+                // consumer can drain and terminate.
+                link.close();
+            });
+        }
+
+        let mut acc = FleetAccounting {
+            per_camera: &mut per_camera,
+            per_shape: &mut per_shape,
+            aggregate: &mut aggregate,
+            latency: &latency,
+        };
+        consumer_result = consume(classifier, &registry, &params, &mut acc, t0);
+        if consumer_result.is_err() {
+            // Unblock every producer (registered or yet to register) so
+            // the scope's implicit joins cannot hang.
+            registry.poison();
+        }
+    });
+    consumer_result?;
+
+    // Fold shard-link accounting (one link per camera slot): for every
+    // camera captured == pushed + dropped, and with the consumer fully
+    // drained classified == pushed — crash-churn loses no *accepted*
+    // frames, and the gap to the script is visible as
+    // scripted_frames - frames_captured.
+    for (slot, q) in registry.all() {
+        let (pushed, _, dropped, hwm) = q.stats();
+        per_camera[slot].frames_captured = pushed + dropped;
+        per_camera[slot].frames_dropped = dropped;
+        per_camera[slot].queue_high_watermark = hwm;
+        aggregate.frames_captured += pushed + dropped;
+        aggregate.frames_dropped += dropped;
+        aggregate.queue_high_watermark = aggregate.queue_high_watermark.max(hwm);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    aggregate.wall_time_s = wall;
+    aggregate.throughput_fps = aggregate.frames_classified as f64 / wall.max(1e-9);
+    aggregate.latency_mean_s = latency.mean();
+    aggregate.latency_p95_s = latency.pct(0.95);
+    let per_camera = scenario
+        .cameras
+        .iter()
+        .zip(per_camera)
+        .zip(&incarnations_ran)
+        .map(|((script, mut stats), ran)| {
+            stats.wall_time_s = wall;
+            stats.throughput_fps = stats.frames_classified as f64 / wall.max(1e-9);
+            CameraReport {
+                spec: script.spec,
+                incarnations: ran.load(Ordering::SeqCst),
+                scripted_frames: script.scripted_frames(),
+                stats,
+            }
+        })
+        .collect();
+    Ok(ScenarioReport {
+        name: scenario.name.clone(),
+        per_camera,
+        per_shape,
+        aggregate,
+        plans_compiled,
+        peak_active_cameras: active.high_watermark(),
+    })
+}
+
+/// One producer-thread incarnation — THE capture loop of both serving
+/// topologies: [`crate::coordinator::run_fleet`] runs it with a single
+/// free `Clean` segment per camera, the scenario driver with each
+/// scripted segment group.  Owns its camera state (seeded for the
+/// incarnation) and walks its segments with per-segment pacing; does
+/// **not** close the link (the caller owns the lifecycle).
+pub(crate) fn run_incarnation(
+    slot: usize,
+    segments: &[Segment],
+    sensor: SensorCompute,
+    link: BoundedQueue<FleetItem>,
+    seed: u64,
+    frames_in: Arc<Counter>,
+    frontend_threads: usize,
+) {
+    let mut sensor = sensor;
+    let mut camera = Camera::new(sensor.sensor_config(), seed, Split::Test);
+    for seg in segments {
+        let tick =
+            (seg.frame_rate > 0.0).then(|| Duration::from_secs_f64(1.0 / seg.frame_rate));
+        for _ in 0..seg.frames {
+            let t_frame = Instant::now();
+            let frame = camera.capture();
+            let captured_at = Instant::now();
+            let (payload, bytes) = sensor.run_frame(&frame.image, frontend_threads);
+            frames_in.inc();
+            let accepted = link.push(FleetItem {
+                camera: slot,
+                label: frame.label,
+                captured_at,
+                payload,
+                bytes,
+            });
+            // A refused push on a *closed* link means the consumer
+            // aborted — stop burning capture/frontend work (a refusal
+            // on an open DropNewest link is an ordinary accounted drop
+            // and capture continues).
+            if !accepted && link.is_closed() {
+                return;
+            }
+            if let Some(tick) = tick {
+                let elapsed = t_frame.elapsed();
+                if elapsed < tick {
+                    std::thread::sleep(tick - elapsed);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(frames: usize, end: SegmentEnd) -> Segment {
+        Segment::free(frames, end)
+    }
+
+    #[test]
+    fn incarnation_groups_split_on_lifecycle_boundaries() {
+        use SegmentEnd::{Clean, Crash, Shift};
+        assert_eq!(incarnation_groups(&[seg(5, Clean)]), vec![(0, 0)]);
+        assert_eq!(
+            incarnation_groups(&[seg(2, Crash), seg(3, Clean)]),
+            vec![(0, 0), (1, 1)]
+        );
+        assert_eq!(
+            incarnation_groups(&[seg(2, Shift), seg(3, Shift), seg(1, Crash), seg(4, Clean)]),
+            vec![(0, 2), (3, 3)]
+        );
+        assert_eq!(
+            incarnation_groups(&[seg(1, Crash), seg(1, Crash), seg(1, Crash)]),
+            vec![(0, 0), (1, 1), (2, 2)]
+        );
+    }
+
+    #[test]
+    fn scripted_helpers_count_frames_and_incarnations() {
+        let script = CameraScript {
+            spec: CameraSpec::new(7, 20, 8, WireFormat::Dense),
+            start_delay: Duration::ZERO,
+            segments: vec![
+                seg(2, SegmentEnd::Shift),
+                seg(3, SegmentEnd::Crash),
+                seg(5, SegmentEnd::Clean),
+            ],
+        };
+        assert_eq!(script.scripted_frames(), 10);
+        assert_eq!(script.scripted_incarnations(), 2);
+        let steady = CameraScript::steady(script.spec, 9);
+        assert_eq!(steady.scripted_frames(), 9);
+        assert_eq!(steady.scripted_incarnations(), 1);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_scripts() {
+        let spec = CameraSpec::new(0, 20, 8, WireFormat::Dense);
+        let mk = |segments: Vec<Segment>| {
+            Scenario::new(
+                "t",
+                0,
+                vec![CameraScript { spec, start_delay: Duration::ZERO, segments }],
+            )
+        };
+        assert!(mk(vec![seg(1, SegmentEnd::Clean)]).validate().is_ok());
+        assert!(mk(vec![]).validate().is_err(), "empty script");
+        assert!(
+            mk(vec![seg(1, SegmentEnd::Shift)]).validate().is_err(),
+            "trailing shift"
+        );
+        assert!(
+            mk(vec![seg(1, SegmentEnd::Clean), seg(1, SegmentEnd::Clean)])
+                .validate()
+                .is_err(),
+            "clean mid-script"
+        );
+        // Duplicate ids across cameras.
+        let dup = Scenario::new(
+            "t",
+            0,
+            vec![
+                CameraScript::steady(spec, 1),
+                CameraScript::steady(spec, 1),
+            ],
+        );
+        assert!(dup.validate().is_err());
+        // Empty scenario.
+        assert!(Scenario::new("t", 0, vec![]).validate().is_err());
+    }
+
+    #[test]
+    fn canned_scenarios_exist_and_validate() {
+        for name in Scenario::canned_names() {
+            let s = Scenario::canned(name, 42).expect(name);
+            assert_eq!(s.name, name);
+            s.validate().unwrap();
+        }
+        assert!(Scenario::canned("no-such", 0).is_none());
+        // The churn script exercises every lifecycle event kind.
+        let churn = Scenario::canned("churn", 0).unwrap();
+        assert!(churn.cameras.iter().any(|c| !c.start_delay.is_zero()), "hot-add");
+        assert!(
+            churn
+                .cameras
+                .iter()
+                .any(|c| c.segments.iter().any(|s| s.end == SegmentEnd::Crash)),
+            "crash"
+        );
+        assert!(
+            churn
+                .cameras
+                .iter()
+                .any(|c| c.segments.iter().any(|s| s.end == SegmentEnd::Shift)),
+            "rate shift"
+        );
+    }
+
+    #[test]
+    fn camera_seed_is_membership_independent() {
+        let a = Scenario::canned("churn", 7).unwrap();
+        let mut b = a.clone();
+        b.cameras.remove(1);
+        for script in &b.cameras {
+            assert_eq!(a.camera_seed(&script.spec), b.camera_seed(&script.spec));
+        }
+        // Incarnation 0 streams exactly like the plain camera.
+        assert_eq!(incarnation_seed(123, 0), 123);
+        assert_ne!(incarnation_seed(123, 1), 123);
+        assert_ne!(incarnation_seed(123, 1), incarnation_seed(123, 2));
+    }
+
+    #[test]
+    fn digest_separates_outcomes_and_ignores_timing() {
+        let report = |correct: u64, wall: f64| ScenarioReport {
+            name: "t".into(),
+            per_camera: vec![CameraReport {
+                spec: CameraSpec::new(0, 20, 8, WireFormat::Dense),
+                incarnations: 1,
+                scripted_frames: 4,
+                stats: PipelineStats {
+                    frames_captured: 4,
+                    frames_classified: 4,
+                    correct,
+                    wall_time_s: wall,
+                    latency_mean_s: wall * 0.1,
+                    ..PipelineStats::default()
+                },
+            }],
+            per_shape: BTreeMap::new(),
+            aggregate: PipelineStats::default(),
+            plans_compiled: 1,
+            peak_active_cameras: 1,
+        };
+        // Timing fields must not move the digest; outcomes must.
+        assert_eq!(report(3, 0.5).digest(), report(3, 99.0).digest());
+        assert_ne!(report(3, 0.5).digest(), report(2, 0.5).digest());
+    }
+}

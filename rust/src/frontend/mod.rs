@@ -47,10 +47,13 @@ pub mod exec;
 pub mod plan;
 
 pub use exec::ExecCtx;
-pub use plan::{FramePlan, MismatchBank};
+pub use plan::{FramePlan, MismatchBank, PlanKey};
 
 /// Execution fidelity of the analog/mixed-signal chain.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// Ordered/hashable so it can key plan-dedup maps
+/// ([`plan::PlanKey`], [`crate::coordinator::fleet::PlanBank`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Fidelity {
     /// Combined arithmetic quantisation — bit-exact twin of the
     /// JAX/Pallas golden model.

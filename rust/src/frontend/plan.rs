@@ -22,6 +22,27 @@ use crate::util::rng::Rng;
 /// Activation-polynomial degree count: coefficients for x^0..x^NA.
 pub(crate) const NA1: usize = crate::analog::NA + 1;
 
+/// The identity of a compiled [`FramePlan`] for sharing purposes: two
+/// cameras whose specs map to the same key can run off one `Arc`d plan
+/// (one curve-fit load, one weight fold for the pair).
+///
+/// The key deliberately covers only what changes the compiled operands —
+/// input resolution (weight bank and fold are resolution-independent,
+/// but the output geometry and scratch sizing are not), execution
+/// fidelity, and the ADC output width `n_bits` (which sets the
+/// quantisation stage and wire contract).  Wire format and frame rate
+/// are *not* part of the key: they are per-camera runtime choices over
+/// the same silicon.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PlanKey {
+    /// square input resolution (sensor rows == cols)
+    pub resolution: usize,
+    /// execution fidelity the plan was compiled for
+    pub fidelity: Fidelity,
+    /// ADC output bit-precision N_b (= quantized wire code width)
+    pub n_bits: u32,
+}
+
 /// Per-device gain errors for the event-accurate path.
 ///
 /// Width/threshold mismatch on a weight transistor manifests dominantly
@@ -369,6 +390,16 @@ impl FramePlan {
     /// A fresh per-thread execution context sized for this plan.
     pub fn ctx(&self) -> ExecCtx {
         ExecCtx::new(self)
+    }
+
+    /// The sharing identity of this plan (see [`PlanKey`]): plans with
+    /// equal keys are interchangeable for fleet dedup purposes.
+    pub fn plan_key(&self) -> PlanKey {
+        PlanKey {
+            resolution: self.cfg.sensor.rows,
+            fidelity: self.fidelity,
+            n_bits: self.cfg.hyper.n_bits,
+        }
     }
 
     /// An all-zero [`QuantizedFrame`] sized for this plan's output —

@@ -81,6 +81,11 @@ commands (one per paper table/figure):
   fleet     sharded multi-camera serving fleet vs sequential single-camera
             (--cameras N --frames M --batch B --queue Q --drop --threads T
              --seed S --quantized : ship n_bits ADC codes on the links)
+            --scenario <uniform|mixed-res|churn|crash-storm|list> runs a
+            deterministic scripted fleet instead (heterogeneous cameras,
+            hot-add/remove/crash/rate-shift lifecycle events; add
+            --check-digest to run it twice and verify the stats digest
+            is reproducible, --seed S to reseed the whole script)
   info      artifact + environment status
 
 examples (cargo run --release --example <name>):
@@ -565,6 +570,11 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     };
     use p2m::runtime::{Manifest, ModelBundle, Runtime};
 
+    if let Some(i) = rest.iter().position(|&a| a == "--scenario") {
+        let name = rest.get(i + 1).copied().unwrap_or("list");
+        return fleet_scenario(name, rest);
+    }
+
     let flag = |name: &str| -> Option<usize> {
         rest.iter()
             .position(|&a| a == name)
@@ -756,6 +766,154 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         stats.aggregate.frames_classified as f64 / fleet_s.max(1e-9),
         seq_classified as f64 / seq_s.max(1e-9)
     );
+    println!("\nmetrics snapshot:\n{}", metrics.snapshot());
+    Ok(())
+}
+
+/// `fleet --scenario <name>`: run one canned deterministic scenario
+/// (heterogeneous cameras + lifecycle events) against the pure-rust
+/// threshold backend — scenarios mix payload shapes, which a single AOT
+/// artifact cannot serve, so the deterministic backend is always used
+/// and no artifacts are required.
+fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
+    use p2m::coordinator::{
+        run_scenario, MeanThresholdClassifier, Metrics, Scenario, ScenarioReport,
+        WireFormat,
+    };
+
+    if name == "list" || name.starts_with("--") {
+        println!("canned scenarios:");
+        for n in Scenario::canned_names() {
+            println!("  {n}");
+        }
+        return Ok(());
+    }
+    let seed = rest
+        .iter()
+        .position(|&a| a == "--seed")
+        .and_then(|i| rest.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0u64);
+    let check_digest = rest.contains(&"--check-digest");
+    let scenario = Scenario::canned(name, seed).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario '{name}' (known: {})",
+            Scenario::canned_names().join(", ")
+        )
+    })?;
+
+    let run_once = || -> anyhow::Result<(ScenarioReport, Metrics)> {
+        let metrics = Metrics::new();
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        let report = run_scenario(&mut clf, &scenario, &metrics)?;
+        Ok((report, metrics))
+    };
+
+    println!(
+        "== scenario '{name}' (seed {seed}): {} cameras, batch {} ==",
+        scenario.cameras.len(),
+        scenario.batch
+    );
+    let (report, metrics) = run_once()?;
+
+    let rows: Vec<Vec<String>> = report
+        .per_camera
+        .iter()
+        .map(|cam| {
+            let spec = &cam.spec;
+            vec![
+                format!("camera {}", spec.id),
+                format!(
+                    "{}px/{}b/{}",
+                    spec.resolution,
+                    spec.n_bits,
+                    match spec.wire {
+                        WireFormat::Dense => "f32",
+                        WireFormat::Quantized => "quant",
+                    }
+                ),
+                cam.incarnations.to_string(),
+                cam.scripted_frames.to_string(),
+                cam.stats.frames_captured.to_string(),
+                cam.stats.frames_classified.to_string(),
+                cam.stats.frames_dropped.to_string(),
+                cam.stats.bytes_from_sensor.to_string(),
+                format!("{:.1}", 100.0 * cam.stats.accuracy()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "per-camera lifecycle + accounting",
+            &[
+                "stream",
+                "design",
+                "incarn",
+                "scripted",
+                "captured",
+                "classified",
+                "dropped",
+                "bytes",
+                "acc %",
+            ],
+            &rows
+        )
+    );
+
+    let shape_rows: Vec<Vec<String>> = report
+        .per_shape
+        .iter()
+        .map(|(shape, ss)| {
+            vec![
+                shape.to_string(),
+                ss.frames_classified.to_string(),
+                ss.batches.to_string(),
+                ss.bytes_from_sensor.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "per-shape batch groups (every batch is shape-pure)",
+            &["shape", "frames", "batches", "bytes"],
+            &shape_rows
+        )
+    );
+
+    let a = &report.aggregate;
+    println!(
+        "aggregate: {} classified / {} captured ({} dropped) in {:.2}s -> {:.1} fps, \
+         {} batches over {} shape group(s), {} compiled plan(s), peak {} live camera(s)",
+        a.frames_classified,
+        a.frames_captured,
+        a.frames_dropped,
+        a.wall_time_s,
+        a.throughput_fps,
+        a.batches,
+        report.per_shape.len(),
+        report.plans_compiled,
+        report.peak_active_cameras,
+    );
+    println!("stats digest: {:016x}", report.digest());
+
+    if check_digest {
+        let (second, _) = run_once()?;
+        if second.digest() == report.digest() {
+            println!(
+                "digest check: PASS (second run reproduced {:016x})",
+                second.digest()
+            );
+        } else {
+            anyhow::bail!(
+                "digest check FAILED: {:016x} vs {:016x} — scenario is not \
+                 deterministic",
+                report.digest(),
+                second.digest()
+            );
+        }
+    }
     println!("\nmetrics snapshot:\n{}", metrics.snapshot());
     Ok(())
 }

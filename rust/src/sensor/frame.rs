@@ -407,6 +407,78 @@ mod tests {
     }
 
     #[test]
+    fn wire_round_trip_exhaustive_over_bit_widths() {
+        // Every legal wire width (1..=16), with shapes chosen to force
+        // non-byte-aligned tails (len * bits % 8 != 0) and the 1-element
+        // degenerate frame, under randomized code patterns: pack_wire
+        // followed by unpack_wire must be the identity, and the packed
+        // buffer length must pin wire_bits exactly.
+        use crate::prop_assert;
+        use crate::util::prop::Prop;
+
+        Prop::new("pack_wire/unpack_wire round trip").cases(64).run(|rng| {
+            for bits in 1u32..=16 {
+                let spec = QuantSpec::unipolar(rng.range(0.5, 100.0), bits);
+                prop_assert!(spec.code_max() == (1u32 << bits) - 1);
+                // (1,1,1) hits the single-element frame; odd dims make
+                // ragged tails for every non-multiple-of-8 width.
+                let (h, w, c) = match rng.usize(0, 3) {
+                    0 => (1, 1, 1),
+                    1 => (rng.usize(1, 4), rng.usize(1, 4), rng.usize(1, 5)),
+                    _ => (rng.usize(1, 3), rng.usize(1, 6), 3),
+                };
+                let mut q = QuantizedFrame::zeros(h, w, c, spec);
+                for i in 0..q.len() {
+                    let code = rng.usize(0, spec.code_max() as usize + 1) as u32;
+                    match &mut q.data {
+                        QuantData::U8(v) => v[i] = code as u8,
+                        QuantData::U16(v) => v[i] = code as u16,
+                    }
+                }
+                // Storage width follows the code width.
+                match &q.data {
+                    QuantData::U8(_) => prop_assert!(bits <= 8),
+                    QuantData::U16(_) => prop_assert!(bits > 8),
+                }
+
+                let packed = q.pack_wire();
+                let len = q.len() as u64;
+                prop_assert!(
+                    q.wire_bits() == len * bits as u64,
+                    "wire_bits {} != {len} * {bits}",
+                    q.wire_bits()
+                );
+                prop_assert!(
+                    packed.len() as u64 == q.wire_bits().div_ceil(8),
+                    "bits={bits} ({h},{w},{c}): packed {} B, wire_bits {}",
+                    packed.len(),
+                    q.wire_bits()
+                );
+                let back = QuantizedFrame::unpack_wire(&packed, h, w, c, spec)
+                    .map_err(|e| format!("bits={bits}: {e}"))?;
+                prop_assert!(back == q, "bits={bits} ({h},{w},{c}): round trip changed codes");
+
+                // A buffer of the wrong length must be rejected, never
+                // silently mis-decoded (off-by-one in both directions).
+                if !packed.is_empty() {
+                    prop_assert!(QuantizedFrame::unpack_wire(
+                        &packed[..packed.len() - 1],
+                        h,
+                        w,
+                        c,
+                        spec
+                    )
+                    .is_err());
+                }
+                let mut longer = packed.clone();
+                longer.push(0);
+                prop_assert!(QuantizedFrame::unpack_wire(&longer, h, w, c, spec).is_err());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn code_sum_is_exact() {
         let spec = QuantSpec::unipolar(1.0, 8);
         let mut q = QuantizedFrame::zeros(1, 1, 3, spec);

@@ -11,9 +11,10 @@ use std::time::Duration;
 use p2m::compression;
 use p2m::config::HyperParams;
 use p2m::coordinator::{
-    run_fleet, synthetic_fleet_sensors, synthetic_frame_plan, Backpressure,
-    BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier, Metrics,
-    SensorCompute, WireFormat, WirePayload,
+    heterogeneous_fleet_sensors, run_fleet, synthetic_fleet_sensors,
+    synthetic_frame_plan, Backpressure, BatchClassifier, CameraSpec, FleetConfig,
+    FleetStats, MeanThresholdClassifier, Metrics, SensorCompute, ShapeKey, WireFormat,
+    WirePayload,
 };
 use p2m::frontend::Fidelity;
 
@@ -273,6 +274,55 @@ fn quantized_payloads_dequantise_to_the_dense_payloads() {
         sums
     };
     assert_eq!(checksums(WireFormat::Dense), checksums(WireFormat::Quantized));
+}
+
+#[test]
+fn heterogeneous_fleet_end_to_end_accounting() {
+    // Mixed resolutions, bit depths and wire formats in one run_fleet
+    // call: plans dedupe by design, batches stay shape-pure (enforced
+    // by the consumer — a mixed batch is a hard error), per-camera and
+    // per-shape stats both sum to the aggregate, and the run is
+    // deterministic.
+    let specs = vec![
+        CameraSpec::new(0, RES, 8, WireFormat::Quantized),
+        CameraSpec::new(1, RES, 8, WireFormat::Quantized),
+        CameraSpec::new(2, 20, 6, WireFormat::Quantized),
+        CameraSpec::new(3, 80, 8, WireFormat::Dense),
+    ];
+    let mk = || -> FleetStats {
+        let (sensors, bank) = heterogeneous_fleet_sensors(&specs).unwrap();
+        assert_eq!(bank.len(), 3, "two identical cameras share one plan");
+        let cfg = FleetConfig {
+            n_cameras: 4,
+            frames_per_camera: 8,
+            batch: 4,
+            cameras: Some(specs.clone()),
+            base_seed: 0xF1EE7,
+            ..FleetConfig::default()
+        };
+        run_fleet(&mut MeanThresholdClassifier::new(0.5), sensors, &cfg, &Metrics::new())
+            .unwrap()
+    };
+    let stats = mk();
+    assert_eq!(stats.aggregate.frames_classified, 32);
+    assert_eq!(stats.aggregate.frames_dropped, 0);
+    assert_eq!(stats.per_shape.len(), 3);
+    // 40px/q8 (cameras 0+1), 20px/q6, 80px dense.
+    assert!(stats.per_shape.contains_key(&ShapeKey { h: 8, w: 8, c: 8, bits: 8 }));
+    assert!(stats.per_shape.contains_key(&ShapeKey { h: 4, w: 4, c: 8, bits: 6 }));
+    assert!(stats.per_shape.contains_key(&ShapeKey { h: 16, w: 16, c: 8, bits: 0 }));
+    let frames: u64 = stats.per_shape.values().map(|s| s.frames_classified).sum();
+    let bytes: u64 = stats.per_shape.values().map(|s| s.bytes_from_sensor).sum();
+    let batches: u64 = stats.per_shape.values().map(|s| s.batches).sum();
+    assert_eq!(frames, stats.aggregate.frames_classified);
+    assert_eq!(bytes, stats.aggregate.bytes_from_sensor);
+    assert_eq!(batches, stats.aggregate.batches);
+    // Quantized Eq. 2 payloads per camera: q8 = 512 B, q6 = 96 B/frame.
+    assert_eq!(stats.per_camera[0].bytes_from_sensor, 8 * 512);
+    assert_eq!(stats.per_camera[2].bytes_from_sensor, 8 * 96);
+    assert_eq!(stats.per_camera[3].bytes_from_sensor, 8 * 16 * 16 * 8 * 4);
+    // Deterministic outcome for the fixed seed set.
+    assert_eq!(outcome(&stats), outcome(&mk()));
 }
 
 #[test]

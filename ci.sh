@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI gate for the P2M reproduction.
 #
-#   ./ci.sh           # fmt + clippy + tier-1 (build + tests)
+#   ./ci.sh           # fmt + clippy + rustdoc lint + tier-1 (build + tests)
 #   ./ci.sh --fast    # tier-1 only
 #   ./ci.sh --bench   # additionally run the pipeline bench, refresh the
 #                     # machine-readable BENCH_pipeline.json at the repo
@@ -66,6 +66,12 @@ if [[ "$FAST" -eq 0 ]]; then
     step "cargo fmt --check" cargo fmt --all -- --check
     step "cargo clippy (deny warnings)" \
         cargo clippy --workspace --all-targets --locked -- -D warnings
+    # Doc drift fails the same gate locally and in Actions: broken
+    # intra-doc links or malformed rustdoc are warnings, denied here.
+    # Scoped to the p2m crate — the vendored substitutes are external
+    # code whose doc hygiene this gate does not own.
+    step "cargo doc (deny rustdoc warnings)" \
+        env RUSTDOCFLAGS="-D warnings" cargo doc -p p2m --no-deps --locked
 fi
 
 step "tier-1: cargo build --release" cargo build --release --locked
@@ -79,6 +85,14 @@ step "tier-1: cargo test -q" cargo test -q --locked
 # concurrency core.
 step "fleet scenario smoke (churn, digest determinism)" \
     cargo run --release --locked -q -- fleet --scenario churn --check-digest
+
+# The same determinism contract through the pooled classify stage: the
+# crash-storm script (12 producer restarts + an orphaned link) served by
+# the native integer backend over a 4-worker BackendPool must reproduce
+# its digest — sequence-numbered reassembly survives producer crashes.
+step "fleet scenario smoke (crash-storm, native backend x4 workers)" \
+    cargo run --release --locked -q -- fleet --scenario crash-storm --check-digest \
+    --backend native --workers 4
 
 if [[ "$BENCH" -eq 1 ]]; then
     # Preserve the committed baseline before the bench overwrites the

@@ -17,11 +17,12 @@ use std::time::{Duration, Instant};
 
 use p2m::coordinator::{
     baseline_sensor, heterogeneous_fleet_sensors, p2m_sensor_from_bundle, run_fleet,
-    run_pipeline, synthetic_fleet_sensors, synthetic_frame_plan, Backpressure,
-    BatchPolicy, Batcher, BoundedQueue, CameraSpec, FleetConfig,
+    run_fleet_pooled, run_pipeline, synthetic_fleet_sensors, synthetic_frame_plan,
+    Backpressure, BatchPolicy, Batcher, BoundedQueue, CameraSpec, FleetConfig,
     MeanThresholdClassifier, Metrics, PipelineConfig, RoutePolicy, Router, WireFormat,
 };
 use p2m::frontend::Fidelity;
+use p2m::model::NativeBackend;
 use p2m::runtime::{Manifest, ModelBundle, Runtime};
 use p2m::sensor::{SceneGen, Split};
 use p2m::util::bench::{bb, Bench, BenchReport};
@@ -238,12 +239,65 @@ fn main() {
             hstats.per_shape.len(),
             bank.len()
         );
+        // --- Native integer MobileNetV2 backend + pool scaling. ---
+        // The heavy digital-SoC workload (the repo arch's real MAdds per
+        // frame) on the quantized wire, served directly and through the
+        // BackendPool at 1/2/4 workers: the scaling story the paper's
+        // backend-bound serving regime (P2M-DeTrack) needs.
+        let run_native = |pool_workers: usize| -> f64 {
+            let sensors = synthetic_fleet_sensors(
+                res,
+                Fidelity::Functional,
+                cams,
+                WireFormat::Quantized,
+            )
+            .unwrap();
+            let t = Instant::now();
+            let stats = if pool_workers <= 1 {
+                let mut clf = NativeBackend::new();
+                run_fleet(&mut clf, sensors, &mk_cfg(cams, 0), &metrics).unwrap()
+            } else {
+                run_fleet_pooled(
+                    pool_workers,
+                    |_| NativeBackend::new(),
+                    sensors,
+                    &mk_cfg(cams, 0),
+                    &metrics,
+                )
+                .unwrap()
+            };
+            stats.aggregate.frames_classified as f64 / t.elapsed().as_secs_f64().max(1e-9)
+        };
+        // Per-worker lazy model compile happens inside the timed window
+        // (honest cold-start cost; ~100k RNG draws, negligible against
+        // the ~200M MACs of classification per run).
+        let native1_fps = run_native(1);
+        let native2_fps = run_native(2);
+        let native4_fps = run_native(4);
+        println!(
+            "{:<44} -> {native1_fps:.1} frames/s (direct, 1 worker)",
+            format!("serving_{cams}x{frames}f_fleet_native")
+        );
+        println!(
+            "{:<44} -> {native2_fps:.1} / {native4_fps:.1} frames/s (pool x2 / x4), \
+             {:.2}x at 4 workers",
+            "serving_fleet_native_pool_2_4",
+            native4_fps / native1_fps.max(1e-9)
+        );
         println!(
             "{:<44} -> {:.2}x",
             "fleet_speedup_vs_sequential",
             fleet_fps / serial_fps
         );
         report.row("serving_sequential_1cam", serial_fps, "frames_per_s");
+        report.row("serving_fleet_4cam_native", native1_fps, "frames_per_s");
+        report.row("serving_fleet_4cam_native_pool2", native2_fps, "frames_per_s");
+        report.row("serving_fleet_4cam_native_pool4", native4_fps, "frames_per_s");
+        report.row(
+            "native_pool_scaling_4w_vs_1w",
+            native4_fps / native1_fps.max(1e-9),
+            "ratio",
+        );
         report.row("serving_fleet_4cam", fleet_fps, "frames_per_s");
         report.row("serving_fleet_4cam_quantized", qfleet_fps, "frames_per_s");
         report.row("serving_fleet_4cam_hetero", hfleet_fps, "frames_per_s");

@@ -180,7 +180,7 @@ impl SsAdc {
         CdsConversion { code, cycles: up.cycles + down.cycles, raw }
     }
 
-    /// Conversion latency of a full CDS double sample [s].
+    /// Conversion latency of a full CDS double sample \[s\].
     pub fn cds_time_s(&self) -> f64 {
         2.0 * self.cfg.conversion_time_s()
     }

@@ -19,31 +19,31 @@
 /// DESIGN.md §Substitutions).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeviceParams {
-    /// supply voltage [V]
+    /// supply voltage \[V\]
     pub vdd: f64,
-    /// threshold voltage [V]
+    /// threshold voltage \[V\]
     pub vth: f64,
     /// subthreshold slope factor
     pub n_slope: f64,
-    /// thermal voltage kT/q at 300 K [V]
+    /// thermal voltage kT/q at 300 K \[V\]
     pub v_t: f64,
     /// channel-length modulation [1/V]
     pub lambda_clm: f64,
     /// source-follower current scale per µm width [A/µm]
     pub i0_sf: f64,
-    /// source-follower width [µm]
+    /// source-follower width \[µm\]
     pub w_sf: f64,
     /// weight-transistor current scale per µm width [A/µm]
     pub i0_w: f64,
-    /// minimum weight-transistor width [µm]
+    /// minimum weight-transistor width \[µm\]
     pub w_min: f64,
-    /// maximum weight-transistor width [µm]
+    /// maximum weight-transistor width \[µm\]
     pub w_max: f64,
-    /// column-line load resistance [ohm]
+    /// column-line load resistance \[ohm\]
     pub r_col: f64,
-    /// SF gate voltage at zero photocurrent [V]
+    /// SF gate voltage at zero photocurrent \[V\]
     pub vg_dark: f64,
-    /// SF gate voltage at full-scale photocurrent [V]
+    /// SF gate voltage at full-scale photocurrent \[V\]
     pub vg_bright: f64,
 }
 
@@ -144,7 +144,7 @@ fn stack_current(p: &DeviceParams, w_weight: f64, v_g: f64, v_out: f64) -> f64 {
 /// * `act_norm` in [0,1]: normalised photodiode current (maps linearly to
 ///   the SF gate voltage in [vg_dark, vg_bright]).
 ///
-/// Returns the column-line output voltage [V].
+/// Returns the column-line output voltage \[V\].
 pub fn pixel_output_voltage(p: &DeviceParams, w_norm: f64, act_norm: f64) -> f64 {
     if w_norm <= 0.0 {
         return 0.0;

@@ -34,9 +34,9 @@ pub enum WeightTech {
 #[derive(Clone, Copy, Debug)]
 pub struct TechParams {
     pub tech: WeightTech,
-    /// energy to (re)program one weight level [J]
+    /// energy to (re)program one weight level \[J\]
     pub write_energy_j: f64,
-    /// write latency per device [s]
+    /// write latency per device \[s\]
     pub write_latency_s: f64,
     /// usable conductance levels (analog depth)
     pub levels: u32,

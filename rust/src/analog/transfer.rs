@@ -21,9 +21,9 @@ pub const NA: usize = 3;
 /// Fitted polynomial surface + provenance (mirrors python `CurveFit`).
 #[derive(Clone, Debug)]
 pub struct CurveFit {
-    /// coeffs[m][n] multiplies w^(m+1) * a^n.
+    /// `coeffs[m][n]` multiplies w^(m+1) * a^n.
     pub coeffs: [[f64; NA + 1]; MW],
-    /// V_out at (w=1, a=1) [V] — converts normalised units back to volts.
+    /// V_out at (w=1, a=1) \[V\] — converts normalised units back to volts.
     pub v_full_scale: f64,
     /// normalised fit residual recorded at fit time.
     pub rmse: f64,
@@ -127,7 +127,7 @@ impl TransferSurface {
         }
     }
 
-    /// Physical full-scale voltage [V] of a single pixel.
+    /// Physical full-scale voltage \[V\] of a single pixel.
     pub fn v_full_scale(&self) -> f64 {
         match self {
             TransferSurface::Poly(fit) => fit.v_full_scale,

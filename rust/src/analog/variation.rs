@@ -14,7 +14,7 @@ use crate::util::rng::Rng;
 pub struct VariationModel {
     /// relative width mismatch sigma (Pelgrom-style; ~1-3% for small W)
     pub width_sigma: f64,
-    /// threshold-voltage mismatch sigma [V]
+    /// threshold-voltage mismatch sigma \[V\]
     pub vth_sigma_v: f64,
 }
 

@@ -1,6 +1,6 @@
 //! Weight-to-silicon mapping (paper Sections 3.1 & 4.2).
 //!
-//! Trained signed weights theta[p][c] become *widths of fixed transistors*:
+//! Trained signed weights `theta[p][c]` become *widths of fixed transistors*:
 //! positive weights go to transistors wired to the "red" VDD rail, negative
 //! magnitudes to the "green" rail, and the two CDS sampling phases
 //! subtract their contributions.  Widths are discrete in silicon (the die

@@ -11,8 +11,13 @@
 //! fraction, e.g. `P2M_BENCH_TOL=0.4`).  A missing baseline file is the
 //! bootstrap case: the gate passes and asks for the fresh results to be
 //! committed.  Invoked by `./ci.sh --bench`.
+//!
+//! When `$GITHUB_STEP_SUMMARY` is set (GitHub Actions), a per-row
+//! markdown table — baseline vs current vs gate floor, with a verdict
+//! per row — is appended to it, so the Actions run page shows the whole
+//! perf picture rather than only pass/fail.
 
-use p2m::util::bench::gate_regressions;
+use p2m::util::bench::{gate_regressions, gate_rows, GateRow};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -42,6 +47,10 @@ fn main() {
                 "bench-gate: no committed baseline at {baseline_path} — bootstrap run; \
                  commit the fresh BENCH_pipeline.json to arm the gate"
             );
+            step_summary(
+                "## Bench regression gate\n\nNOT ARMED — no committed baseline; \
+                 commit the fresh `BENCH_pipeline.json` to arm it.\n",
+            );
             return;
         }
     };
@@ -53,15 +62,23 @@ fn main() {
         }
     };
 
-    match gate_regressions(&baseline, &fresh, tol) {
-        Ok(failures) if failures.is_empty() => {
-            println!(
-                "bench-gate: OK — no throughput row regressed more than {:.0}% \
-                 (override with P2M_BENCH_TOL)",
-                tol * 100.0
-            );
-        }
-        Ok(failures) => {
+    // gate_rows drives the step-summary table; the printed verdict
+    // lines come from the same library formatter the tests pin
+    // (gate_regressions), so CI logs can never drift from it.
+    match gate_rows(&baseline, &fresh, tol) {
+        Ok(rows) => {
+            step_summary(&summary_markdown(&rows, tol));
+            let failures = gate_regressions(&baseline, &fresh, tol)
+                .expect("gate_rows parsed these documents already");
+            if failures.is_empty() {
+                println!(
+                    "bench-gate: OK — none of the {} throughput rows regressed more \
+                     than {:.0}% (override with P2M_BENCH_TOL)",
+                    rows.len(),
+                    tol * 100.0
+                );
+                return;
+            }
             eprintln!(
                 "bench-gate: FAILED ({} regression(s), tol {:.0}%):",
                 failures.len(),
@@ -79,5 +96,44 @@ fn main() {
             eprintln!("bench-gate: {e}");
             std::process::exit(2);
         }
+    }
+}
+
+/// The per-row markdown table appended to the Actions step summary.
+fn summary_markdown(rows: &[GateRow], tol: f64) -> String {
+    let mut md = String::from("## Bench regression gate\n\n");
+    md.push_str(&format!(
+        "Tolerance: **{:.0}%** (`P2M_BENCH_TOL`); gate floor = baseline × {:.2}\n\n",
+        tol * 100.0,
+        1.0 - tol
+    ));
+    md.push_str("| row | baseline (fps) | current (fps) | floor (fps) | verdict |\n");
+    md.push_str("|---|---:|---:|---:|---|\n");
+    for r in rows {
+        let (current, verdict) = match (r.current, r.regressed) {
+            (None, _) => ("—".to_string(), "❌ missing"),
+            (Some(v), true) => (format!("{v:.1}"), "❌ regressed"),
+            (Some(v), false) => (format!("{v:.1}"), "✅ ok"),
+        };
+        md.push_str(&format!(
+            "| `{}` | {:.1} | {current} | {:.1} | {verdict} |\n",
+            r.name, r.baseline, r.floor
+        ));
+    }
+    md
+}
+
+/// Append `md` to `$GITHUB_STEP_SUMMARY` when the env var names a
+/// writable file (no-op otherwise — local runs stay clean).
+fn step_summary(md: &str) {
+    use std::io::Write;
+    let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(f, "{md}");
     }
 }

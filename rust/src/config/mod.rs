@@ -61,7 +61,7 @@ pub struct SensorConfig {
     pub cols: usize,
     /// native pixel bit depth (paper: 12)
     pub bit_depth: u32,
-    /// exposure time [s] (drives T_sens; paper Table 5 implies ~35-39 ms)
+    /// exposure time \[s\] (drives T_sens; paper Table 5 implies ~35-39 ms)
     pub exposure_s: f64,
     /// read-noise sigma as a fraction of full scale
     pub read_noise: f64,
@@ -116,7 +116,7 @@ impl SensorConfig {
 pub struct AdcConfig {
     /// conversion bit width N (counts 0..2^N-1)
     pub n_bits: u32,
-    /// counter clock [Hz]
+    /// counter clock \[Hz\]
     pub clock_hz: f64,
     /// full-scale analog input of the ramp, in column-line units
     /// (multiples of the single-pixel full scale f(1,1)); the default is

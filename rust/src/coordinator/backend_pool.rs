@@ -1,0 +1,412 @@
+//! The pooled classify stage: M `Send` backend workers pulling
+//! shape-pure batches from the fleet consumer over a bounded queue,
+//! with **sequence-numbered in-order result reassembly** so the run's
+//! accounting folds in exactly the order batches were staged — fleet
+//! stats, scenario digests and dense-vs-quantized parity stay
+//! bit-for-bit deterministic for a fixed (script, seed, workers).
+//!
+//! ```text
+//!                        ┌─ worker 0 (own classifier) ─┐
+//!  consumer ── tasks ────┼─ worker 1                   ├── results ── reassembly
+//!  (router/batcher)      └─ worker M-1                 ┘   (seq-ordered fold)
+//! ```
+//!
+//! The consumer side of both serving topologies talks to classification
+//! through the crate-internal `ClassifySink` seam: `DirectSink`
+//! classifies inline on the consumer thread (the only option for the
+//! non-`Send` [`crate::coordinator::PjrtClassifier`]), while [`BackendPool`] fans
+//! batches out to worker threads that each own a private classifier
+//! instance — deterministic backends
+//! ([`crate::model::NativeBackend`],
+//! [`crate::coordinator::MeanThresholdClassifier`]) produce identical
+//! predictions whichever worker serves a batch, so worker count changes
+//! throughput only, never outcomes (pinned by the pool tests).
+//!
+//! # Flow control — why the pool cannot deadlock
+//!
+//! Both internal queues hold at most `depth = max(2·workers, 4)`
+//! batches, and the consumer bounds *in-flight* batches (submitted but
+//! not folded) by the same `depth`: tasks queued ≤ in-flight < depth
+//! means a task push never blocks, and outstanding results ≤ in-flight
+//! < depth means a worker's result push never blocks.  The only blocking
+//! edge is the consumer waiting on `results` when the pool is full —
+//! and at that point the next batch to fold is necessarily inside a
+//! worker or queue, so progress is guaranteed while workers live (a
+//! classify panic is caught and surfaced as an error result, and a
+//! fully-exited worker set is detected rather than waited on forever).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::fleet::{
+    batch_shape, classify_fleet_batch, fold_classified_batch, FleetAccounting, FleetItem,
+};
+use crate::coordinator::metrics::{Counter, Gauge, Metrics};
+use crate::coordinator::pipeline::{BatchClassifier, WirePayload};
+use crate::coordinator::queue::{Backpressure, BoundedQueue};
+
+/// How the fleet/scenario consumer hands batches to classification.
+///
+/// `submit` may fold earlier results opportunistically (it receives the
+/// accounting for exactly that reason); `drain` folds whatever has
+/// completed without blocking; `finish` blocks until every submitted
+/// batch is folded.  Implementations must fold results in submission
+/// order.
+pub(crate) trait ClassifySink {
+    fn submit(&mut self, batch: Vec<FleetItem>, acc: &mut FleetAccounting<'_>) -> Result<()>;
+    fn drain(&mut self, acc: &mut FleetAccounting<'_>) -> Result<()>;
+    fn finish(&mut self, acc: &mut FleetAccounting<'_>) -> Result<()>;
+}
+
+/// Inline classification on the consumer thread (classic path; required
+/// for non-`Send` backends such as PJRT).
+pub(crate) struct DirectSink<'c, C: BatchClassifier> {
+    pub(crate) classifier: &'c mut C,
+}
+
+impl<C: BatchClassifier> ClassifySink for DirectSink<'_, C> {
+    fn submit(&mut self, batch: Vec<FleetItem>, acc: &mut FleetAccounting<'_>) -> Result<()> {
+        classify_fleet_batch(self.classifier, batch, acc)
+    }
+
+    fn drain(&mut self, _acc: &mut FleetAccounting<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    fn finish(&mut self, _acc: &mut FleetAccounting<'_>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// One batch travelling to a worker.
+struct PoolTask {
+    seq: u64,
+    batch: Vec<FleetItem>,
+}
+
+/// One classified batch travelling back.  `preds` is stringly-typed so
+/// a worker panic can be surfaced through the same channel.
+struct PoolResult {
+    seq: u64,
+    batch: Vec<FleetItem>,
+    preds: Result<Vec<u8>, String>,
+}
+
+/// The pooled classify stage (see module docs).  Constructed per run by
+/// [`crate::coordinator::run_fleet_pooled`] /
+/// [`crate::coordinator::run_scenario_pooled`]; each worker thread owns
+/// the classifier instance the factory built for it.
+pub struct BackendPool {
+    tasks: BoundedQueue<PoolTask>,
+    results: BoundedQueue<PoolResult>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// max batches submitted-but-not-folded (== both queue capacities)
+    depth: u64,
+    submitted: u64,
+    folded: u64,
+    /// out-of-order completions parked until their turn (keyed by seq)
+    pending: BTreeMap<u64, (Vec<FleetItem>, Result<Vec<u8>, String>)>,
+    batches_metric: Option<Arc<Counter>>,
+    in_flight_metric: Option<Arc<Gauge>>,
+}
+
+impl BackendPool {
+    /// Spawn `workers` classifier threads (at least one), each owning
+    /// `make(i)`.  The classifiers must be deterministic pure functions
+    /// of the payload for the pool's outcome-invariance contract to
+    /// hold.
+    pub fn new<C>(workers: usize, mut make: impl FnMut(usize) -> C) -> Self
+    where
+        C: BatchClassifier + Send + 'static,
+    {
+        let workers = workers.max(1);
+        let depth = (2 * workers).max(4);
+        let tasks: BoundedQueue<PoolTask> = BoundedQueue::new(depth, Backpressure::Block);
+        let results: BoundedQueue<PoolResult> = BoundedQueue::new(depth, Backpressure::Block);
+        let handles = (0..workers)
+            .map(|i| {
+                let tasks = tasks.clone();
+                let results = results.clone();
+                let mut clf = make(i);
+                std::thread::spawn(move || {
+                    loop {
+                        match tasks.pop(Duration::from_millis(20)) {
+                            Some(PoolTask { seq, batch }) => {
+                                // A panicking classifier must not wedge the
+                                // reassembly: surface it as an error result.
+                                let preds = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        let payloads: Vec<&WirePayload> =
+                                            batch.iter().map(|it| &it.payload).collect();
+                                        clf.classify(&payloads).map_err(|e| format!("{e:#}"))
+                                    }),
+                                )
+                                .unwrap_or_else(|_| {
+                                    Err("backend worker panicked during classify".into())
+                                });
+                                if !results.push(PoolResult { seq, batch, preds }) {
+                                    return; // consumer gone (results closed)
+                                }
+                            }
+                            None => {
+                                if tasks.is_closed() && tasks.is_empty() {
+                                    return; // clean shutdown
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        BackendPool {
+            tasks,
+            results,
+            workers: handles,
+            depth: depth as u64,
+            submitted: 0,
+            folded: 0,
+            pending: BTreeMap::new(),
+            batches_metric: None,
+            in_flight_metric: None,
+        }
+    }
+
+    /// [`BackendPool::new`] with `backend_pool_batches` /
+    /// `backend_pool_in_flight` instrumentation registered on `metrics`.
+    pub fn with_metrics<C>(
+        workers: usize,
+        make: impl FnMut(usize) -> C,
+        metrics: &Metrics,
+    ) -> Self
+    where
+        C: BatchClassifier + Send + 'static,
+    {
+        let mut pool = Self::new(workers, make);
+        pool.batches_metric = Some(metrics.counter("backend_pool_batches"));
+        pool.in_flight_metric = Some(metrics.gauge("backend_pool_in_flight"));
+        pool
+    }
+
+    /// Worker threads serving this pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn in_flight(&self) -> u64 {
+        self.submitted - self.folded
+    }
+
+    /// Park one completed result for in-order folding.
+    fn stash(&mut self, r: PoolResult) {
+        self.pending.insert(r.seq, (r.batch, r.preds));
+    }
+
+    /// Fold every parked result whose turn has come, in seq order.
+    fn fold_ready(&mut self, acc: &mut FleetAccounting<'_>) -> Result<()> {
+        while let Some((batch, preds)) = self.pending.remove(&self.folded) {
+            let preds = match preds {
+                Ok(p) => p,
+                Err(e) => bail!("backend pool worker failed: {e}"),
+            };
+            fold_classified_batch(batch, preds, acc)?;
+            self.folded += 1;
+            if let Some(c) = &self.batches_metric {
+                c.inc();
+            }
+            if let Some(g) = &self.in_flight_metric {
+                g.add(-1);
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until one more result arrives (the pool has work in
+    /// flight); errors out instead of hanging if every worker exited.
+    fn pop_result_blocking(&mut self) -> Result<()> {
+        loop {
+            if let Some(r) = self.results.pop(Duration::from_millis(50)) {
+                self.stash(r);
+                return Ok(());
+            }
+            if self.workers.iter().all(|h| h.is_finished()) {
+                bail!(
+                    "backend pool workers exited with {} batch(es) in flight",
+                    self.in_flight()
+                );
+            }
+        }
+    }
+}
+
+impl ClassifySink for BackendPool {
+    fn submit(&mut self, batch: Vec<FleetItem>, acc: &mut FleetAccounting<'_>) -> Result<()> {
+        // Shape purity is checked here, before the batch crosses a
+        // thread boundary, so a batcher bug fails on the consumer with
+        // the full context (same contract as the direct path).
+        batch_shape(&batch)?;
+        self.drain(acc)?;
+        while self.in_flight() >= self.depth {
+            self.pop_result_blocking()?;
+            self.fold_ready(acc)?;
+        }
+        let seq = self.submitted;
+        self.submitted += 1;
+        if let Some(g) = &self.in_flight_metric {
+            g.add(1);
+        }
+        if !self.tasks.push(PoolTask { seq, batch }) {
+            bail!("backend pool task queue closed mid-run");
+        }
+        Ok(())
+    }
+
+    fn drain(&mut self, acc: &mut FleetAccounting<'_>) -> Result<()> {
+        while let Some(r) = self.results.try_pop() {
+            self.stash(r);
+        }
+        self.fold_ready(acc)
+    }
+
+    fn finish(&mut self, acc: &mut FleetAccounting<'_>) -> Result<()> {
+        loop {
+            self.drain(acc)?;
+            if self.folded == self.submitted {
+                return Ok(());
+            }
+            self.pop_result_blocking()?;
+        }
+    }
+}
+
+impl Drop for BackendPool {
+    fn drop(&mut self) {
+        // Closing both queues releases every worker whatever it is
+        // doing (pop sees closed+drained, push fails); then join so no
+        // thread outlives the run that spawned it.
+        self.tasks.close();
+        self.results.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::{Latency, Metrics};
+    use crate::coordinator::pipeline::{PipelineStats, ShapeKey};
+    use crate::sensor::Image;
+    use std::time::Instant;
+
+    fn item(camera: usize, label: u8, fill: f32) -> FleetItem {
+        FleetItem {
+            camera,
+            label,
+            captured_at: Instant::now(),
+            payload: WirePayload::Dense(Image::from_vec(1, 1, 2, vec![fill, fill])),
+            bytes: 8,
+        }
+    }
+
+    /// Threshold-on-mean echo whose singleton batches sleep, forcing
+    /// later sequence numbers to complete first on a multi-worker pool.
+    struct SleepyEcho;
+
+    impl BatchClassifier for SleepyEcho {
+        fn classify(&mut self, batch: &[&WirePayload]) -> anyhow::Result<Vec<u8>> {
+            if batch.len() == 1 {
+                std::thread::sleep(Duration::from_millis(30));
+            }
+            Ok(batch.iter().map(|p| u8::from(p.mean() > 0.5)).collect())
+        }
+    }
+
+    fn with_acc<R>(f: impl FnOnce(&mut FleetAccounting<'_>) -> R) -> (R, PipelineStats) {
+        let mut per_camera = vec![PipelineStats::default(); 4];
+        let mut per_shape = std::collections::BTreeMap::<ShapeKey, _>::new();
+        let mut aggregate = PipelineStats::default();
+        let latency = Arc::new(Latency::new(64));
+        let mut acc = FleetAccounting {
+            per_camera: &mut per_camera,
+            per_shape: &mut per_shape,
+            aggregate: &mut aggregate,
+            latency: &latency,
+        };
+        let r = f(&mut acc);
+        (r, aggregate)
+    }
+
+    #[test]
+    fn pool_conserves_frames_and_reassembles_out_of_order_completions() {
+        let metrics = Metrics::new();
+        let ((), aggregate) = with_acc(|acc| {
+            let mut pool =
+                BackendPool::with_metrics(3, |_| SleepyEcho, &metrics);
+            assert_eq!(pool.workers(), 3);
+            // A slow singleton first, then fast pairs: later seqs finish
+            // first, the fold must still run 0, 1, 2, ...
+            pool.submit(vec![item(0, 1, 0.9)], acc).unwrap();
+            for s in 0..6 {
+                pool.submit(vec![item(s % 4, 0, 0.1), item((s + 1) % 4, 1, 0.9)], acc)
+                    .unwrap();
+            }
+            pool.finish(acc).unwrap();
+        });
+        assert_eq!(aggregate.frames_classified, 13);
+        assert_eq!(aggregate.batches, 7);
+        // mean 0.9 -> pred 1 (labels 1 correct), mean 0.1 -> pred 0 ✓.
+        assert_eq!(aggregate.correct, 13);
+        assert_eq!(metrics.counter("backend_pool_batches").get(), 7);
+        assert_eq!(metrics.gauge("backend_pool_in_flight").get(), 0);
+    }
+
+    #[test]
+    fn classify_errors_and_panics_surface_instead_of_hanging() {
+        struct Broken(bool);
+        impl BatchClassifier for Broken {
+            fn classify(&mut self, _b: &[&WirePayload]) -> anyhow::Result<Vec<u8>> {
+                if self.0 {
+                    panic!("backend blew up");
+                }
+                anyhow::bail!("no can do")
+            }
+        }
+        for panics in [false, true] {
+            let (res, _) = with_acc(|acc| {
+                let mut pool = BackendPool::new(2, |_| Broken(panics));
+                pool.submit(vec![item(0, 0, 0.5)], acc)?;
+                pool.finish(acc)
+            });
+            let err = format!("{:#}", res.unwrap_err());
+            assert!(err.contains("backend pool worker failed"), "{err}");
+        }
+    }
+
+    #[test]
+    fn pool_depth_bounds_in_flight_batches() {
+        // Submitting far more batches than depth must neither deadlock
+        // nor let in-flight exceed the bound (submit folds as it goes).
+        let ((), aggregate) = with_acc(|acc| {
+            let mut pool = BackendPool::new(2, |_| SleepyEcho);
+            for s in 0..40 {
+                pool.submit(vec![item(s % 4, 0, 0.1), item(s % 4, 0, 0.2)], acc).unwrap();
+                assert!(pool.in_flight() <= pool.depth);
+            }
+            pool.finish(acc).unwrap();
+        });
+        assert_eq!(aggregate.frames_classified, 80);
+    }
+
+    #[test]
+    fn dropping_a_pool_with_queued_work_joins_cleanly() {
+        let ((), _) = with_acc(|acc| {
+            let mut pool = BackendPool::new(1, |_| SleepyEcho);
+            pool.submit(vec![item(0, 0, 0.4)], acc).unwrap();
+            // Drop without finish: workers must exit and join.
+        });
+    }
+}

@@ -14,7 +14,7 @@
 //!  camera N ── frontend ──> shard queue N ─┘             lanes)          thread)
 //! ```
 //!
-//! Each producer owns its own seeded [`Camera`] and [`SensorCompute`]
+//! Each producer owns its own seeded [`crate::sensor::Camera`] and [`SensorCompute`]
 //! and runs on a scoped `std::thread`; the classifier (which for PJRT is
 //! not `Send`) never leaves the caller's thread.
 //!
@@ -66,6 +66,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::config::SystemConfig;
+use crate::coordinator::backend_pool::{BackendPool, ClassifySink, DirectSink};
 use crate::coordinator::batcher::{BatchPolicy, ShapedBatcher};
 use crate::coordinator::metrics::{Latency, Metrics};
 use crate::coordinator::pipeline::{
@@ -459,6 +460,42 @@ pub fn run_fleet<C: BatchClassifier>(
     cfg: &FleetConfig,
     metrics: &Metrics,
 ) -> Result<FleetStats> {
+    let mut sink = DirectSink { classifier };
+    run_fleet_sink(&mut sink, sensors, cfg, metrics)
+}
+
+/// [`run_fleet`] with the classify stage parallelised over a
+/// [`BackendPool`] of `workers` threads, each owning the classifier
+/// `make(worker_index)` built for it (the backend must therefore be
+/// `Send`, e.g. [`crate::model::NativeBackend`] or
+/// [`crate::coordinator::MeanThresholdClassifier`] — not PJRT).
+///
+/// Sequence-numbered in-order reassembly keeps every deterministic
+/// field of the returned [`FleetStats`] identical to the direct path
+/// for any worker count — pooling changes throughput, never outcomes
+/// (requires the classifiers to be deterministic pure functions of the
+/// payload, which every `Send` backend in this crate is).
+pub fn run_fleet_pooled<C>(
+    workers: usize,
+    make: impl FnMut(usize) -> C,
+    sensors: Vec<SensorCompute>,
+    cfg: &FleetConfig,
+    metrics: &Metrics,
+) -> Result<FleetStats>
+where
+    C: BatchClassifier + Send + 'static,
+{
+    let mut sink = BackendPool::with_metrics(workers, make, metrics);
+    run_fleet_sink(&mut sink, sensors, cfg, metrics)
+}
+
+/// The topology shared by the direct and pooled entry points.
+fn run_fleet_sink<S: ClassifySink>(
+    sink: &mut S,
+    sensors: Vec<SensorCompute>,
+    cfg: &FleetConfig,
+    metrics: &Metrics,
+) -> Result<FleetStats> {
     cfg.validate(&sensors)?;
     if sensors.iter().any(|s| s.is_p2m() != sensors[0].is_p2m()) {
         bail!("fleet sensors must all be the same kind (all P2M or all baseline)");
@@ -513,7 +550,7 @@ pub fn run_fleet<C: BatchClassifier>(
             aggregate: &mut aggregate,
             latency: &latency,
         };
-        consumer_result = consume(classifier, &registry, &params, &mut acc, t0);
+        consumer_result = consume(sink, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
             // Unblock any producer stuck on a full shard so the scope's
             // implicit joins cannot hang.
@@ -548,9 +585,11 @@ pub fn run_fleet<C: BatchClassifier>(
 
 /// The consumer loop shared by [`run_fleet`] and the scenario driver:
 /// adopt registered shards -> drain fairly through the [`Router`] ->
-/// group into shape-pure batches -> classify.
-pub(crate) fn consume<C: BatchClassifier>(
-    classifier: &mut C,
+/// group into shape-pure batches -> hand each batch to the classify
+/// sink (inline classification or a worker pool — see
+/// [`crate::coordinator::backend_pool`]).
+pub(crate) fn consume<S: ClassifySink>(
+    sink: &mut S,
     registry: &ShardRegistry,
     params: &ConsumeParams,
     acc: &mut FleetAccounting<'_>,
@@ -618,50 +657,61 @@ pub(crate) fn consume<C: BatchClassifier>(
         while let Some((_, item)) = router.next() {
             let key = item.payload.shape_key();
             if let Some((_, batch)) = batcher.push(key, item, clock(Instant::now())) {
-                classify_fleet_batch(classifier, batch, acc)?;
+                sink.submit(batch, acc)?;
             }
         }
         while let Some((_, batch)) = batcher.poll(clock(Instant::now())) {
-            classify_fleet_batch(classifier, batch, acc)?;
+            sink.submit(batch, acc)?;
         }
 
         // 3. Terminate once every expected camera has joined and closed
-        //    its shard and everything in flight has been classified.
+        //    its shard, everything in flight has been staged, and the
+        //    sink has folded every outstanding result.
         if moved == 0 {
             let all_closed_and_drained = n_shards == params.expected_shards
                 && shards.iter().all(|(_, q)| q.is_closed() && q.is_empty());
             if all_closed_and_drained && router.total_backlog() == 0 {
                 while let Some((_, batch)) = batcher.flush() {
-                    classify_fleet_batch(classifier, batch, acc)?;
+                    sink.submit(batch, acc)?;
                 }
+                sink.finish(acc)?;
                 return Ok(());
             }
-            // Idle: producers are still capturing (or yet to join).  A
-            // short sleep keeps the consumer from spinning on empty
-            // shards.
+            // Idle: producers are still capturing (or yet to join).
+            // Fold any classify results that completed meanwhile, then
+            // sleep briefly instead of spinning on empty shards.
+            sink.drain(acc)?;
             std::thread::sleep(Duration::from_micros(200));
         }
     }
 }
 
-/// Classify one (shape-pure, possibly mixed-camera) batch and fold the
-/// outcome into the per-camera, per-shape and aggregate stats.
-pub(crate) fn classify_fleet_batch<C: BatchClassifier>(
-    classifier: &mut C,
-    batch: Vec<FleetItem>,
-    acc: &mut FleetAccounting<'_>,
-) -> Result<()> {
+/// Shape-purity check of one staged batch (its [`ShapeKey`], `None` for
+/// an empty batch).  The shape-aware batcher guarantees purity; turning
+/// a violation into a hard error (rather than a silently mis-assembled
+/// batch tensor) keeps future batching bugs loud — both the inline and
+/// the pooled classify paths run this before classification.
+pub(crate) fn batch_shape(batch: &[FleetItem]) -> Result<Option<ShapeKey>> {
     let Some(shape) = batch.first().map(|item| item.payload.shape_key()) else {
-        return Ok(());
+        return Ok(None);
     };
-    // The shape-aware batcher guarantees purity; turning a violation
-    // into a hard error (rather than a silently mis-assembled batch
-    // tensor) keeps future batching bugs loud.
     if batch.iter().any(|item| item.payload.shape_key() != shape) {
         bail!("shape-mixed batch reached the classifier (batcher bug)");
     }
-    let payloads: Vec<&WirePayload> = batch.iter().map(|item| &item.payload).collect();
-    let preds = classifier.classify(&payloads)?;
+    Ok(Some(shape))
+}
+
+/// Fold one classified batch's outcome into the per-camera, per-shape
+/// and aggregate stats (the accounting half shared by the inline path
+/// and the pool's in-order reassembly).
+pub(crate) fn fold_classified_batch(
+    batch: Vec<FleetItem>,
+    preds: Vec<u8>,
+    acc: &mut FleetAccounting<'_>,
+) -> Result<()> {
+    let Some(shape) = batch_shape(&batch)? else {
+        return Ok(());
+    };
     if preds.len() != batch.len() {
         bail!("classifier returned {} labels for {} frames", preds.len(), batch.len());
     }
@@ -682,6 +732,22 @@ pub(crate) fn classify_fleet_batch<C: BatchClassifier>(
     ss.batches += 1;
     ss.frames_classified += batch.len() as u64;
     Ok(())
+}
+
+/// Classify one (shape-pure, possibly mixed-camera) batch inline and
+/// fold the outcome — the [`crate::coordinator::backend_pool::DirectSink`]
+/// path.
+pub(crate) fn classify_fleet_batch<C: BatchClassifier>(
+    classifier: &mut C,
+    batch: Vec<FleetItem>,
+    acc: &mut FleetAccounting<'_>,
+) -> Result<()> {
+    if batch_shape(&batch)?.is_none() {
+        return Ok(());
+    }
+    let payloads: Vec<&WirePayload> = batch.iter().map(|item| &item.payload).collect();
+    let preds = classifier.classify(&payloads)?;
+    fold_classified_batch(batch, preds, acc)
 }
 
 /// Build `n` P2M sensor-compute instances from the bundle's live stem
@@ -816,6 +882,46 @@ mod tests {
             assert_eq!(d.bytes_from_sensor, 4 * q.bytes_from_sensor);
         }
         assert!(quant.per_shape.contains_key(&ShapeKey { h: 4, w: 4, c: 8, bits: 8 }));
+    }
+
+    #[test]
+    fn pooled_fleet_matches_direct_outcomes_for_any_worker_count() {
+        // The pooled classify stage is an execution strategy, not a
+        // semantic change: every deterministic per-camera field must be
+        // identical to the direct path, for 1, 2 and 4 workers.
+        let cfg = small_cfg();
+        let direct = run(&cfg);
+        for workers in [1usize, 2, 4] {
+            let sensors =
+                synthetic_fleet_sensors(20, Fidelity::Functional, cfg.n_cameras, WireFormat::Dense)
+                    .unwrap();
+            let pooled = run_fleet_pooled(
+                workers,
+                |_| MeanThresholdClassifier::new(0.5),
+                sensors,
+                &cfg,
+                &Metrics::new(),
+            )
+            .unwrap();
+            for (d, p) in direct.per_camera.iter().zip(&pooled.per_camera) {
+                assert_eq!(d.frames_captured, p.frames_captured, "workers {workers}");
+                assert_eq!(d.frames_classified, p.frames_classified, "workers {workers}");
+                assert_eq!(d.correct, p.correct, "workers {workers}");
+                assert_eq!(d.bytes_from_sensor, p.bytes_from_sensor, "workers {workers}");
+            }
+            // Per-shape frame/byte accounting is deterministic too
+            // (batch *counts* are timing-derived, so not compared).
+            assert_eq!(
+                pooled.per_shape.keys().collect::<Vec<_>>(),
+                direct.per_shape.keys().collect::<Vec<_>>(),
+                "workers {workers}"
+            );
+            for (shape, d) in &direct.per_shape {
+                let p = &pooled.per_shape[shape];
+                assert_eq!(d.frames_classified, p.frames_classified, "workers {workers}");
+                assert_eq!(d.bytes_from_sensor, p.bytes_from_sensor, "workers {workers}");
+            }
+        }
     }
 
     #[test]

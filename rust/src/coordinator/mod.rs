@@ -19,7 +19,14 @@
 //!
 //! Classification is pluggable through [`BatchClassifier`]:
 //! [`PjrtClassifier`] serves the AOT artifacts through PJRT,
-//! [`MeanThresholdClassifier`] is the deterministic pure-rust fallback.
+//! [`crate::model::NativeBackend`] is the native integer MobileNetV2
+//! backend (the paper's digital SoC side, dequant-free over ADC codes),
+//! and [`MeanThresholdClassifier`] is the fast deterministic fallback.
+//! For `Send` backends the classify stage itself parallelises over a
+//! [`BackendPool`] of worker threads ([`run_fleet_pooled`] /
+//! [`run_scenario_pooled`]) with sequence-numbered in-order result
+//! reassembly, so pooling changes throughput but never outcomes (see
+//! [`backend_pool`]).
 //!
 //! Every link carries [`WirePayload`]s: dense f32 frames or — with
 //! [`WireFormat::Quantized`] sensors — the quantized wire format
@@ -27,6 +34,7 @@
 //! ingest.  Batches are grouped by [`ShapeKey`] (dims + wire encoding),
 //! so the classifier boundary never sees a shape-mixed batch.
 
+pub mod backend_pool;
 pub mod batcher;
 pub mod fleet;
 pub mod metrics;
@@ -35,11 +43,12 @@ pub mod queue;
 pub mod router;
 pub mod scenario;
 
+pub use backend_pool::BackendPool;
 pub use batcher::{BatchPolicy, Batcher, ShapedBatcher};
 pub use fleet::{
-    heterogeneous_fleet_sensors, p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors,
-    synthetic_frame_plan, synthetic_frame_plan_bits, CameraSpec, FleetConfig, FleetStats,
-    PlanBank, ShapeStats,
+    heterogeneous_fleet_sensors, p2m_fleet_sensors, run_fleet, run_fleet_pooled,
+    synthetic_fleet_sensors, synthetic_frame_plan, synthetic_frame_plan_bits, CameraSpec,
+    FleetConfig, FleetStats, PlanBank, ShapeStats,
 };
 pub use metrics::{Counter, Gauge, Latency, Metrics};
 pub use pipeline::{
@@ -50,6 +59,6 @@ pub use pipeline::{
 pub use queue::{Backpressure, BoundedQueue};
 pub use router::{RoutePolicy, Router};
 pub use scenario::{
-    run_scenario, CameraReport, CameraScript, Scenario, ScenarioReport, Segment,
-    SegmentEnd,
+    run_scenario, run_scenario_pooled, CameraReport, CameraScript, Scenario,
+    ScenarioReport, Segment, SegmentEnd,
 };

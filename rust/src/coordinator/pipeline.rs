@@ -328,13 +328,13 @@ pub struct PipelineStats {
     pub batches: u64,
     /// bytes that crossed the sensor-to-SoC link
     pub bytes_from_sensor: u64,
-    /// wall-clock duration of the run [s]
+    /// wall-clock duration of the run \[s\]
     pub wall_time_s: f64,
     /// classified frames per second of wall time
     pub throughput_fps: f64,
-    /// mean capture-to-classification latency [s]
+    /// mean capture-to-classification latency \[s\]
     pub latency_mean_s: f64,
-    /// 95th-percentile capture-to-classification latency [s]
+    /// 95th-percentile capture-to-classification latency \[s\]
     pub latency_p95_s: f64,
     /// deepest the link queue ever got
     pub queue_high_watermark: usize,

@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::backend_pool::{BackendPool, ClassifySink, DirectSink};
 use crate::coordinator::fleet::{
     consume, CameraSpec, ConsumeParams, FleetAccounting, FleetItem, PlanBank,
     ShapeStats, ShardRegistry,
@@ -421,6 +422,35 @@ pub fn run_scenario<C: BatchClassifier>(
     scenario: &Scenario,
     metrics: &Metrics,
 ) -> Result<ScenarioReport> {
+    let mut sink = DirectSink { classifier };
+    run_scenario_sink(&mut sink, scenario, metrics)
+}
+
+/// [`run_scenario`] with the classify stage parallelised over a
+/// [`crate::coordinator::BackendPool`] of `workers` threads (same
+/// contract as [`crate::coordinator::run_fleet_pooled`]): with a
+/// deterministic `Send` backend the report's digest is identical to the
+/// direct path for any worker count — the property the CI crash-storm
+/// smoke asserts across producer crashes and pool reassembly.
+pub fn run_scenario_pooled<C>(
+    workers: usize,
+    make: impl FnMut(usize) -> C,
+    scenario: &Scenario,
+    metrics: &Metrics,
+) -> Result<ScenarioReport>
+where
+    C: BatchClassifier + Send + 'static,
+{
+    let mut sink = BackendPool::with_metrics(workers, make, metrics);
+    run_scenario_sink(&mut sink, scenario, metrics)
+}
+
+/// The scripted-run topology shared by the direct and pooled entries.
+fn run_scenario_sink<S: ClassifySink>(
+    sink: &mut S,
+    scenario: &Scenario,
+    metrics: &Metrics,
+) -> Result<ScenarioReport> {
     scenario.validate()?;
     let n = scenario.cameras.len();
 
@@ -521,7 +551,7 @@ pub fn run_scenario<C: BatchClassifier>(
             aggregate: &mut aggregate,
             latency: &latency,
         };
-        consumer_result = consume(classifier, &registry, &params, &mut acc, t0);
+        consumer_result = consume(sink, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
             // Unblock every producer (registered or yet to register) so
             // the scope's implicit joins cannot hang.

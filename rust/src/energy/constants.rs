@@ -18,24 +18,24 @@ pub enum PipelineKind {
     BaselineNonCompressed,
 }
 
-/// Table 4: per-operation energies [J].
+/// Table 4: per-operation energies \[J\].
 #[derive(Clone, Copy, Debug)]
 pub struct EnergyConstants {
-    /// per-pixel sensing (read-out) energy, P2M pixels [J]
+    /// per-pixel sensing (read-out) energy, P2M pixels \[J\]
     pub e_pix_p2m: f64,
-    /// per-pixel sensing energy, standard pixels [J]
+    /// per-pixel sensing energy, standard pixels \[J\]
     pub e_pix_baseline: f64,
-    /// per-value ADC energy, P2M (8-bit SS-ADC re-purposed) [J]
+    /// per-value ADC energy, P2M (8-bit SS-ADC re-purposed) \[J\]
     pub e_adc_p2m: f64,
-    /// per-value ADC energy, baseline compressed [J]
+    /// per-value ADC energy, baseline compressed \[J\]
     pub e_adc_baseline_c: f64,
-    /// per-value ADC energy, baseline non-compressed [J]
+    /// per-value ADC energy, baseline non-compressed \[J\]
     pub e_adc_baseline_nc: f64,
-    /// sensor-to-SoC communication per value [J]
+    /// sensor-to-SoC communication per value \[J\]
     pub e_com: f64,
-    /// one MAC on the SoC, 22nm [J]
+    /// one MAC on the SoC, 22nm \[J\]
     pub e_mac: f64,
-    /// one 32-bit parameter read [J] (paper ignores it: < 1e-4 of total)
+    /// one 32-bit parameter read \[J\] (paper ignores it: < 1e-4 of total)
     pub e_read: f64,
 }
 
@@ -91,15 +91,15 @@ pub struct DelayConstants {
     pub n_bank: u64,
     /// number of multiplication units
     pub n_mult: u64,
-    /// sensor read delay [s]: (P2M, baseline)
+    /// sensor read delay \[s\]: (P2M, baseline)
     pub t_sens_p2m: f64,
     pub t_sens_baseline: f64,
-    /// ADC operation delay [s]: (P2M, baseline)
+    /// ADC operation delay \[s\]: (P2M, baseline)
     pub t_adc_p2m: f64,
     pub t_adc_baseline: f64,
-    /// one multiply in the SoC [s]
+    /// one multiply in the SoC \[s\]
     pub t_mult: f64,
-    /// one SRAM read in the SoC [s]
+    /// one SRAM read in the SoC \[s\]
     pub t_read: f64,
 }
 

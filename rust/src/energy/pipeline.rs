@@ -14,7 +14,7 @@
 use crate::energy::constants::{DelayConstants, EnergyConstants, PipelineKind};
 use crate::model::arch::{ArchConfig, LayerSpec};
 
-/// Eq. 4 terms [J].
+/// Eq. 4 terms \[J\].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EnergyBreakdown {
     pub e_sens: f64,
@@ -29,7 +29,7 @@ impl EnergyBreakdown {
     }
 }
 
-/// Eq. 7-8 terms [s].
+/// Eq. 7-8 terms \[s\].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DelayBreakdown {
     pub t_sens: f64,

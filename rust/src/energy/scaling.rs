@@ -8,7 +8,7 @@
 //! Factors are energy-per-operation relative to 90nm, from the
 //! Stillmaker-Baas fitted models (general-purpose logic, nominal VDD).
 
-/// Supported nodes [nm].
+/// Supported nodes \[nm\].
 pub const NODES: [u32; 8] = [180, 90, 65, 45, 32, 22, 14, 7];
 
 /// Energy per op relative to the 90nm node (Stillmaker-Baas fitted

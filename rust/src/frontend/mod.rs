@@ -70,7 +70,7 @@ pub struct FrontendReport {
     pub conversions: u64,
     /// total ADC counter cycles across all conversions
     pub adc_cycles: u64,
-    /// wall-clock conversion time [s] with one column-parallel SS-ADC per
+    /// wall-clock conversion time \[s\] with one column-parallel SS-ADC per
     /// output column: h_o * c_o serialised CDS conversions
     pub adc_time_s: f64,
     /// phases whose accumulated voltage exceeded the scaled ramp window

@@ -81,11 +81,17 @@ commands (one per paper table/figure):
   fleet     sharded multi-camera serving fleet vs sequential single-camera
             (--cameras N --frames M --batch B --queue Q --drop --threads T
              --seed S --quantized : ship n_bits ADC codes on the links)
+            --backend <threshold|native|pjrt> picks the classify backend
+            (native = integer MobileNetV2 over raw ADC codes; default is
+            pjrt when artifacts exist, threshold otherwise) and
+            --workers N (N > 1, Send backends only) serves it through a
+            pooled classify stage with in-order result reassembly
             --scenario <uniform|mixed-res|churn|crash-storm|list> runs a
             deterministic scripted fleet instead (heterogeneous cameras,
             hot-add/remove/crash/rate-shift lifecycle events; add
             --check-digest to run it twice and verify the stats digest
-            is reproducible, --seed S to reseed the whole script)
+            is reproducible, --seed S to reseed the whole script;
+            --backend/--workers apply here too, pjrt excluded)
   info      artifact + environment status
 
 examples (cargo run --release --example <name>):
@@ -562,12 +568,38 @@ fn mismatch(rest: &[&str]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Backend selection shared by `fleet` and `fleet --scenario`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BackendSel {
+    Threshold,
+    Native,
+    Pjrt,
+}
+
+/// Parse `--backend <threshold|native|pjrt>`; `default` applies when
+/// the flag is absent.
+fn parse_backend(rest: &[&str], default: BackendSel) -> anyhow::Result<BackendSel> {
+    let Some(i) = rest.iter().position(|&a| a == "--backend") else {
+        return Ok(default);
+    };
+    match rest.get(i + 1).copied() {
+        Some("threshold") => Ok(BackendSel::Threshold),
+        Some("native") => Ok(BackendSel::Native),
+        Some("pjrt") => Ok(BackendSel::Pjrt),
+        other => anyhow::bail!(
+            "--backend wants threshold|native|pjrt, got '{}'",
+            other.unwrap_or("<missing>")
+        ),
+    }
+}
+
 fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
-        p2m_fleet_sensors, run_fleet, synthetic_fleet_sensors, Backpressure,
-        BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier, Metrics,
-        PjrtClassifier, SensorCompute, WireFormat,
+        p2m_fleet_sensors, run_fleet, run_fleet_pooled, synthetic_fleet_sensors,
+        Backpressure, BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier,
+        Metrics, PjrtClassifier, SensorCompute, WireFormat,
     };
+    use p2m::model::NativeBackend;
     use p2m::runtime::{Manifest, ModelBundle, Runtime};
 
     if let Some(i) = rest.iter().position(|&a| a == "--scenario") {
@@ -586,6 +618,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     let batch = flag("--batch").unwrap_or(8);
     let queue = flag("--queue").unwrap_or(16);
     let threads = flag("--threads").unwrap_or(1);
+    let workers = flag("--workers").unwrap_or(1).max(1);
     let seed = flag("--seed").unwrap_or(0) as u64;
     let drop = rest.contains(&"--drop");
     let wire = if rest.contains(&"--quantized") {
@@ -606,9 +639,25 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     };
 
     let res = 80usize;
-    // PJRT path when artifacts + runtime exist; deterministic synthetic
-    // fallback otherwise, so the fleet is demonstrable in any checkout.
-    let pjrt = Manifest::default_dir().join("manifest.json").exists();
+    // Backend selection: explicit --backend wins; the default keeps the
+    // legacy auto behaviour (PJRT when artifacts + runtime exist, the
+    // deterministic threshold fallback otherwise), so the fleet is
+    // demonstrable in any checkout.
+    let artifacts = Manifest::default_dir().join("manifest.json").exists();
+    let sel = parse_backend(
+        rest,
+        if artifacts { BackendSel::Pjrt } else { BackendSel::Threshold },
+    )?;
+    if sel == BackendSel::Pjrt && !artifacts {
+        anyhow::bail!("--backend pjrt needs built artifacts (run `make artifacts`)");
+    }
+    if sel == BackendSel::Pjrt && workers > 1 {
+        anyhow::bail!(
+            "--workers {workers} needs a Send backend (native or threshold); \
+             the PJRT classifier is pinned to the consumer thread"
+        );
+    }
+    let pjrt = sel == BackendSel::Pjrt;
     let print_fleet = |stats: &FleetStats, backend: &str| {
         let rows: Vec<Vec<String>> = stats
             .per_camera
@@ -665,15 +714,29 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
                     cfg: &FleetConfig,
                     metrics: &Metrics|
      -> anyhow::Result<FleetStats> {
-        match bundle {
-            Some(b) => {
+        match (bundle, sel, workers) {
+            (Some(b), _, _) => {
                 let mut clf = PjrtClassifier::for_kind(b, true, cfg.batch)?;
                 run_fleet(&mut clf, sensors, cfg, metrics)
             }
-            None => {
+            (None, BackendSel::Native, 1) => {
+                let mut clf = NativeBackend::new();
+                run_fleet(&mut clf, sensors, cfg, metrics)
+            }
+            (None, BackendSel::Native, w) => {
+                run_fleet_pooled(w, |_| NativeBackend::new(), sensors, cfg, metrics)
+            }
+            (None, _, 1) => {
                 let mut clf = MeanThresholdClassifier::new(0.5);
                 run_fleet(&mut clf, sensors, cfg, metrics)
             }
+            (None, _, w) => run_fleet_pooled(
+                w,
+                |_| MeanThresholdClassifier::new(0.5),
+                sensors,
+                cfg,
+                metrics,
+            ),
         }
     };
     let mk_sensors = |bundle: Option<&ModelBundle>, n: usize| -> anyhow::Result<Vec<SensorCompute>> {
@@ -682,17 +745,24 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
             None => synthetic_fleet_sensors(res, Fidelity::Functional, n, wire),
         }
     };
-    let backend_name = if pjrt {
-        "pjrt"
-    } else {
-        println!("(artifacts not built -- synthetic stem weights + {} backend)",
-            MeanThresholdClassifier::new(0.5).name());
-        "mean-threshold"
+    let backend_name = match sel {
+        BackendSel::Pjrt => "pjrt",
+        BackendSel::Native => NativeBackend::new().name(),
+        BackendSel::Threshold => {
+            if !artifacts {
+                println!(
+                    "(artifacts not built -- synthetic stem weights + {} backend)",
+                    MeanThresholdClassifier::new(0.5).name()
+                );
+            }
+            MeanThresholdClassifier::new(0.5).name()
+        }
     };
 
     println!(
         "== fleet: {cameras} cameras x {frames} frames, batch {batch}, queue {queue}, \
-         {} backpressure, {threads} frontend thread(s), {} wire ==",
+         {} backpressure, {threads} frontend thread(s), {} wire, {backend_name} backend \
+         x{workers} worker(s) ==",
         if drop { "drop-newest" } else { "blocking" },
         match wire {
             WireFormat::Dense => "dense f32",
@@ -771,15 +841,18 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
 }
 
 /// `fleet --scenario <name>`: run one canned deterministic scenario
-/// (heterogeneous cameras + lifecycle events) against the pure-rust
-/// threshold backend — scenarios mix payload shapes, which a single AOT
-/// artifact cannot serve, so the deterministic backend is always used
-/// and no artifacts are required.
+/// (heterogeneous cameras + lifecycle events) against a pure-rust
+/// deterministic backend — scenarios mix payload shapes, which a single
+/// AOT artifact cannot serve, so `--backend` picks threshold (default)
+/// or native, never pjrt, and no artifacts are required.  `--workers N`
+/// (N > 1) serves the classify stage through the backend pool; the
+/// digest must be identical for every worker count.
 fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
-        run_scenario, MeanThresholdClassifier, Metrics, Scenario, ScenarioReport,
-        WireFormat,
+        run_scenario, run_scenario_pooled, MeanThresholdClassifier, Metrics, Scenario,
+        ScenarioReport, WireFormat,
     };
+    use p2m::model::NativeBackend;
 
     if name == "list" || name.starts_with("--") {
         println!("canned scenarios:");
@@ -794,6 +867,20 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         .and_then(|i| rest.get(i + 1))
         .and_then(|s| s.parse().ok())
         .unwrap_or(0u64);
+    let workers = rest
+        .iter()
+        .position(|&a| a == "--workers")
+        .and_then(|i| rest.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1usize)
+        .max(1);
+    let sel = parse_backend(rest, BackendSel::Threshold)?;
+    if sel == BackendSel::Pjrt {
+        anyhow::bail!(
+            "scenarios mix payload shapes a single AOT artifact cannot serve; \
+             use --backend threshold or --backend native"
+        );
+    }
     let check_digest = rest.contains(&"--check-digest");
     let scenario = Scenario::canned(name, seed).ok_or_else(|| {
         anyhow::anyhow!(
@@ -804,15 +891,35 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
 
     let run_once = || -> anyhow::Result<(ScenarioReport, Metrics)> {
         let metrics = Metrics::new();
-        let mut clf = MeanThresholdClassifier::new(0.5);
-        let report = run_scenario(&mut clf, &scenario, &metrics)?;
+        let report = match (sel, workers) {
+            (BackendSel::Native, 1) => {
+                run_scenario(&mut NativeBackend::new(), &scenario, &metrics)?
+            }
+            (BackendSel::Native, w) => {
+                run_scenario_pooled(w, |_| NativeBackend::new(), &scenario, &metrics)?
+            }
+            (_, 1) => {
+                run_scenario(&mut MeanThresholdClassifier::new(0.5), &scenario, &metrics)?
+            }
+            (_, w) => run_scenario_pooled(
+                w,
+                |_| MeanThresholdClassifier::new(0.5),
+                &scenario,
+                &metrics,
+            )?,
+        };
         Ok((report, metrics))
     };
 
     println!(
-        "== scenario '{name}' (seed {seed}): {} cameras, batch {} ==",
+        "== scenario '{name}' (seed {seed}): {} cameras, batch {}, {} backend \
+         x{workers} worker(s) ==",
         scenario.cameras.len(),
-        scenario.batch
+        scenario.batch,
+        match sel {
+            BackendSel::Native => "native",
+            _ => "mean-threshold",
+        }
     );
     let (report, metrics) = run_once()?;
 

@@ -17,7 +17,7 @@ pub struct ModelMetrics {
     pub soc_madds: u64,
     /// parameter count (conv + fc weights)
     pub params: u64,
-    /// peak activation memory [bytes], int8 convention
+    /// peak activation memory \[bytes\], int8 convention
     pub peak_memory_bytes: u64,
     /// elements leaving the sensor (first non-in-pixel tensor)
     pub sensor_output_elems: u64,

@@ -19,7 +19,7 @@ pub enum Integration {
 }
 
 impl Integration {
-    /// Interconnect pitch [µm] — one vertical connection per column line.
+    /// Interconnect pitch \[µm\] — one vertical connection per column line.
     pub fn pad_pitch_um(self) -> f64 {
         match self {
             Integration::HybridBond => 1.0, // ref 22: sub-µm demonstrated
@@ -32,7 +32,7 @@ impl Integration {
 /// Geometry of the two dies.
 #[derive(Clone, Copy, Debug)]
 pub struct AreaModel {
-    /// sensor pixel pitch [µm] (state-of-the-art CIS: 0.8 - 2.0)
+    /// sensor pixel pitch \[µm\] (state-of-the-art CIS: 0.8 - 2.0)
     pub pixel_pitch_um: f64,
     /// logic node's standard-cell transistor footprint [µm^2] including
     /// local wiring (22nm: ~0.1 µm^2; 7nm: ~0.03)
@@ -75,7 +75,7 @@ impl AreaModel {
     }
 
     /// Max output channels that fit (the area-side bound on c_o —
-    /// Section 4.2's "decreasing number of channels ... improv[es] area").
+    /// Section 4.2's "decreasing number of channels ... improv\[es\] area").
     pub fn max_channels(&self) -> usize {
         let mut c = 0usize;
         while self.fits(c + 1) {

@@ -1,0 +1,528 @@
+//! `NativeBackend` — a deterministic, integer-domain MobileNetV2-style
+//! classifier backend that consumes the fleet's quantized ADC codes
+//! directly (paper's sensor → SoC split, P2M arXiv:2203.04737; the
+//! multi-frame serving pressure on this stage is P2M-DeTrack,
+//! arXiv:2205.14285).
+//!
+//! The P2M stem runs *inside the pixel array*; everything after it —
+//! the inverted-residual stack, the head conv, global pooling and the
+//! classifier FC — is the digital backend this module executes in pure
+//! rust, derived layer-by-layer from the same
+//! [`ArchConfig::repo_p2m`] descriptors that drive the analytic
+//! MAdds/energy models, so [`NativeModel::macs_per_frame`] agrees
+//! exactly with [`crate::energy::PipelineModel::from_arch`]'s SoC MAdd
+//! count (pinned by a test below).
+//!
+//! # Integer domain, dequant-free
+//!
+//! The wire carries `n_bits`-wide ADC codes
+//! ([`crate::sensor::QuantizedFrame`]).  This backend never
+//! dequantises: codes are widened to `i32`, normalised onto one 8-bit
+//! ladder, and every layer is an exact integer computation —
+//!
+//! * 1×1 layers (expand / project / head / FC) run through the blocked
+//!   integer GEMM [`crate::util::linalg::matmul_i32`] (the input's
+//!   row-major `(h·w) × c` layout *is* the GEMM operand, no im2col);
+//! * 3×3 depthwise layers use a direct SAME-padded kernel;
+//! * global average pooling is an exact `i64` sum with one integer
+//!   divide; the FC produces `i64` logits and the argmax (lowest index
+//!   wins ties) is the predicted label.
+//!
+//! After each conv layer the accumulator is requantised back onto the
+//! 8-bit activation ladder by a per-layer power-of-two shift with a
+//! `clamp(·, 0, 255)` ReLU — all integer, so outputs are bit-exact
+//! across platforms, runs, batch groupings and worker counts.  Weights
+//! are deterministic synthetic integers in `[-W_MAX, W_MAX]` (seeded
+//! from the architecture alone): like
+//! [`crate::coordinator::MeanThresholdClassifier`], accuracy is not the
+//! point — the point is an honest backend *workload* (the real MAdds of
+//! Table 2's custom model) with reproducible outputs, so fleet digests
+//! and pool-reassembly invariants can be asserted bit-for-bit.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::pipeline::{BatchClassifier, WirePayload};
+use crate::model::arch::{ArchConfig, LayerSpec, Stem};
+use crate::sensor::QuantizedFrame;
+use crate::util::linalg;
+use crate::util::rng::Rng;
+
+/// Synthetic weight magnitude bound (weights are drawn in
+/// `[-W_MAX, W_MAX]`); kept small so `K · 255 · W_MAX` accumulations
+/// stay far inside `i32` for every layer of the repo architectures.
+const W_MAX: i64 = 4;
+
+/// The activation ladder every layer requantises back onto
+/// (`0..=CODE_MAX`, i.e. 8-bit unsigned codes).
+const CODE_MAX: i32 = 255;
+
+/// The P2M stem kernel/stride (non-overlapping 5×5): a stem output of
+/// `h × h` implies a `5h × 5h` sensor.
+const STEM_K: usize = 5;
+
+/// One compiled integer backend: the SoC layers of
+/// [`ArchConfig::repo_p2m`] for one stem-output shape, with
+/// deterministic synthetic weights and per-layer requantisation shifts.
+///
+/// Immutable and `Arc`-shareable — like the frontend's
+/// [`crate::frontend::FramePlan`], one model is compiled per distinct
+/// shape and shared by every worker of a backend pool.
+pub struct NativeModel {
+    /// the architecture this backend realises (stem included, for
+    /// reference/analytics)
+    pub arch: ArchConfig,
+    /// stem-output shape this model consumes (h, w, c)
+    pub in_dims: (usize, usize, usize),
+    /// SoC layers in execution order (the `in_pixel` stem excluded)
+    layers: Vec<LayerSpec>,
+    /// per-layer integer weights (layout per op kind, see `forward`)
+    weights: Vec<Vec<i32>>,
+    /// per-layer right-shift requantising the accumulator back onto the
+    /// 8-bit activation ladder (unused for the FC, which emits logits)
+    shifts: Vec<u32>,
+}
+
+/// Requantisation shift for a layer accumulating `k_eff` products:
+/// random ±`W_MAX` weights against ladder-scale activations make the
+/// accumulator a zero-mean random walk with σ ≈ √`k_eff`·rms(w)·rms(a),
+/// so dividing by ≈ √`k_eff` keeps the post-ReLU codes spread over the
+/// `0..=CODE_MAX` ladder layer after layer.  The power-of-two
+/// granularity errs toward *mild growth*, which saturates through the
+/// deterministic clamp — strictly better than the alternative rounding,
+/// which would decay every activation to zero across the 14-layer
+/// stack.
+fn shift_for(k_eff: usize) -> u32 {
+    let target = ((k_eff as f64).sqrt().ceil() as u64).max(2);
+    // ceil(log2(target))
+    u64::BITS - (target - 1).leading_zeros()
+}
+
+/// One accumulator back onto the activation ladder: arithmetic shift,
+/// then the ReLU clamp.
+#[inline]
+fn requant(acc: i32, shift: u32) -> i32 {
+    (acc >> shift).clamp(0, CODE_MAX)
+}
+
+impl NativeModel {
+    /// Compile the backend for a `h × w × c` stem output (`h == w`,
+    /// the P2M stem's square non-overlapping geometry): the
+    /// [`ArchConfig::repo_p2m`] stack at input resolution `5h`, with
+    /// the stem channel count overridden to `c` when it differs from
+    /// the descriptor default.  Weights are a pure function of the
+    /// architecture (seeded `0xB47E`), mirroring one trained network
+    /// deployed across a fleet.
+    pub fn for_stem_output(h: usize, w: usize, c: usize) -> Result<Arc<Self>> {
+        if h == 0 || w == 0 || c == 0 {
+            bail!("native backend: degenerate stem output {h}x{w}x{c}");
+        }
+        if h != w {
+            bail!("native backend: stem output must be square, got {h}x{w}");
+        }
+        let mut arch = ArchConfig::repo_p2m(h * STEM_K);
+        if let Stem::P2m { k, .. } = arch.stem {
+            arch.stem = Stem::P2m { k, c_o: c };
+        }
+        let all = arch.layers();
+        let stem = &all[0];
+        if !stem.in_pixel || (stem.h_out, stem.w_out, stem.c_out) != (h, w, c) {
+            bail!(
+                "native backend: arch stem emits {}x{}x{}, payload is {h}x{w}x{c}",
+                stem.h_out,
+                stem.w_out,
+                stem.c_out
+            );
+        }
+        let layers: Vec<LayerSpec> = all.into_iter().filter(|l| !l.in_pixel).collect();
+
+        let mut rng = Rng::seed(0xB47E);
+        let mut weights = Vec::with_capacity(layers.len());
+        let mut shifts = Vec::with_capacity(layers.len());
+        for l in &layers {
+            let per_out = l.k * l.k * (l.c_in / l.groups);
+            let n_w = per_out * l.c_out;
+            weights.push(
+                (0..n_w)
+                    .map(|_| rng.i64(-W_MAX, W_MAX + 1) as i32)
+                    .collect::<Vec<i32>>(),
+            );
+            shifts.push(shift_for(per_out));
+        }
+        Ok(Arc::new(NativeModel { arch, in_dims: (h, w, c), layers, weights, shifts }))
+    }
+
+    /// SoC multiply-accumulates this backend performs per frame — by
+    /// construction identical to the Eq. 5 sum over the architecture's
+    /// non-in-pixel layers (the `PipelineModel::from_arch` workload).
+    pub fn macs_per_frame(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::n_mac).sum()
+    }
+
+    /// SoC parameter reads per frame (Eq. 6 over the same layers).
+    pub fn reads_per_frame(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::n_read).sum()
+    }
+
+    /// Number of classes the FC emits.
+    pub fn num_classes(&self) -> usize {
+        self.arch.num_classes
+    }
+
+    /// Run the integer forward pass over one frame of codes (row-major
+    /// `(h, w, c)`, already on the 8-bit ladder) and return the `i64`
+    /// logits.  `cur`/`nxt` are caller scratch reused across frames.
+    pub fn logits_into(
+        &self,
+        codes: &[i32],
+        cur: &mut Vec<i32>,
+        nxt: &mut Vec<i32>,
+    ) -> Result<Vec<i64>> {
+        let (h, w, c) = self.in_dims;
+        if codes.len() != h * w * c {
+            bail!("native backend: {} codes for a {h}x{w}x{c} stem output", codes.len());
+        }
+        cur.clear();
+        cur.extend_from_slice(codes);
+        for (li, l) in self.layers.iter().enumerate() {
+            let wts = &self.weights[li];
+            let shift = self.shifts[li];
+            if l.name == "fc" {
+                // Global average pool (exact i64 sum, integer divide)
+                // intervenes between the head conv and the FC — find the
+                // pooled per-channel codes, then the logits.
+                let spatial = cur.len() / l.c_in;
+                let mut pooled = vec![0i32; l.c_in];
+                for (ch, p) in pooled.iter_mut().enumerate() {
+                    let mut sum = 0i64;
+                    for px in 0..spatial {
+                        sum += cur[px * l.c_in + ch] as i64;
+                    }
+                    *p = (sum / spatial as i64) as i32;
+                }
+                let mut logits = vec![0i64; l.c_out];
+                for (j, logit) in logits.iter_mut().enumerate() {
+                    let mut acc = 0i64;
+                    for (ch, &p) in pooled.iter().enumerate() {
+                        acc += p as i64 * wts[ch * l.c_out + j] as i64;
+                    }
+                    *logit = acc;
+                }
+                return Ok(logits);
+            } else if l.k == 1 && l.groups == 1 {
+                // Pointwise (expand / project / head): the row-major
+                // (h·w) × c_in activation matrix against the c_in × c_out
+                // weight matrix, through the blocked integer GEMM.
+                let m = l.h_in * l.w_in;
+                nxt.clear();
+                nxt.resize(m * l.c_out, 0);
+                linalg::matmul_i32(m, l.c_in, l.c_out, cur, wts, nxt);
+                for v in nxt.iter_mut() {
+                    *v = requant(*v, shift);
+                }
+            } else if l.groups == l.c_in && l.c_out == l.c_in {
+                // Depthwise k×k, SAME padding, per-channel taps.
+                depthwise(l, wts, shift, cur, nxt);
+            } else {
+                bail!("native backend: unsupported layer kind '{}'", l.name);
+            }
+            std::mem::swap(cur, nxt);
+        }
+        bail!("native backend: architecture has no fc layer");
+    }
+}
+
+/// Direct SAME-padded depthwise convolution + requantisation:
+/// `out[(oy,ox,ch)] = requant(Σ_taps in[...] · w[ch,tap])` with
+/// zero-padding chosen so `h_out = ceil(h_in / stride)` (TF-style SAME:
+/// the smaller half of the padding leads).
+fn depthwise(l: &LayerSpec, wts: &[i32], shift: u32, input: &[i32], out: &mut Vec<i32>) {
+    let (h, w, c, k, s) = (l.h_in, l.w_in, l.c_in, l.k, l.stride);
+    let (ho, wo) = (l.h_out, l.w_out);
+    let pad = |o: usize, i: usize| ((o - 1) * s + k).saturating_sub(i) / 2;
+    let (pt, pl) = (pad(ho, h), pad(wo, w));
+    out.clear();
+    out.resize(ho * wo * c, 0);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = (oy * wo + ox) * c;
+            for ky in 0..k {
+                let iy = (oy * s + ky) as isize - pt as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - pl as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let in_base = (iy as usize * w + ix as usize) * c;
+                    let tap = ky * k + kx;
+                    for ch in 0..c {
+                        out[base + ch] += input[in_base + ch] * wts[ch * k * k + tap];
+                    }
+                }
+            }
+            for ch in 0..c {
+                out[base + ch] = requant(out[base + ch], shift);
+            }
+        }
+    }
+}
+
+/// The native backend as a serving classifier: per-shape model cache +
+/// per-instance scratch, implementing
+/// [`crate::coordinator::BatchClassifier`].
+///
+/// `Send + Clone`, so a [`crate::coordinator::BackendPool`] can hand an
+/// instance to every worker thread; classification is per-frame and
+/// stateless, so predictions are identical for any batch regrouping and
+/// any worker count (pinned by the pool tests).  Models are compiled
+/// lazily per distinct stem-output shape — a heterogeneous fleet gets
+/// one backend model per sensor design, mirroring the frontend's
+/// [`crate::coordinator::PlanBank`].
+///
+/// Ingest is dequant-free for quantized payloads: codes are widened to
+/// `i32` and normalised onto the 8-bit ladder (`<< (8 - bits)` or
+/// `>> (bits - 8)`), so e.g. a 4-bit camera and an 8-bit camera land in
+/// one activation scale.  Dense f32 payloads (debug/legacy wire) are
+/// quantised at ingest through the same deterministic rounding step the
+/// wire format uses ([`crate::util::linalg::quantize_codes`], fixed
+/// full-scale [`NativeBackend::DENSE_INGEST_HI`]).
+#[derive(Clone)]
+pub struct NativeBackend {
+    models: BTreeMap<(usize, usize, usize), Arc<NativeModel>>,
+    codes: Vec<i32>,
+    buf_a: Vec<i32>,
+    buf_b: Vec<i32>,
+}
+
+impl NativeBackend {
+    /// Full-scale assumed when quantising a dense f32 payload at ingest:
+    /// the P2M receptive-field column full scale (`P = 5·5·3`), the same
+    /// ladder the default ADC realises.
+    pub const DENSE_INGEST_HI: f64 = 75.0;
+
+    /// Empty backend; models compile lazily on first use per shape.
+    pub fn new() -> Self {
+        NativeBackend {
+            models: BTreeMap::new(),
+            codes: Vec::new(),
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+        }
+    }
+
+    /// The compiled model for a stem-output shape (compiling on first
+    /// use).
+    pub fn model_for(&mut self, h: usize, w: usize, c: usize) -> Result<Arc<NativeModel>> {
+        if let Some(m) = self.models.get(&(h, w, c)) {
+            return Ok(m.clone());
+        }
+        let m = NativeModel::for_stem_output(h, w, c)?;
+        self.models.insert((h, w, c), m.clone());
+        Ok(m)
+    }
+
+    /// Distinct backend models compiled so far.
+    pub fn models_compiled(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Ingest one payload into `self.codes` (8-bit-ladder i32 codes).
+    fn ingest(&mut self, payload: &WirePayload) {
+        self.codes.clear();
+        match payload {
+            WirePayload::Quantized(q) => ingest_quantized(q, &mut self.codes),
+            WirePayload::Dense(img) => {
+                self.codes.resize(img.len(), 0);
+                let scale = Self::DENSE_INGEST_HI / CODE_MAX as f64;
+                linalg::quantize_codes(&img.data, scale, 0, CODE_MAX as u32, |i, code| {
+                    self.codes[i] = code as i32;
+                });
+            }
+        }
+    }
+
+    /// Integer logits for one wire payload (the classify primitive,
+    /// exposed for tests and analysis).
+    pub fn logits(&mut self, payload: &WirePayload) -> Result<Vec<i64>> {
+        let (h, w, c) = payload.dims();
+        let model = self.model_for(h, w, c)?;
+        self.ingest(payload);
+        // Split the scratch borrows away from `self.codes`.
+        let NativeBackend { codes, buf_a, buf_b, .. } = self;
+        model.logits_into(codes, buf_a, buf_b)
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Widen a quantized frame's codes to `i32` on the common 8-bit ladder.
+fn ingest_quantized(q: &QuantizedFrame, out: &mut Vec<i32>) {
+    let bits = q.spec.bits;
+    out.reserve(q.len());
+    for i in 0..q.len() {
+        let code = q.code(i) as i32;
+        out.push(if bits <= 8 { code << (8 - bits) } else { code >> (bits - 8) });
+    }
+}
+
+impl BatchClassifier for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn classify(&mut self, batch: &[&WirePayload]) -> Result<Vec<u8>> {
+        let mut preds = Vec::with_capacity(batch.len());
+        for payload in batch {
+            let logits = self.logits(payload)?;
+            // Argmax with the lowest index winning ties — deterministic
+            // for the all-zero logits a saturated frame can produce.
+            let mut best = 0usize;
+            for (j, &v) in logits.iter().enumerate() {
+                if v > logits[best] {
+                    best = j;
+                }
+            }
+            preds.push(best as u8);
+        }
+        Ok(preds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::{PipelineKind, PipelineModel};
+    use crate::sensor::{Image, QuantSpec};
+
+    fn quant_payload(h: usize, w: usize, c: usize, bits: u32, seed: u64) -> WirePayload {
+        let spec = QuantSpec::unipolar(75.0, bits);
+        let mut q = QuantizedFrame::zeros(h, w, c, spec);
+        let mut rng = Rng::seed(seed);
+        for i in 0..q.len() {
+            let code = rng.usize(0, spec.code_max() as usize + 1) as u32;
+            match &mut q.data {
+                crate::sensor::QuantData::U8(v) => v[i] = code as u8,
+                crate::sensor::QuantData::U16(v) => v[i] = code as u16,
+            }
+        }
+        WirePayload::Quantized(q)
+    }
+
+    #[test]
+    fn macs_agree_with_the_analytic_pipeline_model() {
+        // The backend executes exactly the SoC workload the Eq. 4-7
+        // models price: same layer specs, same MAdd/read counts.
+        for res in [20usize, 40, 80] {
+            let model = NativeModel::for_stem_output(res / 5, res / 5, 8).unwrap();
+            let pm = PipelineModel::from_arch(PipelineKind::P2m, &ArchConfig::repo_p2m(res));
+            assert_eq!(model.macs_per_frame(), pm.n_mac, "res {res}");
+            assert_eq!(model.reads_per_frame(), pm.n_read, "res {res}");
+        }
+    }
+
+    #[test]
+    fn model_shapes_chain_and_end_in_two_classes() {
+        let model = NativeModel::for_stem_output(16, 16, 8).unwrap();
+        assert_eq!(model.num_classes(), 2);
+        assert_eq!(model.in_dims, (16, 16, 8));
+        // Degenerate / non-square stem outputs are rejected.
+        assert!(NativeModel::for_stem_output(4, 8, 8).is_err());
+        assert!(NativeModel::for_stem_output(0, 0, 8).is_err());
+    }
+
+    #[test]
+    fn logits_are_deterministic_across_instances_and_calls() {
+        let payload = quant_payload(4, 4, 8, 8, 3);
+        let mut a = NativeBackend::new();
+        let mut b = NativeBackend::new();
+        let la1 = a.logits(&payload).unwrap();
+        let la2 = a.logits(&payload).unwrap();
+        let lb = b.logits(&payload).unwrap();
+        assert_eq!(la1, la2);
+        assert_eq!(la1, lb);
+        assert_eq!(la1.len(), 2);
+        // Different content must be able to move the logits.
+        let other = quant_payload(4, 4, 8, 8, 4);
+        assert_ne!(a.logits(&other).unwrap(), la1, "logits blind to input");
+    }
+
+    #[test]
+    fn sub_byte_codes_normalise_onto_the_8bit_ladder() {
+        // A 4-bit frame with code x must ingest exactly like an 8-bit
+        // frame with code x << 4: identical logits.
+        let spec4 = QuantSpec::unipolar(75.0, 4);
+        let spec8 = QuantSpec::unipolar(75.0, 8);
+        let mut q4 = QuantizedFrame::zeros(4, 4, 8, spec4);
+        let mut q8 = QuantizedFrame::zeros(4, 4, 8, spec8);
+        let mut rng = Rng::seed(11);
+        for i in 0..q4.len() {
+            let code = rng.usize(0, 16) as u8;
+            match (&mut q4.data, &mut q8.data) {
+                (crate::sensor::QuantData::U8(a), crate::sensor::QuantData::U8(b)) => {
+                    a[i] = code;
+                    b[i] = code << 4;
+                }
+                _ => unreachable!(),
+            }
+        }
+        let mut backend = NativeBackend::new();
+        assert_eq!(
+            backend.logits(&WirePayload::Quantized(q4)).unwrap(),
+            backend.logits(&WirePayload::Quantized(q8)).unwrap()
+        );
+    }
+
+    #[test]
+    fn dense_ingest_is_deterministic_and_shape_cached() {
+        let img = Image::from_vec(4, 4, 8, (0..128).map(|i| (i % 75) as f32).collect());
+        let mut backend = NativeBackend::new();
+        let a = backend.logits(&WirePayload::Dense(img.clone())).unwrap();
+        let b = backend.logits(&WirePayload::Dense(img)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(backend.models_compiled(), 1);
+        // A second shape compiles a second model; the first is reused.
+        let _ = backend.logits(&quant_payload(8, 8, 8, 8, 1)).unwrap();
+        assert_eq!(backend.models_compiled(), 2);
+    }
+
+    #[test]
+    fn classify_is_per_frame_and_ties_break_low() {
+        let payloads: Vec<WirePayload> =
+            (0..6).map(|s| quant_payload(4, 4, 8, 8, s)).collect();
+        let refs: Vec<&WirePayload> = payloads.iter().collect();
+        let mut backend = NativeBackend::new();
+        let together = backend.classify(&refs).unwrap();
+        assert_eq!(together.len(), 6);
+        let single: Vec<u8> = refs
+            .iter()
+            .map(|p| backend.classify(&[*p]).unwrap()[0])
+            .collect();
+        assert_eq!(together, single, "batch grouping must not change predictions");
+        // All-zero frame -> all-zero activations -> tied logits -> class 0.
+        let zero =
+            WirePayload::Quantized(QuantizedFrame::zeros(4, 4, 8, QuantSpec::unipolar(75.0, 8)));
+        assert_eq!(backend.classify(&[&zero]).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn shift_for_is_monotone_and_bounded() {
+        assert_eq!(shift_for(9), 2, "3x3 depthwise: ceil(log2(ceil(sqrt(9)))) = 2");
+        assert_eq!(shift_for(75), 4, "ceil(sqrt(75)) = 9 -> ceil(log2) = 4");
+        let mut last = 0;
+        for k in [1usize, 8, 72, 75, 864, 1728] {
+            let s = shift_for(k);
+            assert!(s >= last, "shift must not shrink with k_eff");
+            assert!(s < 16, "shift {s} would zero every activation");
+            last = s;
+        }
+    }
+}

@@ -1,10 +1,13 @@
 //! Architecture descriptors + analytic metrics (MAdds, peak memory —
-//! Table 2; layer specs feeding the Eq. 7 delay model).
+//! Table 2; layer specs feeding the Eq. 7 delay model), and the native
+//! integer backend executing those layers ([`backend`]).
 
 pub mod analysis;
 pub mod arch;
 pub mod area;
+pub mod backend;
 
 pub use analysis::{analyse, analyse_layers, table2_rows, ModelMetrics, Table2Row};
 pub use arch::{ArchConfig, LayerSpec, Stem};
 pub use area::{AreaModel, Integration};
+pub use backend::{NativeBackend, NativeModel};

@@ -179,48 +179,84 @@ fn bench_rows(doc: &Json) -> Result<Vec<(String, f64, String)>, String> {
         .collect()
 }
 
-/// The CI bench-regression gate: compare a fresh `BENCH_<group>.json`
-/// against the committed baseline and report every **throughput** row
-/// (`unit == "frames_per_s"`) that regressed by more than `tol`
-/// (fraction of the baseline, e.g. 0.25 = fail below 75%), or that
-/// disappeared from the fresh results (a silently dropped row would
-/// blind the gate).  Rows *added* since the baseline pass — they become
-/// gated once the refreshed file is committed.
-///
-/// Returns the list of human-readable failures (empty = gate passes) or
-/// an error when either document does not parse as `p2m-bench-v1`.
+/// One gated throughput row of a baseline-vs-fresh comparison (see
+/// [`gate_rows`]): everything a human-readable verdict or a CI summary
+/// table needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateRow {
+    /// row name (shared by baseline and fresh documents)
+    pub name: String,
+    /// committed baseline throughput [frames/s]
+    pub baseline: f64,
+    /// fresh throughput, `None` when the row vanished from the fresh
+    /// results (itself a gate failure — a silently dropped row would
+    /// blind the gate)
+    pub current: Option<f64>,
+    /// the gate floor `baseline * (1 - tol)`
+    pub floor: f64,
+    /// true when this row fails the gate (regressed below the floor, or
+    /// missing from the fresh results)
+    pub regressed: bool,
+}
+
+/// The CI bench-regression gate, row by row: compare a fresh
+/// `BENCH_<group>.json` against the committed baseline over every
+/// **throughput** row (`unit == "frames_per_s"`) with tolerance `tol`
+/// (fraction of the baseline, e.g. 0.25 = fail below 75%).  Rows
+/// *added* since the baseline are not reported — they become gated once
+/// the refreshed file is committed.  Errors when either document does
+/// not parse as `p2m-bench-v1`.
+pub fn gate_rows(
+    baseline_json: &str,
+    fresh_json: &str,
+    tol: f64,
+) -> Result<Vec<GateRow>, String> {
+    let baseline = Json::parse(baseline_json).map_err(|e| format!("baseline: {e}"))?;
+    let fresh = Json::parse(fresh_json).map_err(|e| format!("fresh: {e}"))?;
+    let base_rows = bench_rows(&baseline)?;
+    let fresh_rows = bench_rows(&fresh)?;
+    Ok(base_rows
+        .iter()
+        .filter(|row| row.2 == "frames_per_s")
+        .map(|row| {
+            let (name, base_val) = (&row.0, row.1);
+            let current = fresh_rows.iter().find(|f| &f.0 == name).map(|f| f.1);
+            let floor = base_val * (1.0 - tol);
+            let regressed = match current {
+                None => true,
+                Some(v) => v < floor,
+            };
+            GateRow { name: name.clone(), baseline: base_val, current, floor, regressed }
+        })
+        .collect())
+}
+
+/// [`gate_rows`] reduced to the list of human-readable failures (empty
+/// = gate passes) — what `bench_gate` prints and exits on.
 pub fn gate_regressions(
     baseline_json: &str,
     fresh_json: &str,
     tol: f64,
 ) -> Result<Vec<String>, String> {
-    let baseline = Json::parse(baseline_json).map_err(|e| format!("baseline: {e}"))?;
-    let fresh = Json::parse(fresh_json).map_err(|e| format!("fresh: {e}"))?;
-    let base_rows = bench_rows(&baseline)?;
-    let fresh_rows = bench_rows(&fresh)?;
-    let mut failures = Vec::new();
-    for (name, base_val, unit) in &base_rows {
-        if unit != "frames_per_s" {
-            continue;
-        }
-        match fresh_rows.iter().find(|(n, _, _)| n == name) {
-            None => failures.push(format!(
-                "{name}: throughput row missing from fresh results \
-                 (baseline {base_val:.1} frames/s)"
-            )),
-            Some((_, fresh_val, _)) => {
-                let floor = base_val * (1.0 - tol);
-                if *fresh_val < floor {
-                    failures.push(format!(
-                        "{name}: {fresh_val:.1} frames/s is below the gate floor \
-                         {floor:.1} (baseline {base_val:.1}, tolerance {:.0}%)",
-                        tol * 100.0
-                    ));
-                }
-            }
-        }
-    }
-    Ok(failures)
+    Ok(gate_rows(baseline_json, fresh_json, tol)?
+        .iter()
+        .filter(|r| r.regressed)
+        .map(|r| match r.current {
+            None => format!(
+                "{}: throughput row missing from fresh results \
+                 (baseline {:.1} frames/s)",
+                r.name, r.baseline
+            ),
+            Some(fresh_val) => format!(
+                "{}: {fresh_val:.1} frames/s is below the gate floor \
+                 {:.1} (baseline {:.1}, tolerance {:.0}%)",
+                r.name,
+                r.floor,
+                r.baseline,
+                tol * 100.0
+            ),
+        })
+        .collect())
 }
 
 /// Format nanoseconds human-readably.
@@ -307,6 +343,29 @@ mod tests {
         let failures = gate_regressions(&base, &fresh, 0.25).unwrap();
         assert_eq!(failures.len(), 1);
         assert!(failures[0].contains("missing"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_rows_expose_floor_current_and_verdict() {
+        let base = report_json(&[
+            ("a", 100.0, "frames_per_s"),
+            ("gone", 40.0, "frames_per_s"),
+            ("r", 2.0, "ratio"),
+        ]);
+        let fresh = report_json(&[("a", 80.0, "frames_per_s"), ("new", 9.0, "frames_per_s")]);
+        let rows = gate_rows(&base, &fresh, 0.25).unwrap();
+        // Only baseline throughput rows appear ("r" is not gated, "new"
+        // is not yet committed).
+        assert_eq!(rows.len(), 2);
+        let a = &rows[0];
+        assert_eq!((a.name.as_str(), a.baseline, a.current), ("a", 100.0, Some(80.0)));
+        assert!((a.floor - 75.0).abs() < 1e-9);
+        assert!(!a.regressed);
+        let gone = &rows[1];
+        assert_eq!(gone.current, None);
+        assert!(gone.regressed);
+        // The string form stays consistent with the rows.
+        assert_eq!(gate_regressions(&base, &fresh, 0.25).unwrap().len(), 1);
     }
 
     #[test]

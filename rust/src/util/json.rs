@@ -105,7 +105,7 @@ impl Json {
         }
     }
 
-    /// Array of numbers -> Vec<f64>.
+    /// Array of numbers -> `Vec<f64>`.
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr()?.iter().map(Json::as_f64).collect()
     }

@@ -49,6 +49,40 @@ pub fn matmul(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64])
     }
 }
 
+/// Integer sibling of [`matmul`] for the native backend's quantized
+/// layers: `C[M×N] = A[M×K] · B[K×N]` over `i32` codes/weights with
+/// plain `i32` accumulation — exact (no rounding), so the result is
+/// independent of blocking by construction.  Same KC-panelled axpy loop
+/// order as the f64 kernel: the streamed `B` panel stays L1/L2-resident
+/// across the `M` rows and the inner loop is a unit-stride
+/// multiply-accumulate the compiler autovectorises.
+///
+/// Callers must size operands so `K · max|a| · max|b|` stays well inside
+/// `i32` (the native backend clamps activations to one code ladder per
+/// layer exactly for this).  Shapes are asserted like [`matmul`].
+pub fn matmul_i32(m: usize, k: usize, n: usize, a: &[i32], b: &[i32], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k, "A is not m x k");
+    assert_eq!(b.len(), k * n, "B is not k x n");
+    assert_eq!(c.len(), m * n, "C is not m x n");
+    c.fill(0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let b_panel = &b[k0 * n..k1 * n];
+        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+            for (&aik, b_row) in a_row[k0..k1].iter().zip(b_panel.chunks_exact(n)) {
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
 /// Deterministic scalar quantiser behind the wire format
 /// ([`crate::sensor::QuantizedFrame`]): for each value,
 ///
@@ -165,6 +199,44 @@ mod tests {
     fn shape_mismatch_panics() {
         let mut c = [0.0; 1];
         matmul(1, 2, 1, &[1.0], &[1.0, 1.0], &mut c);
+    }
+
+    #[test]
+    fn matmul_i32_known_2x2_and_empty() {
+        let a = [1, 2, 3, 4];
+        let b = [5, 6, 7, 8];
+        let mut c = [0i32; 4];
+        matmul_i32(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [19, 22, 43, 50]);
+        let mut empty: [i32; 0] = [];
+        matmul_i32(0, 3, 0, &[], &[], &mut empty);
+    }
+
+    #[test]
+    fn matmul_i32_matches_naive_across_panel_boundary() {
+        let mut rng = Rng::seed(7);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 7, 5), (2, KC + 9, 3), (5, 384, 2)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.i64(-4, 5) as i32).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.i64(0, 256) as i32).collect();
+            let mut c = vec![0i32; m * n];
+            matmul_i32(m, k, n, &a, &b, &mut c);
+            let mut naive = vec![0i32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    for j in 0..n {
+                        naive[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                    }
+                }
+            }
+            assert_eq!(c, naive, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "B is not k x n")]
+    fn matmul_i32_shape_mismatch_panics() {
+        let mut c = [0i32; 1];
+        matmul_i32(1, 1, 1, &[1], &[1, 2], &mut c);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Integration: the pooled classify stage + native integer backend —
+//! conservation (frames in == predictions out) through the pool,
+//! deterministic outcomes across 1/2/4 workers under churn, scenario
+//! digests invariant to pooling, and the `NativeBackend`
+//! batch-regrouping property.  Needs no artifacts or PJRT.
+
+use p2m::coordinator::{
+    run_fleet, run_fleet_pooled, run_scenario, run_scenario_pooled, BatchClassifier,
+    FleetConfig, FleetStats, Metrics, Scenario, WireFormat,
+};
+use p2m::coordinator::{synthetic_fleet_sensors, SensorCompute, WirePayload};
+use p2m::frontend::Fidelity;
+use p2m::model::NativeBackend;
+use p2m::sensor::{Camera, Split};
+
+/// The deterministic per-camera outcome tuple (timing excluded).
+fn outcomes(stats: &FleetStats) -> Vec<(u64, u64, u64, u64)> {
+    stats
+        .per_camera
+        .iter()
+        .map(|st| (st.frames_captured, st.frames_classified, st.bytes_from_sensor, st.correct))
+        .collect()
+}
+
+fn native_fleet(workers: usize, cfg: &FleetConfig) -> FleetStats {
+    let sensors =
+        synthetic_fleet_sensors(20, Fidelity::Functional, cfg.n_cameras, WireFormat::Quantized)
+            .unwrap();
+    if workers <= 1 {
+        let mut clf = NativeBackend::new();
+        run_fleet(&mut clf, sensors, cfg, &Metrics::new()).unwrap()
+    } else {
+        run_fleet_pooled(workers, |_| NativeBackend::new(), sensors, cfg, &Metrics::new())
+            .unwrap()
+    }
+}
+
+#[test]
+fn pooled_native_fleet_conserves_frames_for_every_worker_count() {
+    let cfg = FleetConfig {
+        n_cameras: 4,
+        frames_per_camera: 8,
+        batch: 4,
+        base_seed: 21,
+        ..FleetConfig::default()
+    };
+    for workers in [1usize, 2, 4] {
+        let stats = native_fleet(workers, &cfg);
+        // Conservation: every captured frame came out as a prediction.
+        assert_eq!(stats.aggregate.frames_captured, 32, "workers {workers}");
+        assert_eq!(stats.aggregate.frames_classified, 32, "workers {workers}");
+        assert_eq!(stats.aggregate.frames_dropped, 0, "workers {workers}");
+        for st in &stats.per_camera {
+            assert_eq!(st.frames_classified, st.frames_captured, "workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn native_fleet_outcomes_are_identical_across_worker_counts() {
+    let cfg = FleetConfig {
+        n_cameras: 3,
+        frames_per_camera: 6,
+        batch: 4,
+        base_seed: 5,
+        ..FleetConfig::default()
+    };
+    let direct = native_fleet(1, &cfg);
+    for workers in [2usize, 4] {
+        let pooled = native_fleet(workers, &cfg);
+        assert_eq!(
+            outcomes(&direct),
+            outcomes(&pooled),
+            "worker count {workers} changed per-camera outcomes"
+        );
+    }
+}
+
+#[test]
+fn churn_scenario_digest_is_invariant_to_pooling_and_worker_count() {
+    // The acceptance bar: scenario digests (which fold per-camera
+    // classification outcomes) must be bit-identical between the direct
+    // path and the pool at any worker count, with the native backend
+    // doing real integer-MobileNetV2 work per frame.
+    let scenario = Scenario::canned("churn", 17).unwrap();
+    let direct = {
+        let mut clf = NativeBackend::new();
+        run_scenario(&mut clf, &scenario, &Metrics::new()).unwrap()
+    };
+    for workers in [1usize, 2, 4] {
+        let pooled = run_scenario_pooled(
+            workers,
+            |_| NativeBackend::new(),
+            &scenario,
+            &Metrics::new(),
+        )
+        .unwrap();
+        assert_eq!(
+            direct.digest(),
+            pooled.digest(),
+            "digest moved at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn crash_storm_survives_pool_reassembly_with_conservation() {
+    // The CI smoke's property as a test: producer crashes + restarts on
+    // the producer side, pooled classification on the consumer side —
+    // every accepted frame still becomes exactly one prediction.
+    let scenario = Scenario::canned("crash-storm", 3).unwrap();
+    let report = run_scenario_pooled(
+        4,
+        |_| NativeBackend::new(),
+        &scenario,
+        &Metrics::new(),
+    )
+    .unwrap();
+    assert_eq!(report.aggregate.frames_classified, 60);
+    assert_eq!(report.aggregate.frames_dropped, 0);
+    for cam in &report.per_camera {
+        assert_eq!(cam.stats.frames_classified, cam.stats.frames_captured);
+    }
+    // And it reproduces.
+    let again = run_scenario_pooled(
+        4,
+        |_| NativeBackend::new(),
+        &scenario,
+        &Metrics::new(),
+    )
+    .unwrap();
+    assert_eq!(report.digest(), again.digest());
+}
+
+#[test]
+fn native_backend_outputs_are_invariant_across_batch_regrouping() {
+    // Property: for a stream of real frontend payloads, the native
+    // backend's integer predictions do not depend on how the stream is
+    // cut into batches — singletons, pairs, odd-sized chunks and the
+    // whole stream agree element-wise.
+    let plan = p2m::coordinator::synthetic_frame_plan(20, Fidelity::Functional).unwrap();
+    let mut sensor = SensorCompute::p2m_quantized(plan.clone());
+    let mut camera = Camera::new(plan.cfg.sensor, 99, Split::Test);
+    let payloads: Vec<WirePayload> = (0..12)
+        .map(|_| sensor.run_frame(&camera.capture().image, 1).0)
+        .collect();
+    let refs: Vec<&WirePayload> = payloads.iter().collect();
+
+    let mut backend = NativeBackend::new();
+    let whole = backend.classify(&refs).unwrap();
+    assert_eq!(whole.len(), 12);
+    for chunk_size in [1usize, 2, 3, 5, 7, 12] {
+        let mut regrouped = Vec::new();
+        for chunk in refs.chunks(chunk_size) {
+            regrouped.extend(backend.classify(chunk).unwrap());
+        }
+        assert_eq!(whole, regrouped, "chunk size {chunk_size} changed predictions");
+    }
+    // A fresh backend instance (fresh lazy model compile) agrees too.
+    let mut fresh = NativeBackend::new();
+    assert_eq!(fresh.classify(&refs).unwrap(), whole);
+    assert_eq!(fresh.models_compiled(), 1, "one shape, one compiled model");
+}
+
+#[test]
+fn pooled_threshold_fleet_matches_quantized_dense_parity() {
+    // Dense-vs-quantized parity (the wire format changes bytes, never
+    // decisions) must survive the pooled classify stage.
+    let cfg = FleetConfig {
+        n_cameras: 3,
+        frames_per_camera: 6,
+        batch: 4,
+        base_seed: 11,
+        ..FleetConfig::default()
+    };
+    let run_wire = |wire: WireFormat| {
+        let sensors =
+            synthetic_fleet_sensors(20, Fidelity::Functional, cfg.n_cameras, wire).unwrap();
+        run_fleet_pooled(
+            3,
+            |_| p2m::coordinator::MeanThresholdClassifier::new(0.5),
+            sensors,
+            &cfg,
+            &Metrics::new(),
+        )
+        .unwrap()
+    };
+    let dense = run_wire(WireFormat::Dense);
+    let quant = run_wire(WireFormat::Quantized);
+    for (d, q) in dense.per_camera.iter().zip(&quant.per_camera) {
+        assert_eq!(d.correct, q.correct);
+        assert_eq!(d.frames_classified, q.frames_classified);
+        assert_eq!(d.bytes_from_sensor, 4 * q.bytes_from_sensor);
+    }
+}

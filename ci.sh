@@ -94,6 +94,17 @@ step "fleet scenario smoke (crash-storm, native backend x4 workers)" \
     cargo run --release --locked -q -- fleet --scenario crash-storm --check-digest \
     --backend native --workers 4
 
+# Fleet-scale smoke: the swarm scenario on the fixed producer pool +
+# timer wheel.  --check-digest runs it TWICE and fails unless both runs
+# agree — the 10k-camera determinism gate.  The quick lane smokes 1k
+# cameras; the --bench lane runs the full 10k swarm the bench rows also
+# cover.
+SWARM_CAMERAS=1000
+[[ "$BENCH" -eq 1 ]] && SWARM_CAMERAS=10000
+step "fleet scenario smoke (swarm ${SWARM_CAMERAS}, pool determinism)" \
+    cargo run --release --locked -q -- fleet --scenario swarm \
+    --cameras "$SWARM_CAMERAS" --check-digest
+
 if [[ "$BENCH" -eq 1 ]]; then
     # Preserve the committed baseline before the bench overwrites the
     # worktree copy (prefer git's HEAD version; fall back to the

@@ -16,10 +16,11 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use p2m::coordinator::{
-    baseline_sensor, heterogeneous_fleet_sensors, p2m_sensor_from_bundle, run_fleet,
-    run_fleet_pooled, run_pipeline, synthetic_fleet_sensors, synthetic_frame_plan,
-    Backpressure, BatchPolicy, Batcher, BoundedQueue, CameraSpec, FleetConfig,
-    MeanThresholdClassifier, Metrics, PipelineConfig, RoutePolicy, Router, WireFormat,
+    baseline_sensor, default_pool_workers, heterogeneous_fleet_sensors,
+    p2m_sensor_from_bundle, run_fleet, run_fleet_pooled, run_pipeline, run_scenario,
+    synthetic_fleet_sensors, synthetic_frame_plan, Backpressure, BatchPolicy, Batcher,
+    BoundedQueue, CameraSpec, FleetConfig, MeanThresholdClassifier, Metrics,
+    PipelineConfig, RoutePolicy, Router, Scenario, WireFormat,
 };
 use p2m::frontend::Fidelity;
 use p2m::model::NativeBackend;
@@ -313,6 +314,44 @@ fn main() {
         );
     }
 
+    // --- Swarm scale: 100 / 1k / 10k cameras on the fixed producer
+    // pool.  Single-shot timed runs (like the serving rows above): the
+    // scheduling + routing overhead per frame is what trends here, the
+    // per-frame compute is deliberately tiny (20px cameras).
+    {
+        let pool = default_pool_workers();
+        let run_swarm = |n: usize| -> (f64, u64) {
+            let scenario = Scenario::swarm(n, 0);
+            let metrics = Metrics::new();
+            let mut clf = MeanThresholdClassifier::new(0.5);
+            let t = Instant::now();
+            let r = run_scenario(&mut clf, &scenario, &metrics).unwrap();
+            let fps =
+                r.aggregate.frames_classified as f64 / t.elapsed().as_secs_f64().max(1e-9);
+            (fps, r.aggregate.frames_classified)
+        };
+        // Warm-up at small scale (plan compile, curve-fit surface).
+        run_swarm(16);
+        for (key, n) in
+            [("swarm_100cam", 100usize), ("swarm_1kcam", 1_000), ("swarm_10kcam", 10_000)]
+        {
+            let (fps, frames) = run_swarm(n);
+            println!("{key:<44} -> {fps:.1} frames/s ({frames} frames, pool {pool})");
+            report.row(key, fps, "frames_per_s");
+        }
+        // Peak RSS after the 10k-camera run: the memory-ceiling row the
+        // fixed pool exists to hold down (state scales with cameras,
+        // threads + scratch with workers).  Unit "mb", so the
+        // frames_per_s regression gate never judges it — it is a
+        // trajectory row, diffable across committed baselines.
+        if let Some(mb) = peak_rss_mb() {
+            println!("{:<44} -> {mb:.1} MB (VmHWM)", "swarm_peak_rss");
+            report.row("swarm_peak_rss", mb, "mb");
+        } else {
+            println!("{:<44} -> unavailable (no /proc)", "swarm_peak_rss");
+        }
+    }
+
     // Perf trajectory: machine-readable copy of the always-run rows at
     // the repository root.
     let json_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_pipeline.json");
@@ -349,4 +388,13 @@ fn main() {
             .throughput_fps;
         println!("{:<44} -> {fps:.1} frames/s (end-to-end)", "e2e_baseline_batch8");
     }
+}
+
+/// Peak resident set (VmHWM) of this process in MiB, from
+/// `/proc/self/status`; `None` off Linux.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
 }

@@ -1,7 +1,8 @@
-//! The sharded multi-camera fleet: N capture+frontend producer threads
-//! (one per simulated camera), per-shard bounded links, and a single
-//! consumer that merges the shards through the [`Router`] and the
-//! shape-aware [`ShapedBatcher`] into one shared classifier backend.
+//! The sharded multi-camera fleet: N simulated cameras multiplexed over
+//! a fixed producer pool (capture + frontend), per-shard bounded links,
+//! and a single consumer that merges the shards through the [`Router`]
+//! and the shape-aware [`ShapedBatcher`] into one shared classifier
+//! backend.
 //!
 //! This is the serving topology the paper's TinyML setting implies —
 //! many cheap P2M cameras, one SoC — and the multi-stream workload
@@ -14,9 +15,12 @@
 //!  camera N ── frontend ──> shard queue N ─┘             lanes)          thread)
 //! ```
 //!
-//! Each producer owns its own seeded [`crate::sensor::Camera`] and [`SensorCompute`]
-//! and runs on a scoped `std::thread`; the classifier (which for PJRT is
-//! not `Send`) never leaves the caller's thread.
+//! Each camera owns its own seeded [`crate::sensor::Camera`] as a
+//! [`crate::coordinator::pool`] cell; a deterministic timer wheel paces
+//! the cells over `min(num_cpus, 8)` pool workers (see
+//! [`FleetConfig::pool_workers`]), so 10k cameras cost 10k small state
+//! structs, not 10k OS threads.  The classifier (which for PJRT is not
+//! `Send`) never leaves the caller's thread.
 //!
 //! # Heterogeneous fleets
 //!
@@ -73,9 +77,12 @@ use crate::coordinator::pipeline::{
     p2m_plan_from_bundle, BatchClassifier, PipelineStats, SensorCompute, ShapeKey,
     WireFormat, WirePayload,
 };
+use crate::coordinator::pool::{
+    default_pool_workers, spawn_producer_pool, CellCompute, PoolCamera, PoolHooks,
+};
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::coordinator::router::{RoutePolicy, Router};
-use crate::coordinator::scenario::{run_incarnation, Segment, SegmentEnd};
+use crate::coordinator::scenario::{Segment, SegmentEnd};
 use crate::frontend::{Fidelity, FramePlan, PlanKey};
 use crate::runtime::ModelBundle;
 
@@ -184,7 +191,8 @@ pub fn heterogeneous_fleet_sensors(
 /// Fleet topology + scheduling configuration.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
-    /// number of simulated cameras (= producer threads)
+    /// number of simulated cameras (= shard links; cameras share the
+    /// fixed producer pool, never one thread each)
     pub n_cameras: usize,
     /// frames each camera captures before closing its shard
     pub frames_per_camera: usize,
@@ -210,6 +218,9 @@ pub struct FleetConfig {
     /// row-chunk threads *inside* each producer's frontend (1 = serial;
     /// raise it when frames are large and cameras are few)
     pub frontend_threads: usize,
+    /// producer-pool worker threads (None = `min(num_cpus, 8)`); never
+    /// affects deterministic outcomes, only wall time
+    pub pool_workers: Option<usize>,
 }
 
 impl Default for FleetConfig {
@@ -226,6 +237,7 @@ impl Default for FleetConfig {
             camera_seeds: None,
             cameras: None,
             frontend_threads: 1,
+            pool_workers: None,
         }
     }
 }
@@ -442,9 +454,10 @@ pub(crate) struct FleetAccounting<'a> {
     pub(crate) latency: &'a Arc<Latency>,
 }
 
-/// Run a multi-camera fleet: one scoped producer thread per camera
-/// (capture + on-sensor compute), per-shard bounded queues, and the
-/// router/batcher/classifier consumer on the caller's thread.
+/// Run a multi-camera fleet: the cameras multiplexed over the fixed
+/// producer pool (capture + on-sensor compute), per-shard bounded
+/// queues, and the router/batcher/classifier consumer on the caller's
+/// thread.
 ///
 /// `sensors` supplies one [`SensorCompute`] per camera (they must all be
 /// the same kind — mixing P2M and baseline cameras in one fleet would
@@ -514,36 +527,53 @@ fn run_fleet_sink<S: ClassifySink>(
         route: cfg.route,
         expected_shards: n,
     };
-    let frames_in = metrics.counter("fleet_frames_captured");
+    let hooks = PoolHooks {
+        frames_in: metrics.counter("fleet_frames_captured"),
+        restarts: None,
+        active: None,
+        ticks: metrics.counter("scheduler_ticks"),
+        lag_us: metrics.gauge("timer_lag_max_us"),
+        depth: metrics.gauge("pool_queue_depth"),
+    };
     let latency = metrics.latency("fleet_e2e_latency");
+    let workers = cfg.pool_workers.unwrap_or_else(default_pool_workers);
     let mut per_camera = vec![PipelineStats::default(); n];
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
     let t0 = Instant::now();
     let mut consumer_result: Result<()> = Ok(());
 
-    std::thread::scope(|s| {
-        for (ci, sensor) in sensors.into_iter().enumerate() {
-            let shard = shards[ci].clone();
-            let frames_in = frames_in.clone();
-            let seed = cfg.camera_seed(ci);
-            let n_frames = cfg.frames_per_camera;
-            let threads = cfg.frontend_threads;
+    // The static fleet is the degenerate script: one incarnation per
+    // camera, one free-running (or spec-paced) segment, a clean close.
+    // Every shard was registered up front, so the cells are
+    // preregistered — their first dispatch goes straight to capture.
+    let cameras: Vec<PoolCamera> = sensors
+        .into_iter()
+        .enumerate()
+        .map(|(ci, sensor)| {
             let frame_rate = cfg
                 .cameras
                 .as_ref()
                 .map_or(0.0, |specs| specs[ci].frame_rate);
-            s.spawn(move || {
-                // The static fleet is the degenerate script: one
-                // incarnation, one free-running (or spec-paced) segment,
-                // a clean close at the end.
-                let segments =
-                    [Segment { frames: n_frames, frame_rate, end: SegmentEnd::Clean }];
-                run_incarnation(ci, &segments, sensor, shard.clone(), seed, frames_in, threads);
-                shard.close();
-            });
-        }
+            PoolCamera {
+                slot: ci,
+                segments: vec![Segment {
+                    frames: cfg.frames_per_camera,
+                    frame_rate,
+                    end: SegmentEnd::Clean,
+                }],
+                start_delay: Duration::ZERO,
+                seed: cfg.camera_seed(ci),
+                compute: CellCompute::from_sensor(sensor),
+                link: shards[ci].clone(),
+                preregistered: true,
+                frontend_threads: cfg.frontend_threads,
+            }
+        })
+        .collect();
 
+    std::thread::scope(|s| {
+        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, hooks);
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
@@ -552,10 +582,11 @@ fn run_fleet_sink<S: ClassifySink>(
         };
         consumer_result = consume(sink, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
-            // Unblock any producer stuck on a full shard so the scope's
-            // implicit joins cannot hang.
+            // Close every shard so cells retire at their next dispatch
+            // and the pool drains instead of blocking on full links.
             registry.poison();
         }
+        let _ = scheduler.join();
     });
     consumer_result?;
 
@@ -638,6 +669,12 @@ pub(crate) fn consume<S: ClassifySink>(
                 break;
             }
             let si = (sweep_start + off) % n_shards;
+            // Lock-free emptiness probe: at 10k shards most are empty on
+            // any given sweep, and skipping them without taking the
+            // queue mutex is what keeps the sweep cheap.
+            if shards[si].1.is_empty() {
+                continue;
+            }
             if let Some(item) = shards[si].1.try_pop() {
                 acc.per_camera[item.camera].bytes_from_sensor += item.bytes;
                 acc.aggregate.bytes_from_sensor += item.bytes;

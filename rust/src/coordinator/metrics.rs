@@ -43,12 +43,21 @@ impl Gauge {
         now
     }
 
+    /// Record an instantaneous reading: the gauge takes the value `v`
+    /// (it does **not** accumulate) and the watermark keeps the max ever
+    /// seen.  For sampled quantities like scheduler lag or queue depth,
+    /// where [`Gauge::add`] deltas would be meaningless.
+    pub fn observe(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.high.fetch_max(v, Ordering::Relaxed);
+    }
+
     /// Current value.
     pub fn get(&self) -> i64 {
         self.value.load(Ordering::Relaxed)
     }
 
-    /// Highest value ever observed by [`Gauge::add`].
+    /// Highest value ever observed by [`Gauge::add`] / [`Gauge::observe`].
     pub fn high_watermark(&self) -> i64 {
         self.high.load(Ordering::Relaxed)
     }
@@ -230,6 +239,32 @@ mod tests {
         assert_eq!(m.gauge("active").get(), 0);
         assert_eq!(m.gauge("active").high_watermark(), 6);
         assert!(m.snapshot().contains("active: 0 (peak 6)"));
+    }
+
+    #[test]
+    fn gauge_merge_semantics_are_last_value_max_watermark() {
+        // The contract the scheduler gauges (timer lag, pool queue
+        // depth) rely on: observe() REPLACES the value — two observers
+        // merging through one named gauge never sum — while the
+        // watermark folds max() over every add() and observe() alike.
+        let m = Metrics::new();
+        let a = m.gauge("timer_lag_max_us");
+        let b = m.gauge("timer_lag_max_us");
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same name, same gauge");
+        a.observe(40);
+        b.observe(25);
+        assert_eq!(a.get(), 25, "last observation wins, no accumulation");
+        assert_eq!(a.high_watermark(), 40, "watermark keeps the max");
+        b.observe(0);
+        assert_eq!(a.get(), 0);
+        assert_eq!(a.high_watermark(), 40);
+        // add() and observe() feed one watermark stream.
+        a.add(55);
+        assert_eq!(a.high_watermark(), 55);
+        a.observe(-3);
+        assert_eq!(a.get(), -3, "negative readings are representable");
+        assert_eq!(a.high_watermark(), 55);
+        assert!(m.snapshot().contains("timer_lag_max_us: -3 (peak 55)"));
     }
 
     #[test]

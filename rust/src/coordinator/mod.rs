@@ -9,13 +9,16 @@
 //!   thread, one bounded link into the classifier;
 //! * [`run_fleet`] — N cameras (identical **or heterogeneous** — mixed
 //!   resolutions, ADC bit depths, wire formats via [`CameraSpec`] and
-//!   the plan-deduplicating [`PlanBank`]) on N producer threads,
+//!   the plan-deduplicating [`PlanBank`]) multiplexed over a fixed
+//!   producer pool paced by a deterministic [`TimerWheel`] (see
+//!   [`pool`] and [`wheel`]; 10k cameras never means 10k threads),
 //!   per-shard bounded links merged by the [`Router`] and the
 //!   shape-aware [`ShapedBatcher`] into one shared classifier on the
 //!   caller's thread (see [`fleet`]);
 //! * [`run_scenario`] — a deterministic scripted fleet with camera
 //!   lifecycle events: hot-add, clean removal, mid-stream producer
-//!   crashes with thread restart, frame-rate shifts (see [`scenario`]).
+//!   crashes with restart, frame-rate shifts — all realised as
+//!   timer-wheel operations on camera cells (see [`scenario`]).
 //!
 //! Classification is pluggable through [`BatchClassifier`]:
 //! [`PjrtClassifier`] serves the AOT artifacts through PJRT,
@@ -39,9 +42,11 @@ pub mod batcher;
 pub mod fleet;
 pub mod metrics;
 pub mod pipeline;
+pub mod pool;
 pub mod queue;
 pub mod router;
 pub mod scenario;
+pub mod wheel;
 
 pub use backend_pool::BackendPool;
 pub use batcher::{BatchPolicy, Batcher, ShapedBatcher};
@@ -56,9 +61,11 @@ pub use pipeline::{
     run_pipeline_with, BatchClassifier, MeanThresholdClassifier, PipelineConfig,
     PipelineStats, PjrtClassifier, SensorCompute, ShapeKey, WireFormat, WirePayload,
 };
+pub use pool::default_pool_workers;
 pub use queue::{Backpressure, BoundedQueue};
 pub use router::{RoutePolicy, Router};
 pub use scenario::{
     run_scenario, run_scenario_pooled, CameraReport, CameraScript, Scenario,
     ScenarioReport, Segment, SegmentEnd,
 };
+pub use wheel::{TimerId, TimerWheel};

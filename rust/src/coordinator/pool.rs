@@ -1,0 +1,614 @@
+//! The fixed-size producer pool: N cameras multiplexed over W worker
+//! threads by a deterministic [`TimerWheel`] scheduler.
+//!
+//! The thread-per-camera producer model caps a fleet at hundreds of
+//! cameras (an OS thread + stack per sensor).  This module replaces it
+//! for both serving topologies ([`crate::coordinator::run_fleet`] and
+//! the scenario driver): every camera is a [`CameraCell`] — a plain
+//! struct owning the camera's *entire* mutable state (seed, RNG-bearing
+//! [`Camera`], segment cursor, incarnation counter, shard link) — and a
+//! single scheduler thread paces the cells over a timer wheel, handing
+//! due cells to a bounded pool of workers.  10k cameras cost 10k small
+//! structs, not 10k threads.
+//!
+//! The cooperative-task idiom here mirrors embedded executors (one
+//! statically-bounded worker set, tasks as owned state machines, timers
+//! as data): a camera "runs" only while a worker holds its cell, and
+//! every lifecycle verb of the scenario driver — hot-add, clean
+//! removal, crash/restart, rate shift — is a state transition on the
+//! cell plus a wheel operation, not a thread lifecycle event.
+//!
+//! # Determinism
+//!
+//! Each cell's frame stream is a pure function of its seed: the cell
+//! owns its [`Camera`] (seeded from the stable camera id, exactly like
+//! the thread-per-camera model) and its segment cursor, so *which*
+//! worker fires a frame — and *when* — cannot change frame contents,
+//! counts, or per-camera accounting.  Workers share one `ExecCtx` per
+//! distinct compiled plan (scratch buffers are fully overwritten per
+//! frame), so memory scales with `workers x distinct designs`, not with
+//! cameras.  Under [`Backpressure::Block`] the scenario digest is
+//! therefore invariant across pool sizes — the worker-count invariance
+//! suite pins digests for 1/2/4/8 workers against committed fixtures.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::fleet::{FleetItem, ShardRegistry};
+use crate::coordinator::metrics::{Counter, Gauge};
+use crate::coordinator::pipeline::{SensorCompute, WireFormat, WirePayload};
+use crate::coordinator::queue::{Backpressure, BoundedQueue};
+use crate::coordinator::scenario::{incarnation_groups, incarnation_seed, Segment, SegmentEnd};
+use crate::baseline::BaselineReadout;
+use crate::config::SensorConfig;
+use crate::coordinator::wheel::TimerWheel;
+use crate::frontend::{ExecCtx, FramePlan, PlanKey};
+use crate::sensor::{Camera, Image, QuantizedFrame, Split};
+
+/// Scheduler tick length: 100 us (10 000 ticks/s), fine enough to pace
+/// the canned scenarios' fastest scripted rate (500 fps = 20 ticks)
+/// with <= 5% quantisation error.
+const TICK_US: u64 = 100;
+const TICKS_PER_SEC: u64 = 1_000_000 / TICK_US;
+
+/// Frames a free-running cell may fire per dispatch before it yields
+/// back to the run queue, so one unpaced camera cannot pin a worker
+/// while peers are due.
+const BURST_FRAMES: usize = 8;
+
+/// Default producer-pool size: `min(num_cpus, 8)` (CLI-overridable via
+/// `--pool`, programmatically via the `pool_workers` config fields).
+pub fn default_pool_workers() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
+}
+
+/// The compute half of a cell: like [`SensorCompute`] but without the
+/// embedded `ExecCtx` — workers supply scratch from a per-worker cache
+/// keyed by [`PlanKey`] so 10k same-design cameras share W contexts.
+pub(crate) enum CellCompute {
+    P2m { plan: Arc<FramePlan>, wire: WireFormat },
+    Baseline(BaselineReadout),
+}
+
+impl CellCompute {
+    pub(crate) fn p2m(plan: Arc<FramePlan>, wire: WireFormat) -> Self {
+        CellCompute::P2m { plan, wire }
+    }
+
+    /// Adopt an existing sensor-compute instance (its private scratch is
+    /// dropped; workers re-supply scratch from their caches).
+    pub(crate) fn from_sensor(sensor: SensorCompute) -> Self {
+        match sensor {
+            SensorCompute::P2m { plan, wire, .. } => CellCompute::P2m { plan, wire },
+            SensorCompute::Baseline(readout) => CellCompute::Baseline(readout),
+        }
+    }
+
+    fn sensor_config(&self) -> SensorConfig {
+        match self {
+            CellCompute::P2m { plan, .. } => plan.cfg.sensor,
+            CellCompute::Baseline(readout) => readout.cfg,
+        }
+    }
+
+    /// One frame of on-sensor compute — bit-identical to
+    /// [`SensorCompute::run_frame`], with the serial-path scratch drawn
+    /// from the worker's plan-keyed cache instead of the sensor.
+    fn run_frame(
+        &self,
+        image: &Image,
+        ctxs: &mut BTreeMap<PlanKey, ExecCtx>,
+        frontend_threads: usize,
+    ) -> (WirePayload, u64) {
+        let payload = match self {
+            CellCompute::P2m { plan, wire } => match (*wire, frontend_threads > 1) {
+                (WireFormat::Dense, true) => {
+                    WirePayload::Dense(plan.process_parallel(image, frontend_threads).0)
+                }
+                (WireFormat::Dense, false) => {
+                    let ctx = ctxs.entry(plan.plan_key()).or_insert_with(|| plan.ctx());
+                    WirePayload::Dense(plan.process(image, ctx).0)
+                }
+                (WireFormat::Quantized, true) => {
+                    let acts = plan.process_parallel(image, frontend_threads).0;
+                    WirePayload::Quantized(QuantizedFrame::from_image(&acts, plan.quant))
+                }
+                (WireFormat::Quantized, false) => {
+                    let ctx = ctxs.entry(plan.plan_key()).or_insert_with(|| plan.ctx());
+                    WirePayload::Quantized(plan.process_quantized(image, ctx).0)
+                }
+            },
+            CellCompute::Baseline(readout) => WirePayload::Dense(readout.process(image).0),
+        };
+        let bytes = payload.wire_bytes();
+        (payload, bytes)
+    }
+}
+
+/// One camera handed to the pool: identity, script, seed, compute and
+/// shard link.  Both drivers build these; the pool owns them from then
+/// on.
+pub(crate) struct PoolCamera {
+    /// fleet slot (indexes the per-camera accounting)
+    pub(crate) slot: usize,
+    /// the camera's scripted lifecycle (a static fleet passes one free
+    /// or spec-paced `Clean` segment)
+    pub(crate) segments: Vec<Segment>,
+    /// hot-add delay before the first frame
+    pub(crate) start_delay: Duration,
+    /// the camera seed (incarnation seeds derive from it)
+    pub(crate) seed: u64,
+    pub(crate) compute: CellCompute,
+    pub(crate) link: BoundedQueue<FleetItem>,
+    /// true when the caller already registered the link with the
+    /// consumer (static fleets); false = the worker registers on the
+    /// cell's first dispatch (scenario hot-add semantics)
+    pub(crate) preregistered: bool,
+    pub(crate) frontend_threads: usize,
+}
+
+/// Metric handles the pool reports into (the caller names them, so the
+/// fleet and scenario keep their historical metric names).
+#[derive(Clone)]
+pub(crate) struct PoolHooks {
+    /// incremented once per captured frame
+    pub(crate) frames_in: Arc<Counter>,
+    /// incremented on each crash-boundary restart (None for static
+    /// fleets, which script no crashes)
+    pub(crate) restarts: Option<Arc<Counter>>,
+    /// +1 when a camera joins, -1 when its link closes (None = untracked)
+    pub(crate) active: Option<Arc<Gauge>>,
+    /// `scheduler_ticks`: wheel ticks the scheduler advanced through
+    pub(crate) ticks: Arc<Counter>,
+    /// `timer_lag_max_us`: observed fire lag behind the due tick
+    pub(crate) lag_us: Arc<Gauge>,
+    /// `pool_queue_depth`: cells queued for dispatch (value + peak)
+    pub(crate) depth: Arc<Gauge>,
+}
+
+/// A camera as the scheduler owns it: the [`PoolCamera`] plus the live
+/// cursor state a producer thread used to keep on its stack.
+struct CameraCell {
+    cam: PoolCamera,
+    /// incarnation groups over `segments` (inclusive index ranges)
+    groups: Vec<(usize, usize)>,
+    /// current incarnation (indexes `groups`), camera seed derives from it
+    group: usize,
+    /// current segment (absolute index into `segments`)
+    seg: usize,
+    /// frames already fired in the current segment
+    seg_done: usize,
+    /// the live camera, rebuilt per incarnation (None between them)
+    camera: Option<Camera>,
+    incarnations_ran: u32,
+    registered: bool,
+    /// the tick this cell was last scheduled for / dispatched at
+    due: u64,
+}
+
+enum Step {
+    /// Fire one frame now; wait `period_ticks` before the next (0 =
+    /// free-running).
+    Fire { period_ticks: u64 },
+    /// Script complete (or aborted): close the link, retire the cell.
+    Done,
+}
+
+impl CameraCell {
+    fn new(cam: PoolCamera) -> Self {
+        let groups = incarnation_groups(&cam.segments);
+        let registered = cam.preregistered;
+        CameraCell {
+            cam,
+            groups,
+            group: 0,
+            seg: 0,
+            seg_done: 0,
+            camera: None,
+            incarnations_ran: 0,
+            registered,
+            due: 0,
+        }
+    }
+
+    /// Advance the script cursor to the next action.  Crossing segment
+    /// boundaries applies lifecycle semantics exactly like the retired
+    /// thread-per-camera supervisor: `Shift` keeps the camera, a group
+    /// end (`Crash`/`Clean`) retires the incarnation, and a crash with
+    /// groups remaining counts a producer restart.
+    fn next_step(&mut self, hooks: &PoolHooks) -> Step {
+        loop {
+            if self.group >= self.groups.len() {
+                return Step::Done;
+            }
+            if self.camera.is_none() {
+                let seed = incarnation_seed(self.cam.seed, self.group as u32);
+                self.camera =
+                    Some(Camera::new(self.cam.compute.sensor_config(), seed, Split::Test));
+                self.incarnations_ran += 1;
+            }
+            let (_, group_end) = self.groups[self.group];
+            let seg = self.cam.segments[self.seg];
+            if self.seg_done < seg.frames {
+                return Step::Fire { period_ticks: period_ticks(seg.frame_rate) };
+            }
+            if seg.end == SegmentEnd::Shift && self.seg < group_end {
+                // Rate shift: same incarnation, next segment.
+                self.seg += 1;
+                self.seg_done = 0;
+                continue;
+            }
+            // Group boundary: the incarnation ends (Crash/Clean; a
+            // trailing Shift is tolerated like incarnation_groups does).
+            self.group += 1;
+            self.seg = group_end + 1;
+            self.seg_done = 0;
+            self.camera = None;
+            if seg.end == SegmentEnd::Crash && self.group < self.groups.len() {
+                if let Some(restarts) = &hooks.restarts {
+                    restarts.inc();
+                }
+            }
+        }
+    }
+}
+
+fn period_ticks(frame_rate: f64) -> u64 {
+    if frame_rate <= 0.0 {
+        0
+    } else {
+        ((TICKS_PER_SEC as f64 / frame_rate).round() as u64).max(1)
+    }
+}
+
+fn tick_now(t0: &Instant) -> u64 {
+    t0.elapsed().as_micros() as u64 / TICK_US
+}
+
+fn delay_ticks(d: Duration) -> u64 {
+    (d.as_micros() as u64).div_ceil(TICK_US)
+}
+
+struct Completion {
+    cell: CameraCell,
+    outcome: Outcome,
+}
+
+enum Outcome {
+    /// Fire again after `period_ticks` (0 = re-queue immediately: a
+    /// free-running cell that exhausted its burst quota).
+    Reschedule { period_ticks: u64 },
+    /// The cell retired (script done or consumer abort); link closed.
+    Finished,
+}
+
+/// Closes the task queue when the scheduler exits — normally or by
+/// panic — so pool workers can never hang waiting for work that will
+/// not come.
+struct CloseOnDrop(BoundedQueue<CameraCell>);
+
+impl Drop for CloseOnDrop {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Spawn the producer pool inside the caller's thread scope: one
+/// scheduler thread plus `workers` worker threads.  Returns the
+/// scheduler's handle; joining it yields the per-slot incarnation
+/// counts once every cell has retired.  The caller runs the consumer
+/// concurrently and, on a consumer abort, poisons the registry — cells
+/// then retire on their next dispatch (their pushes are refused), so
+/// the pool always terminates.
+pub(crate) fn spawn_producer_pool<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    cameras: Vec<PoolCamera>,
+    workers: usize,
+    registry: &'env ShardRegistry,
+    hooks: PoolHooks,
+) -> std::thread::ScopedJoinHandle<'scope, Vec<u32>> {
+    let workers = workers.max(1);
+    let n = cameras.len();
+    // Dispatch queue: shallow, so backpressure reaches the scheduler's
+    // local ready queue (which the depth gauge watches) instead of
+    // hiding inside channel depth.
+    let tasks: BoundedQueue<CameraCell> = BoundedQueue::new(workers * 2, Backpressure::Block);
+    // Completion queue: capacity covers every cell plus every worker,
+    // so a completion push can NEVER block — with a blocked scheduler
+    // (tasks full) and blocking completion pushes the pool could
+    // deadlock; this capacity makes that state unreachable.
+    let done: BoundedQueue<Completion> =
+        BoundedQueue::new(n + workers + 1, Backpressure::Block);
+
+    for _ in 0..workers {
+        let tasks = tasks.clone();
+        let done = done.clone();
+        let hooks = hooks.clone();
+        scope.spawn(move || worker_loop(&tasks, &done, registry, &hooks));
+    }
+    scope.spawn(move || scheduler_loop(cameras, tasks, done, hooks))
+}
+
+/// Pool worker: pop a due cell, fire its frames, report the outcome.
+/// Scratch contexts are cached per distinct plan, not per camera.
+fn worker_loop(
+    tasks: &BoundedQueue<CameraCell>,
+    done: &BoundedQueue<Completion>,
+    registry: &ShardRegistry,
+    hooks: &PoolHooks,
+) {
+    let mut ctxs: BTreeMap<PlanKey, ExecCtx> = BTreeMap::new();
+    loop {
+        let Some(mut cell) = tasks.pop(Duration::from_millis(20)) else {
+            if tasks.is_closed() && tasks.is_empty() {
+                return;
+            }
+            continue;
+        };
+        let outcome = fire_cell(&mut cell, &mut ctxs, registry, hooks);
+        // Never blocks (see the completion queue's capacity) and the
+        // scheduler outlives every worker, so the push cannot be lost.
+        let _ = done.push(Completion { cell, outcome });
+    }
+}
+
+/// Run one dispatched cell: join the fleet if this is its first
+/// dispatch, then fire frames until the cell paces, yields its burst
+/// quota, finishes its script, or learns the consumer aborted.
+fn fire_cell(
+    cell: &mut CameraCell,
+    ctxs: &mut BTreeMap<PlanKey, ExecCtx>,
+    registry: &ShardRegistry,
+    hooks: &PoolHooks,
+) -> Outcome {
+    if !cell.registered {
+        // Hot-add: the camera joins the fleet at its first dispatch.
+        registry.register(cell.cam.slot, cell.cam.link.clone());
+        if let Some(active) = &hooks.active {
+            active.add(1);
+        }
+        cell.registered = true;
+    }
+    let mut fired = 0usize;
+    loop {
+        let period_ticks = match cell.next_step(hooks) {
+            Step::Done => {
+                if let Some(active) = &hooks.active {
+                    active.add(-1);
+                }
+                // Clean scripts close their own stream's end of life;
+                // crash-terminated scripts leave an orphan closed here
+                // (the pool is the watchdog).  Either way the consumer
+                // can drain and terminate.
+                cell.cam.link.close();
+                return Outcome::Finished;
+            }
+            Step::Fire { period_ticks } => period_ticks,
+        };
+        if period_ticks == 0 && fired >= BURST_FRAMES {
+            return Outcome::Reschedule { period_ticks: 0 };
+        }
+        let camera = cell.camera.as_mut().expect("next_step builds the camera");
+        let frame = camera.capture();
+        let captured_at = Instant::now();
+        let (payload, bytes) =
+            cell.cam.compute.run_frame(&frame.image, ctxs, cell.cam.frontend_threads);
+        hooks.frames_in.inc();
+        let accepted = cell.cam.link.push(FleetItem {
+            camera: cell.cam.slot,
+            label: frame.label,
+            captured_at,
+            payload,
+            bytes,
+        });
+        cell.seg_done += 1;
+        // A refused push on a *closed* link means the consumer aborted —
+        // retire the cell instead of burning capture/frontend work (a
+        // refusal on an open DropNewest link is an ordinary accounted
+        // drop and capture continues).
+        if !accepted && cell.cam.link.is_closed() {
+            if let Some(active) = &hooks.active {
+                active.add(-1);
+            }
+            cell.cam.link.close();
+            return Outcome::Finished;
+        }
+        if period_ticks > 0 {
+            return Outcome::Reschedule { period_ticks };
+        }
+        fired += 1;
+    }
+}
+
+/// The scheduler: owns the wheel and every cell not currently held by a
+/// worker; loops advance-dispatch-collect until all cells retire.
+fn scheduler_loop(
+    cameras: Vec<PoolCamera>,
+    tasks: BoundedQueue<CameraCell>,
+    done: BoundedQueue<Completion>,
+    hooks: PoolHooks,
+) -> Vec<u32> {
+    let n = cameras.len();
+    let _close_tasks = CloseOnDrop(tasks.clone());
+    let t0 = Instant::now();
+    let mut wheel: TimerWheel<CameraCell> = TimerWheel::new();
+    let mut ready: VecDeque<CameraCell> = VecDeque::new();
+    let mut incarnations = vec![0u32; n];
+    let mut outstanding = 0usize;
+
+    for cam in cameras {
+        let mut cell = CameraCell::new(cam);
+        outstanding += 1;
+        let delay = delay_ticks(cell.cam.start_delay);
+        if delay == 0 {
+            ready.push_back(cell);
+        } else {
+            cell.due = delay;
+            wheel.schedule(delay, cell);
+        }
+    }
+
+    while outstanding > 0 {
+        // 1. Advance the wheel to wall time; due cells join the ready
+        //    queue (fire lag is how far behind its due tick a cell got).
+        let now = tick_now(&t0);
+        if now > wheel.now() {
+            hooks.ticks.add(now - wheel.now());
+            for (due, _, mut cell) in wheel.advance(now) {
+                hooks.lag_us.observe(((now - due) * TICK_US) as i64);
+                cell.due = now;
+                ready.push_back(cell);
+            }
+        }
+
+        // 2. Dispatch without blocking: a full task queue keeps cells
+        //    here, visible to the depth gauge, not stuck in a push.
+        while let Some(cell) = ready.pop_front() {
+            if let Err(cell) = tasks.try_push(cell) {
+                ready.push_front(cell);
+                break;
+            }
+        }
+        hooks.depth.observe((ready.len() + tasks.len()) as i64);
+
+        // 3. Collect outcomes, waiting at most until the next due tick.
+        let timeout = if !ready.is_empty() {
+            Duration::from_micros(200)
+        } else if let Some(due) = wheel.next_due() {
+            let wait = due.saturating_sub(tick_now(&t0)).clamp(1, 50);
+            Duration::from_micros(wait * TICK_US)
+        } else {
+            Duration::from_millis(2)
+        };
+        let mut next = done.pop(timeout);
+        while let Some(Completion { mut cell, outcome }) = next {
+            match outcome {
+                Outcome::Finished => {
+                    incarnations[cell.cam.slot] = cell.incarnations_ran;
+                    outstanding -= 1;
+                }
+                Outcome::Reschedule { period_ticks: 0 } => ready.push_back(cell),
+                Outcome::Reschedule { period_ticks } => {
+                    // Pace from the previous due tick, but never burst
+                    // to catch up after a stall (same policy as the
+                    // sleep-based pacing this replaced).
+                    let due = (cell.due + period_ticks).max(wheel.now() + 1);
+                    cell.due = due;
+                    wheel.schedule(due, cell);
+                }
+            }
+            next = done.try_pop();
+        }
+    }
+    incarnations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::synthetic_frame_plan_bits;
+    use crate::coordinator::metrics::Metrics;
+    use crate::frontend::Fidelity;
+
+    #[test]
+    fn pool_defaults_are_bounded() {
+        let w = default_pool_workers();
+        assert!((1..=8).contains(&w));
+    }
+
+    #[test]
+    fn period_ticks_maps_rates_onto_the_wheel() {
+        assert_eq!(period_ticks(0.0), 0, "free-running cells never pace");
+        assert_eq!(period_ticks(-3.0), 0);
+        assert_eq!(period_ticks(500.0), 20, "500 fps = 2 ms = 20 ticks");
+        assert_eq!(period_ticks(10_000.0), 1);
+        assert_eq!(period_ticks(1e9), 1, "rates beyond the tick clamp to 1");
+        assert_eq!(delay_ticks(Duration::from_millis(25)), 250);
+        assert_eq!(delay_ticks(Duration::from_micros(1)), 1, "tiny delays round up");
+        assert_eq!(delay_ticks(Duration::ZERO), 0);
+    }
+
+    #[test]
+    fn cell_state_machine_walks_the_script_like_a_supervisor() {
+        // free(2, Crash) -> free(1, Shift tolerated? no: Shift mid) ...
+        // Script: 2 frames, crash, restart, then 1 + 1 frames across a
+        // rate shift, clean close: 2 incarnations, 1 restart.
+        let plan = synthetic_frame_plan_bits(20, Fidelity::Functional, 8).unwrap();
+        let metrics = Metrics::new();
+        let hooks = PoolHooks {
+            frames_in: metrics.counter("f"),
+            restarts: Some(metrics.counter("r")),
+            active: None,
+            ticks: metrics.counter("t"),
+            lag_us: metrics.gauge("l"),
+            depth: metrics.gauge("d"),
+        };
+        let cam = PoolCamera {
+            slot: 0,
+            segments: vec![
+                Segment::free(2, SegmentEnd::Crash),
+                Segment::paced(1, 500.0, SegmentEnd::Shift),
+                Segment::free(1, SegmentEnd::Clean),
+            ],
+            start_delay: Duration::ZERO,
+            seed: 9,
+            compute: CellCompute::p2m(plan, WireFormat::Quantized),
+            link: BoundedQueue::new(4, Backpressure::Block),
+            preregistered: true,
+            frontend_threads: 1,
+        };
+        let mut cell = CameraCell::new(cam);
+        assert_eq!(cell.groups, vec![(0, 0), (1, 2)]);
+
+        let mut fired = Vec::new();
+        loop {
+            match cell.next_step(&hooks) {
+                Step::Done => break,
+                Step::Fire { period_ticks } => {
+                    fired.push((cell.group, period_ticks));
+                    cell.seg_done += 1; // what a worker does after firing
+                }
+            }
+        }
+        // 2 free frames in incarnation 0, then a paced + a free frame in
+        // incarnation 1.
+        assert_eq!(fired, vec![(0, 0), (0, 0), (1, 20), (1, 0)]);
+        assert_eq!(cell.incarnations_ran, 2);
+        assert_eq!(metrics.counter("r").get(), 1, "one crash restart");
+        assert!(cell.camera.is_none(), "retired cells hold no camera");
+    }
+
+    #[test]
+    fn zero_frame_segments_retire_without_firing() {
+        let plan = synthetic_frame_plan_bits(20, Fidelity::Functional, 8).unwrap();
+        let metrics = Metrics::new();
+        let hooks = PoolHooks {
+            frames_in: metrics.counter("f"),
+            restarts: Some(metrics.counter("r")),
+            active: None,
+            ticks: metrics.counter("t"),
+            lag_us: metrics.gauge("l"),
+            depth: metrics.gauge("d"),
+        };
+        let cam = PoolCamera {
+            slot: 0,
+            segments: vec![
+                Segment::free(0, SegmentEnd::Crash),
+                Segment::free(0, SegmentEnd::Clean),
+            ],
+            start_delay: Duration::ZERO,
+            seed: 1,
+            compute: CellCompute::p2m(plan, WireFormat::Dense),
+            link: BoundedQueue::new(4, Backpressure::Block),
+            preregistered: true,
+            frontend_threads: 1,
+        };
+        let mut cell = CameraCell::new(cam);
+        assert!(matches!(cell.next_step(&hooks), Step::Done));
+        // Both incarnations ran (empty, like two producer threads that
+        // captured nothing), and the crash still counted a restart.
+        assert_eq!(cell.incarnations_ran, 2);
+        assert_eq!(metrics.counter("r").get(), 1);
+    }
+}

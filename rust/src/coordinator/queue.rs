@@ -9,6 +9,7 @@
 //! sensors, the `n_bits`-wide codes rather than dense f32 frames.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -25,6 +26,10 @@ struct Inner<T> {
     q: Mutex<State<T>>,
     not_full: Condvar,
     not_empty: Condvar,
+    /// Exact queue length, mirrored (under the mutex) on every push and
+    /// pop so `len`/`is_empty` probes never contend on the lock — the
+    /// consumer sweeps thousands of mostly-empty shards per pass.
+    len: AtomicUsize,
 }
 
 struct State<T> {
@@ -65,6 +70,7 @@ impl<T> BoundedQueue<T> {
                 }),
                 not_full: Condvar::new(),
                 not_empty: Condvar::new(),
+                len: AtomicUsize::new(0),
             }),
             cap,
             policy,
@@ -84,6 +90,7 @@ impl<T> BoundedQueue<T> {
                 g.pushed += 1;
                 let len = g.items.len();
                 g.high_watermark = g.high_watermark.max(len);
+                self.inner.len.store(len, Ordering::Release);
                 self.inner.not_empty.notify_one();
                 return true;
             }
@@ -107,6 +114,7 @@ impl<T> BoundedQueue<T> {
         loop {
             if let Some(item) = g.items.pop_front() {
                 g.popped += 1;
+                self.inner.len.store(g.items.len(), Ordering::Release);
                 self.inner.not_full.notify_one();
                 return Some(item);
             }
@@ -129,12 +137,32 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking push, policy-independent: `Err(item)` hands the item
+    /// back when the queue is full or closed — never blocks, never
+    /// accounts a drop.  The scheduler's dispatch path uses this so a
+    /// full task queue parks work in its own ready queue instead of
+    /// stalling the timer wheel.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.q.lock().unwrap();
+        if g.closed || g.items.len() >= self.cap {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        g.pushed += 1;
+        let len = g.items.len();
+        g.high_watermark = g.high_watermark.max(len);
+        self.inner.len.store(len, Ordering::Release);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         let mut g = self.inner.q.lock().unwrap();
         let item = g.items.pop_front();
         if item.is_some() {
             g.popped += 1;
+            self.inner.len.store(g.items.len(), Ordering::Release);
             self.inner.not_full.notify_one();
         }
         item
@@ -154,12 +182,14 @@ impl<T> BoundedQueue<T> {
         self.inner.q.lock().unwrap().closed
     }
 
-    /// Items currently queued.
+    /// Items currently queued (lock-free mirror, exact at the instant of
+    /// the last completed push/pop — stale only in the benign sense any
+    /// unlocked length is).
     pub fn len(&self) -> usize {
-        self.inner.q.lock().unwrap().items.len()
+        self.inner.len.load(Ordering::Acquire)
     }
 
-    /// True when no items are queued.
+    /// True when no items are queued (lock-free; see [`BoundedQueue::len`]).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -393,6 +423,45 @@ mod tests {
         assert_eq!(dropped, 0, "refused-on-close pushes are not drops");
         assert_eq!(q.pop(Duration::from_millis(5)), Some(0));
         assert_eq!(q.pop(Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn try_push_never_blocks_and_never_accounts_drops() {
+        // Full queue: the item comes back untouched, no drop counted —
+        // even under DropNewest (try_push is policy-independent).
+        for policy in [Backpressure::Block, Backpressure::DropNewest] {
+            let q = BoundedQueue::new(1, policy);
+            assert!(q.try_push(10).is_ok());
+            assert_eq!(q.try_push(11), Err(11), "{policy:?}: full refuses");
+            let (pushed, _, dropped, _) = q.stats();
+            assert_eq!(pushed, 1, "{policy:?}");
+            assert_eq!(dropped, 0, "{policy:?}: a refusal is not a drop");
+            // Space frees up -> accepted again.
+            assert_eq!(q.try_pop(), Some(10));
+            assert!(q.try_push(11).is_ok());
+            // Closed refuses and returns the item.
+            q.close();
+            assert_eq!(q.try_push(12), Err(12), "{policy:?}: closed refuses");
+        }
+    }
+
+    #[test]
+    fn lock_free_len_mirrors_every_mutation_path() {
+        let q = BoundedQueue::new(4, Backpressure::DropNewest);
+        assert!(q.is_empty());
+        assert!(q.push(1));
+        assert_eq!(q.len(), 1);
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.len(), 2);
+        assert!(q.push(3));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(2));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.try_pop(), Some(3));
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
     }
 
     #[test]

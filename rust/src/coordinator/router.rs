@@ -1,8 +1,14 @@
 //! Multi-camera frame router: fair interleaving of several sensor
 //! streams into the shared backbone (the "many cheap P2M cameras, one
 //! SoC" deployment the paper's TinyML setting implies).
+//!
+//! The router tracks its non-empty streams in an ordered set and caches
+//! the total backlog, so [`Router::next`] under round robin costs
+//! O(log n) and [`Router::total_backlog`] O(1) — at 10k streams the
+//! consumer probes both once per sweep, and a linear scan there was the
+//! sweep's dominant cost.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 /// Routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,6 +25,10 @@ pub struct Router<T> {
     queues: Vec<VecDeque<T>>,
     policy: RoutePolicy,
     next_rr: usize,
+    /// indices of non-empty queues (kept exact by enqueue/next)
+    active: BTreeSet<usize>,
+    /// cached sum of all queue lengths
+    backlog_total: usize,
     /// per-camera dequeue counts (fairness accounting)
     pub served: Vec<u64>,
 }
@@ -33,6 +43,8 @@ impl<T> Router<T> {
             queues: (0..n_cameras).map(|_| VecDeque::new()).collect(),
             policy,
             next_rr: 0,
+            active: BTreeSet::new(),
+            backlog_total: 0,
             served: vec![0; n_cameras],
         }
     }
@@ -55,6 +67,8 @@ impl<T> Router<T> {
     /// Queue an item on one camera's stream.
     pub fn enqueue(&mut self, camera: usize, item: T) {
         self.queues[camera].push_back(item);
+        self.active.insert(camera);
+        self.backlog_total += 1;
     }
 
     /// Items waiting on one camera's stream.
@@ -62,9 +76,9 @@ impl<T> Router<T> {
         self.queues[camera].len()
     }
 
-    /// Items waiting across all streams.
+    /// Items waiting across all streams (O(1), cached).
     pub fn total_backlog(&self) -> usize {
-        self.queues.iter().map(VecDeque::len).sum()
+        self.backlog_total
     }
 
     /// Next (camera, item) under the policy; None when all queues empty
@@ -73,33 +87,34 @@ impl<T> Router<T> {
         let n = self.queues.len();
         let cam = match self.policy {
             RoutePolicy::RoundRobin => {
-                let mut cam = None;
-                for off in 0..n {
-                    let c = (self.next_rr + off) % n;
-                    if !self.queues[c].is_empty() {
-                        cam = Some(c);
-                        break;
-                    }
-                }
-                let c = cam?;
+                // First non-empty stream at or after the cursor, wrapping
+                // — the ordered active set answers it in O(log n).
+                let c = *self
+                    .active
+                    .range(self.next_rr..)
+                    .next()
+                    .or_else(|| self.active.iter().next())?;
                 self.next_rr = (c + 1) % n;
                 c
             }
             RoutePolicy::LongestQueueFirst => {
-                let (c, len) = self
-                    .queues
+                // Only non-empty streams can win, so scanning the active
+                // set preserves the full-scan tie-break (longest queue,
+                // lowest index) while skipping the idle majority.
+                let (c, _) = self
+                    .active
                     .iter()
-                    .enumerate()
-                    .map(|(i, q)| (i, q.len()))
+                    .map(|&i| (i, self.queues[i].len()))
                     .max_by_key(|&(i, len)| (len, usize::MAX - i))?;
-                if len == 0 {
-                    return None;
-                }
                 c
             }
         };
         let item = self.queues[cam].pop_front()?;
         self.served[cam] += 1;
+        self.backlog_total -= 1;
+        if self.queues[cam].is_empty() {
+            self.active.remove(&cam);
+        }
         Some((cam, item))
     }
 }
@@ -197,6 +212,100 @@ mod tests {
             for c in 0..n {
                 prop_assert!(r.served[c] == per_cam as u64, "cam {c}: {}", r.served[c]);
             }
+            Ok(())
+        });
+    }
+
+    /// The pre-optimisation router, verbatim: linear scans over every
+    /// queue.  The active-set router must be observationally identical
+    /// to this under any interleaving of operations.
+    struct NaiveRouter {
+        queues: Vec<VecDeque<u64>>,
+        policy: RoutePolicy,
+        next_rr: usize,
+    }
+
+    impl NaiveRouter {
+        fn next(&mut self) -> Option<(usize, u64)> {
+            let n = self.queues.len();
+            let cam = match self.policy {
+                RoutePolicy::RoundRobin => {
+                    let c = (0..n)
+                        .map(|off| (self.next_rr + off) % n)
+                        .find(|&c| !self.queues[c].is_empty())?;
+                    self.next_rr = (c + 1) % n;
+                    c
+                }
+                RoutePolicy::LongestQueueFirst => {
+                    let (c, len) = self
+                        .queues
+                        .iter()
+                        .enumerate()
+                        .map(|(i, q)| (i, q.len()))
+                        .max_by_key(|&(i, len)| (len, usize::MAX - i))?;
+                    if len == 0 {
+                        return None;
+                    }
+                    c
+                }
+            };
+            Some((cam, self.queues[cam].pop_front().unwrap()))
+        }
+    }
+
+    #[test]
+    fn active_set_router_matches_the_linear_scan_model() {
+        Prop::new("router == naive reference").cases(64).run(|rng| {
+            let policy = if rng.bool(0.5) {
+                RoutePolicy::RoundRobin
+            } else {
+                RoutePolicy::LongestQueueFirst
+            };
+            let mut n = rng.usize(1, 6);
+            let mut r: Router<u64> = Router::new(n, policy);
+            let mut model = NaiveRouter {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                policy,
+                next_rr: 0,
+            };
+            let mut ticket = 0u64;
+            for _ in 0..rng.usize(1, 200) {
+                match rng.usize(0, 10) {
+                    0 if n < 9 => {
+                        // Hot-add mid-run on both sides.
+                        r.add_stream();
+                        model.queues.push(VecDeque::new());
+                        n += 1;
+                    }
+                    1..=5 => {
+                        let cam = rng.usize(0, n);
+                        r.enqueue(cam, ticket);
+                        model.queues[cam].push_back(ticket);
+                        ticket += 1;
+                    }
+                    _ => {
+                        let got = r.next();
+                        let want = model.next();
+                        prop_assert!(got == want, "got {got:?} want {want:?}");
+                    }
+                }
+                let want_backlog: usize = model.queues.iter().map(VecDeque::len).sum();
+                prop_assert!(
+                    r.total_backlog() == want_backlog,
+                    "backlog {} != {want_backlog}",
+                    r.total_backlog()
+                );
+            }
+            // Full drain agrees to the last item.
+            loop {
+                let got = r.next();
+                let want = model.next();
+                prop_assert!(got == want, "drain: got {got:?} want {want:?}");
+                if got.is_none() {
+                    break;
+                }
+            }
+            prop_assert!(r.total_backlog() == 0);
             Ok(())
         });
     }

@@ -7,16 +7,19 @@
 //! a list of [`Segment`]s (capture N frames at a rate, then
 //! [`SegmentEnd::Shift`] into the next segment, [`SegmentEnd::Crash`]
 //! the producer thread, or close the link [`SegmentEnd::Clean`]ly),
-//! plus a hot-add delay.  A per-camera **supervisor** thread realises
-//! the script: it registers the camera's shard with the consumer when
-//! the camera joins, spawns one real producer thread per incarnation,
-//! joins it, and — on a scripted crash — restarts the next incarnation
-//! on a fresh thread, exactly like a watchdog restarting a wedged
-//! camera process.  A camera whose script *ends* in a crash leaves an
-//! orphaned link; the supervisor closes it (the watchdog noticing the
-//! dead producer), so the consumer still terminates and every frame the
-//! link **accepted** is still classified — crash-churn loses no
-//! accepted frames.
+//! plus a hot-add delay.  The **producer pool**
+//! ([`crate::coordinator::pool`]) realises the script: every camera is
+//! a cell owning its full mutable state (seed, live camera, segment
+//! cursor, incarnation counter), a single scheduler paces the cells
+//! over a deterministic timer wheel, and a fixed worker pool fires due
+//! cells — so every lifecycle verb (hot-add, clean removal, crash with
+//! restart, rate shift) is a state transition plus a wheel operation,
+//! never a thread lifecycle event, and 10k cameras need W threads, not
+//! 10k.  A camera whose script *ends* in a crash leaves an orphaned
+//! link; the pool closes it (the watchdog noticing the dead producer),
+//! so the consumer still terminates and every frame the link
+//! **accepted** is still classified — crash-churn loses no accepted
+//! frames.
 //!
 //! # Determinism
 //!
@@ -24,15 +27,16 @@
 //! data-dependent counter of the run is a function of the script and
 //! its seed alone: camera seeds derive from the stable camera **id**
 //! ([`Scenario::camera_seed`]), incarnation seeds from (camera seed,
-//! incarnation index), and classification is per-frame, so thread
-//! interleaving, hot-add timing and pacing cannot change outcomes.
+//! incarnation index), and classification is per-frame, so worker
+//! count, interleaving, hot-add timing and pacing cannot change
+//! outcomes — the worker-count invariance suite pins digests for
+//! 1/2/4/8-worker pools against committed fixtures.
 //! [`ScenarioReport::digest`] folds exactly those deterministic fields
 //! into one u64 — two runs of the same scenario must agree bit-for-bit
 //! (the CI smoke asserts this; timing-derived fields like latency,
 //! batch counts and watermarks are excluded).
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::collections::{BTreeMap, HashSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -43,25 +47,25 @@ use crate::coordinator::fleet::{
     consume, CameraSpec, ConsumeParams, FleetAccounting, FleetItem, PlanBank,
     ShapeStats, ShardRegistry,
 };
-use crate::coordinator::metrics::{Counter, Metrics};
-use crate::coordinator::pipeline::{
-    BatchClassifier, PipelineStats, SensorCompute, ShapeKey, WireFormat,
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{BatchClassifier, PipelineStats, ShapeKey, WireFormat};
+use crate::coordinator::pool::{
+    default_pool_workers, spawn_producer_pool, CellCompute, PoolCamera, PoolHooks,
 };
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::coordinator::router::RoutePolicy;
 use crate::frontend::FramePlan;
-use crate::sensor::{Camera, Split};
 
 /// How a [`Segment`] hands over to what follows it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SegmentEnd {
-    /// Continue into the next segment on the *same* producer thread and
-    /// camera state — a frame-rate shift, not a lifecycle event.
+    /// Continue into the next segment on the *same* camera incarnation
+    /// and state — a frame-rate shift, not a lifecycle event.
     Shift,
-    /// The producer thread dies mid-stream without closing its link.
-    /// If segments follow, the supervisor restarts a fresh incarnation
-    /// (new thread, new `ExecCtx`, incarnation-derived seed); if not,
-    /// the supervisor closes the orphaned link.
+    /// The producer dies mid-stream without closing its link.  If
+    /// segments follow, the pool restarts a fresh incarnation (new
+    /// camera state, incarnation-derived seed); if not, the pool closes
+    /// the orphaned link.
     Crash,
     /// The camera leaves the fleet cleanly: last frame pushed, link
     /// closed.  Only valid as the final segment.
@@ -122,7 +126,7 @@ impl CameraScript {
         self.segments.iter().map(|s| s.frames as u64).sum()
     }
 
-    /// Producer-thread incarnations the script implies (1 + restarts).
+    /// Camera incarnations the script implies (1 + restarts).
     pub fn scripted_incarnations(&self) -> u32 {
         incarnation_groups(&self.segments).len() as u32
     }
@@ -148,6 +152,9 @@ pub struct Scenario {
     pub max_wait: Duration,
     /// consumer interleaving policy
     pub route: RoutePolicy,
+    /// producer-pool worker threads (None = `min(num_cpus, 8)`); never
+    /// affects the digest, only wall time
+    pub pool_workers: Option<usize>,
 }
 
 impl Scenario {
@@ -162,7 +169,28 @@ impl Scenario {
             backpressure: Backpressure::Block,
             max_wait: Duration::from_millis(10),
             route: RoutePolicy::RoundRobin,
+            pool_workers: None,
         }
+    }
+
+    /// The swarm scenario at an arbitrary scale: `cameras` identical
+    /// low-res cameras (20px, 8-bit quantized wire) streaming 2 frames
+    /// each — the fleet-scale stressor behind `--scenario swarm`.
+    /// Shallow per-camera links and a wide batch keep the memory
+    /// ceiling proportional to `workers + batch`, not to `cameras`.
+    pub fn swarm(cameras: usize, seed: u64) -> Scenario {
+        let scripts = (0..cameras)
+            .map(|id| {
+                CameraScript::steady(
+                    CameraSpec::new(id as u64, 20, 8, WireFormat::Quantized),
+                    2,
+                )
+            })
+            .collect();
+        let mut scenario = Scenario::new("swarm", seed, scripts);
+        scenario.batch = 64;
+        scenario.queue_capacity = 4;
+        scenario
     }
 
     /// The seed a camera runs with: a pure function of (scenario seed,
@@ -175,8 +203,8 @@ impl Scenario {
     }
 
     /// Names accepted by [`Scenario::canned`].
-    pub fn canned_names() -> [&'static str; 4] {
-        ["uniform", "mixed-res", "churn", "crash-storm"]
+    pub fn canned_names() -> [&'static str; 5] {
+        ["uniform", "mixed-res", "churn", "crash-storm", "swarm"]
     }
 
     /// The canned scenarios behind `p2m fleet --scenario <name>`.
@@ -189,7 +217,9 @@ impl Scenario {
     /// * `churn` — steady + early-leaver + hot-add + crash-restart +
     ///   rate-shift cameras on mixed designs;
     /// * `crash-storm` — 6 cameras crashing twice each (12 producer
-    ///   restarts), one ending crashed with an orphaned link.
+    ///   restarts), one ending crashed with an orphaned link;
+    /// * `swarm` — 10 000 identical low-res cameras on the fixed worker
+    ///   pool: the fleet-scale stressor (see [`Scenario::swarm`]).
     pub fn canned(name: &str, seed: u64) -> Option<Scenario> {
         let q8 = |id: u64, res: usize| CameraSpec::new(id, res, 8, WireFormat::Quantized);
         let scenario = match name {
@@ -256,7 +286,7 @@ impl Scenario {
                             Segment::free(3, SegmentEnd::Crash),
                             Segment::free(3, SegmentEnd::Crash),
                             // Camera 5 dies for good: orphaned link,
-                            // closed by its supervisor.
+                            // closed by the pool watchdog.
                             Segment::free(
                                 4,
                                 if id == 5 { SegmentEnd::Crash } else { SegmentEnd::Clean },
@@ -265,6 +295,7 @@ impl Scenario {
                     })
                     .collect(),
             ),
+            "swarm" => Scenario::swarm(10_000, seed),
             _ => return None,
         };
         Some(scenario)
@@ -280,9 +311,10 @@ impl Scenario {
         if self.queue_capacity == 0 {
             bail!("queue_capacity must be >= 1");
         }
-        for (i, script) in self.cameras.iter().enumerate() {
+        let mut seen_ids = HashSet::with_capacity(self.cameras.len());
+        for script in &self.cameras {
             let id = script.spec.id;
-            if self.cameras[..i].iter().any(|other| other.spec.id == id) {
+            if !seen_ids.insert(id) {
                 bail!("duplicate camera id {id}");
             }
             if script.segments.is_empty() {
@@ -305,10 +337,10 @@ impl Scenario {
     }
 }
 
-/// Segments grouped into producer-thread incarnations: consecutive
-/// segments joined by [`SegmentEnd::Shift`] share a thread; `Crash` and
+/// Segments grouped into camera incarnations: consecutive segments
+/// joined by [`SegmentEnd::Shift`] share an incarnation; `Crash` and
 /// `Clean` close a group.  Returns inclusive (start, end) index pairs.
-fn incarnation_groups(segments: &[Segment]) -> Vec<(usize, usize)> {
+pub(crate) fn incarnation_groups(segments: &[Segment]) -> Vec<(usize, usize)> {
     let mut groups = Vec::new();
     let mut start = 0usize;
     for (i, seg) in segments.iter().enumerate() {
@@ -408,15 +440,15 @@ fn mix(h: u64, v: u64) -> u64 {
 /// The seed incarnation `incarnation` of a camera runs with; 0 maps to
 /// the camera seed itself, so an uncrashed camera streams exactly like
 /// its plain-fleet twin.
-fn incarnation_seed(camera_seed: u64, incarnation: u32) -> u64 {
+pub(crate) fn incarnation_seed(camera_seed: u64, incarnation: u32) -> u64 {
     camera_seed ^ u64::from(incarnation).wrapping_mul(0x9e37_79b9_7f4a_7c15)
 }
 
 /// Run a scripted scenario against `classifier` (on the caller's
 /// thread, like the fleet).  Plans are compiled up front, deduped by
-/// design through a [`PlanBank`]; each camera gets a supervisor thread
-/// realising its script (see module docs), and the shared shape-aware
-/// consumer adopts shard links as cameras hot-add.
+/// design through a [`PlanBank`]; the fixed producer pool realises
+/// every script over the timer wheel (see module docs), and the shared
+/// shape-aware consumer adopts shard links as cameras hot-add.
 pub fn run_scenario<C: BatchClassifier>(
     classifier: &mut C,
     scenario: &Scenario,
@@ -471,80 +503,45 @@ fn run_scenario_sink<S: ClassifySink>(
         route: scenario.route,
         expected_shards: n,
     };
-    let frames_in = metrics.counter("scenario_frames_captured");
-    let restarts = metrics.counter("scenario_producer_restarts");
+    let hooks = PoolHooks {
+        frames_in: metrics.counter("scenario_frames_captured"),
+        restarts: Some(metrics.counter("scenario_producer_restarts")),
+        active: Some(metrics.gauge("scenario_active_cameras")),
+        ticks: metrics.counter("scheduler_ticks"),
+        lag_us: metrics.gauge("timer_lag_max_us"),
+        depth: metrics.gauge("pool_queue_depth"),
+    };
     let active = metrics.gauge("scenario_active_cameras");
     let latency = metrics.latency("scenario_e2e_latency");
+    let workers = scenario.pool_workers.unwrap_or_else(default_pool_workers);
     let mut per_camera = vec![PipelineStats::default(); n];
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
-    let incarnations_ran: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let mut incarnations: Vec<u32> = vec![0; n];
     let t0 = Instant::now();
     let mut consumer_result: Result<()> = Ok(());
 
-    std::thread::scope(|s| {
-        for (slot, script) in scenario.cameras.iter().enumerate() {
-            let plan = plans[slot].clone();
-            let registry = &registry;
-            let frames_in = frames_in.clone();
-            let restarts = restarts.clone();
-            let active = active.clone();
-            let ran = &incarnations_ran[slot];
-            let camera_seed = scenario.camera_seed(&script.spec);
-            let queue_capacity = scenario.queue_capacity;
-            let backpressure = scenario.backpressure;
-            // The supervisor: joins the fleet (hot-add), then realises
-            // the script one producer-thread incarnation at a time.
-            s.spawn(move || {
-                if !script.start_delay.is_zero() {
-                    std::thread::sleep(script.start_delay);
-                }
-                let link: BoundedQueue<FleetItem> =
-                    BoundedQueue::new(queue_capacity, backpressure);
-                registry.register(slot, link.clone());
-                active.add(1);
-                let groups = incarnation_groups(&script.segments);
-                for (gi, &(start, end)) in groups.iter().enumerate() {
-                    let segments = &script.segments[start..=end];
-                    let boundary = script.segments[end].end;
-                    let seed = incarnation_seed(camera_seed, gi as u32);
-                    let producer_link = link.clone();
-                    let producer_frames_in = frames_in.clone();
-                    // Fresh ExecCtx over the shared plan, the spec's
-                    // wire format.
-                    let producer_sensor =
-                        SensorCompute::p2m_wire(plan.clone(), script.spec.wire);
-                    // A real thread per incarnation: a crash is this
-                    // thread dying, a restart is the next one starting.
-                    let producer = s.spawn(move || {
-                        run_incarnation(
-                            slot,
-                            segments,
-                            producer_sensor,
-                            producer_link,
-                            seed,
-                            producer_frames_in,
-                            1,
-                        )
-                    });
-                    let _ = producer.join();
-                    ran.fetch_add(1, Ordering::SeqCst);
-                    if boundary == SegmentEnd::Crash && gi + 1 < groups.len() {
-                        restarts.inc();
-                    }
-                    if link.is_closed() {
-                        break; // consumer aborted; stop the script
-                    }
-                }
-                active.add(-1);
-                // Clean scripts close their own stream's end of life;
-                // crash-terminated scripts leave an orphan the
-                // supervisor (watchdog) closes.  Either way the
-                // consumer can drain and terminate.
-                link.close();
-            });
-        }
+    // One cell per scripted camera; the pool owns them from here.  The
+    // cell registers its link with the consumer at its first dispatch
+    // (after `start_delay`), which is what "hot-add" now means.
+    let cameras: Vec<PoolCamera> = scenario
+        .cameras
+        .iter()
+        .enumerate()
+        .map(|(slot, script)| PoolCamera {
+            slot,
+            segments: script.segments.clone(),
+            start_delay: script.start_delay,
+            seed: scenario.camera_seed(&script.spec),
+            compute: CellCompute::p2m(plans[slot].clone(), script.spec.wire),
+            link: BoundedQueue::new(scenario.queue_capacity, scenario.backpressure),
+            preregistered: false,
+            frontend_threads: 1,
+        })
+        .collect();
 
+    std::thread::scope(|s| {
+        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, hooks);
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
@@ -553,9 +550,12 @@ fn run_scenario_sink<S: ClassifySink>(
         };
         consumer_result = consume(sink, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
-            // Unblock every producer (registered or yet to register) so
-            // the scope's implicit joins cannot hang.
+            // Close every link (registered or yet to register) so cells
+            // retire at their next dispatch and the pool drains.
             registry.poison();
+        }
+        if let Ok(ran) = scheduler.join() {
+            incarnations = ran;
         }
     });
     consumer_result?;
@@ -583,13 +583,13 @@ fn run_scenario_sink<S: ClassifySink>(
         .cameras
         .iter()
         .zip(per_camera)
-        .zip(&incarnations_ran)
+        .zip(incarnations)
         .map(|((script, mut stats), ran)| {
             stats.wall_time_s = wall;
             stats.throughput_fps = stats.frames_classified as f64 / wall.max(1e-9);
             CameraReport {
                 spec: script.spec,
-                incarnations: ran.load(Ordering::SeqCst),
+                incarnations: ran,
                 scripted_frames: script.scripted_frames(),
                 stats,
             }
@@ -603,56 +603,6 @@ fn run_scenario_sink<S: ClassifySink>(
         plans_compiled,
         peak_active_cameras: active.high_watermark(),
     })
-}
-
-/// One producer-thread incarnation — THE capture loop of both serving
-/// topologies: [`crate::coordinator::run_fleet`] runs it with a single
-/// free `Clean` segment per camera, the scenario driver with each
-/// scripted segment group.  Owns its camera state (seeded for the
-/// incarnation) and walks its segments with per-segment pacing; does
-/// **not** close the link (the caller owns the lifecycle).
-pub(crate) fn run_incarnation(
-    slot: usize,
-    segments: &[Segment],
-    sensor: SensorCompute,
-    link: BoundedQueue<FleetItem>,
-    seed: u64,
-    frames_in: Arc<Counter>,
-    frontend_threads: usize,
-) {
-    let mut sensor = sensor;
-    let mut camera = Camera::new(sensor.sensor_config(), seed, Split::Test);
-    for seg in segments {
-        let tick =
-            (seg.frame_rate > 0.0).then(|| Duration::from_secs_f64(1.0 / seg.frame_rate));
-        for _ in 0..seg.frames {
-            let t_frame = Instant::now();
-            let frame = camera.capture();
-            let captured_at = Instant::now();
-            let (payload, bytes) = sensor.run_frame(&frame.image, frontend_threads);
-            frames_in.inc();
-            let accepted = link.push(FleetItem {
-                camera: slot,
-                label: frame.label,
-                captured_at,
-                payload,
-                bytes,
-            });
-            // A refused push on a *closed* link means the consumer
-            // aborted — stop burning capture/frontend work (a refusal
-            // on an open DropNewest link is an ordinary accounted drop
-            // and capture continues).
-            if !accepted && link.is_closed() {
-                return;
-            }
-            if let Some(tick) = tick {
-                let elapsed = t_frame.elapsed();
-                if elapsed < tick {
-                    std::thread::sleep(tick - elapsed);
-                }
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -760,6 +710,26 @@ mod tests {
                 .any(|c| c.segments.iter().any(|s| s.end == SegmentEnd::Shift)),
             "rate shift"
         );
+    }
+
+    #[test]
+    fn swarm_scenario_scales_with_stable_identities() {
+        let s = Scenario::swarm(100, 3);
+        assert_eq!(s.name, "swarm");
+        assert_eq!(s.cameras.len(), 100);
+        s.validate().unwrap();
+        for (i, cam) in s.cameras.iter().enumerate() {
+            assert_eq!(cam.spec.id, i as u64, "ids are the slot order");
+            assert_eq!(cam.spec.resolution, 20, "swarm cameras are low-res");
+            assert_eq!(cam.spec.wire, WireFormat::Quantized);
+            assert_eq!(cam.scripted_frames(), 2);
+            assert_eq!(cam.scripted_incarnations(), 1);
+        }
+        // The canned entry is the 10k-camera instance of the same build.
+        let canned = Scenario::canned("swarm", 3).unwrap();
+        assert_eq!(canned.cameras.len(), 10_000);
+        assert_eq!(canned.batch, s.batch);
+        assert_eq!(canned.queue_capacity, s.queue_capacity);
     }
 
     #[test]

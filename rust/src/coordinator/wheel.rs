@@ -1,0 +1,384 @@
+//! Deterministic hashed-hierarchical timer wheel (the fleet's pacing
+//! core).
+//!
+//! A classic hashed wheel (Varghese & Lauck) with a small fixed
+//! hierarchy: level `l` covers dues up to `slots^(l+1)` ticks out at a
+//! granularity of `slots^l` ticks; anything beyond the top level parks
+//! in an overflow list that is re-homed each time the top level wraps.
+//! Scheduling and cancellation are O(1); advancing costs O(1) per tick
+//! plus O(1) amortised per timer cascaded.
+//!
+//! The wheel is *pure*: time is a caller-advanced `u64` tick counter,
+//! never a clock read, so the same schedule/advance sequence always
+//! fires the same timers in the same order — `advance` returns fired
+//! timers sorted by `(due, TimerId)`, and `TimerId`s are allocated in
+//! schedule order.  That total order is what makes the worker-pool
+//! scheduler built on top of it reproducible (see `pool`), and is
+//! pinned by the shadow-priority-queue property test below, mirroring
+//! the `batcher` shadow-FIFO style.
+
+use std::collections::HashSet;
+
+/// Handle for a scheduled timer; allocated in schedule order and used
+/// to break fire-order ties deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TimerId(u64);
+
+struct Entry<T> {
+    due: u64,
+    id: u64,
+    item: T,
+}
+
+/// Hierarchical timer wheel over abstract ticks.  `T` is the payload
+/// returned when a timer fires.
+pub struct TimerWheel<T> {
+    /// `buckets[level][slot]` — unordered; order is restored at fire
+    /// time by the `(due, id)` sort.
+    buckets: Vec<Vec<Vec<Entry<T>>>>,
+    /// Timers too far out for the top level; re-homed on top-level wrap.
+    overflow: Vec<Entry<T>>,
+    slots: u64,
+    /// `gran[l] = slots^l`: tick granularity of level `l`.
+    gran: Vec<u64>,
+    /// `span[l] = slots^(l+1)`: horizon of level `l`.
+    span: Vec<u64>,
+    now: u64,
+    next_id: u64,
+    /// Ids scheduled but not yet fired or cancelled.  Cancelled entries
+    /// stay in their bucket and are dropped when the bucket is next
+    /// processed, keeping `cancel` O(1).
+    live_ids: HashSet<u64>,
+}
+
+impl<T> TimerWheel<T> {
+    /// Default geometry: 64 slots x 3 levels = a 262144-tick horizon
+    /// before overflow parking (26 s at the pool's 100 us tick).
+    pub fn new() -> Self {
+        Self::with_geometry(64, 3)
+    }
+
+    /// Build a wheel with `slots` slots per level and `levels` levels.
+    pub fn with_geometry(slots: usize, levels: usize) -> Self {
+        assert!(slots >= 2, "a wheel needs at least 2 slots per level");
+        assert!(levels >= 1, "a wheel needs at least 1 level");
+        let slots = slots as u64;
+        let mut gran = Vec::with_capacity(levels);
+        let mut span = Vec::with_capacity(levels);
+        let mut g = 1u64;
+        for _ in 0..levels {
+            gran.push(g);
+            span.push(g.saturating_mul(slots));
+            g = g.saturating_mul(slots);
+        }
+        TimerWheel {
+            buckets: (0..levels).map(|_| (0..slots as usize).map(|_| Vec::new()).collect()).collect(),
+            overflow: Vec::new(),
+            slots,
+            gran,
+            span,
+            now: 0,
+            next_id: 0,
+            live_ids: HashSet::new(),
+        }
+    }
+
+    /// Current tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Live (scheduled, unfired, uncancelled) timer count.
+    pub fn len(&self) -> usize {
+        self.live_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live_ids.is_empty()
+    }
+
+    /// Schedule `item` to fire at tick `due`.  A due at or before the
+    /// current tick is clamped to `now + 1` (the next `advance` fires
+    /// it); the wheel never fires within the call that scheduled.
+    pub fn schedule(&mut self, due: u64, item: T) -> TimerId {
+        let due = due.max(self.now + 1);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.live_ids.insert(id);
+        self.place(Entry { due, id, item });
+        TimerId(id)
+    }
+
+    /// Cancel a pending timer.  Returns false when the id already fired
+    /// or was already cancelled.  Rescheduling mid-flight (a rate
+    /// shift) is `cancel` + `schedule`.
+    pub fn cancel(&mut self, id: TimerId) -> bool {
+        self.live_ids.remove(&id.0)
+    }
+
+    /// Earliest live due, or None when empty.  O(live + cancelled) scan
+    /// — fine for the pool scheduler's idle-wait sizing, not for per-
+    /// tick use.
+    pub fn next_due(&self) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        let all = self.buckets.iter().flatten().chain(std::iter::once(&self.overflow));
+        for bucket in all {
+            for e in bucket {
+                if self.live_ids.contains(&e.id) {
+                    best = Some(match best {
+                        Some(b) => b.min(e.due),
+                        None => e.due,
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Advance time to tick `to`, returning every timer that fired,
+    /// sorted by `(due, TimerId)`.  Ticks are processed one by one so
+    /// cascade windows are never skipped while timers are live; when
+    /// the wheel is empty the clock jumps straight to `to`.
+    pub fn advance(&mut self, to: u64) -> Vec<(u64, TimerId, T)> {
+        let mut fired = Vec::new();
+        while self.now < to {
+            if self.live_ids.is_empty() {
+                // Only cancelled husks remain; they are dropped whenever
+                // their bucket is next processed, so jumping is safe.
+                self.now = to;
+                break;
+            }
+            self.now += 1;
+            let now = self.now;
+            // Cascade coarse levels first so a timer can fall through
+            // several levels (and fire) within a single tick.
+            for l in (1..self.buckets.len()).rev() {
+                if now % self.gran[l] == 0 {
+                    let slot = ((now / self.gran[l]) % self.slots) as usize;
+                    let bucket = std::mem::take(&mut self.buckets[l][slot]);
+                    for e in bucket {
+                        self.replace_or_fire(e, &mut fired);
+                    }
+                }
+            }
+            // Overflow re-homes each time the top level wraps.
+            let top_span = *self.span.last().expect("levels >= 1");
+            if now % top_span == 0 && !self.overflow.is_empty() {
+                let parked = std::mem::take(&mut self.overflow);
+                for e in parked {
+                    self.replace_or_fire(e, &mut fired);
+                }
+            }
+            // Fire this tick's level-0 bucket.
+            let slot = (now % self.slots) as usize;
+            let bucket = std::mem::take(&mut self.buckets[0][slot]);
+            for e in bucket {
+                self.replace_or_fire(e, &mut fired);
+            }
+        }
+        fired.sort_by_key(|f| (f.0, f.1));
+        fired
+    }
+
+    /// File an entry into the level whose horizon covers its delta.
+    /// Precondition: `due > now` (schedule clamps; cascades re-place
+    /// only future entries).
+    fn place(&mut self, e: Entry<T>) {
+        debug_assert!(e.due > self.now);
+        let delta = e.due - self.now;
+        for l in 0..self.buckets.len() {
+            if delta < self.span[l] {
+                let slot = ((e.due / self.gran[l]) % self.slots) as usize;
+                self.buckets[l][slot].push(e);
+                return;
+            }
+        }
+        self.overflow.push(e);
+    }
+
+    /// A bucket entry during advance: drop if cancelled, fire if due,
+    /// otherwise re-place at a finer level.
+    fn replace_or_fire(&mut self, e: Entry<T>, fired: &mut Vec<(u64, TimerId, T)>) {
+        if !self.live_ids.contains(&e.id) {
+            return; // cancelled
+        }
+        if e.due <= self.now {
+            self.live_ids.remove(&e.id);
+            fired.push((e.due, TimerId(e.id), e.item));
+        } else {
+            self.place(e);
+        }
+    }
+}
+
+impl<T> Default for TimerWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn fires_in_due_order_with_schedule_order_tiebreak() {
+        let mut w = TimerWheel::with_geometry(8, 2);
+        let a = w.schedule(5, "a");
+        let b = w.schedule(3, "b");
+        let c = w.schedule(5, "c");
+        let fired = w.advance(10);
+        let got: Vec<_> = fired.iter().map(|(due, id, item)| (*due, *id, *item)).collect();
+        assert_eq!(got, vec![(3, b, "b"), (5, a, "a"), (5, c, "c")]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn past_dues_clamp_to_the_next_tick() {
+        let mut w: TimerWheel<u32> = TimerWheel::with_geometry(4, 2);
+        w.advance(9);
+        w.schedule(2, 7); // already past: fires at tick 10
+        assert_eq!(w.next_due(), Some(10));
+        assert!(w.advance(9).is_empty());
+        let fired = w.advance(10);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].0, 10);
+    }
+
+    #[test]
+    fn cancel_is_exact_and_idempotent() {
+        let mut w = TimerWheel::with_geometry(4, 2);
+        let a = w.schedule(3, "a");
+        let b = w.schedule(4, "b");
+        assert!(w.cancel(a));
+        assert!(!w.cancel(a), "double-cancel reports false");
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.next_due(), Some(4));
+        let fired = w.advance(20);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].1, b);
+        assert!(!w.cancel(b), "cancelling a fired timer reports false");
+    }
+
+    #[test]
+    fn distant_dues_survive_overflow_parking() {
+        // Horizon of (4 slots, 2 levels) is 16 ticks; park far beyond it.
+        let mut w = TimerWheel::with_geometry(4, 2);
+        let far = w.schedule(1000, "far");
+        let near = w.schedule(2, "near");
+        let first = w.advance(999);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].1, near);
+        let second = w.advance(1000);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].1, far);
+        assert_eq!(second[0].0, 1000);
+    }
+
+    #[test]
+    fn default_geometry_handles_sparse_long_ranges() {
+        let mut w = TimerWheel::new();
+        let dues = [1u64, 63, 64, 65, 4095, 4096, 4097, 262_143, 262_144, 300_000];
+        for &d in &dues {
+            w.schedule(d, d);
+        }
+        let fired = w.advance(400_000);
+        let got: Vec<u64> = fired.iter().map(|f| f.0).collect();
+        assert_eq!(got, dues.to_vec());
+        for (due, _, item) in fired {
+            assert_eq!(due, item, "timers fire at their scheduled due");
+        }
+    }
+
+    /// Satellite: the wheel against a shadow priority-queue model.
+    /// Arbitrary (period, phase) sets, advances across wrap boundaries,
+    /// cancellation, and mid-flight rescheduling (rate shifts) must all
+    /// match the model's exact fire order with no lost or duplicated
+    /// timers.
+    #[test]
+    fn matches_shadow_priority_queue_under_random_schedules() {
+        Prop::new("timer wheel vs shadow priority queue").cases(48).run(|rng| {
+            let geometries = [(4usize, 2usize), (5, 2), (8, 2), (4, 3)];
+            let (slots, levels) = geometries[rng.usize(0, geometries.len())];
+            let horizon = (slots as u64).pow(levels as u32);
+            let mut wheel: TimerWheel<u64> = TimerWheel::with_geometry(slots, levels);
+            // Shadow model: (due, id, payload) triples, fired by
+            // filtering due <= to and sorting by (due, id).
+            let mut shadow: Vec<(u64, TimerId, u64)> = Vec::new();
+            let mut payload = 0u64;
+
+            for _ in 0..160 {
+                match rng.usize(0, 10) {
+                    // Schedule a camera tick: phase anywhere from "past
+                    // due" (clamped) to 3 horizons out (overflow).
+                    0..=3 => {
+                        let delta = rng.usize(0, 3 * horizon as usize) as u64;
+                        let due = wheel.now().saturating_add(delta);
+                        let id = wheel.schedule(due, payload);
+                        shadow.push((due.max(wheel.now() + 1), id, payload));
+                        payload += 1;
+                    }
+                    // Advance across up to ~1.5 wraps of the full wheel.
+                    4..=6 => {
+                        let step = rng.usize(0, (horizon + horizon / 2) as usize + 1) as u64;
+                        let to = wheel.now() + step;
+                        let fired = wheel.advance(to);
+                        let mut expect: Vec<(u64, TimerId, u64)> =
+                            shadow.iter().copied().filter(|s| s.0 <= to).collect();
+                        expect.sort_by_key(|s| (s.0, s.1));
+                        shadow.retain(|s| s.0 > to);
+                        prop_assert!(
+                            fired == expect,
+                            "advance({to}) fired {fired:?}, model says {expect:?}"
+                        );
+                    }
+                    // Cancel a random pending timer.
+                    7..=8 => {
+                        if shadow.is_empty() {
+                            continue;
+                        }
+                        let k = rng.usize(0, shadow.len());
+                        let (_, id, _) = shadow.remove(k);
+                        prop_assert!(wheel.cancel(id), "live timer must cancel");
+                        prop_assert!(!wheel.cancel(id), "second cancel must fail");
+                    }
+                    // Rate shift: reschedule a pending timer mid-flight.
+                    _ => {
+                        if shadow.is_empty() {
+                            continue;
+                        }
+                        let k = rng.usize(0, shadow.len());
+                        let (_, old_id, item) = shadow.remove(k);
+                        prop_assert!(wheel.cancel(old_id));
+                        let due = wheel.now() + rng.usize(0, 2 * horizon as usize) as u64;
+                        let id = wheel.schedule(due, item);
+                        shadow.push((due.max(wheel.now() + 1), id, item));
+                    }
+                }
+                prop_assert!(
+                    wheel.len() == shadow.len(),
+                    "live count {} != model {}",
+                    wheel.len(),
+                    shadow.len()
+                );
+                let model_next = shadow.iter().map(|s| s.0).min();
+                prop_assert!(
+                    wheel.next_due() == model_next,
+                    "next_due {:?} != model {:?}",
+                    wheel.next_due(),
+                    model_next
+                );
+            }
+            // Drain: nothing may be lost or duplicated at the end.
+            let to = wheel.now() + 4 * horizon;
+            let fired = wheel.advance(to);
+            let mut expect = shadow.clone();
+            expect.sort_by_key(|s| (s.0, s.1));
+            prop_assert!(fired == expect, "final drain mismatch");
+            prop_assert!(wheel.is_empty());
+            Ok(())
+        });
+    }
+}

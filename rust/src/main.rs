@@ -86,12 +86,17 @@ commands (one per paper table/figure):
             pjrt when artifacts exist, threshold otherwise) and
             --workers N (N > 1, Send backends only) serves it through a
             pooled classify stage with in-order result reassembly
-            --scenario <uniform|mixed-res|churn|crash-storm|list> runs a
-            deterministic scripted fleet instead (heterogeneous cameras,
-            hot-add/remove/crash/rate-shift lifecycle events; add
-            --check-digest to run it twice and verify the stats digest
-            is reproducible, --seed S to reseed the whole script;
-            --backend/--workers apply here too, pjrt excluded)
+            --pool N sizes the fixed producer pool that multiplexes all
+            cameras over a deterministic timer wheel (default
+            min(cpus, 8); identical digests for every N)
+            --scenario <uniform|mixed-res|churn|crash-storm|swarm|list>
+            runs a deterministic scripted fleet instead (heterogeneous
+            cameras, hot-add/remove/crash/rate-shift lifecycle events;
+            swarm = 10k synthetic low-res cameras on the fixed pool,
+            --cameras N rescales it; add --check-digest to run it twice
+            and verify the stats digest is reproducible, --seed S to
+            reseed the whole script; --backend/--workers/--pool apply
+            here too, pjrt excluded)
   info      artifact + environment status
 
 examples (cargo run --release --example <name>):
@@ -595,9 +600,9 @@ fn parse_backend(rest: &[&str], default: BackendSel) -> anyhow::Result<BackendSe
 
 fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
-        p2m_fleet_sensors, run_fleet, run_fleet_pooled, synthetic_fleet_sensors,
-        Backpressure, BatchClassifier, FleetConfig, FleetStats, MeanThresholdClassifier,
-        Metrics, PjrtClassifier, SensorCompute, WireFormat,
+        default_pool_workers, p2m_fleet_sensors, run_fleet, run_fleet_pooled,
+        synthetic_fleet_sensors, Backpressure, BatchClassifier, FleetConfig, FleetStats,
+        MeanThresholdClassifier, Metrics, PjrtClassifier, SensorCompute, WireFormat,
     };
     use p2m::model::NativeBackend;
     use p2m::runtime::{Manifest, ModelBundle, Runtime};
@@ -619,6 +624,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     let queue = flag("--queue").unwrap_or(16);
     let threads = flag("--threads").unwrap_or(1);
     let workers = flag("--workers").unwrap_or(1).max(1);
+    let pool = flag("--pool").map(|n| n.max(1));
     let seed = flag("--seed").unwrap_or(0) as u64;
     let drop = rest.contains(&"--drop");
     let wire = if rest.contains(&"--quantized") {
@@ -635,6 +641,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         backpressure: if drop { Backpressure::DropNewest } else { Backpressure::Block },
         base_seed,
         frontend_threads: threads,
+        pool_workers: pool,
         ..FleetConfig::default()
     };
 
@@ -762,12 +769,13 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     println!(
         "== fleet: {cameras} cameras x {frames} frames, batch {batch}, queue {queue}, \
          {} backpressure, {threads} frontend thread(s), {} wire, {backend_name} backend \
-         x{workers} worker(s) ==",
+         x{workers} worker(s), producer pool {} ==",
         if drop { "drop-newest" } else { "blocking" },
         match wire {
             WireFormat::Dense => "dense f32",
             WireFormat::Quantized => "quantized",
-        }
+        },
+        pool.unwrap_or_else(default_pool_workers)
     );
     let metrics = Metrics::new();
     let fleet_sensors = mk_sensors(bundle.as_ref(), cameras)?;
@@ -849,8 +857,8 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
 /// digest must be identical for every worker count.
 fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
-        run_scenario, run_scenario_pooled, MeanThresholdClassifier, Metrics, Scenario,
-        ScenarioReport, WireFormat,
+        default_pool_workers, run_scenario, run_scenario_pooled, MeanThresholdClassifier,
+        Metrics, Scenario, ScenarioReport, WireFormat,
     };
     use p2m::model::NativeBackend;
 
@@ -874,6 +882,17 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1usize)
         .max(1);
+    let pool = rest
+        .iter()
+        .position(|&a| a == "--pool")
+        .and_then(|i| rest.get(i + 1))
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|n| n.max(1));
+    let cameras_override = rest
+        .iter()
+        .position(|&a| a == "--cameras")
+        .and_then(|i| rest.get(i + 1))
+        .and_then(|s| s.parse::<usize>().ok());
     let sel = parse_backend(rest, BackendSel::Threshold)?;
     if sel == BackendSel::Pjrt {
         anyhow::bail!(
@@ -882,12 +901,18 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         );
     }
     let check_digest = rest.contains(&"--check-digest");
-    let scenario = Scenario::canned(name, seed).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown scenario '{name}' (known: {})",
-            Scenario::canned_names().join(", ")
-        )
-    })?;
+    let mut scenario = match (name, cameras_override) {
+        // The swarm is the one scale-parameterised scenario: --cameras
+        // rescales it (CI smokes it at 1k, the full lane at 10k).
+        ("swarm", Some(n)) => Scenario::swarm(n, seed),
+        _ => Scenario::canned(name, seed).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario '{name}' (known: {})",
+                Scenario::canned_names().join(", ")
+            )
+        })?,
+    };
+    scenario.pool_workers = pool;
 
     let run_once = || -> anyhow::Result<(ScenarioReport, Metrics)> {
         let metrics = Metrics::new();
@@ -913,19 +938,25 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
 
     println!(
         "== scenario '{name}' (seed {seed}): {} cameras, batch {}, {} backend \
-         x{workers} worker(s) ==",
+         x{workers} worker(s), producer pool {} ==",
         scenario.cameras.len(),
         scenario.batch,
         match sel {
             BackendSel::Native => "native",
             _ => "mean-threshold",
-        }
+        },
+        pool.unwrap_or_else(default_pool_workers)
     );
     let (report, metrics) = run_once()?;
 
+    // A 10k-camera swarm would print 10k rows; cap the per-camera table
+    // and keep the aggregate + digest as the headline output.
+    let max_rows = 16usize;
+    let shown = report.per_camera.len().min(max_rows);
     let rows: Vec<Vec<String>> = report
         .per_camera
         .iter()
+        .take(shown)
         .map(|cam| {
             let spec = &cam.spec;
             vec![
@@ -967,6 +998,9 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
             &rows
         )
     );
+    if report.per_camera.len() > shown {
+        println!("({} more cameras elided)", report.per_camera.len() - shown);
+    }
 
     let shape_rows: Vec<Vec<String>> = report
         .per_shape

@@ -1,0 +1,205 @@
+//! Integration: the fixed producer pool at fleet scale — worker-count
+//! invariance of scenario digests (the same script must hash identically
+//! whether 1 or 8 pool workers realise it), digest pinning against a
+//! committed fixture with first-run bootstrap, and starvation-freedom
+//! when one high-rate camera shares the pool with a paced swarm.
+//! Needs no artifacts or PJRT.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use p2m::coordinator::{
+    run_scenario, CameraReport, CameraScript, CameraSpec, MeanThresholdClassifier,
+    Metrics, Scenario, ScenarioReport, Segment, SegmentEnd, WireFormat,
+};
+use p2m::util::json::Json;
+
+fn run_with_pool(scenario: &Scenario, workers: usize) -> (ScenarioReport, Metrics) {
+    let mut s = scenario.clone();
+    s.pool_workers = Some(workers);
+    let metrics = Metrics::new();
+    let mut clf = MeanThresholdClassifier::new(0.5);
+    let report = run_scenario(&mut clf, &s, &metrics).unwrap();
+    (report, metrics)
+}
+
+/// The deterministic per-camera outcome tuple (timing excluded) — the
+/// fields the digest folds, compared structurally for better failure
+/// messages than a hash mismatch.
+fn outcome(cam: &CameraReport) -> (u64, u32, u64, u64, u64, u64, u64, u64) {
+    (
+        cam.spec.id,
+        cam.incarnations,
+        cam.scripted_frames,
+        cam.stats.frames_captured,
+        cam.stats.frames_classified,
+        cam.stats.frames_dropped,
+        cam.stats.bytes_from_sensor,
+        cam.stats.correct,
+    )
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/scenario_digests.json")
+}
+
+/// Compare the computed digests against the committed fixture.  The
+/// fixture ships un-armed (no pinned values): the first run on a real
+/// toolchain arms it with the digests just computed — which the caller
+/// has already cross-checked across worker counts and repeat runs — and
+/// every later run compares strictly.  A drift after arming means the
+/// refactor changed observable outcomes, not just scheduling.
+fn check_fixture(digests: &BTreeMap<String, u64>) {
+    let path = fixture_path();
+    let text = std::fs::read_to_string(&path)
+        .expect("tests/fixtures/scenario_digests.json must be checked in");
+    let v = Json::parse(&text).expect("digest fixture parses");
+    assert_eq!(
+        v.get("schema").and_then(Json::as_str),
+        Some("p2m-scenario-digests-v1"),
+        "unknown digest fixture schema"
+    );
+    if v.get("armed").and_then(Json::as_bool) == Some(true) {
+        let pinned = v.get("digests").and_then(Json::as_obj).expect("armed fixture has digests");
+        for (label, digest) in digests {
+            let want = pinned
+                .get(label)
+                .and_then(Json::as_str)
+                .unwrap_or_else(|| panic!("fixture has no pinned digest for '{label}'"));
+            assert_eq!(
+                format!("{digest:016x}"),
+                want,
+                "'{label}' digest drifted from the pinned fixture; if the \
+                 behaviour change is intentional, set \"armed\": false and \
+                 empty \"digests\" in scenario_digests.json, rerun to \
+                 re-bootstrap, and commit the re-armed file"
+            );
+        }
+    } else {
+        let pinned: BTreeMap<String, Json> = digests
+            .iter()
+            .map(|(k, &d)| (k.clone(), Json::Str(format!("{d:016x}"))))
+            .collect();
+        let out = Json::obj(vec![
+            ("schema", Json::Str("p2m-scenario-digests-v1".into())),
+            ("armed", Json::Bool(true)),
+            ("digests", Json::Obj(pinned)),
+        ]);
+        std::fs::write(&path, out.dump() + "\n").expect("write armed digest fixture");
+        eprintln!(
+            "scenario_digests.json was un-armed: pinned {} digests — \
+             commit the armed fixture so future runs compare against it",
+            digests.len()
+        );
+    }
+}
+
+#[test]
+fn digests_are_invariant_across_pool_worker_counts() {
+    // The tentpole's determinism contract: camera state lives in cells,
+    // workers only lend CPU — so 1, 2, 4 and 8 pool workers must realise
+    // byte-identical outcomes for every scripted scenario, swarm scale
+    // included (reduced to 192 cameras to keep the matrix quick).
+    let scenarios: Vec<(&str, Scenario)> = vec![
+        ("swarm-192", Scenario::swarm(192, 11)),
+        ("churn", Scenario::canned("churn", 11).unwrap()),
+        ("crash-storm", Scenario::canned("crash-storm", 11).unwrap()),
+    ];
+    let mut digests: BTreeMap<String, u64> = BTreeMap::new();
+    for (label, scenario) in &scenarios {
+        let (base, _) = run_with_pool(scenario, 1);
+        let base_outcomes: Vec<_> = base.per_camera.iter().map(outcome).collect();
+        for workers in [2usize, 4, 8] {
+            let (r, _) = run_with_pool(scenario, workers);
+            let got: Vec<_> = r.per_camera.iter().map(outcome).collect();
+            assert_eq!(got, base_outcomes, "{label}: {workers} workers changed an outcome");
+            assert_eq!(
+                r.digest(),
+                base.digest(),
+                "{label}: {workers} workers changed the digest"
+            );
+        }
+        // Repeatability at a fixed worker count (same contract the CI
+        // swarm smoke checks via --check-digest).
+        let (again, _) = run_with_pool(scenario, 4);
+        assert_eq!(again.digest(), base.digest(), "{label}: rerun drifted");
+        digests.insert((*label).to_string(), base.digest());
+    }
+    check_fixture(&digests);
+}
+
+#[test]
+fn swarm_completes_on_a_bounded_pool_without_losing_frames() {
+    // 512 cameras over at most 4 worker threads: every scripted frame is
+    // captured and classified, nothing drops (Block backpressure), and
+    // the scheduler actually ran the timer wheel.
+    let (report, metrics) = run_with_pool(&Scenario::swarm(512, 3), 4);
+    assert_eq!(report.per_camera.len(), 512);
+    for cam in &report.per_camera {
+        assert_eq!(cam.incarnations, 1, "id {}", cam.spec.id);
+        assert_eq!(cam.scripted_frames, 2);
+        assert_eq!(cam.stats.frames_captured, 2, "id {}", cam.spec.id);
+        assert_eq!(cam.stats.frames_classified, 2, "id {}", cam.spec.id);
+        assert_eq!(cam.stats.frames_dropped, 0);
+    }
+    assert_eq!(report.aggregate.frames_classified, 1024);
+    // One design -> one compiled plan and one shape group, however many
+    // cameras share it.
+    assert_eq!(report.plans_compiled, 1);
+    assert_eq!(report.per_shape.len(), 1);
+    assert_eq!(metrics.counter("scenario_frames_captured").get(), 1024);
+    // The pool's own instruments: the dispatch backlog peaked above zero
+    // (512 ready cells cannot all be in flight on 4 workers)...
+    assert!(
+        metrics.gauge("pool_queue_depth").high_watermark() > 0,
+        "dispatch backlog never observed above zero"
+    );
+    // ...and the lag watermark is a sane microsecond reading.
+    assert!(metrics.gauge("timer_lag_max_us").high_watermark() >= 0);
+}
+
+#[test]
+fn a_high_rate_camera_cannot_starve_the_paced_swarm() {
+    // 256 paced cameras (400 fps — a 25-tick wheel period) plus one
+    // free-running hog streaming 128 frames as fast as the pool lets it.
+    // Starvation-freedom here is exact, not statistical: the run only
+    // ends when every script completes, so a flatlined camera would hang
+    // the test, and the burst budget bounds how long the hog can pin a
+    // worker between other cameras' fires.
+    let mut scenario = Scenario::swarm(256, 9);
+    for cam in &mut scenario.cameras {
+        cam.segments = vec![Segment::paced(2, 400.0, SegmentEnd::Clean)];
+    }
+    scenario.cameras.push(CameraScript {
+        spec: CameraSpec::new(256, 20, 8, WireFormat::Quantized),
+        start_delay: std::time::Duration::ZERO,
+        segments: vec![Segment::free(128, SegmentEnd::Clean)],
+    });
+    scenario.name = "swarm-hog".into();
+
+    let (report, metrics) = run_with_pool(&scenario, 4);
+    assert_eq!(report.per_camera.len(), 257);
+    for cam in &report.per_camera {
+        assert_eq!(
+            cam.stats.frames_captured, cam.scripted_frames,
+            "id {} flatlined",
+            cam.spec.id
+        );
+        assert_eq!(cam.stats.frames_classified, cam.stats.frames_captured);
+        assert_eq!(cam.stats.frames_dropped, 0);
+    }
+    let hog = report.per_camera.iter().find(|c| c.spec.id == 256).unwrap();
+    assert_eq!(hog.stats.frames_classified, 128);
+    assert_eq!(report.aggregate.frames_classified, 256 * 2 + 128);
+    // Pacing is real: 400 fps cameras spread over >= 25 wheel ticks, so
+    // the scheduler must have advanced the wheel.
+    assert!(
+        metrics.counter("scheduler_ticks").get() >= 25,
+        "wheel barely advanced: {} ticks",
+        metrics.counter("scheduler_ticks").get()
+    );
+    // And the paced swarm's digest is still worker-count invariant with
+    // the hog in the mix.
+    let (one_worker, _) = run_with_pool(&scenario, 1);
+    assert_eq!(one_worker.digest(), report.digest());
+}

@@ -78,6 +78,20 @@ step "tier-1: cargo build --release" cargo build --release --locked
 
 step "tier-1: cargo test -q" cargo test -q --locked
 
+# The SIMD dispatch seam's portability gate: with dispatch pinned to
+# the scalar reference (P2M_SIMD=off) the parity suite must still pass,
+# and the scenario digests must match the SAME committed fixtures the
+# auto-tier tier-1 run above pinned (tests/fixtures/
+# scenario_digests.json) — the cross-tier bit-identity contract,
+# enforced end to end.
+step "simd-off lane: parity suite (P2M_SIMD=off)" \
+    env P2M_SIMD=off cargo test -q --locked --test simd_parity
+step "simd-off lane: pinned scenario digests (P2M_SIMD=off)" \
+    env P2M_SIMD=off cargo test -q --locked --test swarm
+step "simd-off lane: churn digest (P2M_SIMD=off)" \
+    env P2M_SIMD=off cargo run --release --locked -q -- fleet --scenario churn \
+    --check-digest
+
 # Scenario smoke: a fast churn run (heterogeneous cameras, hot-add,
 # crash + producer restart, rate shift).  --check-digest executes the
 # scenario TWICE and fails unless both runs produce the identical

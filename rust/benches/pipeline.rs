@@ -27,6 +27,7 @@ use p2m::model::NativeBackend;
 use p2m::runtime::{Manifest, ModelBundle, Runtime};
 use p2m::sensor::{SceneGen, Split};
 use p2m::util::bench::{bb, Bench, BenchReport};
+use p2m::util::simd;
 
 fn main() {
     let mut b = Bench::new("pipeline");
@@ -124,6 +125,57 @@ fn main() {
         report.row("wire_bytes_dense_560", dense_bytes, "bytes_per_frame");
         report.row("wire_bytes_quantized_560", quant_bytes, "bytes_per_frame");
         report.row("wire_payload_shrink_560", dense_bytes / quant_bytes, "ratio");
+
+        // --- SIMD dispatch-tier rows (DESIGN.md §3.7): the raw kernels
+        // behind the rows above, isolated from im2col/quantise/IO. ---
+        let tier = simd::active_tier();
+        println!("{:<44} -> {tier}", "simd_tier");
+        {
+            // The frontend's per-frame GEMM shape at paper scale.
+            let (m, k, n) = (19_600usize, 450, 16);
+            let a: Vec<f64> = (0..m * k).map(|i| (i % 97) as f64 * 1e-2).collect();
+            let bm: Vec<f64> = (0..k * n).map(|i| (i % 89) as f64 * 1e-2 - 0.4).collect();
+            let mut c = vec![0.0f64; m * n];
+            let gemm_simd_ns = b.run("frontend_560_gemm_simd", || {
+                simd::matmul_f64(tier, m, k, n, &a, &bm, &mut c);
+                bb(c[0])
+            });
+            report.row("frontend_560_gemm_simd", 1e9 / gemm_simd_ns, "frames_per_s");
+        }
+        {
+            // A native-backend 1x1-conv GEMM tile: dispatched tier vs
+            // the scalar reference.  Unit "ratio" so the frames_per_s
+            // regression gate never judges it (on SSE2-only hosts the
+            // i32 kernel legitimately dispatches to scalar, ratio 1.0).
+            let (m, k, n) = (400usize, 64, 128);
+            let ai: Vec<i32> = (0..m * k).map(|i| (i % 17) as i32 - 8).collect();
+            let bi: Vec<i32> = (0..k * n).map(|i| (i % 255) as i32 - 128).collect();
+            let mut ci = vec![0i32; m * n];
+            let i32_simd_ns = b.run("native_1x1_gemm_simd", || {
+                simd::matmul_i32(tier, m, k, n, &ai, &bi, &mut ci);
+                bb(ci[0])
+            });
+            let i32_scalar_ns = b.run("native_1x1_gemm_scalar", || {
+                // The dispatcher zero-fills; the raw scalar kernel
+                // accumulates, so match the work (and stay exact).
+                ci.fill(0);
+                simd::matmul_i32_scalar(m, k, n, &ai, &bi, &mut ci);
+                bb(ci[0])
+            });
+            let ratio = i32_scalar_ns / i32_simd_ns.max(1e-9);
+            println!("{:<44} -> {ratio:.2}x", "native_1x1_simd_vs_scalar");
+            report.row("native_1x1_simd_vs_scalar", ratio, "ratio");
+        }
+        {
+            // Wire packing of the 560-frame quantized payload through
+            // the dispatched bit-packer (qframe was filled above).
+            let mut wire = Vec::new();
+            let pack_ns = b.run("pack_wire_560", || {
+                qframe.pack_wire_into(&mut wire);
+                bb(wire.len())
+            });
+            report.row("pack_wire_throughput", 1e9 / pack_ns, "frames_per_s");
+        }
     }
 
     // --- Fleet vs sequential single-camera: the serving comparison. ---
@@ -339,6 +391,13 @@ fn main() {
             println!("{key:<44} -> {fps:.1} frames/s ({frames} frames, pool {pool})");
             report.row(key, fps, "frames_per_s");
         }
+        // A second 1k-camera pass with the process warm: the PR row
+        // tracking the arena-recycled producer path end to end (each
+        // run builds its own FrameArena, so this is a cold-arena,
+        // warm-everything-else serving measurement).
+        let (afps, aframes) = run_swarm(1_000);
+        println!("{:<44} -> {afps:.1} frames/s ({aframes} frames, pool {pool})", "swarm_1kcam_arena");
+        report.row("swarm_1kcam_arena", afps, "frames_per_s");
         // Peak RSS after the 10k-camera run: the memory-ceiling row the
         // fixed pool exists to hold down (state scales with cameras,
         // threads + scratch with workers).  Unit "mb", so the

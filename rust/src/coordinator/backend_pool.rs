@@ -330,11 +330,13 @@ mod tests {
         let mut per_shape = std::collections::BTreeMap::<ShapeKey, _>::new();
         let mut aggregate = PipelineStats::default();
         let latency = Arc::new(Latency::new(64));
+        let arena = crate::util::arena::FrameArena::new();
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
             latency: &latency,
+            arena: &arena,
         };
         let r = f(&mut acc);
         (r, aggregate)

@@ -85,6 +85,8 @@ use crate::coordinator::router::{RoutePolicy, Router};
 use crate::coordinator::scenario::{Segment, SegmentEnd};
 use crate::frontend::{Fidelity, FramePlan, PlanKey};
 use crate::runtime::ModelBundle;
+use crate::util::arena::FrameArena;
+use crate::util::simd;
 
 /// One camera of a (possibly heterogeneous) fleet: the sensor design
 /// plus the per-camera runtime choices.
@@ -365,6 +367,16 @@ pub struct FleetStats {
     pub per_shape: BTreeMap<ShapeKey, ShapeStats>,
     /// fleet-wide totals (see type docs for field semantics)
     pub aggregate: PipelineStats,
+    /// SIMD tier the run's kernels dispatched on
+    /// ([`crate::util::simd::active_tier`]; `P2M_SIMD` / `--simd`
+    /// override) — never affects outcomes, tiers are bit-identical
+    pub simd_tier: &'static str,
+    /// fraction of [`FrameArena`] takes served from recycled buffers;
+    /// timing-dependent (pool warm-up, interleaving) — report it, never
+    /// digest it
+    pub arena_hit_rate: f64,
+    /// bytes served from recycled arena buffers (same caveat)
+    pub arena_bytes_recycled: u64,
 }
 
 /// One frame in flight on a shard link: the wire payload (dense f32 or
@@ -452,6 +464,9 @@ pub(crate) struct FleetAccounting<'a> {
     pub(crate) per_shape: &'a mut BTreeMap<ShapeKey, ShapeStats>,
     pub(crate) aggregate: &'a mut PipelineStats,
     pub(crate) latency: &'a Arc<Latency>,
+    /// the run's frame-buffer pool: folded payloads recycle into it
+    /// (closing the producer → wire → ingest zero-alloc loop)
+    pub(crate) arena: &'a FrameArena,
 }
 
 /// Run a multi-camera fleet: the cameras multiplexed over the fixed
@@ -537,6 +552,7 @@ fn run_fleet_sink<S: ClassifySink>(
     };
     let latency = metrics.latency("fleet_e2e_latency");
     let workers = cfg.pool_workers.unwrap_or_else(default_pool_workers);
+    let arena = FrameArena::new();
     let mut per_camera = vec![PipelineStats::default(); n];
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
@@ -573,12 +589,13 @@ fn run_fleet_sink<S: ClassifySink>(
         .collect();
 
     std::thread::scope(|s| {
-        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, hooks);
+        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, &arena, hooks);
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
             latency: &latency,
+            arena: &arena,
         };
         consumer_result = consume(sink, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
@@ -611,7 +628,19 @@ fn run_fleet_sink<S: ClassifySink>(
         st.wall_time_s = wall;
         st.throughput_fps = st.frames_classified as f64 / wall.max(1e-9);
     }
-    Ok(FleetStats { per_camera, per_shape, aggregate })
+    // Arena observability: counters for dashboards, fields on the stats.
+    // Timing-dependent (pool warm-up), so reported but never digested.
+    metrics.counter("arena_hits").add(arena.hits());
+    metrics.counter("arena_misses").add(arena.misses());
+    metrics.counter("arena_bytes_recycled").add(arena.bytes_recycled());
+    Ok(FleetStats {
+        per_camera,
+        per_shape,
+        aggregate,
+        simd_tier: simd::active_tier().name(),
+        arena_hit_rate: arena.hit_rate(),
+        arena_bytes_recycled: arena.bytes_recycled(),
+    })
 }
 
 /// The consumer loop shared by [`run_fleet`] and the scenario driver:
@@ -768,6 +797,13 @@ pub(crate) fn fold_classified_batch(
     let ss = acc.per_shape.entry(shape).or_default();
     ss.batches += 1;
     ss.frames_classified += batch.len() as u64;
+    // Classifier ingest is done with these payloads — recycle their
+    // buffers so the producers' next takes are warm hits (the consumer
+    // end of the zero-alloc frame loop; covers both the direct and the
+    // pooled classify paths, which both fold here).
+    for item in batch {
+        item.payload.recycle_into(acc.arena);
+    }
     Ok(())
 }
 

@@ -145,10 +145,33 @@ impl WirePayload {
     }
 
     /// Classifier-ingest dequantisation into a fresh dense [`Image`].
+    /// Copies the dense stream; the hot ingest paths use
+    /// [`WirePayload::write_f32`] (slice fill) or
+    /// [`WirePayload::into_image`] (by-move, zero-copy for dense).
     pub fn to_image(&self) -> Image {
         match self {
             WirePayload::Dense(img) => img.clone(),
             WirePayload::Quantized(q) => q.dequantize(),
+        }
+    }
+
+    /// Consume the payload into a dense [`Image`]: the dense stream is
+    /// moved out without copying; the quantized stream dequantises.
+    pub fn into_image(self) -> Image {
+        match self {
+            WirePayload::Dense(img) => img,
+            WirePayload::Quantized(q) => q.dequantize(),
+        }
+    }
+
+    /// Return the payload's buffers to a
+    /// [`FrameArena`](crate::util::arena::FrameArena) — the consumer end
+    /// of the zero-copy frame loop (producers take from the arena,
+    /// classifier ingest recycles here after folding the batch).
+    pub fn recycle_into(self, arena: &crate::util::arena::FrameArena) {
+        match self {
+            WirePayload::Dense(img) => img.recycle(arena),
+            WirePayload::Quantized(q) => q.recycle(arena),
         }
     }
 
@@ -387,6 +410,9 @@ pub struct PjrtClassifier<'b, 'rt> {
     artifact: String,
     input_key: &'static str,
     batch: usize,
+    /// persistent batch-tensor buffer, reclaimed from the input map
+    /// after every run so steady-state ingest allocates nothing
+    scratch: Vec<f32>,
 }
 
 impl<'b, 'rt> PjrtClassifier<'b, 'rt> {
@@ -418,7 +444,7 @@ impl<'b, 'rt> PjrtClassifier<'b, 'rt> {
             (format!("full_{res}_b{batch}"), "image")
         };
         bundle.executable(&artifact)?;
-        Ok(PjrtClassifier { bundle, artifact, input_key, batch })
+        Ok(PjrtClassifier { bundle, artifact, input_key, batch, scratch: Vec::new() })
     }
 }
 
@@ -437,15 +463,24 @@ impl BatchClassifier for PjrtClassifier<'_, '_> {
         let (h, w, c) = batch[0].dims();
         // Assemble (B, h, w, c), zero-padding to the exported batch
         // size; quantized payloads dequantise here — classifier ingest —
-        // straight into the batch tensor.
-        let mut data = vec![0.0f32; self.batch * h * w * c];
+        // straight into the batch tensor.  The buffer is the persistent
+        // scratch (reclaimed below), so steady state allocates nothing.
+        let mut data = std::mem::take(&mut self.scratch);
+        data.clear();
+        data.resize(self.batch * h * w * c, 0.0);
         for (i, payload) in batch.iter().enumerate() {
             payload.write_f32(&mut data[i * h * w * c..(i + 1) * h * w * c]);
         }
         let input = Tensor::f32(vec![self.batch, h, w, c], data);
         let mut extra = BTreeMap::new();
         extra.insert(self.input_key, input);
-        let outs = self.bundle.run(&self.artifact, &extra)?;
+        let outs = self.bundle.run(&self.artifact, &extra);
+        if let Some(Tensor { data: crate::runtime::TensorData::F32(v), .. }) =
+            extra.remove(self.input_key)
+        {
+            self.scratch = v;
+        }
+        let outs = outs?;
         let logits = outs[0].as_f32()?;
         let classes = self.bundle.entry.num_classes;
         Ok((0..batch.len())

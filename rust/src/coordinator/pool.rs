@@ -45,6 +45,7 @@ use crate::config::SensorConfig;
 use crate::coordinator::wheel::TimerWheel;
 use crate::frontend::{ExecCtx, FramePlan, PlanKey};
 use crate::sensor::{Camera, Image, QuantizedFrame, Split};
+use crate::util::arena::FrameArena;
 
 /// Scheduler tick length: 100 us (10 000 ticks/s), fine enough to pace
 /// the canned scenarios' fastest scripted rate (500 fps = 20 ticks)
@@ -94,12 +95,16 @@ impl CellCompute {
 
     /// One frame of on-sensor compute — bit-identical to
     /// [`SensorCompute::run_frame`], with the serial-path scratch drawn
-    /// from the worker's plan-keyed cache instead of the sensor.
+    /// from the worker's plan-keyed cache instead of the sensor, and the
+    /// outgoing payload buffers drawn from the fleet's [`FrameArena`]
+    /// (the row-parallel and baseline paths keep plain allocation: they
+    /// are off the steady-state hot path).
     fn run_frame(
         &self,
         image: &Image,
         ctxs: &mut BTreeMap<PlanKey, ExecCtx>,
         frontend_threads: usize,
+        arena: &FrameArena,
     ) -> (WirePayload, u64) {
         let payload = match self {
             CellCompute::P2m { plan, wire } => match (*wire, frontend_threads > 1) {
@@ -108,7 +113,10 @@ impl CellCompute {
                 }
                 (WireFormat::Dense, false) => {
                     let ctx = ctxs.entry(plan.plan_key()).or_insert_with(|| plan.ctx());
-                    WirePayload::Dense(plan.process(image, ctx).0)
+                    let (ho, wo, c) = plan.cfg.out_dims();
+                    let mut out = Image::zeros_in(ho, wo, c, arena);
+                    plan.process_into(image, ctx, &mut out);
+                    WirePayload::Dense(out)
                 }
                 (WireFormat::Quantized, true) => {
                     let acts = plan.process_parallel(image, frontend_threads).0;
@@ -116,7 +124,9 @@ impl CellCompute {
                 }
                 (WireFormat::Quantized, false) => {
                     let ctx = ctxs.entry(plan.plan_key()).or_insert_with(|| plan.ctx());
-                    WirePayload::Quantized(plan.process_quantized(image, ctx).0)
+                    let mut out = plan.quantized_frame_in(arena);
+                    plan.process_quantized_into(image, ctx, &mut out);
+                    WirePayload::Quantized(out)
                 }
             },
             CellCompute::Baseline(readout) => WirePayload::Dense(readout.process(image).0),
@@ -306,6 +316,7 @@ pub(crate) fn spawn_producer_pool<'scope, 'env>(
     cameras: Vec<PoolCamera>,
     workers: usize,
     registry: &'env ShardRegistry,
+    arena: &'env FrameArena,
     hooks: PoolHooks,
 ) -> std::thread::ScopedJoinHandle<'scope, Vec<u32>> {
     let workers = workers.max(1);
@@ -325,7 +336,7 @@ pub(crate) fn spawn_producer_pool<'scope, 'env>(
         let tasks = tasks.clone();
         let done = done.clone();
         let hooks = hooks.clone();
-        scope.spawn(move || worker_loop(&tasks, &done, registry, &hooks));
+        scope.spawn(move || worker_loop(&tasks, &done, registry, arena, &hooks));
     }
     scope.spawn(move || scheduler_loop(cameras, tasks, done, hooks))
 }
@@ -336,6 +347,7 @@ fn worker_loop(
     tasks: &BoundedQueue<CameraCell>,
     done: &BoundedQueue<Completion>,
     registry: &ShardRegistry,
+    arena: &FrameArena,
     hooks: &PoolHooks,
 ) {
     let mut ctxs: BTreeMap<PlanKey, ExecCtx> = BTreeMap::new();
@@ -346,7 +358,7 @@ fn worker_loop(
             }
             continue;
         };
-        let outcome = fire_cell(&mut cell, &mut ctxs, registry, hooks);
+        let outcome = fire_cell(&mut cell, &mut ctxs, registry, arena, hooks);
         // Never blocks (see the completion queue's capacity) and the
         // scheduler outlives every worker, so the push cannot be lost.
         let _ = done.push(Completion { cell, outcome });
@@ -360,6 +372,7 @@ fn fire_cell(
     cell: &mut CameraCell,
     ctxs: &mut BTreeMap<PlanKey, ExecCtx>,
     registry: &ShardRegistry,
+    arena: &FrameArena,
     hooks: &PoolHooks,
 ) -> Outcome {
     if !cell.registered {
@@ -390,14 +403,21 @@ fn fire_cell(
             return Outcome::Reschedule { period_ticks: 0 };
         }
         let camera = cell.camera.as_mut().expect("next_step builds the camera");
-        let frame = camera.capture();
+        // Capture through arena-recycled scratch: after the first lap of
+        // the pool these takes are warm hits — no allocator traffic.
+        let res = camera.cfg.rows;
+        let mut radiance = Image::zeros_in(res, res, 3, arena);
+        let mut image = Image::zeros_in(res, res, 3, arena);
+        let (_, label) = camera.capture_into(&mut radiance, &mut image);
+        radiance.recycle(arena);
         let captured_at = Instant::now();
         let (payload, bytes) =
-            cell.cam.compute.run_frame(&frame.image, ctxs, cell.cam.frontend_threads);
+            cell.cam.compute.run_frame(&image, ctxs, cell.cam.frontend_threads, arena);
+        image.recycle(arena);
         hooks.frames_in.inc();
         let accepted = cell.cam.link.push(FleetItem {
             camera: cell.cam.slot,
-            label: frame.label,
+            label,
             captured_at,
             payload,
             bytes,

@@ -514,6 +514,7 @@ fn run_scenario_sink<S: ClassifySink>(
     let active = metrics.gauge("scenario_active_cameras");
     let latency = metrics.latency("scenario_e2e_latency");
     let workers = scenario.pool_workers.unwrap_or_else(default_pool_workers);
+    let arena = crate::util::arena::FrameArena::new();
     let mut per_camera = vec![PipelineStats::default(); n];
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
@@ -541,12 +542,13 @@ fn run_scenario_sink<S: ClassifySink>(
         .collect();
 
     std::thread::scope(|s| {
-        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, hooks);
+        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, &arena, hooks);
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
             latency: &latency,
+            arena: &arena,
         };
         consumer_result = consume(sink, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
@@ -579,6 +581,11 @@ fn run_scenario_sink<S: ClassifySink>(
     aggregate.throughput_fps = aggregate.frames_classified as f64 / wall.max(1e-9);
     aggregate.latency_mean_s = latency.mean();
     aggregate.latency_p95_s = latency.pct(0.95);
+    // Arena observability (timing-dependent: reported, never part of
+    // the scenario digest).
+    metrics.counter("arena_hits").add(arena.hits());
+    metrics.counter("arena_misses").add(arena.misses());
+    metrics.counter("arena_bytes_recycled").add(arena.bytes_recycled());
     let per_camera = scenario
         .cameras
         .iter()

@@ -410,6 +410,14 @@ impl FramePlan {
         QuantizedFrame::zeros(ho, wo, c, self.quant)
     }
 
+    /// [`FramePlan::quantized_frame`] with its code buffer drawn from a
+    /// [`FrameArena`](crate::util::arena::FrameArena) — the zero-alloc
+    /// producer path.
+    pub fn quantized_frame_in(&self, arena: &crate::util::arena::FrameArena) -> QuantizedFrame {
+        let (ho, wo, c) = self.cfg.out_dims();
+        QuantizedFrame::zeros_in(ho, wo, c, self.quant, arena)
+    }
+
     /// True when frames execute on the functional frame-level GEMM route
     /// (vs the per-patch route) — decides how [`ExecCtx`] is sized.
     pub(crate) fn uses_gemm_route(&self) -> bool {

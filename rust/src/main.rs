@@ -89,6 +89,9 @@ commands (one per paper table/figure):
             --pool N sizes the fixed producer pool that multiplexes all
             cameras over a deterministic timer wheel (default
             min(cpus, 8); identical digests for every N)
+            --simd <auto|off|scalar|sse2|avx2|neon> forces the kernel
+            dispatch tier (default: runtime detection, overridable by
+            the P2M_SIMD env var; every tier is bit-identical)
             --scenario <uniform|mixed-res|churn|crash-storm|swarm|list>
             runs a deterministic scripted fleet instead (heterogeneous
             cameras, hot-add/remove/crash/rate-shift lifecycle events;
@@ -607,6 +610,14 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     use p2m::model::NativeBackend;
     use p2m::runtime::{Manifest, ModelBundle, Runtime};
 
+    // Force the SIMD dispatch tier before any kernel runs (covers the
+    // scenario path below too; beats the P2M_SIMD env var).
+    if let Some(i) = rest.iter().position(|&a| a == "--simd") {
+        let spec = rest.get(i + 1).copied().unwrap_or("auto");
+        let tier = p2m::util::simd::force_tier(spec).map_err(anyhow::Error::msg)?;
+        println!("simd tier: {} (--simd {spec})", tier.name());
+    }
+
     if let Some(i) = rest.iter().position(|&a| a == "--scenario") {
         let name = rest.get(i + 1).copied().unwrap_or("list");
         return fleet_scenario(name, rest);
@@ -702,6 +713,12 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
             a.latency_mean_s * 1e3,
             a.latency_p95_s * 1e3,
             a.batches,
+        );
+        println!(
+            "simd tier {}, frame arena hit rate {:.1}% ({} KiB recycled)",
+            stats.simd_tier,
+            100.0 * stats.arena_hit_rate,
+            stats.arena_bytes_recycled / 1024,
         );
     };
 

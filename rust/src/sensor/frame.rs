@@ -4,7 +4,8 @@
 //! actually sends over the sensor-to-SoC link — `n_bits`-wide ADC codes
 //! plus per-frame dequantisation parameters.
 
-use crate::util::linalg;
+use crate::util::arena::FrameArena;
+use crate::util::{linalg, simd};
 
 /// Row-major (h, w, c) f32 image; values are normalised light intensities
 /// or activations in [0, 1]-ish ranges depending on stage.
@@ -19,6 +20,18 @@ pub struct Image {
 impl Image {
     pub fn zeros(h: usize, w: usize, c: usize) -> Self {
         Image { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    /// [`Image::zeros`] with the backing buffer taken from (and later
+    /// returned to, via [`Image::recycle`]) a [`FrameArena`] — the
+    /// allocation-free steady-state constructor of the frame path.
+    pub fn zeros_in(h: usize, w: usize, c: usize, arena: &FrameArena) -> Self {
+        Image { h, w, c, data: arena.take_f32(h * w * c) }
+    }
+
+    /// Return the backing buffer to `arena` for reuse.
+    pub fn recycle(self, arena: &FrameArena) {
+        arena.put_f32(self.data);
     }
 
     pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
@@ -127,6 +140,14 @@ impl QuantData {
         }
     }
 
+    fn zeros_in(len: usize, bits: u32, arena: &FrameArena) -> Self {
+        if bits <= 8 {
+            QuantData::U8(arena.take_u8(len))
+        } else {
+            QuantData::U16(arena.take_u16(len))
+        }
+    }
+
     fn len(&self) -> usize {
         match self {
             QuantData::U8(v) => v.len(),
@@ -158,6 +179,20 @@ impl QuantizedFrame {
     /// from `spec.bits`).
     pub fn zeros(h: usize, w: usize, c: usize, spec: QuantSpec) -> Self {
         QuantizedFrame { h, w, c, spec, data: QuantData::zeros(h * w * c, spec.bits) }
+    }
+
+    /// [`QuantizedFrame::zeros`] with the code buffer taken from a
+    /// [`FrameArena`]; pair with [`QuantizedFrame::recycle`].
+    pub fn zeros_in(h: usize, w: usize, c: usize, spec: QuantSpec, arena: &FrameArena) -> Self {
+        QuantizedFrame { h, w, c, spec, data: QuantData::zeros_in(h * w * c, spec.bits, arena) }
+    }
+
+    /// Return the code buffer to `arena` for reuse.
+    pub fn recycle(self, arena: &FrameArena) {
+        match self.data {
+            QuantData::U8(v) => arena.put_u8(v),
+            QuantData::U16(v) => arena.put_u16(v),
+        }
     }
 
     /// Quantise a dense image under `spec` using the deterministic
@@ -230,20 +265,30 @@ impl QuantizedFrame {
 
     /// Serialise the codes bit-packed (LSB-first within each byte) —
     /// the actual wire payload, `wire_bytes()` long.
+    ///
+    /// Runs on the process-wide SIMD tier: the word-level bulk kernel
+    /// normally, the original bit-at-a-time reference under
+    /// `P2M_SIMD=off` — byte-identical either way
+    /// (`tests/simd_parity.rs`).
     pub fn pack_wire(&self) -> Vec<u8> {
-        let bits = self.spec.bits as usize;
-        let mut out = vec![0u8; self.wire_bytes() as usize];
-        let mut bitpos = 0usize;
-        for i in 0..self.len() {
-            let code = self.code(i);
-            for b in 0..bits {
-                if (code >> b) & 1 == 1 {
-                    out[(bitpos + b) / 8] |= 1 << ((bitpos + b) % 8);
-                }
-            }
-            bitpos += bits;
-        }
+        let mut out = Vec::new();
+        self.pack_wire_into(&mut out);
         out
+    }
+
+    /// [`QuantizedFrame::pack_wire`] into a caller-owned buffer
+    /// (typically recycled through a [`FrameArena`]): `out` is resized
+    /// to `wire_bytes()` and overwritten — allocation-free once its
+    /// capacity suffices.
+    pub fn pack_wire_into(&self, out: &mut Vec<u8>) {
+        let bits = self.spec.bits;
+        out.clear();
+        out.resize(self.wire_bytes() as usize, 0);
+        let tier = simd::active_tier();
+        match &self.data {
+            QuantData::U8(codes) => simd::pack_codes_u8(tier, codes, bits, out),
+            QuantData::U16(codes) => simd::pack_codes_u16(tier, codes, bits, out),
+        }
     }
 
     /// Inverse of [`QuantizedFrame::pack_wire`]: rebuild a frame from a
@@ -257,24 +302,14 @@ impl QuantizedFrame {
         spec: QuantSpec,
     ) -> Result<Self, String> {
         let mut q = QuantizedFrame::zeros(h, w, c, spec);
-        let bits = spec.bits as usize;
-        let need = (q.len() * bits).div_ceil(8);
+        let need = (q.len() * spec.bits as usize).div_ceil(8);
         if packed.len() != need {
             return Err(format!("packed payload is {} bytes, want {need}", packed.len()));
         }
-        let mut bitpos = 0usize;
-        for i in 0..q.len() {
-            let mut code = 0u32;
-            for b in 0..bits {
-                if (packed[(bitpos + b) / 8] >> ((bitpos + b) % 8)) & 1 == 1 {
-                    code |= 1 << b;
-                }
-            }
-            bitpos += bits;
-            match &mut q.data {
-                QuantData::U8(v) => v[i] = code as u8,
-                QuantData::U16(v) => v[i] = code as u16,
-            }
+        let tier = simd::active_tier();
+        match &mut q.data {
+            QuantData::U8(v) => simd::unpack_codes_u8(tier, packed, spec.bits, v),
+            QuantData::U16(v) => simd::unpack_codes_u16(tier, packed, spec.bits, v),
         }
         Ok(q)
     }

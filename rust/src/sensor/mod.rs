@@ -8,7 +8,7 @@ pub mod scene;
 
 pub use bayer::{bayer_overhead_ratio, mosaic, tile_to_rgb, GreenPolicy};
 pub use frame::{Frame, Image, QuantData, QuantSpec, QuantizedFrame};
-pub use photodiode::{digitise_native, expose};
+pub use photodiode::{digitise_native, expose, expose_into};
 pub use scene::{SceneGen, Split};
 
 use crate::config::SensorConfig;
@@ -34,12 +34,25 @@ impl Camera {
     /// Capture the next frame: synthesise a scene (alternating labels),
     /// expose it through the photodiode model.
     pub fn capture(&mut self) -> Frame {
+        let res = self.cfg.rows;
+        let mut radiance = Image::zeros(res, res, 3);
+        let mut image = Image::zeros(res, res, 3);
+        let (id, label) = self.capture_into(&mut radiance, &mut image);
+        Frame { id, label, image }
+    }
+
+    /// [`Camera::capture`] into caller-owned buffers (typically recycled
+    /// through a `FrameArena`): `radiance` is scratch for the scene,
+    /// `out` receives the exposed frame.  Every pixel of both is
+    /// overwritten; RNG draw order matches the allocating path, so the
+    /// frames are bit-identical.  Returns `(id, label)`.
+    pub fn capture_into(&mut self, radiance: &mut Image, out: &mut Image) -> (u64, u8) {
         let id = self.next_id;
         self.next_id += 1;
         let label = (id % 2) as u8;
-        let radiance = self.scenes.image(label, id, self.split);
-        let image = expose(&self.cfg, &radiance, &mut self.rng);
-        Frame { id, label, image }
+        self.scenes.image_into(label, id, self.split, radiance);
+        expose_into(&self.cfg, radiance, &mut self.rng, out);
+        (id, label)
     }
 
     /// Frames captured so far.

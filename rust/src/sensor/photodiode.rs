@@ -19,9 +19,23 @@ const FULL_WELL_E: f64 = 10_000.0;
 /// Returns normalised photodiode currents in [0, 1] (these drive the SF
 /// gate voltage in the analog model).
 pub fn expose(cfg: &SensorConfig, radiance: &Image, rng: &mut Rng) -> Image {
+    let mut out = Image::zeros(radiance.h, radiance.w, radiance.c);
+    expose_into(cfg, radiance, rng, &mut out);
+    out
+}
+
+/// [`expose`] into a caller-owned image (typically recycled through a
+/// `FrameArena`): every pixel of `out` is overwritten with the same RNG
+/// draw order as the allocating path, so the result is bit-identical
+/// and no heap allocation happens here.
+pub fn expose_into(cfg: &SensorConfig, radiance: &Image, rng: &mut Rng, out: &mut Image) {
     assert_eq!(radiance.h, cfg.rows, "radiance/Sensor rows mismatch");
     assert_eq!(radiance.w, cfg.cols, "radiance/Sensor cols mismatch");
-    let mut out = Image::zeros(radiance.h, radiance.w, radiance.c);
+    assert_eq!(
+        (out.h, out.w, out.c),
+        (radiance.h, radiance.w, radiance.c),
+        "expose_into output dims mismatch"
+    );
     let dark = cfg.dark_current * cfg.exposure_s;
     let read_var = cfg.read_noise * cfg.read_noise;
     for i in 0..radiance.data.len() {
@@ -43,7 +57,6 @@ pub fn expose(cfg: &SensorConfig, radiance: &Image, rng: &mut Rng) -> Image {
         }
         out.data[i] = v.clamp(0.0, 1.0) as f32;
     }
-    out
 }
 
 /// Native sensor digitisation (the baseline path): quantise a captured

@@ -43,22 +43,37 @@ impl SceneGen {
 
     /// The i-th image of a split; label 1 = person present.
     pub fn image(&self, label: u8, index: u64, split: Split) -> Image {
+        let mut img = Image::zeros(self.res, self.res, 3);
+        self.image_into(label, index, split, &mut img);
+        img
+    }
+
+    /// [`SceneGen::image`] into a caller-owned image (typically
+    /// recycled through a `FrameArena`): every pixel of `out` is
+    /// overwritten, the RNG draw order is identical to the allocating
+    /// path, so the result is bit-identical — and no heap allocation
+    /// happens here.
+    pub fn image_into(&self, label: u8, index: u64, split: Split, out: &mut Image) {
+        assert_eq!(
+            (out.h, out.w, out.c),
+            (self.res, self.res, 3),
+            "image_into output dims mismatch"
+        );
         let mut rng = Rng::stream(
             self.seed ^ split.id().wrapping_mul(0x517c_c1b7_2722_0a95),
             index,
         );
-        let mut img = background(&mut rng, self.res);
+        background_into(&mut rng, out);
         if label == 1 {
-            person(&mut rng, &mut img);
+            person(&mut rng, out);
         } else {
-            distractor(&mut rng, &mut img);
+            distractor(&mut rng, out);
         }
         // sensor-ish additive noise
-        for v in &mut img.data {
+        for v in &mut out.data {
             *v += rng.normal_ms(0.0, 0.02) as f32;
         }
-        img.clamp(0.0, 1.0);
-        img
+        out.clamp(0.0, 1.0);
     }
 
     /// Balanced batch starting at `start`: label alternates with index.
@@ -108,11 +123,15 @@ fn paint_ellipse(
     }
 }
 
-fn background(rng: &mut Rng, res: usize) -> Image {
+/// Paint the gradient background + clutter over *every* pixel of `img`
+/// (the first painter in the chain, so a recycled buffer needs no
+/// pre-clearing).  Draw order: base[3], gy, gx, then clutter — all
+/// before any pixel writes, matching the historical allocating path.
+fn background_into(rng: &mut Rng, img: &mut Image) {
+    let res = img.h;
     let base = [rng.range(0.15, 0.75), rng.range(0.15, 0.75), rng.range(0.15, 0.75)];
     let gy = rng.range(-0.3, 0.3);
     let gx = rng.range(-0.3, 0.3);
-    let mut img = Image::zeros(res, res, 3);
     for y in 0..res {
         for x in 0..res {
             let grad = gy * (y as f64 / res as f64 - 0.5) + gx * (x as f64 / res as f64 - 0.5);
@@ -140,7 +159,7 @@ fn background(rng: &mut Rng, res: usize) -> Image {
             }
         } else {
             paint_ellipse(
-                &mut img,
+                img,
                 rng.range(0.0, res as f64),
                 rng.range(0.0, res as f64),
                 rng.range(res as f64 / 12.0, res as f64 / 4.0),
@@ -151,7 +170,6 @@ fn background(rng: &mut Rng, res: usize) -> Image {
             );
         }
     }
-    img
 }
 
 fn person(rng: &mut Rng, img: &mut Image) {
@@ -232,6 +250,18 @@ mod tests {
         let a = g.image(1, 3, Split::Train);
         let b = g.image(1, 3, Split::Train);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn image_into_is_bit_identical_even_on_dirty_buffers() {
+        let g = SceneGen::new(40, 7);
+        for (label, idx) in [(1u8, 3u64), (0, 4)] {
+            let fresh = g.image(label, idx, Split::Train);
+            let mut reused = Image::zeros(40, 40, 3);
+            reused.data.iter_mut().for_each(|v| *v = 0.77); // dirty
+            g.image_into(label, idx, Split::Train, &mut reused);
+            assert_eq!(fresh, reused);
+        }
     }
 
     #[test]

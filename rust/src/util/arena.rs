@@ -1,0 +1,316 @@
+//! `FrameArena`: a lock-free pool of recycled frame buffers keyed by
+//! size class, so the steady-state frame path performs **zero heap
+//! allocations** — a producer takes its radiance/image/code buffers
+//! from the arena, the payload travels the link by move, and the
+//! consumer recycles the buffers after classification (the
+//! double-buffered sampling contract of Tock's `AdcHighSpeed` HIL,
+//! generalised to a pool).
+//!
+//! # Design
+//!
+//! One typed sub-pool per element type (`u8`, `u16`, `f32`).  Each pool
+//! is a fixed grid of `AtomicPtr` slots: [`NCLASSES`] power-of-two size
+//! classes (64 … 2²⁶ elements) × [`SLOTS`] slots.  `take` swaps a slot
+//! to null (pop), `put` CAS-es null → buffer (push); there are no next
+//! pointers, so the classic lock-free-stack ABA hazard cannot arise,
+//! and a full class simply frees the buffer (the pool is a cache, never
+//! an obligation).  Buffers are handed out **zeroed** and sized to the
+//! request; on a warm hit `clear` + `resize` stay within capacity, so
+//! the take itself never touches the allocator.
+//!
+//! # Soundness invariant
+//!
+//! A slot in class `c` only ever stores the pointer of a `Vec<T>` whose
+//! capacity is **exactly** `class_size(c)` (put rejects — drops — any
+//! other capacity, and class sizes are what `take`'s miss path
+//! allocates).  Reconstruction via `Vec::from_raw_parts(ptr, 0,
+//! class_size(c))` therefore describes the original allocation
+//! precisely.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+/// Smallest size class, 2⁶ = 64 elements.
+const MIN_SHIFT: u32 = 6;
+/// Largest size class, 2²⁶ = 64 Mi elements.
+const MAX_SHIFT: u32 = 26;
+/// Number of power-of-two size classes.
+pub const NCLASSES: usize = (MAX_SHIFT - MIN_SHIFT + 1) as usize;
+/// Buffers retained per class; overflow is freed, not blocked on.
+pub const SLOTS: usize = 32;
+
+fn class_size(class: usize) -> usize {
+    1usize << (MIN_SHIFT + class as u32)
+}
+
+/// Size class whose capacity covers `len`; `None` when `len` exceeds
+/// the largest class (the caller falls back to a plain allocation).
+fn class_for_len(len: usize) -> Option<usize> {
+    let n = len.next_power_of_two().max(1 << MIN_SHIFT);
+    let shift = n.trailing_zeros();
+    (shift <= MAX_SHIFT).then(|| (shift - MIN_SHIFT) as usize)
+}
+
+/// Size class whose capacity is **exactly** `cap` (the put-side
+/// soundness gate).
+fn class_for_exact_cap(cap: usize) -> Option<usize> {
+    if !cap.is_power_of_two() {
+        return None;
+    }
+    let shift = cap.trailing_zeros();
+    ((MIN_SHIFT..=MAX_SHIFT).contains(&shift)).then(|| (shift - MIN_SHIFT) as usize)
+}
+
+/// One element type's slot grid.  `AtomicPtr` is `Send + Sync`; the
+/// stored buffers are plain `Copy` data, so the pool is safely shared
+/// by reference across producer and consumer threads.
+struct TypedPool<T> {
+    slots: Vec<AtomicPtr<T>>,
+}
+
+impl<T: Copy + Default> TypedPool<T> {
+    fn new() -> Self {
+        let mut slots = Vec::with_capacity(NCLASSES * SLOTS);
+        slots.resize_with(NCLASSES * SLOTS, || AtomicPtr::new(std::ptr::null_mut()));
+        TypedPool { slots }
+    }
+
+    fn take(&self, len: usize, stats: &ArenaStats) -> Vec<T> {
+        let Some(class) = class_for_len(len) else {
+            // Oversize request: plain allocation; put() will free it.
+            stats.misses.fetch_add(1, Ordering::Relaxed);
+            return vec![T::default(); len];
+        };
+        let sz = class_size(class);
+        for slot in &self.slots[class * SLOTS..(class + 1) * SLOTS] {
+            let p = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                // SAFETY: the invariant above — p came from a Vec<T>
+                // with capacity exactly `sz` and length 0.
+                let mut v = unsafe { Vec::from_raw_parts(p, 0, sz) };
+                v.resize(len, T::default()); // within capacity: no alloc
+                stats.hits.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .bytes_recycled
+                    .fetch_add((len * std::mem::size_of::<T>()) as u64, Ordering::Relaxed);
+                return v;
+            }
+        }
+        stats.misses.fetch_add(1, Ordering::Relaxed);
+        let mut v = Vec::with_capacity(sz);
+        v.resize(len, T::default());
+        v
+    }
+
+    fn put(&self, mut v: Vec<T>) {
+        // Only exactly-class-sized capacities may enter a slot (see the
+        // soundness invariant); anything else — including a Vec a
+        // caller grew past its class — is simply dropped.
+        let cap = v.capacity();
+        let Some(class) = class_for_exact_cap(cap) else {
+            return;
+        };
+        v.clear();
+        let p = std::mem::ManuallyDrop::new(v).as_mut_ptr();
+        for slot in &self.slots[class * SLOTS..(class + 1) * SLOTS] {
+            if slot
+                .compare_exchange(std::ptr::null_mut(), p, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+        }
+        // Class full: the pool is a bounded cache — free the buffer.
+        // SAFETY: p was just detached from a live Vec<T> with capacity
+        // `cap` and length 0; nothing else references it.
+        drop(unsafe { Vec::from_raw_parts(p, 0, cap) });
+    }
+}
+
+impl<T> Drop for TypedPool<T> {
+    fn drop(&mut self) {
+        for (idx, slot) in self.slots.iter().enumerate() {
+            let p = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                // SAFETY: same invariant as take(); the slot index
+                // encodes the exact capacity.
+                drop(unsafe { Vec::from_raw_parts(p, 0, class_size(idx / SLOTS)) });
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct ArenaStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_recycled: AtomicU64,
+}
+
+/// The frame-buffer recycler threaded through producer pool → wire
+/// payload → classifier ingest.  See module docs.
+pub struct FrameArena {
+    u8_pool: TypedPool<u8>,
+    u16_pool: TypedPool<u16>,
+    f32_pool: TypedPool<f32>,
+    stats: ArenaStats,
+}
+
+impl Default for FrameArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameArena {
+    pub fn new() -> Self {
+        FrameArena {
+            u8_pool: TypedPool::new(),
+            u16_pool: TypedPool::new(),
+            f32_pool: TypedPool::new(),
+            stats: ArenaStats::default(),
+        }
+    }
+
+    /// A zero-filled `Vec<u8>` of length `len` (recycled when possible).
+    pub fn take_u8(&self, len: usize) -> Vec<u8> {
+        self.u8_pool.take(len, &self.stats)
+    }
+
+    /// A zero-filled `Vec<u16>` of length `len`.
+    pub fn take_u16(&self, len: usize) -> Vec<u16> {
+        self.u16_pool.take(len, &self.stats)
+    }
+
+    /// A zero-filled `Vec<f32>` of length `len`.
+    pub fn take_f32(&self, len: usize) -> Vec<f32> {
+        self.f32_pool.take(len, &self.stats)
+    }
+
+    /// Return a buffer to the pool (freed if its capacity is not an
+    /// exact size class or the class is full — never an error).
+    pub fn put_u8(&self, v: Vec<u8>) {
+        self.u8_pool.put(v);
+    }
+
+    pub fn put_u16(&self, v: Vec<u16>) {
+        self.u16_pool.put(v);
+    }
+
+    pub fn put_f32(&self, v: Vec<f32>) {
+        self.f32_pool.put(v);
+    }
+
+    /// Takes served from a recycled buffer.
+    pub fn hits(&self) -> u64 {
+        self.stats.hits.load(Ordering::Relaxed)
+    }
+
+    /// Takes that had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.stats.misses.load(Ordering::Relaxed)
+    }
+
+    /// Bytes served from recycled buffers (sum of hit lengths).
+    pub fn bytes_recycled(&self) -> u64 {
+        self.stats.bytes_recycled.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of takes served from the pool, in `[0, 1]`; `0` before
+    /// any take.  Timing-dependent (producer/consumer interleaving
+    /// decides how warm the pool is) — report it, never digest it.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits();
+        let total = h + self.misses();
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_cover_and_round_up() {
+        assert_eq!(class_for_len(0), Some(0));
+        assert_eq!(class_for_len(64), Some(0));
+        assert_eq!(class_for_len(65), Some(1));
+        assert_eq!(class_size(class_for_len(1200).unwrap()), 2048);
+        assert_eq!(class_for_len(1 << MAX_SHIFT), Some(NCLASSES - 1));
+        assert_eq!(class_for_len((1 << MAX_SHIFT) + 1), None);
+        assert_eq!(class_for_exact_cap(2048), Some(5));
+        assert_eq!(class_for_exact_cap(1200), None);
+        assert_eq!(class_for_exact_cap(32), None);
+    }
+
+    #[test]
+    fn take_is_zeroed_and_recycling_hits() {
+        let arena = FrameArena::new();
+        let mut v = arena.take_f32(100);
+        assert_eq!(arena.misses(), 1);
+        assert!(v.iter().all(|&x| x == 0.0));
+        v.iter_mut().for_each(|x| *x = 7.5);
+        let cap = v.capacity();
+        assert_eq!(cap, 128, "miss path allocates the exact class size");
+        arena.put_f32(v);
+        // Same class, different length: served recycled, re-zeroed.
+        let v2 = arena.take_f32(90);
+        assert_eq!(arena.hits(), 1);
+        assert_eq!(v2.capacity(), cap);
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled buffer is zeroed");
+        assert_eq!(arena.bytes_recycled(), 90 * 4);
+        assert!((arena.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn foreign_and_oversize_buffers_are_safely_dropped() {
+        let arena = FrameArena::new();
+        // Non-class capacity: dropped, not pooled.
+        let mut odd = Vec::with_capacity(100);
+        odd.resize(100, 1u8);
+        arena.put_u8(odd);
+        let v = arena.take_u8(100);
+        assert_eq!(arena.hits(), 0, "non-class capacity must not be pooled");
+        arena.put_u8(v);
+        assert_eq!(arena.take_u8(100).capacity(), 128);
+        assert_eq!(arena.hits(), 1);
+        // Oversize: plain allocation both ways.
+        let big = arena.take_u16((1 << MAX_SHIFT) + 1);
+        assert_eq!(big.len(), (1 << MAX_SHIFT) + 1);
+        arena.put_u16(big);
+    }
+
+    #[test]
+    fn class_overflow_frees_instead_of_blocking() {
+        let arena = FrameArena::new();
+        let bufs: Vec<_> = (0..SLOTS + 4).map(|_| arena.take_u8(64)).collect();
+        for b in bufs {
+            arena.put_u8(b); // the last 4 puts land on a full class
+        }
+        let served: Vec<_> = (0..SLOTS + 4).map(|_| arena.take_u8(64)).collect();
+        let hits = arena.hits();
+        assert_eq!(hits, SLOTS as u64, "exactly SLOTS buffers were retained");
+        drop(served);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let arena = FrameArena::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let arena = &arena;
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let v = arena.take_f32(64 * (1 + (t + i) % 3));
+                        arena.put_f32(v);
+                    }
+                });
+            }
+        });
+        assert_eq!(arena.hits() + arena.misses(), 4 * 200);
+        assert!(arena.hits() > 0);
+    }
+}

@@ -16,37 +16,23 @@
 //! (panels are visited in order, rows within a panel in order), so the
 //! result is deterministic and independent of M-blocking — the property
 //! the frontend's serial-vs-parallel bit-identity tests rely on.
+//!
+//! Since the SIMD seam landed, these functions are thin dispatchers:
+//! the scalar reference kernels and the runtime-selected `std::arch`
+//! variants (bit-identical by construction, property-tested in
+//! `tests/simd_parity.rs`) live in [`crate::util::simd`]; the selected
+//! tier comes from [`simd::active_tier`] (`P2M_SIMD` / `fleet --simd`).
 
-/// K-panel height: `KC · N` values of `B` (≤ 32 KiB at the frontend's
-/// N = 16) stay hot in L1/L2 while every `A` row sweeps the panel.
-const KC: usize = 256;
+use crate::util::simd;
 
-/// Dense row-major `C = A · B` over `f64`.
+/// Dense row-major `C = A · B` over `f64`, on the process-wide SIMD
+/// tier.
 ///
 /// Shapes: `a` is `m×k`, `b` is `k×n`, `c` is `m×n`; `c` is overwritten
 /// (not accumulated into).  Panics when a slice length disagrees with
-/// its shape.
+/// its shape.  Results are bit-identical across tiers.
 pub fn matmul(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    assert_eq!(a.len(), m * k, "A is not m x k");
-    assert_eq!(b.len(), k * n, "B is not k x n");
-    assert_eq!(c.len(), m * n, "C is not m x n");
-    c.fill(0.0);
-    if m == 0 || k == 0 || n == 0 {
-        return;
-    }
-    let mut k0 = 0usize;
-    while k0 < k {
-        let k1 = (k0 + KC).min(k);
-        let b_panel = &b[k0 * n..k1 * n];
-        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
-            for (&aik, b_row) in a_row[k0..k1].iter().zip(b_panel.chunks_exact(n)) {
-                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                    *cv += aik * bv;
-                }
-            }
-        }
-        k0 = k1;
-    }
+    simd::matmul_f64(simd::active_tier(), m, k, n, a, b, c);
 }
 
 /// Integer sibling of [`matmul`] for the native backend's quantized
@@ -61,26 +47,7 @@ pub fn matmul(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64])
 /// `i32` (the native backend clamps activations to one code ladder per
 /// layer exactly for this).  Shapes are asserted like [`matmul`].
 pub fn matmul_i32(m: usize, k: usize, n: usize, a: &[i32], b: &[i32], c: &mut [i32]) {
-    assert_eq!(a.len(), m * k, "A is not m x k");
-    assert_eq!(b.len(), k * n, "B is not k x n");
-    assert_eq!(c.len(), m * n, "C is not m x n");
-    c.fill(0);
-    if m == 0 || k == 0 || n == 0 {
-        return;
-    }
-    let mut k0 = 0usize;
-    while k0 < k {
-        let k1 = (k0 + KC).min(k);
-        let b_panel = &b[k0 * n..k1 * n];
-        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
-            for (&aik, b_row) in a_row[k0..k1].iter().zip(b_panel.chunks_exact(n)) {
-                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                    *cv += aik * bv;
-                }
-            }
-        }
-        k0 = k1;
-    }
+    simd::matmul_i32(simd::active_tier(), m, k, n, a, b, c);
 }
 
 /// Deterministic scalar quantiser behind the wire format
@@ -101,19 +68,9 @@ pub fn quantize_codes(
     scale: f64,
     zero_point: i64,
     code_max: u32,
-    mut emit: impl FnMut(usize, u32),
+    emit: impl FnMut(usize, u32),
 ) -> u64 {
-    assert!(scale > 0.0, "quantiser scale must be positive");
-    let mut clamped = 0u64;
-    for (i, &v) in values.iter().enumerate() {
-        let raw = (v as f64 / scale).round() as i64 + zero_point;
-        let code = raw.clamp(0, code_max as i64);
-        if code != raw {
-            clamped += 1;
-        }
-        emit(i, code as u32);
-    }
-    clamped
+    simd::quantize_codes(simd::active_tier(), values, scale, zero_point, code_max, emit)
 }
 
 /// Exact integer accumulation of a code stream: the u64 sum no float
@@ -127,6 +84,7 @@ pub fn sum_codes(codes: impl Iterator<Item = u64>) -> u64 {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+    use crate::util::simd::KC;
 
     /// Textbook triple loop, same k-ascending accumulation order.
     fn naive(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {

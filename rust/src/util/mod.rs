@@ -5,9 +5,11 @@
 //! Each module is a deliberately small, fully-tested replacement scoped to
 //! exactly what this crate needs.
 
+pub mod arena;
 pub mod bench;
 pub mod json;
 pub mod linalg;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod stats;

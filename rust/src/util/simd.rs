@@ -1,0 +1,958 @@
+//! Runtime-dispatched SIMD kernels for the four hot loops of the frame
+//! path: the f64 frontend GEMM ([`matmul_f64`]), the native backend's
+//! integer 1×1 layers ([`matmul_i32`]), the ADC quantiser
+//! ([`quantize_codes`]) and the wire bit-packer
+//! ([`pack_codes_u8`]/[`unpack_codes_u8`] and their u16 siblings).
+//!
+//! # The dispatch seam
+//!
+//! Every kernel takes an explicit [`SimdTier`] so tests can exercise all
+//! tiers the host supports in one process; production callers pass
+//! [`active_tier`], which is selected **once** per process from (in
+//! priority order) [`force_tier`] (the `fleet --simd` CLI flag), the
+//! `P2M_SIMD` environment variable (`auto`, `off`/`scalar`, `sse2`,
+//! `avx2`, `neon`), or CPU feature detection.  Requesting a tier the
+//! host cannot run falls back to the best detected tier — an override
+//! can never select an illegal instruction.
+//!
+//! # Scalar is the reference, SIMD must be bit-identical
+//!
+//! The scalar kernels (`*_scalar`) are the semantic definition; every
+//! SIMD variant must reproduce them **bit for bit**, because frame
+//! bytes feed scenario digests and the serial-vs-parallel identity
+//! tests.  The rules that make this possible:
+//!
+//! * **f64 GEMM** vectorises across the output columns `j`, never
+//!   across `k`: each output element keeps its own strictly
+//!   k-ascending accumulation chain, with a separate IEEE multiply and
+//!   add per step (**no FMA** — fused rounding differs), so a vector
+//!   lane performs exactly the scalar op sequence.
+//! * **i32 GEMM** is exact integer arithmetic — any order works; lanes
+//!   use wrapping ops, matching release-mode scalar inside the
+//!   documented "products fit i32" contract.  SSE2 has no 32-bit lane
+//!   multiply (`mullo_epi32` is SSE4.1), so that tier dispatches the
+//!   i32 kernel to scalar rather than emulate it.
+//! * **quantise** must reproduce `f64::round` (half away from zero)
+//!   and Rust's saturating `as i64` cast.  AVX2 builds half-away
+//!   rounding from truncate + exact fraction compare and does the final
+//!   f64→i64 cast per lane in scalar code; NEON's `FCVTAS`
+//!   (`vcvtaq_s64_f64`) implements exactly round-ties-away +
+//!   saturate + NaN→0 in one instruction.  SSE2 falls back to scalar
+//!   (its f64→int converts saturate to the *i32* range, which disagrees
+//!   with the scalar cast for huge inputs).
+//! * **pack/unpack** share one word-level kernel across all SIMD tiers
+//!   (a u64 bit buffer streamed LSB-first, byte-at-a-time flush —
+//!   occupancy never exceeds 7+16 bits), with `memcpy` fast paths at
+//!   8/16 bits; the scalar tier keeps the original bit-at-a-time loop
+//!   as the layout reference.
+//!
+//! Adding a new ISA tier = a new [`SimdTier`] variant, a
+//! `#[cfg(target_arch)]` kernel module obeying the rules above, arms in
+//! the four dispatch `match`es, and a line in [`supported_tiers`] — the
+//! parity suite (`tests/simd_parity.rs`) then sweeps it against scalar
+//! automatically on hosts that support it.
+
+use std::sync::OnceLock;
+
+/// A runtime-selectable kernel tier.  All variants exist on every
+/// architecture (so configuration is portable); tiers the host cannot
+/// execute are never selected by [`active_tier`] and dispatch to scalar
+/// defensively if forced through the explicit-tier entry points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// The portable reference kernels — the bit-exactness oracle.
+    Scalar,
+    /// x86_64 baseline 128-bit vectors (f64 GEMM + packing only).
+    Sse2,
+    /// x86_64 256-bit vectors (all four kernels), runtime-detected.
+    Avx2,
+    /// aarch64 baseline 128-bit vectors (all four kernels).
+    Neon,
+}
+
+impl SimdTier {
+    /// Stable lower-case name, matching the `P2M_SIMD` spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Sse2 => "sse2",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+}
+
+impl std::fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+static TIER: OnceLock<SimdTier> = OnceLock::new();
+
+/// Best tier the host CPU can execute, by feature detection.
+pub fn detect_tier() -> SimdTier {
+    #[cfg(target_arch = "x86_64")]
+    return if std::arch::is_x86_feature_detected!("avx2") {
+        SimdTier::Avx2
+    } else {
+        SimdTier::Sse2
+    };
+    #[cfg(target_arch = "aarch64")]
+    return SimdTier::Neon;
+    #[allow(unreachable_code)]
+    SimdTier::Scalar
+}
+
+/// Every tier the host can execute, scalar first.  The parity tests
+/// sweep this list, so a run on any one machine proves bit-identity for
+/// all tiers that machine can reach.
+pub fn supported_tiers() -> Vec<SimdTier> {
+    let mut tiers = vec![SimdTier::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        tiers.push(SimdTier::Sse2);
+        if std::arch::is_x86_feature_detected!("avx2") {
+            tiers.push(SimdTier::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    tiers.push(SimdTier::Neon);
+    tiers
+}
+
+/// Parse a `P2M_SIMD`/`--simd` spec.  `auto` (or empty) means detect;
+/// a supported tier name selects it; a *known but unsupported* tier
+/// falls back to the best detected tier (documented, not an error, so
+/// one config works across a heterogeneous fleet of hosts); an unknown
+/// word is an error.
+pub fn parse_tier_spec(spec: &str) -> Result<SimdTier, String> {
+    let req = match spec.trim().to_ascii_lowercase().as_str() {
+        "auto" | "" => return Ok(detect_tier()),
+        "off" | "scalar" => SimdTier::Scalar,
+        "sse2" => SimdTier::Sse2,
+        "avx2" => SimdTier::Avx2,
+        "neon" => SimdTier::Neon,
+        other => {
+            return Err(format!(
+                "unknown SIMD tier '{other}' (known: auto, off, scalar, sse2, avx2, neon)"
+            ))
+        }
+    };
+    if supported_tiers().contains(&req) {
+        Ok(req)
+    } else {
+        Ok(detect_tier())
+    }
+}
+
+/// The process-wide dispatch tier, selected once on first use: an
+/// earlier [`force_tier`] call wins, else the `P2M_SIMD` environment
+/// variable, else detection.  A malformed `P2M_SIMD` value warns on
+/// stderr and falls back to detection rather than aborting a fleet.
+pub fn active_tier() -> SimdTier {
+    *TIER.get_or_init(|| match std::env::var("P2M_SIMD") {
+        Ok(spec) => parse_tier_spec(&spec).unwrap_or_else(|err| {
+            eprintln!("warning: P2M_SIMD ignored: {err}");
+            detect_tier()
+        }),
+        Err(_) => detect_tier(),
+    })
+}
+
+/// Pin the dispatch tier from a CLI flag, before any kernel runs.
+/// First selection wins: if [`active_tier`] was already consulted (or
+/// another `force_tier` landed first), the earlier choice stands — the
+/// returned tier is always the one actually in effect.
+pub fn force_tier(spec: &str) -> Result<SimdTier, String> {
+    let tier = parse_tier_spec(spec)?;
+    let _ = TIER.set(tier);
+    Ok(active_tier())
+}
+
+/// K-panel height of the scalar reference GEMMs: `KC · N` values of `B`
+/// stay hot in L1/L2 while every `A` row sweeps the panel.  Panelling
+/// never changes results — the per-element accumulation order is
+/// k-ascending either way.
+pub const KC: usize = 256;
+
+// ---------------------------------------------------------------------
+// f64 GEMM
+// ---------------------------------------------------------------------
+
+fn assert_gemm_shapes<T>(m: usize, k: usize, n: usize, a: &[T], b: &[T], c: &[T]) {
+    assert_eq!(a.len(), m * k, "A is not m x k");
+    assert_eq!(b.len(), k * n, "B is not k x n");
+    assert_eq!(c.len(), m * n, "C is not m x n");
+}
+
+/// Dense row-major `C = A · B` over `f64` on an explicit tier.
+/// `c` is overwritten.  Bit-identical across tiers (see module docs).
+pub fn matmul_f64(
+    tier: SimdTier,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) {
+    assert_gemm_shapes(m, k, n, a, b, c);
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is the x86_64 baseline; AVX2 is only selectable
+        // when detected (active_tier/parse_tier_spec) — and the
+        // explicit-tier test path only receives tiers from
+        // supported_tiers().
+        SimdTier::Sse2 => unsafe { x86::matmul_f64_sse2(m, k, n, a, b, c) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — Avx2 implies is_x86_feature_detected!("avx2").
+        SimdTier::Avx2 => unsafe { x86::matmul_f64_avx2(m, k, n, a, b, c) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => neon::matmul_f64_neon(m, k, n, a, b, c),
+        // Scalar, plus any tier this architecture cannot run (reachable
+        // only by constructing the variant by hand).
+        _ => matmul_f64_scalar(m, k, n, a, b, c),
+    }
+}
+
+/// The scalar reference GEMM (KC-panelled axpy; see [`KC`] and module
+/// docs).  Shapes must already be validated and `c` zeroed.
+pub fn matmul_f64_scalar(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let b_panel = &b[k0 * n..k1 * n];
+        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+            for (&aik, b_row) in a_row[k0..k1].iter().zip(b_panel.chunks_exact(n)) {
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// i32 GEMM
+// ---------------------------------------------------------------------
+
+/// Integer sibling of [`matmul_f64`] on an explicit tier.  Exact for
+/// operands whose products/accumulations fit `i32` (the native
+/// backend's contract); vector lanes use wrapping arithmetic, so
+/// *outside* that contract SIMD tiers wrap where a debug-build scalar
+/// run would panic on overflow.
+pub fn matmul_i32(
+    tier: SimdTier,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i32],
+    b: &[i32],
+    c: &mut [i32],
+) {
+    assert_gemm_shapes(m, k, n, a, b, c);
+    c.fill(0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 tier implies runtime AVX2 support (see matmul_f64).
+        SimdTier::Avx2 => unsafe { x86::matmul_i32_avx2(m, k, n, a, b, c) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => neon::matmul_i32_neon(m, k, n, a, b, c),
+        // Scalar, and Sse2: no 32-bit lane multiply below SSE4.1, so the
+        // SSE2 tier keeps the reference kernel (documented in module docs).
+        _ => matmul_i32_scalar(m, k, n, a, b, c),
+    }
+}
+
+/// The scalar reference integer GEMM (same loop order as
+/// [`matmul_f64_scalar`]).
+pub fn matmul_i32_scalar(m: usize, k: usize, n: usize, a: &[i32], b: &[i32], c: &mut [i32]) {
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let b_panel = &b[k0 * n..k1 * n];
+        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+            for (&aik, b_row) in a_row[k0..k1].iter().zip(b_panel.chunks_exact(n)) {
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quantiser
+// ---------------------------------------------------------------------
+
+/// Deterministic quantiser on an explicit tier:
+/// `code_i = clamp(round(v_i / scale) + zero_point, 0, code_max)`, with
+/// the division and round in f64 and the shift/clamp in i64, exactly as
+/// the scalar reference defines them.  `emit(i, code)` receives every
+/// code in index order; returns the clamp count.
+pub fn quantize_codes(
+    tier: SimdTier,
+    values: &[f32],
+    scale: f64,
+    zero_point: i64,
+    code_max: u32,
+    mut emit: impl FnMut(usize, u32),
+) -> u64 {
+    assert!(scale > 0.0, "quantiser scale must be positive");
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 tier implies runtime AVX2 support (see matmul_f64).
+        SimdTier::Avx2 => unsafe {
+            x86::quantize_codes_avx2(values, scale, zero_point, code_max, &mut emit)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => neon::quantize_codes_neon(values, scale, zero_point, code_max, emit),
+        // Scalar, and Sse2: pre-SSE4.1 f64→int converts saturate to the
+        // i32 range, which diverges from the scalar `as i64` cast on
+        // huge inputs — the reference kernel stays in charge.
+        _ => quantize_codes_scalar(values, scale, zero_point, code_max, emit),
+    }
+}
+
+/// The scalar reference quantiser.
+pub fn quantize_codes_scalar(
+    values: &[f32],
+    scale: f64,
+    zero_point: i64,
+    code_max: u32,
+    mut emit: impl FnMut(usize, u32),
+) -> u64 {
+    let mut clamped = 0u64;
+    for (i, &v) in values.iter().enumerate() {
+        // saturating_add: the float→int cast saturates to i64::MAX/MIN
+        // on huge/non-finite inputs, and a plain `+ zero_point` would
+        // then overflow in debug builds.  Every tier does the same.
+        let raw = ((v as f64 / scale).round() as i64).saturating_add(zero_point);
+        let code = raw.clamp(0, code_max as i64);
+        if code != raw {
+            clamped += 1;
+        }
+        emit(i, code as u32);
+    }
+    clamped
+}
+
+// ---------------------------------------------------------------------
+// Wire bit-packing
+// ---------------------------------------------------------------------
+
+/// Bit-pack `codes` (each `bits` wide, LSB-first within each byte) into
+/// `out`, which must be `(codes.len() * bits).div_ceil(8)` bytes and
+/// zero-filled.  Codes wider than `bits` are masked, like the
+/// reference.
+pub fn pack_codes_u8(tier: SimdTier, codes: &[u8], bits: u32, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
+    match tier {
+        SimdTier::Scalar => pack_bits_ref(codes.iter().map(|&c| c as u64), bits, out),
+        _ if bits == 8 => out.copy_from_slice(codes),
+        _ => pack_words(codes.iter().map(|&c| c as u64), bits, out),
+    }
+}
+
+/// [`pack_codes_u8`] for 9..=16-bit codes stored in `u16`.
+pub fn pack_codes_u16(tier: SimdTier, codes: &[u16], bits: u32, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), (codes.len() * bits as usize).div_ceil(8));
+    match tier {
+        SimdTier::Scalar => pack_bits_ref(codes.iter().map(|&c| c as u64), bits, out),
+        _ if bits == 16 => {
+            for (o, &code) in out.chunks_exact_mut(2).zip(codes) {
+                o.copy_from_slice(&code.to_le_bytes());
+            }
+        }
+        _ => pack_words(codes.iter().map(|&c| c as u64), bits, out),
+    }
+}
+
+/// Inverse of [`pack_codes_u8`]: decode `out.len()` codes of width
+/// `bits` from `packed` (which must hold at least that many bits).
+pub fn unpack_codes_u8(tier: SimdTier, packed: &[u8], bits: u32, out: &mut [u8]) {
+    debug_assert!(packed.len() * 8 >= out.len() * bits as usize);
+    match tier {
+        SimdTier::Scalar => unpack_bits_ref(packed, bits, out.len(), |i, c| out[i] = c as u8),
+        _ if bits == 8 => out.copy_from_slice(packed),
+        _ => unpack_words(packed, bits, out.len(), |i, c| out[i] = c as u8),
+    }
+}
+
+/// [`unpack_codes_u8`] for 9..=16-bit codes stored in `u16`.
+pub fn unpack_codes_u16(tier: SimdTier, packed: &[u8], bits: u32, out: &mut [u16]) {
+    debug_assert!(packed.len() * 8 >= out.len() * bits as usize);
+    match tier {
+        SimdTier::Scalar => unpack_bits_ref(packed, bits, out.len(), |i, c| out[i] = c as u16),
+        _ if bits == 16 => {
+            for (o, bytes) in out.iter_mut().zip(packed.chunks_exact(2)) {
+                *o = u16::from_le_bytes([bytes[0], bytes[1]]);
+            }
+        }
+        _ => unpack_words(packed, bits, out.len(), |i, c| out[i] = c as u16),
+    }
+}
+
+/// The layout reference: one bit at a time, exactly the original
+/// `QuantizedFrame::pack_wire` loop.  `out` must be zero-filled.
+fn pack_bits_ref(codes: impl Iterator<Item = u64>, bits: u32, out: &mut [u8]) {
+    let bits = bits as usize;
+    let mut bitpos = 0usize;
+    for code in codes {
+        for b in 0..bits {
+            if (code >> b) & 1 == 1 {
+                out[(bitpos + b) / 8] |= 1 << ((bitpos + b) % 8);
+            }
+        }
+        bitpos += bits;
+    }
+}
+
+/// The layout reference decoder: one bit at a time.
+fn unpack_bits_ref(packed: &[u8], bits: u32, n: usize, mut store: impl FnMut(usize, u64)) {
+    let bits = bits as usize;
+    let mut bitpos = 0usize;
+    for i in 0..n {
+        let mut code = 0u64;
+        for b in 0..bits {
+            if (packed[(bitpos + b) / 8] >> ((bitpos + b) % 8)) & 1 == 1 {
+                code |= 1 << b;
+            }
+        }
+        bitpos += bits;
+        store(i, code);
+    }
+}
+
+/// Word-level packer shared by all SIMD tiers: codes stream LSB-first
+/// through a u64 bit buffer flushed a byte at a time.  Occupancy is at
+/// most 7 leftover + 16 new bits, so the buffer never overflows; the
+/// emitted layout is bit-identical to [`pack_bits_ref`].
+fn pack_words(codes: impl Iterator<Item = u64>, bits: u32, out: &mut [u8]) {
+    let mask = (1u64 << bits) - 1;
+    let mut buf = 0u64;
+    let mut nbits = 0u32;
+    let mut pos = 0usize;
+    for code in codes {
+        buf |= (code & mask) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out[pos] = buf as u8;
+            pos += 1;
+            buf >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out[pos] = buf as u8;
+    }
+}
+
+/// Word-level decoder shared by all SIMD tiers (inverse of
+/// [`pack_words`]).
+fn unpack_words(packed: &[u8], bits: u32, n: usize, mut store: impl FnMut(usize, u64)) {
+    let mask = (1u64 << bits) - 1;
+    let mut buf = 0u64;
+    let mut nbits = 0u32;
+    let mut byte = 0usize;
+    for i in 0..n {
+        while nbits < bits {
+            buf |= (packed[byte] as u64) << nbits;
+            byte += 1;
+            nbits += 8;
+        }
+        store(i, buf & mask);
+        buf >>= bits;
+        nbits -= bits;
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64 kernels
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// SSE2 must be available (always true on x86_64); slice shapes
+    /// must satisfy the `matmul_f64` asserts.
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn matmul_f64_sse2(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+    ) {
+        let bp = b.as_ptr();
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let cp = c.as_mut_ptr().add(i * n);
+            let mut j = 0usize;
+            // 2 vectors × 2 lanes: accumulators live in registers for
+            // the whole k sweep, separate mul + add per step (no FMA).
+            while j + 4 <= n {
+                let mut acc0 = _mm_setzero_pd();
+                let mut acc1 = _mm_setzero_pd();
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    let va = _mm_set1_pd(aik);
+                    let brow = bp.add(kk * n + j);
+                    acc0 = _mm_add_pd(acc0, _mm_mul_pd(va, _mm_loadu_pd(brow)));
+                    acc1 = _mm_add_pd(acc1, _mm_mul_pd(va, _mm_loadu_pd(brow.add(2))));
+                }
+                _mm_storeu_pd(cp.add(j), acc0);
+                _mm_storeu_pd(cp.add(j + 2), acc1);
+                j += 4;
+            }
+            while j + 2 <= n {
+                let mut acc = _mm_setzero_pd();
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    acc = _mm_add_pd(
+                        acc,
+                        _mm_mul_pd(_mm_set1_pd(aik), _mm_loadu_pd(bp.add(kk * n + j))),
+                    );
+                }
+                _mm_storeu_pd(cp.add(j), acc);
+                j += 2;
+            }
+            while j < n {
+                let mut acc = 0.0f64;
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    acc += aik * *bp.add(kk * n + j);
+                }
+                *cp.add(j) = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be runtime-detected; slice shapes must satisfy the
+    /// `matmul_f64` asserts.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_f64_avx2(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+    ) {
+        let bp = b.as_ptr();
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let cp = c.as_mut_ptr().add(i * n);
+            let mut j = 0usize;
+            // 2 vectors × 4 lanes (the frontend's N = 16 is exactly two
+            // of these blocks); separate mul + add per step (no FMA).
+            while j + 8 <= n {
+                let mut acc0 = _mm256_setzero_pd();
+                let mut acc1 = _mm256_setzero_pd();
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    let va = _mm256_set1_pd(aik);
+                    let brow = bp.add(kk * n + j);
+                    acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(va, _mm256_loadu_pd(brow)));
+                    acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(va, _mm256_loadu_pd(brow.add(4))));
+                }
+                _mm256_storeu_pd(cp.add(j), acc0);
+                _mm256_storeu_pd(cp.add(j + 4), acc1);
+                j += 8;
+            }
+            while j + 4 <= n {
+                let mut acc = _mm256_setzero_pd();
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    acc = _mm256_add_pd(
+                        acc,
+                        _mm256_mul_pd(_mm256_set1_pd(aik), _mm256_loadu_pd(bp.add(kk * n + j))),
+                    );
+                }
+                _mm256_storeu_pd(cp.add(j), acc);
+                j += 4;
+            }
+            while j < n {
+                let mut acc = 0.0f64;
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    acc += aik * *bp.add(kk * n + j);
+                }
+                *cp.add(j) = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be runtime-detected; slice shapes must satisfy the
+    /// `matmul_i32` asserts.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_i32_avx2(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i32],
+        b: &[i32],
+        c: &mut [i32],
+    ) {
+        let bp = b.as_ptr();
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let cp = c.as_mut_ptr().add(i * n);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let mut acc = _mm256_setzero_si256();
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    let va = _mm256_set1_epi32(aik);
+                    let vb = _mm256_loadu_si256(bp.add(kk * n + j) as *const __m256i);
+                    acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, vb));
+                }
+                _mm256_storeu_si256(cp.add(j) as *mut __m256i, acc);
+                j += 8;
+            }
+            while j < n {
+                let mut acc = 0i32;
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    acc = acc.wrapping_add(aik.wrapping_mul(*bp.add(kk * n + j)));
+                }
+                *cp.add(j) = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be runtime-detected.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quantize_codes_avx2(
+        values: &[f32],
+        scale: f64,
+        zero_point: i64,
+        code_max: u32,
+        emit: &mut dyn FnMut(usize, u32),
+    ) -> u64 {
+        let vscale = _mm256_set1_pd(scale);
+        let half = _mm256_set1_pd(0.5);
+        let one = _mm256_set1_pd(1.0);
+        let sign = _mm256_set1_pd(-0.0);
+        let mut clamped = 0u64;
+        let n = values.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // 4 f32 → 4 f64 lanes (exact widen), IEEE divide.
+            let q = _mm256_div_pd(_mm256_cvtps_pd(_mm_loadu_ps(values.as_ptr().add(i))), vscale);
+            // round half away from zero, exactly f64::round:
+            //   t    = trunc(q)
+            //   frac = q − t            (exact: |frac| < 1, or 0/NaN)
+            //   r    = |frac| ≥ 0.5 ? t + copysign(1, q) : t
+            // NaN/±inf lanes: frac is NaN, the OQ compare is false, so
+            // r = t = NaN/±inf — the scalar round leaves them alike.
+            let t = _mm256_round_pd::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(q);
+            let frac = _mm256_sub_pd(q, t);
+            let absfrac = _mm256_andnot_pd(sign, frac);
+            let bump_mask = _mm256_cmp_pd::<_CMP_GE_OQ>(absfrac, half);
+            let signed_one = _mm256_or_pd(one, _mm256_and_pd(sign, q));
+            let r = _mm256_add_pd(t, _mm256_and_pd(bump_mask, signed_one));
+            let mut lanes = [0.0f64; 4];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), r);
+            for (lane, &rv) in lanes.iter().enumerate() {
+                // Rust's saturating float→int cast, same as scalar.
+                let raw = (rv as i64).saturating_add(zero_point);
+                let code = raw.clamp(0, code_max as i64);
+                if code != raw {
+                    clamped += 1;
+                }
+                emit(i + lane, code as u32);
+            }
+            i += 4;
+        }
+        for (off, &v) in values[i..].iter().enumerate() {
+            let raw = ((v as f64 / scale).round() as i64).saturating_add(zero_point);
+            let code = raw.clamp(0, code_max as i64);
+            if code != raw {
+                clamped += 1;
+            }
+            emit(i + off, code as u32);
+        }
+        clamped
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64 kernels
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    pub(super) fn matmul_f64_neon(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+    ) {
+        // SAFETY: NEON is the aarch64 baseline; all pointer offsets stay
+        // inside the asserted m*k / k*n / m*n slice bounds.
+        unsafe {
+            let bp = b.as_ptr();
+            for i in 0..m {
+                let a_row = &a[i * k..(i + 1) * k];
+                let cp = c.as_mut_ptr().add(i * n);
+                let mut j = 0usize;
+                // 2 vectors × 2 lanes; separate mul + add (no vfmaq —
+                // fused rounding would break bit-identity).
+                while j + 4 <= n {
+                    let mut acc0 = vdupq_n_f64(0.0);
+                    let mut acc1 = vdupq_n_f64(0.0);
+                    for (kk, &aik) in a_row.iter().enumerate() {
+                        let va = vdupq_n_f64(aik);
+                        let brow = bp.add(kk * n + j);
+                        acc0 = vaddq_f64(acc0, vmulq_f64(va, vld1q_f64(brow)));
+                        acc1 = vaddq_f64(acc1, vmulq_f64(va, vld1q_f64(brow.add(2))));
+                    }
+                    vst1q_f64(cp.add(j), acc0);
+                    vst1q_f64(cp.add(j + 2), acc1);
+                    j += 4;
+                }
+                while j + 2 <= n {
+                    let mut acc = vdupq_n_f64(0.0);
+                    for (kk, &aik) in a_row.iter().enumerate() {
+                        acc =
+                            vaddq_f64(acc, vmulq_f64(vdupq_n_f64(aik), vld1q_f64(bp.add(kk * n + j))));
+                    }
+                    vst1q_f64(cp.add(j), acc);
+                    j += 2;
+                }
+                while j < n {
+                    let mut acc = 0.0f64;
+                    for (kk, &aik) in a_row.iter().enumerate() {
+                        acc += aik * *bp.add(kk * n + j);
+                    }
+                    *cp.add(j) = acc;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    pub(super) fn matmul_i32_neon(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i32],
+        b: &[i32],
+        c: &mut [i32],
+    ) {
+        // SAFETY: NEON is the aarch64 baseline; offsets stay in bounds.
+        unsafe {
+            let bp = b.as_ptr();
+            for i in 0..m {
+                let a_row = &a[i * k..(i + 1) * k];
+                let cp = c.as_mut_ptr().add(i * n);
+                let mut j = 0usize;
+                while j + 4 <= n {
+                    let mut acc = vdupq_n_s32(0);
+                    for (kk, &aik) in a_row.iter().enumerate() {
+                        let va = vdupq_n_s32(aik);
+                        let vb = vld1q_s32(bp.add(kk * n + j));
+                        acc = vaddq_s32(acc, vmulq_s32(va, vb));
+                    }
+                    vst1q_s32(cp.add(j), acc);
+                    j += 4;
+                }
+                while j < n {
+                    let mut acc = 0i32;
+                    for (kk, &aik) in a_row.iter().enumerate() {
+                        acc = acc.wrapping_add(aik.wrapping_mul(*bp.add(kk * n + j)));
+                    }
+                    *cp.add(j) = acc;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    pub(super) fn quantize_codes_neon(
+        values: &[f32],
+        scale: f64,
+        zero_point: i64,
+        code_max: u32,
+        mut emit: impl FnMut(usize, u32),
+    ) -> u64 {
+        let mut clamped = 0u64;
+        let n = values.len();
+        let mut i = 0usize;
+        // SAFETY: NEON is the aarch64 baseline; loads stay in bounds
+        // (i + 2 <= n guards the 2-lane f32 load).
+        unsafe {
+            let vscale = vdupq_n_f64(scale);
+            while i + 2 <= n {
+                let x = vcvt_f64_f32(vld1_f32(values.as_ptr().add(i)));
+                let q = vdivq_f64(x, vscale);
+                // FCVTAS: round ties away from zero + saturate to i64 +
+                // NaN → 0 — exactly `q.round() as i64`.
+                let r = vcvtaq_s64_f64(q);
+                for (lane, raw0) in
+                    [vgetq_lane_s64::<0>(r), vgetq_lane_s64::<1>(r)].into_iter().enumerate()
+                {
+                    let raw = raw0.saturating_add(zero_point);
+                    let code = raw.clamp(0, code_max as i64);
+                    if code != raw {
+                        clamped += 1;
+                    }
+                    emit(i + lane, code as u32);
+                }
+                i += 2;
+            }
+        }
+        for (off, &v) in values[i..].iter().enumerate() {
+            let raw = ((v as f64 / scale).round() as i64).saturating_add(zero_point);
+            let code = raw.clamp(0, code_max as i64);
+            if code != raw {
+                clamped += 1;
+            }
+            emit(i + off, code as u32);
+        }
+        clamped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn active_tier_is_supported_and_stable() {
+        let t = active_tier();
+        assert!(supported_tiers().contains(&t));
+        assert_eq!(active_tier(), t, "selection is cached");
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(parse_tier_spec("off").unwrap(), SimdTier::Scalar);
+        assert_eq!(parse_tier_spec("Scalar").unwrap(), SimdTier::Scalar);
+        assert_eq!(parse_tier_spec("auto").unwrap(), detect_tier());
+        assert_eq!(parse_tier_spec("").unwrap(), detect_tier());
+        // Known-but-unsupported tiers fall back to detection, never err.
+        for spec in ["sse2", "avx2", "neon"] {
+            let t = parse_tier_spec(spec).unwrap();
+            assert!(supported_tiers().contains(&t), "{spec} -> {t}");
+        }
+        assert!(parse_tier_spec("avx512").is_err());
+        assert!(SimdTier::Neon.to_string() == "neon");
+    }
+
+    #[test]
+    fn every_supported_tier_matches_scalar_on_a_smoke_shape() {
+        // The heavy sweep lives in tests/simd_parity.rs; this is the
+        // in-crate smoke so `cargo test -p p2m --lib` alone still
+        // cross-checks the dispatch arms.
+        let mut rng = Rng::seed(9);
+        let (m, k, n) = (4, KC + 3, 13);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.range(-2.0, 2.0)).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.range(-2.0, 2.0)).collect();
+        let mut want = vec![0.0; m * n];
+        matmul_f64(SimdTier::Scalar, m, k, n, &a, &b, &mut want);
+        let ai: Vec<i32> = (0..m * k).map(|_| rng.i64(-9, 9) as i32).collect();
+        let bi: Vec<i32> = (0..k * n).map(|_| rng.i64(-9, 9) as i32).collect();
+        let mut want_i = vec![0i32; m * n];
+        matmul_i32(SimdTier::Scalar, m, k, n, &ai, &bi, &mut want_i);
+        for tier in supported_tiers() {
+            let mut got = vec![0.0; m * n];
+            matmul_f64(tier, m, k, n, &a, &b, &mut got);
+            assert_eq!(got, want, "f64 {tier}");
+            let mut got_i = vec![0i32; m * n];
+            matmul_i32(tier, m, k, n, &ai, &bi, &mut got_i);
+            assert_eq!(got_i, want_i, "i32 {tier}");
+        }
+    }
+
+    #[test]
+    fn quantize_edge_values_match_scalar_on_every_tier() {
+        let values = [
+            0.0f32,
+            -0.0,
+            0.5,
+            -0.5,
+            0.499_999_97,
+            1.5,
+            2.5,
+            -2.5,
+            300.0,
+            -300.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.0e30,
+            -1.0e30,
+            f32::MIN_POSITIVE,
+            1.0e-40, // subnormal
+        ];
+        for &(scale, zp, cm) in &[(0.5f64, 1i64, 255u32), (1.0, 0, 1), (1.0e-28, 128, 65535)] {
+            let mut want = Vec::new();
+            let want_clamped =
+                quantize_codes(SimdTier::Scalar, &values, scale, zp, cm, |i, c| {
+                    want.push((i, c))
+                });
+            for tier in supported_tiers() {
+                let mut got = Vec::new();
+                let clamped =
+                    quantize_codes(tier, &values, scale, zp, cm, |i, c| got.push((i, c)));
+                assert_eq!(got, want, "{tier} scale={scale}");
+                assert_eq!(clamped, want_clamped, "{tier} scale={scale} clamp count");
+            }
+        }
+    }
+
+    #[test]
+    fn packing_matches_reference_on_every_tier() {
+        let mut rng = Rng::seed(31);
+        for bits in 1..=16u32 {
+            let n = 67usize; // ragged: crosses byte and word boundaries
+            let max = (1u64 << bits) - 1;
+            let out_len = (n * bits as usize).div_ceil(8);
+            let mut want = vec![0u8; out_len];
+            let (codes8, codes16): (Vec<u8>, Vec<u16>) = (0..n)
+                .map(|_| {
+                    let c = rng.i64(0, max as i64 + 1) as u64;
+                    (c as u8, c as u16)
+                })
+                .unzip();
+            if bits <= 8 {
+                pack_codes_u8(SimdTier::Scalar, &codes8, bits, &mut want);
+            } else {
+                pack_codes_u16(SimdTier::Scalar, &codes16, bits, &mut want);
+            }
+            for tier in supported_tiers() {
+                let mut got = vec![0u8; out_len];
+                if bits <= 8 {
+                    pack_codes_u8(tier, &codes8, bits, &mut got);
+                    let mut back = vec![0u8; n];
+                    unpack_codes_u8(tier, &got, bits, &mut back);
+                    assert_eq!(back, codes8, "u8 round trip {tier} bits={bits}");
+                } else {
+                    pack_codes_u16(tier, &codes16, bits, &mut got);
+                    let mut back = vec![0u16; n];
+                    unpack_codes_u16(tier, &got, bits, &mut back);
+                    assert_eq!(back, codes16, "u16 round trip {tier} bits={bits}");
+                }
+                assert_eq!(got, want, "pack {tier} bits={bits}");
+            }
+        }
+    }
+}

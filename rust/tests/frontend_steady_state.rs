@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use p2m::coordinator::synthetic_frame_plan;
 use p2m::frontend::Fidelity;
 use p2m::sensor::{Image, SceneGen, Split};
+use p2m::util::arena::FrameArena;
 
 struct CountingAlloc;
 
@@ -98,5 +99,40 @@ fn steady_state_frame_processing_allocates_nothing() {
             "{fidelity:?}: steady-state process_quantized_into must not allocate"
         );
         assert_eq!(q_conversions, 12 * (ho * wo * c) as u64);
+
+        // The full swarm hot path — scene draw into an arena-recycled
+        // capture buffer, quantized processing into an arena-backed
+        // frame, wire packing into an arena-backed byte buffer, then
+        // recycling everything — also allocates nothing once the
+        // [`FrameArena`] is warm.  This is the per-frame cycle
+        // `fire_cell` runs for every producer-pool camera.
+        let arena = FrameArena::new();
+        let mut cycle = |label: u8, idx: u64| -> u64 {
+            let mut img = Image::zeros_in(20, 20, 3, &arena);
+            gen.image_into(label, idx, Split::Train, &mut img);
+            let mut qf = plan.quantized_frame_in(&arena);
+            let report = plan.process_quantized_into(&img, &mut ctx, &mut qf);
+            let mut wire = arena.take_u8(qf.wire_bytes() as usize);
+            qf.pack_wire_into(&mut wire);
+            arena.put_u8(wire);
+            img.recycle(&arena);
+            qf.recycle(&arena);
+            report.conversions
+        };
+        // Warm lap: every size class misses once and seeds the pool.
+        assert_eq!(cycle(1, 0), (ho * wo * c) as u64);
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        let mut a_conversions = 0u64;
+        for i in 0..12u64 {
+            a_conversions += cycle((i % 2) as u8, i);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "{fidelity:?}: warm-arena frame cycle must not allocate"
+        );
+        assert_eq!(a_conversions, 12 * (ho * wo * c) as u64);
+        assert!(arena.hit_rate() > 0.5, "warm arena should be mostly hits");
     }
 }

@@ -1,0 +1,181 @@
+//! SIMD-vs-scalar bit-identity property suite (DESIGN.md §3.7).
+//!
+//! The dispatch seam's contract is that every runtime-selected tier
+//! reproduces the scalar reference kernels **bit for bit** — the
+//! serial-vs-parallel and cross-`P2M_SIMD` digest-invariance guarantees
+//! rest on it.  This binary sweeps every tier the build supports
+//! (`supported_tiers`, scalar first) against the scalar kernels over
+//! randomized shapes that straddle lane counts, register-block widths
+//! and the KC cache panel, plus adversarial value sets for the
+//! quantiser.  Run it under `P2M_SIMD=off` too (CI does) to confirm the
+//! suite passes when dispatch is pinned to scalar.
+
+use p2m::util::rng::Rng;
+use p2m::util::simd::{
+    self, matmul_f64_scalar, matmul_i32_scalar, quantize_codes_scalar, supported_tiers, KC,
+};
+
+/// Shapes chosen to straddle every vector boundary: n sweeps ragged
+/// tails around the 2/4/8-lane widths, k crosses the KC panel edge, m
+/// exercises the row loop.
+fn gemm_shapes() -> Vec<(usize, usize, usize)> {
+    let mut shapes = Vec::new();
+    for n in [1usize, 2, 3, 4, 5, 7, 8, 9, 12, 13, 16, 17] {
+        shapes.push((3, 10, n));
+    }
+    for k in [1usize, KC - 1, KC, KC + 1, KC + 9, 2 * KC + 3] {
+        shapes.push((2, k, 11));
+    }
+    shapes.push((1, 1, 1));
+    shapes.push((7, 37, 19));
+    shapes
+}
+
+#[test]
+fn matmul_f64_is_bit_identical_on_every_tier() {
+    let mut rng = Rng::seed(0xF64);
+    for (m, k, n) in gemm_shapes() {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.range(-3.0, 3.0)).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.range(-3.0, 3.0)).collect();
+        let mut want = vec![0.0f64; m * n];
+        matmul_f64_scalar(m, k, n, &a, &b, &mut want);
+        for tier in supported_tiers() {
+            // Dirty output: the kernels must overwrite, not accumulate.
+            let mut got = vec![99.0f64; m * n];
+            simd::matmul_f64(tier, m, k, n, &a, &b, &mut got);
+            // Bit-level comparison: -0.0 != +0.0 would slip through ==.
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "tier {tier} shape {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn matmul_i32_is_exact_on_every_tier() {
+    let mut rng = Rng::seed(0x132);
+    for (m, k, n) in gemm_shapes() {
+        let a: Vec<i32> = (0..m * k).map(|_| rng.i64(-7, 8) as i32).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.i64(0, 256) as i32).collect();
+        let mut want = vec![0i32; m * n];
+        matmul_i32_scalar(m, k, n, &a, &b, &mut want);
+        for tier in supported_tiers() {
+            let mut got = vec![-5i32; m * n];
+            simd::matmul_i32(tier, m, k, n, &a, &b, &mut got);
+            assert_eq!(got, want, "tier {tier} shape {m}x{k}x{n}");
+        }
+    }
+}
+
+/// Values that break naive vector rounding: exact halves (round-half-
+/// away vs the FPU's half-even), the largest f64 below 0.5, huge and
+/// non-finite values (saturating `as i64` casts), signed zeros and
+/// subnormals.
+fn adversarial_values() -> Vec<f32> {
+    let mut v = vec![
+        0.0,
+        -0.0,
+        0.5,
+        -0.5,
+        1.5,
+        2.5,
+        -2.5,
+        0.499_999_97,
+        0.500_000_03,
+        127.5,
+        128.5,
+        254.5,
+        255.49,
+        1.0e30,
+        -1.0e30,
+        1.0e-40,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        f32::MAX,
+        f32::MIN,
+    ];
+    let mut rng = Rng::seed(0x0ADC);
+    for _ in 0..200 {
+        v.push(rng.range(-2.0, 300.0) as f32);
+    }
+    v
+}
+
+#[test]
+fn quantize_codes_matches_scalar_on_every_tier() {
+    let values = adversarial_values();
+    // Sweep lengths too, so vector tails see the adversarial values.
+    for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, values.len()] {
+        let vals = &values[..len.min(values.len())];
+        for &(scale, zp, code_max) in
+            &[(0.5f64, 1i64, 255u32), (1.0, 0, 1), (75.0 / 255.0, 0, 255), (1e-3, 128, 65535)]
+        {
+            let mut want = Vec::new();
+            let want_clamped =
+                quantize_codes_scalar(vals, scale, zp, code_max, |i, c| want.push((i, c)));
+            for tier in supported_tiers() {
+                let mut got = Vec::new();
+                let clamped =
+                    simd::quantize_codes(tier, vals, scale, zp, code_max, |i, c| {
+                        got.push((i, c))
+                    });
+                assert_eq!(got, want, "tier {tier} len {len} scale {scale}");
+                assert_eq!(clamped, want_clamped, "tier {tier} len {len} scale {scale}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_unpack_match_the_bit_reference_on_every_tier() {
+    let mut rng = Rng::seed(0xBEEF);
+    for bits in 1..=16u32 {
+        // Ragged lengths around byte and word boundaries of the packed
+        // stream (65 values of 7 bits = 455 bits = 56.875 bytes, etc).
+        for len in [0usize, 1, 2, 7, 8, 9, 63, 64, 65, 200] {
+            let max = (1u64 << bits) - 1;
+            let packed_len = (len * bits as usize).div_ceil(8);
+            if bits <= 8 {
+                let codes: Vec<u8> =
+                    (0..len).map(|_| (rng.i64(0, max as i64 + 1)) as u8).collect();
+                let mut want = vec![0u8; packed_len];
+                simd::pack_codes_u8(simd::SimdTier::Scalar, &codes, bits, &mut want);
+                for tier in supported_tiers() {
+                    // Packers require zero-filled output (the scalar
+                    // reference ORs bits in); unpack outputs are dirty.
+                    let mut got = vec![0u8; packed_len];
+                    simd::pack_codes_u8(tier, &codes, bits, &mut got);
+                    assert_eq!(got, want, "pack u8 tier {tier} bits {bits} len {len}");
+                    let mut back = vec![0xFFu8; len];
+                    simd::unpack_codes_u8(tier, &got, bits, &mut back);
+                    assert_eq!(back, codes, "unpack u8 tier {tier} bits {bits} len {len}");
+                }
+            } else {
+                let codes: Vec<u16> =
+                    (0..len).map(|_| (rng.i64(0, max as i64 + 1)) as u16).collect();
+                let mut want = vec![0u8; packed_len];
+                simd::pack_codes_u16(simd::SimdTier::Scalar, &codes, bits, &mut want);
+                for tier in supported_tiers() {
+                    let mut got = vec![0u8; packed_len];
+                    simd::pack_codes_u16(tier, &codes, bits, &mut got);
+                    assert_eq!(got, want, "pack u16 tier {tier} bits {bits} len {len}");
+                    let mut back = vec![0xFFFFu16; len];
+                    simd::unpack_codes_u16(tier, &got, bits, &mut back);
+                    assert_eq!(back, codes, "unpack u16 tier {tier} bits {bits} len {len}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn active_tier_honours_the_env_override() {
+    // The test binary may or may not inherit P2M_SIMD; either way the
+    // active tier must be one the build supports, and pinning via env
+    // must resolve to scalar when CI sets P2M_SIMD=off.
+    let tier = simd::active_tier();
+    assert!(supported_tiers().contains(&tier));
+    if std::env::var("P2M_SIMD").as_deref() == Ok("off") {
+        assert_eq!(tier, simd::SimdTier::Scalar);
+    }
+}

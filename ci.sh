@@ -100,6 +100,49 @@ step "simd-off lane: churn digest (P2M_SIMD=off)" \
 step "fleet scenario smoke (churn, digest determinism)" \
     cargo run --release --locked -q -- fleet --scenario churn --check-digest
 
+# Operability-plane smoke: serve a churn run on an ephemeral port, hit
+# /healthz and /metrics over real HTTP, assert a non-empty Prometheus
+# exposition, then kill the (deliberately long-lived) serve process.
+serve_smoke() {
+    if ! command -v curl >/dev/null 2>&1; then
+        echo "(serve smoke skipped: curl unavailable)"
+        return 0
+    fi
+    local out pid addr body
+    out="$(mktemp)"
+    cargo run --release --locked -q -- fleet --scenario churn \
+        --serve 127.0.0.1:0 >"$out" 2>&1 &
+    pid=$!
+    # shellcheck disable=SC2064
+    trap "kill $pid 2>/dev/null || true; rm -f '$out'" RETURN
+    addr=""
+    for _ in $(seq 1 300); do
+        addr="$(sed -n 's#.*operability plane listening on http://##p' "$out" | head -n1)"
+        [[ -n "$addr" ]] && break
+        if ! kill -0 "$pid" 2>/dev/null; then
+            echo "serve process died before listening; output:" >&2
+            cat "$out" >&2
+            return 1
+        fi
+        sleep 0.1
+    done
+    if [[ -z "$addr" ]]; then
+        echo "serve process never announced its address; output:" >&2
+        cat "$out" >&2
+        return 1
+    fi
+    body="$(curl -sf "http://$addr/healthz")"
+    [[ "$body" == "ok" ]] || { echo "bad /healthz body: $body" >&2; return 1; }
+    body="$(curl -sf "http://$addr/metrics")"
+    if [[ -z "$body" ]] || ! grep -q '^p2m_' <<<"$body"; then
+        echo "empty or non-Prometheus /metrics body:" >&2
+        echo "$body" >&2
+        return 1
+    fi
+    echo "(served /healthz + /metrics on $addr; $(grep -c '^p2m_' <<<"$body") sample lines)"
+}
+step "operability serve smoke (churn, /healthz + /metrics over TCP)" serve_smoke
+
 # The same determinism contract through the pooled classify stage: the
 # crash-storm script (12 producer restarts + an orphaned link) served by
 # the native integer backend over a 4-worker BackendPool must reproduce

@@ -71,6 +71,39 @@ fn main() {
         n
     });
 
+    // --- /metrics rendering: the per-scrape cost of the operability
+    // plane on a representative registry (the scenario driver's metric
+    // population), isolated from any socket I/O.  The render runs on
+    // the HTTP thread, never the hot path, but a Prometheus scraper
+    // hits it every few seconds for the lifetime of a serve-mode run.
+    {
+        let metrics = Metrics::new();
+        for name in [
+            "scenario_frames_captured",
+            "scenario_producer_restarts",
+            "scheduler_ticks",
+            "arena_hits",
+            "arena_misses",
+            "arena_bytes_recycled",
+        ] {
+            metrics.counter(name).add(123_456);
+        }
+        for name in ["scenario_active_cameras", "timer_lag_max_us", "pool_queue_depth"] {
+            let g = metrics.gauge(name);
+            for i in 0..64 {
+                g.observe(i);
+            }
+        }
+        let lat = metrics.latency("scenario_e2e_latency");
+        for i in 0..1000 {
+            lat.record_secs(1e-4 + (i % 37) as f64 * 1e-5);
+        }
+        let render_ns = b.run("metrics_render_prometheus", || {
+            bb(metrics.render_prometheus().len())
+        });
+        report.row("metrics_render_prometheus", 1e9 / render_ns, "frames_per_s");
+    }
+
     // --- Single 560x560 frame (paper scale): the §Perf tentpole rows.
     // One shared plan; the GEMM functional route vs the pre-refactor
     // per-patch folded route, and row-block scheduling across all cores.

@@ -27,13 +27,13 @@ pub struct DeviceParams {
     pub n_slope: f64,
     /// thermal voltage kT/q at 300 K \[V\]
     pub v_t: f64,
-    /// channel-length modulation [1/V]
+    /// channel-length modulation \[1/V\]
     pub lambda_clm: f64,
-    /// source-follower current scale per µm width [A/µm]
+    /// source-follower current scale per µm width \[A/µm\]
     pub i0_sf: f64,
     /// source-follower width \[µm\]
     pub w_sf: f64,
-    /// weight-transistor current scale per µm width [A/µm]
+    /// weight-transistor current scale per µm width \[A/µm\]
     pub i0_w: f64,
     /// minimum weight-transistor width \[µm\]
     pub w_min: f64,

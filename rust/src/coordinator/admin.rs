@@ -1,0 +1,667 @@
+//! The admin control plane of the operability plane (ROADMAP item 5):
+//! endpoint routing for the hand-rolled HTTP responder
+//! ([`crate::coordinator::http`]) plus the control core that lets
+//! live admin verbs mutate a *running* scenario through the exact same
+//! deterministic machinery — `ShardRegistry` adoption, timer-wheel
+//! cells, shard links — that scripted lifecycle events ride.
+//!
+//! Endpoints (see `rust/OPERATIONS.md` for curl examples):
+//!
+//! | verb + path                    | effect                               |
+//! |--------------------------------|--------------------------------------|
+//! | `GET /healthz`                 | liveness probe (`ok`)                |
+//! | `GET /metrics`                 | Prometheus text: registry + fleet    |
+//! | `POST /admin/camera`           | hot-add a camera (JSON body)         |
+//! | `DELETE /admin/camera/<id>`    | remove a camera (drain its link)     |
+//! | `POST /admin/shard/<id>/drain` | close a shard link, keep the slot    |
+//! | `POST /admin/pool/resize`      | set live producer-pool worker count  |
+//!
+//! # The run-close handshake
+//!
+//! A hot-add racing the consumer's natural termination is the one
+//! genuinely hard interleaving here: the consumer may observe "all
+//! shards closed and drained" in the same instant an admin thread
+//! injects a new camera.  The resolution is a single mutex:
+//! `ControlCore::add_camera` increments the expected-shard count and
+//! enqueues the injection under the core lock, and the consumer's
+//! `ControlCore::try_finish` re-checks — under that same lock — that
+//! no injection is pending and the adopted-shard count still matches
+//! before it seals the run.  Once sealed, mutating verbs answer 409;
+//! `GET /metrics` keeps serving the final state.
+//!
+//! # Determinism
+//!
+//! An admin-added camera is seeded exactly like a scripted one (base
+//! seed + camera id) and enters through the same cell/wheel path, so a
+//! run with a hot-add produces the same [`ScenarioReport::digest`] as
+//! the equivalent scripted scenario with that camera appended.
+//! Removing a camera before its first frame vacates the slot without
+//! trace (digest of "the scenario without it", modulo the plan compiled
+//! for it); removing a started camera truncates its stream at an
+//! interleaving-dependent frame — lossy by design, like `DropNewest`.
+//!
+//! [`ScenarioReport::digest`]: crate::coordinator::scenario::ScenarioReport::digest
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::fleet::{CameraSpec, FleetItem, PlanBank};
+use crate::coordinator::http::{HttpRequest, HttpResponse};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{ShapeKey, WireFormat};
+use crate::coordinator::pool::{CellCompute, PoolCamera};
+use crate::coordinator::queue::{Backpressure, BoundedQueue};
+use crate::coordinator::scenario::{Segment, SegmentEnd};
+use crate::util::json::Json;
+use crate::util::simd;
+
+/// One live fleet slot as the control plane tracks it: identity, wire
+/// shape and a handle on the shard link (for `/metrics` queue depths,
+/// shed counters, and admin-side close).
+struct SlotInfo {
+    id: u64,
+    shape: ShapeKey,
+    link: BoundedQueue<FleetItem>,
+}
+
+/// An admin-added camera, recorded for end-of-run report assembly.
+pub(crate) struct AdminCamera {
+    pub(crate) slot: usize,
+    pub(crate) spec: CameraSpec,
+    pub(crate) scripted_frames: u64,
+}
+
+/// Everything the control plane needs from the run it is attached to.
+pub(crate) struct Attached {
+    pub(crate) bank: Arc<Mutex<PlanBank>>,
+    pub(crate) base_seed: u64,
+    pub(crate) queue_capacity: usize,
+    pub(crate) backpressure: Backpressure,
+    pub(crate) arena: Arc<crate::util::arena::FrameArena>,
+}
+
+struct CoreState {
+    /// true from attach until the consumer seals the run (or the run
+    /// errors out); mutating admin verbs are refused while false
+    open: bool,
+    /// ever attached to a run (distinguishes 503 "no run" from 409
+    /// "run over")
+    attached: bool,
+    /// shards the consumer must adopt + drain before it may terminate:
+    /// scripted cameras + admin adds - vacated slots
+    expected_shards: usize,
+    /// next free fleet slot (scripted cameras occupy `0..n`)
+    next_slot: usize,
+    /// admin-added cameras awaiting scheduler adoption
+    injected: Vec<PoolCamera>,
+    /// slots an admin removal has marked: the scheduler vacates them if
+    /// they never produced, otherwise their closed link retires them
+    draining: HashSet<usize>,
+    /// slots that left the run without trace (removed pre-start)
+    vacated: HashSet<usize>,
+    /// live slots (scripted + admin-added, minus vacated)
+    slots: BTreeMap<usize, SlotInfo>,
+    /// camera id -> slot
+    ids: BTreeMap<u64, usize>,
+    /// admin-added cameras, in add order, for report assembly
+    admin_added: Vec<AdminCamera>,
+}
+
+/// The shared mutable heart of the control plane: the scheduler, the
+/// consumer and the admin HTTP thread all hold an `Arc` of this.
+/// Everything lifecycle-relevant sits behind one mutex (see the
+/// run-close handshake in the module docs); the worker-resize knobs are
+/// plain atomics because workers poll them lock-free per iteration.
+pub(crate) struct ControlCore {
+    state: Mutex<CoreState>,
+    /// workers currently allowed to pull work (`/admin/pool/resize`)
+    active_workers: AtomicUsize,
+    /// workers the pool actually spawned (resize upper bound)
+    spawned_workers: AtomicUsize,
+}
+
+impl ControlCore {
+    /// Hard cap on hot-adds per run: bounds the completion-queue
+    /// headroom the pool must reserve (see
+    /// [`crate::coordinator::pool::spawn_producer_pool`]).
+    pub(crate) const MAX_HOT_ADDS: usize = 1024;
+
+    fn new() -> Self {
+        ControlCore {
+            state: Mutex::new(CoreState {
+                open: false,
+                attached: false,
+                expected_shards: 0,
+                next_slot: 0,
+                injected: Vec::new(),
+                draining: HashSet::new(),
+                vacated: HashSet::new(),
+                slots: BTreeMap::new(),
+                ids: BTreeMap::new(),
+                admin_added: Vec::new(),
+            }),
+            active_workers: AtomicUsize::new(0),
+            spawned_workers: AtomicUsize::new(0),
+        }
+    }
+
+    /// Live shard-count target for the consumer's termination check.
+    pub(crate) fn expected_shards(&self) -> usize {
+        self.state.lock().unwrap().expected_shards
+    }
+
+    /// Admin-injected cameras not yet adopted by the scheduler.
+    pub(crate) fn take_injected(&self) -> Vec<PoolCamera> {
+        std::mem::take(&mut self.state.lock().unwrap().injected)
+    }
+
+    /// Is `slot` marked for removal?
+    pub(crate) fn is_draining(&self, slot: usize) -> bool {
+        self.state.lock().unwrap().draining.contains(&slot)
+    }
+
+    /// The scheduler vacated `slot` before it ever produced: it leaves
+    /// the run without trace and the consumer stops expecting its shard.
+    pub(crate) fn mark_vacated(&self, slot: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.vacated.insert(slot) {
+            st.expected_shards -= 1;
+            if let Some(info) = st.slots.remove(&slot) {
+                st.ids.remove(&info.id);
+            }
+        }
+    }
+
+    /// The consumer's atomic run-close: seals the run iff no injection
+    /// is pending and the adopted-shard count still matches (see the
+    /// module docs).  Returns false when a racing hot-add means the
+    /// consumer must keep draining.
+    pub(crate) fn try_finish(&self, adopted_shards: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !st.open {
+            return true;
+        }
+        if !st.injected.is_empty() || st.expected_shards != adopted_shards {
+            return false;
+        }
+        st.open = false;
+        true
+    }
+
+    /// Seal the run unconditionally (consumer error path).
+    pub(crate) fn force_close(&self) {
+        self.state.lock().unwrap().open = false;
+    }
+
+    /// Is the run still accepting admin mutations?
+    pub(crate) fn is_open(&self) -> bool {
+        self.state.lock().unwrap().open
+    }
+
+    /// Slots removed before their first frame (report assembly skips
+    /// them).
+    pub(crate) fn vacated_slots(&self) -> HashSet<usize> {
+        self.state.lock().unwrap().vacated.clone()
+    }
+
+    /// Admin-added cameras in slot order, for report assembly.
+    pub(crate) fn admin_cameras(&self) -> Vec<AdminCamera> {
+        let st = self.state.lock().unwrap();
+        st.admin_added
+            .iter()
+            .map(|a| AdminCamera {
+                slot: a.slot,
+                spec: a.spec,
+                scripted_frames: a.scripted_frames,
+            })
+            .collect()
+    }
+
+    /// Total fleet slots ever allocated (scripted + admin adds).
+    pub(crate) fn total_slots(&self) -> usize {
+        self.state.lock().unwrap().next_slot
+    }
+
+    /// The wire shape of `slot`'s camera, if the slot is live.
+    pub(crate) fn shape_of(&self, slot: usize) -> Option<ShapeKey> {
+        self.state.lock().unwrap().slots.get(&slot).map(|info| info.shape)
+    }
+
+    /// Record the spawned pool size and open the full pool (called by
+    /// [`crate::coordinator::pool::spawn_producer_pool`]).
+    pub(crate) fn set_worker_pool(&self, spawned: usize) {
+        self.spawned_workers.store(spawned, Ordering::Relaxed);
+        self.active_workers.store(spawned, Ordering::Relaxed);
+    }
+
+    /// Workers currently allowed to pull work.
+    pub(crate) fn active_workers(&self) -> usize {
+        self.active_workers.load(Ordering::Relaxed)
+    }
+
+    fn resize_workers(&self, target: usize) -> Result<usize, String> {
+        let spawned = self.spawned_workers.load(Ordering::Relaxed);
+        if spawned == 0 {
+            return Err("no producer pool attached".into());
+        }
+        let actual = target.clamp(1, spawned);
+        self.active_workers.store(actual, Ordering::Relaxed);
+        Ok(actual)
+    }
+}
+
+/// The public face of the admin API: owns the control core, the
+/// metrics registry handle and (once a run attaches) the run's shared
+/// artifacts; [`ControlPlane::handle`] is the HTTP request router the
+/// server thread calls.
+pub struct ControlPlane {
+    core: Arc<ControlCore>,
+    metrics: Arc<Metrics>,
+    attached: Mutex<Option<Attached>>,
+}
+
+impl ControlPlane {
+    /// A control plane rendering `metrics`; attach a run via the serve
+    /// entry points ([`crate::coordinator::scenario::run_scenario_serve`]).
+    pub fn new(metrics: Arc<Metrics>) -> Self {
+        ControlPlane {
+            core: Arc::new(ControlCore::new()),
+            metrics,
+            attached: Mutex::new(None),
+        }
+    }
+
+    pub(crate) fn core(&self) -> Arc<ControlCore> {
+        self.core.clone()
+    }
+
+    /// Bind this control plane to a starting run: record the shared
+    /// artifacts and seed the slot table with the scripted cameras.
+    /// Admin verbs 503 until this runs; the run is open afterwards.
+    pub(crate) fn attach(
+        &self,
+        attached: Attached,
+        scripted: Vec<(usize, u64, ShapeKey, BoundedQueue<FleetItem>)>,
+    ) {
+        let mut st = self.core.state.lock().unwrap();
+        st.open = true;
+        st.attached = true;
+        st.expected_shards = scripted.len();
+        st.next_slot = scripted.len();
+        st.injected.clear();
+        st.draining.clear();
+        st.vacated.clear();
+        st.slots.clear();
+        st.ids.clear();
+        st.admin_added.clear();
+        for (slot, id, shape, link) in scripted {
+            st.ids.insert(id, slot);
+            st.slots.insert(slot, SlotInfo { id, shape, link });
+        }
+        drop(st);
+        *self.attached.lock().unwrap() = Some(attached);
+    }
+
+    /// Route one HTTP request (the [`crate::coordinator::http::Handler`]
+    /// the serve entry points install).
+    pub fn handle(&self, req: &HttpRequest) -> HttpResponse {
+        let path = req.path.split('?').next().unwrap_or("");
+        let segs: Vec<&str> = path.trim_matches('/').split('/').collect();
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["healthz"]) => HttpResponse::text(200, "ok\n"),
+            ("GET", ["metrics"]) => self.render_metrics(),
+            ("POST", ["admin", "camera"]) => self.add_camera(&req.body),
+            ("DELETE", ["admin", "camera", id]) => self.remove_camera(id),
+            ("POST", ["admin", "shard", id, "drain"]) => self.drain_shard(id),
+            ("POST", ["admin", "pool", "resize"]) => self.resize_pool(&req.body),
+            ("GET", _) => HttpResponse::not_found(),
+            _ => HttpResponse::text(405, "method not allowed\n"),
+        }
+    }
+
+    /// `GET /metrics`: the registry rendering plus live fleet state —
+    /// per-shape queue depths and shed totals (summed over each shape's
+    /// links), arena recycling, SIMD tier, pool sizing.
+    fn render_metrics(&self) -> HttpResponse {
+        let mut out = self.metrics.render_prometheus();
+        let st = self.core.state.lock().unwrap();
+        if st.attached {
+            let mut depth: BTreeMap<ShapeKey, u64> = BTreeMap::new();
+            let mut shed: BTreeMap<ShapeKey, u64> = BTreeMap::new();
+            for info in st.slots.values() {
+                *depth.entry(info.shape).or_default() += info.link.len() as u64;
+                *shed.entry(info.shape).or_default() += info.link.shed();
+            }
+            out.push_str("# TYPE p2m_shape_queue_depth gauge\n");
+            for (shape, d) in &depth {
+                out.push_str(&format!("p2m_shape_queue_depth{{shape=\"{shape}\"}} {d}\n"));
+            }
+            out.push_str("# TYPE p2m_frames_shed_total counter\n");
+            for (shape, s) in &shed {
+                out.push_str(&format!("p2m_frames_shed_total{{shape=\"{shape}\"}} {s}\n"));
+            }
+            out.push_str(&format!(
+                "# TYPE p2m_run_open gauge\np2m_run_open {}\n",
+                st.open as u8
+            ));
+            out.push_str(&format!(
+                "# TYPE p2m_fleet_slots gauge\np2m_fleet_slots {}\n",
+                st.slots.len()
+            ));
+        }
+        drop(st);
+        if let Some(att) = self.attached.lock().unwrap().as_ref() {
+            out.push_str(&format!(
+                "# TYPE p2m_arena_hit_rate gauge\np2m_arena_hit_rate {}\n",
+                att.arena.hit_rate()
+            ));
+            out.push_str(&format!(
+                "# TYPE p2m_arena_bytes_recycled_total counter\np2m_arena_bytes_recycled_total {}\n",
+                att.arena.bytes_recycled()
+            ));
+        }
+        out.push_str(&format!(
+            "# TYPE p2m_simd_tier gauge\np2m_simd_tier{{tier=\"{}\"}} 1\n",
+            simd::active_tier().name()
+        ));
+        let spawned = self.core.spawned_workers.load(Ordering::Relaxed);
+        if spawned > 0 {
+            out.push_str(&format!(
+                "# TYPE p2m_pool_workers_active gauge\np2m_pool_workers_active {}\n",
+                self.core.active_workers()
+            ));
+            out.push_str(&format!(
+                "# TYPE p2m_pool_workers_spawned gauge\np2m_pool_workers_spawned {spawned}\n"
+            ));
+        }
+        HttpResponse::text(200, out)
+    }
+
+    /// `POST /admin/camera`: hot-add.  Body:
+    /// `{"id": 9, "resolution": 40, "n_bits": 8, "wire": "quantized",
+    ///   "frames": 8, "frame_rate": 0}` (all but `id` optional).
+    fn add_camera(&self, body: &[u8]) -> HttpResponse {
+        let Some(att) = self.attach_info() else {
+            return HttpResponse::text(503, "no run attached\n");
+        };
+        let json = match parse_body(body) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let Some(id) = json.get("id").and_then(Json::as_f64) else {
+            return HttpResponse::text(400, "missing camera id\n");
+        };
+        if id < 0.0 || id.fract() != 0.0 {
+            return HttpResponse::text(400, "camera id must be a non-negative integer\n");
+        }
+        let id = id as u64;
+        let resolution = get_usize(&json, "resolution", 40);
+        let n_bits = get_usize(&json, "n_bits", 8) as u32;
+        let frames = get_usize(&json, "frames", 8);
+        let frame_rate = json.get("frame_rate").and_then(Json::as_f64).unwrap_or(0.0);
+        let wire = match json.get("wire").and_then(Json::as_str).unwrap_or("quantized") {
+            "quantized" => WireFormat::Quantized,
+            "dense" => WireFormat::Dense,
+            other => {
+                return HttpResponse::text(400, format!("unknown wire format {other:?}\n"))
+            }
+        };
+        if !(1..=16).contains(&n_bits) {
+            return HttpResponse::text(400, "n_bits must be in 1..=16\n");
+        }
+        if resolution < 8 || frames == 0 || !frame_rate.is_finite() || frame_rate < 0.0 {
+            return HttpResponse::text(400, "bad resolution/frames/frame_rate\n");
+        }
+        let mut spec = CameraSpec::new(id, resolution, n_bits, wire);
+        spec.frame_rate = frame_rate;
+        // Compile (or share) the plan outside the core lock: plan
+        // compiles are slow and the bank has its own mutex.
+        let plan = match att.bank.lock().unwrap().plan_for(&spec) {
+            Ok(plan) => plan,
+            Err(e) => return HttpResponse::text(400, format!("plan compile failed: {e}\n")),
+        };
+        let link: BoundedQueue<FleetItem> =
+            BoundedQueue::new(att.queue_capacity, att.backpressure);
+        let shape = CellCompute::p2m(plan.clone(), wire).shape_key();
+
+        let mut st = self.core.state.lock().unwrap();
+        if !st.open {
+            return HttpResponse::text(409, "run is sealed\n");
+        }
+        if st.ids.contains_key(&id) {
+            return HttpResponse::text(409, format!("camera id {id} already in the fleet\n"));
+        }
+        if st.admin_added.len() >= ControlCore::MAX_HOT_ADDS {
+            return HttpResponse::text(409, "per-run hot-add limit reached\n");
+        }
+        let slot = st.next_slot;
+        st.next_slot += 1;
+        st.expected_shards += 1;
+        st.ids.insert(id, slot);
+        st.slots.insert(slot, SlotInfo { id, shape, link: link.clone() });
+        st.admin_added.push(AdminCamera { slot, spec, scripted_frames: frames as u64 });
+        st.injected.push(PoolCamera {
+            slot,
+            segments: vec![Segment::paced(frames, frame_rate, SegmentEnd::Clean)],
+            start_delay: Duration::ZERO,
+            // The same seeding rule as scripted cameras — a hot-add and
+            // its scripted twin stream identical frames (digest parity).
+            seed: att.base_seed.wrapping_add(id),
+            compute: CellCompute::p2m(plan, wire),
+            link,
+            preregistered: false,
+            frontend_threads: 1,
+        });
+        drop(st);
+        HttpResponse::json(200, format!("{{\"ok\":true,\"id\":{id},\"slot\":{slot}}}"))
+    }
+
+    /// `DELETE /admin/camera/<id>`: close the camera's link and mark
+    /// its slot; never-started cameras vacate without trace, started
+    /// ones retire at their next fire.
+    fn remove_camera(&self, id: &str) -> HttpResponse {
+        let Ok(id) = id.parse::<u64>() else {
+            return HttpResponse::text(400, "camera id must be an integer\n");
+        };
+        let mut st = self.core.state.lock().unwrap();
+        if !st.attached {
+            return HttpResponse::text(503, "no run attached\n");
+        }
+        if !st.open {
+            return HttpResponse::text(409, "run is sealed\n");
+        }
+        let Some(&slot) = st.ids.get(&id) else {
+            return HttpResponse::text(404, format!("no camera id {id}\n"));
+        };
+        st.slots[&slot].link.close();
+        st.draining.insert(slot);
+        drop(st);
+        HttpResponse::json(200, format!("{{\"ok\":true,\"id\":{id},\"slot\":{slot}}}"))
+    }
+
+    /// `POST /admin/shard/<id>/drain`: close the shard link of camera
+    /// `id` — queued frames still reach the classifier, the producer
+    /// retires at its next push, the slot stays in the report.
+    fn drain_shard(&self, id: &str) -> HttpResponse {
+        let Ok(id) = id.parse::<u64>() else {
+            return HttpResponse::text(400, "camera id must be an integer\n");
+        };
+        let st = self.core.state.lock().unwrap();
+        if !st.attached {
+            return HttpResponse::text(503, "no run attached\n");
+        }
+        if !st.open {
+            return HttpResponse::text(409, "run is sealed\n");
+        }
+        let Some(&slot) = st.ids.get(&id) else {
+            return HttpResponse::text(404, format!("no camera id {id}\n"));
+        };
+        let queued = st.slots[&slot].link.len();
+        st.slots[&slot].link.close();
+        drop(st);
+        HttpResponse::json(
+            200,
+            format!("{{\"ok\":true,\"id\":{id},\"slot\":{slot},\"queued\":{queued}}}"),
+        )
+    }
+
+    /// `POST /admin/pool/resize`: body `{"workers": N}`; clamped to
+    /// `1..=spawned` (threads idle, they are never killed).
+    fn resize_pool(&self, body: &[u8]) -> HttpResponse {
+        if !self.core.state.lock().unwrap().attached {
+            return HttpResponse::text(503, "no run attached\n");
+        }
+        let json = match parse_body(body) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let Some(workers) = json.get("workers").and_then(Json::as_usize) else {
+            return HttpResponse::text(400, "missing worker count\n");
+        };
+        match self.core.resize_workers(workers) {
+            Ok(actual) => {
+                let spawned = self.core.spawned_workers.load(Ordering::Relaxed);
+                HttpResponse::json(
+                    200,
+                    format!("{{\"ok\":true,\"workers\":{actual},\"spawned\":{spawned}}}"),
+                )
+            }
+            Err(e) => HttpResponse::text(503, format!("{e}\n")),
+        }
+    }
+
+    /// Clone the attach-time shared artifacts (None before attach).
+    fn attach_info(&self) -> Option<Attached> {
+        self.attached.lock().unwrap().as_ref().map(|a| Attached {
+            bank: a.bank.clone(),
+            base_seed: a.base_seed,
+            queue_capacity: a.queue_capacity,
+            backpressure: a.backpressure,
+            arena: a.arena.clone(),
+        })
+    }
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, HttpResponse> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| HttpResponse::text(400, "body must be utf-8 json\n"))?;
+    let text = if text.trim().is_empty() { "{}" } else { text };
+    Json::parse(text).map_err(|e| HttpResponse::text(400, format!("bad json: {e}\n")))
+}
+
+fn get_usize(json: &Json, key: &str, default: usize) -> usize {
+    json.get(key).and_then(Json::as_usize).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane() -> ControlPlane {
+        ControlPlane::new(Arc::new(Metrics::new()))
+    }
+
+    fn get(plane: &ControlPlane, method: &str, path: &str, body: &str) -> HttpResponse {
+        plane.handle(&HttpRequest {
+            method: method.into(),
+            path: path.into(),
+            body: body.as_bytes().to_vec(),
+        })
+    }
+
+    #[test]
+    fn routes_resolve_without_a_run() {
+        let p = plane();
+        assert_eq!(get(&p, "GET", "/healthz", "").status, 200);
+        let metrics = get(&p, "GET", "/metrics", "");
+        assert_eq!(metrics.status, 200);
+        assert!(metrics.body.contains("p2m_simd_tier"), "{}", metrics.body);
+        assert_eq!(get(&p, "GET", "/nope", "").status, 404);
+        assert_eq!(get(&p, "PUT", "/admin/camera", "").status, 405);
+        // Mutating verbs without an attached run: 503.
+        assert_eq!(get(&p, "POST", "/admin/camera", "{\"id\":1}").status, 503);
+        assert_eq!(get(&p, "DELETE", "/admin/camera/1", "").status, 503);
+        assert_eq!(get(&p, "POST", "/admin/shard/1/drain", "").status, 503);
+        assert_eq!(get(&p, "POST", "/admin/pool/resize", "{\"workers\":2}").status, 503);
+    }
+
+    #[test]
+    fn attached_plane_validates_and_mutates() {
+        let p = plane();
+        let bank = Arc::new(Mutex::new(PlanBank::new()));
+        let arena = Arc::new(crate::util::arena::FrameArena::new());
+        let link: BoundedQueue<FleetItem> = BoundedQueue::new(4, Backpressure::Block);
+        let shape = ShapeKey { h: 4, w: 4, c: 8, bits: 8 };
+        p.attach(
+            Attached {
+                bank,
+                base_seed: 7,
+                queue_capacity: 4,
+                backpressure: Backpressure::Block,
+                arena,
+            },
+            vec![(0, 0, shape, link.clone())],
+        );
+        let core = p.core();
+        assert!(core.is_open());
+        assert_eq!(core.expected_shards(), 1);
+
+        // Bad bodies are rejected before any state changes.
+        assert_eq!(get(&p, "POST", "/admin/camera", "not json").status, 400);
+        assert_eq!(get(&p, "POST", "/admin/camera", "{}").status, 400, "id required");
+        assert_eq!(
+            get(&p, "POST", "/admin/camera", "{\"id\":1,\"wire\":\"morse\"}").status,
+            400
+        );
+        assert_eq!(
+            get(&p, "POST", "/admin/camera", "{\"id\":1,\"n_bits\":99}").status,
+            400
+        );
+
+        // A valid hot-add allocates the next slot and queues injection.
+        let resp = get(&p, "POST", "/admin/camera", "{\"id\":9,\"resolution\":20}");
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert!(resp.body.contains("\"slot\":1"), "{}", resp.body);
+        assert_eq!(core.expected_shards(), 2);
+        assert_eq!(core.take_injected().len(), 1);
+        // Duplicate id: refused.
+        assert_eq!(get(&p, "POST", "/admin/camera", "{\"id\":9}").status, 409);
+
+        // Remove camera 0: link closes, slot drains.
+        let resp = get(&p, "DELETE", "/admin/camera/0", "");
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert!(link.is_closed());
+        assert!(core.is_draining(0));
+        assert_eq!(get(&p, "DELETE", "/admin/camera/42", "").status, 404);
+
+        // Vacating the never-started slot removes it from expectation.
+        core.mark_vacated(0);
+        assert_eq!(core.expected_shards(), 1);
+        // /metrics reflects the fleet extras once attached.
+        let metrics = get(&p, "GET", "/metrics", "");
+        assert!(metrics.body.contains("p2m_shape_queue_depth"), "{}", metrics.body);
+        assert!(metrics.body.contains("p2m_run_open 1"), "{}", metrics.body);
+
+        // The close handshake: a pending injection from the earlier add
+        // is gone (take_injected), counts match -> seals.
+        assert!(!core.try_finish(0), "count mismatch keeps the run open");
+        assert!(core.try_finish(1));
+        assert!(!core.is_open());
+        assert_eq!(get(&p, "POST", "/admin/camera", "{\"id\":3}").status, 409);
+        assert_eq!(get(&p, "DELETE", "/admin/camera/9", "").status, 409);
+    }
+
+    #[test]
+    fn resize_clamps_to_spawned_pool() {
+        let p = plane();
+        let core = p.core();
+        assert!(core.resize_workers(3).is_err(), "no pool yet");
+        core.set_worker_pool(4);
+        assert_eq!(core.resize_workers(2).unwrap(), 2);
+        assert_eq!(core.active_workers(), 2);
+        assert_eq!(core.resize_workers(99).unwrap(), 4, "clamped to spawned");
+        assert_eq!(core.resize_workers(0).unwrap(), 1, "at least one worker");
+    }
+}

@@ -70,6 +70,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::config::SystemConfig;
+use crate::coordinator::admin::ControlCore;
 use crate::coordinator::backend_pool::{BackendPool, ClassifySink, DirectSink};
 use crate::coordinator::batcher::{BatchPolicy, ShapedBatcher};
 use crate::coordinator::metrics::{Latency, Metrics};
@@ -345,13 +346,17 @@ pub struct ShapeStats {
     pub batches: u64,
     /// link bytes this shape contributed
     pub bytes_from_sensor: u64,
+    /// frames of this shape evicted under [`Backpressure::ShedOldest`]
+    /// (exact per-shape shed accounting: each shard link carries one
+    /// camera = one shape, so per-link shed counters sum per shape)
+    pub frames_shed: u64,
 }
 
 /// End-of-run statistics of a fleet run.
 ///
 /// Counter fields of `per_camera` sum exactly to the corresponding
 /// `aggregate` field (`frames_captured`, `frames_classified`,
-/// `frames_dropped`, `correct`, `bytes_from_sensor`);
+/// `frames_dropped`, `frames_shed`, `correct`, `bytes_from_sensor`);
 /// `aggregate.queue_high_watermark` is the max over shards;
 /// `aggregate.batches` counts classifier invocations (batches mix
 /// cameras, so per-camera `batches` stays 0); latency percentiles are
@@ -456,17 +461,46 @@ pub(crate) struct ConsumeParams {
     /// total shards the run will register; the consumer only terminates
     /// once all of them have been adopted, closed and drained
     pub(crate) expected_shards: usize,
+    /// live admin control plane (serve mode): while present, the
+    /// expected-shard count is read from it on every termination check —
+    /// admin hot-adds raise it, vacates lower it — and the run only
+    /// closes through its atomic [`ControlCore::try_finish`] handshake
+    pub(crate) control: Option<Arc<ControlCore>>,
+}
+
+impl ConsumeParams {
+    /// The shard count the consumer must fully adopt + drain before it
+    /// may terminate (live under admin control, static otherwise).
+    fn expected(&self) -> usize {
+        match &self.control {
+            Some(c) => c.expected_shards(),
+            None => self.expected_shards,
+        }
+    }
 }
 
 /// Mutable accounting the consumer folds outcomes into.
 pub(crate) struct FleetAccounting<'a> {
-    pub(crate) per_camera: &'a mut [PipelineStats],
+    /// per-slot stats; grows on demand (admin hot-adds register slots
+    /// the run did not know at start) — index through [`cam_slot`]
+    pub(crate) per_camera: &'a mut Vec<PipelineStats>,
     pub(crate) per_shape: &'a mut BTreeMap<ShapeKey, ShapeStats>,
     pub(crate) aggregate: &'a mut PipelineStats,
     pub(crate) latency: &'a Arc<Latency>,
     /// the run's frame-buffer pool: folded payloads recycle into it
     /// (closing the producer → wire → ingest zero-alloc loop)
     pub(crate) arena: &'a FrameArena,
+}
+
+/// The per-slot stats cell, growing the vector when an admin-added slot
+/// appears mid-run.  A free function (not a method) so call sites keep
+/// borrowing only the `per_camera` field, leaving `aggregate` et al.
+/// free for simultaneous use.
+pub(crate) fn cam_slot(per_camera: &mut Vec<PipelineStats>, slot: usize) -> &mut PipelineStats {
+    if per_camera.len() <= slot {
+        per_camera.resize(slot + 1, PipelineStats::default());
+    }
+    &mut per_camera[slot]
 }
 
 /// Run a multi-camera fleet: the cameras multiplexed over the fixed
@@ -541,6 +575,7 @@ fn run_fleet_sink<S: ClassifySink>(
         max_wait: cfg.max_wait,
         route: cfg.route,
         expected_shards: n,
+        control: None,
     };
     let hooks = PoolHooks {
         frames_in: metrics.counter("fleet_frames_captured"),
@@ -588,8 +623,17 @@ fn run_fleet_sink<S: ClassifySink>(
         })
         .collect();
 
+    // Shape identity per slot, captured before the sensors move into
+    // their cells: per-link shed counters fold per shape at end of run
+    // (one camera per link = one shape per link).  Baseline sensors have
+    // no compiled plan; their shape is the flattened raw frame.
+    let slot_shapes: Vec<ShapeKey> = cameras
+        .iter()
+        .map(|cam| cam.compute.shape_key())
+        .collect();
+
     std::thread::scope(|s| {
-        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, &arena, hooks);
+        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, &arena, hooks, None);
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
@@ -609,15 +653,22 @@ fn run_fleet_sink<S: ClassifySink>(
 
     // Fold the shard-queue accounting into the stats: for every camera
     // captured == pushed + dropped, and with the consumer fully drained
-    // classified == pushed, so captured == classified + dropped exactly.
+    // classified + shed == pushed, so captured == classified + dropped
+    // + shed exactly (shed stays zero except under `ShedOldest`).
     for (ci, q) in shards.iter().enumerate() {
         let (pushed, _, dropped, hwm) = q.stats();
+        let shed = q.shed();
         per_camera[ci].frames_captured = pushed + dropped;
         per_camera[ci].frames_dropped = dropped;
+        per_camera[ci].frames_shed = shed;
         per_camera[ci].queue_high_watermark = hwm;
         aggregate.frames_captured += pushed + dropped;
         aggregate.frames_dropped += dropped;
+        aggregate.frames_shed += shed;
         aggregate.queue_high_watermark = aggregate.queue_high_watermark.max(hwm);
+        if shed > 0 {
+            per_shape.entry(slot_shapes[ci]).or_default().frames_shed += shed;
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     aggregate.wall_time_s = wall;
@@ -676,7 +727,7 @@ pub(crate) fn consume<S: ClassifySink>(
         }
         let n_shards = shards.len();
         if n_shards == 0 {
-            if params.expected_shards == 0 {
+            if params.expected() == 0 {
                 return Ok(());
             }
             // No camera has joined yet.
@@ -705,7 +756,7 @@ pub(crate) fn consume<S: ClassifySink>(
                 continue;
             }
             if let Some(item) = shards[si].1.try_pop() {
-                acc.per_camera[item.camera].bytes_from_sensor += item.bytes;
+                cam_slot(acc.per_camera, item.camera).bytes_from_sensor += item.bytes;
                 acc.aggregate.bytes_from_sensor += item.bytes;
                 acc.per_shape
                     .entry(item.payload.shape_key())
@@ -734,9 +785,20 @@ pub(crate) fn consume<S: ClassifySink>(
         //    its shard, everything in flight has been staged, and the
         //    sink has folded every outstanding result.
         if moved == 0 {
-            let all_closed_and_drained = n_shards == params.expected_shards
+            let all_closed_and_drained = n_shards == params.expected()
                 && shards.iter().all(|(_, q)| q.is_closed() && q.is_empty());
             if all_closed_and_drained && router.total_backlog() == 0 {
+                // Under admin control the close must be atomic against a
+                // racing hot-add: try_finish re-checks (under the control
+                // lock) that no injection is pending and the expected
+                // count still matches, then seals the run so later admin
+                // verbs are refused instead of feeding a dead consumer.
+                if let Some(control) = &params.control {
+                    if !control.try_finish(n_shards) {
+                        std::thread::sleep(Duration::from_micros(200));
+                        continue;
+                    }
+                }
                 while let Some((_, batch)) = batcher.flush() {
                     sink.submit(batch, acc)?;
                 }
@@ -783,7 +845,7 @@ pub(crate) fn fold_classified_batch(
     }
     let now = Instant::now();
     for (item, &pred) in batch.iter().zip(&preds) {
-        let st = &mut acc.per_camera[item.camera];
+        let st = cam_slot(acc.per_camera, item.camera);
         st.frames_classified += 1;
         acc.aggregate.frames_classified += 1;
         if pred == item.label {

@@ -1,0 +1,337 @@
+//! A dependency-light HTTP/1.1 responder over [`std::net::TcpListener`]
+//! — the transport half of the operability plane (ROADMAP item 5).
+//!
+//! The serving story of this crate is offline-first: no async runtime,
+//! no HTTP framework, no TLS — just enough of RFC 9112 to let `curl`
+//! and a Prometheus scraper talk to a running fleet.  The server is a
+//! single accept thread handling one connection at a time
+//! (`Connection: close` on every response), which is exactly right for
+//! its two clients — a scrape every few seconds and an occasional admin
+//! verb — and keeps the hot path (the fleet itself) free of any
+//! network-side contention.
+//!
+//! What is deliberately supported:
+//! - request line + headers up to 16 KiB, bodies up to 1 MiB
+//!   (`Content-Length` only; no chunked transfer encoding)
+//! - any method/path; routing is the handler's business
+//!   (see [`crate::coordinator::admin`])
+//! - ephemeral-port binds (`127.0.0.1:0`) with the resolved address
+//!   exposed via [`ServerHandle::local_addr`], so tests and CI never
+//!   race over a fixed port
+//!
+//! The accept loop polls a stop flag every few milliseconds instead of
+//! blocking in `accept`, so [`ServerHandle::stop`] (and `Drop`) always
+//! terminates the thread promptly.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Maximum bytes of request line + headers before the request is
+/// rejected with 431 — an admin verb fits in a fraction of this.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Maximum accepted `Content-Length` (413 beyond it).
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+/// Per-connection socket read timeout: a stalled client cannot wedge
+/// the (single-threaded) accept loop for longer than this.
+const READ_TIMEOUT: Duration = Duration::from_secs(2);
+/// Stop-flag poll interval of the accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// One parsed request, as much of it as the handlers need.
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// request method, uppercased by the client per RFC (`GET`, `POST`, ...)
+    pub method: String,
+    /// origin-form request target (`/metrics`, `/admin/camera/7`);
+    /// query strings are passed through un-split
+    pub path: String,
+    /// raw request body (`Content-Length` bytes; empty when absent)
+    pub body: Vec<u8>,
+}
+
+/// One response to write back; built through the status helpers.
+#[derive(Debug)]
+pub struct HttpResponse {
+    /// HTTP status code (the reason phrase derives from it)
+    pub status: u16,
+    /// `Content-Type` header value
+    pub content_type: &'static str,
+    /// response body
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// A `text/plain` response.
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        HttpResponse { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+    }
+
+    /// An `application/json` response.
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        HttpResponse { status, content_type: "application/json", body: body.into() }
+    }
+
+    /// 404 with a plain-text body.
+    pub fn not_found() -> Self {
+        HttpResponse::text(404, "not found\n")
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            431 => "Request Header Fields Too Large",
+            503 => "Service Unavailable",
+            _ => "",
+        }
+    }
+}
+
+/// The request handler: pure function of the request (all served state
+/// lives behind the handler's own `Arc`s).
+pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// A bound-but-not-yet-serving listener: binding early (before the
+/// fleet run starts) lets callers print the resolved ephemeral port
+/// first, then attach the handler.
+pub struct HttpServer {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`, or port `0` for an
+    /// OS-assigned ephemeral port).
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding --serve address {addr}"))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        Ok(HttpServer { listener, local_addr })
+    }
+
+    /// The resolved bound address (the actual port for `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Start the accept thread; every connection is parsed, handed to
+    /// `handler`, answered, and closed.  The returned handle stops the
+    /// thread on [`ServerHandle::stop`] or drop.
+    pub fn spawn(self, handler: Handler) -> Result<ServerHandle> {
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_thread = stop.clone();
+        let listener = self.listener;
+        let thread = std::thread::Builder::new()
+            .name("p2m-http".into())
+            .spawn(move || {
+                while !stop_thread.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => serve_connection(stream, &handler),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        // Transient accept errors (aborted handshake,
+                        // fd pressure): keep serving.
+                        Err(_) => std::thread::sleep(ACCEPT_POLL),
+                    }
+                }
+            })
+            .context("spawning the http accept thread")?;
+        Ok(ServerHandle { local_addr: self.local_addr, stop, thread: Some(thread) })
+    }
+}
+
+/// Handle to a running server; stops the accept thread when asked (or
+/// dropped) and never leaves the thread dangling past the handle.
+pub struct ServerHandle {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The resolved bound address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Signal the accept thread and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read one request off the stream, run the handler, write the
+/// response.  Any parse failure answers with the matching 4xx; I/O
+/// errors just drop the connection (the client went away).
+fn serve_connection(mut stream: TcpStream, handler: &Handler) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let response = match read_request(&mut stream) {
+        Ok(req) => handler(&req),
+        Err(status) => HttpResponse::text(status, "bad request\n"),
+    };
+    let _ = write_response(&mut stream, &response);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Parse request line + headers + `Content-Length` body.  Returns the
+/// status code to answer with on malformed input.
+fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, u16> {
+    // Accumulate until the blank line; anything already read past it is
+    // the body's prefix.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(431);
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(400),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => return Err(400),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| 400)?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or(400u16)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or(400u16)?.to_string();
+    let path = parts.next().ok_or(400u16)?.to_string();
+    if !parts.next().is_some_and(|v| v.starts_with("HTTP/1.")) {
+        return Err(400);
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value.trim().parse().map_err(|_| 400u16)?;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(413);
+    }
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(400),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(_) => return Err(400),
+        }
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> ServerHandle {
+        let handler: Handler = Arc::new(|req: &HttpRequest| {
+            HttpResponse::text(
+                200,
+                format!(
+                    "{} {} {}",
+                    req.method,
+                    req.path,
+                    String::from_utf8_lossy(&req.body)
+                ),
+            )
+        });
+        HttpServer::bind("127.0.0.1:0").unwrap().spawn(handler).unwrap()
+    }
+
+    fn roundtrip(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_get_and_post_with_body() {
+        let server = echo_server();
+        let addr = server.local_addr();
+        let got = roundtrip(addr, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(got.starts_with("HTTP/1.1 200 OK\r\n"), "{got}");
+        assert!(got.contains("GET /healthz"), "{got}");
+
+        let got = roundtrip(
+            addr,
+            "POST /admin/pool/resize HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"workers\":2}",
+        );
+        assert!(got.contains("POST /admin/pool/resize {\"workers\":2}"), "{got}");
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let server = echo_server();
+        let addr = server.local_addr();
+        let got = roundtrip(addr, "NONSENSE\r\n\r\n");
+        assert!(got.starts_with("HTTP/1.1 400"), "{got}");
+        // A body larger than the declared length is truncated, a
+        // declared length beyond the cap is refused.
+        let got = roundtrip(
+            addr,
+            &format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1),
+        );
+        assert!(got.starts_with("HTTP/1.1 413"), "{got}");
+        server.stop();
+    }
+
+    #[test]
+    fn ephemeral_binds_resolve_to_a_real_port() {
+        let server = echo_server();
+        assert_ne!(server.local_addr().port(), 0);
+        server.stop();
+    }
+}

@@ -157,6 +157,40 @@ impl Metrics {
             .clone()
     }
 
+    /// Render the registry in the Prometheus text exposition format
+    /// (the `GET /metrics` body of the operability plane): every metric
+    /// name is sanitised and prefixed `p2m_`; counters render as
+    /// `counter`, gauges as a `gauge` plus a `_peak` companion, latency
+    /// recorders as a `summary` with 0.5/0.9/0.95/0.99 quantiles and
+    /// the conventional `_sum`/`_count` pair (seconds, like Prometheus
+    /// duration conventions).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let name = prom_name(name);
+            out.push_str(&format!("# TYPE {name}_total counter\n"));
+            out.push_str(&format!("{name}_total {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let name = prom_name(name);
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", g.get()));
+            out.push_str(&format!("# TYPE {name}_peak gauge\n"));
+            out.push_str(&format!("{name}_peak {}\n", g.high_watermark()));
+        }
+        for (name, l) in self.latencies.lock().unwrap().iter() {
+            let name = format!("{}_seconds", prom_name(name));
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for q in [0.5, 0.9, 0.95, 0.99] {
+                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {}\n", l.pct(q)));
+            }
+            let count = l.count();
+            out.push_str(&format!("{name}_sum {}\n", l.mean() * count as f64));
+            out.push_str(&format!("{name}_count {count}\n"));
+        }
+        out
+    }
+
     /// Render a human-readable snapshot.
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
@@ -189,6 +223,16 @@ impl Default for Counter {
     fn default() -> Self {
         Counter(AtomicU64::new(0))
     }
+}
+
+/// Prometheus-legal metric name: `p2m_` prefix, every byte outside
+/// `[a-zA-Z0-9_:]` mapped to `_`.
+pub(crate) fn prom_name(name: &str) -> String {
+    let safe: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    format!("p2m_{safe}")
 }
 
 #[cfg(test)]
@@ -288,5 +332,32 @@ mod tests {
         let s = m.snapshot();
         assert!(s.contains("frames_in: 2"));
         assert!(s.contains("lat:"));
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_all_metric_kinds() {
+        let m = Metrics::new();
+        m.counter("frames_in").add(7);
+        m.gauge("depth").observe(3);
+        m.gauge("depth").observe(1);
+        for i in 1..=100 {
+            m.latency("e2e").record_secs(i as f64 / 1000.0);
+        }
+        let s = m.render_prometheus();
+        assert!(s.contains("# TYPE p2m_frames_in_total counter\n"), "{s}");
+        assert!(s.contains("p2m_frames_in_total 7\n"), "{s}");
+        assert!(s.contains("# TYPE p2m_depth gauge\n"), "{s}");
+        assert!(s.contains("p2m_depth 1\n"), "{s}");
+        assert!(s.contains("p2m_depth_peak 3\n"), "{s}");
+        assert!(s.contains("# TYPE p2m_e2e_seconds summary\n"), "{s}");
+        assert!(s.contains("p2m_e2e_seconds{quantile=\"0.5\"}"), "{s}");
+        assert!(s.contains("p2m_e2e_seconds_count 100\n"), "{s}");
+        assert!(s.contains("p2m_e2e_seconds_sum "), "{s}");
+    }
+
+    #[test]
+    fn prom_names_are_sanitised() {
+        assert_eq!(prom_name("frames_in"), "p2m_frames_in");
+        assert_eq!(prom_name("weird name-2"), "p2m_weird_name_2");
     }
 }

@@ -36,10 +36,23 @@
 //! ([`crate::sensor::QuantizedFrame`]), dequantised only at classifier
 //! ingest.  Batches are grouped by [`ShapeKey`] (dims + wire encoding),
 //! so the classifier boundary never sees a shape-mixed batch.
+//!
+//! The **operability plane** wraps a serve-mode run
+//! ([`run_scenario_serve`]) with a dependency-light HTTP responder
+//! ([`http`]): `GET /metrics` renders the [`Metrics`] registry plus
+//! live fleet state in Prometheus text format, `GET /healthz` probes
+//! liveness, and the admin verbs ([`admin`]) hot-add/remove cameras,
+//! drain shards and resize the producer pool on the *running* fleet —
+//! through the same deterministic cell machinery as scripted events.
+//! [`Backpressure::ShedOldest`] completes the overload-policy triple
+//! (block / drop-newest / shed-oldest) with exact per-shape shed
+//! accounting in [`FleetStats`] and `/metrics`.
 
+pub mod admin;
 pub mod backend_pool;
 pub mod batcher;
 pub mod fleet;
+pub mod http;
 pub mod metrics;
 pub mod pipeline;
 pub mod pool;
@@ -47,6 +60,9 @@ pub mod queue;
 pub mod router;
 pub mod scenario;
 pub mod wheel;
+
+pub use admin::ControlPlane;
+pub use http::{Handler, HttpRequest, HttpResponse, HttpServer, ServerHandle};
 
 pub use backend_pool::BackendPool;
 pub use batcher::{BatchPolicy, Batcher, ShapedBatcher};
@@ -62,10 +78,10 @@ pub use pipeline::{
     PipelineStats, PjrtClassifier, SensorCompute, ShapeKey, WireFormat, WirePayload,
 };
 pub use pool::default_pool_workers;
-pub use queue::{Backpressure, BoundedQueue};
+pub use queue::{Backpressure, BoundedQueue, PushOutcome};
 pub use router::{RoutePolicy, Router};
 pub use scenario::{
-    run_scenario, run_scenario_pooled, CameraReport, CameraScript, Scenario,
-    ScenarioReport, Segment, SegmentEnd,
+    run_scenario, run_scenario_pooled, run_scenario_serve, run_scenario_serve_pooled,
+    CameraReport, CameraScript, Scenario, ScenarioReport, Segment, SegmentEnd,
 };
 pub use wheel::{TimerId, TimerWheel};

@@ -345,6 +345,9 @@ pub struct PipelineStats {
     pub frames_classified: u64,
     /// frames the link dropped under backpressure
     pub frames_dropped: u64,
+    /// frames admitted to the link but evicted by a newer frame under
+    /// [`Backpressure::ShedOldest`]
+    pub frames_shed: u64,
     /// classified frames whose prediction matched the ground truth
     pub correct: u64,
     /// classifier invocations (batches, possibly partial)

@@ -35,9 +35,10 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::admin::ControlCore;
 use crate::coordinator::fleet::{FleetItem, ShardRegistry};
 use crate::coordinator::metrics::{Counter, Gauge};
-use crate::coordinator::pipeline::{SensorCompute, WireFormat, WirePayload};
+use crate::coordinator::pipeline::{SensorCompute, ShapeKey, WireFormat, WirePayload};
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::coordinator::scenario::{incarnation_groups, incarnation_seed, Segment, SegmentEnd};
 use crate::baseline::BaselineReadout;
@@ -90,6 +91,29 @@ impl CellCompute {
         match self {
             CellCompute::P2m { plan, .. } => plan.cfg.sensor,
             CellCompute::Baseline(readout) => readout.cfg,
+        }
+    }
+
+    /// The [`ShapeKey`] every payload of this cell carries on the wire —
+    /// statically known from the design, so per-link shed counters can
+    /// fold per shape without inspecting (long-recycled) payloads.
+    pub(crate) fn shape_key(&self) -> ShapeKey {
+        match self {
+            CellCompute::P2m { plan, wire } => {
+                let (h, w, c) = plan.cfg.out_dims();
+                let bits = match wire {
+                    WireFormat::Quantized => plan.quant.bits,
+                    WireFormat::Dense => 0,
+                };
+                ShapeKey { h, w, c, bits }
+            }
+            // Baseline readout re-emits the frame at capture dims.
+            CellCompute::Baseline(readout) => ShapeKey {
+                h: readout.cfg.rows,
+                w: readout.cfg.cols,
+                c: 3,
+                bits: 0,
+            },
         }
     }
 
@@ -311,6 +335,12 @@ impl Drop for CloseOnDrop {
 /// concurrently and, on a consumer abort, poisons the registry — cells
 /// then retire on their next dispatch (their pushes are refused), so
 /// the pool always terminates.
+///
+/// With `control` attached (serve mode) the scheduler additionally
+/// adopts admin-injected cameras each loop, vacates scripted cells the
+/// admin removed before their first frame, and keeps running while the
+/// run is open even when no cell is outstanding; workers honour the
+/// control plane's live `active_workers` count (`/admin/pool/resize`).
 pub(crate) fn spawn_producer_pool<'scope, 'env>(
     scope: &'scope std::thread::Scope<'scope, 'env>,
     cameras: Vec<PoolCamera>,
@@ -318,8 +348,12 @@ pub(crate) fn spawn_producer_pool<'scope, 'env>(
     registry: &'env ShardRegistry,
     arena: &'env FrameArena,
     hooks: PoolHooks,
+    control: Option<Arc<ControlCore>>,
 ) -> std::thread::ScopedJoinHandle<'scope, Vec<u32>> {
     let workers = workers.max(1);
+    if let Some(c) = &control {
+        c.set_worker_pool(workers);
+    }
     let n = cameras.len();
     // Dispatch queue: shallow, so backpressure reaches the scheduler's
     // local ready queue (which the depth gauge watches) instead of
@@ -328,30 +362,50 @@ pub(crate) fn spawn_producer_pool<'scope, 'env>(
     // Completion queue: capacity covers every cell plus every worker,
     // so a completion push can NEVER block — with a blocked scheduler
     // (tasks full) and blocking completion pushes the pool could
-    // deadlock; this capacity makes that state unreachable.
-    let done: BoundedQueue<Completion> =
-        BoundedQueue::new(n + workers + 1, Backpressure::Block);
+    // deadlock; this capacity makes that state unreachable.  Admin
+    // hot-adds grow the cell population past `n`, so serve mode adds
+    // headroom matching the control plane's per-run hot-add cap
+    // ([`ControlCore::MAX_HOT_ADDS`]); the queue allocates lazily, so
+    // the headroom costs nothing until used.
+    let done_cap =
+        n + workers + 1 + if control.is_some() { ControlCore::MAX_HOT_ADDS } else { 0 };
+    let done: BoundedQueue<Completion> = BoundedQueue::new(done_cap, Backpressure::Block);
 
-    for _ in 0..workers {
+    for idx in 0..workers {
         let tasks = tasks.clone();
         let done = done.clone();
         let hooks = hooks.clone();
-        scope.spawn(move || worker_loop(&tasks, &done, registry, arena, &hooks));
+        let control = control.clone();
+        scope.spawn(move || worker_loop(idx, &tasks, &done, registry, arena, &hooks, control));
     }
-    scope.spawn(move || scheduler_loop(cameras, tasks, done, hooks))
+    scope.spawn(move || scheduler_loop(cameras, tasks, done, hooks, control))
 }
 
 /// Pool worker: pop a due cell, fire its frames, report the outcome.
 /// Scratch contexts are cached per distinct plan, not per camera.
+/// Workers above the control plane's live `active_workers` threshold
+/// park instead of popping — resize never kills threads, it idles them
+/// (and never affects deterministic outcomes, only wall time).
 fn worker_loop(
+    idx: usize,
     tasks: &BoundedQueue<CameraCell>,
     done: &BoundedQueue<Completion>,
     registry: &ShardRegistry,
     arena: &FrameArena,
     hooks: &PoolHooks,
+    control: Option<Arc<ControlCore>>,
 ) {
     let mut ctxs: BTreeMap<PlanKey, ExecCtx> = BTreeMap::new();
     loop {
+        if let Some(c) = &control {
+            if idx >= c.active_workers() {
+                if tasks.is_closed() && tasks.is_empty() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+        }
         let Some(mut cell) = tasks.pop(Duration::from_millis(20)) else {
             if tasks.is_closed() && tasks.is_empty() {
                 return;
@@ -415,7 +469,7 @@ fn fire_cell(
             cell.cam.compute.run_frame(&image, ctxs, cell.cam.frontend_threads, arena);
         image.recycle(arena);
         hooks.frames_in.inc();
-        let accepted = cell.cam.link.push(FleetItem {
+        let outcome = cell.cam.link.push_evict(FleetItem {
             camera: cell.cam.slot,
             label,
             captured_at,
@@ -423,6 +477,14 @@ fn fire_cell(
             bytes,
         });
         cell.seg_done += 1;
+        let accepted = outcome.accepted();
+        // An item the link handed back — the evicted victim under
+        // `ShedOldest`, or our own refused frame under `DropNewest` /
+        // close — recycles its buffers into the arena so the loss costs
+        // no allocator traffic on the next capture.
+        if let Some(returned) = outcome.returned() {
+            returned.payload.recycle_into(arena);
+        }
         // A refused push on a *closed* link means the consumer aborted —
         // retire the cell instead of burning capture/frontend work (a
         // refusal on an open DropNewest link is an ordinary accounted
@@ -442,12 +504,15 @@ fn fire_cell(
 }
 
 /// The scheduler: owns the wheel and every cell not currently held by a
-/// worker; loops advance-dispatch-collect until all cells retire.
+/// worker; loops advance-dispatch-collect until all cells retire (and,
+/// under admin control, the run has been sealed — admin hot-adds ride
+/// the same wheel/ready/dispatch path as scripted cameras).
 fn scheduler_loop(
     cameras: Vec<PoolCamera>,
     tasks: BoundedQueue<CameraCell>,
     done: BoundedQueue<Completion>,
     hooks: PoolHooks,
+    control: Option<Arc<ControlCore>>,
 ) -> Vec<u32> {
     let n = cameras.len();
     let _close_tasks = CloseOnDrop(tasks.clone());
@@ -457,19 +522,56 @@ fn scheduler_loop(
     let mut incarnations = vec![0u32; n];
     let mut outstanding = 0usize;
 
-    for cam in cameras {
-        let mut cell = CameraCell::new(cam);
-        outstanding += 1;
+    let mut admit = |cell: CameraCell,
+                     ready: &mut VecDeque<CameraCell>,
+                     wheel: &mut TimerWheel<CameraCell>| {
+        let mut cell = cell;
         let delay = delay_ticks(cell.cam.start_delay);
+        let due = wheel.now() + delay;
         if delay == 0 {
             ready.push_back(cell);
         } else {
-            cell.due = delay;
-            wheel.schedule(delay, cell);
+            cell.due = due;
+            wheel.schedule(due, cell);
         }
+    };
+
+    for cam in cameras {
+        outstanding += 1;
+        admit(CameraCell::new(cam), &mut ready, &mut wheel);
     }
 
-    while outstanding > 0 {
+    loop {
+        // 0. Adopt admin-injected cameras: they enter the identical
+        //    wheel/ready machinery as scripted cells, so live mutations
+        //    ride the same deterministic dispatch paths.
+        if let Some(c) = &control {
+            for cam in c.take_injected() {
+                if incarnations.len() <= cam.slot {
+                    incarnations.resize(cam.slot + 1, 0);
+                }
+                outstanding += 1;
+                admit(CameraCell::new(cam), &mut ready, &mut wheel);
+            }
+        }
+        if outstanding == 0 {
+            match &control {
+                // Static pool: all cells retired means done.
+                None => break,
+                // Serve mode: idle but the run is still open — an admin
+                // hot-add may yet arrive.  The consumer seals the run
+                // (ControlCore::try_finish) once it has drained
+                // everything, which releases this loop.
+                Some(c) => {
+                    if !c.is_open() {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+            }
+        }
+
         // 1. Advance the wheel to wall time; due cells join the ready
         //    queue (fire lag is how far behind its due tick a cell got).
         let now = tick_now(&t0);
@@ -485,6 +587,21 @@ fn scheduler_loop(
         // 2. Dispatch without blocking: a full task queue keeps cells
         //    here, visible to the depth gauge, not stuck in a push.
         while let Some(cell) = ready.pop_front() {
+            // Admin removal of a camera that never produced a frame:
+            // vacate the slot — the cell leaves no trace (its link was
+            // never registered), as if the scenario never scripted it.
+            // Cameras that already joined the fleet retire through their
+            // admin-closed link at their next fire instead.
+            if let Some(c) = &control {
+                if c.is_draining(cell.cam.slot)
+                    && !cell.registered
+                    && cell.incarnations_ran == 0
+                {
+                    c.mark_vacated(cell.cam.slot);
+                    outstanding -= 1;
+                    continue;
+                }
+            }
             if let Err(cell) = tasks.try_push(cell) {
                 ready.push_front(cell);
                 break;

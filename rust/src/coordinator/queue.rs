@@ -20,6 +20,51 @@ pub enum Backpressure {
     Block,
     /// Newest item is dropped (lossy, bounded latency).
     DropNewest,
+    /// Oldest queued item is evicted to admit the newest (lossy,
+    /// freshness-preserving): under sustained overload the consumer
+    /// always sees the most recent frames, and every eviction is
+    /// accounted in the `shed` counter.  Since each shard link carries
+    /// one camera (one shape), shedding here *is* shed-oldest-per-shape
+    /// at the fleet level.
+    ShedOldest,
+}
+
+/// Result of a policy-aware [`BoundedQueue::push_evict`].
+///
+/// Rejected or evicted items are handed back to the caller so their
+/// buffers can be recycled into the frame arena instead of being
+/// silently destroyed inside the queue.
+#[derive(Debug, PartialEq)]
+pub enum PushOutcome<T> {
+    /// Item accepted; nothing displaced.
+    Accepted,
+    /// Item accepted by evicting the oldest queued item (ShedOldest on
+    /// a full queue).  The eviction was accounted as a shed.
+    Shed(T),
+    /// Item refused on a full queue (DropNewest) and accounted as a
+    /// drop.
+    Dropped(T),
+    /// Item refused because the queue is closed; nothing accounted.
+    Closed(T),
+}
+
+impl<T> PushOutcome<T> {
+    /// True when the pushed item entered the queue (possibly displacing
+    /// an older one).
+    pub fn accepted(&self) -> bool {
+        matches!(self, PushOutcome::Accepted | PushOutcome::Shed(_))
+    }
+
+    /// The item handed back (evicted oldest, refused drop, or refused
+    /// on close), if any.
+    pub fn returned(self) -> Option<T> {
+        match self {
+            PushOutcome::Accepted => None,
+            PushOutcome::Shed(t) | PushOutcome::Dropped(t) | PushOutcome::Closed(t) => {
+                Some(t)
+            }
+        }
+    }
 }
 
 struct Inner<T> {
@@ -36,6 +81,10 @@ struct State<T> {
     items: VecDeque<T>,
     closed: bool,
     dropped: u64,
+    /// Items admitted and later evicted to make room for a newer one
+    /// (ShedOldest only).  A shed item counts in `pushed` but never in
+    /// `popped`; after a full drain `pushed == popped + shed`.
+    shed: u64,
     pushed: u64,
     popped: u64,
     high_watermark: usize,
@@ -64,6 +113,7 @@ impl<T> BoundedQueue<T> {
                     items: VecDeque::new(),
                     closed: false,
                     dropped: 0,
+                    shed: 0,
                     pushed: 0,
                     popped: 0,
                     high_watermark: 0,
@@ -78,12 +128,24 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Push according to the backpressure policy.  Returns false if the
-    /// item was dropped (DropNewest) or the queue is closed.
+    /// item was dropped (DropNewest) or the queue is closed.  Under
+    /// ShedOldest the push always succeeds on an open queue (the
+    /// evicted item is destroyed here); use [`BoundedQueue::push_evict`]
+    /// to get the evicted item back for buffer recycling.
     pub fn push(&self, item: T) -> bool {
+        self.push_evict(item).accepted()
+    }
+
+    /// Push according to the backpressure policy, handing back any
+    /// displaced or refused item (see [`PushOutcome`]).  Block waits
+    /// for space like [`BoundedQueue::push`]; DropNewest accounts a
+    /// drop and returns the new item; ShedOldest accounts a shed and
+    /// returns the evicted *oldest* item, keeping the newest.
+    pub fn push_evict(&self, item: T) -> PushOutcome<T> {
         let mut g = self.inner.q.lock().unwrap();
         loop {
             if g.closed {
-                return false;
+                return PushOutcome::Closed(item);
             }
             if g.items.len() < self.cap {
                 g.items.push_back(item);
@@ -92,7 +154,7 @@ impl<T> BoundedQueue<T> {
                 g.high_watermark = g.high_watermark.max(len);
                 self.inner.len.store(len, Ordering::Release);
                 self.inner.not_empty.notify_one();
-                return true;
+                return PushOutcome::Accepted;
             }
             match self.policy {
                 Backpressure::Block => {
@@ -100,7 +162,17 @@ impl<T> BoundedQueue<T> {
                 }
                 Backpressure::DropNewest => {
                     g.dropped += 1;
-                    return false;
+                    return PushOutcome::Dropped(item);
+                }
+                Backpressure::ShedOldest => {
+                    // cap >= 1, so the front exists on a full queue.
+                    let evicted = g.items.pop_front().expect("full queue has a front");
+                    g.shed += 1;
+                    g.items.push_back(item);
+                    g.pushed += 1;
+                    // len unchanged (evict + admit), hwm already >= len.
+                    self.inner.not_empty.notify_one();
+                    return PushOutcome::Shed(evicted);
                 }
             }
         }
@@ -198,6 +270,13 @@ impl<T> BoundedQueue<T> {
     pub fn stats(&self) -> (u64, u64, u64, usize) {
         let g = self.inner.q.lock().unwrap();
         (g.pushed, g.popped, g.dropped, g.high_watermark)
+    }
+
+    /// Items admitted and later evicted under ShedOldest.  Always zero
+    /// under Block/DropNewest.  Conservation after a full drain:
+    /// `pushed == popped + shed`.
+    pub fn shed(&self) -> u64 {
+        self.inner.q.lock().unwrap().shed
     }
 }
 
@@ -462,6 +541,122 @@ mod tests {
         assert_eq!(q.try_pop(), Some(3));
         assert!(q.is_empty());
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn shed_oldest_keeps_newest_and_returns_evicted() {
+        let q = BoundedQueue::new(2, Backpressure::ShedOldest);
+        assert_eq!(q.push_evict(1), PushOutcome::Accepted);
+        assert_eq!(q.push_evict(2), PushOutcome::Accepted);
+        // Full: 3 displaces the oldest (1), which comes back to us.
+        assert_eq!(q.push_evict(3), PushOutcome::Shed(1));
+        assert_eq!(q.push_evict(4), PushOutcome::Shed(2));
+        // Survivors are the newest two, still FIFO among themselves.
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), Some(4));
+        assert_eq!(q.try_pop(), None);
+        let (pushed, popped, dropped, hwm) = q.stats();
+        assert_eq!(pushed, 4, "shed items still count as pushed");
+        assert_eq!(popped, 2);
+        assert_eq!(dropped, 0, "a shed is not a drop");
+        assert_eq!(q.shed(), 2);
+        assert!(hwm <= 2);
+        assert_eq!(pushed, popped + q.shed(), "conservation after drain");
+    }
+
+    #[test]
+    fn shed_oldest_push_bool_always_accepts_while_open() {
+        let q = BoundedQueue::new(1, Backpressure::ShedOldest);
+        assert!(q.push(10));
+        assert!(q.push(11), "shedding push reports acceptance");
+        q.close();
+        assert!(!q.push(12), "closed still refuses");
+        assert_eq!(q.push_evict(13), PushOutcome::Closed(13));
+        assert_eq!(q.try_pop(), Some(11));
+        let (pushed, popped, _, _) = q.stats();
+        assert_eq!(pushed, 2);
+        assert_eq!(popped + q.shed(), pushed);
+    }
+
+    #[test]
+    fn shed_policy_conserves_under_concurrency() {
+        // MPSC hammer under ShedOldest: every push on the open queue is
+        // accepted, nothing is dropped, and after a full drain
+        // pushed == popped + shed with every surviving item unique.
+        let cap = 3;
+        let n_producers = 4u64;
+        let per_producer = 400u64;
+        let q: BoundedQueue<u64> = BoundedQueue::new(cap, Backpressure::ShedOldest);
+
+        let producers: Vec<_> = (0..n_producers)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_producer {
+                        assert!(
+                            q.push(p * per_producer + i),
+                            "open shed queue never refuses"
+                        );
+                    }
+                })
+            })
+            .collect();
+
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut got: Vec<u64> = Vec::new();
+                loop {
+                    match q.pop(Duration::from_millis(20)) {
+                        Some(v) => got.push(v),
+                        None => {
+                            if q.is_closed() && q.is_empty() {
+                                return got;
+                            }
+                        }
+                    }
+                }
+            })
+        };
+
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+
+        let (pushed, popped, dropped, hwm) = q.stats();
+        assert_eq!(pushed, n_producers * per_producer);
+        assert_eq!(dropped, 0, "shed policy never drops the newest");
+        assert_eq!(popped, got.len() as u64);
+        assert_eq!(pushed, popped + q.shed(), "pushed == delivered + shed");
+        assert!(hwm <= cap, "hwm {hwm} > cap {cap}");
+        let mut sorted = got;
+        sorted.sort_unstable();
+        let before = sorted.len();
+        sorted.dedup();
+        assert_eq!(sorted.len(), before, "an item survived twice");
+    }
+
+    #[test]
+    fn shed_policy_prop_conserves_accounting() {
+        Prop::new("shed policy conserves accounting").cases(32).run(|rng| {
+            let cap = rng.usize(1, 6);
+            let q = BoundedQueue::new(cap, Backpressure::ShedOldest);
+            let n = rng.usize(1, 100);
+            for i in 0..n {
+                prop_assert!(q.push(i), "open shed queue never refuses");
+                if rng.bool(0.4) {
+                    q.try_pop();
+                }
+                prop_assert!(q.len() <= cap, "len {} > cap {cap}", q.len());
+            }
+            let (pushed, popped, dropped, _) = q.stats();
+            prop_assert!(pushed == n as u64);
+            prop_assert!(dropped == 0);
+            prop_assert!(popped + q.shed() + q.len() as u64 == pushed);
+            Ok(())
+        });
     }
 
     #[test]

@@ -37,11 +37,12 @@
 //! batch counts and watermarks are excluded).
 
 use std::collections::{BTreeMap, HashSet};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::admin::{Attached, ControlPlane};
 use crate::coordinator::backend_pool::{BackendPool, ClassifySink, DirectSink};
 use crate::coordinator::fleet::{
     consume, CameraSpec, ConsumeParams, FleetAccounting, FleetItem, PlanBank,
@@ -375,7 +376,10 @@ pub struct CameraReport {
 pub struct ScenarioReport {
     /// scenario name
     pub name: String,
-    /// one report per scripted camera, in script order
+    /// one report per camera that stayed in the run: scripted cameras
+    /// in script order, then admin hot-adds in add order (serve mode);
+    /// cameras an admin removal vacated before their first frame are
+    /// omitted
     pub per_camera: Vec<CameraReport>,
     /// per shape-group accounting (dims + wire encoding)
     pub per_shape: BTreeMap<ShapeKey, ShapeStats>,
@@ -455,7 +459,42 @@ pub fn run_scenario<C: BatchClassifier>(
     metrics: &Metrics,
 ) -> Result<ScenarioReport> {
     let mut sink = DirectSink { classifier };
-    run_scenario_sink(&mut sink, scenario, metrics)
+    run_scenario_sink(&mut sink, scenario, metrics, None)
+}
+
+/// [`run_scenario`] with a live admin [`ControlPlane`] attached: the
+/// serve-mode entry behind `p2m fleet --scenario <name> --serve <addr>`.
+/// While the run is live, `plane.handle` (typically installed as the
+/// [`crate::coordinator::http::Handler`]) can hot-add and remove
+/// cameras, drain shards and resize the producer pool; admin-added
+/// cameras ride the same cell/wheel/seed machinery as scripted ones, so
+/// a run with a hot-add digests identically to the equivalent scripted
+/// scenario (see the determinism notes in [`crate::coordinator::admin`]).
+pub fn run_scenario_serve<C: BatchClassifier>(
+    classifier: &mut C,
+    scenario: &Scenario,
+    metrics: &Metrics,
+    plane: &ControlPlane,
+) -> Result<ScenarioReport> {
+    let mut sink = DirectSink { classifier };
+    run_scenario_sink(&mut sink, scenario, metrics, Some(plane))
+}
+
+/// [`run_scenario_serve`] with the classify stage parallelised over a
+/// [`crate::coordinator::BackendPool`] (the serve-mode twin of
+/// [`run_scenario_pooled`]).
+pub fn run_scenario_serve_pooled<C>(
+    workers: usize,
+    make: impl FnMut(usize) -> C,
+    scenario: &Scenario,
+    metrics: &Metrics,
+    plane: &ControlPlane,
+) -> Result<ScenarioReport>
+where
+    C: BatchClassifier + Send + 'static,
+{
+    let mut sink = BackendPool::with_metrics(workers, make, metrics);
+    run_scenario_sink(&mut sink, scenario, metrics, Some(plane))
 }
 
 /// [`run_scenario`] with the classify stage parallelised over a
@@ -474,27 +513,34 @@ where
     C: BatchClassifier + Send + 'static,
 {
     let mut sink = BackendPool::with_metrics(workers, make, metrics);
-    run_scenario_sink(&mut sink, scenario, metrics)
+    run_scenario_sink(&mut sink, scenario, metrics, None)
 }
 
-/// The scripted-run topology shared by the direct and pooled entries.
+/// The scripted-run topology shared by the direct, pooled and serve
+/// entries.
 fn run_scenario_sink<S: ClassifySink>(
     sink: &mut S,
     scenario: &Scenario,
     metrics: &Metrics,
+    plane: Option<&ControlPlane>,
 ) -> Result<ScenarioReport> {
     scenario.validate()?;
     let n = scenario.cameras.len();
+    let control = plane.map(|p| p.core());
 
     // One compiled plan per distinct camera design (never per camera,
     // never per incarnation): crash-restarted producers re-attach to
-    // the same Arc'd plan with a fresh ExecCtx.
-    let mut bank = PlanBank::new();
+    // the same Arc'd plan with a fresh ExecCtx.  The bank sits behind a
+    // mutex because serve-mode hot-adds compile (or share) plans while
+    // the run is live; `plans_compiled` is therefore read at the *end*.
+    let bank = Arc::new(Mutex::new(PlanBank::new()));
     let mut plans: Vec<Arc<FramePlan>> = Vec::with_capacity(n);
-    for script in &scenario.cameras {
-        plans.push(bank.plan_for(&script.spec)?);
+    {
+        let mut bank = bank.lock().unwrap();
+        for script in &scenario.cameras {
+            plans.push(bank.plan_for(&script.spec)?);
+        }
     }
-    let plans_compiled = bank.len();
 
     let registry = ShardRegistry::new();
     let params = ConsumeParams {
@@ -502,6 +548,7 @@ fn run_scenario_sink<S: ClassifySink>(
         max_wait: scenario.max_wait,
         route: scenario.route,
         expected_shards: n,
+        control: control.clone(),
     };
     let hooks = PoolHooks {
         frames_in: metrics.counter("scenario_frames_captured"),
@@ -514,7 +561,7 @@ fn run_scenario_sink<S: ClassifySink>(
     let active = metrics.gauge("scenario_active_cameras");
     let latency = metrics.latency("scenario_e2e_latency");
     let workers = scenario.pool_workers.unwrap_or_else(default_pool_workers);
-    let arena = crate::util::arena::FrameArena::new();
+    let arena = Arc::new(crate::util::arena::FrameArena::new());
     let mut per_camera = vec![PipelineStats::default(); n];
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
@@ -540,9 +587,49 @@ fn run_scenario_sink<S: ClassifySink>(
             frontend_threads: 1,
         })
         .collect();
+    // Static per-slot wire shapes for the end-of-run shed fold (one
+    // camera per link = one shape per link); admin slots resolve their
+    // shapes through the control plane instead.
+    let slot_shapes: Vec<ShapeKey> = cameras
+        .iter()
+        .map(|cam| cam.compute.shape_key())
+        .collect();
+
+    // Open the admin plane just before the pool starts: from here on,
+    // hot-adds/removals/drains/resizes land on the live run.
+    if let Some(plane) = plane {
+        plane.attach(
+            Attached {
+                bank: bank.clone(),
+                base_seed: scenario.seed,
+                queue_capacity: scenario.queue_capacity,
+                backpressure: scenario.backpressure,
+                arena: arena.clone(),
+            },
+            cameras
+                .iter()
+                .map(|cam| {
+                    (
+                        cam.slot,
+                        scenario.cameras[cam.slot].spec.id,
+                        slot_shapes[cam.slot],
+                        cam.link.clone(),
+                    )
+                })
+                .collect(),
+        );
+    }
 
     std::thread::scope(|s| {
-        let scheduler = spawn_producer_pool(s, cameras, workers, &registry, &arena, hooks);
+        let scheduler = spawn_producer_pool(
+            s,
+            cameras,
+            workers,
+            &registry,
+            &arena,
+            hooks,
+            control.clone(),
+        );
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
@@ -553,7 +640,11 @@ fn run_scenario_sink<S: ClassifySink>(
         consumer_result = consume(sink, &registry, &params, &mut acc, t0);
         if consumer_result.is_err() {
             // Close every link (registered or yet to register) so cells
-            // retire at their next dispatch and the pool drains.
+            // retire at their next dispatch and the pool drains; seal
+            // the admin plane so no verb outlives the dead consumer.
+            if let Some(c) = &control {
+                c.force_close();
+            }
             registry.poison();
         }
         if let Ok(ran) = scheduler.join() {
@@ -562,19 +653,41 @@ fn run_scenario_sink<S: ClassifySink>(
     });
     consumer_result?;
 
+    // Admin hot-adds may have registered slots beyond the scripted `n`;
+    // grow the per-slot tables before folding link accounting.
+    let total_slots = control
+        .as_ref()
+        .map_or(n, |c| c.total_slots().max(n));
+    per_camera.resize(total_slots, PipelineStats::default());
+    incarnations.resize(total_slots, 0);
+
     // Fold shard-link accounting (one link per camera slot): for every
     // camera captured == pushed + dropped, and with the consumer fully
-    // drained classified == pushed — crash-churn loses no *accepted*
-    // frames, and the gap to the script is visible as
+    // drained classified == pushed - shed — crash-churn loses no
+    // *accepted* frames, `ShedOldest` evictions are accounted exactly
+    // (captured == classified + dropped + shed, per camera and per
+    // shape), and the gap to the script is visible as
     // scripted_frames - frames_captured.
     for (slot, q) in registry.all() {
         let (pushed, _, dropped, hwm) = q.stats();
+        let shed = q.shed();
         per_camera[slot].frames_captured = pushed + dropped;
         per_camera[slot].frames_dropped = dropped;
+        per_camera[slot].frames_shed = shed;
         per_camera[slot].queue_high_watermark = hwm;
         aggregate.frames_captured += pushed + dropped;
         aggregate.frames_dropped += dropped;
+        aggregate.frames_shed += shed;
         aggregate.queue_high_watermark = aggregate.queue_high_watermark.max(hwm);
+        if shed > 0 {
+            let shape = slot_shapes
+                .get(slot)
+                .copied()
+                .or_else(|| control.as_ref().and_then(|c| c.shape_of(slot)));
+            if let Some(shape) = shape {
+                per_shape.entry(shape).or_default().frames_shed += shed;
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     aggregate.wall_time_s = wall;
@@ -586,28 +699,47 @@ fn run_scenario_sink<S: ClassifySink>(
     metrics.counter("arena_hits").add(arena.hits());
     metrics.counter("arena_misses").add(arena.misses());
     metrics.counter("arena_bytes_recycled").add(arena.bytes_recycled());
-    let per_camera = scenario
-        .cameras
-        .iter()
-        .zip(per_camera)
-        .zip(incarnations)
-        .map(|((script, mut stats), ran)| {
-            stats.wall_time_s = wall;
-            stats.throughput_fps = stats.frames_classified as f64 / wall.max(1e-9);
-            CameraReport {
-                spec: script.spec,
-                incarnations: ran,
-                scripted_frames: script.scripted_frames(),
-                stats,
+    // Assemble camera reports: scripted cameras in script order, then
+    // admin-added cameras in add order.  Slots an admin removal vacated
+    // before their first frame leave the run without trace, so a run
+    // whose hot-add was immediately removed digests like the scenario
+    // that never scripted it (modulo the plan compiled for it).
+    let vacated = control
+        .as_ref()
+        .map(|c| c.vacated_slots())
+        .unwrap_or_default();
+    let finish = |spec: CameraSpec, scripted_frames: u64, slot: usize| {
+        let mut stats = per_camera[slot].clone();
+        stats.wall_time_s = wall;
+        stats.throughput_fps = stats.frames_classified as f64 / wall.max(1e-9);
+        CameraReport {
+            spec,
+            incarnations: incarnations[slot],
+            scripted_frames,
+            stats,
+        }
+    };
+    let mut reports: Vec<CameraReport> = Vec::with_capacity(total_slots);
+    for (slot, script) in scenario.cameras.iter().enumerate() {
+        if !vacated.contains(&slot) {
+            reports.push(finish(script.spec, script.scripted_frames(), slot));
+        }
+    }
+    if let Some(c) = &control {
+        for admin in c.admin_cameras() {
+            if !vacated.contains(&admin.slot) {
+                reports.push(finish(admin.spec, admin.scripted_frames, admin.slot));
             }
-        })
-        .collect();
+        }
+    }
     Ok(ScenarioReport {
         name: scenario.name.clone(),
-        per_camera,
+        per_camera: reports,
         per_shape,
         aggregate,
-        plans_compiled,
+        // Read at the end: serve-mode hot-adds may have compiled plans
+        // the script never asked for (deduped by design like all plans).
+        plans_compiled: bank.lock().unwrap().len(),
         peak_active_cameras: active.high_watermark(),
     })
 }

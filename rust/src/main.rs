@@ -79,8 +79,11 @@ commands (one per paper table/figure):
   area      heterogeneous-integration area feasibility (Section 3.4, Fig. 5)
   mismatch  Monte-Carlo accuracy vs process variation (robustness study)
   fleet     sharded multi-camera serving fleet vs sequential single-camera
-            (--cameras N --frames M --batch B --queue Q --drop --threads T
+            (--cameras N --frames M --batch B --queue Q --threads T
              --seed S --quantized : ship n_bits ADC codes on the links)
+            overload policy: blocking by default, --drop refuses new
+            frames on a full link, --shed evicts the oldest queued frame
+            instead (exact per-camera/per-shape shed accounting)
             --backend <threshold|native|pjrt> picks the classify backend
             (native = integer MobileNetV2 over raw ADC codes; default is
             pjrt when artifacts exist, threshold otherwise) and
@@ -100,6 +103,12 @@ commands (one per paper table/figure):
             and verify the stats digest is reproducible, --seed S to
             reseed the whole script; --backend/--workers/--pool apply
             here too, pjrt excluded)
+            --serve <addr> (scenario runs only) starts the operability
+            plane: GET /metrics (Prometheus text) + /healthz, POST
+            /admin/camera, DELETE /admin/camera/<id>, POST
+            /admin/shard/<id>/drain, POST /admin/pool/resize — live
+            mutations of the running fleet (see rust/OPERATIONS.md);
+            use port 0 for an OS-assigned port (printed on startup)
   info      artifact + environment status
 
 examples (cargo run --release --example <name>):
@@ -622,6 +631,13 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         let name = rest.get(i + 1).copied().unwrap_or("list");
         return fleet_scenario(name, rest);
     }
+    if rest.contains(&"--serve") {
+        anyhow::bail!(
+            "--serve needs a scripted run to attach to: use \
+             `fleet --scenario <name> --serve <addr>` (e.g. --scenario churn \
+             --serve 127.0.0.1:9100)"
+        );
+    }
 
     let flag = |name: &str| -> Option<usize> {
         rest.iter()
@@ -638,6 +654,10 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     let pool = flag("--pool").map(|n| n.max(1));
     let seed = flag("--seed").unwrap_or(0) as u64;
     let drop = rest.contains(&"--drop");
+    let shed = rest.contains(&"--shed");
+    if drop && shed {
+        anyhow::bail!("--drop and --shed are mutually exclusive overload policies");
+    }
     let wire = if rest.contains(&"--quantized") {
         WireFormat::Quantized
     } else {
@@ -649,7 +669,13 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         frames_per_camera: frames,
         batch,
         queue_capacity: queue,
-        backpressure: if drop { Backpressure::DropNewest } else { Backpressure::Block },
+        backpressure: if shed {
+            Backpressure::ShedOldest
+        } else if drop {
+            Backpressure::DropNewest
+        } else {
+            Backpressure::Block
+        },
         base_seed,
         frontend_threads: threads,
         pool_workers: pool,
@@ -687,6 +713,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
                     st.frames_captured.to_string(),
                     st.frames_classified.to_string(),
                     st.frames_dropped.to_string(),
+                    st.frames_shed.to_string(),
                     st.bytes_from_sensor.to_string(),
                     format!("{:.1}", 100.0 * st.accuracy()),
                     st.queue_high_watermark.to_string(),
@@ -697,17 +724,18 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
             "{}",
             render_table(
                 &format!("fleet run ({backend} backend)"),
-                &["stream", "captured", "classified", "dropped", "bytes", "acc %", "hwm"],
+                &["stream", "captured", "classified", "dropped", "shed", "bytes", "acc %", "hwm"],
                 &rows
             )
         );
         let a = &stats.aggregate;
         println!(
-            "aggregate: {} classified / {} captured ({} dropped) in {:.2}s -> {:.1} fps, \
+            "aggregate: {} classified / {} captured ({} dropped, {} shed) in {:.2}s -> {:.1} fps, \
              latency mean {:.2} ms p95 {:.2} ms, {} batches",
             a.frames_classified,
             a.frames_captured,
             a.frames_dropped,
+            a.frames_shed,
             a.wall_time_s,
             a.throughput_fps,
             a.latency_mean_s * 1e3,
@@ -787,7 +815,13 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         "== fleet: {cameras} cameras x {frames} frames, batch {batch}, queue {queue}, \
          {} backpressure, {threads} frontend thread(s), {} wire, {backend_name} backend \
          x{workers} worker(s), producer pool {} ==",
-        if drop { "drop-newest" } else { "blocking" },
+        if shed {
+            "shed-oldest"
+        } else if drop {
+            "drop-newest"
+        } else {
+            "blocking"
+        },
         match wire {
             WireFormat::Dense => "dense f32",
             WireFormat::Quantized => "quantized",
@@ -874,10 +908,12 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
 /// digest must be identical for every worker count.
 fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
-        default_pool_workers, run_scenario, run_scenario_pooled, MeanThresholdClassifier,
-        Metrics, Scenario, ScenarioReport, WireFormat,
+        default_pool_workers, run_scenario, run_scenario_pooled, run_scenario_serve,
+        run_scenario_serve_pooled, ControlPlane, HttpRequest, HttpServer,
+        MeanThresholdClassifier, Metrics, Scenario, ScenarioReport, WireFormat,
     };
     use p2m::model::NativeBackend;
+    use std::sync::Arc;
 
     if name == "list" || name.starts_with("--") {
         println!("canned scenarios:");
@@ -918,6 +954,11 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         );
     }
     let check_digest = rest.contains(&"--check-digest");
+    let serve_addr = rest
+        .iter()
+        .position(|&a| a == "--serve")
+        .and_then(|i| rest.get(i + 1))
+        .copied();
     let mut scenario = match (name, cameras_override) {
         // The swarm is the one scale-parameterised scenario: --cameras
         // rescales it (CI smokes it at 1k, the full lane at 10k).
@@ -931,26 +972,62 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
     };
     scenario.pool_workers = pool;
 
-    let run_once = || -> anyhow::Result<(ScenarioReport, Metrics)> {
-        let metrics = Metrics::new();
-        let report = match (sel, workers) {
-            (BackendSel::Native, 1) => {
-                run_scenario(&mut NativeBackend::new(), &scenario, &metrics)?
+    // The operability plane (serve mode): bind before the run so the
+    // resolved address (real port for `:0` binds) prints first — the CI
+    // smoke parses this line — then serve /metrics, /healthz and the
+    // admin verbs off the plane for the whole run and beyond.
+    let metrics = Arc::new(Metrics::new());
+    let plane = serve_addr.map(|_| Arc::new(ControlPlane::new(metrics.clone())));
+    let _server = match (serve_addr, &plane) {
+        (Some(addr), Some(plane)) => {
+            let server = HttpServer::bind(addr)?;
+            println!("operability plane listening on http://{}", server.local_addr());
+            let handler_plane = plane.clone();
+            Some(server.spawn(Arc::new(move |req: &HttpRequest| handler_plane.handle(req)))?)
+        }
+        _ => None,
+    };
+
+    let run_once = |metrics: &Metrics,
+                    plane: Option<&ControlPlane>|
+     -> anyhow::Result<ScenarioReport> {
+        let report = match (sel, workers, plane) {
+            (BackendSel::Native, 1, None) => {
+                run_scenario(&mut NativeBackend::new(), &scenario, metrics)?
             }
-            (BackendSel::Native, w) => {
-                run_scenario_pooled(w, |_| NativeBackend::new(), &scenario, &metrics)?
+            (BackendSel::Native, 1, Some(p)) => {
+                run_scenario_serve(&mut NativeBackend::new(), &scenario, metrics, p)?
             }
-            (_, 1) => {
-                run_scenario(&mut MeanThresholdClassifier::new(0.5), &scenario, &metrics)?
+            (BackendSel::Native, w, None) => {
+                run_scenario_pooled(w, |_| NativeBackend::new(), &scenario, metrics)?
             }
-            (_, w) => run_scenario_pooled(
+            (BackendSel::Native, w, Some(p)) => {
+                run_scenario_serve_pooled(w, |_| NativeBackend::new(), &scenario, metrics, p)?
+            }
+            (_, 1, None) => {
+                run_scenario(&mut MeanThresholdClassifier::new(0.5), &scenario, metrics)?
+            }
+            (_, 1, Some(p)) => run_scenario_serve(
+                &mut MeanThresholdClassifier::new(0.5),
+                &scenario,
+                metrics,
+                p,
+            )?,
+            (_, w, None) => run_scenario_pooled(
                 w,
                 |_| MeanThresholdClassifier::new(0.5),
                 &scenario,
-                &metrics,
+                metrics,
+            )?,
+            (_, w, Some(p)) => run_scenario_serve_pooled(
+                w,
+                |_| MeanThresholdClassifier::new(0.5),
+                &scenario,
+                metrics,
+                p,
             )?,
         };
-        Ok((report, metrics))
+        Ok(report)
     };
 
     println!(
@@ -964,7 +1041,7 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         },
         pool.unwrap_or_else(default_pool_workers)
     );
-    let (report, metrics) = run_once()?;
+    let report = run_once(&metrics, plane.as_deref())?;
 
     // A 10k-camera swarm would print 10k rows; cap the per-camera table
     // and keep the aggregate + digest as the headline output.
@@ -992,6 +1069,7 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
                 cam.stats.frames_captured.to_string(),
                 cam.stats.frames_classified.to_string(),
                 cam.stats.frames_dropped.to_string(),
+                cam.stats.frames_shed.to_string(),
                 cam.stats.bytes_from_sensor.to_string(),
                 format!("{:.1}", 100.0 * cam.stats.accuracy()),
             ]
@@ -1009,6 +1087,7 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
                 "captured",
                 "classified",
                 "dropped",
+                "shed",
                 "bytes",
                 "acc %",
             ],
@@ -1028,6 +1107,7 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
                 ss.frames_classified.to_string(),
                 ss.batches.to_string(),
                 ss.bytes_from_sensor.to_string(),
+                ss.frames_shed.to_string(),
             ]
         })
         .collect();
@@ -1035,18 +1115,19 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         "{}",
         render_table(
             "per-shape batch groups (every batch is shape-pure)",
-            &["shape", "frames", "batches", "bytes"],
+            &["shape", "frames", "batches", "bytes", "shed"],
             &shape_rows
         )
     );
 
     let a = &report.aggregate;
     println!(
-        "aggregate: {} classified / {} captured ({} dropped) in {:.2}s -> {:.1} fps, \
+        "aggregate: {} classified / {} captured ({} dropped, {} shed) in {:.2}s -> {:.1} fps, \
          {} batches over {} shape group(s), {} compiled plan(s), peak {} live camera(s)",
         a.frames_classified,
         a.frames_captured,
         a.frames_dropped,
+        a.frames_shed,
         a.wall_time_s,
         a.throughput_fps,
         a.batches,
@@ -1057,7 +1138,10 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
     println!("stats digest: {:016x}", report.digest());
 
     if check_digest {
-        let (second, _) = run_once()?;
+        // The second run is always plain (no plane): with no admin verb
+        // landed on the first run this doubles as a serve-mode
+        // digest-parity check.
+        let second = run_once(&Metrics::new(), None)?;
         if second.digest() == report.digest() {
             println!(
                 "digest check: PASS (second run reproduced {:016x})",
@@ -1073,6 +1157,17 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         }
     }
     println!("\nmetrics snapshot:\n{}", metrics.snapshot());
+    if let Some(server) = &_server {
+        // Keep serving the final /metrics until the operator kills the
+        // process (the CI smoke curls us here, then SIGTERMs).
+        println!(
+            "scenario complete; still serving http://{} (ctrl-c to exit)",
+            server.local_addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     Ok(())
 }
 

@@ -186,7 +186,7 @@ fn bench_rows(doc: &Json) -> Result<Vec<(String, f64, String)>, String> {
 pub struct GateRow {
     /// row name (shared by baseline and fresh documents)
     pub name: String,
-    /// committed baseline throughput [frames/s]
+    /// committed baseline throughput \[frames/s\]
     pub baseline: f64,
     /// fresh throughput, `None` when the row vanished from the fresh
     /// results (itself a gate failure — a silently dropped row would

@@ -1,0 +1,290 @@
+//! Integration: the operability plane — live `/metrics` + `/healthz`
+//! over a real TCP socket, admin verbs mutating a *running* scenario
+//! through the deterministic cell machinery (hot-add digest parity,
+//! vacate-without-trace removal, live pool resize), and the
+//! `ShedOldest` overload policy's exact per-camera/per-shape shed
+//! accounting.  Needs no artifacts or PJRT; every socket binds an
+//! ephemeral port.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use p2m::coordinator::{
+    run_scenario, run_scenario_serve, Backpressure, BatchClassifier, CameraScript,
+    CameraSpec, ControlPlane, HttpRequest, HttpServer, MeanThresholdClassifier, Metrics,
+    Scenario, ScenarioReport, Segment, SegmentEnd, ShapeKey, WireFormat, WirePayload,
+};
+
+fn q8(id: u64, res: usize) -> CameraSpec {
+    CameraSpec::new(id, res, 8, WireFormat::Quantized)
+}
+
+fn run_plain(scenario: &Scenario) -> ScenarioReport {
+    let mut clf = MeanThresholdClassifier::new(0.5);
+    run_scenario(&mut clf, scenario, &Metrics::new()).unwrap()
+}
+
+/// One blocking HTTP exchange against the plane: returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to the operability plane");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: p2m\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    let status = out
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("unparsable response: {out:?}"));
+    let payload = out.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, payload)
+}
+
+/// Retry an admin verb until the run attaches (503 → retry); any other
+/// non-200 status is a real failure.
+fn admin_until_ok(addr: SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, payload) = http(addr, method, path, body);
+        match status {
+            200 => return payload,
+            503 if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            other => panic!("{method} {path} answered {other}: {payload}"),
+        }
+    }
+}
+
+/// Serve `scenario` on an ephemeral port while `exercise` drives the
+/// admin API from this thread; returns the run's report.
+fn run_served(
+    scenario: &Scenario,
+    exercise: impl FnOnce(SocketAddr, &Arc<AtomicBool>),
+) -> ScenarioReport {
+    let metrics = Arc::new(Metrics::new());
+    let plane = Arc::new(ControlPlane::new(metrics.clone()));
+    let handler_plane = plane.clone();
+    let server = HttpServer::bind("127.0.0.1:0")
+        .unwrap()
+        .spawn(Arc::new(move |req: &HttpRequest| handler_plane.handle(req)))
+        .unwrap();
+    let addr = server.local_addr();
+    let done = Arc::new(AtomicBool::new(false));
+    let mut report = None;
+    std::thread::scope(|s| {
+        let run_done = done.clone();
+        let run_plane = &plane;
+        let run_metrics = &metrics;
+        let handle = s.spawn(move || {
+            let mut clf = MeanThresholdClassifier::new(0.5);
+            let r = run_scenario_serve(&mut clf, scenario, run_metrics, run_plane);
+            run_done.store(true, Ordering::Relaxed);
+            r
+        });
+        exercise(addr, &done);
+        report = Some(handle.join().unwrap().unwrap());
+    });
+    server.stop();
+    report.unwrap()
+}
+
+/// A paced anchor keeps the run open long enough for admin verbs to
+/// land deterministically: `frames` at `fps` ≈ frames/fps seconds.
+fn paced_anchor(spec: CameraSpec, frames: usize, fps: f64) -> CameraScript {
+    CameraScript {
+        spec,
+        start_delay: Duration::ZERO,
+        segments: vec![Segment::paced(frames, fps, SegmentEnd::Clean)],
+    }
+}
+
+#[test]
+fn healthz_and_metrics_serve_over_real_tcp() {
+    let scenario = Scenario::new("serve-smoke", 5, vec![paced_anchor(q8(0, 40), 50, 250.0)]);
+    let report = run_served(&scenario, |addr, _| {
+        let (status, body) = http(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok\n");
+        // Wait for attach so the fleet extras are rendered too.
+        admin_until_ok(addr, "POST", "/admin/pool/resize", "{\"workers\":2}");
+        let (status, body) = http(addr, "GET", "/metrics", "");
+        assert_eq!(status, 200);
+        for needle in [
+            "# TYPE p2m_scenario_frames_captured_total counter",
+            "p2m_shape_queue_depth",
+            "p2m_simd_tier",
+            "p2m_run_open 1",
+            "p2m_arena_hit_rate",
+        ] {
+            assert!(body.contains(needle), "missing {needle:?} in:\n{body}");
+        }
+        let (status, _) = http(addr, "GET", "/no-such-route", "");
+        assert_eq!(status, 404);
+    });
+    assert_eq!(report.per_camera.len(), 1);
+    assert_eq!(report.per_camera[0].stats.frames_classified, 50);
+}
+
+#[test]
+fn admin_hot_add_digests_like_the_equivalent_scripted_scenario() {
+    let seed = 11;
+    let scenario = Scenario::new("hot-add", seed, vec![paced_anchor(q8(0, 40), 100, 250.0)]);
+    let report = run_served(&scenario, |addr, _| {
+        let body = admin_until_ok(
+            addr,
+            "POST",
+            "/admin/camera",
+            "{\"id\":7,\"resolution\":40,\"n_bits\":8,\"frames\":5}",
+        );
+        assert!(body.contains("\"slot\":1"), "{body}");
+    });
+
+    // The scripted twin: the same scenario with the admin camera
+    // appended last (admin adds join with zero start delay, a single
+    // clean free-running segment, and the same id-derived seed).
+    let mut twin = scenario.clone();
+    twin.cameras.push(CameraScript {
+        spec: q8(7, 40),
+        start_delay: Duration::ZERO,
+        segments: vec![Segment::free(5, SegmentEnd::Clean)],
+    });
+    let scripted = run_plain(&twin);
+
+    assert_eq!(report.per_camera.len(), 2, "anchor + hot-add");
+    assert_eq!(report.per_camera[1].spec.id, 7);
+    assert_eq!(report.per_camera[1].stats.frames_classified, 5);
+    assert_eq!(
+        report.digest(),
+        scripted.digest(),
+        "a live hot-add must ride the same deterministic paths as a scripted one"
+    );
+}
+
+#[test]
+fn admin_remove_before_first_frame_vacates_without_trace() {
+    let seed = 23;
+    // Camera 1 shares camera 0's design (same compiled plan) and joins
+    // only after 800 ms — removing it before that leaves a run
+    // indistinguishable from the scenario that never scripted it.
+    let mut scenario =
+        Scenario::new("vacate", seed, vec![paced_anchor(q8(0, 40), 60, 250.0)]);
+    scenario.cameras.push(CameraScript {
+        spec: q8(1, 40),
+        start_delay: Duration::from_millis(800),
+        segments: vec![Segment::free(4, SegmentEnd::Clean)],
+    });
+    let report = run_served(&scenario, |addr, _| {
+        let body = admin_until_ok(addr, "DELETE", "/admin/camera/1", "");
+        assert!(body.contains("\"id\":1"), "{body}");
+    });
+
+    let without = Scenario::new("vacate", seed, vec![paced_anchor(q8(0, 40), 60, 250.0)]);
+    let plain = run_plain(&without);
+    assert_eq!(report.per_camera.len(), 1, "the vacated camera left no report row");
+    assert_eq!(report.per_camera[0].spec.id, 0);
+    assert_eq!(
+        report.digest(),
+        plain.digest(),
+        "a pre-start removal must leave the run as if the camera was never scripted"
+    );
+}
+
+#[test]
+fn serving_metrics_mid_run_never_perturbs_the_digest() {
+    let seed = 41;
+    let scenario = Scenario::canned("churn", seed).unwrap();
+    let mut scrapes = 0u64;
+    let report = run_served(&scenario, |addr, done| {
+        // Live pool resize: answered 200, affects wall time only.
+        let body = admin_until_ok(addr, "POST", "/admin/pool/resize", "{\"workers\":1}");
+        assert!(body.contains("\"workers\":1"), "{body}");
+        // Hammer /metrics for the whole run.
+        while !done.load(Ordering::Relaxed) {
+            let (status, body) = http(addr, "GET", "/metrics", "");
+            assert_eq!(status, 200);
+            assert!(body.contains("p2m_"), "empty exposition:\n{body}");
+            scrapes += 1;
+        }
+    });
+    assert!(scrapes > 0, "the run ended before a single scrape landed");
+    let plain = run_plain(&scenario);
+    assert_eq!(
+        report.digest(),
+        plain.digest(),
+        "scraping /metrics and resizing the pool must never change outcomes"
+    );
+}
+
+/// Classifier slow enough that a capacity-1 link under free-running
+/// producers must shed: every batch costs 2 ms.
+struct SlowClassifier;
+
+impl BatchClassifier for SlowClassifier {
+    fn classify(&mut self, batch: &[&WirePayload]) -> anyhow::Result<Vec<u8>> {
+        std::thread::sleep(Duration::from_millis(2));
+        Ok(vec![0; batch.len()])
+    }
+}
+
+#[test]
+fn shed_oldest_accounts_exactly_per_camera_and_per_shape() {
+    // Two designs -> two shapes; capacity-1 links + a slow classifier
+    // force sustained overload, so ShedOldest must evict.
+    let mut scenario = Scenario::new(
+        "overload",
+        3,
+        vec![
+            CameraScript::steady(q8(0, 40), 60),
+            CameraScript::steady(q8(1, 20), 60),
+        ],
+    );
+    scenario.queue_capacity = 1;
+    scenario.backpressure = Backpressure::ShedOldest;
+    let mut clf = SlowClassifier;
+    let report = run_scenario(&mut clf, &scenario, &Metrics::new()).unwrap();
+
+    let a = &report.aggregate;
+    assert!(a.frames_shed > 0, "a capacity-1 link under overload must shed");
+    assert_eq!(a.frames_dropped, 0, "ShedOldest never refuses the new frame");
+    // Conservation, fleet-wide and per camera: every captured frame is
+    // classified or shed — never silently lost.
+    assert_eq!(a.frames_captured, a.frames_classified + a.frames_shed);
+    let mut shed_by_shape = std::collections::BTreeMap::new();
+    for cam in &report.per_camera {
+        let st = &cam.stats;
+        assert_eq!(st.frames_captured, cam.scripted_frames);
+        assert_eq!(
+            st.frames_captured,
+            st.frames_classified + st.frames_shed,
+            "camera {}",
+            cam.spec.id
+        );
+        let shape = ShapeKey {
+            h: if cam.spec.resolution == 40 { 8 } else { 4 },
+            w: if cam.spec.resolution == 40 { 8 } else { 4 },
+            c: 8,
+            bits: 8,
+        };
+        *shed_by_shape.entry(shape).or_insert(0u64) += st.frames_shed;
+    }
+    // Exact per-shape shed accounting: the per-shape counters equal the
+    // sums of their cameras' shed counts.
+    for (shape, expected) in shed_by_shape {
+        assert_eq!(
+            report.per_shape.get(&shape).map_or(0, |ss| ss.frames_shed),
+            expected,
+            "{shape}"
+        );
+    }
+    // Per-camera shed sums to the aggregate.
+    let sum: u64 = report.per_camera.iter().map(|c| c.stats.frames_shed).sum();
+    assert_eq!(sum, a.frames_shed);
+}

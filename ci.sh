@@ -162,6 +162,31 @@ step "fleet scenario smoke (swarm ${SWARM_CAMERAS}, pool determinism)" \
     cargo run --release --locked -q -- fleet --scenario swarm \
     --cameras "$SWARM_CAMERAS" --check-digest
 
+# Event-wire smoke: the static-scene script (frozen event cameras) run
+# TWICE via --check-digest — determinism of the sparse path — plus the
+# sparsity contract: after each camera's keyframe every frame is a
+# header, so total wire bytes must stay under 1% of the dense-ladder
+# equivalent (both sides computed by the exact wire_bits model).
+event_smoke() {
+    local out wire dense
+    out="$(cargo run --release --locked -q -- fleet --scenario static-scene \
+        --mode event --check-digest)"
+    wire="$(sed -n 's/^event wire: \([0-9][0-9]*\) bytes over .*/\1/p' <<<"$out" | head -n1)"
+    dense="$(sed -n 's/.*dense-ladder equivalent \([0-9][0-9]*\) bytes.*/\1/p' <<<"$out" | head -n1)"
+    if [[ -z "$wire" || -z "$dense" ]]; then
+        echo "could not parse the event wire summary; output:" >&2
+        echo "$out" >&2
+        return 1
+    fi
+    if (( wire * 100 >= dense )); then
+        echo "event wire bytes $wire are not <1% of the dense equivalent $dense" >&2
+        echo "$out" >&2
+        return 1
+    fi
+    echo "(event wire $wire B vs $dense B dense ladder: <1%, digest reproduced)"
+}
+step "fleet scenario smoke (static-scene event wire, digest + sparsity)" event_smoke
+
 if [[ "$BENCH" -eq 1 ]]; then
     # Preserve the committed baseline before the bench overwrites the
     # worktree copy (prefer git's HEAD version; fall back to the

@@ -19,8 +19,8 @@ use p2m::coordinator::{
     baseline_sensor, default_pool_workers, heterogeneous_fleet_sensors,
     p2m_sensor_from_bundle, run_fleet, run_fleet_pooled, run_pipeline, run_scenario,
     synthetic_fleet_sensors, synthetic_frame_plan, Backpressure, BatchPolicy, Batcher,
-    BoundedQueue, CameraSpec, FleetConfig, MeanThresholdClassifier, Metrics,
-    PipelineConfig, RoutePolicy, Router, Scenario, WireFormat,
+    BoundedQueue, CameraScript, CameraSpec, FleetConfig, MeanThresholdClassifier,
+    Metrics, PipelineConfig, RoutePolicy, Router, Scenario, WireFormat,
 };
 use p2m::frontend::Fidelity;
 use p2m::model::NativeBackend;
@@ -442,6 +442,55 @@ fn main() {
         } else {
             println!("{:<44} -> unavailable (no /proc)", "swarm_peak_rss");
         }
+    }
+
+    // --- Event wire (Neuromorphic-P2M): the sparse-path rows. ---
+    // Frozen scenes are the format's best case and the regression
+    // anchor: after the per-camera keyframe every frame is a 4-byte
+    // header and the whole frontend recompute is skipped.
+    {
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        let metrics = Metrics::new();
+        // 1k frozen 20px event cameras on the fixed pool: the swarm-
+        // scale row for the event scheduling + header-only wire path.
+        let scripts: Vec<CameraScript> = (0..1_000)
+            .map(|id| {
+                CameraScript::steady(
+                    CameraSpec::new(id, 20, 8, WireFormat::Event).with_freeze(true),
+                    8,
+                )
+            })
+            .collect();
+        let scenario = Scenario::new("event-1k-static", 0, scripts);
+        let t = Instant::now();
+        let r = run_scenario(&mut clf, &scenario, &metrics).unwrap();
+        let fps = r.aggregate.frames_classified as f64 / t.elapsed().as_secs_f64().max(1e-9);
+        println!(
+            "{:<44} -> {fps:.1} frames/s ({} frames, {} event bytes)",
+            "event_1kcam_static", r.aggregate.frames_classified, r.events.wire_bytes
+        );
+        report.row("event_1kcam_static", fps, "frames_per_s");
+
+        // Wire-bytes shrink on a static scene at fleet resolution: the
+        // exact wire_bits model on both sides (measured event bytes vs
+        // the dense code ladder the same frames would have shipped).
+        // Gated by the committed "ratio_min" floor of the same name.
+        let scripts: Vec<CameraScript> = (0..4)
+            .map(|id| {
+                CameraScript::steady(
+                    CameraSpec::new(id, 80, 8, WireFormat::Event).with_freeze(true),
+                    100,
+                )
+            })
+            .collect();
+        let scenario = Scenario::new("event-wire-ratio", 0, scripts);
+        let r = run_scenario(&mut clf, &scenario, &metrics).unwrap();
+        let shrink = r.events.dense_equiv_bytes as f64 / r.events.wire_bytes.max(1) as f64;
+        println!(
+            "{:<44} -> {shrink:.1}x ({} B vs {} B dense ladder)",
+            "event_vs_dense_wire_bytes", r.events.wire_bytes, r.events.dense_equiv_bytes
+        );
+        report.row("event_vs_dense_wire_bytes", shrink, "ratio");
     }
 
     // Perf trajectory: machine-readable copy of the always-run rows at

@@ -12,12 +12,19 @@
 //! bootstrap case: the gate passes and asks for the fresh results to be
 //! committed.  Invoked by `./ci.sh --bench`.
 //!
+//! Gated rows are the baseline's `frames_per_s` throughput rows
+//! (floor = baseline × (1 − tol)) and its `ratio_min` rows
+//! (hand-committed absolute floors for measured `ratio` rows of the
+//! same name, e.g. `event_vs_dense_wire_bytes`).
+//!
 //! When `$GITHUB_STEP_SUMMARY` is set (GitHub Actions), a per-row
 //! markdown table — baseline vs current vs gate floor, with a verdict
-//! per row — is appended to it, so the Actions run page shows the whole
+//! per row — is appended to it, followed by a "new rows" table listing
+//! every fresh result with no committed baseline (🆕 ungated rather
+//! than silently passing), so the Actions run page shows the whole
 //! perf picture rather than only pass/fail.
 
-use p2m::util::bench::{gate_regressions, gate_rows, GateRow};
+use p2m::util::bench::{fresh_only_rows, gate_regressions, gate_rows, GateRow};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -67,12 +74,22 @@ fn main() {
     // (gate_regressions), so CI logs can never drift from it.
     match gate_rows(&baseline, &fresh, tol) {
         Ok(rows) => {
-            step_summary(&summary_markdown(&rows, tol));
+            // Results with no committed baseline are not gated; log them
+            // loudly so a new row is never a *silent* pass.
+            let ungated = fresh_only_rows(&baseline, &fresh)
+                .expect("gate_rows parsed these documents already");
+            step_summary(&summary_markdown(&rows, &ungated, tol));
+            for (name, value, unit) in &ungated {
+                println!(
+                    "bench-gate: 🆕 ungated row {name} = {value:.1} {unit} — commit \
+                     the refreshed baseline (or a hand-set floor) to gate it"
+                );
+            }
             let failures = gate_regressions(&baseline, &fresh, tol)
                 .expect("gate_rows parsed these documents already");
             if failures.is_empty() {
                 println!(
-                    "bench-gate: OK — none of the {} throughput rows regressed more \
+                    "bench-gate: OK — none of the {} gated rows regressed more \
                      than {:.0}% (override with P2M_BENCH_TOL)",
                     rows.len(),
                     tol * 100.0
@@ -99,16 +116,18 @@ fn main() {
     }
 }
 
-/// The per-row markdown table appended to the Actions step summary.
-fn summary_markdown(rows: &[GateRow], tol: f64) -> String {
+/// The per-row markdown table appended to the Actions step summary,
+/// followed by the fresh-only rows the gate cannot judge yet.
+fn summary_markdown(rows: &[GateRow], ungated: &[(String, f64, String)], tol: f64) -> String {
     let mut md = String::from("## Bench regression gate\n\n");
     md.push_str(&format!(
-        "Tolerance: **{:.0}%** (`P2M_BENCH_TOL`); gate floor = baseline × {:.2}\n\n",
+        "Tolerance: **{:.0}%** (`P2M_BENCH_TOL`); gate floor = baseline × {:.2} \
+         (`ratio_min` floors are absolute)\n\n",
         tol * 100.0,
         1.0 - tol
     ));
-    md.push_str("| row | baseline (fps) | current (fps) | floor (fps) | verdict |\n");
-    md.push_str("|---|---:|---:|---:|---|\n");
+    md.push_str("| row | unit | baseline | current | floor | verdict |\n");
+    md.push_str("|---|---|---:|---:|---:|---|\n");
     for r in rows {
         let (current, verdict) = match (r.current, r.regressed) {
             (None, _) => ("—".to_string(), "❌ missing"),
@@ -116,9 +135,20 @@ fn summary_markdown(rows: &[GateRow], tol: f64) -> String {
             (Some(v), false) => (format!("{v:.1}"), "✅ ok"),
         };
         md.push_str(&format!(
-            "| `{}` | {:.1} | {current} | {:.1} | {verdict} |\n",
-            r.name, r.baseline, r.floor
+            "| `{}` | {} | {:.1} | {current} | {:.1} | {verdict} |\n",
+            r.name, r.unit, r.baseline, r.floor
         ));
+    }
+    if !ungated.is_empty() {
+        md.push_str("\n### New rows (not yet gated)\n\n");
+        md.push_str("| row | current | unit | verdict |\n|---|---:|---|---|\n");
+        for (name, value, unit) in ungated {
+            md.push_str(&format!("| `{name}` | {value:.1} | {unit} | 🆕 ungated |\n"));
+        }
+        md.push_str(
+            "\nCommit the refreshed `BENCH_pipeline.json` (or a hand-set \
+             `ratio_min` floor row) to gate these.\n",
+        );
     }
     md
 }

@@ -54,6 +54,33 @@ pub fn measured_bits_per_frame(payload: &QuantizedFrame) -> u64 {
     payload.wire_bits()
 }
 
+/// Header bits of the sparse event wire (Neuromorphic-P2M): a
+/// little-endian `u32` event count precedes the bit-packed stream.
+pub const EVENT_HEADER_BITS: u64 = 32;
+
+/// Index field width of the event wire: the minimal number of bits
+/// addressing one element of a `len`-element code ladder (minimum 1).
+pub fn event_index_bits(len: usize) -> u32 {
+    assert!(len > 0, "event frames need a non-empty ladder");
+    let mut bits = 0u32;
+    while (1usize << bits) < len {
+        bits += 1;
+    }
+    bits.max(1)
+}
+
+/// Bits leaving the sensor per frame on the *event* wire — the
+/// Eq.-2-style model of the sparse path: a fixed count header plus one
+/// `(index, code)` pair per changed ladder position.  Bandwidth is
+/// proportional to scene activity (`n_events`), not resolution; a
+/// static scene pays only [`EVENT_HEADER_BITS`].  The measured
+/// counterpart is `EventFrame::wire_bits`, and the two agree exactly
+/// (property test below).
+pub fn event_bits_per_frame(len: usize, n_events: usize, n_bits: u32) -> u64 {
+    assert!(n_events <= len, "more events than ladder positions");
+    EVENT_HEADER_BITS + n_events as u64 * (event_index_bits(len) + n_bits) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +215,98 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn measured_event_bits_match_the_sparse_model() {
+        // The event-wire property: every EventFrame the delta encoder
+        // emits over the real frontend costs *exactly*
+        // event_bits_per_frame(len, n_events, n_bits) bits on the wire —
+        // keyframes, partial-delta frames, and header-only static
+        // frames alike — and the serialised payload pins the byte count.
+        use crate::analog::TransferSurface;
+        use crate::config::SystemConfig;
+        use crate::frontend::{Fidelity, FramePlan};
+        use crate::sensor::{EventEncoder, SceneGen, Split};
+        use crate::util::arena::FrameArena;
+
+        Prop::new("measured event wire bits == sparse model").cases(9).run(|rng| {
+            let res = 5 * rng.usize(2, 7);
+            let n_bits = *rng.choose(&[4u32, 6, 8]);
+            let mut cfg = SystemConfig::for_resolution(res);
+            cfg.hyper.n_bits = n_bits;
+            cfg.adc.n_bits = n_bits;
+            let p = cfg.hyper.patch_len();
+            let c = cfg.hyper.out_channels;
+            let theta: Vec<f32> =
+                (0..p * c).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+            let plan = FramePlan::build(
+                cfg.clone(),
+                &theta,
+                vec![1.0; c],
+                vec![0.5; c],
+                TransferSurface::load_default(),
+                Fidelity::Functional,
+            )
+            .unwrap();
+            let arena = FrameArena::new();
+            let scenes = SceneGen::new(res, rng.next_u64());
+            let mut ctx = plan.ctx();
+            let mut enc = EventEncoder::new(rng.usize(0, 3) as u16);
+            let len = output_elems(&cfg.hyper, res) as usize;
+            for step in 0..4u64 {
+                // Scene 0 repeats at steps 2 and 3: step 3's input is
+                // bit-identical to step 2's, exercising the header-only
+                // skip frame inside the same property.
+                let img = scenes.image(1, step.min(2), Split::Train);
+                let ev = if enc.input_unchanged(&img.data) {
+                    let (h, w, cc) = plan.cfg.out_dims();
+                    enc.encode_unchanged(h, w, cc, plan.quant, &arena)
+                } else {
+                    let (q, _) = plan.process_quantized(&img, &mut ctx);
+                    enc.encode(&q, &img.data, &arena)
+                };
+                let predicted = event_bits_per_frame(len, ev.n_events(), n_bits);
+                prop_assert!(
+                    ev.wire_bits() == predicted,
+                    "res {res} n_bits {n_bits} step {step}: measured {} vs model {predicted}",
+                    ev.wire_bits()
+                );
+                prop_assert!(
+                    ev.pack_wire().len() as u64 == predicted.div_ceil(8),
+                    "packed bytes disagree at res {res} n_bits {n_bits} step {step}"
+                );
+                match step {
+                    0 => prop_assert!(ev.is_keyframe(), "first frame must keyframe"),
+                    3 => prop_assert!(
+                        ev.n_events() == 0 && ev.wire_bits() == EVENT_HEADER_BITS,
+                        "a bit-identical input must cost only the header"
+                    ),
+                    _ => {}
+                }
+                ev.recycle(&arena);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn event_model_shapes() {
+        // index_bits: minimal addressing width, floor of 1.
+        assert_eq!(event_index_bits(1), 1);
+        assert_eq!(event_index_bits(2), 1);
+        assert_eq!(event_index_bits(3), 2);
+        assert_eq!(event_index_bits(512), 9);
+        assert_eq!(event_index_bits(513), 10);
+        // A zero-event frame costs exactly the header; a full keyframe
+        // costs header + len * (index + code) bits.
+        assert_eq!(event_bits_per_frame(512, 0, 8), EVENT_HEADER_BITS);
+        assert_eq!(event_bits_per_frame(512, 512, 8), 32 + 512 * (9 + 8));
+        // The break-even point vs the dense wire: events are worth it
+        // whenever activity is below len*bits in pair-cost units.
+        let dense = 512u64 * 8;
+        assert!(event_bits_per_frame(512, 16, 8) < dense);
+        assert!(event_bits_per_frame(512, 512, 8) > dense, "keyframes cost more than dense");
     }
 
     #[test]

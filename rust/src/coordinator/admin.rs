@@ -381,7 +381,10 @@ impl ControlPlane {
 
     /// `POST /admin/camera`: hot-add.  Body:
     /// `{"id": 9, "resolution": 40, "n_bits": 8, "wire": "quantized",
-    ///   "frames": 8, "frame_rate": 0}` (all but `id` optional).
+    ///   "frames": 8, "frame_rate": 0, "event_threshold": 0,
+    ///   "freeze": false}` (all but `id` optional).  A hot-add runs
+    /// exactly one free/paced `Clean` segment; multi-segment lifecycle
+    /// scripts are a scenario feature and answer 422 here.
     fn add_camera(&self, body: &[u8]) -> HttpResponse {
         let Some(att) = self.attach_info() else {
             return HttpResponse::text(503, "no run attached\n");
@@ -397,13 +400,39 @@ impl ControlPlane {
             return HttpResponse::text(400, "camera id must be a non-negative integer\n");
         }
         let id = id as u64;
+        // A `segments` array used to be accepted and silently truncated
+        // to its first entry; that lie is now a loud 422.
+        if let Some(segments) = json.get("segments") {
+            let n = segments.as_arr().map_or(0, <[Json]>::len);
+            if n != 1 {
+                return HttpResponse::json(
+                    422,
+                    format!(
+                        "{{\"ok\":false,\"error\":\"hot-add runs exactly one \
+                         free/paced segment (got {n}): pass frames/frame_rate \
+                         for the single stretch, or script multi-segment \
+                         lifecycles (crash, restart, rate shift) in the \
+                         scenario itself\"}}"
+                    ),
+                );
+            }
+        }
         let resolution = get_usize(&json, "resolution", 40);
         let n_bits = get_usize(&json, "n_bits", 8) as u32;
-        let frames = get_usize(&json, "frames", 8);
-        let frame_rate = json.get("frame_rate").and_then(Json::as_f64).unwrap_or(0.0);
+        // A single-entry `segments` array is honoured as the one
+        // segment it is (fields beat the top-level defaults).
+        let seg0 = json.get("segments").and_then(|s| s.as_arr()).and_then(<[Json]>::first);
+        let frames = seg0
+            .and_then(|s| s.get("frames").and_then(Json::as_usize))
+            .unwrap_or_else(|| get_usize(&json, "frames", 8));
+        let frame_rate = seg0
+            .and_then(|s| s.get("frame_rate").and_then(Json::as_f64))
+            .or_else(|| json.get("frame_rate").and_then(Json::as_f64))
+            .unwrap_or(0.0);
         let wire = match json.get("wire").and_then(Json::as_str).unwrap_or("quantized") {
             "quantized" => WireFormat::Quantized,
             "dense" => WireFormat::Dense,
+            "event" => WireFormat::Event,
             other => {
                 return HttpResponse::text(400, format!("unknown wire format {other:?}\n"))
             }
@@ -414,8 +443,22 @@ impl ControlPlane {
         if resolution < 8 || frames == 0 || !frame_rate.is_finite() || frame_rate < 0.0 {
             return HttpResponse::text(400, "bad resolution/frames/frame_rate\n");
         }
+        let event_threshold = get_usize(&json, "event_threshold", 0);
+        if event_threshold > u16::MAX as usize {
+            return HttpResponse::text(400, "event_threshold must fit in 16 bits\n");
+        }
+        if wire == WireFormat::Event && !matches!(att.backpressure, Backpressure::Block) {
+            // Same invariant the scenario validator enforces: the
+            // delta-coded stream cannot survive lossy links.
+            return HttpResponse::text(
+                409,
+                "event-wire cameras need a run with Backpressure::Block\n",
+            );
+        }
         let mut spec = CameraSpec::new(id, resolution, n_bits, wire);
         spec.frame_rate = frame_rate;
+        spec.event_threshold = event_threshold as u16;
+        spec.freeze = json.get("freeze").and_then(Json::as_bool).unwrap_or(false);
         // Compile (or share) the plan outside the core lock: plan
         // compiles are slow and the bank has its own mutex.
         let plan = match att.bank.lock().unwrap().plan_for(&spec) {
@@ -424,7 +467,8 @@ impl ControlPlane {
         };
         let link: BoundedQueue<FleetItem> =
             BoundedQueue::new(att.queue_capacity, att.backpressure);
-        let shape = CellCompute::p2m(plan.clone(), wire).shape_key();
+        let shape =
+            CellCompute::p2m_threshold(plan.clone(), wire, spec.event_threshold).shape_key();
 
         let mut st = self.core.state.lock().unwrap();
         if !st.open {
@@ -449,10 +493,11 @@ impl ControlPlane {
             // The same seeding rule as scripted cameras — a hot-add and
             // its scripted twin stream identical frames (digest parity).
             seed: att.base_seed.wrapping_add(id),
-            compute: CellCompute::p2m(plan, wire),
+            compute: CellCompute::p2m_threshold(plan, wire, spec.event_threshold),
             link,
             preregistered: false,
             frontend_threads: 1,
+            freeze: spec.freeze,
         });
         drop(st);
         HttpResponse::json(200, format!("{{\"ok\":true,\"id\":{id},\"slot\":{slot}}}"))

@@ -329,12 +329,14 @@ mod tests {
         let mut per_camera = vec![PipelineStats::default(); 4];
         let mut per_shape = std::collections::BTreeMap::<ShapeKey, _>::new();
         let mut aggregate = PipelineStats::default();
+        let mut events = crate::coordinator::fleet::EventStats::default();
         let latency = Arc::new(Latency::new(64));
         let arena = crate::util::arena::FrameArena::new();
         let mut acc = FleetAccounting {
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
+            events: &mut events,
             latency: &latency,
             arena: &arena,
         };

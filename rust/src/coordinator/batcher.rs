@@ -11,7 +11,8 @@
 //! [`crate::coordinator::ShapeKey`]), so every emitted batch is key-pure
 //! and each lane keeps its own size/age triggers.
 
-use std::collections::BTreeMap;
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
 /// Batching policy.
@@ -69,11 +70,15 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Arrival time of the oldest pending item (None if empty).
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.pending.first().map(|&(_, t0)| t0)
+    }
+
     /// Time until the age trigger would fire (None if empty).
     pub fn next_deadline(&self, now: f64) -> Option<f64> {
-        self.pending
-            .first()
-            .map(|&(_, t0)| (t0 + self.policy.max_wait.as_secs_f64() - now).max(0.0))
+        self.oldest_arrival()
+            .map(|t0| (t0 + self.policy.max_wait.as_secs_f64() - now).max(0.0))
     }
 
     /// Flush whatever is pending.
@@ -103,6 +108,32 @@ impl<T> Batcher<T> {
 pub struct ShapedBatcher<K: Ord + Copy, T> {
     policy: BatchPolicy,
     lanes: BTreeMap<K, Batcher<T>>,
+    /// One `(oldest arrival, key)` entry per **non-empty** lane, ordered
+    /// by arrival.  [`ShapedBatcher::next_deadline`] and
+    /// [`ShapedBatcher::poll`] read the first entry instead of rescanning
+    /// every lane — the serve loop calls them once per iteration, and a
+    /// churned fleet accumulates lanes that are empty most of the time.
+    heads: BTreeSet<(TimeKey, K)>,
+}
+
+/// Total-order wrapper over an arrival timestamp so lane heads can key a
+/// `BTreeSet` (`f64` is not `Ord`; `total_cmp` is sound here because
+/// arrivals are clock readings, never NaN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct TimeKey(f64);
+
+impl Eq for TimeKey {}
+
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
 }
 
 impl<K: Ord + Copy, T> ShapedBatcher<K, T> {
@@ -110,7 +141,23 @@ impl<K: Ord + Copy, T> ShapedBatcher<K, T> {
     /// `max_batch`, like [`Batcher::new`]).
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
-        ShapedBatcher { policy, lanes: BTreeMap::new() }
+        ShapedBatcher { policy, lanes: BTreeMap::new(), heads: BTreeSet::new() }
+    }
+
+    /// Re-index `key`'s head entry after a lane mutation; `prior` and
+    /// `after` are the lane's oldest arrival before and after.  Lanes
+    /// always drain fully on emit, so a head only ever appears (first
+    /// push into an empty lane), vanishes (drain) or stays put.
+    fn resync_head(&mut self, key: K, prior: Option<f64>, after: Option<f64>) {
+        if prior == after {
+            return;
+        }
+        if let Some(t0) = prior {
+            self.heads.remove(&(TimeKey(t0), key));
+        }
+        if let Some(t0) = after {
+            self.heads.insert((TimeKey(t0), key));
+        }
     }
 
     /// Items waiting across all lanes.
@@ -128,35 +175,43 @@ impl<K: Ord + Copy, T> ShapedBatcher<K, T> {
     pub fn push(&mut self, key: K, item: T, now: f64) -> Option<(K, Vec<T>)> {
         let policy = self.policy;
         let lane = self.lanes.entry(key).or_insert_with(|| Batcher::new(policy));
-        lane.push(item, now).map(|batch| (key, batch))
+        let prior = lane.oldest_arrival();
+        let emitted = lane.push(item, now);
+        let after = lane.oldest_arrival();
+        self.resync_head(key, prior, after);
+        emitted.map(|batch| (key, batch))
     }
 
-    /// Check every lane's age trigger at time `now`; returns the first
-    /// due lane's (possibly partial) batch.  Call in a loop to drain all
-    /// due lanes.
+    /// Check the age trigger at time `now`; returns the due lane with
+    /// the oldest head, if any.  Call in a loop to drain all due lanes
+    /// (oldest first).  Only the earliest head can decide: every other
+    /// lane's oldest item arrived no earlier, so none is due unless the
+    /// first is.
     pub fn poll(&mut self, now: f64) -> Option<(K, Vec<T>)> {
-        for (key, lane) in self.lanes.iter_mut() {
-            if let Some(batch) = lane.poll(now) {
-                return Some((*key, batch));
-            }
-        }
-        None
+        let &(t0, key) = self.heads.first()?;
+        let lane = self.lanes.get_mut(&key).expect("heads only index live lanes");
+        let batch = lane.poll(now)?;
+        self.heads.remove(&(t0, key));
+        Some((key, batch))
     }
 
     /// Earliest age-trigger deadline across all lanes (None when every
-    /// lane is empty).
+    /// lane is empty).  O(1): the earliest head owns the earliest
+    /// deadline; same arithmetic as [`Batcher::next_deadline`].
     pub fn next_deadline(&self, now: f64) -> Option<f64> {
-        self.lanes
-            .values()
-            .filter_map(|lane| lane.next_deadline(now))
-            .min_by(|a, b| a.total_cmp(b))
+        let &(TimeKey(t0), _) = self.heads.first()?;
+        Some((t0 + self.policy.max_wait.as_secs_f64() - now).max(0.0))
     }
 
     /// Flush one non-empty lane (call in a loop to drain everything at
     /// end of stream).
     pub fn flush(&mut self) -> Option<(K, Vec<T>)> {
         for (key, lane) in self.lanes.iter_mut() {
+            let prior = lane.oldest_arrival();
             if let Some(batch) = lane.flush() {
+                if let Some(t0) = prior {
+                    self.heads.remove(&(TimeKey(t0), *key));
+                }
                 return Some((*key, batch));
             }
         }
@@ -477,6 +532,51 @@ mod tests {
                 for (i, &(_, seq)) in out[k].iter().enumerate() {
                     prop_assert!(seq == i, "key {k}: out[{i}] = {seq}");
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shaped_next_deadline_matches_the_full_lane_scan() {
+        // The head index must agree with the O(lanes) rescan it replaced
+        // under arbitrary push/poll/flush interleavings, and must hold
+        // exactly one entry per non-empty lane after every operation.
+        Prop::new("incremental deadline == lane scan").cases(64).run(|rng| {
+            let n_keys = rng.usize(1, 6);
+            let mut b: ShapedBatcher<usize, usize> =
+                ShapedBatcher::new(policy(rng.usize(1, 7), rng.usize(1, 15) as u64));
+            let mut now = 0.0;
+            for i in 0..rng.usize(1, 300) {
+                now += rng.range(0.0, 0.003);
+                match rng.usize(0, 10) {
+                    0..=6 => {
+                        b.push(rng.usize(0, n_keys), i, now);
+                    }
+                    7..=8 => while b.poll(now).is_some() {},
+                    _ => {
+                        b.flush();
+                    }
+                }
+                let scan = b
+                    .lanes
+                    .values()
+                    .filter_map(|lane| lane.next_deadline(now))
+                    .min_by(|a, b| a.total_cmp(b));
+                match (b.next_deadline(now), scan) {
+                    (None, None) => {}
+                    (Some(fast), Some(slow)) => prop_assert!(
+                        (fast - slow).abs() < 1e-12,
+                        "incremental {fast} vs scan {slow}"
+                    ),
+                    other => return Err(format!("deadline mismatch: {other:?}")),
+                }
+                let live = b.lanes.values().filter(|lane| lane.pending() > 0).count();
+                prop_assert!(
+                    b.heads.len() == live,
+                    "{} heads for {live} non-empty lanes",
+                    b.heads.len()
+                );
             }
             Ok(())
         });

@@ -107,6 +107,13 @@ pub struct CameraSpec {
     /// target capture rate in frames/s (0.0 = free-running); pacing
     /// only — never affects frame *contents* or counts under `Block`
     pub frame_rate: f64,
+    /// delta threshold of the event wire: a code moves on the wire only
+    /// when it differs from the reference by MORE than this (0 = every
+    /// change; ignored unless `wire` is [`WireFormat::Event`])
+    pub event_threshold: u16,
+    /// freeze the camera on its first scene (bit-identical captures —
+    /// the static-scene workload; see [`crate::sensor::Camera::set_frozen`])
+    pub freeze: bool,
 }
 
 impl CameraSpec {
@@ -119,7 +126,21 @@ impl CameraSpec {
             n_bits,
             wire,
             frame_rate: 0.0,
+            event_threshold: 0,
+            freeze: false,
         }
+    }
+
+    /// This spec with the event wire's delta threshold set.
+    pub fn with_event_threshold(mut self, threshold: u16) -> Self {
+        self.event_threshold = threshold;
+        self
+    }
+
+    /// This spec frozen on its first scene (static-scene workload).
+    pub fn with_freeze(mut self, freeze: bool) -> Self {
+        self.freeze = freeze;
+        self
     }
 
     /// The plan-sharing identity of this spec (see [`PlanKey`]): two
@@ -285,6 +306,19 @@ impl FleetConfig {
         if self.batch == 0 {
             bail!("batch must be >= 1");
         }
+        // The event wire is delta-coded per camera: the consumer's
+        // reassembly ladder assumes it sees every frame of the stream,
+        // so lossy backpressure would silently desynchronise it.
+        if sensors.iter().any(|s| s.wire() == WireFormat::Event)
+            && !matches!(self.backpressure, Backpressure::Block)
+        {
+            bail!(
+                "event-wire cameras require Backpressure::Block (got {:?}): \
+                 shedding or dropping frames of a delta-coded stream would \
+                 desynchronise the consumer's reassembly ladder",
+                self.backpressure
+            );
+        }
         if let Some(specs) = &self.cameras {
             if specs.len() != self.n_cameras {
                 bail!("{} camera specs for {} cameras", specs.len(), self.n_cameras);
@@ -352,6 +386,51 @@ pub struct ShapeStats {
     pub frames_shed: u64,
 }
 
+/// Sparse-wire accounting of a fleet run: totals over every frame that
+/// crossed a shard link as [`WirePayload::Events`].  All zeros when no
+/// camera uses [`WireFormat::Event`].  Deterministic under
+/// [`Backpressure::Block`] (which the event wire requires), so safe to
+/// digest.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EventStats {
+    /// frames that crossed a link as events (keyframes included)
+    pub event_frames: u64,
+    /// individual `(index, code)` events those frames carried
+    pub events: u64,
+    /// exact sparse wire bytes (header + bit-packed events, Eq. 2-style)
+    pub wire_bytes: u64,
+    /// what the same frames would have cost on the quantized dense wire
+    pub dense_equiv_bytes: u64,
+}
+
+impl EventStats {
+    /// Mean events per event frame (0 when no event frame crossed).
+    pub fn events_per_frame(&self) -> f64 {
+        if self.event_frames == 0 {
+            0.0
+        } else {
+            self.events as f64 / self.event_frames as f64
+        }
+    }
+
+    /// Fraction of ladder codes that did NOT move, averaged over event
+    /// frames (1.0 = fully static, 0.0 = every code moved every frame).
+    pub fn sparsity(&self) -> f64 {
+        if self.dense_equiv_bytes == 0 {
+            return 0.0;
+        }
+        // events / frame relative to the ladder length, via the exact
+        // byte models (both sides scale linearly in codes).
+        1.0 - (self.wire_bytes as f64 / self.dense_equiv_bytes as f64).min(1.0)
+    }
+
+    /// Link bytes the sparse wire saved over the dense-quantized wire
+    /// (saturating: a keyframe-heavy run can cost more than dense).
+    pub fn bytes_saved(&self) -> u64 {
+        self.dense_equiv_bytes.saturating_sub(self.wire_bytes)
+    }
+}
+
 /// End-of-run statistics of a fleet run.
 ///
 /// Counter fields of `per_camera` sum exactly to the corresponding
@@ -362,7 +441,11 @@ pub struct ShapeStats {
 /// cameras, so per-camera `batches` stays 0); latency percentiles are
 /// recorded on the aggregate only.  `per_shape` splits
 /// `frames_classified` / `batches` / `bytes_from_sensor` by batch shape
-/// group and sums to the aggregate likewise.
+/// group and sums to the aggregate likewise.  Event-wire cameras appear
+/// twice there: their link bytes land on the `e{n}` lane (what actually
+/// crossed the wire), while their classified frames land on the `q{n}`
+/// lane they are reassembled onto at ingest — each column still sums to
+/// its aggregate.
 #[derive(Clone, Debug)]
 pub struct FleetStats {
     /// one entry per camera, index = fleet slot (camera id for legacy
@@ -382,6 +465,8 @@ pub struct FleetStats {
     pub arena_hit_rate: f64,
     /// bytes served from recycled arena buffers (same caveat)
     pub arena_bytes_recycled: u64,
+    /// sparse-wire accounting (all zeros without event-wire cameras)
+    pub events: EventStats,
 }
 
 /// One frame in flight on a shard link: the wire payload (dense f32 or
@@ -486,6 +571,9 @@ pub(crate) struct FleetAccounting<'a> {
     pub(crate) per_camera: &'a mut Vec<PipelineStats>,
     pub(crate) per_shape: &'a mut BTreeMap<ShapeKey, ShapeStats>,
     pub(crate) aggregate: &'a mut PipelineStats,
+    /// sparse-wire totals (see [`EventStats`]); consume() folds them at
+    /// reassembly time, the only point that still sees event payloads
+    pub(crate) events: &'a mut EventStats,
     pub(crate) latency: &'a Arc<Latency>,
     /// the run's frame-buffer pool: folded payloads recycle into it
     /// (closing the producer → wire → ingest zero-alloc loop)
@@ -591,6 +679,7 @@ fn run_fleet_sink<S: ClassifySink>(
     let mut per_camera = vec![PipelineStats::default(); n];
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
+    let mut events = EventStats::default();
     let t0 = Instant::now();
     let mut consumer_result: Result<()> = Ok(());
 
@@ -602,10 +691,20 @@ fn run_fleet_sink<S: ClassifySink>(
         .into_iter()
         .enumerate()
         .map(|(ci, sensor)| {
-            let frame_rate = cfg
-                .cameras
-                .as_ref()
-                .map_or(0.0, |specs| specs[ci].frame_rate);
+            let spec = cfg.cameras.as_ref().map(|specs| specs[ci]);
+            let frame_rate = spec.map_or(0.0, |sp| sp.frame_rate);
+            // Event-wire specs carry per-camera stream knobs (delta
+            // threshold) that live on the cell's encoder, not the plan.
+            let compute = match spec {
+                Some(sp) if sp.wire == WireFormat::Event => {
+                    let plan = sensor
+                        .plan()
+                        .expect("validate(): event wire implies a P2M plan")
+                        .clone();
+                    CellCompute::p2m_threshold(plan, WireFormat::Event, sp.event_threshold)
+                }
+                _ => CellCompute::from_sensor(sensor),
+            };
             PoolCamera {
                 slot: ci,
                 segments: vec![Segment {
@@ -615,10 +714,11 @@ fn run_fleet_sink<S: ClassifySink>(
                 }],
                 start_delay: Duration::ZERO,
                 seed: cfg.camera_seed(ci),
-                compute: CellCompute::from_sensor(sensor),
+                compute,
                 link: shards[ci].clone(),
                 preregistered: true,
                 frontend_threads: cfg.frontend_threads,
+                freeze: spec.map_or(false, |sp| sp.freeze),
             }
         })
         .collect();
@@ -638,6 +738,7 @@ fn run_fleet_sink<S: ClassifySink>(
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
+            events: &mut events,
             latency: &latency,
             arena: &arena,
         };
@@ -684,6 +785,17 @@ fn run_fleet_sink<S: ClassifySink>(
     metrics.counter("arena_hits").add(arena.hits());
     metrics.counter("arena_misses").add(arena.misses());
     metrics.counter("arena_bytes_recycled").add(arena.bytes_recycled());
+    // Sparse-wire observability (deterministic under Block, which the
+    // event wire requires).
+    if events.event_frames > 0 {
+        metrics.counter("fleet_event_frames").add(events.event_frames);
+        metrics.counter("fleet_events").add(events.events);
+        metrics.counter("fleet_event_wire_bytes").add(events.wire_bytes);
+        metrics.counter("fleet_event_wire_bytes_saved").add(events.bytes_saved());
+        metrics
+            .gauge("fleet_event_sparsity_pct")
+            .observe((events.sparsity() * 100.0) as i64);
+    }
     Ok(FleetStats {
         per_camera,
         per_shape,
@@ -691,6 +803,7 @@ fn run_fleet_sink<S: ClassifySink>(
         simd_tier: simd::active_tier().name(),
         arena_hit_rate: arena.hit_rate(),
         arena_bytes_recycled: arena.bytes_recycled(),
+        events,
     })
 }
 
@@ -708,6 +821,12 @@ pub(crate) fn consume<S: ClassifySink>(
 ) -> Result<()> {
     let mut shards: Vec<(usize, BoundedQueue<FleetItem>)> = Vec::new();
     let mut router: Router<FleetItem> = Router::new(0, params.route);
+    // Per-camera event reassembly: the delta-coded sparse wire becomes a
+    // dense quantized ladder HERE — the last single-threaded, per-camera
+    // FIFO-ordered point before batching (the pooled classify stage runs
+    // on many threads, which a stateful decoder could not tolerate).
+    // Downstream, classifiers only ever see dense or quantized payloads.
+    let mut decoder = crate::sensor::EventDecoder::new();
     let mut batcher: ShapedBatcher<ShapeKey, FleetItem> = ShapedBatcher::new(BatchPolicy {
         max_batch: params.batch,
         max_wait: params.max_wait,
@@ -755,13 +874,22 @@ pub(crate) fn consume<S: ClassifySink>(
             if shards[si].1.is_empty() {
                 continue;
             }
-            if let Some(item) = shards[si].1.try_pop() {
+            if let Some(mut item) = shards[si].1.try_pop() {
                 cam_slot(acc.per_camera, item.camera).bytes_from_sensor += item.bytes;
                 acc.aggregate.bytes_from_sensor += item.bytes;
                 acc.per_shape
                     .entry(item.payload.shape_key())
                     .or_default()
                     .bytes_from_sensor += item.bytes;
+                if let WirePayload::Events(ev) = &item.payload {
+                    acc.events.event_frames += 1;
+                    acc.events.events += ev.n_events() as u64;
+                    acc.events.wire_bytes += item.bytes;
+                    acc.events.dense_equiv_bytes += ev.dense_wire_bits().div_ceil(8);
+                    let q = decoder.reassemble(item.camera as u64, ev, acc.arena);
+                    let sparse = std::mem::replace(&mut item.payload, WirePayload::Quantized(q));
+                    sparse.recycle_into(acc.arena);
+                }
                 router.enqueue(si, item);
                 moved += 1;
             }
@@ -1017,6 +1145,79 @@ mod tests {
             assert_eq!(d.bytes_from_sensor, 4 * q.bytes_from_sensor);
         }
         assert!(quant.per_shape.contains_key(&ShapeKey { h: 4, w: 4, c: 8, bits: 8 }));
+    }
+
+    #[test]
+    fn event_wire_fleet_matches_dense_decisions() {
+        // The event wire is delta-coded but lossless at threshold 0: the
+        // consumer reassembles every frame onto the dense ladder, so
+        // per-camera decisions are bit-identical to the dense run of the
+        // same scenes (acceptance criterion of the sparse path).
+        let cfg = small_cfg();
+        let dense = run(&cfg);
+        let ev = run_wire(&cfg, WireFormat::Event);
+        for (d, e) in dense.per_camera.iter().zip(&ev.per_camera) {
+            assert_eq!(d.correct, e.correct);
+            assert_eq!(d.frames_classified, e.frames_classified);
+        }
+        // Wire bytes live on the event lane; classified frames on the
+        // quantized lane the events are reassembled onto.
+        let ek = ShapeKey { h: 4, w: 4, c: 8, bits: ShapeKey::event_bits(8) };
+        let qk = ShapeKey { h: 4, w: 4, c: 8, bits: 8 };
+        assert_eq!(ev.per_shape[&ek].bytes_from_sensor, ev.aggregate.bytes_from_sensor);
+        assert_eq!(ev.per_shape[&ek].frames_classified, 0);
+        assert_eq!(ev.per_shape[&qk].frames_classified, 18);
+        assert_eq!(ev.events.event_frames, 18);
+        assert_eq!(ev.events.wire_bytes, ev.aggregate.bytes_from_sensor);
+        // Alternating scenes move nearly every code, so the sparse wire
+        // is allowed to cost MORE than dense here — the accounting just
+        // has to be exact.  128-code ladder -> 16 quantized bytes... no:
+        // 128 codes * 8 bits = 128 bytes/frame dense-equivalent.
+        assert_eq!(ev.events.dense_equiv_bytes, 18 * 128);
+        assert!(ev.events.events > 0);
+        assert!(ev.events.events_per_frame() > 0.0);
+    }
+
+    #[test]
+    fn frozen_event_fleet_collapses_to_headers() {
+        // Static scenes: one keyframe per camera, then pure 4-byte
+        // header frames — the bit-identical capture short-circuits the
+        // frontend and the wire carries zero events.
+        let specs: Vec<CameraSpec> = (0..3)
+            .map(|id| CameraSpec::new(id, 20, 8, WireFormat::Event).with_freeze(true))
+            .collect();
+        let (sensors, _) = heterogeneous_fleet_sensors(&specs).unwrap();
+        let cfg = FleetConfig {
+            n_cameras: 3,
+            frames_per_camera: 6,
+            cameras: Some(specs),
+            ..small_cfg()
+        };
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        let stats = run_fleet(&mut clf, sensors, &cfg, &Metrics::new()).unwrap();
+        // 128-code ladder: keyframe = 32 + 128*(7+8) bits = 244 bytes,
+        // every later frame = the 4-byte header alone.
+        for st in &stats.per_camera {
+            assert_eq!(st.frames_classified, 6);
+            assert_eq!(st.bytes_from_sensor, 244 + 5 * 4);
+        }
+        assert_eq!(stats.events.events, 3 * 128, "only the keyframes carry events");
+        assert_eq!(stats.events.dense_equiv_bytes, 18 * 128);
+        assert!(stats.events.bytes_saved() > 0);
+        assert!(stats.events.sparsity() > 0.5);
+    }
+
+    #[test]
+    fn event_wire_requires_block_backpressure() {
+        let cfg = FleetConfig {
+            backpressure: Backpressure::DropNewest,
+            ..small_cfg()
+        };
+        let sensors =
+            synthetic_fleet_sensors(20, Fidelity::Functional, 3, WireFormat::Event).unwrap();
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        let err = run_fleet(&mut clf, sensors, &cfg, &Metrics::new()).unwrap_err();
+        assert!(err.to_string().contains("Backpressure::Block"), "{err}");
     }
 
     #[test]

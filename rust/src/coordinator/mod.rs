@@ -31,11 +31,15 @@
 //! reassembly, so pooling changes throughput but never outcomes (see
 //! [`backend_pool`]).
 //!
-//! Every link carries [`WirePayload`]s: dense f32 frames or — with
+//! Every link carries [`WirePayload`]s: dense f32 frames, — with
 //! [`WireFormat::Quantized`] sensors — the quantized wire format
 //! ([`crate::sensor::QuantizedFrame`]), dequantised only at classifier
-//! ingest.  Batches are grouped by [`ShapeKey`] (dims + wire encoding),
-//! so the classifier boundary never sees a shape-mixed batch.
+//! ingest, or — with [`WireFormat::Event`] sensors — delta-coded sparse
+//! event frames ([`crate::sensor::EventFrame`]) that the consumer
+//! reassembles onto the dense code ladder before batching (bandwidth
+//! scales with scene activity, decisions stay bit-identical to the
+//! dense run).  Batches are grouped by [`ShapeKey`] (dims + wire
+//! encoding), so the classifier boundary never sees a shape-mixed batch.
 //!
 //! The **operability plane** wraps a serve-mode run
 //! ([`run_scenario_serve`]) with a dependency-light HTTP responder
@@ -69,7 +73,7 @@ pub use batcher::{BatchPolicy, Batcher, ShapedBatcher};
 pub use fleet::{
     heterogeneous_fleet_sensors, p2m_fleet_sensors, run_fleet, run_fleet_pooled,
     synthetic_fleet_sensors, synthetic_frame_plan, synthetic_frame_plan_bits, CameraSpec,
-    FleetConfig, FleetStats, PlanBank, ShapeStats,
+    EventStats, FleetConfig, FleetStats, PlanBank, ShapeStats,
 };
 pub use metrics::{Counter, Gauge, Latency, Metrics};
 pub use pipeline::{

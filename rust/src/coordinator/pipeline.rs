@@ -31,7 +31,7 @@ use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::energy::PipelineKind;
 use crate::frontend::{ExecCtx, Fidelity, FramePlan};
 use crate::runtime::{ModelBundle, Tensor};
-use crate::sensor::{Camera, Image, QuantData, QuantizedFrame, Split};
+use crate::sensor::{Camera, EventFrame, Image, QuantData, QuantizedFrame, Split};
 
 /// What a P2M sensor puts on the sensor-to-SoC link.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,6 +42,12 @@ pub enum WireFormat {
     /// frame dequant params ([`QuantizedFrame`]); the classifier ingest
     /// dequantises.
     Quantized,
+    /// The sparse Neuromorphic-P2M payload: only the codes that moved
+    /// past the sender's delta threshold, as a bit-packed
+    /// `(index, code)` stream ([`crate::sensor::EventFrame`]).  The
+    /// consumer reassembles per-camera dense ladders *before* batches
+    /// reach any classifier, so backends never see sparse payloads.
+    Event,
 }
 
 /// The batch-grouping identity of a wire payload: payloads may share a
@@ -54,10 +60,23 @@ pub struct ShapeKey {
     pub h: usize,
     pub w: usize,
     pub c: usize,
-    /// wire code width in bits; 0 encodes the dense f32 stream (so dense
-    /// and 32-bit-quantized payloads could never share a lane even if a
-    /// 32-bit wire existed)
+    /// wire encoding: 0 is the dense f32 stream, `1..=16` a quantized
+    /// code width (so dense and 32-bit-quantized payloads could never
+    /// share a lane even if a 32-bit wire existed), and
+    /// [`ShapeKey::EVENT_FLAG`]` | n` the event wire over an `n`-bit
+    /// ladder — event batches are ragged by construction and must
+    /// never share a lane with dense frames of the same dims
     pub bits: u32,
+}
+
+impl ShapeKey {
+    /// Bit set in [`ShapeKey::bits`] for event-wire lanes.
+    pub const EVENT_FLAG: u32 = 0x100;
+
+    /// The lane encoding of the event wire over an `n_bits` ladder.
+    pub fn event_bits(n_bits: u32) -> u32 {
+        Self::EVENT_FLAG | n_bits
+    }
 }
 
 impl std::fmt::Display for ShapeKey {
@@ -65,6 +84,8 @@ impl std::fmt::Display for ShapeKey {
         write!(f, "{}x{}x{}/", self.h, self.w, self.c)?;
         if self.bits == 0 {
             write!(f, "f32")
+        } else if self.bits & Self::EVENT_FLAG != 0 {
+            write!(f, "e{}", self.bits & !Self::EVENT_FLAG)
         } else {
             write!(f, "q{}", self.bits)
         }
@@ -84,7 +105,17 @@ pub enum WirePayload {
     Dense(Image),
     /// quantized ADC codes + per-frame dequant params
     Quantized(QuantizedFrame),
+    /// sparse delta events over a quantized code ladder; exists only
+    /// between sensor and consumer — the consumer reassembles each
+    /// camera's ladder into a [`WirePayload::Quantized`] before any
+    /// classifier sees the batch (the ingest paths panic on `Events`)
+    Events(EventFrame),
 }
+
+/// Panic message of every classifier-ingest path reached with a sparse
+/// payload: the consumer must reassemble events first.
+const EVENTS_AT_INGEST: &str =
+    "event payloads must be reassembled onto the dense ladder before classifier ingest";
 
 impl WirePayload {
     /// Payload dimensions (h, w, c).
@@ -92,14 +123,16 @@ impl WirePayload {
         match self {
             WirePayload::Dense(img) => (img.h, img.w, img.c),
             WirePayload::Quantized(q) => (q.h, q.w, q.c),
+            WirePayload::Events(ev) => (ev.h, ev.w, ev.c),
         }
     }
 
-    /// Values in the frame.
+    /// Values in the frame (the dense ladder length for event frames).
     pub fn len(&self) -> usize {
         match self {
             WirePayload::Dense(img) => img.len(),
             WirePayload::Quantized(q) => q.len(),
+            WirePayload::Events(ev) => ev.ladder_len(),
         }
     }
 
@@ -109,6 +142,7 @@ impl WirePayload {
         let bits = match self {
             WirePayload::Dense(_) => 0,
             WirePayload::Quantized(q) => q.spec.bits,
+            WirePayload::Events(ev) => ShapeKey::event_bits(ev.spec.bits),
         };
         ShapeKey { h, w, c, bits }
     }
@@ -124,6 +158,7 @@ impl WirePayload {
         match self {
             WirePayload::Dense(img) => img.len() as u64 * 32,
             WirePayload::Quantized(q) => q.wire_bits(),
+            WirePayload::Events(ev) => ev.wire_bits(),
         }
     }
 
@@ -141,6 +176,7 @@ impl WirePayload {
         match self {
             WirePayload::Dense(img) => out.copy_from_slice(&img.data),
             WirePayload::Quantized(q) => q.dequantize_into(out),
+            WirePayload::Events(_) => panic!("{EVENTS_AT_INGEST}"),
         }
     }
 
@@ -152,6 +188,7 @@ impl WirePayload {
         match self {
             WirePayload::Dense(img) => img.clone(),
             WirePayload::Quantized(q) => q.dequantize(),
+            WirePayload::Events(_) => panic!("{EVENTS_AT_INGEST}"),
         }
     }
 
@@ -161,6 +198,7 @@ impl WirePayload {
         match self {
             WirePayload::Dense(img) => img,
             WirePayload::Quantized(q) => q.dequantize(),
+            WirePayload::Events(_) => panic!("{EVENTS_AT_INGEST}"),
         }
     }
 
@@ -172,6 +210,7 @@ impl WirePayload {
         match self {
             WirePayload::Dense(img) => img.recycle(arena),
             WirePayload::Quantized(q) => q.recycle(arena),
+            WirePayload::Events(ev) => ev.recycle(arena),
         }
     }
 
@@ -181,6 +220,7 @@ impl WirePayload {
     pub fn mean(&self) -> f32 {
         match self {
             WirePayload::Dense(img) => img.mean(),
+            WirePayload::Events(_) => panic!("{EVENTS_AT_INGEST}"),
             WirePayload::Quantized(q) => {
                 if q.is_empty() {
                     return 0.0;
@@ -297,6 +337,14 @@ impl SensorCompute {
                 (WireFormat::Quantized, false) => {
                     WirePayload::Quantized(plan.process_quantized(image, ctx).0)
                 }
+                // The event wire needs the fleet's stateful per-camera
+                // delta encoder (CellCompute); here SensorCompute::Event
+                // is only the carrier of the wire choice into
+                // CellCompute::from_sensor.
+                (WireFormat::Event, _) => panic!(
+                    "the event wire runs through the fleet's CellCompute, \
+                     not the stateless SensorCompute frame path"
+                ),
             },
             SensorCompute::Baseline(readout) => WirePayload::Dense(readout.process(image).0),
         };
@@ -542,6 +590,12 @@ pub fn run_pipeline_with<C: BatchClassifier>(
     cfg: &PipelineConfig,
     metrics: &Metrics,
 ) -> Result<PipelineStats> {
+    if sensor.wire() == WireFormat::Event {
+        bail!(
+            "the single-camera pipeline does not speak the event wire \
+             (it has no per-camera reassembly stage); use the fleet with --mode event"
+        );
+    }
     let queue: BoundedQueue<LinkItem> = BoundedQueue::new(cfg.queue_capacity, cfg.backpressure);
     let sensor_cfg = sensor.sensor_config();
     let n_frames = cfg.n_frames;
@@ -861,5 +915,47 @@ mod tests {
         assert_ne!(dense.shape_key(), q6.shape_key());
         let other = WirePayload::Dense(Image::zeros(3, 2, 4));
         assert_ne!(dense.shape_key(), other.shape_key());
+    }
+
+    #[test]
+    fn event_payloads_key_their_own_lanes() {
+        let spec = crate::sensor::QuantSpec::unipolar(1.0, 8);
+        let mut ev = EventFrame::empty(2, 3, 4, spec);
+        ev.push(5, 17);
+        let p = WirePayload::Events(ev);
+        assert_eq!(p.dims(), (2, 3, 4));
+        assert_eq!(p.len(), 24, "len reports the dense ladder");
+        let key = p.shape_key();
+        assert_eq!(key, ShapeKey { h: 2, w: 3, c: 4, bits: ShapeKey::event_bits(8) });
+        assert_eq!(key.to_string(), "2x3x4/e8");
+        // Never a lane shared with the dense or quantized stream of the
+        // same dims.
+        let q8 = ShapeKey { h: 2, w: 3, c: 4, bits: 8 };
+        assert_ne!(key, q8);
+        // 24-element ladder -> 5 index bits; one event costs 5+8 bits.
+        assert_eq!(p.wire_bits(), 32 + 5 + 8);
+        assert_eq!(p.wire_bytes(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "reassembled")]
+    fn event_payloads_refuse_classifier_ingest() {
+        let spec = crate::sensor::QuantSpec::unipolar(1.0, 8);
+        WirePayload::Events(EventFrame::empty(1, 1, 2, spec)).mean();
+    }
+
+    #[test]
+    fn single_camera_pipeline_rejects_the_event_wire() {
+        let SensorCompute::P2m { plan, .. } = synthetic_p2m(20) else { unreachable!() };
+        let sensor = SensorCompute::p2m_wire(plan, WireFormat::Event);
+        assert_eq!(sensor.wire(), WireFormat::Event);
+        let cfg = PipelineConfig { n_frames: 2, ..PipelineConfig::default() };
+        let err = run_pipeline_with(
+            &mut MeanThresholdClassifier::new(0.5),
+            sensor,
+            &cfg,
+            &Metrics::new(),
+        );
+        assert!(err.unwrap_err().to_string().contains("--mode event"));
     }
 }

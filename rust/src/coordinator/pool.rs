@@ -45,7 +45,7 @@ use crate::baseline::BaselineReadout;
 use crate::config::SensorConfig;
 use crate::coordinator::wheel::TimerWheel;
 use crate::frontend::{ExecCtx, FramePlan, PlanKey};
-use crate::sensor::{Camera, Image, QuantizedFrame, Split};
+use crate::sensor::{Camera, EventEncoder, Image, QuantizedFrame, Split};
 use crate::util::arena::FrameArena;
 
 /// Scheduler tick length: 100 us (10 000 ticks/s), fine enough to pace
@@ -69,21 +69,44 @@ pub fn default_pool_workers() -> usize {
 /// embedded `ExecCtx` — workers supply scratch from a per-worker cache
 /// keyed by [`PlanKey`] so 10k same-design cameras share W contexts.
 pub(crate) enum CellCompute {
-    P2m { plan: Arc<FramePlan>, wire: WireFormat },
+    P2m {
+        plan: Arc<FramePlan>,
+        wire: WireFormat,
+        /// the per-camera delta stage; `Some` iff `wire` is the event
+        /// wire (the one piece of compute state that is *stream* state,
+        /// so it lives with the cell, never in the worker's plan cache)
+        encoder: Option<EventEncoder>,
+    },
     Baseline(BaselineReadout),
 }
 
 impl CellCompute {
     pub(crate) fn p2m(plan: Arc<FramePlan>, wire: WireFormat) -> Self {
-        CellCompute::P2m { plan, wire }
+        Self::p2m_threshold(plan, wire, 0)
+    }
+
+    /// [`CellCompute::p2m`] with an explicit event delta threshold
+    /// (ignored unless `wire` is [`WireFormat::Event`]).
+    pub(crate) fn p2m_threshold(plan: Arc<FramePlan>, wire: WireFormat, threshold: u16) -> Self {
+        let encoder = (wire == WireFormat::Event).then(|| EventEncoder::new(threshold));
+        CellCompute::P2m { plan, wire, encoder }
     }
 
     /// Adopt an existing sensor-compute instance (its private scratch is
     /// dropped; workers re-supply scratch from their caches).
     pub(crate) fn from_sensor(sensor: SensorCompute) -> Self {
         match sensor {
-            SensorCompute::P2m { plan, wire, .. } => CellCompute::P2m { plan, wire },
+            SensorCompute::P2m { plan, wire, .. } => Self::p2m_threshold(plan, wire, 0),
             SensorCompute::Baseline(readout) => CellCompute::Baseline(readout),
+        }
+    }
+
+    /// Drop per-stream delta state at an incarnation boundary: the next
+    /// event frame keyframes, resynchronising the consumer's ladder the
+    /// same way a fresh camera does.
+    pub(crate) fn reset_stream(&mut self) {
+        if let CellCompute::P2m { encoder: Some(enc), .. } = self {
+            enc.reset();
         }
     }
 
@@ -99,10 +122,11 @@ impl CellCompute {
     /// fold per shape without inspecting (long-recycled) payloads.
     pub(crate) fn shape_key(&self) -> ShapeKey {
         match self {
-            CellCompute::P2m { plan, wire } => {
+            CellCompute::P2m { plan, wire, .. } => {
                 let (h, w, c) = plan.cfg.out_dims();
                 let bits = match wire {
                     WireFormat::Quantized => plan.quant.bits,
+                    WireFormat::Event => ShapeKey::event_bits(plan.quant.bits),
                     WireFormat::Dense => 0,
                 };
                 ShapeKey { h, w, c, bits }
@@ -124,14 +148,14 @@ impl CellCompute {
     /// (the row-parallel and baseline paths keep plain allocation: they
     /// are off the steady-state hot path).
     fn run_frame(
-        &self,
+        &mut self,
         image: &Image,
         ctxs: &mut BTreeMap<PlanKey, ExecCtx>,
         frontend_threads: usize,
         arena: &FrameArena,
     ) -> (WirePayload, u64) {
         let payload = match self {
-            CellCompute::P2m { plan, wire } => match (*wire, frontend_threads > 1) {
+            CellCompute::P2m { plan, wire, encoder } => match (*wire, frontend_threads > 1) {
                 (WireFormat::Dense, true) => {
                     WirePayload::Dense(plan.process_parallel(image, frontend_threads).0)
                 }
@@ -151,6 +175,24 @@ impl CellCompute {
                     let mut out = plan.quantized_frame_in(arena);
                     plan.process_quantized_into(image, ctx, &mut out);
                     WirePayload::Quantized(out)
+                }
+                // The event wire always takes the serial quantized route:
+                // the delta stage needs the exact same codes the dense
+                // ladder would carry (bit parity), and a bit-identical
+                // repeat capture skips the frontend entirely.
+                (WireFormat::Event, _) => {
+                    let enc = encoder.as_mut().expect("event wire cells own an encoder");
+                    let (ho, wo, c) = plan.cfg.out_dims();
+                    if enc.input_unchanged(&image.data) {
+                        WirePayload::Events(enc.encode_unchanged(ho, wo, c, plan.quant, arena))
+                    } else {
+                        let ctx = ctxs.entry(plan.plan_key()).or_insert_with(|| plan.ctx());
+                        let mut q = plan.quantized_frame_in(arena);
+                        plan.process_quantized_into(image, ctx, &mut q);
+                        let ev = enc.encode(&q, &image.data, arena);
+                        q.recycle(arena);
+                        WirePayload::Events(ev)
+                    }
                 }
             },
             CellCompute::Baseline(readout) => WirePayload::Dense(readout.process(image).0),
@@ -180,6 +222,10 @@ pub(crate) struct PoolCamera {
     /// cell's first dispatch (scenario hot-add semantics)
     pub(crate) preregistered: bool,
     pub(crate) frontend_threads: usize,
+    /// freeze each incarnation's camera on its first scene (see
+    /// [`Camera::set_frozen`]) — the static-scene workload for the
+    /// event wire
+    pub(crate) freeze: bool,
 }
 
 /// Metric handles the pool reports into (the caller names them, so the
@@ -258,8 +304,9 @@ impl CameraCell {
             }
             if self.camera.is_none() {
                 let seed = incarnation_seed(self.cam.seed, self.group as u32);
-                self.camera =
-                    Some(Camera::new(self.cam.compute.sensor_config(), seed, Split::Test));
+                let mut camera = Camera::new(self.cam.compute.sensor_config(), seed, Split::Test);
+                camera.set_frozen(self.cam.freeze);
+                self.camera = Some(camera);
                 self.incarnations_ran += 1;
             }
             let (_, group_end) = self.groups[self.group];
@@ -279,6 +326,9 @@ impl CameraCell {
             self.seg = group_end + 1;
             self.seg_done = 0;
             self.camera = None;
+            // The incarnation's event stream (if any) dies with it: the
+            // replacement keyframes so the consumer's ladder resyncs.
+            self.cam.compute.reset_stream();
             if seg.end == SegmentEnd::Crash && self.group < self.groups.len() {
                 if let Some(restarts) = &hooks.restarts {
                     restarts.inc();
@@ -694,6 +744,7 @@ mod tests {
             link: BoundedQueue::new(4, Backpressure::Block),
             preregistered: true,
             frontend_threads: 1,
+            freeze: false,
         };
         let mut cell = CameraCell::new(cam);
         assert_eq!(cell.groups, vec![(0, 0), (1, 2)]);
@@ -714,6 +765,40 @@ mod tests {
         assert_eq!(cell.incarnations_ran, 2);
         assert_eq!(metrics.counter("r").get(), 1, "one crash restart");
         assert!(cell.camera.is_none(), "retired cells hold no camera");
+    }
+
+    #[test]
+    fn event_cells_keyframe_then_collapse_on_a_static_scene() {
+        let plan = synthetic_frame_plan_bits(20, Fidelity::Functional, 8).unwrap();
+        let mut compute = CellCompute::p2m(plan, WireFormat::Event);
+        assert_eq!(compute.shape_key().bits, ShapeKey::event_bits(8));
+        let arena = FrameArena::new();
+        let mut ctxs = BTreeMap::new();
+        let mut cam = Camera::new(compute.sensor_config(), 7, Split::Test);
+        cam.set_frozen(true);
+        let f0 = cam.capture();
+        let f1 = cam.capture();
+        let (p0, b0) = compute.run_frame(&f0.image, &mut ctxs, 1, &arena);
+        let (p1, b1) = compute.run_frame(&f1.image, &mut ctxs, 1, &arena);
+        let (ev0, ev1) = match (p0, p1) {
+            (WirePayload::Events(a), WirePayload::Events(b)) => (a, b),
+            _ => panic!("event cells emit event payloads"),
+        };
+        assert!(ev0.is_keyframe(), "the first frame of a stream keyframes");
+        assert_eq!(ev1.n_events(), 0, "a frozen scene collapses to the header");
+        assert_eq!(b1, 4, "header-only frame = 4 wire bytes");
+        assert!(b0 > b1);
+
+        // Resetting the stream (incarnation boundary) keyframes again,
+        // even though the input is still bit-identical.
+        compute.reset_stream();
+        let (p2, _) = compute.run_frame(&f1.image, &mut ctxs, 1, &arena);
+        match p2 {
+            WirePayload::Events(ev) => {
+                assert!(ev.is_keyframe(), "a reset stream must resync with a keyframe")
+            }
+            _ => panic!("event cells emit event payloads"),
+        }
     }
 
     #[test]
@@ -740,6 +825,7 @@ mod tests {
             link: BoundedQueue::new(4, Backpressure::Block),
             preregistered: true,
             frontend_threads: 1,
+            freeze: false,
         };
         let mut cell = CameraCell::new(cam);
         assert!(matches!(cell.next_step(&hooks), Step::Done));

@@ -45,7 +45,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::admin::{Attached, ControlPlane};
 use crate::coordinator::backend_pool::{BackendPool, ClassifySink, DirectSink};
 use crate::coordinator::fleet::{
-    consume, CameraSpec, ConsumeParams, FleetAccounting, FleetItem, PlanBank,
+    consume, CameraSpec, ConsumeParams, EventStats, FleetAccounting, FleetItem, PlanBank,
     ShapeStats, ShardRegistry,
 };
 use crate::coordinator::metrics::Metrics;
@@ -204,8 +204,8 @@ impl Scenario {
     }
 
     /// Names accepted by [`Scenario::canned`].
-    pub fn canned_names() -> [&'static str; 5] {
-        ["uniform", "mixed-res", "churn", "crash-storm", "swarm"]
+    pub fn canned_names() -> [&'static str; 6] {
+        ["uniform", "mixed-res", "churn", "crash-storm", "swarm", "static-scene"]
     }
 
     /// The canned scenarios behind `p2m fleet --scenario <name>`.
@@ -220,7 +220,12 @@ impl Scenario {
     /// * `crash-storm` — 6 cameras crashing twice each (12 producer
     ///   restarts), one ending crashed with an orphaned link;
     /// * `swarm` — 10 000 identical low-res cameras on the fixed worker
-    ///   pool: the fleet-scale stressor (see [`Scenario::swarm`]).
+    ///   pool: the fleet-scale stressor (see [`Scenario::swarm`]);
+    /// * `static-scene` — 3 frozen cameras on the event wire: after each
+    ///   camera's keyframe every capture is bit-identical, so the link
+    ///   carries 4-byte header frames and total wire bytes collapse to
+    ///   under 1% of the dense-quantized equivalent (the
+    ///   Neuromorphic-P2M bandwidth story).
     pub fn canned(name: &str, seed: u64) -> Option<Scenario> {
         let q8 = |id: u64, res: usize| CameraSpec::new(id, res, 8, WireFormat::Quantized);
         let scenario = match name {
@@ -297,6 +302,18 @@ impl Scenario {
                     .collect(),
             ),
             "swarm" => Scenario::swarm(10_000, seed),
+            "static-scene" => Scenario::new(
+                "static-scene",
+                seed,
+                (0..3)
+                    .map(|id| {
+                        CameraScript::steady(
+                            CameraSpec::new(id, 80, 8, WireFormat::Event).with_freeze(true),
+                            1000,
+                        )
+                    })
+                    .collect(),
+            ),
             _ => return None,
         };
         Some(scenario)
@@ -332,6 +349,19 @@ impl Scenario {
             }
             if !(1..=16).contains(&script.spec.n_bits) {
                 bail!("camera id {id}: n_bits must be in 1..=16");
+            }
+            // The event wire is delta-coded per camera: the consumer's
+            // reassembly ladder assumes it sees every accepted frame,
+            // so lossy backpressure would silently desynchronise it.
+            if script.spec.wire == WireFormat::Event
+                && !matches!(self.backpressure, Backpressure::Block)
+            {
+                bail!(
+                    "camera id {id}: the event wire requires Backpressure::Block \
+                     (got {:?}) — lossy backpressure would desynchronise the \
+                     consumer's reassembly ladder",
+                    self.backpressure
+                );
             }
         }
         Ok(())
@@ -390,6 +420,9 @@ pub struct ScenarioReport {
     pub plans_compiled: usize,
     /// peak concurrently-live cameras the run reached (timing-derived)
     pub peak_active_cameras: i64,
+    /// sparse-wire totals (all zeros without event-wire cameras);
+    /// deterministic under `Block`, so part of the digest when non-zero
+    pub events: EventStats,
 }
 
 impl ScenarioReport {
@@ -409,7 +442,21 @@ impl ScenarioReport {
             h = mix(h, spec.id);
             h = mix(h, spec.resolution as u64);
             h = mix(h, u64::from(spec.n_bits));
-            h = mix(h, matches!(spec.wire, WireFormat::Quantized) as u64);
+            // Wire discriminant: Dense = 0, Quantized = 1, Event = 2
+            // (the first two match the old boolean encoding, so every
+            // pre-event fixture digest is unchanged).
+            h = mix(
+                h,
+                match spec.wire {
+                    WireFormat::Dense => 0,
+                    WireFormat::Quantized => 1,
+                    WireFormat::Event => 2,
+                },
+            );
+            if spec.wire == WireFormat::Event {
+                h = mix(h, u64::from(spec.event_threshold));
+                h = mix(h, spec.freeze as u64);
+            }
             h = mix(h, u64::from(report.incarnations));
             h = mix(h, report.scripted_frames);
             let st = &report.stats;
@@ -426,6 +473,14 @@ impl ScenarioReport {
             h = mix(h, u64::from(shape.bits));
             h = mix(h, ss.frames_classified);
             h = mix(h, ss.bytes_from_sensor);
+        }
+        // Sparse-wire totals join the digest only when an event camera
+        // ran, so pre-event fixture digests are untouched.
+        if self.events != EventStats::default() {
+            h = mix(h, self.events.event_frames);
+            h = mix(h, self.events.events);
+            h = mix(h, self.events.wire_bytes);
+            h = mix(h, self.events.dense_equiv_bytes);
         }
         mix(h, self.plans_compiled as u64)
     }
@@ -565,6 +620,7 @@ fn run_scenario_sink<S: ClassifySink>(
     let mut per_camera = vec![PipelineStats::default(); n];
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
+    let mut events = EventStats::default();
     let mut incarnations: Vec<u32> = vec![0; n];
     let t0 = Instant::now();
     let mut consumer_result: Result<()> = Ok(());
@@ -581,10 +637,15 @@ fn run_scenario_sink<S: ClassifySink>(
             segments: script.segments.clone(),
             start_delay: script.start_delay,
             seed: scenario.camera_seed(&script.spec),
-            compute: CellCompute::p2m(plans[slot].clone(), script.spec.wire),
+            compute: CellCompute::p2m_threshold(
+                plans[slot].clone(),
+                script.spec.wire,
+                script.spec.event_threshold,
+            ),
             link: BoundedQueue::new(scenario.queue_capacity, scenario.backpressure),
             preregistered: false,
             frontend_threads: 1,
+            freeze: script.spec.freeze,
         })
         .collect();
     // Static per-slot wire shapes for the end-of-run shed fold (one
@@ -634,6 +695,7 @@ fn run_scenario_sink<S: ClassifySink>(
             per_camera: &mut per_camera,
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
+            events: &mut events,
             latency: &latency,
             arena: &arena,
         };
@@ -699,6 +761,19 @@ fn run_scenario_sink<S: ClassifySink>(
     metrics.counter("arena_hits").add(arena.hits());
     metrics.counter("arena_misses").add(arena.misses());
     metrics.counter("arena_bytes_recycled").add(arena.bytes_recycled());
+    // Sparse-wire observability (deterministic under Block; also folded
+    // into the report and — when non-zero — the digest).
+    if events.event_frames > 0 {
+        metrics.counter("scenario_event_frames").add(events.event_frames);
+        metrics.counter("scenario_events").add(events.events);
+        metrics.counter("scenario_event_wire_bytes").add(events.wire_bytes);
+        metrics
+            .counter("scenario_event_wire_bytes_saved")
+            .add(events.bytes_saved());
+        metrics
+            .gauge("scenario_event_sparsity_pct")
+            .observe((events.sparsity() * 100.0) as i64);
+    }
     // Assemble camera reports: scripted cameras in script order, then
     // admin-added cameras in add order.  Slots an admin removal vacated
     // before their first frame leave the run without trace, so a run
@@ -741,6 +816,7 @@ fn run_scenario_sink<S: ClassifySink>(
         // the script never asked for (deduped by design like all plans).
         plans_compiled: bank.lock().unwrap().len(),
         peak_active_cameras: active.high_watermark(),
+        events,
     })
 }
 
@@ -852,6 +928,17 @@ mod tests {
     }
 
     #[test]
+    fn event_scripts_require_block_backpressure() {
+        let mut s = Scenario::canned("static-scene", 1).unwrap();
+        s.validate().unwrap();
+        assert!(s.cameras.iter().all(|c| c.spec.wire == WireFormat::Event));
+        assert!(s.cameras.iter().all(|c| c.spec.freeze));
+        s.backpressure = Backpressure::ShedOldest;
+        let err = s.validate().unwrap_err();
+        assert!(err.to_string().contains("Backpressure::Block"), "{err}");
+    }
+
+    #[test]
     fn swarm_scenario_scales_with_stable_identities() {
         let s = Scenario::swarm(100, 3);
         assert_eq!(s.name, "swarm");
@@ -906,6 +993,7 @@ mod tests {
             aggregate: PipelineStats::default(),
             plans_compiled: 1,
             peak_active_cameras: 1,
+            events: EventStats::default(),
         };
         // Timing fields must not move the digest; outcomes must.
         assert_eq!(report(3, 0.5).digest(), report(3, 99.0).digest());

@@ -81,6 +81,11 @@ commands (one per paper table/figure):
   fleet     sharded multi-camera serving fleet vs sequential single-camera
             (--cameras N --frames M --batch B --queue Q --threads T
              --seed S --quantized : ship n_bits ADC codes on the links)
+            --mode <dense|quantized|event> picks the wire format
+            (--quantized is the legacy alias for --mode quantized;
+            event = delta-coded sparse frames, bandwidth follows scene
+            activity, decisions bit-identical to dense; needs blocking
+            backpressure)
             overload policy: blocking by default, --drop refuses new
             frames on a full link, --shed evicts the oldest queued frame
             instead (exact per-camera/per-shape shed accounting)
@@ -95,14 +100,17 @@ commands (one per paper table/figure):
             --simd <auto|off|scalar|sse2|avx2|neon> forces the kernel
             dispatch tier (default: runtime detection, overridable by
             the P2M_SIMD env var; every tier is bit-identical)
-            --scenario <uniform|mixed-res|churn|crash-storm|swarm|list>
-            runs a deterministic scripted fleet instead (heterogeneous
-            cameras, hot-add/remove/crash/rate-shift lifecycle events;
-            swarm = 10k synthetic low-res cameras on the fixed pool,
-            --cameras N rescales it; add --check-digest to run it twice
-            and verify the stats digest is reproducible, --seed S to
-            reseed the whole script; --backend/--workers/--pool apply
-            here too, pjrt excluded)
+            --scenario <uniform|mixed-res|churn|crash-storm|swarm|
+            static-scene|list> runs a deterministic scripted fleet
+            instead (heterogeneous cameras, hot-add/remove/crash/
+            rate-shift lifecycle events; swarm = 10k synthetic low-res
+            cameras on the fixed pool, --cameras N rescales it;
+            static-scene = frozen event-wire cameras whose wire bytes
+            collapse to headers after the keyframe; add --check-digest
+            to run it twice and verify the stats digest is
+            reproducible, --seed S to reseed the whole script; --mode
+            overrides every script's wire format;
+            --backend/--workers/--pool apply here too, pjrt excluded)
             --serve <addr> (scenario runs only) starts the operability
             plane: GET /metrics (Prometheus text) + /healthz, POST
             /admin/camera, DELETE /admin/camera/<id>, POST
@@ -610,6 +618,25 @@ fn parse_backend(rest: &[&str], default: BackendSel) -> anyhow::Result<BackendSe
     }
 }
 
+/// `--mode <dense|quantized|event>`: the explicit wire-format knob
+/// (None when the flag is absent, so callers can apply their own
+/// default or the legacy `--quantized` alias).
+fn parse_mode(rest: &[&str]) -> anyhow::Result<Option<p2m::coordinator::WireFormat>> {
+    use p2m::coordinator::WireFormat;
+    let Some(i) = rest.iter().position(|&a| a == "--mode") else {
+        return Ok(None);
+    };
+    match rest.get(i + 1).copied() {
+        Some("dense") => Ok(Some(WireFormat::Dense)),
+        Some("quantized") | Some("quant") => Ok(Some(WireFormat::Quantized)),
+        Some("event") => Ok(Some(WireFormat::Event)),
+        other => anyhow::bail!(
+            "--mode wants dense|quantized|event, got '{}'",
+            other.unwrap_or("<missing>")
+        ),
+    }
+}
+
 fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
         default_pool_workers, p2m_fleet_sensors, run_fleet, run_fleet_pooled,
@@ -658,11 +685,17 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     if drop && shed {
         anyhow::bail!("--drop and --shed are mutually exclusive overload policies");
     }
-    let wire = if rest.contains(&"--quantized") {
-        WireFormat::Quantized
-    } else {
-        WireFormat::Dense
+    let wire = match parse_mode(rest)? {
+        Some(wire) => wire,
+        None if rest.contains(&"--quantized") => WireFormat::Quantized,
+        None => WireFormat::Dense,
     };
+    if wire == WireFormat::Event && (drop || shed) {
+        anyhow::bail!(
+            "--mode event needs blocking backpressure: dropping or shedding \
+             frames of a delta-coded stream would desynchronise the consumer"
+        );
+    }
 
     let mk_cfg = |n_cameras: usize, base_seed: u64| FleetConfig {
         n_cameras,
@@ -825,6 +858,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         match wire {
             WireFormat::Dense => "dense f32",
             WireFormat::Quantized => "quantized",
+            WireFormat::Event => "event (sparse delta)",
         },
         pool.unwrap_or_else(default_pool_workers)
     );
@@ -852,6 +886,23 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
             );
         }
     }
+    if wire == WireFormat::Event {
+        // The sparse-wire contract: a count header plus one bit-packed
+        // (index, code) pair per ladder position that moved past the
+        // delta threshold — the Eq.-2-style model of Neuromorphic-P2M.
+        if let Some(plan) = fleet_sensors.first().and_then(SensorCompute::plan) {
+            let (ho, wo, c) = plan.cfg.out_dims();
+            let len = ho * wo * c;
+            let index_bits = compression::event_index_bits(len);
+            println!(
+                "event wire: 32-bit header + n_events x ({index_bits} index + {} code) \
+                 bits/frame; keyframe {} bytes, static frame 4 bytes, dense f32 {} bytes",
+                plan.quant.bits,
+                compression::event_bits_per_frame(len, len, plan.quant.bits).div_ceil(8),
+                len * 4,
+            );
+        }
+    }
     let t_fleet = std::time::Instant::now();
     let stats = run_with(bundle.as_mut(), fleet_sensors, &mk_cfg(cameras, seed), &metrics)?;
     let fleet_s = t_fleet.elapsed().as_secs_f64();
@@ -865,6 +916,19 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         println!(
             "measured quantized payload vs Eq. 2 model ({per_frame} B/frame): {}",
             if ok { "exact match" } else { "MISMATCH (wire-format bug)" }
+        );
+    }
+    if wire == WireFormat::Event {
+        let ev = &stats.events;
+        println!(
+            "event wire: {} bytes over {} event frames ({:.1} events/frame) — \
+             dense-ladder equivalent {} bytes, sparsity {:.1}%, {} bytes saved",
+            ev.wire_bytes,
+            ev.event_frames,
+            ev.events_per_frame(),
+            ev.dense_equiv_bytes,
+            100.0 * ev.sparsity(),
+            ev.bytes_saved(),
         );
     }
 
@@ -971,6 +1035,13 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         })?,
     };
     scenario.pool_workers = pool;
+    // `--mode` rewires every script (static-scene is already event-wire,
+    // so there it just pins what the script declares).
+    if let Some(wire) = parse_mode(rest)? {
+        for script in &mut scenario.cameras {
+            script.spec.wire = wire;
+        }
+    }
 
     // The operability plane (serve mode): bind before the run so the
     // resolved address (real port for `:0` binds) prints first — the CI
@@ -1062,6 +1133,7 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
                     match spec.wire {
                         WireFormat::Dense => "f32",
                         WireFormat::Quantized => "quant",
+                        WireFormat::Event => "event",
                     }
                 ),
                 cam.incarnations.to_string(),
@@ -1135,6 +1207,21 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         report.plans_compiled,
         report.peak_active_cameras,
     );
+    if report.events.event_frames > 0 {
+        // The headline the CI event smoke parses: measured sparse wire
+        // bytes vs what the dense code ladder would have shipped.
+        let ev = &report.events;
+        println!(
+            "event wire: {} bytes over {} event frames ({:.1} events/frame) — \
+             dense-ladder equivalent {} bytes, sparsity {:.1}%, {} bytes saved",
+            ev.wire_bytes,
+            ev.event_frames,
+            ev.events_per_frame(),
+            ev.dense_equiv_bytes,
+            100.0 * ev.sparsity(),
+            ev.bytes_saved(),
+        );
+    }
     println!("stats digest: {:016x}", report.digest());
 
     if check_digest {

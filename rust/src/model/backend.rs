@@ -343,6 +343,9 @@ impl NativeBackend {
                     self.codes[i] = code as i32;
                 });
             }
+            WirePayload::Events(_) => {
+                panic!("event payloads must be reassembled onto the dense ladder before classifier ingest")
+            }
         }
     }
 

@@ -340,6 +340,379 @@ impl QuantizedFrame {
     }
 }
 
+/// Header bits of the sparse event wire: a little-endian `u32` event
+/// count precedes the bit-packed stream.  (The modelled counterpart
+/// lives in [`crate::compression::EVENT_HEADER_BITS`].)
+const HEADER_BITS: u64 = 32;
+
+/// Bits needed to address one element of a `len`-element code ladder
+/// (minimum 1, so a 1-element ladder still has an addressable stream).
+fn index_bits_for(len: usize) -> u32 {
+    debug_assert!(len > 0, "event frames need a non-empty ladder");
+    (usize::BITS - (len - 1).leading_zeros()).max(1)
+}
+
+/// Write `nbits` of `value`, LSB-first, at bit cursor `pos`.
+fn write_bits(out: &mut [u8], pos: &mut u64, value: u32, nbits: u32) {
+    for b in 0..nbits {
+        if (value >> b) & 1 != 0 {
+            out[(*pos / 8) as usize] |= 1 << (*pos % 8);
+        }
+        *pos += 1;
+    }
+}
+
+/// Read `nbits` LSB-first from bit cursor `pos`.
+fn read_bits(data: &[u8], pos: &mut u64, nbits: u32) -> u32 {
+    let mut v = 0u32;
+    for b in 0..nbits {
+        v |= ((data[(*pos / 8) as usize] >> (*pos % 8)) as u32 & 1) << b;
+        *pos += 1;
+    }
+    v
+}
+
+/// One frame of the sparse event wire (Neuromorphic-P2M): only the
+/// ladder positions whose quantized code moved past the sender's delta
+/// threshold travel, as bit-packed `(index, code)` pairs behind a
+/// little-endian `u32` event count.
+///
+/// `indices` are strictly increasing flat offsets into the row-major
+/// (h, w, c) code ladder; `codes` are the new values at those offsets
+/// (stored `u16`: wire codes are at most 16 bits).  A frame whose event
+/// count equals the ladder length is a *keyframe* — it overwrites the
+/// receiver's entire ladder, which is how a fresh or restarted sender
+/// re-synchronises a receiver regardless of prior state.
+///
+/// Wire cost (the measured side of the
+/// [`crate::compression::event_bits_per_frame`] model):
+/// `32 + n_events * (index_bits + spec.bits)` bits, where `index_bits`
+/// is the minimal width addressing the ladder.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventFrame {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// dequantisation parameters of the underlying code ladder
+    pub spec: QuantSpec,
+    /// strictly increasing flat ladder offsets, one per event
+    pub indices: Vec<u32>,
+    /// new code at each offset (paired with `indices`)
+    pub codes: Vec<u16>,
+}
+
+impl EventFrame {
+    /// Zero-event frame over an (h, w, c) ladder.
+    pub fn empty(h: usize, w: usize, c: usize, spec: QuantSpec) -> Self {
+        assert!(h * w * c > 0, "event frames need a non-empty ladder");
+        EventFrame { h, w, c, spec, indices: Vec::new(), codes: Vec::new() }
+    }
+
+    /// [`EventFrame::empty`] with both buffers taken from a
+    /// [`FrameArena`] at full-keyframe capacity, so pushing up to
+    /// `ladder_len` events never reallocates; pair with
+    /// [`EventFrame::recycle`].
+    pub fn empty_in(h: usize, w: usize, c: usize, spec: QuantSpec, arena: &FrameArena) -> Self {
+        let len = h * w * c;
+        assert!(len > 0, "event frames need a non-empty ladder");
+        let mut indices = arena.take_u32(len);
+        indices.clear();
+        let mut codes = arena.take_u16(len);
+        codes.clear();
+        EventFrame { h, w, c, spec, indices, codes }
+    }
+
+    /// Return both buffers to `arena` for reuse.
+    pub fn recycle(self, arena: &FrameArena) {
+        arena.put_u32(self.indices);
+        arena.put_u16(self.codes);
+    }
+
+    /// Append one event; indices must arrive in strictly increasing
+    /// order (the order [`EventEncoder`] naturally produces).
+    pub fn push(&mut self, index: u32, code: u16) {
+        debug_assert!((index as usize) < self.ladder_len(), "event index out of range");
+        debug_assert!(
+            self.indices.last().map_or(true, |&p| p < index),
+            "event indices must be pushed in increasing order"
+        );
+        debug_assert!(code as u32 <= self.spec.code_max(), "event code exceeds code_max");
+        self.indices.push(index);
+        self.codes.push(code);
+    }
+
+    /// Elements of the underlying dense code ladder (h * w * c).
+    pub fn ladder_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Events carried by this frame.
+    pub fn n_events(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True when every ladder position is carried (full resync).
+    pub fn is_keyframe(&self) -> bool {
+        self.n_events() == self.ladder_len()
+    }
+
+    /// Index field width on the wire for this ladder.
+    pub fn index_bits(&self) -> u32 {
+        index_bits_for(self.ladder_len())
+    }
+
+    /// Bits this frame occupies on the wire — the *measured*
+    /// counterpart of [`crate::compression::event_bits_per_frame`].
+    pub fn wire_bits(&self) -> u64 {
+        HEADER_BITS + self.n_events() as u64 * (self.index_bits() + self.spec.bits) as u64
+    }
+
+    /// Bytes on the wire (bit-packed payload, rounded up per frame).
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bits().div_ceil(8)
+    }
+
+    /// Bits the *dense* quantized wire would have spent on this frame —
+    /// the denominator of the sparsity accounting.
+    pub fn dense_wire_bits(&self) -> u64 {
+        self.ladder_len() as u64 * self.spec.bits as u64
+    }
+
+    /// Overwrite `ladder` at every event position (receiver step).
+    pub fn apply_to(&self, ladder: &mut [u16]) {
+        assert_eq!(ladder.len(), self.ladder_len(), "apply_to ladder length mismatch");
+        for (&idx, &code) in self.indices.iter().zip(&self.codes) {
+            ladder[idx as usize] = code;
+        }
+    }
+
+    /// Serialise to the actual wire payload, `wire_bytes()` long: the
+    /// LE `u32` event count, then LSB-first bit-packed `(index, code)`
+    /// pairs, zero-padded to the byte boundary.
+    pub fn pack_wire(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.pack_wire_into(&mut out);
+        out
+    }
+
+    /// [`EventFrame::pack_wire`] into a caller-owned buffer: `out` is
+    /// resized to `wire_bytes()` and overwritten.
+    pub fn pack_wire_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.resize(self.wire_bytes() as usize, 0);
+        out[..4].copy_from_slice(&(self.n_events() as u32).to_le_bytes());
+        let idx_bits = self.index_bits();
+        let mut pos = HEADER_BITS;
+        for (&idx, &code) in self.indices.iter().zip(&self.codes) {
+            write_bits(out, &mut pos, idx, idx_bits);
+            write_bits(out, &mut pos, code as u32, self.spec.bits);
+        }
+    }
+
+    /// Inverse of [`EventFrame::pack_wire`]: rebuild a frame from a
+    /// packed payload and its shape/spec.  Strict: the payload length
+    /// must match the event count exactly, indices must be strictly
+    /// increasing and in range, codes must fit the ladder, and padding
+    /// bits must be zero — a malformed payload is rejected, never
+    /// silently mis-decoded.
+    pub fn unpack_wire(
+        packed: &[u8],
+        h: usize,
+        w: usize,
+        c: usize,
+        spec: QuantSpec,
+    ) -> Result<Self, String> {
+        let len = h * w * c;
+        if len == 0 {
+            return Err("event frames need a non-empty ladder".to_string());
+        }
+        if packed.len() < 4 {
+            return Err(format!("packed event payload is {} bytes, want >= 4", packed.len()));
+        }
+        let n = u32::from_le_bytes(packed[..4].try_into().unwrap()) as usize;
+        if n > len {
+            return Err(format!("{n} events exceed the {len}-element ladder"));
+        }
+        let idx_bits = index_bits_for(len);
+        let need =
+            (HEADER_BITS + n as u64 * (idx_bits + spec.bits) as u64).div_ceil(8) as usize;
+        if packed.len() != need {
+            return Err(format!("packed event payload is {} bytes, want {need}", packed.len()));
+        }
+        let mut ev = EventFrame {
+            h,
+            w,
+            c,
+            spec,
+            indices: Vec::with_capacity(n),
+            codes: Vec::with_capacity(n),
+        };
+        let mut pos = HEADER_BITS;
+        let mut prev: Option<u32> = None;
+        for _ in 0..n {
+            let idx = read_bits(packed, &mut pos, idx_bits);
+            let code = read_bits(packed, &mut pos, spec.bits);
+            if idx as usize >= len {
+                return Err(format!("event index {idx} out of range (ladder {len})"));
+            }
+            if prev.map_or(false, |p| idx <= p) {
+                return Err("event indices must be strictly increasing".to_string());
+            }
+            if code > spec.code_max() {
+                return Err(format!("event code {code} exceeds code_max {}", spec.code_max()));
+            }
+            prev = Some(idx);
+            ev.indices.push(idx);
+            ev.codes.push(code as u16);
+        }
+        for p in pos..(need as u64 * 8) {
+            if (packed[(p / 8) as usize] >> (p % 8)) & 1 != 0 {
+                return Err("nonzero padding bits in packed event payload".to_string());
+            }
+        }
+        Ok(ev)
+    }
+}
+
+/// Sender half of the event wire: one per camera incarnation.
+///
+/// Keeps the code ladder the receiver currently holds (`reference`)
+/// plus the last raw sensor input actually pushed through the frontend
+/// (`ref_input`, the whole-frame compute-skip key).  [`EventEncoder::
+/// encode`] emits only the codes whose value moved **strictly more
+/// than** `threshold` ladder steps (a delta exactly at the threshold
+/// is suppressed) and advances `reference` only at emitted indices, so
+/// sender and receiver ladders stay in lockstep.  An unprimed encoder
+/// (fresh camera, or one [`EventEncoder::reset`] at a crash/restart
+/// incarnation boundary) emits a full keyframe, which resynchronises
+/// any receiver state.
+///
+/// At `threshold == 0` the reference tracks the true codes exactly, so
+/// the receiver's reconstruction is bit-identical to the dense
+/// quantized stream of the same scene.
+#[derive(Clone, Debug)]
+pub struct EventEncoder {
+    threshold: u16,
+    primed: bool,
+    reference: Vec<u16>,
+    ref_input: Vec<f32>,
+}
+
+impl EventEncoder {
+    /// Encoder emitting deltas strictly greater than `threshold` codes.
+    pub fn new(threshold: u16) -> Self {
+        EventEncoder { threshold, primed: false, reference: Vec::new(), ref_input: Vec::new() }
+    }
+
+    /// The delta threshold in ladder steps.
+    pub fn threshold(&self) -> u16 {
+        self.threshold
+    }
+
+    /// Drop all delta state: the next [`EventEncoder::encode`] emits a
+    /// keyframe.  Call at incarnation boundaries (producer restart).
+    pub fn reset(&mut self) {
+        self.primed = false;
+        self.reference.clear();
+        self.ref_input.clear();
+    }
+
+    /// True when `input` is bit-identical to the previous frame's raw
+    /// input: the frontend's output would be identical too (it is a
+    /// deterministic function of the input), so the caller may skip
+    /// compute entirely and emit [`EventEncoder::encode_unchanged`].
+    pub fn input_unchanged(&self, input: &[f32]) -> bool {
+        self.primed && self.ref_input.as_slice() == input
+    }
+
+    /// The zero-event frame for a bit-identical input (reference and
+    /// receiver ladders are both already current).
+    pub fn encode_unchanged(
+        &self,
+        h: usize,
+        w: usize,
+        c: usize,
+        spec: QuantSpec,
+        arena: &FrameArena,
+    ) -> EventFrame {
+        debug_assert!(self.primed && self.reference.len() == h * w * c);
+        EventFrame::empty_in(h, w, c, spec, arena)
+    }
+
+    /// Delta-encode `q` against the reference ladder, noting `input` as
+    /// the now-current raw frame.  Unprimed encoders emit a keyframe.
+    pub fn encode(&mut self, q: &QuantizedFrame, input: &[f32], arena: &FrameArena) -> EventFrame {
+        let len = q.len();
+        let mut ev = EventFrame::empty_in(q.h, q.w, q.c, q.spec, arena);
+        if self.primed {
+            debug_assert_eq!(self.reference.len(), len, "ladder geometry changed mid-stream");
+            for i in 0..len {
+                let code = q.code(i) as u16;
+                if code.abs_diff(self.reference[i]) > self.threshold {
+                    self.reference[i] = code;
+                    ev.push(i as u32, code);
+                }
+            }
+        } else {
+            self.reference.clear();
+            self.reference.resize(len, 0);
+            for i in 0..len {
+                let code = q.code(i) as u16;
+                self.reference[i] = code;
+                ev.push(i as u32, code);
+            }
+            self.primed = true;
+        }
+        self.ref_input.clear();
+        self.ref_input.extend_from_slice(input);
+        ev
+    }
+}
+
+/// Receiver half of the event wire: per-camera dense ladders rebuilt
+/// from event frames at classifier ingest.  Single-threaded by design —
+/// reassembly happens on the consumer before batches fan out to
+/// backend workers, so worker count can never reorder a ladder.
+#[derive(Debug, Default)]
+pub struct EventDecoder {
+    ladders: std::collections::BTreeMap<u64, Vec<u16>>,
+}
+
+impl EventDecoder {
+    pub fn new() -> Self {
+        EventDecoder::default()
+    }
+
+    /// Apply `ev` to `camera`'s ladder and materialise the resulting
+    /// dense [`QuantizedFrame`] (arena-backed).  The first frame a
+    /// sender emits is a keyframe by protocol, so a fresh ladder is
+    /// fully overwritten before it is ever read.
+    pub fn reassemble(&mut self, camera: u64, ev: &EventFrame, arena: &FrameArena) -> QuantizedFrame {
+        let len = ev.ladder_len();
+        let ladder = self.ladders.entry(camera).or_default();
+        if ladder.len() != len {
+            ladder.clear();
+            ladder.resize(len, 0);
+        }
+        ev.apply_to(ladder);
+        let mut q = QuantizedFrame::zeros_in(ev.h, ev.w, ev.c, ev.spec, arena);
+        match &mut q.data {
+            QuantData::U8(v) => {
+                for (o, &code) in v.iter_mut().zip(ladder.iter()) {
+                    *o = code as u8;
+                }
+            }
+            QuantData::U16(v) => v.copy_from_slice(ladder),
+        }
+        q
+    }
+
+    /// Drop a camera's ladder (hot-remove; a re-added camera keyframes).
+    pub fn forget(&mut self, camera: u64) {
+        self.ladders.remove(&camera);
+    }
+}
+
 /// A captured frame with provenance for the pipeline.
 #[derive(Clone, Debug)]
 pub struct Frame {
@@ -521,5 +894,253 @@ mod tests {
             v.copy_from_slice(&[255, 1, 100]);
         }
         assert_eq!(q.code_sum(), 356);
+    }
+
+    #[test]
+    fn event_wire_round_trip_exhaustive_over_bit_widths() {
+        // The sparse mirror of wire_round_trip_exhaustive_over_bit_
+        // widths: every legal code width (1..=16), ladders that force
+        // ragged bit tails, and the three density extremes — zero-event
+        // frames, fully dense keyframes, and random sparse subsets.
+        // pack_wire then unpack_wire must be the identity, the packed
+        // length must pin wire_bits exactly, and malformed payloads
+        // (wrong length either way, nonzero padding) must be rejected.
+        use crate::prop_assert;
+        use crate::util::prop::Prop;
+
+        Prop::new("event pack_wire/unpack_wire round trip").cases(64).run(|rng| {
+            for bits in 1u32..=16 {
+                let spec = QuantSpec::unipolar(rng.range(0.5, 100.0), bits);
+                let (h, w, c) = match rng.usize(0, 3) {
+                    0 => (1, 1, 1),
+                    1 => (rng.usize(1, 4), rng.usize(1, 4), rng.usize(1, 5)),
+                    _ => (rng.usize(1, 3), rng.usize(1, 6), 3),
+                };
+                let len = h * w * c;
+                let mut ev = EventFrame::empty(h, w, c, spec);
+                // 0 = no events, 1 = every ladder position (keyframe),
+                // 2 = an independent coin per position (ragged count).
+                let density = rng.usize(0, 3);
+                for i in 0..len {
+                    let keep = match density {
+                        0 => false,
+                        1 => true,
+                        _ => rng.bool(0.4),
+                    };
+                    if keep {
+                        ev.push(i as u32, rng.usize(0, spec.code_max() as usize + 1) as u16);
+                    }
+                }
+                prop_assert!(ev.is_keyframe() == (ev.n_events() == len));
+
+                let idx_bits = ev.index_bits() as u64;
+                prop_assert!(
+                    ev.wire_bits()
+                        == 32 + ev.n_events() as u64 * (idx_bits + bits as u64),
+                    "bits={bits} ({h},{w},{c}): wire_bits {}",
+                    ev.wire_bits()
+                );
+                let packed = ev.pack_wire();
+                prop_assert!(
+                    packed.len() as u64 == ev.wire_bits().div_ceil(8),
+                    "bits={bits} ({h},{w},{c}): packed {} B, wire_bits {}",
+                    packed.len(),
+                    ev.wire_bits()
+                );
+                let back = EventFrame::unpack_wire(&packed, h, w, c, spec)
+                    .map_err(|e| format!("bits={bits}: {e}"))?;
+                prop_assert!(back == ev, "bits={bits} ({h},{w},{c}): round trip changed events");
+
+                // Wrong length in either direction must be rejected.
+                prop_assert!(EventFrame::unpack_wire(
+                    &packed[..packed.len() - 1],
+                    h,
+                    w,
+                    c,
+                    spec
+                )
+                .is_err());
+                let mut longer = packed.clone();
+                longer.push(0);
+                prop_assert!(EventFrame::unpack_wire(&longer, h, w, c, spec).is_err());
+
+                // Nonzero padding (when the bit stream has a ragged
+                // tail) must be rejected, never silently accepted.
+                let used = ev.wire_bits();
+                if used % 8 != 0 {
+                    let mut dirty = packed.clone();
+                    let last = dirty.len() - 1;
+                    dirty[last] |= 1 << 7;
+                    prop_assert!(
+                        EventFrame::unpack_wire(&dirty, h, w, c, spec).is_err(),
+                        "bits={bits}: dirty padding accepted"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn event_unpack_rejects_out_of_range_and_unordered_indices() {
+        let spec = QuantSpec::unipolar(1.0, 8);
+        // Ladder of 4 -> 2 index bits.  Hand-pack two events.
+        let pack = |pairs: &[(u32, u16)]| {
+            let mut ev = EventFrame::empty(1, 2, 2, spec);
+            for &(i, c) in pairs {
+                ev.indices.push(i); // bypass push() ordering asserts
+                ev.codes.push(c);
+            }
+            ev.pack_wire()
+        };
+        assert!(EventFrame::unpack_wire(&pack(&[(0, 1), (3, 2)]), 1, 2, 2, spec).is_ok());
+        // Equal and decreasing indices are both rejected.
+        assert!(EventFrame::unpack_wire(&pack(&[(2, 1), (2, 2)]), 1, 2, 2, spec).is_err());
+        assert!(EventFrame::unpack_wire(&pack(&[(3, 1), (1, 2)]), 1, 2, 2, spec).is_err());
+        // A count that exceeds the ladder is rejected up front.
+        let mut bogus = pack(&[]);
+        bogus[0] = 5;
+        assert!(EventFrame::unpack_wire(&bogus, 1, 2, 2, spec).is_err());
+    }
+
+    #[test]
+    fn event_encoder_threshold_and_saturation_edges() {
+        // Thresholding is strict (> threshold): a delta exactly at the
+        // threshold is suppressed, one past it is emitted; saturated
+        // codes at both ladder bounds delta like any other value.
+        let arena = FrameArena::new();
+        let spec = QuantSpec::unipolar(1.0, 8);
+        let frame = |codes: &[u8]| {
+            let mut q = QuantizedFrame::zeros(1, 1, codes.len(), spec);
+            if let QuantData::U8(v) = &mut q.data {
+                v.copy_from_slice(codes);
+            }
+            q
+        };
+        let mut enc = EventEncoder::new(3);
+        assert_eq!(enc.threshold(), 3);
+        let input = [0.0f32; 4];
+
+        // Unprimed: full keyframe, even for all-zero codes.
+        let kf = enc.encode(&frame(&[100, 0, 255, 50]), &input, &arena);
+        assert!(kf.is_keyframe());
+        assert_eq!(kf.indices, vec![0, 1, 2, 3]);
+        assert_eq!(kf.codes, vec![100, 0, 255, 50]);
+
+        // Deltas of exactly 3 (both signs) are suppressed; 4 is
+        // emitted; saturation bounds 0 and 255 participate normally.
+        let ev = enc.encode(&frame(&[103, 3, 252, 46]), &input, &arena);
+        assert_eq!(ev.n_events(), 1, "only the delta of 4 fires: {:?}", ev.indices);
+        assert_eq!((ev.indices[0], ev.codes[0]), (3, 46));
+
+        // Suppressed positions did NOT advance the reference: another
+        // +3 step is a delta of 6 from the still-held reference.
+        let ev = enc.encode(&frame(&[106, 6, 249, 46]), &input, &arena);
+        assert_eq!(ev.indices, vec![0, 1, 2]);
+        assert_eq!(ev.codes, vec![106, 6, 249]);
+
+        // Saturation at the ladder bounds: a swing to 0 / code_max.
+        let ev = enc.encode(&frame(&[0, 255, 249, 46]), &input, &arena);
+        assert_eq!(ev.indices, vec![0, 1]);
+        assert_eq!(ev.codes, vec![0, 255]);
+    }
+
+    #[test]
+    fn event_encoder_decoder_stay_in_lockstep() {
+        // Under any threshold the decoder's ladder equals the encoder's
+        // reference after every frame, and at threshold 0 both equal
+        // the true codes — the dense-parity foundation.  A mid-stream
+        // encoder reset (incarnation boundary) keyframes and resyncs.
+        use crate::prop_assert;
+        use crate::util::prop::Prop;
+
+        Prop::new("event encoder/decoder lockstep").cases(32).run(|rng| {
+            let arena = FrameArena::new();
+            let bits = [4u32, 8, 12][rng.usize(0, 3)];
+            let spec = QuantSpec::unipolar(2.0, bits);
+            let (h, w, c) = (rng.usize(1, 4), rng.usize(1, 4), rng.usize(1, 4));
+            let len = h * w * c;
+            let threshold = rng.usize(0, 4) as u16;
+            let mut enc = EventEncoder::new(threshold);
+            let mut dec = EventDecoder::new();
+            let mut truth = vec![0u16; len];
+            for step in 0..12 {
+                if step == 7 {
+                    enc.reset(); // crash/restart: next frame must keyframe
+                }
+                for t in truth.iter_mut() {
+                    // Random walk with occasional large jumps.
+                    let jump = if rng.bool(0.2) { spec.code_max() / 2 } else { 2 };
+                    let delta = rng.usize(0, 2 * jump as usize + 1) as i64 - jump as i64;
+                    *t = (*t as i64 + delta).clamp(0, spec.code_max() as i64) as u16;
+                }
+                let mut q = QuantizedFrame::zeros(h, w, c, spec);
+                for i in 0..len {
+                    match &mut q.data {
+                        QuantData::U8(v) => v[i] = truth[i] as u8,
+                        QuantData::U16(v) => v[i] = truth[i],
+                    }
+                }
+                let input = [step as f32]; // varies per step: no skip path
+                let ev = enc.encode(&q, &input, &arena);
+                if step == 0 || step == 7 {
+                    prop_assert!(ev.is_keyframe(), "fresh encoder must keyframe");
+                }
+                let rebuilt = dec.reassemble(9, &ev, &arena);
+                for i in 0..len {
+                    let got = rebuilt.code(i) as i64;
+                    prop_assert!(
+                        (got - truth[i] as i64).unsigned_abs() <= threshold as u64,
+                        "step {step} idx {i}: rebuilt {got} vs truth {}",
+                        truth[i]
+                    );
+                    if threshold == 0 {
+                        prop_assert!(got == truth[i] as i64);
+                    }
+                }
+                ev.recycle(&arena);
+                rebuilt.recycle(&arena);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn event_encoder_skips_compute_on_bit_identical_input() {
+        let arena = FrameArena::new();
+        let spec = QuantSpec::unipolar(1.0, 8);
+        let mut q = QuantizedFrame::zeros(1, 1, 4, spec);
+        if let QuantData::U8(v) = &mut q.data {
+            v.copy_from_slice(&[1, 2, 3, 4]);
+        }
+        let mut enc = EventEncoder::new(0);
+        let input = [0.5f32, 0.25, 0.125, 1.0];
+        assert!(!enc.input_unchanged(&input), "unprimed encoders never skip");
+        enc.encode(&q, &input, &arena);
+        assert!(enc.input_unchanged(&input));
+        assert!(!enc.input_unchanged(&[0.5, 0.25, 0.125, 0.5]));
+        let ev = enc.encode_unchanged(1, 1, 4, spec, &arena);
+        assert_eq!(ev.n_events(), 0);
+        assert_eq!(ev.wire_bits(), 32, "a skipped frame costs only the count header");
+        enc.reset();
+        assert!(!enc.input_unchanged(&input), "reset drops the skip key");
+    }
+
+    #[test]
+    fn event_frame_arena_round_trip_and_accounting() {
+        let arena = FrameArena::new();
+        let spec = QuantSpec::unipolar(1.0, 8);
+        let mut ev = EventFrame::empty_in(4, 4, 8, spec, &arena);
+        for i in 0..ev.ladder_len() {
+            ev.push(i as u32, (i % 256) as u16); // full keyframe: no realloc
+        }
+        // 128-element ladder -> 7 index bits; keyframe = 32 + 128*15.
+        assert_eq!(ev.index_bits(), 7);
+        assert_eq!(ev.wire_bits(), 32 + 128 * 15);
+        assert_eq!(ev.dense_wire_bits(), 128 * 8);
+        ev.recycle(&arena);
+        let again = EventFrame::empty_in(4, 4, 8, spec, &arena);
+        assert!(arena.hits() >= 2, "recycled event buffers must be pool hits");
+        assert_eq!(again.n_events(), 0);
     }
 }

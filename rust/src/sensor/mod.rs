@@ -7,7 +7,9 @@ pub mod photodiode;
 pub mod scene;
 
 pub use bayer::{bayer_overhead_ratio, mosaic, tile_to_rgb, GreenPolicy};
-pub use frame::{Frame, Image, QuantData, QuantSpec, QuantizedFrame};
+pub use frame::{
+    EventDecoder, EventEncoder, EventFrame, Frame, Image, QuantData, QuantSpec, QuantizedFrame,
+};
 pub use photodiode::{digitise_native, expose, expose_into};
 pub use scene::{SceneGen, Split};
 
@@ -22,13 +24,36 @@ pub struct Camera {
     split: Split,
     rng: Rng,
     next_id: u64,
+    frozen: bool,
 }
 
 impl Camera {
     pub fn new(cfg: SensorConfig, seed: u64, split: Split) -> Self {
         assert_eq!(cfg.rows, cfg.cols, "Camera assumes square sensors");
         let scenes = SceneGen::new(cfg.rows, seed);
-        Camera { cfg, scenes, split, rng: Rng::stream(seed, 0xCA_11E7A), next_id: 0 }
+        Camera {
+            cfg,
+            scenes,
+            split,
+            rng: Rng::stream(seed, 0xCA_11E7A),
+            next_id: 0,
+            frozen: false,
+        }
+    }
+
+    /// Freeze the camera on its first scene: every subsequent capture
+    /// replays frame 0 (label 0) through a *clone* of the pristine
+    /// exposure RNG, so all frames are bit-identical — the static-scene
+    /// workload that lets the event wire collapse to its header.  Frame
+    /// ids still advance.
+    pub fn set_frozen(&mut self, frozen: bool) {
+        self.frozen = frozen;
+    }
+
+    /// True when this camera replays a static scene (see
+    /// [`Camera::set_frozen`]).
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
     }
 
     /// Capture the next frame: synthesise a scene (alternating labels),
@@ -49,6 +74,15 @@ impl Camera {
     pub fn capture_into(&mut self, radiance: &mut Image, out: &mut Image) -> (u64, u8) {
         let id = self.next_id;
         self.next_id += 1;
+        if self.frozen {
+            // Static scene: scene 0 every frame, exposed through a
+            // clone of the never-advanced exposure RNG — bit-identical
+            // captures, so the delta stage sees zero change.
+            self.scenes.image_into(0, 0, self.split, radiance);
+            let mut rng = self.rng.clone();
+            expose_into(&self.cfg, radiance, &mut rng, out);
+            return (id, 0);
+        }
         let label = (id % 2) as u8;
         self.scenes.image_into(label, id, self.split, radiance);
         expose_into(&self.cfg, radiance, &mut self.rng, out);
@@ -80,6 +114,19 @@ mod tests {
         let mut cam = Camera::new(SensorConfig::default().with_resolution(20), 3, Split::Val);
         let labels: Vec<u8> = (0..6).map(|_| cam.capture().label).collect();
         assert_eq!(labels, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn frozen_camera_replays_bit_identical_frames() {
+        let mut cam = Camera::new(SensorConfig::default().with_resolution(20), 3, Split::Test);
+        cam.set_frozen(true);
+        assert!(cam.is_frozen());
+        let a = cam.capture();
+        let b = cam.capture();
+        assert_eq!(a.id, 0);
+        assert_eq!(b.id, 1, "ids still advance under freeze");
+        assert_eq!((a.label, b.label), (0, 0));
+        assert_eq!(a.image, b.image, "frozen captures must be bit-identical");
     }
 
     #[test]

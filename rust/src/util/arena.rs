@@ -8,7 +8,8 @@
 //!
 //! # Design
 //!
-//! One typed sub-pool per element type (`u8`, `u16`, `f32`).  Each pool
+//! One typed sub-pool per element type (`u8`, `u16`, `u32`, `f32`).
+//! Each pool
 //! is a fixed grid of `AtomicPtr` slots: [`NCLASSES`] power-of-two size
 //! classes (64 … 2²⁶ elements) × [`SLOTS`] slots.  `take` swaps a slot
 //! to null (pop), `put` CAS-es null → buffer (push); there are no next
@@ -151,6 +152,7 @@ struct ArenaStats {
 pub struct FrameArena {
     u8_pool: TypedPool<u8>,
     u16_pool: TypedPool<u16>,
+    u32_pool: TypedPool<u32>,
     f32_pool: TypedPool<f32>,
     stats: ArenaStats,
 }
@@ -166,6 +168,7 @@ impl FrameArena {
         FrameArena {
             u8_pool: TypedPool::new(),
             u16_pool: TypedPool::new(),
+            u32_pool: TypedPool::new(),
             f32_pool: TypedPool::new(),
             stats: ArenaStats::default(),
         }
@@ -181,6 +184,11 @@ impl FrameArena {
         self.u16_pool.take(len, &self.stats)
     }
 
+    /// A zero-filled `Vec<u32>` of length `len` (event-stream indices).
+    pub fn take_u32(&self, len: usize) -> Vec<u32> {
+        self.u32_pool.take(len, &self.stats)
+    }
+
     /// A zero-filled `Vec<f32>` of length `len`.
     pub fn take_f32(&self, len: usize) -> Vec<f32> {
         self.f32_pool.take(len, &self.stats)
@@ -194,6 +202,10 @@ impl FrameArena {
 
     pub fn put_u16(&self, v: Vec<u16>) {
         self.u16_pool.put(v);
+    }
+
+    pub fn put_u32(&self, v: Vec<u32>) {
+        self.u32_pool.put(v);
     }
 
     pub fn put_f32(&self, v: Vec<f32>) {
@@ -281,6 +293,18 @@ mod tests {
         let big = arena.take_u16((1 << MAX_SHIFT) + 1);
         assert_eq!(big.len(), (1 << MAX_SHIFT) + 1);
         arena.put_u16(big);
+    }
+
+    #[test]
+    fn u32_pool_recycles_like_the_others() {
+        let arena = FrameArena::new();
+        let mut v = arena.take_u32(100);
+        assert!(v.iter().all(|&x| x == 0));
+        v.iter_mut().for_each(|x| *x = 9);
+        arena.put_u32(v);
+        let v2 = arena.take_u32(70);
+        assert_eq!(arena.hits(), 1);
+        assert!(v2.iter().all(|&x| x == 0), "recycled buffer is zeroed");
     }
 
     #[test]

@@ -179,20 +179,23 @@ fn bench_rows(doc: &Json) -> Result<Vec<(String, f64, String)>, String> {
         .collect()
 }
 
-/// One gated throughput row of a baseline-vs-fresh comparison (see
-/// [`gate_rows`]): everything a human-readable verdict or a CI summary
-/// table needs.
+/// One gated row of a baseline-vs-fresh comparison (see [`gate_rows`]):
+/// everything a human-readable verdict or a CI summary table needs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct GateRow {
     /// row name (shared by baseline and fresh documents)
     pub name: String,
-    /// committed baseline throughput \[frames/s\]
+    /// the baseline row's unit: `"frames_per_s"` (measured throughput)
+    /// or `"ratio_min"` (a hand-committed absolute floor)
+    pub unit: String,
+    /// committed baseline value
     pub baseline: f64,
-    /// fresh throughput, `None` when the row vanished from the fresh
+    /// fresh value, `None` when the row vanished from the fresh
     /// results (itself a gate failure — a silently dropped row would
     /// blind the gate)
     pub current: Option<f64>,
-    /// the gate floor `baseline * (1 - tol)`
+    /// the gate floor: `baseline * (1 - tol)` for throughput rows, the
+    /// baseline value itself for `ratio_min` floors
     pub floor: f64,
     /// true when this row fails the gate (regressed below the floor, or
     /// missing from the fresh results)
@@ -201,11 +204,15 @@ pub struct GateRow {
 
 /// The CI bench-regression gate, row by row: compare a fresh
 /// `BENCH_<group>.json` against the committed baseline over every
-/// **throughput** row (`unit == "frames_per_s"`) with tolerance `tol`
-/// (fraction of the baseline, e.g. 0.25 = fail below 75%).  Rows
-/// *added* since the baseline are not reported — they become gated once
-/// the refreshed file is committed.  Errors when either document does
-/// not parse as `p2m-bench-v1`.
+/// **throughput** row (`unit == "frames_per_s"`, gated at
+/// `baseline * (1 - tol)`, e.g. tol 0.25 = fail below 75%) and every
+/// **floor** row (`unit == "ratio_min"`: a hand-committed absolute
+/// minimum for a fresh `"ratio"` row of the same name — tolerance does
+/// not soften it, the committed value IS the floor).  Rows *added*
+/// since the baseline are not gated — surface them with
+/// [`fresh_only_rows`] so they are at least logged, and commit the
+/// refreshed file (or a hand-set floor) to gate them.  Errors when
+/// either document does not parse as `p2m-bench-v1`.
 pub fn gate_rows(
     baseline_json: &str,
     fresh_json: &str,
@@ -217,17 +224,41 @@ pub fn gate_rows(
     let fresh_rows = bench_rows(&fresh)?;
     Ok(base_rows
         .iter()
-        .filter(|row| row.2 == "frames_per_s")
+        .filter(|row| row.2 == "frames_per_s" || row.2 == "ratio_min")
         .map(|row| {
-            let (name, base_val) = (&row.0, row.1);
+            let (name, base_val, unit) = (&row.0, row.1, &row.2);
             let current = fresh_rows.iter().find(|f| &f.0 == name).map(|f| f.1);
-            let floor = base_val * (1.0 - tol);
+            let floor = if unit == "ratio_min" { base_val } else { base_val * (1.0 - tol) };
             let regressed = match current {
                 None => true,
                 Some(v) => v < floor,
             };
-            GateRow { name: name.clone(), baseline: base_val, current, floor, regressed }
+            GateRow {
+                name: name.clone(),
+                unit: unit.clone(),
+                baseline: base_val,
+                current,
+                floor,
+                regressed,
+            }
         })
+        .collect())
+}
+
+/// Fresh rows with no same-named baseline row — results the gate cannot
+/// judge yet.  `bench_gate` logs them explicitly (step summary + stdout)
+/// so a newly added bench row is never a *silent* pass.
+pub fn fresh_only_rows(
+    baseline_json: &str,
+    fresh_json: &str,
+) -> Result<Vec<(String, f64, String)>, String> {
+    let baseline = Json::parse(baseline_json).map_err(|e| format!("baseline: {e}"))?;
+    let fresh = Json::parse(fresh_json).map_err(|e| format!("fresh: {e}"))?;
+    let base_rows = bench_rows(&baseline)?;
+    let fresh_rows = bench_rows(&fresh)?;
+    Ok(fresh_rows
+        .into_iter()
+        .filter(|(name, ..)| !base_rows.iter().any(|b| &b.0 == name))
         .collect())
 }
 
@@ -241,20 +272,27 @@ pub fn gate_regressions(
     Ok(gate_rows(baseline_json, fresh_json, tol)?
         .iter()
         .filter(|r| r.regressed)
-        .map(|r| match r.current {
-            None => format!(
-                "{}: throughput row missing from fresh results \
-                 (baseline {:.1} frames/s)",
-                r.name, r.baseline
-            ),
-            Some(fresh_val) => format!(
-                "{}: {fresh_val:.1} frames/s is below the gate floor \
-                 {:.1} (baseline {:.1}, tolerance {:.0}%)",
-                r.name,
-                r.floor,
-                r.baseline,
-                tol * 100.0
-            ),
+        .map(|r| {
+            let unit = if r.unit == "ratio_min" { "(ratio)" } else { "frames/s" };
+            match r.current {
+                None => format!(
+                    "{}: gated row missing from fresh results \
+                     (baseline {:.1} {unit})",
+                    r.name, r.baseline
+                ),
+                Some(fresh_val) if r.unit == "ratio_min" => format!(
+                    "{}: {fresh_val:.1} {unit} is below the committed floor {:.1}",
+                    r.name, r.floor
+                ),
+                Some(fresh_val) => format!(
+                    "{}: {fresh_val:.1} {unit} is below the gate floor \
+                     {:.1} (baseline {:.1}, tolerance {:.0}%)",
+                    r.name,
+                    r.floor,
+                    r.baseline,
+                    tol * 100.0
+                ),
+            }
         })
         .collect())
 }
@@ -366,6 +404,46 @@ mod tests {
         assert!(gone.regressed);
         // The string form stays consistent with the rows.
         assert_eq!(gate_regressions(&base, &fresh, 0.25).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn ratio_min_rows_gate_as_absolute_floors() {
+        // A committed ratio_min floor judges the fresh "ratio" row of
+        // the same name; tolerance never softens it.
+        let base = report_json(&[("wire_shrink", 20.0, "ratio_min")]);
+        let pass = report_json(&[("wire_shrink", 40.0, "ratio")]);
+        let fail = report_json(&[("wire_shrink", 19.0, "ratio")]);
+        assert!(gate_regressions(&base, &pass, 0.25).unwrap().is_empty());
+        let failures = gate_regressions(&base, &fail, 0.25).unwrap();
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("committed floor"), "{failures:?}");
+        let rows = gate_rows(&base, &fail, 0.25).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].unit, "ratio_min");
+        // The floor is the committed value itself, not value * (1-tol).
+        assert!((rows[0].floor - 20.0).abs() < 1e-9);
+        // A vanished ratio row fails like a vanished throughput row.
+        let gone = report_json(&[("other", 1.0, "ratio")]);
+        assert!(gate_rows(&base, &gone, 0.25).unwrap()[0].regressed);
+    }
+
+    #[test]
+    fn fresh_only_rows_surface_ungated_results() {
+        let base = report_json(&[("old", 100.0, "frames_per_s")]);
+        let fresh = report_json(&[
+            ("old", 90.0, "frames_per_s"),
+            ("brand_new", 5.0, "frames_per_s"),
+            ("new_ratio", 33.0, "ratio"),
+        ]);
+        let only = fresh_only_rows(&base, &fresh).unwrap();
+        assert_eq!(
+            only,
+            vec![
+                ("brand_new".to_string(), 5.0, "frames_per_s".to_string()),
+                ("new_ratio".to_string(), 33.0, "ratio".to_string()),
+            ]
+        );
+        assert!(fresh_only_rows(&base, &base).unwrap().is_empty());
     }
 
     #[test]

@@ -288,3 +288,96 @@ fn shed_oldest_accounts_exactly_per_camera_and_per_shape() {
     let sum: u64 = report.per_camera.iter().map(|c| c.stats.frames_shed).sum();
     assert_eq!(sum, a.frames_shed);
 }
+
+#[test]
+fn admin_camera_answers_422_for_multi_segment_scripts() {
+    let scenario =
+        Scenario::new("segments-422", 7, vec![paced_anchor(q8(0, 40), 80, 250.0)]);
+    let report = run_served(&scenario, |addr, _| {
+        // Any 200 from an admin verb proves the run is attached.
+        admin_until_ok(addr, "POST", "/admin/pool/resize", "{\"workers\":1}");
+        // The old handler silently honoured only the first segment of a
+        // multi-segment script; now the lie is a loud 422.
+        let (status, body) = http(
+            addr,
+            "POST",
+            "/admin/camera",
+            "{\"id\":9,\"segments\":[{\"frames\":4},{\"frames\":4}]}",
+        );
+        assert_eq!(status, 422, "{body}");
+        assert!(body.contains("\"ok\":false"), "{body}");
+        assert!(body.contains("exactly one"), "{body}");
+        let (status, body) =
+            http(addr, "POST", "/admin/camera", "{\"id\":9,\"segments\":[]}");
+        assert_eq!(status, 422, "an empty script is as unrunnable: {body}");
+        // A single-entry script IS the one segment hot-adds run: honoured.
+        let (status, body) = http(
+            addr,
+            "POST",
+            "/admin/camera",
+            "{\"id\":9,\"resolution\":40,\"segments\":[{\"frames\":5}]}",
+        );
+        assert_eq!(status, 200, "{body}");
+        assert!(body.contains("\"ok\":true"), "{body}");
+    });
+    assert_eq!(report.per_camera.len(), 2, "rejected adds must leave no trace");
+    assert_eq!(report.per_camera[1].spec.id, 9);
+    assert_eq!(report.per_camera[1].stats.frames_classified, 5);
+}
+
+#[test]
+fn admin_hot_add_event_wire_rides_the_sparse_path() {
+    let seed = 13;
+    let scenario =
+        Scenario::new("hot-add-event", seed, vec![paced_anchor(q8(0, 40), 100, 250.0)]);
+    let report = run_served(&scenario, |addr, _| {
+        let body = admin_until_ok(
+            addr,
+            "POST",
+            "/admin/camera",
+            "{\"id\":4,\"resolution\":40,\"n_bits\":8,\"wire\":\"event\",\
+             \"frames\":6,\"freeze\":true}",
+        );
+        assert!(body.contains("\"ok\":true"), "{body}");
+    });
+    assert_eq!(report.per_camera.len(), 2);
+    let cam = &report.per_camera[1];
+    assert_eq!(cam.spec.wire, WireFormat::Event);
+    assert!(cam.spec.freeze);
+    assert_eq!(cam.stats.frames_classified, 6);
+    // One keyframe, then header-only frames on the frozen scene.
+    assert_eq!(report.events.event_frames, 6);
+    assert!(
+        report.events.wire_bytes < report.events.dense_equiv_bytes,
+        "{:?}",
+        report.events
+    );
+
+    // Digest parity with the scripted twin of the same event camera.
+    let mut twin = scenario.clone();
+    twin.cameras.push(CameraScript {
+        spec: CameraSpec::new(4, 40, 8, WireFormat::Event).with_freeze(true),
+        start_delay: Duration::ZERO,
+        segments: vec![Segment::free(6, SegmentEnd::Clean)],
+    });
+    let scripted = run_plain(&twin);
+    assert_eq!(
+        report.digest(),
+        scripted.digest(),
+        "an event-wire hot-add must ride the same deterministic paths as a scripted one"
+    );
+}
+
+#[test]
+fn admin_event_hot_add_requires_block_backpressure() {
+    let mut scenario =
+        Scenario::new("event-409", 9, vec![paced_anchor(q8(0, 40), 80, 250.0)]);
+    scenario.backpressure = Backpressure::DropNewest;
+    run_served(&scenario, |addr, _| {
+        admin_until_ok(addr, "POST", "/admin/pool/resize", "{\"workers\":1}");
+        let (status, body) =
+            http(addr, "POST", "/admin/camera", "{\"id\":2,\"wire\":\"event\"}");
+        assert_eq!(status, 409, "{body}");
+        assert!(body.contains("Backpressure::Block"), "{body}");
+    });
+}

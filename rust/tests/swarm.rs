@@ -104,10 +104,23 @@ fn digests_are_invariant_across_pool_worker_counts() {
         ("swarm-192", Scenario::swarm(192, 11)),
         ("churn", Scenario::canned("churn", 11).unwrap()),
         ("crash-storm", Scenario::canned("crash-storm", 11).unwrap()),
+        ("static-scene", Scenario::canned("static-scene", 11).unwrap()),
     ];
     let mut digests: BTreeMap<String, u64> = BTreeMap::new();
     for (label, scenario) in &scenarios {
         let (base, _) = run_with_pool(scenario, 1);
+        if *label == "static-scene" {
+            // The sparse path's own contract rides the same matrix: every
+            // frame shipped as events, and a frozen scene collapses the
+            // wire to under 1% of its dense-ladder equivalent.
+            assert_eq!(base.events.event_frames, base.aggregate.frames_classified);
+            assert!(
+                base.events.wire_bytes * 100 < base.events.dense_equiv_bytes,
+                "static scene wire bytes {} are not <1% of dense {}",
+                base.events.wire_bytes,
+                base.events.dense_equiv_bytes
+            );
+        }
         let base_outcomes: Vec<_> = base.per_camera.iter().map(outcome).collect();
         for workers in [2usize, 4, 8] {
             let (r, _) = run_with_pool(scenario, workers);

@@ -151,6 +151,13 @@ step "fleet scenario smoke (crash-storm, native backend x4 workers)" \
     cargo run --release --locked -q -- fleet --scenario crash-storm --check-digest \
     --backend native --workers 4
 
+# Detect-workload smoke: the detect-track script (detection head +
+# per-camera tracker, scripted crashes, 250 ms SLO) run TWICE via
+# --check-digest — track counters are digested, so this gates both the
+# detection head's determinism and track-id continuity across restarts.
+step "fleet scenario smoke (detect-track, digest determinism)" \
+    cargo run --release --locked -q -- fleet --scenario detect-track --check-digest
+
 # Fleet-scale smoke: the swarm scenario on the fixed producer pool +
 # timer wheel.  --check-digest runs it TWICE and fails unless both runs
 # agree — the 10k-camera determinism gate.  The quick lane smokes 1k

@@ -493,6 +493,33 @@ fn main() {
         report.row("event_vs_dense_wire_bytes", shrink, "ratio");
     }
 
+    // --- Detect workload (P2M-DeTrack): the detection + tracking rows.
+    // The canned crash-scripted scenario end to end: stem -> detection
+    // head -> per-camera tracker, with the 250 ms SLO armed.  The p99 row
+    // is unit "us" (trajectory only, never gated — wall-clock timing);
+    // the frames_per_s row rides the regression gate.
+    {
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        let metrics = Metrics::new();
+        let scenario = Scenario::canned("detect-track", 0).unwrap();
+        // Warm-up (frame-plan + detection-head compile).
+        run_scenario(&mut clf, &scenario, &metrics).unwrap();
+        let t = Instant::now();
+        let r = run_scenario(&mut clf, &scenario, &metrics).unwrap();
+        let fps = r.aggregate.frames_classified as f64 / t.elapsed().as_secs_f64().max(1e-9);
+        let p99_us = r.aggregate.latency_p99_s * 1e6;
+        println!(
+            "{:<44} -> {fps:.1} frames/s ({} tracked, {} detections, {} resyncs)",
+            "detect_fleet_4cam",
+            r.track.frames_tracked,
+            r.track.detections,
+            r.track.resyncs
+        );
+        println!("{:<44} -> {p99_us:.0} us (end-to-end p99)", "track_latency_p99_us");
+        report.row("detect_fleet_4cam", fps, "frames_per_s");
+        report.row("track_latency_p99_us", p99_us, "us");
+    }
+
     // Perf trajectory: machine-readable copy of the always-run rows at
     // the repository root.
     let json_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_pipeline.json");

@@ -45,7 +45,7 @@
 use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::fleet::{CameraSpec, FleetItem, PlanBank};
 use crate::coordinator::http::{HttpRequest, HttpResponse};
@@ -64,6 +64,27 @@ struct SlotInfo {
     id: u64,
     shape: ShapeKey,
     link: BoundedQueue<FleetItem>,
+}
+
+/// One admin-verb invocation on a live run, recorded for the final
+/// [`crate::coordinator::scenario::ScenarioReport`]: which verb, what
+/// it targeted, when, and how it resolved — so every live mutation of
+/// a serve-mode run is attributable after the fact.  Timing-derived
+/// (the elapsed stamp depends on operator interleaving), so the audit
+/// trail never joins the scenario digest.
+#[derive(Clone, Debug)]
+pub struct AuditEvent {
+    /// the verb: `add-camera`, `remove-camera`, `drain-shard` or
+    /// `resize-pool`
+    pub verb: String,
+    /// what the verb addressed (`id=9`, `workers=2`, `?` when the body
+    /// never parsed)
+    pub target: String,
+    /// seconds since the run attached when the verb landed
+    pub elapsed_s: f64,
+    /// `ok …` with the response body, or `refused(<status>) …` with
+    /// the refusal reason
+    pub outcome: String,
 }
 
 /// An admin-added camera, recorded for end-of-run report assembly.
@@ -107,6 +128,10 @@ struct CoreState {
     ids: BTreeMap<u64, usize>,
     /// admin-added cameras, in add order, for report assembly
     admin_added: Vec<AdminCamera>,
+    /// when the current run attached (elapsed base for audit stamps)
+    attached_at: Option<Instant>,
+    /// admin-verb audit trail of the current run, in verb order
+    audit: Vec<AuditEvent>,
 }
 
 /// The shared mutable heart of the control plane: the scheduler, the
@@ -141,6 +166,8 @@ impl ControlCore {
                 slots: BTreeMap::new(),
                 ids: BTreeMap::new(),
                 admin_added: Vec::new(),
+                attached_at: None,
+                audit: Vec::new(),
             }),
             active_workers: AtomicUsize::new(0),
             spawned_workers: AtomicUsize::new(0),
@@ -204,6 +231,11 @@ impl ControlCore {
     /// them).
     pub(crate) fn vacated_slots(&self) -> HashSet<usize> {
         self.state.lock().unwrap().vacated.clone()
+    }
+
+    /// The run's admin-verb audit trail so far, in verb order.
+    pub(crate) fn audit_events(&self) -> Vec<AuditEvent> {
+        self.state.lock().unwrap().audit.clone()
     }
 
     /// Admin-added cameras in slot order, for report assembly.
@@ -296,6 +328,8 @@ impl ControlPlane {
         st.slots.clear();
         st.ids.clear();
         st.admin_added.clear();
+        st.attached_at = Some(Instant::now());
+        st.audit.clear();
         for (slot, id, shape, link) in scripted {
             st.ids.insert(id, slot);
             st.slots.insert(slot, SlotInfo { id, shape, link });
@@ -312,13 +346,58 @@ impl ControlPlane {
         match (req.method.as_str(), segs.as_slice()) {
             ("GET", ["healthz"]) => HttpResponse::text(200, "ok\n"),
             ("GET", ["metrics"]) => self.render_metrics(),
-            ("POST", ["admin", "camera"]) => self.add_camera(&req.body),
-            ("DELETE", ["admin", "camera", id]) => self.remove_camera(id),
-            ("POST", ["admin", "shard", id, "drain"]) => self.drain_shard(id),
-            ("POST", ["admin", "pool", "resize"]) => self.resize_pool(&req.body),
+            ("POST", ["admin", "camera"]) => {
+                let resp = self.add_camera(&req.body);
+                let target = parse_body(&req.body)
+                    .ok()
+                    .and_then(|j| j.get("id").and_then(Json::as_f64))
+                    .map_or_else(|| "?".to_string(), |id| format!("id={id}"));
+                self.record_audit("add-camera", &target, &resp);
+                resp
+            }
+            ("DELETE", ["admin", "camera", id]) => {
+                let resp = self.remove_camera(id);
+                self.record_audit("remove-camera", &format!("id={id}"), &resp);
+                resp
+            }
+            ("POST", ["admin", "shard", id, "drain"]) => {
+                let resp = self.drain_shard(id);
+                self.record_audit("drain-shard", &format!("id={id}"), &resp);
+                resp
+            }
+            ("POST", ["admin", "pool", "resize"]) => {
+                let resp = self.resize_pool(&req.body);
+                let target = parse_body(&req.body)
+                    .ok()
+                    .and_then(|j| j.get("workers").and_then(Json::as_usize))
+                    .map_or_else(|| "?".to_string(), |w| format!("workers={w}"));
+                self.record_audit("resize-pool", &target, &resp);
+                resp
+            }
             ("GET", _) => HttpResponse::not_found(),
             _ => HttpResponse::text(405, "method not allowed\n"),
         }
+    }
+
+    /// Append one audit entry for a mutating verb (success and refusal
+    /// alike) — skipped before any run attaches, since there is no run
+    /// to attribute the verb to.
+    fn record_audit(&self, verb: &str, target: &str, resp: &HttpResponse) {
+        let mut st = self.core.state.lock().unwrap();
+        let Some(attached_at) = st.attached_at else {
+            return;
+        };
+        let outcome = if resp.status == 200 {
+            format!("ok {}", resp.body.trim())
+        } else {
+            format!("refused({}) {}", resp.status, resp.body.trim())
+        };
+        st.audit.push(AuditEvent {
+            verb: verb.to_string(),
+            target: target.to_string(),
+            elapsed_s: attached_at.elapsed().as_secs_f64(),
+            outcome,
+        });
     }
 
     /// `GET /metrics`: the registry rendering plus live fleet state —
@@ -630,6 +709,8 @@ mod tests {
         assert_eq!(get(&p, "DELETE", "/admin/camera/1", "").status, 503);
         assert_eq!(get(&p, "POST", "/admin/shard/1/drain", "").status, 503);
         assert_eq!(get(&p, "POST", "/admin/pool/resize", "{\"workers\":2}").status, 503);
+        // No run attached: nothing to attribute the refusals to.
+        assert!(p.core().audit_events().is_empty());
     }
 
     #[test]
@@ -696,6 +777,37 @@ mod tests {
         assert!(!core.is_open());
         assert_eq!(get(&p, "POST", "/admin/camera", "{\"id\":3}").status, 409);
         assert_eq!(get(&p, "DELETE", "/admin/camera/9", "").status, 409);
+
+        // Every mutating verb since attach — successes and refusals,
+        // including the post-seal 409s — is on the audit trail, in
+        // verb order, with a non-negative elapsed stamp.
+        let audit = core.audit_events();
+        assert!(
+            audit
+                .iter()
+                .any(|e| e.verb == "add-camera"
+                    && e.target == "id=9"
+                    && e.outcome.starts_with("ok")),
+            "{audit:?}"
+        );
+        assert!(
+            audit
+                .iter()
+                .any(|e| e.verb == "remove-camera" && e.target == "id=0"),
+            "{audit:?}"
+        );
+        assert!(
+            audit.iter().any(|e| e.outcome.starts_with("refused(409)")),
+            "{audit:?}"
+        );
+        assert!(audit.iter().all(|e| e.elapsed_s >= 0.0));
+        // Bad-body adds audit with an unparseable target.
+        assert!(
+            audit
+                .iter()
+                .any(|e| e.verb == "add-camera" && e.target == "?"),
+            "{audit:?}"
+        );
     }
 
     #[test]

@@ -309,6 +309,7 @@ mod tests {
             captured_at: Instant::now(),
             payload: WirePayload::Dense(Image::from_vec(1, 1, 2, vec![fill, fill])),
             bytes: 8,
+            incarnation: 0,
         }
     }
 
@@ -330,6 +331,8 @@ mod tests {
         let mut per_shape = std::collections::BTreeMap::<ShapeKey, _>::new();
         let mut aggregate = PipelineStats::default();
         let mut events = crate::coordinator::fleet::EventStats::default();
+        let mut track = vec![crate::coordinator::track::TrackStats::default(); 4];
+        let mut slo = crate::coordinator::fleet::SloAccounting::new(None);
         let latency = Arc::new(Latency::new(64));
         let arena = crate::util::arena::FrameArena::new();
         let mut acc = FleetAccounting {
@@ -337,6 +340,8 @@ mod tests {
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
             events: &mut events,
+            track: &mut track,
+            slo: &mut slo,
             latency: &latency,
             arena: &arena,
         };

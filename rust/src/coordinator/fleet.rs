@@ -84,7 +84,9 @@ use crate::coordinator::pool::{
 use crate::coordinator::queue::{Backpressure, BoundedQueue};
 use crate::coordinator::router::{RoutePolicy, Router};
 use crate::coordinator::scenario::{Segment, SegmentEnd};
+use crate::coordinator::track::{CameraTracker, TrackStats};
 use crate::frontend::{Fidelity, FramePlan, PlanKey};
+use crate::model::detect::{Detection, Detector};
 use crate::runtime::ModelBundle;
 use crate::util::arena::FrameArena;
 use crate::util::simd;
@@ -212,6 +214,26 @@ pub fn heterogeneous_fleet_sensors(
     Ok((sensors, bank))
 }
 
+/// What the consumer computes per classified frame — the serving
+/// *workload* of the run.
+///
+/// `Classify` is the paper's VWW single-label path.  `Detect` is the
+/// P2M-DeTrack workload (arXiv 2205.14285): the consumer additionally
+/// runs the integer detection head ([`crate::model::detect::Detector`])
+/// and the per-camera greedy-IoU tracker
+/// ([`crate::coordinator::track::CameraTracker`]) at the per-camera
+/// FIFO point, producing the digest-stable [`TrackStats`].  Detect
+/// requires [`Backpressure::Block`]: the tracker's association state
+/// assumes it observes every frame of each camera's stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Workload {
+    /// single-label classification only (the default)
+    #[default]
+    Classify,
+    /// classification + detection head + per-camera tracking
+    Detect,
+}
+
 /// Fleet topology + scheduling configuration.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
@@ -245,6 +267,12 @@ pub struct FleetConfig {
     /// producer-pool worker threads (None = `min(num_cpus, 8)`); never
     /// affects deterministic outcomes, only wall time
     pub pool_workers: Option<usize>,
+    /// what the consumer computes per frame (classify vs detect+track)
+    pub workload: Workload,
+    /// per-frame capture→classified latency SLO; when set, every
+    /// classified frame is judged against it (`frames_within_slo` /
+    /// `slo_violations`).  None = no SLO: every frame counts as within.
+    pub slo: Option<Duration>,
 }
 
 impl Default for FleetConfig {
@@ -262,6 +290,8 @@ impl Default for FleetConfig {
             cameras: None,
             frontend_threads: 1,
             pool_workers: None,
+            workload: Workload::Classify,
+            slo: None,
         }
     }
 }
@@ -316,6 +346,20 @@ impl FleetConfig {
                 "event-wire cameras require Backpressure::Block (got {:?}): \
                  shedding or dropping frames of a delta-coded stream would \
                  desynchronise the consumer's reassembly ladder",
+                self.backpressure
+            );
+        }
+        // The tracker is per-camera stream state, like the event
+        // decoder: it must observe every frame in FIFO order, so lossy
+        // backpressure would silently corrupt track identities.
+        if self.workload == Workload::Detect
+            && !matches!(self.backpressure, Backpressure::Block)
+        {
+            bail!(
+                "the detect workload requires Backpressure::Block (got {:?}): \
+                 the per-camera tracker associates every frame of each stream \
+                 at the consumer's FIFO point, so shedding or dropping frames \
+                 would desynchronise track identities",
                 self.backpressure
             );
         }
@@ -384,6 +428,13 @@ pub struct ShapeStats {
     /// (exact per-shape shed accounting: each shard link carries one
     /// camera = one shape, so per-link shed counters sum per shape)
     pub frames_shed: u64,
+    /// classified frames of this shape that met the latency SLO (all of
+    /// them when no SLO is set) — timing-derived, never digested
+    pub frames_within_slo: u64,
+    /// classified frames of this shape that missed the latency SLO;
+    /// conservation: `frames_classified == frames_within_slo +
+    /// slo_violations` exactly, per shape and in aggregate
+    pub slo_violations: u64,
 }
 
 /// Sparse-wire accounting of a fleet run: totals over every frame that
@@ -467,6 +518,10 @@ pub struct FleetStats {
     pub arena_bytes_recycled: u64,
     /// sparse-wire accounting (all zeros without event-wire cameras)
     pub events: EventStats,
+    /// aggregate tracking counters (all zeros unless the run's workload
+    /// is [`Workload::Detect`]); deterministic under `Block`, so the
+    /// scenario digest folds the per-camera equivalents
+    pub track: TrackStats,
 }
 
 /// One frame in flight on a shard link: the wire payload (dense f32 or
@@ -479,6 +534,10 @@ pub(crate) struct FleetItem {
     pub(crate) captured_at: Instant,
     pub(crate) payload: WirePayload,
     pub(crate) bytes: u64,
+    /// the producing camera's incarnation index at capture time: the
+    /// consumer-side tracker resyncs on changes (crash/restart
+    /// detection at the per-camera FIFO point)
+    pub(crate) incarnation: u32,
 }
 
 /// Shards joining a running consumer.  [`run_fleet`] registers every
@@ -551,6 +610,10 @@ pub(crate) struct ConsumeParams {
     /// admin hot-adds raise it, vacates lower it — and the run only
     /// closes through its atomic [`ControlCore::try_finish`] handshake
     pub(crate) control: Option<Arc<ControlCore>>,
+    /// what the consumer computes per frame; under [`Workload::Detect`]
+    /// the consume loop runs the detection head + per-camera tracker at
+    /// the per-camera FIFO point (exactly where events reassemble)
+    pub(crate) workload: Workload,
 }
 
 impl ConsumeParams {
@@ -574,10 +637,76 @@ pub(crate) struct FleetAccounting<'a> {
     /// sparse-wire totals (see [`EventStats`]); consume() folds them at
     /// reassembly time, the only point that still sees event payloads
     pub(crate) events: &'a mut EventStats,
+    /// per-slot tracking counters (detect workload only); grows on
+    /// demand like `per_camera` — all-default entries under classify
+    pub(crate) track: &'a mut Vec<TrackStats>,
+    /// the run's latency SLO + bounded per-slot/per-shape sample stores
+    /// for end-of-run p50/p99 (timing-derived, never digested)
+    pub(crate) slo: &'a mut SloAccounting,
     pub(crate) latency: &'a Arc<Latency>,
     /// the run's frame-buffer pool: folded payloads recycle into it
     /// (closing the producer → wire → ingest zero-alloc loop)
     pub(crate) arena: &'a FrameArena,
+}
+
+/// Latency-SLO accounting: the run's SLO plus bounded reservoirs of
+/// per-slot and per-shape end-to-end latency samples, from which the
+/// end-of-run p50/p99 fields derive.  All of it is timing-derived —
+/// reported in stats and `/metrics`, never folded into a digest.
+pub(crate) struct SloAccounting {
+    /// the per-frame capture→classified SLO (None = everything within)
+    pub(crate) slo: Option<Duration>,
+    per_slot: Vec<Vec<f64>>,
+    per_shape: BTreeMap<ShapeKey, Vec<f64>>,
+}
+
+impl SloAccounting {
+    /// Samples kept per slot / per shape (first-N reservoir, matching
+    /// the [`Latency`] recorder's bounded-buffer idiom).
+    const SAMPLE_CAP: usize = 65_536;
+
+    pub(crate) fn new(slo: Option<Duration>) -> Self {
+        SloAccounting { slo, per_slot: Vec::new(), per_shape: BTreeMap::new() }
+    }
+
+    /// Record one classified frame's end-to-end latency.
+    pub(crate) fn record(&mut self, slot: usize, shape: ShapeKey, secs: f64) {
+        if self.per_slot.len() <= slot {
+            self.per_slot.resize_with(slot + 1, Vec::new);
+        }
+        let v = &mut self.per_slot[slot];
+        if v.len() < Self::SAMPLE_CAP {
+            v.push(secs);
+        }
+        let s = self.per_shape.entry(shape).or_default();
+        if s.len() < Self::SAMPLE_CAP {
+            s.push(secs);
+        }
+    }
+
+    /// The `q`-quantile of a slot's samples (0.0 when none recorded).
+    pub(crate) fn slot_pct(&self, slot: usize, q: f64) -> f64 {
+        match self.per_slot.get(slot) {
+            Some(v) => pct_of(v, q),
+            None => 0.0,
+        }
+    }
+
+    /// Per-shape sample reservoirs, for metric export.
+    pub(crate) fn shape_samples(&self) -> impl Iterator<Item = (&ShapeKey, &Vec<f64>)> {
+        self.per_shape.iter()
+    }
+}
+
+/// Nearest-rank quantile over an unsorted sample reservoir.
+fn pct_of(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
 }
 
 /// The per-slot stats cell, growing the vector when an admin-added slot
@@ -664,6 +793,7 @@ fn run_fleet_sink<S: ClassifySink>(
         route: cfg.route,
         expected_shards: n,
         control: None,
+        workload: cfg.workload,
     };
     let hooks = PoolHooks {
         frames_in: metrics.counter("fleet_frames_captured"),
@@ -680,6 +810,8 @@ fn run_fleet_sink<S: ClassifySink>(
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
     let mut events = EventStats::default();
+    let mut track = vec![TrackStats::default(); n];
+    let mut slo_acc = SloAccounting::new(cfg.slo);
     let t0 = Instant::now();
     let mut consumer_result: Result<()> = Ok(());
 
@@ -739,6 +871,8 @@ fn run_fleet_sink<S: ClassifySink>(
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
             events: &mut events,
+            track: &mut track,
+            slo: &mut slo_acc,
             latency: &latency,
             arena: &arena,
         };
@@ -775,10 +909,14 @@ fn run_fleet_sink<S: ClassifySink>(
     aggregate.wall_time_s = wall;
     aggregate.throughput_fps = aggregate.frames_classified as f64 / wall.max(1e-9);
     aggregate.latency_mean_s = latency.mean();
+    aggregate.latency_p50_s = latency.pct(0.5);
     aggregate.latency_p95_s = latency.pct(0.95);
-    for st in &mut per_camera {
+    aggregate.latency_p99_s = latency.pct(0.99);
+    for (ci, st) in per_camera.iter_mut().enumerate() {
         st.wall_time_s = wall;
         st.throughput_fps = st.frames_classified as f64 / wall.max(1e-9);
+        st.latency_p50_s = slo_acc.slot_pct(ci, 0.5);
+        st.latency_p99_s = slo_acc.slot_pct(ci, 0.99);
     }
     // Arena observability: counters for dashboards, fields on the stats.
     // Timing-dependent (pool warm-up), so reported but never digested.
@@ -796,6 +934,7 @@ fn run_fleet_sink<S: ClassifySink>(
             .gauge("fleet_event_sparsity_pct")
             .observe((events.sparsity() * 100.0) as i64);
     }
+    let track_agg = export_workload_metrics(metrics, &track, &slo_acc, &aggregate);
     Ok(FleetStats {
         per_camera,
         per_shape,
@@ -804,7 +943,44 @@ fn run_fleet_sink<S: ClassifySink>(
         arena_hit_rate: arena.hit_rate(),
         arena_bytes_recycled: arena.bytes_recycled(),
         events,
+        track: track_agg,
     })
+}
+
+/// Fold per-slot tracking counters into an aggregate and export the
+/// detect-workload metric series (`track_*` counters — rendered as
+/// `p2m_track_*_total` — gated on any tracking having happened, plus
+/// the `latency_slo_*` counters and per-shape `latency_shape_*`
+/// recorders that render as `p2m_latency_*` series).  Shared by the
+/// fleet and scenario drivers.
+pub(crate) fn export_workload_metrics(
+    metrics: &Metrics,
+    track: &[TrackStats],
+    slo_acc: &SloAccounting,
+    aggregate: &PipelineStats,
+) -> TrackStats {
+    let mut track_agg = TrackStats::default();
+    for t in track {
+        track_agg.merge(t);
+    }
+    if track_agg != TrackStats::default() {
+        metrics.counter("track_frames").add(track_agg.frames_tracked);
+        metrics.counter("track_detections").add(track_agg.detections);
+        metrics.counter("track_associations").add(track_agg.associations);
+        metrics.counter("track_started").add(track_agg.tracks_started);
+        metrics.counter("track_resyncs").add(track_agg.resyncs);
+    }
+    if slo_acc.slo.is_some() {
+        metrics.counter("latency_slo_within").add(aggregate.frames_within_slo);
+        metrics.counter("latency_slo_violations").add(aggregate.slo_violations);
+        for (shape, samples) in slo_acc.shape_samples() {
+            let rec = metrics.latency(&format!("latency_shape_{shape}"));
+            for &s in samples {
+                rec.record_secs(s);
+            }
+        }
+    }
+    track_agg
 }
 
 /// The consumer loop shared by [`run_fleet`] and the scenario driver:
@@ -827,6 +1003,11 @@ pub(crate) fn consume<S: ClassifySink>(
     // on many threads, which a stateful decoder could not tolerate).
     // Downstream, classifiers only ever see dense or quantized payloads.
     let mut decoder = crate::sensor::EventDecoder::new();
+    // The detect workload's head + per-camera trackers live at the SAME
+    // per-camera FIFO point, for the same reason: tracking is stateful
+    // per stream, so it must see each camera's frames in push order —
+    // which this point guarantees regardless of pool/worker counts.
+    let mut detect = (params.workload == Workload::Detect).then(DetectState::new);
     let mut batcher: ShapedBatcher<ShapeKey, FleetItem> = ShapedBatcher::new(BatchPolicy {
         max_batch: params.batch,
         max_wait: params.max_wait,
@@ -890,6 +1071,9 @@ pub(crate) fn consume<S: ClassifySink>(
                     let sparse = std::mem::replace(&mut item.payload, WirePayload::Quantized(q));
                     sparse.recycle_into(acc.arena);
                 }
+                if let Some(ds) = detect.as_mut() {
+                    ds.observe(&item, acc)?;
+                }
                 router.enqueue(si, item);
                 moved += 1;
             }
@@ -942,6 +1126,42 @@ pub(crate) fn consume<S: ClassifySink>(
     }
 }
 
+/// The consumer-side detect-workload state: the shared detection head
+/// plus one [`CameraTracker`] per camera slot.  Local to [`consume`]
+/// (like the event decoder), created only under [`Workload::Detect`].
+struct DetectState {
+    detector: Detector,
+    trackers: BTreeMap<usize, CameraTracker>,
+    /// per-frame detection scratch, reused across frames
+    detections: Vec<Detection>,
+}
+
+impl DetectState {
+    fn new() -> Self {
+        DetectState {
+            detector: Detector::new(),
+            trackers: BTreeMap::new(),
+            detections: Vec::new(),
+        }
+    }
+
+    /// Detect + associate one frame at its camera's FIFO point.  The
+    /// payload here is always dense or quantized (event payloads were
+    /// reassembled immediately upstream).
+    fn observe(&mut self, item: &FleetItem, acc: &mut FleetAccounting<'_>) -> Result<()> {
+        self.detector.detect(&item.payload, &mut self.detections)?;
+        let slot = item.camera;
+        if acc.track.len() <= slot {
+            acc.track.resize(slot + 1, TrackStats::default());
+        }
+        self.trackers
+            .entry(slot)
+            .or_default()
+            .observe(item.incarnation, &self.detections, &mut acc.track[slot]);
+        Ok(())
+    }
+}
+
 /// Shape-purity check of one staged batch (its [`ShapeKey`], `None` for
 /// an empty batch).  The shape-aware batcher guarantees purity; turning
 /// a violation into a hard error (rather than a silently mis-assembled
@@ -972,6 +1192,7 @@ pub(crate) fn fold_classified_batch(
         bail!("classifier returned {} labels for {} frames", preds.len(), batch.len());
     }
     let now = Instant::now();
+    let (mut within, mut violations) = (0u64, 0u64);
     for (item, &pred) in batch.iter().zip(&preds) {
         let st = cam_slot(acc.per_camera, item.camera);
         st.frames_classified += 1;
@@ -980,13 +1201,32 @@ pub(crate) fn fold_classified_batch(
             st.correct += 1;
             acc.aggregate.correct += 1;
         }
-        acc.latency
-            .record_secs(now.duration_since(item.captured_at).as_secs_f64());
+        // Per-frame latency SLO: judged at fold time against the
+        // capture timestamp the item carried across the wire.  With no
+        // SLO set every frame counts as within, so the conservation
+        // `frames_classified == frames_within_slo + slo_violations`
+        // holds unconditionally (per camera, per shape, aggregate).
+        let e2e = now.duration_since(item.captured_at);
+        let st = cam_slot(acc.per_camera, item.camera);
+        if acc.slo.slo.map_or(true, |slo| e2e <= slo) {
+            st.frames_within_slo += 1;
+            acc.aggregate.frames_within_slo += 1;
+            within += 1;
+        } else {
+            st.slo_violations += 1;
+            acc.aggregate.slo_violations += 1;
+            violations += 1;
+        }
+        let secs = e2e.as_secs_f64();
+        acc.slo.record(item.camera, shape, secs);
+        acc.latency.record_secs(secs);
     }
     acc.aggregate.batches += 1;
     let ss = acc.per_shape.entry(shape).or_default();
     ss.batches += 1;
     ss.frames_classified += batch.len() as u64;
+    ss.frames_within_slo += within;
+    ss.slo_violations += violations;
     // Classifier ingest is done with these payloads — recycle their
     // buffers so the producers' next takes are warm hits (the consumer
     // end of the zero-alloc frame loop; covers both the direct and the
@@ -1258,6 +1498,59 @@ mod tests {
                 assert_eq!(d.bytes_from_sensor, p.bytes_from_sensor, "workers {workers}");
             }
         }
+    }
+
+    #[test]
+    fn detect_workload_tracks_every_frame_and_conserves_slo_counts() {
+        let cfg = FleetConfig {
+            workload: Workload::Detect,
+            // A one-hour budget is never violated in-process, so the
+            // "within" side of the conservation is fully exercised.
+            slo: Some(Duration::from_secs(3600)),
+            ..small_cfg()
+        };
+        let stats = run_wire(&cfg, WireFormat::Quantized);
+        // The tracker sits at the per-camera FIFO point: it observes
+        // exactly the frames that were accepted and classified.
+        assert_eq!(stats.track.frames_tracked, stats.aggregate.frames_classified);
+        // Tracking conservation: every detection matched or started.
+        assert_eq!(
+            stats.track.detections,
+            stats.track.associations + stats.track.tracks_started
+        );
+        assert_eq!(stats.track.resyncs, 0, "no crashes scripted here");
+        // SLO conservation: frames == within + violations, per camera,
+        // per shape and in aggregate.
+        assert_eq!(stats.aggregate.frames_within_slo, stats.aggregate.frames_classified);
+        assert_eq!(stats.aggregate.slo_violations, 0);
+        for st in &stats.per_camera {
+            assert_eq!(
+                st.frames_classified,
+                st.frames_within_slo + st.slo_violations
+            );
+        }
+        for ss in stats.per_shape.values() {
+            assert_eq!(
+                ss.frames_classified,
+                ss.frames_within_slo + ss.slo_violations
+            );
+        }
+        // A classify run leaves the tracking counters untouched.
+        let classify = run_wire(&small_cfg(), WireFormat::Quantized);
+        assert_eq!(classify.track, TrackStats::default());
+
+        // Detect on a lossy link is refused up front.
+        let lossy = FleetConfig {
+            workload: Workload::Detect,
+            backpressure: Backpressure::DropNewest,
+            ..small_cfg()
+        };
+        let sensors =
+            synthetic_fleet_sensors(20, Fidelity::Functional, 3, WireFormat::Quantized)
+                .unwrap();
+        let mut clf = MeanThresholdClassifier::new(0.5);
+        let err = run_fleet(&mut clf, sensors, &lossy, &Metrics::new()).unwrap_err();
+        assert!(err.to_string().contains("detect workload"), "{err}");
     }
 
     #[test]

@@ -63,9 +63,10 @@ pub mod pool;
 pub mod queue;
 pub mod router;
 pub mod scenario;
+pub mod track;
 pub mod wheel;
 
-pub use admin::ControlPlane;
+pub use admin::{AuditEvent, ControlPlane};
 pub use http::{Handler, HttpRequest, HttpResponse, HttpServer, ServerHandle};
 
 pub use backend_pool::BackendPool;
@@ -73,7 +74,7 @@ pub use batcher::{BatchPolicy, Batcher, ShapedBatcher};
 pub use fleet::{
     heterogeneous_fleet_sensors, p2m_fleet_sensors, run_fleet, run_fleet_pooled,
     synthetic_fleet_sensors, synthetic_frame_plan, synthetic_frame_plan_bits, CameraSpec,
-    EventStats, FleetConfig, FleetStats, PlanBank, ShapeStats,
+    EventStats, FleetConfig, FleetStats, PlanBank, ShapeStats, Workload,
 };
 pub use metrics::{Counter, Gauge, Latency, Metrics};
 pub use pipeline::{
@@ -88,4 +89,5 @@ pub use scenario::{
     run_scenario, run_scenario_pooled, run_scenario_serve, run_scenario_serve_pooled,
     CameraReport, CameraScript, Scenario, ScenarioReport, Segment, SegmentEnd,
 };
+pub use track::{CameraTracker, TrackStats};
 pub use wheel::{TimerId, TimerWheel};

@@ -408,8 +408,19 @@ pub struct PipelineStats {
     pub throughput_fps: f64,
     /// mean capture-to-classification latency \[s\]
     pub latency_mean_s: f64,
+    /// median capture-to-classification latency \[s\]
+    pub latency_p50_s: f64,
     /// 95th-percentile capture-to-classification latency \[s\]
     pub latency_p95_s: f64,
+    /// 99th-percentile capture-to-classification latency \[s\]
+    pub latency_p99_s: f64,
+    /// classified frames that met the run's latency SLO (equal to
+    /// `frames_classified` when no SLO is configured)
+    pub frames_within_slo: u64,
+    /// classified frames that missed the latency SLO; conservation
+    /// `frames_classified == frames_within_slo + slo_violations` holds
+    /// exactly, per camera and in aggregate
+    pub slo_violations: u64,
     /// deepest the link queue ever got
     pub queue_high_watermark: usize,
 }

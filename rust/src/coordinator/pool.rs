@@ -525,6 +525,7 @@ fn fire_cell(
             captured_at,
             payload,
             bytes,
+            incarnation: cell.group as u32,
         });
         cell.seg_done += 1;
         let accepted = outcome.accepted();

@@ -42,12 +42,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::admin::{Attached, ControlPlane};
+use crate::coordinator::admin::{Attached, AuditEvent, ControlPlane};
 use crate::coordinator::backend_pool::{BackendPool, ClassifySink, DirectSink};
 use crate::coordinator::fleet::{
-    consume, CameraSpec, ConsumeParams, EventStats, FleetAccounting, FleetItem, PlanBank,
-    ShapeStats, ShardRegistry,
+    consume, export_workload_metrics, CameraSpec, ConsumeParams, EventStats, FleetAccounting,
+    FleetItem, PlanBank, ShapeStats, ShardRegistry, SloAccounting, Workload,
 };
+use crate::coordinator::track::TrackStats;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::{BatchClassifier, PipelineStats, ShapeKey, WireFormat};
 use crate::coordinator::pool::{
@@ -156,6 +157,13 @@ pub struct Scenario {
     /// producer-pool worker threads (None = `min(num_cpus, 8)`); never
     /// affects the digest, only wall time
     pub pool_workers: Option<usize>,
+    /// what the consumer runs over classified frames: plain
+    /// classification, or the P2M-DeTrack detection + per-camera
+    /// tracking workload (see [`crate::coordinator::track`])
+    pub workload: Workload,
+    /// per-frame capture→classified latency SLO; frames over budget
+    /// count as violations (timing-derived: reported, never digested)
+    pub slo: Option<Duration>,
 }
 
 impl Scenario {
@@ -171,6 +179,8 @@ impl Scenario {
             max_wait: Duration::from_millis(10),
             route: RoutePolicy::RoundRobin,
             pool_workers: None,
+            workload: Workload::Classify,
+            slo: None,
         }
     }
 
@@ -204,8 +214,16 @@ impl Scenario {
     }
 
     /// Names accepted by [`Scenario::canned`].
-    pub fn canned_names() -> [&'static str; 6] {
-        ["uniform", "mixed-res", "churn", "crash-storm", "swarm", "static-scene"]
+    pub fn canned_names() -> [&'static str; 7] {
+        [
+            "uniform",
+            "mixed-res",
+            "churn",
+            "crash-storm",
+            "swarm",
+            "static-scene",
+            "detect-track",
+        ]
     }
 
     /// The canned scenarios behind `p2m fleet --scenario <name>`.
@@ -225,7 +243,12 @@ impl Scenario {
     ///   camera's keyframe every capture is bit-identical, so the link
     ///   carries 4-byte header frames and total wire bytes collapse to
     ///   under 1% of the dense-quantized equivalent (the
-    ///   Neuromorphic-P2M bandwidth story).
+    ///   Neuromorphic-P2M bandwidth story);
+    /// * `detect-track` — the P2M-DeTrack workload: 4 cameras (40px,
+    ///   8-bit quantized wire) under the detection head + per-camera
+    ///   tracker with a 250 ms latency SLO; two cameras crash
+    ///   mid-stream (three producer restarts total), so the run pins
+    ///   track-ID persistence across incarnation resyncs.
     pub fn canned(name: &str, seed: u64) -> Option<Scenario> {
         let q8 = |id: u64, res: usize| CameraSpec::new(id, res, 8, WireFormat::Quantized);
         let scenario = match name {
@@ -302,6 +325,39 @@ impl Scenario {
                     .collect(),
             ),
             "swarm" => Scenario::swarm(10_000, seed),
+            "detect-track" => {
+                let mut s = Scenario::new(
+                    "detect-track",
+                    seed,
+                    vec![
+                        // Steady anchors bracketing the churn.
+                        CameraScript::steady(q8(0, 40), 12),
+                        // One crash/restart mid-stream.
+                        CameraScript {
+                            spec: q8(1, 40),
+                            start_delay: Duration::ZERO,
+                            segments: vec![
+                                Segment::free(6, SegmentEnd::Crash),
+                                Segment::free(6, SegmentEnd::Clean),
+                            ],
+                        },
+                        // Two crashes: the tracker must resync twice.
+                        CameraScript {
+                            spec: q8(2, 40),
+                            start_delay: Duration::ZERO,
+                            segments: vec![
+                                Segment::free(4, SegmentEnd::Crash),
+                                Segment::free(4, SegmentEnd::Crash),
+                                Segment::free(4, SegmentEnd::Clean),
+                            ],
+                        },
+                        CameraScript::steady(q8(3, 40), 12),
+                    ],
+                );
+                s.workload = Workload::Detect;
+                s.slo = Some(Duration::from_millis(250));
+                s
+            }
             "static-scene" => Scenario::new(
                 "static-scene",
                 seed,
@@ -328,6 +384,19 @@ impl Scenario {
         }
         if self.queue_capacity == 0 {
             bail!("queue_capacity must be >= 1");
+        }
+        // The tracker associates every frame of each stream in FIFO
+        // order; shedding or dropping frames would silently
+        // desynchronise track identities.
+        if self.workload == Workload::Detect
+            && !matches!(self.backpressure, Backpressure::Block)
+        {
+            bail!(
+                "the detect workload requires Backpressure::Block (got {:?}): \
+                 the per-camera tracker associates every frame of each stream \
+                 at the consumer's FIFO point",
+                self.backpressure
+            );
         }
         let mut seen_ids = HashSet::with_capacity(self.cameras.len());
         for script in &self.cameras {
@@ -399,6 +468,8 @@ pub struct CameraReport {
     pub scripted_frames: u64,
     /// the usual per-camera counters (see [`PipelineStats`])
     pub stats: PipelineStats,
+    /// per-camera tracker outcome (all zeros under `classify`)
+    pub track: TrackStats,
 }
 
 /// End-of-run result of [`run_scenario`].
@@ -423,15 +494,24 @@ pub struct ScenarioReport {
     /// sparse-wire totals (all zeros without event-wire cameras);
     /// deterministic under `Block`, so part of the digest when non-zero
     pub events: EventStats,
+    /// fleet-wide tracker totals (all zeros under `classify`);
+    /// deterministic under `Block`, so part of the digest when non-zero
+    pub track: TrackStats,
+    /// admin-verb audit trail of a serve-mode run, in verb order (verb,
+    /// target, elapsed time, outcome) — attributes every live mutation
+    /// in the final report; timing-derived, never digested
+    pub audit: Vec<AuditEvent>,
 }
 
 impl ScenarioReport {
     /// Order-stable digest over every *deterministic* field of the run:
     /// per-camera (id, design, incarnations, scripted/captured/
     /// classified/dropped frames, link bytes, correct decisions),
-    /// per-shape (key, frames, bytes) and the compiled-plan count.
-    /// Timing-derived fields (latency, batch counts, watermarks,
-    /// `peak_active_cameras`) are excluded, so for a fixed scenario +
+    /// per-shape (key, frames, bytes), tracker counters when the detect
+    /// workload ran, and the compiled-plan count.  Timing-derived
+    /// fields (latency, SLO tallies, the audit trail, batch counts,
+    /// watermarks, `peak_active_cameras`) are excluded, so for a fixed
+    /// scenario +
     /// seed under `Block` backpressure and a pure classifier two runs
     /// produce the same digest — the CI churn smoke asserts exactly
     /// that.
@@ -481,6 +561,25 @@ impl ScenarioReport {
             h = mix(h, self.events.events);
             h = mix(h, self.events.wire_bytes);
             h = mix(h, self.events.dense_equiv_bytes);
+        }
+        // Tracker counters join the digest only when the detect
+        // workload ran, so classify-workload fixture digests are
+        // untouched.  Per-camera folds pin ID continuity per stream;
+        // the aggregate pins the fleet-wide association outcome.
+        if self.track != TrackStats::default() {
+            for report in &self.per_camera {
+                let t = &report.track;
+                h = mix(h, t.frames_tracked);
+                h = mix(h, t.detections);
+                h = mix(h, t.associations);
+                h = mix(h, t.tracks_started);
+                h = mix(h, t.resyncs);
+            }
+            h = mix(h, self.track.frames_tracked);
+            h = mix(h, self.track.detections);
+            h = mix(h, self.track.associations);
+            h = mix(h, self.track.tracks_started);
+            h = mix(h, self.track.resyncs);
         }
         mix(h, self.plans_compiled as u64)
     }
@@ -604,6 +703,7 @@ fn run_scenario_sink<S: ClassifySink>(
         route: scenario.route,
         expected_shards: n,
         control: control.clone(),
+        workload: scenario.workload,
     };
     let hooks = PoolHooks {
         frames_in: metrics.counter("scenario_frames_captured"),
@@ -621,6 +721,8 @@ fn run_scenario_sink<S: ClassifySink>(
     let mut per_shape: BTreeMap<ShapeKey, ShapeStats> = BTreeMap::new();
     let mut aggregate = PipelineStats::default();
     let mut events = EventStats::default();
+    let mut track = vec![TrackStats::default(); n];
+    let mut slo_acc = SloAccounting::new(scenario.slo);
     let mut incarnations: Vec<u32> = vec![0; n];
     let t0 = Instant::now();
     let mut consumer_result: Result<()> = Ok(());
@@ -696,6 +798,8 @@ fn run_scenario_sink<S: ClassifySink>(
             per_shape: &mut per_shape,
             aggregate: &mut aggregate,
             events: &mut events,
+            track: &mut track,
+            slo: &mut slo_acc,
             latency: &latency,
             arena: &arena,
         };
@@ -722,6 +826,7 @@ fn run_scenario_sink<S: ClassifySink>(
         .map_or(n, |c| c.total_slots().max(n));
     per_camera.resize(total_slots, PipelineStats::default());
     incarnations.resize(total_slots, 0);
+    track.resize(total_slots, TrackStats::default());
 
     // Fold shard-link accounting (one link per camera slot): for every
     // camera captured == pushed + dropped, and with the consumer fully
@@ -755,7 +860,17 @@ fn run_scenario_sink<S: ClassifySink>(
     aggregate.wall_time_s = wall;
     aggregate.throughput_fps = aggregate.frames_classified as f64 / wall.max(1e-9);
     aggregate.latency_mean_s = latency.mean();
+    aggregate.latency_p50_s = latency.pct(0.5);
     aggregate.latency_p95_s = latency.pct(0.95);
+    aggregate.latency_p99_s = latency.pct(0.99);
+    for (slot, st) in per_camera.iter_mut().enumerate() {
+        st.latency_p50_s = slo_acc.slot_pct(slot, 0.5);
+        st.latency_p99_s = slo_acc.slot_pct(slot, 0.99);
+    }
+    // Workload observability: tracker + SLO counters land in /metrics;
+    // the aggregate TrackStats also folds into the report (and — when
+    // non-zero — the digest).
+    let track_agg = export_workload_metrics(metrics, &track, &slo_acc, &aggregate);
     // Arena observability (timing-dependent: reported, never part of
     // the scenario digest).
     metrics.counter("arena_hits").add(arena.hits());
@@ -792,6 +907,7 @@ fn run_scenario_sink<S: ClassifySink>(
             incarnations: incarnations[slot],
             scripted_frames,
             stats,
+            track: track.get(slot).copied().unwrap_or_default(),
         }
     };
     let mut reports: Vec<CameraReport> = Vec::with_capacity(total_slots);
@@ -817,6 +933,11 @@ fn run_scenario_sink<S: ClassifySink>(
         plans_compiled: bank.lock().unwrap().len(),
         peak_active_cameras: active.high_watermark(),
         events,
+        track: track_agg,
+        audit: control
+            .as_ref()
+            .map(|c| c.audit_events())
+            .unwrap_or_default(),
     })
 }
 
@@ -928,6 +1049,28 @@ mod tests {
     }
 
     #[test]
+    fn detect_track_scenario_scripts_crashes_under_the_detect_workload() {
+        let s = Scenario::canned("detect-track", 11).unwrap();
+        assert_eq!(s.workload, Workload::Detect);
+        assert_eq!(s.slo, Some(Duration::from_millis(250)));
+        // 40px cameras: the stem emits an 8x8 map, so the detection
+        // head sees a non-degenerate 2x2 grid on every frame.
+        assert!(s.cameras.iter().all(|c| c.spec.resolution == 40));
+        let restarts: u32 = s
+            .cameras
+            .iter()
+            .map(|c| c.scripted_incarnations() - 1)
+            .sum();
+        assert_eq!(restarts, 3, "two crashing cameras, three restarts");
+        // The tracker needs every accepted frame: lossy backpressure
+        // must be rejected up front.
+        let mut lossy = s.clone();
+        lossy.backpressure = Backpressure::ShedOldest;
+        let err = lossy.validate().unwrap_err();
+        assert!(err.to_string().contains("detect workload"), "{err}");
+    }
+
+    #[test]
     fn event_scripts_require_block_backpressure() {
         let mut s = Scenario::canned("static-scene", 1).unwrap();
         s.validate().unwrap();
@@ -988,15 +1131,39 @@ mod tests {
                     latency_mean_s: wall * 0.1,
                     ..PipelineStats::default()
                 },
+                track: TrackStats::default(),
             }],
             per_shape: BTreeMap::new(),
             aggregate: PipelineStats::default(),
             plans_compiled: 1,
             peak_active_cameras: 1,
             events: EventStats::default(),
+            track: TrackStats::default(),
+            audit: Vec::new(),
         };
         // Timing fields must not move the digest; outcomes must.
         assert_eq!(report(3, 0.5).digest(), report(3, 99.0).digest());
         assert_ne!(report(3, 0.5).digest(), report(2, 0.5).digest());
+        // Tracker counters move the digest exactly when non-zero; the
+        // audit trail (timing-derived) never does.
+        let tracked = TrackStats {
+            frames_tracked: 4,
+            detections: 4,
+            associations: 3,
+            tracks_started: 1,
+            resyncs: 1,
+        };
+        let mut with_track = report(3, 0.5);
+        with_track.track = tracked;
+        with_track.per_camera[0].track = tracked;
+        assert_ne!(with_track.digest(), report(3, 0.5).digest());
+        let mut with_audit = report(3, 0.5);
+        with_audit.audit.push(AuditEvent {
+            verb: "add-camera".into(),
+            target: "id=9".into(),
+            elapsed_s: 0.5,
+            outcome: "ok slot=4".into(),
+        });
+        assert_eq!(with_audit.digest(), report(3, 0.5).digest());
     }
 }

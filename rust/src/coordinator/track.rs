@@ -1,0 +1,302 @@
+//! Per-camera multi-object tracking for the P2M-DeTrack workload
+//! (arXiv:2205.14285): greedy integer-IoU association with persistent
+//! track IDs that survive scripted camera crashes.
+//!
+//! One [`CameraTracker`] lives per camera slot **on the consumer
+//! thread**, fed at the per-camera FIFO point of
+//! [`crate::coordinator::fleet`]'s consume step — the same place event
+//! payloads are reassembled — so the detection stream it observes is
+//! exactly the camera's push order regardless of pool size or worker
+//! count.  That, plus all-integer association arithmetic with total
+//! tie-breaks, makes every [`TrackStats`] counter a pure function of
+//! (script, seed): the scenario digest folds them.
+//!
+//! # Crash resync
+//!
+//! A camera crash/restart bumps the [`crate::coordinator::fleet::FleetItem`]
+//! incarnation.  The tracker mirrors the event wire's keyframe idiom:
+//! on an incarnation change it counts a *resync* and forgives every
+//! live track's miss count (a keyframe grace), so track IDs persist
+//! across the restart instead of being dropped during the gap — the
+//! "persistent IDs survive crashes" contract the tentpole pins.
+//!
+//! # Association
+//!
+//! Candidate pairs are every (track, detection) whose boxes intersect.
+//! Pairs are ranked by IoU **descending** — compared exactly via
+//! cross-multiplication (`inter_a · union_b` vs `inter_b · union_a`,
+//! no floats) — with ties broken by lowest track index, then lowest
+//! detection index.  Greedy selection walks that order taking each
+//! track and detection at most once.  Unmatched detections start new
+//! tracks (IDs are monotonic, never reused); unmatched tracks age and
+//! drop after [`CameraTracker::MAX_MISSES`] consecutive misses.
+
+use crate::model::detect::Detection;
+
+/// Deterministic per-camera tracking counters — the digest-visible
+/// outcome of the tracker.  All integers, all pure functions of the
+/// detection stream; conservation `detections == associations +
+/// tracks_started` holds exactly (every detection either matched a
+/// track or started one).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrackStats {
+    /// frames the tracker observed (classified frames under `detect`)
+    pub frames_tracked: u64,
+    /// detections emitted by the head across those frames
+    pub detections: u64,
+    /// detections greedily associated to an existing track
+    pub associations: u64,
+    /// detections that started a new track
+    pub tracks_started: u64,
+    /// incarnation-change resyncs (scripted crash/restarts observed)
+    pub resyncs: u64,
+}
+
+impl TrackStats {
+    /// Fold another camera's counters into an aggregate.
+    pub fn merge(&mut self, other: &TrackStats) {
+        self.frames_tracked += other.frames_tracked;
+        self.detections += other.detections;
+        self.associations += other.associations;
+        self.tracks_started += other.tracks_started;
+        self.resyncs += other.resyncs;
+    }
+}
+
+/// One live track: persistent ID, last associated box, consecutive
+/// miss count.
+struct Track {
+    id: u64,
+    bbox: (i32, i32, i32, i32),
+    misses: u32,
+}
+
+/// Greedy-IoU tracker for one camera slot.
+pub struct CameraTracker {
+    next_id: u64,
+    tracks: Vec<Track>,
+    last_incarnation: Option<u32>,
+}
+
+/// Exact intersection area of two boxes (0 when disjoint).
+fn intersection(a: (i32, i32, i32, i32), b: (i32, i32, i32, i32)) -> i64 {
+    let w = (a.2.min(b.2) - a.0.max(b.0)).max(0) as i64;
+    let h = (a.3.min(b.3) - a.1.max(b.1)).max(0) as i64;
+    w * h
+}
+
+fn area(b: (i32, i32, i32, i32)) -> i64 {
+    (b.2 - b.0).max(0) as i64 * (b.3 - b.1).max(0) as i64
+}
+
+impl CameraTracker {
+    /// Consecutive unmatched frames a track survives before dropping.
+    pub const MAX_MISSES: u32 = 2;
+
+    pub fn new() -> Self {
+        CameraTracker { next_id: 0, tracks: Vec::new(), last_incarnation: None }
+    }
+
+    /// Live track IDs in internal (age) order — exposed for tests and
+    /// reporting.
+    pub fn track_ids(&self) -> Vec<u64> {
+        self.tracks.iter().map(|t| t.id).collect()
+    }
+
+    /// Observe one frame's detections (in the camera's FIFO order),
+    /// accumulating outcomes into `stats`.
+    pub fn observe(&mut self, incarnation: u32, detections: &[Detection], stats: &mut TrackStats) {
+        stats.frames_tracked += 1;
+        stats.detections += detections.len() as u64;
+        if self.last_incarnation.map_or(false, |prev| prev != incarnation) {
+            // Crash resync: the keyframe grace — forgive accumulated
+            // misses so IDs bridge the restart gap.
+            stats.resyncs += 1;
+            for t in &mut self.tracks {
+                t.misses = 0;
+            }
+        }
+        self.last_incarnation = Some(incarnation);
+
+        // Candidate pairs: (intersection, union, track idx, det idx)
+        // for every overlapping pair.  IoU order is exact via
+        // cross-multiplication, so no floats enter the association.
+        let mut pairs: Vec<(i64, i64, usize, usize)> = Vec::new();
+        for (ti, t) in self.tracks.iter().enumerate() {
+            for (di, d) in detections.iter().enumerate() {
+                let dbox = (d.x0, d.y0, d.x1, d.y1);
+                let inter = intersection(t.bbox, dbox);
+                if inter > 0 {
+                    let union = area(t.bbox) + area(dbox) - inter;
+                    pairs.push((inter, union, ti, di));
+                }
+            }
+        }
+        pairs.sort_by(|a, b| {
+            // IoU descending: a/b vs c/d compared as a·d vs c·b
+            // (unions are positive, products stay far inside i64 for
+            // canvas-scale boxes).
+            (b.0 * a.1).cmp(&(a.0 * b.1)).then(a.2.cmp(&b.2)).then(a.3.cmp(&b.3))
+        });
+
+        let mut track_used = vec![false; self.tracks.len()];
+        let mut det_used = vec![false; detections.len()];
+        for &(_, _, ti, di) in &pairs {
+            if track_used[ti] || det_used[di] {
+                continue;
+            }
+            track_used[ti] = true;
+            det_used[di] = true;
+            let d = &detections[di];
+            self.tracks[ti].bbox = (d.x0, d.y0, d.x1, d.y1);
+            self.tracks[ti].misses = 0;
+            stats.associations += 1;
+        }
+        // Unmatched tracks age; stale ones drop.
+        for (ti, t) in self.tracks.iter_mut().enumerate() {
+            if !track_used[ti] {
+                t.misses += 1;
+            }
+        }
+        self.tracks.retain(|t| t.misses <= Self::MAX_MISSES);
+        // Unmatched detections start new tracks, in detection order.
+        for (di, d) in detections.iter().enumerate() {
+            if !det_used[di] {
+                self.tracks.push(Track {
+                    id: self.next_id,
+                    bbox: (d.x0, d.y0, d.x1, d.y1),
+                    misses: 0,
+                });
+                self.next_id += 1;
+                stats.tracks_started += 1;
+            }
+        }
+    }
+}
+
+impl Default for CameraTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cell: usize, score: i64, x0: i32, y0: i32, x1: i32, y1: i32) -> Detection {
+        Detection { cell, score, x0, y0, x1, y1 }
+    }
+
+    #[test]
+    fn ids_persist_across_a_crash_restart() {
+        let mut tracker = CameraTracker::new();
+        let mut stats = TrackStats::default();
+        let a = det(0, 10, 0, 0, 8, 8);
+        tracker.observe(0, &[a], &mut stats);
+        assert_eq!(tracker.track_ids(), vec![0]);
+        assert_eq!(stats.tracks_started, 1);
+        assert_eq!(stats.resyncs, 0);
+
+        // The camera crashes and restarts (incarnation 0 -> 1); the
+        // restarted stream re-sees an overlapping box.  The ID must
+        // survive, and the resync must be counted exactly once.
+        let a_shifted = det(0, 9, 1, 1, 9, 9);
+        tracker.observe(1, &[a_shifted], &mut stats);
+        assert_eq!(tracker.track_ids(), vec![0], "track ID did not survive the crash");
+        assert_eq!(stats.resyncs, 1);
+        assert_eq!(stats.associations, 1);
+        assert_eq!(stats.tracks_started, 1, "the restart must not fork a new ID");
+        // Conservation: every detection matched or started a track.
+        assert_eq!(stats.detections, stats.associations + stats.tracks_started);
+
+        // Same incarnation again: no further resync.
+        tracker.observe(1, &[a], &mut stats);
+        assert_eq!(stats.resyncs, 1);
+    }
+
+    #[test]
+    fn crash_grace_forgives_misses_but_tracks_still_age_out() {
+        let mut tracker = CameraTracker::new();
+        let mut stats = TrackStats::default();
+        tracker.observe(0, &[det(0, 5, 0, 0, 4, 4)], &mut stats);
+        // Two empty frames: misses == MAX_MISSES, track still live.
+        tracker.observe(0, &[], &mut stats);
+        tracker.observe(0, &[], &mut stats);
+        assert_eq!(tracker.track_ids(), vec![0]);
+        // Crash grace resets the clock...
+        tracker.observe(1, &[], &mut stats);
+        assert_eq!(tracker.track_ids(), vec![0], "resync must forgive misses");
+        // ...but sustained absence still retires the track.
+        tracker.observe(1, &[], &mut stats);
+        tracker.observe(1, &[], &mut stats);
+        assert_eq!(tracker.track_ids(), Vec::<u64>::new());
+        // A later detection starts a fresh, never-reused ID.
+        tracker.observe(1, &[det(0, 5, 0, 0, 4, 4)], &mut stats);
+        assert_eq!(tracker.track_ids(), vec![1]);
+    }
+
+    #[test]
+    fn association_tie_breaks_are_deterministic() {
+        // Two identical tracks and two identical detections: all four
+        // pairs tie at IoU == 1, so greedy order must resolve by lowest
+        // track index then lowest detection index — (t0,d0), (t1,d1) —
+        // every run.
+        for _ in 0..8 {
+            let mut tracker = CameraTracker::new();
+            let mut stats = TrackStats::default();
+            let b = det(0, 5, 0, 0, 8, 8);
+            let far = det(3, 5, 100, 100, 108, 108);
+            tracker.observe(0, &[b, far], &mut stats);
+            assert_eq!(tracker.track_ids(), vec![0, 1]);
+            // Both detections overlap both of nothing else; re-present
+            // the same two boxes — both must associate, no new tracks.
+            tracker.observe(0, &[b, far], &mut stats);
+            assert_eq!(tracker.track_ids(), vec![0, 1]);
+            assert_eq!(stats.tracks_started, 2);
+            assert_eq!(stats.associations, 2);
+            assert_eq!(stats.detections, stats.associations + stats.tracks_started);
+        }
+        // The symmetric all-tied case: two coincident tracks, two
+        // coincident detections.
+        let mut tracker = CameraTracker::new();
+        let mut stats = TrackStats::default();
+        let b = det(0, 5, 0, 0, 8, 8);
+        tracker.observe(0, &[b, b], &mut stats);
+        assert_eq!(tracker.track_ids(), vec![0, 1]);
+        tracker.observe(0, &[b, b], &mut stats);
+        assert_eq!(tracker.track_ids(), vec![0, 1], "tied association reordered IDs");
+        assert_eq!(stats.associations, 2);
+        assert_eq!(stats.tracks_started, 2);
+    }
+
+    #[test]
+    fn track_stats_merge_is_componentwise() {
+        let mut a = TrackStats {
+            frames_tracked: 1,
+            detections: 2,
+            associations: 1,
+            tracks_started: 1,
+            resyncs: 0,
+        };
+        let b = TrackStats {
+            frames_tracked: 3,
+            detections: 4,
+            associations: 2,
+            tracks_started: 2,
+            resyncs: 1,
+        };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            TrackStats {
+                frames_tracked: 4,
+                detections: 6,
+                associations: 3,
+                tracks_started: 3,
+                resyncs: 1,
+            }
+        );
+        assert_ne!(a, TrackStats::default());
+    }
+}

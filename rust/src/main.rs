@@ -94,6 +94,13 @@ commands (one per paper table/figure):
             pjrt when artifacts exist, threshold otherwise) and
             --workers N (N > 1, Send backends only) serves it through a
             pooled classify stage with in-order result reassembly
+            --workload <classify|detect> picks the serving workload
+            (detect = deterministic integer detection head over the
+            in-pixel stem's feature map + a per-camera IoU tracker
+            whose track ids survive camera crashes; needs blocking
+            backpressure) and --slo-ms N arms a per-frame latency SLO
+            (per-camera/per-shape within-vs-violation tallies and
+            p50/p99 latency; timing-only, never part of the digest)
             --pool N sizes the fixed producer pool that multiplexes all
             cameras over a deterministic timer wheel (default
             min(cpus, 8); identical digests for every N)
@@ -101,15 +108,18 @@ commands (one per paper table/figure):
             dispatch tier (default: runtime detection, overridable by
             the P2M_SIMD env var; every tier is bit-identical)
             --scenario <uniform|mixed-res|churn|crash-storm|swarm|
-            static-scene|list> runs a deterministic scripted fleet
-            instead (heterogeneous cameras, hot-add/remove/crash/
-            rate-shift lifecycle events; swarm = 10k synthetic low-res
-            cameras on the fixed pool, --cameras N rescales it;
-            static-scene = frozen event-wire cameras whose wire bytes
-            collapse to headers after the keyframe; add --check-digest
-            to run it twice and verify the stats digest is
-            reproducible, --seed S to reseed the whole script; --mode
-            overrides every script's wire format;
+            static-scene|detect-track|list> runs a deterministic
+            scripted fleet instead (heterogeneous cameras,
+            hot-add/remove/crash/rate-shift lifecycle events; swarm =
+            10k synthetic low-res cameras on the fixed pool,
+            --cameras N rescales it; static-scene = frozen event-wire
+            cameras whose wire bytes collapse to headers after the
+            keyframe; detect-track = 4-camera detect workload with
+            scripted crashes + a 250 ms latency SLO; add
+            --check-digest to run it twice and verify the stats
+            digest is reproducible, --seed S to reseed the whole
+            script; --mode overrides every script's wire format,
+            --slo-ms N overrides its latency SLO;
             --backend/--workers/--pool apply here too, pjrt excluded)
             --serve <addr> (scenario runs only) starts the operability
             plane: GET /metrics (Prometheus text) + /healthz, POST
@@ -641,7 +651,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     use p2m::coordinator::{
         default_pool_workers, p2m_fleet_sensors, run_fleet, run_fleet_pooled,
         synthetic_fleet_sensors, Backpressure, BatchClassifier, FleetConfig, FleetStats,
-        MeanThresholdClassifier, Metrics, PjrtClassifier, SensorCompute, WireFormat,
+        MeanThresholdClassifier, Metrics, PjrtClassifier, SensorCompute, WireFormat, Workload,
     };
     use p2m::model::NativeBackend;
     use p2m::runtime::{Manifest, ModelBundle, Runtime};
@@ -685,6 +695,25 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     if drop && shed {
         anyhow::bail!("--drop and --shed are mutually exclusive overload policies");
     }
+    let workload = match rest.iter().position(|&a| a == "--workload") {
+        None => Workload::Classify,
+        Some(i) => match rest.get(i + 1).copied() {
+            Some("classify") => Workload::Classify,
+            Some("detect") => Workload::Detect,
+            other => anyhow::bail!(
+                "--workload wants classify|detect, got '{}'",
+                other.unwrap_or("<missing>")
+            ),
+        },
+    };
+    let slo = flag("--slo-ms").map(|ms| std::time::Duration::from_millis(ms as u64));
+    if workload == Workload::Detect && (drop || shed) {
+        anyhow::bail!(
+            "--workload detect needs blocking backpressure: the per-camera \
+             tracker associates every frame of each stream in FIFO order, \
+             so dropping or shedding frames would corrupt track continuity"
+        );
+    }
     let wire = match parse_mode(rest)? {
         Some(wire) => wire,
         None if rest.contains(&"--quantized") => WireFormat::Quantized,
@@ -712,6 +741,8 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
         base_seed,
         frontend_threads: threads,
         pool_workers: pool,
+        workload,
+        slo,
         ..FleetConfig::default()
     };
 
@@ -847,7 +878,7 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     println!(
         "== fleet: {cameras} cameras x {frames} frames, batch {batch}, queue {queue}, \
          {} backpressure, {threads} frontend thread(s), {} wire, {backend_name} backend \
-         x{workers} worker(s), producer pool {} ==",
+         x{workers} worker(s), producer pool {}, {} workload{} ==",
         if shed {
             "shed-oldest"
         } else if drop {
@@ -860,7 +891,15 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
             WireFormat::Quantized => "quantized",
             WireFormat::Event => "event (sparse delta)",
         },
-        pool.unwrap_or_else(default_pool_workers)
+        pool.unwrap_or_else(default_pool_workers),
+        match workload {
+            Workload::Classify => "classify",
+            Workload::Detect => "detect",
+        },
+        match slo {
+            Some(s) => format!(", SLO {} ms", s.as_millis()),
+            None => String::new(),
+        }
     );
     let metrics = Metrics::new();
     let fleet_sensors = mk_sensors(bundle.as_ref(), cameras)?;
@@ -907,6 +946,26 @@ fn fleet(rest: &[&str]) -> anyhow::Result<()> {
     let stats = run_with(bundle.as_mut(), fleet_sensors, &mk_cfg(cameras, seed), &metrics)?;
     let fleet_s = t_fleet.elapsed().as_secs_f64();
     print_fleet(&stats, backend_name);
+    if workload == Workload::Detect {
+        let t = &stats.track;
+        println!(
+            "detect workload: {} frames tracked, {} detections = {} associated + {} new \
+             track(s), {} crash resync(s)",
+            t.frames_tracked, t.detections, t.associations, t.tracks_started, t.resyncs,
+        );
+    }
+    if slo.is_some() {
+        let a = &stats.aggregate;
+        println!(
+            "latency SLO: {} within / {} violation(s) of {} classified, p50 {:.2} ms \
+             p99 {:.2} ms",
+            a.frames_within_slo,
+            a.slo_violations,
+            a.frames_classified,
+            a.latency_p50_s * 1e3,
+            a.latency_p99_s * 1e3,
+        );
+    }
     if wire == WireFormat::Quantized {
         let per_frame = quant_frame_bytes.expect("quantized fleet implies P2M sensors");
         let ok = stats
@@ -1041,6 +1100,16 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
         for script in &mut scenario.cameras {
             script.spec.wire = wire;
         }
+    }
+    // `--slo-ms` arms (or overrides) the script's per-frame latency SLO.
+    // SLO tallies are timing-derived, so the digest is unaffected.
+    if let Some(ms) = rest
+        .iter()
+        .position(|&a| a == "--slo-ms")
+        .and_then(|i| rest.get(i + 1))
+        .and_then(|s| s.parse::<u64>().ok())
+    {
+        scenario.slo = Some(std::time::Duration::from_millis(ms));
     }
 
     // The operability plane (serve mode): bind before the run so the
@@ -1221,6 +1290,37 @@ fn fleet_scenario(name: &str, rest: &[&str]) -> anyhow::Result<()> {
             100.0 * ev.sparsity(),
             ev.bytes_saved(),
         );
+    }
+    if report.track.frames_tracked > 0 {
+        // The detect-workload headline: every classified frame was
+        // tracked, and the detection count splits exactly into
+        // associations + new tracks (the tracker's conservation law).
+        let t = &report.track;
+        println!(
+            "track: {} frames tracked, {} detections = {} associated + {} new track(s), \
+             {} crash resync(s)",
+            t.frames_tracked, t.detections, t.associations, t.tracks_started, t.resyncs,
+        );
+    }
+    if let Some(slo) = scenario.slo {
+        println!(
+            "latency SLO ({} ms): {} within / {} violation(s) of {} classified, \
+             p50 {:.2} ms p99 {:.2} ms",
+            slo.as_millis(),
+            a.frames_within_slo,
+            a.slo_violations,
+            a.frames_classified,
+            a.latency_p50_s * 1e3,
+            a.latency_p99_s * 1e3,
+        );
+    }
+    if !report.audit.is_empty() {
+        // Admin verbs that landed on this run (serve mode only), in
+        // arrival order — refusals included.
+        println!("admin audit trail:");
+        for ev in &report.audit {
+            println!("  +{:>8.3}s  {:<13} {:<14} -> {}", ev.elapsed_s, ev.verb, ev.target, ev.outcome);
+        }
     }
     println!("stats digest: {:016x}", report.digest());
 

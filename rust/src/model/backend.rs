@@ -57,7 +57,7 @@ const W_MAX: i64 = 4;
 
 /// The activation ladder every layer requantises back onto
 /// (`0..=CODE_MAX`, i.e. 8-bit unsigned codes).
-const CODE_MAX: i32 = 255;
+pub(crate) const CODE_MAX: i32 = 255;
 
 /// The P2M stem kernel/stride (non-overlapping 5×5): a stem output of
 /// `h × h` implies a `5h × 5h` sensor.
@@ -171,46 +171,30 @@ impl NativeModel {
         self.arch.num_classes
     }
 
-    /// Run the integer forward pass over one frame of codes (row-major
-    /// `(h, w, c)`, already on the 8-bit ladder) and return the `i64`
-    /// logits.  `cur`/`nxt` are caller scratch reused across frames.
-    pub fn logits_into(
+    /// Run every SoC conv layer up to — but not including — the
+    /// classifier FC, leaving the pre-pool feature map in `cur`
+    /// (row-major `(h·w) × c`).  Returns the map's grid `(h, w, c)`.
+    /// This is the shared trunk of [`NativeModel::logits_into`] and the
+    /// detection head ([`crate::model::detect::Detector`]), which reads
+    /// the per-cell feature vectors instead of pooling them away.
+    pub fn features_into(
         &self,
         codes: &[i32],
         cur: &mut Vec<i32>,
         nxt: &mut Vec<i32>,
-    ) -> Result<Vec<i64>> {
+    ) -> Result<(usize, usize, usize)> {
         let (h, w, c) = self.in_dims;
         if codes.len() != h * w * c {
             bail!("native backend: {} codes for a {h}x{w}x{c} stem output", codes.len());
         }
         cur.clear();
         cur.extend_from_slice(codes);
+        let mut dims = (h, w, c);
         for (li, l) in self.layers.iter().enumerate() {
             let wts = &self.weights[li];
             let shift = self.shifts[li];
             if l.name == "fc" {
-                // Global average pool (exact i64 sum, integer divide)
-                // intervenes between the head conv and the FC — find the
-                // pooled per-channel codes, then the logits.
-                let spatial = cur.len() / l.c_in;
-                let mut pooled = vec![0i32; l.c_in];
-                for (ch, p) in pooled.iter_mut().enumerate() {
-                    let mut sum = 0i64;
-                    for px in 0..spatial {
-                        sum += cur[px * l.c_in + ch] as i64;
-                    }
-                    *p = (sum / spatial as i64) as i32;
-                }
-                let mut logits = vec![0i64; l.c_out];
-                for (j, logit) in logits.iter_mut().enumerate() {
-                    let mut acc = 0i64;
-                    for (ch, &p) in pooled.iter().enumerate() {
-                        acc += p as i64 * wts[ch * l.c_out + j] as i64;
-                    }
-                    *logit = acc;
-                }
-                return Ok(logits);
+                return Ok(dims);
             } else if l.k == 1 && l.groups == 1 {
                 // Pointwise (expand / project / head): the row-major
                 // (h·w) × c_in activation matrix against the c_in × c_out
@@ -228,9 +212,52 @@ impl NativeModel {
             } else {
                 bail!("native backend: unsupported layer kind '{}'", l.name);
             }
+            dims = (l.h_out, l.w_out, l.c_out);
             std::mem::swap(cur, nxt);
         }
         bail!("native backend: architecture has no fc layer");
+    }
+
+    /// Run the integer forward pass over one frame of codes (row-major
+    /// `(h, w, c)`, already on the 8-bit ladder) and return the `i64`
+    /// logits.  `cur`/`nxt` are caller scratch reused across frames.
+    pub fn logits_into(
+        &self,
+        codes: &[i32],
+        cur: &mut Vec<i32>,
+        nxt: &mut Vec<i32>,
+    ) -> Result<Vec<i64>> {
+        let (fh, fw, fc) = self.features_into(codes, cur, nxt)?;
+        let fi = self
+            .layers
+            .iter()
+            .position(|l| l.name == "fc")
+            .expect("features_into returned, so the fc layer exists");
+        let l = &self.layers[fi];
+        let wts = &self.weights[fi];
+        // Global average pool (exact i64 sum, integer divide)
+        // intervenes between the head conv and the FC — find the
+        // pooled per-channel codes, then the logits.
+        let spatial = fh * fw;
+        debug_assert_eq!(fc, l.c_in);
+        debug_assert_eq!(cur.len(), spatial * l.c_in);
+        let mut pooled = vec![0i32; l.c_in];
+        for (ch, p) in pooled.iter_mut().enumerate() {
+            let mut sum = 0i64;
+            for px in 0..spatial {
+                sum += cur[px * l.c_in + ch] as i64;
+            }
+            *p = (sum / spatial as i64) as i32;
+        }
+        let mut logits = vec![0i64; l.c_out];
+        for (j, logit) in logits.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for (ch, &p) in pooled.iter().enumerate() {
+                acc += p as i64 * wts[ch * l.c_out + j] as i64;
+            }
+            *logit = acc;
+        }
+        Ok(logits)
     }
 }
 
@@ -367,8 +394,9 @@ impl Default for NativeBackend {
     }
 }
 
-/// Widen a quantized frame's codes to `i32` on the common 8-bit ladder.
-fn ingest_quantized(q: &QuantizedFrame, out: &mut Vec<i32>) {
+/// Widen a quantized frame's codes to `i32` on the common 8-bit ladder
+/// (shared with the detection head's payload ingest).
+pub(crate) fn ingest_quantized(q: &QuantizedFrame, out: &mut Vec<i32>) {
     let bits = q.spec.bits;
     out.reserve(q.len());
     for i in 0..q.len() {

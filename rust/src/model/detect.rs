@@ -1,0 +1,273 @@
+//! The P2M-DeTrack detection head (arXiv:2205.14285): a deterministic
+//! integer grid detector over the native backend's *pre-pool* feature
+//! maps.
+//!
+//! Classification pools the final feature map away; detection keeps it.
+//! [`Detector`] runs the shared conv trunk
+//! ([`NativeModel::features_into`]) and then, per grid cell of the
+//! `gh × gw × c` pre-pool map, computes five exact `i64` dot products
+//! against synthetic head weights (seeded `0xDE7EC7`, independent of
+//! the trunk's `0xB47E` weights):
+//!
+//! * one **objectness** score — the cell proposes a detection iff its
+//!   score is strictly positive;
+//! * four **box offsets**, folded onto a small integer canvas
+//!   ([`Detector::CELL_UNITS`] units per cell, positive-modulo
+//!   reduction) so every box is an exact integer rectangle anchored at
+//!   its cell and able to spill into neighbouring cells — which is what
+//!   gives the tracker's IoU association something to chew on.
+//!
+//! Proposals are ranked score-descending with the **lowest cell index
+//! winning ties**, the top [`Detector::TOP_K`] survive, and survivors
+//! are emitted in raster (cell) order.  Every step is integer
+//! arithmetic with total tie-breaks, so for a given payload the
+//! detection list is bit-identical across platforms, SIMD tiers, pool
+//! sizes and batch groupings — the property the scenario digest pins.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::WirePayload;
+use crate::model::backend::{ingest_quantized, NativeBackend, NativeModel, CODE_MAX};
+use crate::util::linalg;
+use crate::util::rng::Rng;
+
+/// Head-weight magnitude bound: weights in `[-H_MAX, H_MAX]`, small so
+/// a 1280-channel dot stays far inside `i64`.
+const H_MAX: i64 = 3;
+
+/// One detection: an axis-aligned integer box on the frame's cell
+/// canvas (`CELL_UNITS` units per grid cell), with its objectness score
+/// and originating cell for deterministic ordering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Detection {
+    /// raster index of the proposing grid cell (`gy * gw + gx`)
+    pub cell: usize,
+    /// exact integer objectness score (strictly positive by emission)
+    pub score: i64,
+    pub x0: i32,
+    pub y0: i32,
+    /// exclusive right edge (`x1 > x0` always)
+    pub x1: i32,
+    /// exclusive bottom edge (`y1 > y0` always)
+    pub y1: i32,
+}
+
+impl Detection {
+    /// Box area in canvas units (exact, always positive).
+    pub fn area(&self) -> i64 {
+        (self.x1 - self.x0) as i64 * (self.y1 - self.y0) as i64
+    }
+}
+
+/// The per-shape head: the shared conv trunk plus this head's own
+/// synthetic weights (one objectness row + four offset rows, each `c`
+/// wide for a `c`-channel pre-pool map).
+struct DetectHead {
+    model: Arc<NativeModel>,
+    /// objectness weights (`c` taps)
+    w_obj: Vec<i32>,
+    /// box-offset weights (4 rows of `c` taps: dx, dy, dw, dh)
+    w_box: [Vec<i32>; 4],
+}
+
+/// The serving detection head: per-shape model/head cache plus private
+/// scratch, mirroring [`NativeBackend`]'s shape-cache idiom.  One
+/// `Detector` lives on the consumer thread (detection runs at the
+/// per-camera FIFO point, like event reassembly), so no `Clone` needed.
+pub struct Detector {
+    heads: BTreeMap<(usize, usize, usize), DetectHead>,
+    codes: Vec<i32>,
+    buf_a: Vec<i32>,
+    buf_b: Vec<i32>,
+}
+
+impl Detector {
+    /// Detections kept per frame after score ranking.
+    pub const TOP_K: usize = 4;
+
+    /// Canvas granularity: integer units per grid cell along each axis.
+    pub const CELL_UNITS: i32 = 16;
+
+    /// Empty detector; heads compile lazily per stem-output shape.
+    pub fn new() -> Self {
+        Detector {
+            heads: BTreeMap::new(),
+            codes: Vec::new(),
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+        }
+    }
+
+    /// Distinct (trunk, head) pairs compiled so far.
+    pub fn heads_compiled(&self) -> usize {
+        self.heads.len()
+    }
+
+    fn head_for(&mut self, h: usize, w: usize, c: usize) -> Result<&DetectHead> {
+        if !self.heads.contains_key(&(h, w, c)) {
+            let model = NativeModel::for_stem_output(h, w, c)?;
+            // Head channel width = the pre-pool map's channel count: run
+            // the trunk once on a zero frame to learn it (cheap, cached).
+            let zero = vec![0i32; h * w * c];
+            let (_, _, fc) = model.features_into(&zero, &mut self.buf_a, &mut self.buf_b)?;
+            let mut rng = Rng::seed(0xDE7E_C7);
+            let mut row = || -> Vec<i32> {
+                (0..fc).map(|_| rng.i64(-H_MAX, H_MAX + 1) as i32).collect()
+            };
+            let w_obj = row();
+            let w_box = [row(), row(), row(), row()];
+            self.heads.insert((h, w, c), DetectHead { model, w_obj, w_box });
+        }
+        Ok(&self.heads[&(h, w, c)])
+    }
+
+    /// Ingest one payload onto the 8-bit i32 ladder (same normalisation
+    /// as the classifier backend's ingest).
+    fn ingest(codes: &mut Vec<i32>, payload: &WirePayload) {
+        codes.clear();
+        match payload {
+            WirePayload::Quantized(q) => ingest_quantized(q, codes),
+            WirePayload::Dense(img) => {
+                codes.resize(img.len(), 0);
+                let scale = NativeBackend::DENSE_INGEST_HI / CODE_MAX as f64;
+                linalg::quantize_codes(&img.data, scale, 0, CODE_MAX as u32, |i, code| {
+                    codes[i] = code as i32;
+                });
+            }
+            WirePayload::Events(_) => {
+                panic!("event payloads must be reassembled onto the dense ladder before detection")
+            }
+        }
+    }
+
+    /// Detect on one wire payload: clears `out` and fills it with at
+    /// most [`Detector::TOP_K`] detections in raster (cell) order.
+    pub fn detect(&mut self, payload: &WirePayload, out: &mut Vec<Detection>) -> Result<()> {
+        out.clear();
+        let (h, w, c) = payload.dims();
+        // Borrow-split: lift the scratch buffers out of `self` so the
+        // head cache can stay immutably borrowed while they mutate.
+        let mut codes = std::mem::take(&mut self.codes);
+        let mut buf_a = std::mem::take(&mut self.buf_a);
+        let mut buf_b = std::mem::take(&mut self.buf_b);
+        Self::ingest(&mut codes, payload);
+        self.head_for(h, w, c)?;
+        let head = &self.heads[&(h, w, c)];
+        let (gh, gw, fc) = head.model.features_into(&codes, &mut buf_a, &mut buf_b)?;
+        // The pre-pool map is left in buf_a (row-major (gh·gw) × fc).
+        let feat = &buf_a;
+        let dot = |cell: usize, wts: &[i32]| -> i64 {
+            let base = cell * fc;
+            let mut acc = 0i64;
+            for ch in 0..fc {
+                acc += feat[base + ch] as i64 * wts[ch] as i64;
+            }
+            acc
+        };
+        let u = Self::CELL_UNITS as i64;
+        let mut candidates: Vec<Detection> = Vec::new();
+        for cell in 0..gh * gw {
+            let score = dot(cell, &head.w_obj);
+            if score <= 0 {
+                continue;
+            }
+            let gy = (cell / gw) as i32;
+            let gx = (cell % gw) as i32;
+            // Positive-modulo offsets: anchor jitter within the cell,
+            // width/height in [CELL_UNITS/4, CELL_UNITS/4 + CELL_UNITS),
+            // so boxes overrun into neighbouring cells.
+            let dx = dot(cell, &head.w_box[0]).rem_euclid(u) as i32;
+            let dy = dot(cell, &head.w_box[1]).rem_euclid(u) as i32;
+            let bw = Self::CELL_UNITS / 4 + dot(cell, &head.w_box[2]).rem_euclid(u) as i32;
+            let bh = Self::CELL_UNITS / 4 + dot(cell, &head.w_box[3]).rem_euclid(u) as i32;
+            let x0 = gx * Self::CELL_UNITS + dx;
+            let y0 = gy * Self::CELL_UNITS + dy;
+            candidates.push(Detection { cell, score, x0, y0, x1: x0 + bw, y1: y0 + bh });
+        }
+        // Rank: score descending, lowest cell index breaking ties —
+        // then keep TOP_K and restore raster order for emission.
+        candidates.sort_by(|a, b| b.score.cmp(&a.score).then(a.cell.cmp(&b.cell)));
+        candidates.truncate(Self::TOP_K);
+        candidates.sort_by_key(|d| d.cell);
+        out.extend_from_slice(&candidates);
+        self.codes = codes;
+        self.buf_a = buf_a;
+        self.buf_b = buf_b;
+        Ok(())
+    }
+}
+
+impl Default for Detector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensor::{QuantData, QuantSpec, QuantizedFrame};
+    use crate::util::rng::Rng;
+
+    fn quant_payload(h: usize, w: usize, c: usize, seed: u64) -> WirePayload {
+        let spec = QuantSpec::unipolar(75.0, 8);
+        let mut q = QuantizedFrame::zeros(h, w, c, spec);
+        let mut rng = Rng::seed(seed);
+        for i in 0..q.len() {
+            let code = rng.usize(0, 256) as u32;
+            match &mut q.data {
+                QuantData::U8(v) => v[i] = code as u8,
+                QuantData::U16(v) => v[i] = code as u16,
+            }
+        }
+        WirePayload::Quantized(q)
+    }
+
+    #[test]
+    fn detections_are_deterministic_ordered_and_bounded() {
+        // 40 px camera -> 8x8 stem output -> 2x2 pre-pool grid.
+        let payload = quant_payload(8, 8, 8, 3);
+        let mut a = Detector::new();
+        let mut b = Detector::new();
+        let (mut da, mut db, mut da2) = (Vec::new(), Vec::new(), Vec::new());
+        a.detect(&payload, &mut da).unwrap();
+        b.detect(&payload, &mut db).unwrap();
+        a.detect(&payload, &mut da2).unwrap();
+        assert_eq!(da, db, "two detectors disagree on one payload");
+        assert_eq!(da, da2, "repeat detection drifted");
+        assert!(da.len() <= Detector::TOP_K);
+        assert_eq!(a.heads_compiled(), 1);
+        for pair in da.windows(2) {
+            assert!(pair[0].cell < pair[1].cell, "emission must be raster-ordered");
+        }
+        for d in &da {
+            assert!(d.score > 0, "only positive-objectness cells propose");
+            assert!(d.x1 > d.x0 && d.y1 > d.y0, "boxes are non-degenerate");
+            assert!(d.area() > 0);
+        }
+        // Different content must be able to move the detections.
+        let other = quant_payload(8, 8, 8, 4);
+        let mut dother = Vec::new();
+        a.detect(&other, &mut dother).unwrap();
+        assert_ne!(da, dother, "detections blind to input");
+    }
+
+    #[test]
+    fn zero_frame_proposes_nothing() {
+        // All-zero features -> all dots are 0 -> no strictly-positive
+        // objectness -> empty detection list (the deterministic floor).
+        let zero = WirePayload::Quantized(QuantizedFrame::zeros(
+            8,
+            8,
+            8,
+            QuantSpec::unipolar(75.0, 8),
+        ));
+        let mut det = Detector::new();
+        let mut out = vec![Detection { cell: 0, score: 1, x0: 0, y0: 0, x1: 1, y1: 1 }];
+        det.detect(&zero, &mut out).unwrap();
+        assert!(out.is_empty(), "detect must clear stale output");
+    }
+}

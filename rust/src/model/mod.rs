@@ -6,8 +6,10 @@ pub mod analysis;
 pub mod arch;
 pub mod area;
 pub mod backend;
+pub mod detect;
 
 pub use analysis::{analyse, analyse_layers, table2_rows, ModelMetrics, Table2Row};
 pub use arch::{ArchConfig, LayerSpec, Stem};
 pub use area::{AreaModel, Integration};
 pub use backend::{NativeBackend, NativeModel};
+pub use detect::{Detection, Detector};

@@ -105,6 +105,7 @@ fn digests_are_invariant_across_pool_worker_counts() {
         ("churn", Scenario::canned("churn", 11).unwrap()),
         ("crash-storm", Scenario::canned("crash-storm", 11).unwrap()),
         ("static-scene", Scenario::canned("static-scene", 11).unwrap()),
+        ("detect-track", Scenario::canned("detect-track", 11).unwrap()),
     ];
     let mut digests: BTreeMap<String, u64> = BTreeMap::new();
     for (label, scenario) in &scenarios {
@@ -120,6 +121,18 @@ fn digests_are_invariant_across_pool_worker_counts() {
                 base.events.wire_bytes,
                 base.events.dense_equiv_bytes
             );
+        }
+        if *label == "detect-track" {
+            // The detect workload's contract rides the matrix too: every
+            // classified frame was tracked, the detection count splits
+            // exactly into associations + new tracks, and each scripted
+            // crash (cam1 once, cam2 twice) resynced the tracker.
+            assert_eq!(base.track.frames_tracked, base.aggregate.frames_classified);
+            assert_eq!(
+                base.track.detections,
+                base.track.associations + base.track.tracks_started
+            );
+            assert_eq!(base.track.resyncs, 3, "scripted crashes must resync the tracker");
         }
         let base_outcomes: Vec<_> = base.per_camera.iter().map(outcome).collect();
         for workers in [2usize, 4, 8] {
